@@ -1,0 +1,130 @@
+//! Operator lab: every Table-1 operator exercised one by one, with the
+//! CPU-measured cost and the FPGA PE model side by side — a miniature of
+//! the paper's Table 4 you can poke at.
+//!
+//!     cargo run --release --example operator_lab
+
+use std::time::{Duration, Instant};
+
+use piper::accel::memory::VocabPlacement;
+use piper::accel::pe::PeKind;
+use piper::data::{synth::SynthConfig, utf8, SynthDataset};
+use piper::decode::{ParallelDecoder, ScalarDecoder};
+use piper::ops::{self, hex::hex2int, DirectVocab, Modulus, Vocab};
+use piper::report::{fmt_duration, Table};
+
+fn pe_time(pe: PeKind, items: u64, clock: f64) -> String {
+    let secs = pe.stream_cycles(items, VocabPlacement::Sram) / clock;
+    fmt_duration(Duration::from_secs_f64(secs))
+}
+
+fn main() {
+    let rows = 50_000;
+    let ds = SynthDataset::generate(SynthConfig::small(rows));
+    let raw = utf8::encode_dataset(&ds);
+    let m = Modulus::VOCAB_5K;
+    let clock = 250.0e6;
+    let sparse_items = (rows * 26) as u64;
+    let dense_items = (rows * 13) as u64;
+
+    let mut t = Table::new(
+        &format!("operator lab ({rows} rows)"),
+        &["operator", "CPU measured", "FPGA model [sim]", "notes"],
+    );
+
+    // Decode: scalar vs parallel (Script 1)
+    let t0 = Instant::now();
+    let s = ScalarDecoder::new(ds.schema()).decode(&raw);
+    let scalar_t = t0.elapsed();
+    let t0 = Instant::now();
+    let p = ParallelDecoder::new(ds.schema()).decode(&raw);
+    let par_t = t0.elapsed();
+    assert_eq!(s.rows, p.rows);
+    t.row(&[
+        "Decode (scalar, Fig.6)".into(),
+        fmt_duration(scalar_t),
+        fmt_duration(Duration::from_secs_f64(s.cycles as f64 / clock)),
+        format!("{} B, 1 B/cycle", raw.len()),
+    ]);
+    t.row(&[
+        "Decode (Script-1 ×4)".into(),
+        fmt_duration(par_t),
+        fmt_duration(Duration::from_secs_f64(p.cycles as f64 / clock)),
+        "4 B/cycle, bit-exact vs scalar".into(),
+    ]);
+
+    // Hex2Int — a real cost on the CPU, merged into Decode on the FPGA.
+    let fields: Vec<Vec<u8>> = ds
+        .rows
+        .iter()
+        .flat_map(|r| r.sparse.iter().map(|v| format!("{v:08x}").into_bytes()))
+        .collect();
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for f in &fields {
+        acc = acc.wrapping_add(hex2int(f).unwrap_or(0) as u64);
+    }
+    t.row(&[
+        "Hex2Int".into(),
+        fmt_duration(t0.elapsed()),
+        "0 (merged into Decode)".into(),
+        format!("checksum {:x}", acc & 0xffff),
+    ]);
+
+    // Modulus / Neg2Zero / Logarithm
+    let mut sparse: Vec<u32> = ds.rows.iter().flat_map(|r| r.sparse.clone()).collect();
+    let t0 = Instant::now();
+    m.apply_slice(&mut sparse);
+    t.row(&[
+        "Modulus".into(),
+        fmt_duration(t0.elapsed()),
+        pe_time(PeKind::Modulus, sparse_items, clock),
+        format!("range {}", m.range),
+    ]);
+
+    let mut dense: Vec<i32> = ds.rows.iter().flat_map(|r| r.dense.clone()).collect();
+    let t0 = Instant::now();
+    ops::neg2zero_slice(&mut dense);
+    t.row(&[
+        "Neg2Zero".into(),
+        fmt_duration(t0.elapsed()),
+        pe_time(PeKind::Neg2Zero, dense_items, clock),
+        "ternary".into(),
+    ]);
+
+    let t0 = Instant::now();
+    let mut logs = Vec::new();
+    ops::dense_finish_slice(&dense, &mut logs);
+    t.row(&[
+        "Logarithm".into(),
+        fmt_duration(t0.elapsed()),
+        pe_time(PeKind::Logarithm, dense_items, clock),
+        "log(x+1)".into(),
+    ]);
+
+    // GenVocab + ApplyVocab — the stateful pair.
+    let t0 = Instant::now();
+    let mut vocab = DirectVocab::new(m.range);
+    for &v in &sparse {
+        vocab.observe(v);
+    }
+    t.row(&[
+        "GenVocab".into(),
+        fmt_duration(t0.elapsed()),
+        pe_time(PeKind::GenVocab1, sparse_items, clock),
+        format!("{} uniques", vocab.len()),
+    ]);
+
+    let t0 = Instant::now();
+    let mut out = Vec::new();
+    vocab.apply_slice(&sparse, &mut out);
+    t.row(&[
+        "ApplyVocab".into(),
+        fmt_duration(t0.elapsed()),
+        pe_time(PeKind::ApplyVocab2, sparse_items, clock),
+        "SRAM II=2".into(),
+    ]);
+
+    t.note("FPGA column: paper IIs at 250 MHz (sim); CPU column measured on this machine");
+    t.print();
+}

@@ -1,0 +1,99 @@
+"""AOT entry point: lower the DLRM functions to HLO *text* artifacts.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+  init.hlo.txt        ()                                   -> (flat_params,)
+  train_step.hlo.txt  (flat, dense, sparse, labels)        -> (flat, loss)
+  forward.hlo.txt     (flat, dense, sparse)                -> (probs,)
+  meta.txt            key=value shapes for the rust driver
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(cfg: model.ModelConfig, out_dir: str, suffix: str = "") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    p = cfg.param_count()
+    flat = jax.ShapeDtypeStruct((p,), jnp.float32)
+    dense = jax.ShapeDtypeStruct((cfg.batch, cfg.num_dense), jnp.float32)
+    sparse = jax.ShapeDtypeStruct((cfg.batch, cfg.num_sparse), jnp.int32)
+    labels = jax.ShapeDtypeStruct((cfg.batch,), jnp.float32)
+
+    jobs = {
+        f"init{suffix}.hlo.txt": jax.jit(lambda: (model.init(cfg),)).lower(),
+        f"train_step{suffix}.hlo.txt": jax.jit(
+            lambda f, d, s, l: model.train_step(cfg, f, d, s, l)
+        ).lower(flat, dense, sparse, labels),
+        f"forward{suffix}.hlo.txt": jax.jit(
+            lambda f, d, s: (model.forward_probs(cfg, f, d, s),)
+        ).lower(flat, dense, sparse),
+    }
+    for name, lowered in jobs.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+    meta = {
+        "batch": cfg.batch,
+        "num_dense": cfg.num_dense,
+        "num_sparse": cfg.num_sparse,
+        "embed_dim": cfg.embed_dim,
+        "vocab": cfg.vocab,
+        "param_count": p,
+        "lr": cfg.lr,
+    }
+    with open(os.path.join(out_dir, f"meta{suffix}.txt"), "w") as fh:
+        for k, v in meta.items():
+            fh.write(f"{k} = {v}\n")
+    print(f"model has {p} parameters; batch {cfg.batch}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--vocab", type=int, default=5000)
+    ap.add_argument("--embed-dim", type=int, default=16)
+    ap.add_argument(
+        "--batch-variants",
+        type=int,
+        nargs="*",
+        default=[],
+        help="additionally lower train_step at these batch sizes "
+        "(suffix _bN) for the Fig. 1 batch-size sweep",
+    )
+    args = ap.parse_args()
+    cfg = model.ModelConfig(
+        batch=args.batch, vocab=args.vocab, embed_dim=args.embed_dim
+    )
+    lower_all(cfg, args.out_dir)
+    for b in args.batch_variants:
+        vcfg = model.ModelConfig(
+            batch=b, vocab=args.vocab, embed_dim=args.embed_dim
+        )
+        lower_all(vcfg, args.out_dir, suffix=f"_b{b}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU) + pure-jnp oracles."""
+
+from . import interact, matmul, mlp, ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""DLRM pairwise dot-product interaction as a Pallas kernel.
+
+Computes, per sample, the Gram matrix of the stacked embedding vectors
+and extracts its strict upper triangle — the feature-interaction layer
+that dominates DLRM's dense compute after the embedding gathers.
+
+Kernel shape: grid over the batch; each step loads one sample's
+(features, dim) block into VMEM, does a single (F, D) @ (D, F) MXU
+contraction, and writes the flattened triu. F and D are tiny (27, 16 in
+the default model) so a whole sample fits in a fraction of VMEM; the
+batch grid gives the pipeline its parallelism. A custom VJP implements
+the bilinear backward dE = (G + Gᵀ) E with the same contraction shape.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _triu_pairs(f):
+    iu, ju = np.triu_indices(f, k=1)
+    return iu.astype(np.int32), ju.astype(np.int32)
+
+
+def _gram_kernel(e_ref, o_ref):
+    """One sample per grid step: (F, D) @ (D, F) on the MXU."""
+    e = e_ref[0]  # (F, D)
+    o_ref[0] = jnp.dot(e, e.T, preferred_element_type=jnp.float32)
+
+
+@jax.custom_vjp
+def interact(emb):
+    """(B, F, D) -> (B, F*(F-1)//2) pairwise dot interactions."""
+    return _interact_forward(emb)
+
+
+def _interact_forward(emb):
+    b, f, _d = emb.shape
+    # The Pallas kernel computes the batched Gram matrix (the MXU
+    # contraction — the actual compute); the strict-triu extraction is a
+    # static gather that XLA fuses into the surrounding graph. Index
+    # arrays cannot be captured inside a Pallas kernel body, which is why
+    # the extraction lives outside.
+    gram = pl.pallas_call(
+        _gram_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, f, _d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, f, f), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f, f), jnp.float32),
+        interpret=True,
+    )(emb.astype(jnp.float32))
+    iu, ju = _triu_pairs(f)
+    return gram[:, iu, ju]
+
+
+def _interact_fwd(emb):
+    return _interact_forward(emb), emb
+
+
+def _interact_bwd(emb, g):
+    b, f, d = emb.shape
+    iu, ju = _triu_pairs(f)
+    # scatter the flat grad back into a symmetric (F, F) matrix
+    gram_grad = jnp.zeros((b, f, f), jnp.float32)
+    gram_grad = gram_grad.at[:, iu, ju].set(g)
+    sym = gram_grad + jnp.swapaxes(gram_grad, 1, 2)
+    # d/dE of tr(Gᵀ E Eᵀ) pattern: dE = (G + Gᵀ) E
+    d_emb = jnp.einsum("bfg,bgd->bfd", sym, emb)
+    return (d_emb,)
+
+
+interact.defvjp(_interact_fwd, _interact_bwd)

@@ -1,0 +1,77 @@
+"""Pallas tiled matmul — the MXU-shaped compute primitive.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's
+accelerator is an FPGA dataflow for *preprocessing*; the ML *consumer*
+(DLRM) is where the dense compute lives, so the Pallas layer implements
+the consumer's hot-spot. The kernel tiles for TPU VMEM: block sizes are
+multiples of the (8, 128) f32 tile and the MXU's 128×128 systolic shape,
+with the K dimension innermost in the grid so partial products accumulate
+in the revisited output block. On CPU we run interpret=True (real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run); the
+BlockSpec structure is what DESIGN.md §Perf's VMEM/MXU estimate is
+computed from.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Grid = (m_tiles, n_tiles, k_steps), K innermost.
+
+    The output BlockSpec maps every k step to the same (i, j) block, so
+    o_ref acts as the accumulator held in VMEM across the K loop — the
+    standard MXU accumulation pattern without a scratch buffer.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim, target):
+    """Largest divisor of `dim` that is <= target (keeps shapes static)."""
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm=128, bn=128, bk=128):
+    """(m, k) @ (k, n) -> (m, n) via a VMEM-tiled Pallas kernel.
+
+    Block sizes adapt to small dims so the kernel is total; for MXU-sized
+    inputs they stay at the 128×128 systolic shape. VMEM footprint per
+    grid step = (bm*bk + bk*bn + bm*bn) * 4 bytes — 192 KiB at the
+    default blocks, comfortably under the ~16 MiB VMEM budget, leaving
+    room for double-buffering.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def vmem_bytes(bm=128, bn=128, bk=128):
+    """Modeled VMEM bytes per grid step (for DESIGN.md §Perf)."""
+    return 4 * (bm * bk + bk * bn + bm * bn)

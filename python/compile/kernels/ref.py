@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: `pytest python/tests` asserts the
+Pallas kernels (run with interpret=True on CPU) match these references to
+float tolerance across shape/dtype sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain matrix multiply: (m, k) @ (k, n) -> (m, n), f32 accumulate."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def mlp_layer_ref(x, w, b):
+    """Fused dense layer: relu(x @ w + b)."""
+    return jnp.maximum(matmul_ref(x, w) + b[None, :], 0.0)
+
+
+def interact_ref(emb):
+    """DLRM pairwise dot-product feature interaction.
+
+    emb: (batch, features, dim) stacked embedding vectors (bottom-MLP
+    output is stacked in as one more "feature" by the caller).
+    Returns (batch, features*(features-1)//2): the strictly-upper-triangle
+    of the per-sample Gram matrix emb @ emb^T — the interaction layer of
+    Naumov et al.'s DLRM (paper §2.2 reference [53]).
+    """
+    gram = jnp.einsum("bfd,bgd->bfg", emb, emb)
+    f = emb.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    return gram[:, iu, ju]

@@ -1,0 +1,151 @@
+"""Layer-2: the DLRM training consumer, in JAX, calling the L1 kernels.
+
+Architecture (Naumov et al., the model the paper's pipeline feeds):
+
+  dense (B, ND) ──bottom MLP──▶ (B, D) ─┐
+  sparse (B, NS) ──embedding gather──▶ (B, NS, D) ─┴─ stack (B, NS+1, D)
+      ─▶ pairwise dot interaction (L1 kernel) ─▶ (B, P)
+      ─▶ concat with bottom output ─▶ top MLP ─▶ logit (B,)
+  loss = sigmoid BCE; optimizer = SGD.
+
+Parameters cross the rust↔XLA boundary as ONE flat f32 vector; this
+module owns the (static) unflatten schema. Everything here is build-time
+only — `aot.py` lowers `init` / `train_step` / `forward` to HLO text and
+the rust runtime executes them.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.interact import interact
+from .kernels.mlp import mlp_layer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    num_dense: int = 13
+    num_sparse: int = 26
+    vocab: int = 5000
+    embed_dim: int = 16
+    bottom_mlp: Tuple[int, ...] = (64, 16)
+    top_mlp: Tuple[int, ...] = (64, 1)
+    batch: int = 256
+    lr: float = 0.05
+    seed: int = 0
+
+    def interaction_dim(self) -> int:
+        f = self.num_sparse + 1
+        return f * (f - 1) // 2
+
+    def shapes(self) -> List[Tuple[int, ...]]:
+        """Static parameter shapes, in flat-vector order."""
+        shapes: List[Tuple[int, ...]] = [(self.num_sparse, self.vocab, self.embed_dim)]
+        d_in = self.num_dense
+        for width in self.bottom_mlp:
+            shapes.append((d_in, width))
+            shapes.append((width,))
+            d_in = width
+        assert d_in == self.embed_dim, (
+            "bottom MLP must end at embed_dim so the dense vector stacks "
+            f"with the embeddings ({d_in} != {self.embed_dim})"
+        )
+        t_in = self.interaction_dim() + self.embed_dim
+        for width in self.top_mlp:
+            shapes.append((t_in, width))
+            shapes.append((width,))
+            t_in = width
+        assert t_in == 1, "top MLP must end at a single logit"
+        return shapes
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for s in self.shapes())
+
+
+def unflatten(cfg: ModelConfig, flat):
+    """Split the flat parameter vector into the model's tensors."""
+    out, at = [], 0
+    for s in cfg.shapes():
+        n = 1
+        for d in s:
+            n *= d
+        out.append(flat[at : at + n].reshape(s))
+        at += n
+    assert at == flat.shape[0], f"flat vector has {flat.shape[0]} != {at} params"
+    return out
+
+
+def flatten(params) -> jnp.ndarray:
+    return jnp.concatenate([p.reshape(-1) for p in params])
+
+
+def init(cfg: ModelConfig) -> jnp.ndarray:
+    """Deterministic initialization, returned as the flat vector."""
+    key = jax.random.PRNGKey(cfg.seed)
+    parts = []
+    for s in cfg.shapes():
+        key, sub = jax.random.split(key)
+        if len(s) == 1:
+            parts.append(jnp.zeros(s, jnp.float32))  # biases
+        else:
+            fan_in = s[-2] if len(s) >= 2 else s[0]
+            scale = (2.0 / fan_in) ** 0.5
+            parts.append(scale * jax.random.normal(sub, s, jnp.float32))
+    return flatten(parts)
+
+
+def _mlp(x, tensors, start, widths, final_linear=False):
+    """Run an MLP through the fused Pallas layer; returns (y, next_idx)."""
+    i = start
+    for li, _ in enumerate(widths):
+        w, b = tensors[i], tensors[i + 1]
+        relu = not (final_linear and li == len(widths) - 1)
+        x = mlp_layer(x, w, b, relu)
+        i += 2
+    return x, i
+
+
+def forward_logits(cfg: ModelConfig, flat, dense, sparse):
+    """(B, ND) f32, (B, NS) i32 -> (B,) logits."""
+    tensors = unflatten(cfg, flat)
+    tables = tensors[0]  # (NS, V, D)
+    # bottom MLP over the log-transformed dense features
+    bot, at = _mlp(dense, tensors, 1, cfg.bottom_mlp)
+    # embedding gathers: per-column table lookup (XLA gather — memory
+    # bound, stays in jnp)
+    idx = jnp.clip(sparse, 0, cfg.vocab - 1)
+    emb = _gather(tables, idx)  # (B, NS, D)
+    stacked = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, NS+1, D)
+    inter = interact(stacked)  # L1 kernel
+    top_in = jnp.concatenate([inter, bot], axis=1)
+    logits, _ = _mlp(top_in, tensors, at, cfg.top_mlp, final_linear=True)
+    return logits[:, 0]
+
+
+def _gather(tables, idx):
+    """tables (NS, V, D), idx (B, NS) -> (B, NS, D)."""
+    def per_col(table, col_idx):
+        return table[col_idx]  # (B, D)
+
+    emb = jax.vmap(per_col, in_axes=(0, 1), out_axes=1)(tables, idx)
+    return emb  # (B, NS, D)
+
+
+def loss_fn(cfg: ModelConfig, flat, dense, sparse, labels):
+    logits = forward_logits(cfg, flat, dense, sparse)
+    # numerically-stable sigmoid BCE
+    z = jnp.clip(logits, -30.0, 30.0)
+    loss = jnp.maximum(z, 0.0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.mean(loss)
+
+
+def train_step(cfg: ModelConfig, flat, dense, sparse, labels):
+    """One SGD step. Returns (new_flat, loss)."""
+    loss, grad = jax.value_and_grad(lambda p: loss_fn(cfg, p, dense, sparse, labels))(flat)
+    return flat - cfg.lr * grad, loss
+
+
+def forward_probs(cfg: ModelConfig, flat, dense, sparse):
+    return jax.nn.sigmoid(forward_logits(cfg, flat, dense, sparse))

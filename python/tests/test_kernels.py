@@ -1,0 +1,176 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; fixed cases pin the model's actual
+shapes. assert_allclose against ref.py is the core correctness signal.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.interact import interact
+from compile.kernels.matmul import matmul, vmem_bytes
+from compile.kernels.mlp import mlp_layer
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ----------------------------------------------------------------------
+# matmul
+# ----------------------------------------------------------------------
+
+
+@hypothesis.given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_matmul_matches_ref_random_shapes(m, k, n, seed):
+    r = rng(seed)
+    a = r.standard_normal((m, k), dtype=np.float32)
+    b = r.standard_normal((k, n), dtype=np.float32)
+    got = matmul(jnp.asarray(a), jnp.asarray(b))
+    want = ref.matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(256, 128, 64), (128, 128, 128), (384, 256, 128)])
+def test_matmul_mxu_shapes(shape):
+    m, k, n = shape
+    r = rng(0)
+    a = r.standard_normal((m, k), dtype=np.float32)
+    b = r.standard_normal((k, n), dtype=np.float32)
+    got = matmul(jnp.asarray(a), jnp.asarray(b))
+    assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("blocks", [(32, 32, 32), (64, 128, 32), (128, 128, 128)])
+def test_matmul_block_sweep_same_answer(blocks):
+    bm, bn, bk = blocks
+    r = rng(1)
+    a = r.standard_normal((128, 128), dtype=np.float32)
+    b = r.standard_normal((128, 128), dtype=np.float32)
+    got = matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn, bk=bk)
+    assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16_inputs_accumulate_f32():
+    r = rng(2)
+    a = jnp.asarray(r.standard_normal((64, 64)), dtype=jnp.bfloat16)
+    b = jnp.asarray(r.standard_normal((64, 64)), dtype=jnp.bfloat16)
+    got = matmul(a, b)
+    assert got.dtype == jnp.float32
+    want = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2)
+
+
+def test_vmem_budget_default_blocks():
+    # default 128³ tiling must fit VMEM with double-buffering headroom
+    assert vmem_bytes() * 2 < 16 * 1024 * 1024
+
+
+# ----------------------------------------------------------------------
+# fused MLP layer
+# ----------------------------------------------------------------------
+
+
+@hypothesis.given(
+    b=st.integers(1, 64),
+    i=st.integers(1, 48),
+    o=st.integers(1, 48),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_mlp_layer_matches_ref(b, i, o, relu, seed):
+    r = rng(seed)
+    x = r.standard_normal((b, i), dtype=np.float32)
+    w = r.standard_normal((i, o), dtype=np.float32)
+    bias = r.standard_normal(o, dtype=np.float32)
+    got = mlp_layer(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias), relu)
+    want = ref.mlp_layer_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias))
+    if not relu:
+        want = jnp.asarray(x) @ jnp.asarray(w) + jnp.asarray(bias)[None, :]
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_layer_gradients_match_jnp():
+    r = rng(3)
+    x = jnp.asarray(r.standard_normal((32, 16), dtype=np.float32))
+    w = jnp.asarray(r.standard_normal((16, 8), dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(8, dtype=np.float32))
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(mlp_layer(x, w, b, True) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.mlp_layer_ref(x, w, b) ** 2)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gp, gr):
+        assert_allclose(np.asarray(a), np.asarray(e), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# pairwise interaction
+# ----------------------------------------------------------------------
+
+
+@hypothesis.given(
+    b=st.integers(1, 16),
+    f=st.integers(2, 12),
+    d=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_interact_matches_ref(b, f, d, seed):
+    r = rng(seed)
+    e = r.standard_normal((b, f, d), dtype=np.float32)
+    got = interact(jnp.asarray(e))
+    want = ref.interact_ref(jnp.asarray(e))
+    assert got.shape == (b, f * (f - 1) // 2)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_interact_dlrm_shape():
+    # the model's actual shape: 27 features (26 sparse + bottom), dim 16
+    r = rng(4)
+    e = r.standard_normal((8, 27, 16), dtype=np.float32)
+    got = interact(jnp.asarray(e))
+    assert got.shape == (8, 351)
+    assert_allclose(np.asarray(got), np.asarray(ref.interact_ref(jnp.asarray(e))),
+                    rtol=1e-4, atol=1e-4)
+
+
+def test_interact_gradients_match_jnp():
+    r = rng(5)
+    e = jnp.asarray(r.standard_normal((4, 6, 8), dtype=np.float32))
+
+    gp = jax.grad(lambda x: jnp.sum(interact(x) ** 2))(e)
+    gr = jax.grad(lambda x: jnp.sum(ref.interact_ref(x) ** 2))(e)
+    assert_allclose(np.asarray(gp), np.asarray(gr), rtol=1e-4, atol=1e-4)
+
+
+def test_interact_is_permutation_consistent():
+    # swapping two feature rows permutes outputs but preserves the
+    # multiset of pair products
+    r = rng(6)
+    e = r.standard_normal((1, 5, 7), dtype=np.float32)
+    a = np.sort(np.asarray(interact(jnp.asarray(e)))[0])
+    e2 = e[:, ::-1, :].copy()
+    b = np.sort(np.asarray(interact(jnp.asarray(e2)))[0])
+    assert_allclose(a, b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,66 @@
+//! Figure 10 — PIPER local-mode time breakdown: Get Row Number /
+//! Initialize Buffer / Assign Values / Kernel Execution, for
+//! decode-in-kernel (Fig. 7b) vs decode-in-host (Fig. 7c).
+//!
+//! All values are model outputs at paper scale (tagged sim). Qualitative
+//! checks against the paper:
+//!   * Initialize Buffer occupies a large share in both modes;
+//!   * decode-in-host execution ≈ 50% longer than decoding twice in the
+//!     kernel;
+//!   * these host costs are exactly what network mode deletes.
+
+use piper::accel::{dataflow, host::HostModel, InputFormat, Mode, PiperConfig};
+use piper::benchutil::paper;
+use piper::ops::Modulus;
+use piper::report::{fmt_duration, Table};
+
+fn main() {
+    let hm = HostModel::default();
+    let uniq = 26 * 5_000;
+
+    let mut t = Table::new(
+        "Fig. 10 — PIPER local-mode breakdown at paper scale [all sim]",
+        &["mode", "GetRowNum", "InitBuffer", "AssignValues", "KernelExec", "total"],
+    );
+
+    for (label, mode) in [
+        ("Decode in Kernel", Mode::LocalDecodeInKernel),
+        ("Decode in Host", Mode::LocalDecodeInHost),
+    ] {
+        let cfg = PiperConfig::paper(mode, InputFormat::Utf8, Modulus::VOCAB_5K);
+        let kernel =
+            dataflow::model_timing(&cfg, paper::UTF8_BYTES, paper::ROWS, uniq).seconds();
+        let hb = hm.local_breakdown(&cfg, paper::UTF8_BYTES, paper::ROWS, kernel);
+        t.row(&[
+            label.into(),
+            fmt_duration(hb.get_row_number),
+            fmt_duration(hb.initialize_buffer),
+            fmt_duration(hb.assign_values),
+            fmt_duration(hb.kernel_execution),
+            fmt_duration(hb.total()),
+        ]);
+        let shares = hb.shares();
+        t.note(&format!(
+            "{label}: shares {}",
+            shares
+                .iter()
+                .map(|(n, s)| format!("{n} {:.0}%", s * 100.0))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+    }
+    t.note("paper: InitBuffer dominates; host-decode ≈1.5× of double kernel-decode");
+    t.print();
+
+    // The §4.4.3 check: host decode shrinks kernel time but loses e2e.
+    let ck = PiperConfig::paper(Mode::LocalDecodeInKernel, InputFormat::Utf8, Modulus::VOCAB_5K);
+    let ch = PiperConfig::paper(Mode::LocalDecodeInHost, InputFormat::Utf8, Modulus::VOCAB_5K);
+    let kk = dataflow::model_timing(&ck, paper::UTF8_BYTES, paper::ROWS, uniq).seconds();
+    let kh = dataflow::model_timing(&ch, paper::UTF8_BYTES, paper::ROWS, uniq).seconds();
+    println!(
+        "\nkernel-only: decode-in-kernel {} vs decode-in-host {} (kernel shrinks {:.1}×)",
+        fmt_duration(kk),
+        fmt_duration(kh),
+        kk.as_secs_f64() / kh.as_secs_f64()
+    );
+}

@@ -1,0 +1,155 @@
+//! Figure 9 — end-to-end CPU / GPU / PIPER comparison across the four
+//! sub-figures: (a) UTF-8+5K, (b) UTF-8+1M, (c) binary+5K, (d) binary+1M.
+//!
+//! CPU rows are measured on this machine and *also* projected to paper
+//! scale; GPU and PIPER rows are timing-model outputs at paper scale
+//! (tagged sim). Speedups are computed against the best CPU row, next to
+//! the paper's reported speedups.
+
+use piper::accel::{dataflow, host::HostModel, network, InputFormat, Mode, PiperConfig};
+use piper::benchutil::{bench_rows, dataset, paper};
+use piper::cpu_baseline::{
+    profile_single_thread, project, BaselineConfig, ConfigKind, ServerModel, SimDisk,
+};
+use piper::data::{binary, utf8};
+use piper::gpu_sim::GpuModel;
+use piper::ops::Modulus;
+use piper::report::{fmt_duration, fmt_speedup, Table};
+use std::time::Duration;
+
+struct SubFig {
+    name: &'static str,
+    input: InputFormat,
+    vocab: Modulus,
+    paper_speedups: &'static str,
+    /// Paper Table 3 best-CPU pure-compute throughput (rows/s) — the
+    /// reference the paper's Fig. 9 speedups are computed against
+    /// (Meta's python pipeline on the 128-core EPYC).
+    paper_cpu_best_rps: f64,
+}
+
+fn main() {
+    let rows = bench_rows(100_000);
+    let ds = dataset(rows);
+    let raw_utf8 = utf8::encode_dataset(&ds);
+    let raw_bin = binary::encode_dataset(&ds);
+
+    let subs = [
+        SubFig { name: "9a", input: InputFormat::Utf8, vocab: Modulus::VOCAB_5K,
+                 paper_speedups: "paper: local 2.5×/2.0×, network 5.1×",
+                 paper_cpu_best_rps: 4.82e5 },
+        SubFig { name: "9b", input: InputFormat::Utf8, vocab: Modulus::VOCAB_1M,
+                 paper_speedups: "paper: network 4.7×",
+                 paper_cpu_best_rps: 2.06e5 },
+        SubFig { name: "9c", input: InputFormat::Binary, vocab: Modulus::VOCAB_5K,
+                 paper_speedups: "paper: local 5.0×, network 71.3×; GPU gap 4.8~20.3×",
+                 paper_cpu_best_rps: 5.09e5 },
+        SubFig { name: "9d", input: InputFormat::Binary, vocab: Modulus::VOCAB_1M,
+                 paper_speedups: "paper: network 25.7×",
+                 paper_cpu_best_rps: 2.20e5 },
+    ];
+
+    for sub in &subs {
+        let raw: &[u8] = match sub.input {
+            InputFormat::Utf8 => &raw_utf8,
+            InputFormat::Binary => &raw_bin,
+        };
+        let paper_bytes = match sub.input {
+            InputFormat::Utf8 => paper::UTF8_BYTES,
+            InputFormat::Binary => paper::BINARY_BYTES,
+        };
+
+        // --- best CPU: single-thread components measured here, thread
+        //     scaling projected to the paper's 128-core EPYC -------------
+        let kind = match sub.input {
+            InputFormat::Utf8 => ConfigKind::II,
+            InputFormat::Binary => ConfigKind::III,
+        };
+        let profile = profile_single_thread(&BaselineConfig::new(kind, 1, sub.vocab), raw)
+            .scaled_to(paper::ROWS);
+        let server = ServerModel::paper_epyc();
+        let disk = SimDisk::default();
+        let mut best_cpu = Duration::MAX;
+        let mut best_threads = 0;
+        for n in [1usize, 8, 16, 32, 64, 128] {
+            let t = project(&profile, kind, n, &disk, &server, false).total();
+            if t < best_cpu {
+                best_cpu = t;
+                best_threads = n;
+            }
+        }
+
+        // --- GPU model at paper scale -----------------------------------
+        let g = GpuModel::default();
+        let gpu_time = {
+            let convert = match sub.input {
+                InputFormat::Utf8 => paper::UTF8_BYTES as f64 / g.convert_bps,
+                InputFormat::Binary => 0.0,
+            };
+            let transfer = 2.0 * paper::BINARY_BYTES as f64 / g.pcie_bps;
+            let sparse_vals = (paper::ROWS * 26) as f64;
+            let dense_vals = (paper::ROWS * 13) as f64;
+            let stream = (2.0 * sparse_vals + 2.0 * dense_vals) * 8.0
+                / (g.hbm_bps * g.stream_efficiency);
+            let vocab = sparse_vals / g.sort_keys_per_sec + sparse_vals * 16.0 / g.random_bps;
+            let dispatch = g.per_op_dispatch.as_secs_f64() * (4.0 * 26.0 + 3.0 * 13.0);
+            Duration::from_secs_f64(convert + transfer + stream + vocab + dispatch)
+        };
+
+        // --- PIPER modes at paper scale ---------------------------------
+        let uniq = match sub.vocab.range {
+            r if r > 100_000 => 26 * 700_000,
+            r => 26 * r as usize,
+        };
+        let piper = |mode: Mode| -> Duration {
+            let cfg = PiperConfig::paper(mode, sub.input, sub.vocab);
+            let k = dataflow::model_timing(&cfg, paper_bytes, paper::ROWS, uniq).seconds();
+            match mode {
+                Mode::Network => network::stream_time(&cfg, paper_bytes, k),
+                _ => HostModel::default()
+                    .local_breakdown(&cfg, paper_bytes, paper::ROWS, k)
+                    .total(),
+            }
+        };
+
+        // The paper's Fig. 9 reference: its own python CPU baseline on
+        // the 128-core EPYC (Table 3 best rows/s → seconds over 46M rows).
+        let paper_cpu = Duration::from_secs_f64(paper::ROWS as f64 / sub.paper_cpu_best_rps);
+
+        let mut t = Table::new(
+            &format!(
+                "Fig. {} — e2e at paper scale ({:?}, vocab {})",
+                sub.name, sub.input, sub.vocab.range
+            ),
+            &["platform", "e2e time", "vs paper CPU", "vs rust CPU"],
+        );
+        let mut add = |name: String, d: Duration| {
+            t.row(&[
+                name,
+                fmt_duration(d),
+                fmt_speedup(paper_cpu.as_secs_f64() / d.as_secs_f64()),
+                fmt_speedup(best_cpu.as_secs_f64() / d.as_secs_f64()),
+            ]);
+        };
+        add("CPU paper baseline (128c python) [lit]".into(), paper_cpu);
+        add(format!("CPU rust, this repo ({best_threads}t proj) [meas+sim]"), best_cpu);
+        add("GPU V100 [sim]".into(), gpu_time);
+        if sub.vocab.range <= 100_000 {
+            // paper runs local mode only for small vocab (Table 2)
+            add("PIPER local, decode-in-kernel [sim]".into(), piper(Mode::LocalDecodeInKernel));
+            if sub.input == InputFormat::Utf8 {
+                add("PIPER local, decode-in-host [sim]".into(), piper(Mode::LocalDecodeInHost));
+            }
+        }
+        add("PIPER network [sim]".into(), piper(Mode::Network));
+        t.note(sub.paper_speedups);
+        t.note("`vs paper CPU` is the paper's comparison (its python pipeline); the rust CPU");
+        t.note("row is this repo's own optimized baseline — a reproduction finding: native");
+        t.note("software closes much of the gap the paper attributes to CPUs per se");
+        t.note(&format!(
+            "rust CPU: 1-thread components measured over {rows} rows here, projected to 128 cores"
+        ));
+        t.print();
+        println!();
+    }
+}

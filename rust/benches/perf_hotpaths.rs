@@ -1,0 +1,109 @@
+//! Hot-path profiling harness (EXPERIMENTS.md §Perf): throughput of the
+//! L3 request-path kernels in MB/s / Mrows/s, for before/after
+//! comparisons during the optimization pass.
+//!
+//!   decode-scalar       byte state machine (Fig. 6)
+//!   decode-parallel     Script-1 fold
+//!   utf8-parse          baseline GV parse (split + hex2int + modulus)
+//!   binary-unpack       Config III unpack
+//!   genvocab-hash       HashVocab observe stream
+//!   genvocab-direct     DirectVocab observe stream
+//!   applyvocab          DirectVocab apply stream
+//!   dense-finish        neg2zero + log1p
+//!   tcp-loopback        end-to-end streaming worker
+
+use std::time::Instant;
+
+use piper::benchutil::{bench_reps, bench_rows, dataset, median};
+use piper::cpu_baseline::{profile_single_thread, BaselineConfig, ConfigKind};
+use piper::data::{binary, utf8};
+use piper::decode::{ParallelDecoder, ScalarDecoder};
+use piper::net::{leader, protocol::Job, stream::WireFormat};
+use piper::ops::{self, DirectVocab, HashVocab, Modulus, Vocab};
+use piper::report::Table;
+
+fn time<F: FnMut()>(reps: usize, mut f: F) -> std::time::Duration {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    median(samples)
+}
+
+fn main() {
+    let rows = bench_rows(200_000);
+    let reps = bench_reps(5);
+    let ds = dataset(rows);
+    let raw_utf8 = utf8::encode_dataset(&ds);
+    let raw_bin = binary::encode_dataset(&ds);
+    let m = Modulus::VOCAB_5K;
+    let sparse: Vec<u32> = ds
+        .rows
+        .iter()
+        .flat_map(|r| r.sparse.iter().map(|&v| m.apply(v)))
+        .collect();
+    let dense: Vec<i32> = ds.rows.iter().flat_map(|r| r.dense.clone()).collect();
+
+    let mut t = Table::new(
+        &format!("hot paths ({rows} rows, median of {reps}) [all meas]"),
+        &["path", "time", "throughput"],
+    );
+    let mut row = |name: &str, d: std::time::Duration, bytes: Option<usize>, items: usize| {
+        let tput = match bytes {
+            Some(b) => format!("{:.0} MB/s", b as f64 / d.as_secs_f64() / 1e6),
+            None => format!("{:.1} Mitems/s", items as f64 / d.as_secs_f64() / 1e6),
+        };
+        t.row(&[name.into(), piper::report::fmt_duration(d), tput]);
+    };
+
+    let sd = ScalarDecoder::new(ds.schema());
+    row("decode-scalar", time(reps, || { std::hint::black_box(sd.decode(&raw_utf8)); }),
+        Some(raw_utf8.len()), rows);
+    let pd = ParallelDecoder::new(ds.schema());
+    row("decode-parallel", time(reps, || { std::hint::black_box(pd.decode(&raw_utf8)); }),
+        Some(raw_utf8.len()), rows);
+
+    let cfg = BaselineConfig::new(ConfigKind::I, 1, m);
+    let d = time(reps.min(3), || {
+        std::hint::black_box(profile_single_thread(&cfg, &raw_utf8).gv_parse);
+    });
+    row("utf8-parse (profile)", d, Some(raw_utf8.len()), rows);
+
+    row("binary-unpack",
+        time(reps, || { std::hint::black_box(binary::decode_bytes(&raw_bin, ds.schema()).unwrap()); }),
+        Some(raw_bin.len()), rows);
+
+    row("genvocab-hash", time(reps, || {
+            let mut v = HashVocab::new();
+            v.observe_slice(&sparse);
+            std::hint::black_box(v.len());
+        }), None, sparse.len());
+    row("genvocab-direct", time(reps, || {
+            let mut v = DirectVocab::new(m.range);
+            v.observe_slice(&sparse);
+            std::hint::black_box(v.len());
+        }), None, sparse.len());
+
+    let mut dv = DirectVocab::new(m.range);
+    dv.observe_slice(&sparse);
+    row("applyvocab", time(reps, || {
+            let mut out = Vec::new();
+            dv.apply_slice(&sparse, &mut out);
+            std::hint::black_box(out.len());
+        }), None, sparse.len());
+
+    row("dense-finish", time(reps, || {
+            let mut out = Vec::new();
+            ops::dense_finish_slice(&dense, &mut out);
+            std::hint::black_box(out.len());
+        }), None, dense.len());
+
+    let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+    row("tcp-loopback e2e", time(3, || {
+            std::hint::black_box(leader::run_loopback(job, &raw_utf8, 1 << 20).unwrap().stats);
+        }), Some(raw_utf8.len() * 2), rows);
+
+    t.print();
+}

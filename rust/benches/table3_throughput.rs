@@ -1,0 +1,115 @@
+//! Table 3 — pure-computation throughput (rows/s): CPU at
+//! {1,8,16,32,64,128} threads × Configs I/II/III × vocab {5K,1M}, plus
+//! PIPER local and network.
+//!
+//! CPU protocol: single-thread work components measured on this machine
+//! (median of reps), projected to the paper's 128-core EPYC (tagged sim
+//! for T>1 — this box may have one core). PIPER rows: kernel model at
+//! paper scale. The paper's own numbers and the ratio are printed
+//! alongside; absolute CPU ratios reflect rust-vs-python single-core
+//! speed, the *shape* across threads/configs is the reproduction target.
+
+use piper::accel::{dataflow, InputFormat, Mode, PiperConfig};
+use piper::benchutil::{bench_reps, bench_rows, dataset, paper};
+use piper::cpu_baseline::{
+    profile_single_thread, project, BaselineConfig, ConfigKind, ServerModel, SimDisk,
+};
+use piper::data::{binary, utf8};
+use piper::ops::Modulus;
+use piper::report::{fmt_rows_per_sec, Table};
+
+/// Paper Table 3 values (rows/s) for side-by-side printing.
+fn paper_value(vocab: u32, kind: ConfigKind, threads: usize) -> Option<f64> {
+    let v = match (vocab, kind) {
+        (5_000, ConfigKind::I) => [1.84e4, 1.32e5, 2.32e5, 4.32e5, 7.39e5, 9.75e5],
+        (5_000, ConfigKind::II) => [4.02e4, 2.30e5, 3.27e5, 4.16e5, 4.82e5, 4.53e5],
+        (5_000, ConfigKind::III) => [4.96e4, 2.61e5, 3.69e5, 4.67e5, 5.09e5, 4.92e5],
+        (1_000_000, ConfigKind::I) => [1.50e4, 1.08e5, 1.52e5, 1.93e5, 2.01e5, 1.98e5],
+        (1_000_000, ConfigKind::II) => [3.81e4, 1.71e5, 2.05e5, 2.06e5, 1.99e5, 1.83e5],
+        (1_000_000, ConfigKind::III) => [4.51e4, 1.92e5, 2.15e5, 2.20e5, 2.00e5, 1.87e5],
+        _ => return None,
+    };
+    let idx = [1usize, 8, 16, 32, 64, 128].iter().position(|&t| t == threads)?;
+    Some(v[idx])
+}
+
+fn main() {
+    let rows = bench_rows(120_000);
+    let reps = bench_reps(3);
+    let ds = dataset(rows);
+    let raw_utf8 = utf8::encode_dataset(&ds);
+    let raw_bin = binary::encode_dataset(&ds);
+    let threads = [1usize, 8, 16, 32, 64, 128];
+    let server = ServerModel::paper_epyc();
+    let disk = SimDisk::default();
+
+    for vocab in [Modulus::VOCAB_5K, Modulus::VOCAB_1M] {
+        let mut t = Table::new(
+            &format!(
+                "Table 3 — pure compute rows/s @46M rows, vocab {} (profiled {rows} rows ×{reps} [meas], threads>1 projected [sim])",
+                vocab.range
+            ),
+            &["config", "threads", "this repo", "paper", "ratio", "shape vs paper"],
+        );
+        for kind in [ConfigKind::I, ConfigKind::II, ConfigKind::III] {
+            let raw: &[u8] = if kind.binary_input() { &raw_bin } else { &raw_utf8 };
+            let cfg = BaselineConfig::new(kind, 1, vocab);
+            // median-of-reps profile
+            let mut profiles: Vec<_> =
+                (0..reps).map(|_| profile_single_thread(&cfg, raw)).collect();
+            profiles.sort_by_key(|p| p.gv_parse + p.gv_observe + p.av);
+            let profile = profiles[profiles.len() / 2].scaled_to(paper::ROWS);
+
+            let t1 = project(&profile, kind, 1, &disk, &server, true).compute();
+            for &n in &threads {
+                let c = project(&profile, kind, n, &disk, &server, true).compute();
+                let rps = paper::ROWS as f64 / c.as_secs_f64();
+                let (p, ratio, shape) = match paper_value(vocab.range, kind, n) {
+                    Some(p) => {
+                        // shape = our speedup-vs-1t / paper's speedup-vs-1t
+                        let ours = t1.as_secs_f64() / c.as_secs_f64();
+                        let paper1 = paper_value(vocab.range, kind, 1).unwrap();
+                        let theirs = p / paper1;
+                        (fmt_rows_per_sec(p), format!("{:.2}", rps / p),
+                         format!("{:.2}", ours / theirs))
+                    }
+                    None => ("-".into(), "-".into(), "-".into()),
+                };
+                t.row(&[kind.name().into(), n.to_string(), fmt_rows_per_sec(rps), p, ratio, shape]);
+            }
+        }
+        // PIPER kernel throughput at paper scale.
+        let uniq = if vocab.range > 100_000 { 26 * 700_000 } else { 26 * vocab.range as usize };
+        for (label, mode, input, paper_rps) in [
+            ("FPGA local (UTF-8)", Mode::LocalDecodeInKernel, InputFormat::Utf8,
+             if vocab.range == 5_000 { Some(1.87e6) } else { None }),
+            ("FPGA network (UTF-8)", Mode::Network, InputFormat::Utf8,
+             Some(if vocab.range == 5_000 { 1.56e6 } else { 8.45e5 })),
+            ("FPGA local (binary)", Mode::LocalDecodeInKernel, InputFormat::Binary,
+             if vocab.range == 5_000 { Some(1.77e7) } else { None }),
+            ("FPGA network (binary)", Mode::Network, InputFormat::Binary,
+             Some(if vocab.range == 5_000 { 2.36e7 } else { 4.99e6 })),
+        ] {
+            if vocab.range > 100_000 && mode == Mode::LocalDecodeInKernel {
+                continue; // paper Table 2: no local runs at 1M
+            }
+            let cfg = PiperConfig::paper(mode, input, vocab);
+            let bytes = match input {
+                InputFormat::Utf8 => paper::UTF8_BYTES,
+                InputFormat::Binary => paper::BINARY_BYTES,
+            };
+            let k = dataflow::model_timing(&cfg, bytes, paper::ROWS, uniq);
+            let rps = paper::ROWS as f64 / k.seconds().as_secs_f64();
+            let (p, ratio) = match paper_rps {
+                Some(p) => (fmt_rows_per_sec(p), format!("{:.2}", rps / p)),
+                None => ("-".into(), "-".into()),
+            };
+            t.row(&[format!("{label} [sim]"), "-".into(), fmt_rows_per_sec(rps), p,
+                    ratio, "-".into()]);
+        }
+        t.note("`ratio` = this repo / paper (absolute; rust 1-core ≈ 10-35× python explains CPU offsets)");
+        t.note("`shape vs paper` = our thread-speedup / paper's thread-speedup (1.0 = same curve)");
+        t.print();
+        println!();
+    }
+}

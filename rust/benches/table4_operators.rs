@@ -1,0 +1,129 @@
+//! Table 4 — per-operator execution time over the whole dataset:
+//! CPU single-thread (measured here, scaled to the paper's 46M rows) vs
+//! the FPGA PE model at 250 MHz (5K build) / 135 MHz (1M build).
+//!
+//! Paper values are printed alongside. The FPGA's per-operator time is
+//! II × items / f_clk over 1.83e9 feature values (46M rows × 40 values),
+//! exactly how the paper's 7.33 s / 13.58 s "II=1" constants arise.
+
+use std::time::{Duration, Instant};
+
+use piper::accel::memory::VocabPlacement;
+use piper::accel::pe::PeKind;
+use piper::benchutil::{bench_rows, dataset, paper};
+use piper::data::{binary, utf8};
+use piper::decode::ScalarDecoder;
+use piper::ops::{self, hex::hex2int, DirectVocab, Modulus, Vocab};
+use piper::report::{fmt_duration, Table};
+
+/// Measure `f` and scale the per-item cost to `paper_items`.
+fn measure_scaled<F: FnMut()>(mut f: F, items: usize, paper_items: usize) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().mul_f64(paper_items as f64 / items.max(1) as f64)
+}
+
+fn main() {
+    let rows = bench_rows(80_000);
+    let ds = dataset(rows);
+    let raw_utf8 = utf8::encode_dataset(&ds);
+    let raw_bin = binary::encode_dataset(&ds);
+    let all_values = paper::ROWS * 40; // 1.83e9 — the paper's item count
+    let sparse_vals = paper::ROWS * 26;
+
+    for (vocab, clock) in [(Modulus::VOCAB_5K, 250.0e6), (Modulus::VOCAB_1M, 135.0e6)] {
+        let placement = if vocab.range > 100_000 {
+            VocabPlacement::hbm_u55c()
+        } else {
+            VocabPlacement::Sram
+        };
+        let fpga = |pe: PeKind, items: usize| {
+            // Table 4 uses HBM round-robin II=1 for ApplyVocab (§4.4.6).
+            let ii = match pe {
+                PeKind::ApplyVocab1 | PeKind::ApplyVocab2 if vocab.range > 100_000 => 1.0,
+                _ => pe.ii(placement),
+            };
+            fmt_duration(Duration::from_secs_f64(ii * items as f64 / clock))
+        };
+
+        // --- CPU measurements (single thread), scaled ------------------
+        let mut sparse: Vec<u32> = ds.rows.iter().flat_map(|r| r.sparse.clone()).collect();
+        let dense: Vec<i32> = ds.rows.iter().flat_map(|r| r.dense.clone()).collect();
+        let hex_fields: Vec<Vec<u8>> = sparse
+            .iter()
+            .map(|v| format!("{v:08x}").into_bytes())
+            .collect();
+
+        let dec = ScalarDecoder::new(ds.schema());
+        let t_decode =
+            measure_scaled(|| { std::hint::black_box(dec.decode(&raw_utf8)); },
+                raw_utf8.len(), paper::UTF8_BYTES);
+        let t_unpack = measure_scaled(
+            || { std::hint::black_box(binary::decode_bytes(&raw_bin, ds.schema()).unwrap()); },
+            raw_bin.len(), paper::BINARY_BYTES);
+        let mut acc = 0u64;
+        let t_hexmod = measure_scaled(
+            || {
+                for f in &hex_fields {
+                    acc = acc.wrapping_add(vocab.apply(hex2int(f).unwrap_or(0)) as u64);
+                }
+            },
+            hex_fields.len(), sparse_vals);
+        vocab.apply_slice(&mut sparse);
+        let mut gv = DirectVocab::new(vocab.range);
+        let t_genvocab = measure_scaled(
+            || { for &v in &sparse { gv.observe(v); } }, sparse.len(), sparse_vals);
+        let uniques: Vec<u32> = (0..gv.len() as u32).collect();
+        let t_av1 = measure_scaled(
+            || {
+                let mut v2 = DirectVocab::new(vocab.range);
+                for &u in &uniques { v2.observe(u); }
+                std::hint::black_box(&v2);
+            },
+            uniques.len().max(1), gv.len().max(1) * 26 / 26);
+        let mut applied = Vec::new();
+        let t_av2 = measure_scaled(
+            || gv.apply_slice(&sparse, &mut applied), sparse.len(), sparse_vals);
+        let mut d2 = dense.clone();
+        let t_n2z = measure_scaled(|| ops::neg2zero_slice(&mut d2), dense.len(),
+            paper::ROWS * 13);
+        let mut logs = Vec::new();
+        let t_log = measure_scaled(|| ops::dense_finish_slice(&d2, &mut logs), dense.len(),
+            paper::ROWS * 13);
+
+        let mut t = Table::new(
+            &format!(
+                "Table 4 — per-operator seconds over whole dataset, vocab {} (FPGA @{:.0} MHz)",
+                vocab.range, clock / 1e6
+            ),
+            &["operator", "CPU 1t [meas→scaled]", "FPGA [sim]", "paper CPU", "paper FPGA"],
+        );
+        let paper_cpu_gen = if vocab.range == 5_000 { "365.34s" } else { "410.82s" };
+        let paper_av2 = if vocab.range == 5_000 { "331.79s" } else { "367.11s" };
+        let paper_f = |s5: &str, s1m: &str| if vocab.range == 5_000 { s5.to_string() } else { s1m.to_string() };
+        t.row(&["Decode & FillMissing".into(), fmt_duration(t_decode),
+            fpga(PeKind::Decode, paper::UTF8_BYTES / 4), "182.29s".into(), paper_f("11.00s", "20.37s")]);
+        t.row(&["Binary Unpack".into(), fmt_duration(t_unpack),
+            fpga(PeKind::LoadData, all_values), "35.77s".into(), paper_f("7.33s", "13.58s")]);
+        t.row(&["Hex2Int & Modulus".into(), fmt_duration(t_hexmod),
+            fpga(PeKind::Modulus, all_values), "655.17s".into(), paper_f("7.33s", "13.58s")]);
+        t.row(&["GenVocab-1".into(), fmt_duration(t_genvocab),
+            fpga(PeKind::GenVocab1, all_values), paper_cpu_gen.into(), paper_f("14.67s", "27.16s")]);
+        t.row(&["GenVocab-2".into(), "NOP".into(),
+            fpga(PeKind::GenVocab2, all_values), "NOP".into(), paper_f("7.33s", "13.58s")]);
+        t.row(&["ApplyVocab-1".into(), fmt_duration(t_av1),
+            fpga(PeKind::ApplyVocab1, all_values),
+            paper_f("0.0065s", "0.74s"), paper_f("7.33s", "13.58s")]);
+        t.row(&["ApplyVocab-2".into(), fmt_duration(t_av2),
+            fpga(PeKind::ApplyVocab2, all_values), paper_av2.into(), paper_f("7.33s", "13.58s")]);
+        t.row(&["Neg2Zero".into(), fmt_duration(t_n2z),
+            fpga(PeKind::Neg2Zero, all_values), "0.61s".into(), paper_f("7.33s", "13.58s")]);
+        t.row(&["Logarithm".into(), fmt_duration(t_log),
+            fpga(PeKind::Logarithm, all_values), "1.34s".into(), paper_f("7.33s", "13.58s")]);
+        t.note("CPU column: this machine, single thread, scaled to 46M rows (absolute ≠ paper's EPYC)");
+        t.note("shape check: Hex2Int & GenVocab dominate CPU; FPGA is flat II×items/f_clk");
+        t.print();
+        println!();
+        std::hint::black_box((acc, applied, logs));
+    }
+}

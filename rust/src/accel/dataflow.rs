@@ -1,0 +1,252 @@
+//! The two-loop column-wise dataflow (paper Fig. 5) — functional
+//! execution + cycle accounting.
+//!
+//! Loop ① reads the dataset and builds the per-column vocabularies
+//! (Modulus → GenVocab-1 → ApplyVocab-1); loop ② re-reads it and maps
+//! every sparse feature through the vocabulary (Modulus → GenVocab-2 →
+//! ApplyVocab-2 → StoreData) while the dense chains apply
+//! Neg2Zero → Logarithm. All chains run concurrently and the loop's
+//! throughput is set by the slowest stage — in UTF-8 mode that is the
+//! decode PE ("the operator with the largest II determines the
+//! performance of the entire dataflow", §3.3).
+
+use std::time::Duration;
+
+use crate::data::row::ProcessedColumns;
+use crate::data::{binary, DecodedRow};
+use crate::decode::ParallelDecoder;
+use crate::ops::{log1p, DirectVocab, Vocab};
+use crate::Result;
+
+use super::memory::MemSystem;
+use super::pe::PeChain;
+use super::{InputFormat, Mode, PiperConfig};
+
+/// Modeled kernel timing of one PIPER run.
+#[derive(Debug, Clone)]
+pub struct KernelTiming {
+    pub clock_hz: f64,
+    pub loop1_cycles: f64,
+    pub loop2_cycles: f64,
+    /// cycles/row of the bottleneck stage, per loop.
+    pub loop1_cpr: f64,
+    pub loop2_cpr: f64,
+    /// Human-readable bottleneck of each loop.
+    pub loop1_bottleneck: &'static str,
+    pub loop2_bottleneck: &'static str,
+}
+
+impl KernelTiming {
+    pub fn total_cycles(&self) -> f64 {
+        self.loop1_cycles + self.loop2_cycles
+    }
+
+    /// Modeled kernel time (tagged `sim` in all reports).
+    pub fn seconds(&self) -> Duration {
+        Duration::from_secs_f64(self.total_cycles() / self.clock_hz)
+    }
+}
+
+/// Functional output + timing of the kernel.
+#[derive(Debug)]
+pub struct KernelRun {
+    pub processed: ProcessedColumns,
+    pub vocabs: Vec<DirectVocab>,
+    pub timing: KernelTiming,
+}
+
+/// Execute the kernel over a raw buffer.
+pub fn run_kernel(cfg: &PiperConfig, raw: &[u8]) -> Result<KernelRun> {
+    // ---- functional: obtain decoded rows -----------------------------
+    let rows: Vec<DecodedRow> = match cfg.input {
+        InputFormat::Utf8 => {
+            ParallelDecoder::with_width(cfg.schema, cfg.decode_width).decode(raw).rows
+        }
+        InputFormat::Binary => binary::decode_bytes(raw, cfg.schema)?,
+    };
+    let n_rows = rows.len();
+
+    // ---- loop 1: build vocabularies (column-wise) ---------------------
+    let mut vocabs: Vec<DirectVocab> =
+        (0..cfg.schema.num_sparse).map(|_| DirectVocab::new(cfg.modulus.range)).collect();
+    for row in &rows {
+        for (c, &s) in row.sparse.iter().enumerate() {
+            vocabs[c].observe(cfg.modulus.apply(s));
+        }
+    }
+    let unique_total: usize = vocabs.iter().map(|v| v.len()).sum();
+
+    // ---- loop 2: apply vocabularies + finish dense --------------------
+    let mut processed = ProcessedColumns::with_schema(cfg.schema);
+    processed.labels.reserve(n_rows);
+    for c in processed.dense.iter_mut() {
+        c.reserve(n_rows);
+    }
+    for c in processed.sparse.iter_mut() {
+        c.reserve(n_rows);
+    }
+    for row in &rows {
+        processed.labels.push(row.label);
+        for (c, &d) in row.dense.iter().enumerate() {
+            processed.dense[c].push(log1p(d));
+        }
+        for (c, &s) in row.sparse.iter().enumerate() {
+            let idx = vocabs[c]
+                .apply(cfg.modulus.apply(s))
+                .expect("loop 2 value must have been observed in loop 1");
+            processed.sparse[c].push(idx);
+        }
+    }
+
+    // ---- timing --------------------------------------------------------
+    let timing = model_timing(cfg, raw.len(), n_rows, unique_total);
+
+    Ok(KernelRun { processed, vocabs, timing })
+}
+
+/// Cycle model of the two loops (DESIGN.md §5).
+pub fn model_timing(
+    cfg: &PiperConfig,
+    raw_bytes: usize,
+    n_rows: usize,
+    unique_total: usize,
+) -> KernelTiming {
+    let schema = cfg.schema;
+    let placement = cfg.vocab_placement;
+    let rows = n_rows.max(1) as f64;
+
+    // Input-side cycles per row.
+    let decode_in_kernel =
+        cfg.input == InputFormat::Utf8 && cfg.mode != Mode::LocalDecodeInHost;
+    let input_cpr = if decode_in_kernel {
+        // Decode PE: `decode_width` bytes per cycle over the raw text.
+        (raw_bytes as f64 / rows) / cfg.decode_width as f64
+    } else {
+        // Binary words over the memory lanes; LoadData II = 1 floor.
+        let mem = MemSystem::with_lanes(cfg.load_lanes);
+        let bytes_per_cycle = mem.bytes_per_kernel_cycle(cfg.clock_hz);
+        (schema.binary_row_bytes() as f64 / bytes_per_cycle).max(1.0)
+    };
+
+    // Column-side cycles per row: each dataflow serves
+    // ceil(columns / dataflows) columns at the chain's bottleneck II.
+    let sparse_per_flow =
+        (schema.num_sparse as f64 / cfg.sparse_dataflows as f64).ceil();
+    let dense_per_flow = (schema.num_dense as f64 / cfg.dense_dataflows as f64).ceil();
+
+    // Loop 1: Modulus → GenVocab-1 → ApplyVocab-1. ApplyVocab-1 touches
+    // the vocabulary only for *unique* values (it writes the counter), so
+    // its effective II amortizes by the unique fraction.
+    let unique_frac = unique_total as f64 / (rows * schema.num_sparse.max(1) as f64);
+    let chain1 = PeChain::sparse(1);
+    let gen_ii = 2.0f64; // GenVocab-1 (paper §3.2)
+    let av1_eff = placement.vocab_ii() * unique_frac;
+    let chain1_ii = gen_ii.max(av1_eff).max(1.0);
+    let loop1_sparse_cpr = sparse_per_flow * chain1_ii;
+    let (loop1_cpr, loop1_bottleneck) = if input_cpr >= loop1_sparse_cpr {
+        (input_cpr, if decode_in_kernel { "Decode" } else { "LoadData" })
+    } else {
+        (loop1_sparse_cpr, "GenVocab/ApplyVocab-1")
+    };
+
+    // Loop 2: sparse chain reads the vocabulary for *every* value; dense
+    // chain is II=1.
+    let chain2 = PeChain::sparse(2);
+    let loop2_sparse_cpr = sparse_per_flow * chain2.bottleneck_ii(placement);
+    let loop2_dense_cpr = dense_per_flow * PeChain::dense().bottleneck_ii(placement);
+    let column_cpr = loop2_sparse_cpr.max(loop2_dense_cpr);
+    let (loop2_cpr, loop2_bottleneck) = if input_cpr >= column_cpr {
+        (input_cpr, if decode_in_kernel { "Decode" } else { "LoadData" })
+    } else if loop2_sparse_cpr >= loop2_dense_cpr {
+        (loop2_sparse_cpr, "ApplyVocab-2")
+    } else {
+        (loop2_dense_cpr, "Dense chain")
+    };
+
+    let fill = (chain1.fill_latency() + chain2.fill_latency()) as f64;
+    KernelTiming {
+        clock_hz: cfg.clock_hz,
+        loop1_cycles: rows * loop1_cpr + fill,
+        loop2_cycles: rows * loop2_cpr + fill,
+        loop1_cpr,
+        loop2_cpr,
+        loop1_bottleneck,
+        loop2_bottleneck,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth::SynthConfig, utf8, Schema, SynthDataset};
+    use crate::ops::Modulus;
+
+    fn cfg(mode: Mode, input: InputFormat, m: Modulus) -> PiperConfig {
+        PiperConfig::paper(mode, input, m)
+    }
+
+    #[test]
+    fn utf8_mode_is_decode_bound() {
+        let c = cfg(Mode::Network, InputFormat::Utf8, Modulus::VOCAB_5K);
+        let t = model_timing(&c, 240 * 1000, 1000, 26 * 100);
+        assert_eq!(t.loop1_bottleneck, "Decode");
+        assert_eq!(t.loop2_bottleneck, "Decode");
+        // 240 B/row at 4 B/cycle = 60 cycles/row per loop
+        assert!((t.loop1_cpr - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binary_mode_is_vocab_bound() {
+        let c = cfg(Mode::Network, InputFormat::Binary, Modulus::VOCAB_5K);
+        let t = model_timing(&c, 160 * 1000, 1000, 26 * 100);
+        assert_eq!(t.loop2_bottleneck, "ApplyVocab-2");
+        // ceil(26/13)=2 columns per flow × II 2 = 4 cycles/row
+        assert!((t.loop2_cpr - 4.0).abs() < 1e-9, "{}", t.loop2_cpr);
+    }
+
+    #[test]
+    fn hbm_vocab_raises_loop2_cost() {
+        let small = cfg(Mode::Network, InputFormat::Binary, Modulus::VOCAB_5K);
+        let large = cfg(Mode::Network, InputFormat::Binary, Modulus::VOCAB_1M);
+        let ts = model_timing(&small, 160_000, 1000, 26 * 100);
+        let tl = model_timing(&large, 160_000, 1000, 26 * 100);
+        assert!(tl.loop2_cpr > 4.0 * ts.loop2_cpr, "HBM sharing should dominate loop 2");
+    }
+
+    #[test]
+    fn decode_in_host_removes_decode_bottleneck() {
+        let mut c = cfg(Mode::LocalDecodeInHost, InputFormat::Utf8, Modulus::VOCAB_5K);
+        c.mode = Mode::LocalDecodeInHost;
+        let t = model_timing(&c, 240_000, 1000, 26 * 100);
+        assert_ne!(t.loop1_bottleneck, "Decode");
+        assert!(t.loop1_cpr < 60.0);
+    }
+
+    #[test]
+    fn functional_loop2_never_misses_vocab() {
+        // Every loop-2 lookup hits (observed in loop 1) — run end to end.
+        let mut c = cfg(Mode::Network, InputFormat::Utf8, Modulus::new(101));
+        c.schema = Schema::new(2, 3);
+        let mut scfg = SynthConfig::small(150);
+        scfg.schema = c.schema;
+        let ds = SynthDataset::generate(scfg);
+        let raw = utf8::encode_dataset(&ds);
+        let run = run_kernel(&c, &raw).unwrap();
+        assert_eq!(run.processed.num_rows(), 150);
+        // indices are dense in 0..vocab_len per column
+        for (c_idx, v) in run.vocabs.iter().enumerate() {
+            let max = run.processed.sparse[c_idx].iter().copied().max().unwrap();
+            assert!((max as usize) < v.len());
+        }
+    }
+
+    #[test]
+    fn wider_decode_scales_cpr() {
+        let mut c = cfg(Mode::Network, InputFormat::Utf8, Modulus::VOCAB_5K);
+        c.decode_width = 8;
+        let t8 = model_timing(&c, 240_000, 1000, 2600);
+        c.decode_width = 1;
+        let t1 = model_timing(&c, 240_000, 1000, 2600);
+        assert!((t1.loop1_cpr / t8.loop1_cpr - 8.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,121 @@
+//! Bounded FIFO channel model between PEs (paper §3.1: "different PEs are
+//! interconnected via FIFO channels").
+//!
+//! The functional pipeline doesn't need explicit FIFOs (rust vectors carry
+//! the data), but the *timing* question the ablation bench asks — how
+//! deep must inter-PE FIFOs be before producer/consumer rate mismatch
+//! stalls the chain — needs an occupancy model. This is a discrete
+//! simulation over per-cycle token flow between two stages with given
+//! IIs and burstiness.
+
+/// Result of simulating a producer→FIFO→consumer segment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FifoStats {
+    /// Cycles the producer stalled on a full FIFO.
+    pub producer_stalls: u64,
+    /// Cycles the consumer starved on an empty FIFO.
+    pub consumer_starves: u64,
+    /// Peak occupancy reached.
+    pub peak_occupancy: usize,
+    /// Total cycles to move all tokens.
+    pub total_cycles: u64,
+}
+
+/// Simulate `tokens` items flowing producer(II=`prod_ii`) → FIFO(depth) →
+/// consumer(II=`cons_ii`). `burst` models a producer that emits up to
+/// `burst` tokens in one launch (the parallel decoder emits 0–4 values
+/// per cycle — paper Script 1).
+pub fn simulate(tokens: u64, depth: usize, prod_ii: u64, cons_ii: u64, burst: u64) -> FifoStats {
+    assert!(depth >= 1 && prod_ii >= 1 && cons_ii >= 1 && burst >= 1);
+    let mut occupancy: usize = 0;
+    let mut produced: u64 = 0;
+    let mut consumed: u64 = 0;
+    let mut stats = FifoStats {
+        producer_stalls: 0,
+        consumer_starves: 0,
+        peak_occupancy: 0,
+        total_cycles: 0,
+    };
+    let mut cycle: u64 = 0;
+    let mut next_prod = 0u64;
+    let mut next_cons = 0u64;
+
+    while consumed < tokens {
+        // consumer first (frees space within the cycle, like ap_fifo).
+        if cycle >= next_cons && consumed < tokens {
+            if occupancy > 0 {
+                occupancy -= 1;
+                consumed += 1;
+                next_cons = cycle + cons_ii;
+            } else if produced < tokens {
+                stats.consumer_starves += 1;
+            }
+        }
+        if cycle >= next_prod && produced < tokens {
+            let want = burst.min(tokens - produced) as usize;
+            let space = depth - occupancy;
+            if space == 0 {
+                stats.producer_stalls += 1;
+            } else {
+                let emit = want.min(space);
+                occupancy += emit;
+                produced += emit as u64;
+                next_prod = cycle + prod_ii;
+            }
+        }
+        stats.peak_occupancy = stats.peak_occupancy.max(occupancy);
+        cycle += 1;
+        // Safety valve: no livelock possible, but cap anyway.
+        if cycle > tokens.saturating_mul(prod_ii.max(cons_ii) + 2) + 1000 {
+            break;
+        }
+    }
+    stats.total_cycles = cycle;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matched_rates_never_stall() {
+        let s = simulate(1000, 8, 1, 1, 1);
+        assert_eq!(s.producer_stalls, 0);
+        // consumer may starve a cycle at startup only
+        assert!(s.consumer_starves <= 2, "{s:?}");
+        assert!(s.total_cycles <= 1010);
+    }
+
+    #[test]
+    fn slow_consumer_backpressures_producer() {
+        // consumer II=2, producer II=1 → producer must stall ~half the time.
+        let s = simulate(1000, 4, 1, 2, 1);
+        assert!(s.producer_stalls > 400, "{s:?}");
+        assert!(s.total_cycles >= 2000);
+    }
+
+    #[test]
+    fn deeper_fifo_absorbs_bursts() {
+        // bursty producer (4 tokens per launch, like the width-4 decoder)
+        // into a consumer of II=1.
+        let shallow = simulate(4000, 2, 4, 1, 4);
+        let deep = simulate(4000, 16, 4, 1, 4);
+        assert!(deep.producer_stalls <= shallow.producer_stalls);
+        assert!(deep.total_cycles <= shallow.total_cycles);
+    }
+
+    #[test]
+    fn throughput_set_by_slowest_side() {
+        let s = simulate(10_000, 64, 3, 1, 1);
+        // producer II=3 ⇒ ~3 cycles/token
+        let cpt = s.total_cycles as f64 / 10_000.0;
+        assert!((cpt - 3.0).abs() < 0.2, "cycles/token {cpt}");
+    }
+
+    #[test]
+    fn peak_occupancy_bounded_by_depth() {
+        let s = simulate(5000, 8, 1, 5, 4);
+        assert!(s.peak_occupancy <= 8);
+    }
+}

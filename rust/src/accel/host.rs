@@ -1,0 +1,176 @@
+//! Host-side cost model for PIPER as a *local* (PCIe-attached)
+//! accelerator — the four stages the paper profiles in Fig. 10:
+//! Get Row Number, Initialize Buffer, Assign Values, Kernel Execution.
+//!
+//! These costs are exactly what the network-attached design deletes
+//! (§3.4.2: "avoids the host-side processing, which involves expensive
+//! operations including allocating a large buffer and data movements").
+//! All times here are modeled (tagged `sim`); bandwidth constants are
+//! calibrated in DESIGN.md §5.
+
+use std::time::Duration;
+
+use super::{InputFormat, Mode, PiperConfig};
+
+/// Host machine parameters (the paper's attached Xeon/EPYC hosts).
+#[derive(Debug, Clone, Copy)]
+pub struct HostModel {
+    /// Sequential scan bandwidth for counting rows (bytes/s).
+    pub scan_bps: f64,
+    /// First-touch buffer allocation bandwidth (bytes/s) — the dominant
+    /// Fig. 10 cost ("the initialization overhead of creating large
+    /// buffers dominates, and it can reach tens of seconds", §4.4.4).
+    pub buffer_init_bps: f64,
+    /// Plain memcpy into a pinned buffer (bytes/s).
+    pub memcpy_bps: f64,
+    /// Host-side UTF-8 decode throughput (bytes/s) — "the program can
+    /// only read the file per byte, and it is time-consuming" (§4.4.4).
+    pub host_decode_bps: f64,
+    /// Effective PCIe gen3 ×16 bandwidth (bytes/s).
+    pub pcie_bps: f64,
+}
+
+impl Default for HostModel {
+    fn default() -> Self {
+        HostModel {
+            scan_bps: 1.5e9,
+            buffer_init_bps: 1.2e9,
+            memcpy_bps: 5.0e9,
+            host_decode_bps: 0.33e9,
+            pcie_bps: 12.0e9,
+        }
+    }
+}
+
+/// Fig. 10's per-stage breakdown (all sim-tagged).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostBreakdown {
+    pub get_row_number: Duration,
+    pub initialize_buffer: Duration,
+    pub assign_values: Duration,
+    /// H2D transfer + kernel + D2H transfer.
+    pub kernel_execution: Duration,
+}
+
+impl HostBreakdown {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.get_row_number + self.initialize_buffer + self.assign_values
+            + self.kernel_execution
+    }
+
+    /// Stage shares of the total (for the Fig. 10 stacked bars).
+    pub fn shares(&self) -> [(&'static str, f64); 4] {
+        let t = self.total().as_secs_f64().max(1e-12);
+        [
+            ("Get Row Number", self.get_row_number.as_secs_f64() / t),
+            ("Initialize Buffer", self.initialize_buffer.as_secs_f64() / t),
+            ("Assign Values", self.assign_values.as_secs_f64() / t),
+            ("Kernel Execution", self.kernel_execution.as_secs_f64() / t),
+        ]
+    }
+}
+
+impl HostModel {
+    /// Build the Fig. 10 breakdown for a local-mode run.
+    ///
+    /// The stages run strictly in sequence (paper §3.4.1: "all these
+    /// stages must execute in sequence, and there is no overlap among
+    /// them").
+    pub fn local_breakdown(
+        &self,
+        cfg: &PiperConfig,
+        raw_bytes: usize,
+        rows: usize,
+        kernel: Duration,
+    ) -> HostBreakdown {
+        let out_bytes = rows * cfg.schema.binary_row_bytes();
+        let decoded_bytes = rows * cfg.schema.binary_row_bytes();
+
+        // 1. Get Row Number — UTF-8 scans the file; binary divides sizes.
+        let get_row_number = match cfg.input {
+            InputFormat::Utf8 => Duration::from_secs_f64(raw_bytes as f64 / self.scan_bps),
+            InputFormat::Binary => Duration::from_micros(5),
+        };
+
+        // 2. Initialize Buffer — first-touch of input + output buffers.
+        let init_bytes = raw_bytes + out_bytes;
+        let initialize_buffer =
+            Duration::from_secs_f64(init_bytes as f64 / self.buffer_init_bps);
+
+        // 3. Assign Values — fill the input buffer. If the host decodes
+        //    (Fig. 7c), this is where the per-byte decode cost lands.
+        let assign_values = match (cfg.mode, cfg.input) {
+            (Mode::LocalDecodeInHost, InputFormat::Utf8) => {
+                Duration::from_secs_f64(raw_bytes as f64 / self.host_decode_bps)
+            }
+            _ => Duration::from_secs_f64(raw_bytes as f64 / self.memcpy_bps),
+        };
+
+        // 4. Kernel Execution — H2D + kernel + D2H.
+        let h2d_bytes = match (cfg.mode, cfg.input) {
+            (Mode::LocalDecodeInHost, InputFormat::Utf8) => decoded_bytes,
+            _ => raw_bytes,
+        };
+        let transfer = Duration::from_secs_f64(
+            (h2d_bytes as f64 + out_bytes as f64) / self.pcie_bps,
+        );
+        let kernel_execution = transfer + kernel;
+
+        HostBreakdown { get_row_number, initialize_buffer, assign_values, kernel_execution }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::Modulus;
+
+    fn mk(mode: Mode, input: InputFormat) -> PiperConfig {
+        PiperConfig::paper(mode, input, Modulus::VOCAB_5K)
+    }
+
+    #[test]
+    fn buffer_init_dominates_for_large_inputs() {
+        // Paper Fig. 10: Initialize Buffer is a large share in both modes.
+        let hm = HostModel::default();
+        let cfg = mk(Mode::LocalDecodeInKernel, InputFormat::Binary);
+        let raw = 8_200_000_000usize; // 8.2 GB binary
+        let rows = 46_000_000;
+        let hb = hm.local_breakdown(&cfg, raw, rows, Duration::from_secs_f64(2.6));
+        let init_share = hb.initialize_buffer.as_secs_f64() / hb.total().as_secs_f64();
+        assert!(init_share > 0.4, "init share {init_share}");
+    }
+
+    #[test]
+    fn decode_in_host_assign_values_explodes() {
+        let hm = HostModel::default();
+        let k = mk(Mode::LocalDecodeInKernel, InputFormat::Utf8);
+        let h = mk(Mode::LocalDecodeInHost, InputFormat::Utf8);
+        let raw = 1_000_000_000usize;
+        let rows = 4_200_000;
+        let bk = hm.local_breakdown(&k, raw, rows, Duration::from_secs(2));
+        let bh = hm.local_breakdown(&h, raw, rows, Duration::from_secs(1));
+        assert!(bh.assign_values > 10 * bk.assign_values);
+    }
+
+    #[test]
+    fn binary_row_count_is_free() {
+        let hm = HostModel::default();
+        let cfg = mk(Mode::LocalDecodeInKernel, InputFormat::Binary);
+        let hb = hm.local_breakdown(&cfg, 1_000_000_000, 6_250_000, Duration::from_secs(1));
+        assert!(hb.get_row_number < Duration::from_millis(1));
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let hm = HostModel::default();
+        let cfg = mk(Mode::LocalDecodeInKernel, InputFormat::Utf8);
+        let hb = hm.local_breakdown(&cfg, 100_000_000, 420_000, Duration::from_secs(1));
+        let s: f64 = hb.shares().iter().map(|(_, v)| v).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

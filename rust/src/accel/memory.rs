@@ -1,0 +1,161 @@
+//! Memory models: DDR/HBM lanes feeding the dataflow, and on-chip SRAM
+//! vs off-chip HBM placement for the vocabulary tables.
+//!
+//! Calibration sources (all from the paper):
+//! * §3.3 — "The theoretical throughput of one DDR channel is 19 GB/s
+//!   (512-bit wide memory lane, 300 MHz)";
+//! * §4.1 — U250: 4 DDR channels / 77 GB/s, 54 MB SRAM;
+//!   U55c: 32 HBM channels / 460 GB/s, 43 MB SRAM;
+//! * §3.2 — ApplyVocab II ≈ 15 cycles for random HBM access;
+//! * §4.4.6 — round-robin across independent HBM channels brings the
+//!   effective II back to 1 when the revisit interval exceeds latency.
+
+use crate::Result;
+
+/// A 512-bit memory lane at 300 MHz (one DDR/HBM pseudo-channel group).
+#[derive(Debug, Clone, Copy)]
+pub struct MemLane {
+    pub bits: u32,
+    pub clock_hz: f64,
+}
+
+impl Default for MemLane {
+    fn default() -> Self {
+        MemLane { bits: 512, clock_hz: 300.0e6 }
+    }
+}
+
+impl MemLane {
+    /// Bytes delivered per *kernel* cycle at kernel clock `f` — the lane
+    /// runs at its own 300 MHz; a slower kernel sees proportionally more
+    /// bytes available per cycle (it is never lane-starved).
+    pub fn bytes_per_kernel_cycle(&self, kernel_hz: f64) -> f64 {
+        (self.bits as f64 / 8.0) * (self.clock_hz / kernel_hz)
+    }
+
+    /// Sequential bandwidth in bytes/second (≈19.2 GB/s for the default).
+    pub fn bandwidth_bps(&self) -> f64 {
+        self.bits as f64 / 8.0 * self.clock_hz
+    }
+}
+
+/// Where the vocabulary tables live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VocabPlacement {
+    /// On-chip BRAM/URAM — II = 2, capacity-limited.
+    Sram,
+    /// Off-chip HBM — random access `latency` cycles, hidden by
+    /// round-robin across `channels`; `sharers` feature columns share
+    /// the channel pool.
+    Hbm { latency: u32, channels: u32, sharers: u32 },
+}
+
+impl VocabPlacement {
+    /// U55c HBM with all 26 sparse columns sharing 32 channels.
+    pub fn hbm_u55c() -> Self {
+        VocabPlacement::Hbm { latency: 15, channels: 32, sharers: 26 }
+    }
+
+    /// Effective II of a vocabulary access PE (ApplyVocab-1/2).
+    ///
+    /// SRAM: II = 2 (paper §3.2). HBM: a single stream sees the full
+    /// random-access latency (~15), but interleaving accesses round-robin
+    /// over independent channels hides it — "the time span for accessing
+    /// the same HBM channel is longer than the allowed II" (§4.4.6). With
+    /// `sharers` columns sharing `channels` channels, each column
+    /// effectively owns `channels/sharers` channels, so
+    /// `II_eff = max(1, latency × sharers / channels)`.
+    pub fn vocab_ii(&self) -> f64 {
+        match *self {
+            VocabPlacement::Sram => 2.0,
+            VocabPlacement::Hbm { latency, channels, sharers } => {
+                (latency as f64 * sharers as f64 / channels as f64).max(1.0)
+            }
+        }
+    }
+
+    /// On-chip capacity check: the U55c/U250 SRAM budget is ~43–54 MB;
+    /// we enforce the smaller one.
+    pub fn validate(&self, needed_bits: u64) -> Result<()> {
+        const SRAM_BITS: u64 = 43 * 8 * 1024 * 1024 * 8 / 8; // 43 MB in bits
+        if matches!(self, VocabPlacement::Sram) && needed_bits > SRAM_BITS {
+            anyhow::bail!(
+                "vocabulary needs {needed_bits} bits but on-chip SRAM holds {SRAM_BITS}; \
+                 use HBM placement (the paper's 1M-vocab build)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The off-chip memory system feeding LoadData.
+#[derive(Debug, Clone)]
+pub struct MemSystem {
+    pub lanes: Vec<MemLane>,
+}
+
+impl MemSystem {
+    /// n identical default lanes.
+    pub fn with_lanes(n: usize) -> Self {
+        MemSystem { lanes: vec![MemLane::default(); n] }
+    }
+
+    pub fn total_bandwidth_bps(&self) -> f64 {
+        self.lanes.iter().map(|l| l.bandwidth_bps()).sum()
+    }
+
+    /// Bytes per kernel cycle across all lanes.
+    pub fn bytes_per_kernel_cycle(&self, kernel_hz: f64) -> f64 {
+        self.lanes.iter().map(|l| l.bytes_per_kernel_cycle(kernel_hz)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_bandwidth_matches_paper() {
+        let lane = MemLane::default();
+        let gbps = lane.bandwidth_bps() / 1e9;
+        assert!((gbps - 19.2).abs() < 0.1, "paper says 19 GB/s, got {gbps}");
+    }
+
+    #[test]
+    fn u250_aggregate_bandwidth() {
+        let mem = MemSystem::with_lanes(4);
+        let gbps = mem.total_bandwidth_bps() / 1e9;
+        assert!((gbps - 76.8).abs() < 1.0, "paper says 77 GB/s, got {gbps}");
+    }
+
+    #[test]
+    fn slower_kernel_sees_more_bytes_per_cycle() {
+        let lane = MemLane::default();
+        assert!(lane.bytes_per_kernel_cycle(135.0e6) > lane.bytes_per_kernel_cycle(250.0e6));
+        // at 300 MHz kernel == lane clock: exactly 64 B/cycle
+        assert!((lane.bytes_per_kernel_cycle(300.0e6) - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hbm_ii_regimes() {
+        // dedicated channel pool larger than latency → fully hidden
+        let fast = VocabPlacement::Hbm { latency: 15, channels: 32, sharers: 1 };
+        assert_eq!(fast.vocab_ii(), 1.0);
+        // 26 sharers on 32 channels → latency mostly exposed
+        let shared = VocabPlacement::hbm_u55c();
+        let ii = shared.vocab_ii();
+        assert!(ii > 10.0 && ii < 15.0, "expected ~12.2, got {ii}");
+        // single channel → full latency
+        let one = VocabPlacement::Hbm { latency: 15, channels: 1, sharers: 1 };
+        assert_eq!(one.vocab_ii(), 15.0);
+    }
+
+    #[test]
+    fn sram_capacity_check() {
+        let sram = VocabPlacement::Sram;
+        assert!(sram.validate(1_000_000).is_ok());
+        assert!(sram.validate(u64::MAX / 2).is_err());
+        // HBM never fails the check
+        assert!(VocabPlacement::hbm_u55c().validate(u64::MAX / 2).is_ok());
+    }
+}

@@ -1,0 +1,163 @@
+//! Processing-element catalogue with the paper's initiation intervals
+//! (§3.2). A PE's *initiation interval* (II) is the minimum number of
+//! clock cycles between successive input launches in the pipelined
+//! design; for a streaming PE processing `n` items, modeled cycles are
+//! `fill_latency + II × n`, and a chain of PEs overlaps so the chain's
+//! throughput is set by its slowest member.
+
+use super::memory::VocabPlacement;
+
+/// PE kinds of paper Fig. 5 / §3.2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeKind {
+    /// Load from DDR/HBM/network. II = 1.
+    LoadData,
+    /// UTF-8 decode; consumes `width` bytes per cycle (Script 1).
+    Decode,
+    /// Dense `x<0 ? 0 : x`. II = 1.
+    Neg2Zero,
+    /// Dense `log(x+1)`. II = 1.
+    Logarithm,
+    /// Sparse positive modulus. II = 1.
+    Modulus,
+    /// Loop-1 unique filter (bitmap). II = 2.
+    GenVocab1,
+    /// Loop-2 pass-through (rate-matched to GenVocab-1). II = 2.
+    GenVocab2,
+    /// Loop-1 vocabulary write (counter). II depends on placement.
+    ApplyVocab1,
+    /// Loop-2 vocabulary read. II depends on placement.
+    ApplyVocab2,
+    /// Combine dataflows and write out. II = 1.
+    StoreData,
+}
+
+impl PeKind {
+    /// The paper's II for this PE given the vocabulary placement
+    /// (§3.2: GenVocab II=2; ApplyVocab II=2 on-chip, ~15 off-chip
+    /// random, →1 with round-robin HBM channels, §4.4.6).
+    pub fn ii(&self, vocab: VocabPlacement) -> f64 {
+        match self {
+            PeKind::LoadData
+            | PeKind::Neg2Zero
+            | PeKind::Logarithm
+            | PeKind::Modulus
+            | PeKind::StoreData
+            | PeKind::Decode => 1.0,
+            PeKind::GenVocab1 | PeKind::GenVocab2 => 2.0,
+            PeKind::ApplyVocab1 | PeKind::ApplyVocab2 => vocab.vocab_ii(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PeKind::LoadData => "LoadData",
+            PeKind::Decode => "Decode",
+            PeKind::Neg2Zero => "Neg2Zero",
+            PeKind::Logarithm => "Logarithm",
+            PeKind::Modulus => "Modulus",
+            PeKind::GenVocab1 => "GenVocab-1",
+            PeKind::GenVocab2 => "GenVocab-2",
+            PeKind::ApplyVocab1 => "ApplyVocab-1",
+            PeKind::ApplyVocab2 => "ApplyVocab-2",
+            PeKind::StoreData => "StoreData",
+        }
+    }
+
+    /// Pipeline fill latency (cycles before the first output) — small
+    /// constants; they matter only for tiny inputs.
+    pub fn fill_latency(&self) -> u64 {
+        match self {
+            PeKind::Decode => 8,
+            PeKind::ApplyVocab1 | PeKind::ApplyVocab2 => 4,
+            _ => 2,
+        }
+    }
+
+    /// Cycles for this PE to stream `items` inputs.
+    pub fn stream_cycles(&self, items: u64, vocab: VocabPlacement) -> f64 {
+        self.fill_latency() as f64 + self.ii(vocab) * items as f64
+    }
+}
+
+/// A chain of PEs processing the same item stream (one feature column's
+/// dataflow). Pipelined: throughput = slowest II; latency adds fills.
+#[derive(Debug, Clone)]
+pub struct PeChain {
+    pub pes: Vec<PeKind>,
+}
+
+impl PeChain {
+    /// The sparse-column chain for loop `1` or `2` (paper Fig. 5).
+    pub fn sparse(loop_idx: u8) -> Self {
+        let pes = match loop_idx {
+            1 => vec![PeKind::Modulus, PeKind::GenVocab1, PeKind::ApplyVocab1],
+            2 => vec![PeKind::Modulus, PeKind::GenVocab2, PeKind::ApplyVocab2, PeKind::StoreData],
+            _ => panic!("loop index must be 1 or 2"),
+        };
+        PeChain { pes }
+    }
+
+    /// The dense-column chain (only active in loop 2 — loop 1 just
+    /// streams past dense features).
+    pub fn dense() -> Self {
+        PeChain { pes: vec![PeKind::Neg2Zero, PeKind::Logarithm, PeKind::StoreData] }
+    }
+
+    /// Slowest II in the chain — the chain's cycles-per-item.
+    pub fn bottleneck_ii(&self, vocab: VocabPlacement) -> f64 {
+        self.pes.iter().map(|p| p.ii(vocab)).fold(0.0, f64::max)
+    }
+
+    /// Total fill latency.
+    pub fn fill_latency(&self) -> u64 {
+        self.pes.iter().map(|p| p.fill_latency()).sum()
+    }
+
+    /// Cycles to stream `items` through the pipelined chain.
+    pub fn stream_cycles(&self, items: u64, vocab: VocabPlacement) -> f64 {
+        self.fill_latency() as f64 + self.bottleneck_ii(vocab) * items as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_iis() {
+        let sram = VocabPlacement::Sram;
+        assert_eq!(PeKind::LoadData.ii(sram), 1.0);
+        assert_eq!(PeKind::GenVocab1.ii(sram), 2.0);
+        assert_eq!(PeKind::ApplyVocab2.ii(sram), 2.0);
+        // HBM single-stream random access ≈ 15 cycles (paper §3.2)
+        let hbm1 = VocabPlacement::Hbm { latency: 15, channels: 1, sharers: 1 };
+        assert_eq!(PeKind::ApplyVocab2.ii(hbm1), 15.0);
+        // Round-robin over ≥latency channels hides it (paper §4.4.6)
+        let hbm32 = VocabPlacement::Hbm { latency: 15, channels: 32, sharers: 1 };
+        assert_eq!(PeKind::ApplyVocab2.ii(hbm32), 1.0);
+    }
+
+    #[test]
+    fn chain_bottleneck() {
+        let c = PeChain::sparse(1);
+        assert_eq!(c.bottleneck_ii(VocabPlacement::Sram), 2.0);
+        let d = PeChain::dense();
+        assert_eq!(d.bottleneck_ii(VocabPlacement::Sram), 1.0);
+    }
+
+    #[test]
+    fn stream_cycles_scale_linearly() {
+        let c = PeChain::sparse(2);
+        let v = VocabPlacement::Sram;
+        let a = c.stream_cycles(1000, v);
+        let b = c.stream_cycles(2000, v);
+        assert!((b - a - 2.0 * 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_loop_index_panics() {
+        PeChain::sparse(3);
+    }
+}

@@ -1,0 +1,78 @@
+//! Support for the bench harness (`rust/benches/*`): workload sizing,
+//! paper reference values, and scaling helpers shared by the
+//! table/figure regenerators.
+
+use crate::data::{synth::SynthConfig, SynthDataset};
+
+/// Paper-scale constants (Criteo Kaggle, §4.1).
+pub mod paper {
+    /// Rows in the Criteo Kaggle dataset (≈46M; 11 GB / ~240 B per row).
+    pub const ROWS: usize = 46_000_000;
+    /// Raw UTF-8 size in bytes.
+    pub const UTF8_BYTES: usize = 11_000_000_000;
+    /// Decoded binary size in bytes.
+    pub const BINARY_BYTES: usize = 8_200_000_000;
+}
+
+/// Bench workload row count: `PIPER_BENCH_ROWS` env var, else `default`.
+pub fn bench_rows(default: usize) -> usize {
+    std::env::var("PIPER_BENCH_ROWS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Repetitions for measured numbers: `PIPER_BENCH_REPS`, else `default`.
+pub fn bench_reps(default: usize) -> usize {
+    std::env::var("PIPER_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The standard bench dataset.
+pub fn dataset(rows: usize) -> SynthDataset {
+    SynthDataset::generate(SynthConfig::small(rows))
+}
+
+/// Scale a measured per-`n`-rows duration to the paper's 46M rows —
+/// legitimate because every pipeline stage is streaming (DESIGN.md §4
+/// scale note). Clearly a projection; callers label it.
+pub fn scale_to_paper_rows(measured: std::time::Duration, rows: usize) -> std::time::Duration {
+    measured.mul_f64(paper::ROWS as f64 / rows.max(1) as f64)
+}
+
+/// Median of a set of measured durations.
+pub fn median(mut xs: Vec<std::time::Duration>) -> std::time::Duration {
+    xs.sort();
+    xs[xs.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn scaling_is_linear() {
+        let d = scale_to_paper_rows(Duration::from_secs(1), paper::ROWS / 2);
+        assert_eq!(d, Duration::from_secs(2));
+    }
+
+    #[test]
+    fn median_is_middle() {
+        let m = median(vec![
+            Duration::from_secs(9),
+            Duration::from_secs(1),
+            Duration::from_secs(5),
+        ]);
+        assert_eq!(m, Duration::from_secs(5));
+    }
+
+    #[test]
+    fn env_overrides_parse() {
+        // no env set in tests → defaults
+        assert_eq!(bench_rows(123), 123);
+        assert_eq!(bench_reps(3), 3);
+    }
+}

@@ -1,0 +1,154 @@
+//! Config system: `key = value` files + CLI-style `key=value` overrides.
+//!
+//! No serde dependency is available offline, so this is a small,
+//! well-tested hand parser. Every experiment knob (rows, vocab size,
+//! backend, threads, mode, decode width, seed, ...) is settable from a
+//! file (`--config path`) and overridable on the command line, which is
+//! what the launcher (`piper` binary) and the bench harness build on.
+
+use crate::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// An ordered key→value map with typed accessors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a config file: `key = value` lines, `#` comments, blank
+    /// lines ignored. Later keys override earlier ones.
+    pub fn from_str_content(content: &str) -> Result<Self> {
+        let mut cfg = Config::new();
+        for (lineno, raw_line) in content.lines().enumerate() {
+            let line = raw_line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("config line {}: expected `key = value`, got `{raw_line}`",
+                    lineno + 1)
+            })?;
+            cfg.set(k.trim(), v.trim());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let content = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {}: {e}", path.display()))?;
+        Self::from_str_content(&content)
+    }
+
+    /// Apply `key=value` CLI overrides on top.
+    pub fn apply_overrides<'a>(&mut self, args: impl IntoIterator<Item = &'a str>) -> Result<()> {
+        for a in args {
+            let (k, v) = a
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override `{a}` is not key=value"))?;
+            self.set(k.trim(), v.trim());
+        }
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow::anyhow!("config `{key}`={v}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow::anyhow!("config `{key}`={v}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("config `{key}`={v}: {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => anyhow::bail!("config `{key}`={v}: expected bool"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_file_content() {
+        let c = Config::from_str_content(
+            "# comment\nrows = 1000\nbackend = piper-net  # trailing\n\nvocab=5000\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("rows"), Some("1000"));
+        assert_eq!(c.get("backend"), Some("piper-net"));
+        assert_eq!(c.get_usize("vocab", 0).unwrap(), 5000);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::from_str_content("this is not kv\n").is_err());
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::from_str_content("rows = 10\n").unwrap();
+        c.apply_overrides(["rows=99", "extra=1"]).unwrap();
+        assert_eq!(c.get_usize("rows", 0).unwrap(), 99);
+        assert_eq!(c.get("extra"), Some("1"));
+        assert!(c.apply_overrides(["bad-override"]).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let c = Config::from_str_content(
+            "n = 1_000_000\nf = 2.5\nt = true\nf2 = no\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_usize("n", 0).unwrap(), 1_000_000);
+        assert_eq!(c.get_f64("f", 0.0).unwrap(), 2.5);
+        assert!(c.get_bool("t", false).unwrap());
+        assert!(!c.get_bool("f2", true).unwrap());
+        assert_eq!(c.get_usize("missing", 7).unwrap(), 7);
+        assert!(c.get_usize("f", 0).is_err());
+    }
+}

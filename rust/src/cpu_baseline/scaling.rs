@@ -1,0 +1,336 @@
+//! Thread-scaling projection for the CPU baseline.
+//!
+//! The paper's Fig. 8 / Table 3 curves come from a 128-core EPYC server.
+//! This repo may run on far fewer cores (the CI box has one), so the
+//! multi-thread points cannot always be *measured*. Instead we measure
+//! the single-thread **work components** (parse, vocabulary observe,
+//! sub-dictionary merge, apply, concat) on this machine and project them
+//! onto a modeled server with the paper's core count — Amdahl plus the
+//! three serialization effects the paper identifies:
+//!
+//! * the **sub-dictionary merge** after GV is serial and its cost grows
+//!   with the number of threads (every thread contributes a sub-dict);
+//! * Config II's **shared locked dictionary** serializes observe traffic
+//!   and degrades beyond ~32 threads;
+//! * **Concatenate** is a serial pass whose per-sub-file call cost grows
+//!   linearly with thread count.
+//!
+//! All projected numbers are tagged `sim` by the benches; the T=1 column
+//! stays fully measured.
+
+use std::time::{Duration, Instant};
+
+use crate::ops::{HashVocab, VocabSet};
+
+use super::disk::SimDisk;
+use super::pipeline::StageTimes;
+use super::{BaselineConfig, ConfigKind};
+
+/// Single-thread work components, measured on this machine.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkProfile {
+    /// Rows in the profiled run.
+    pub rows: usize,
+    /// Raw input bytes.
+    pub raw_bytes: usize,
+    /// SIF: line scan (UTF-8) or size division (binary).
+    pub sif_scan: Duration,
+    /// GV: decode/unpack + modulus (embarrassingly parallel).
+    pub gv_parse: Duration,
+    /// GV: sub-dictionary observe (parallel for I/III, locked for II).
+    pub gv_observe: Duration,
+    /// GV: merging ONE sub-dictionary into the global one (serial; the
+    /// total merge cost is ≈ this × threads).
+    pub gv_merge_one: Duration,
+    /// AV: vocabulary apply + dense finish (parallel).
+    pub av: Duration,
+    /// CFR: the in-memory concatenation pass (serial).
+    pub cfr_memcpy: Duration,
+}
+
+impl WorkProfile {
+    /// Scale the row-proportional components to a different row count
+    /// (streaming stages scale linearly; `gv_merge_one` is bounded by
+    /// the vocabulary size, not the row count, so it stays put).
+    pub fn scaled_to(&self, rows: usize) -> WorkProfile {
+        let f = rows as f64 / self.rows.max(1) as f64;
+        WorkProfile {
+            rows,
+            raw_bytes: (self.raw_bytes as f64 * f) as usize,
+            sif_scan: self.sif_scan.mul_f64(f),
+            gv_parse: self.gv_parse.mul_f64(f),
+            gv_observe: self.gv_observe.mul_f64(f),
+            gv_merge_one: self.gv_merge_one,
+            av: self.av.mul_f64(f),
+            cfr_memcpy: self.cfr_memcpy.mul_f64(f),
+        }
+    }
+}
+
+/// Measure the work profile with a dedicated single-thread run.
+pub fn profile_single_thread(cfg: &BaselineConfig, raw: &[u8]) -> WorkProfile {
+    let schema = cfg.schema;
+
+    // SIF
+    let t0 = Instant::now();
+    let rows = if cfg.kind.binary_input() {
+        crate::data::binary::count_rows(raw, schema)
+    } else {
+        raw.iter().filter(|&&b| b == b'\n').count()
+    };
+    let sif_scan = t0.elapsed();
+
+    // GV parse (decode + modulus), through the pipeline's own hot loop so
+    // the profile measures exactly what the stage costs.
+    let t0 = Instant::now();
+    let mut block = super::pipeline::DecodedBlock::default();
+    block.dense = vec![Vec::with_capacity(rows); schema.num_dense];
+    block.sparse = vec![Vec::with_capacity(rows); schema.num_sparse];
+    if cfg.kind.binary_input() {
+        for row in raw.chunks_exact(schema.binary_row_bytes()) {
+            let word = |i: usize| {
+                u32::from_le_bytes([row[4 * i], row[4 * i + 1], row[4 * i + 2], row[4 * i + 3]])
+            };
+            block.labels.push(word(0) as i32);
+            for c in 0..schema.num_dense {
+                block.dense[c].push(word(1 + c) as i32);
+            }
+            for c in 0..schema.num_sparse {
+                block.sparse[c].push(cfg.modulus.apply(word(1 + schema.num_dense + c)));
+            }
+        }
+    } else {
+        super::pipeline::parse_utf8(raw, schema, cfg, &mut block);
+    }
+    let gv_parse = t0.elapsed();
+    let (sparse, dense) = (block.sparse, block.dense);
+
+    // GV observe
+    let t0 = Instant::now();
+    let mut vocab = VocabSet::new(schema.num_sparse);
+    vocab.observe_columns(&sparse);
+    let gv_observe = t0.elapsed();
+
+    // GV merge of one sub-dictionary of that size
+    let t0 = Instant::now();
+    let mut merged: Vec<HashVocab> = (0..schema.num_sparse).map(|_| HashVocab::new()).collect();
+    for (dst, src) in merged.iter_mut().zip(&vocab.vocabs) {
+        dst.merge_from(src);
+    }
+    let gv_merge_one = t0.elapsed();
+
+    // AV
+    let t0 = Instant::now();
+    let applied = vocab.apply_columns(&sparse);
+    let mut logs: Vec<Vec<f32>> = Vec::with_capacity(schema.num_dense);
+    for col in &dense {
+        let mut out = Vec::new();
+        crate::ops::dense_finish_slice(col, &mut out);
+        logs.push(out);
+    }
+    let av = t0.elapsed();
+
+    // CFR: one serial concatenation of the column blocks.
+    let t0 = Instant::now();
+    let mut cat: Vec<u32> = Vec::with_capacity(rows * schema.num_sparse);
+    for col in &applied {
+        cat.extend_from_slice(col);
+    }
+    std::hint::black_box(&cat);
+    let cfr_memcpy = t0.elapsed();
+    std::hint::black_box((&logs, &applied));
+
+    WorkProfile {
+        rows,
+        raw_bytes: raw.len(),
+        sif_scan,
+        gv_parse,
+        gv_observe,
+        gv_merge_one,
+        av,
+        cfr_memcpy,
+    }
+}
+
+/// The modeled server (defaults = the paper's two-socket EPYC 7V13).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerModel {
+    /// Physical cores.
+    pub cores: usize,
+    /// Effective maximum parallel speedup (memory-bandwidth ceiling —
+    /// the paper's curves saturate near 48–64×).
+    pub max_speedup: f64,
+    /// Per-thread spawn/teardown overhead.
+    pub spawn: Duration,
+    /// Config II lock serialization: fraction of observe work that
+    /// serializes per thread (drives the ≥64-thread degradation).
+    pub lock_serial_base: f64,
+    pub lock_serial_per_thread: f64,
+}
+
+impl ServerModel {
+    /// The paper's 128-core baseline server.
+    pub fn paper_epyc() -> Self {
+        ServerModel {
+            cores: 128,
+            max_speedup: 52.0,
+            spawn: Duration::from_micros(80),
+            lock_serial_base: 0.25,
+            lock_serial_per_thread: 0.012,
+        }
+    }
+
+    /// Parallel time of `work` over `t` threads on this server.
+    fn par(&self, work: Duration, t: usize) -> Duration {
+        let speedup = (t.min(self.cores) as f64).min(self.max_speedup).max(1.0);
+        work.div_f64(speedup)
+    }
+}
+
+/// Project the measured profile to `threads` on the modeled server.
+pub fn project(
+    profile: &WorkProfile,
+    kind: ConfigKind,
+    threads: usize,
+    disk: &SimDisk,
+    server: &ServerModel,
+    pure_compute: bool,
+) -> StageTimes {
+    let t = threads.max(1);
+    let spawn = server.spawn * t as u32;
+    let mut times = StageTimes::default();
+
+    // --- SIF: serial scan; Config I also writes sub-files (one
+    //     sequential streaming pass — bandwidth, not calls).
+    if !pure_compute {
+        times.sif.measured = Duration::ZERO;
+        times.sif.sim = profile.sif_scan
+            + if kind == ConfigKind::I {
+                disk.write_cost(profile.raw_bytes, 1)
+            } else {
+                Duration::ZERO
+            };
+    }
+
+    // --- GV
+    let parse = server.par(profile.gv_parse, t) + spawn;
+    let observe = match kind {
+        ConfigKind::II => {
+            // shared locked dictionary: parallel floor vs serialized
+            // lock traffic that grows with contention
+            let serial_frac =
+                server.lock_serial_base + server.lock_serial_per_thread * t as f64;
+            let locked = profile.gv_observe.mul_f64(serial_frac.max(1.0 / t as f64));
+            server.par(profile.gv_observe, t).max(locked)
+        }
+        _ => server.par(profile.gv_observe, t),
+    };
+    // serial merge of t sub-dictionaries (Configs I/III only)
+    let merge = match kind {
+        ConfigKind::II => Duration::ZERO,
+        _ => profile.gv_merge_one * t as u32,
+    };
+    times.gen_vocab.sim = parse + observe + merge;
+    if kind == ConfigKind::I && !pure_compute {
+        // read sub-files + write partial data: parallel streams — charge
+        // bandwidth once plus one call (they overlap across threads).
+        let part_bytes = profile.rows * 40 * 4;
+        times.gen_vocab.sim += disk.read_cost(profile.raw_bytes, 1).div_f64(
+            (t.min(server.cores) as f64).min(4.0), // few parallel disk streams
+        ) + disk.write_cost(part_bytes, 1);
+    }
+
+    // --- AV: fully parallel
+    times.apply_vocab.sim = server.par(profile.av, t) + spawn;
+    if kind == ConfigKind::I && !pure_compute {
+        let part_bytes = profile.rows * 40 * 4;
+        times.apply_vocab.sim +=
+            disk.read_cost(part_bytes, 1) + disk.write_cost(part_bytes, 1);
+    }
+
+    // --- CFR: serial concat; per-sub-file call cost × t (the paper's
+    //     doubling-with-threads effect).
+    if !pure_compute {
+        times.concat.sim = profile.cfr_memcpy
+            + match kind {
+                ConfigKind::I => disk.per_call * t as u32,
+                _ => disk.per_call / 4 * t as u32,
+            };
+    }
+
+    times
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth::SynthConfig, utf8, SynthDataset};
+    use crate::ops::Modulus;
+
+    fn profile() -> WorkProfile {
+        let ds = SynthDataset::generate(SynthConfig::small(5_000));
+        let raw = utf8::encode_dataset(&ds);
+        let cfg = BaselineConfig::new(ConfigKind::I, 1, Modulus::VOCAB_5K);
+        profile_single_thread(&cfg, &raw)
+    }
+
+    #[test]
+    fn profile_measures_everything() {
+        let p = profile();
+        assert_eq!(p.rows, 5_000);
+        assert!(p.gv_parse > Duration::ZERO);
+        assert!(p.gv_observe > Duration::ZERO);
+        assert!(p.av > Duration::ZERO);
+    }
+
+    #[test]
+    fn compute_scales_then_saturates() {
+        // project at paper scale: merge cost is vocab-bound, so it only
+        // shows up as saturation once the parallel work has shrunk.
+        let p = profile().scaled_to(46_000_000);
+        let s = ServerModel::paper_epyc();
+        let d = SimDisk::default();
+        let t1 = project(&p, ConfigKind::I, 1, &d, &s, true).compute();
+        let t32 = project(&p, ConfigKind::I, 32, &d, &s, true).compute();
+        let t64 = project(&p, ConfigKind::I, 64, &d, &s, true).compute();
+        let t128 = project(&p, ConfigKind::I, 128, &d, &s, true).compute();
+        assert!(t32 < t1.div_f64(8.0), "should scale well to 32t");
+        // saturation: 64→128 gains little or degrades (merge grows)
+        let gain = t64.as_secs_f64() / t128.as_secs_f64();
+        assert!(gain < 1.5, "64→128 must saturate, gain {gain}");
+    }
+
+    #[test]
+    fn config_ii_degrades_at_high_threads() {
+        let p = profile();
+        let s = ServerModel::paper_epyc();
+        let d = SimDisk::default();
+        let t16 = project(&p, ConfigKind::II, 16, &d, &s, true).compute();
+        let t128 = project(&p, ConfigKind::II, 128, &d, &s, true).compute();
+        assert!(
+            t128 > t16,
+            "shared-dict contention must degrade beyond saturation: 16t {t16:?} vs 128t {t128:?}"
+        );
+    }
+
+    #[test]
+    fn concat_grows_with_threads() {
+        let p = profile();
+        let s = ServerModel::paper_epyc();
+        let d = SimDisk::default();
+        let c8 = project(&p, ConfigKind::I, 8, &d, &s, false).concat.total();
+        let c64 = project(&p, ConfigKind::I, 64, &d, &s, false).concat.total();
+        assert!(c64 > c8 * 4, "CFR should grow ~linearly with sub-file count");
+    }
+
+    #[test]
+    fn sif_stays_roughly_constant() {
+        let p = profile();
+        let s = ServerModel::paper_epyc();
+        let d = SimDisk::default();
+        let s1 = project(&p, ConfigKind::I, 1, &d, &s, false).sif.total();
+        let s128 = project(&p, ConfigKind::I, 128, &d, &s, false).sif.total();
+        let ratio = s128.as_secs_f64() / s1.as_secs_f64();
+        assert!((0.8..1.3).contains(&ratio), "SIF must not grow with threads ({ratio})");
+    }
+}

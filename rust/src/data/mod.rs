@@ -1,0 +1,19 @@
+//! Dataset substrate: Criteo-format schema, synthetic generator, and the
+//! two on-disk encodings the paper evaluates (raw UTF-8 and decoded
+//! binary).
+//!
+//! The paper's dataset (Criteo Kaggle, 11 GB raw / 8.2 GB binary) is
+//! license- and size-gated, so [`synth`] generates byte-compatible rows:
+//! one label, `num_dense` signed decimal integers, `num_sparse` 8-hex-digit
+//! hashes, tab-separated, `\n`-terminated, empty string for missing values
+//! (paper Fig. 4).
+
+pub mod binary;
+pub mod row;
+pub mod schema;
+pub mod synth;
+pub mod utf8;
+
+pub use row::{DecodedRow, ProcessedRow};
+pub use schema::Schema;
+pub use synth::{SynthConfig, SynthDataset};

@@ -1,0 +1,137 @@
+//! Row representations at the two pipeline boundaries.
+
+use super::schema::Schema;
+
+/// A row after `Decode` + `FillMissing` (paper Table 1): every field is a
+/// 32-bit word. Dense features are signed (minus sign in the raw text),
+/// sparse features are the 32-bit values of the 8-hex-digit hashes.
+/// Missing fields have already been filled with 0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodedRow {
+    pub label: i32,
+    pub dense: Vec<i32>,
+    pub sparse: Vec<u32>,
+}
+
+impl DecodedRow {
+    pub fn zeroed(schema: Schema) -> Self {
+        DecodedRow {
+            label: 0,
+            dense: vec![0; schema.num_dense],
+            sparse: vec![0; schema.num_sparse],
+        }
+    }
+
+    /// Flatten to the 32-bit word order of the binary format:
+    /// `label, dense..., sparse...`.
+    pub fn to_words(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(1 + self.dense.len() + self.sparse.len());
+        out.push(self.label as u32);
+        out.extend(self.dense.iter().map(|&d| d as u32));
+        out.extend(self.sparse.iter().copied());
+        out
+    }
+}
+
+/// A fully preprocessed row, ready for training: dense features are
+/// `log(1+max(x,0))` floats, sparse features are vocabulary indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcessedRow {
+    pub label: i32,
+    pub dense: Vec<f32>,
+    pub sparse: Vec<u32>,
+}
+
+/// Column-major storage for a fully preprocessed dataset — what the
+/// training consumer ([`crate::train`]) slices minibatches from, and what
+/// `Concatenate` (paper Table 1) assembles back into rows.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProcessedColumns {
+    pub labels: Vec<i32>,
+    /// `dense[c][r]` — one Vec per dense column.
+    pub dense: Vec<Vec<f32>>,
+    /// `sparse[c][r]` — one Vec per sparse column (vocabulary indices).
+    pub sparse: Vec<Vec<u32>>,
+}
+
+impl ProcessedColumns {
+    pub fn with_schema(schema: Schema) -> Self {
+        ProcessedColumns {
+            labels: Vec::new(),
+            dense: vec![Vec::new(); schema.num_dense],
+            sparse: vec![Vec::new(); schema.num_sparse],
+        }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Assemble row `r` (the row-wise output ML training needs — paper
+    /// §2.4 "most ML models require row-wise input").
+    pub fn row(&self, r: usize) -> ProcessedRow {
+        ProcessedRow {
+            label: self.labels[r],
+            dense: self.dense.iter().map(|c| c[r]).collect(),
+            sparse: self.sparse.iter().map(|c| c[r]).collect(),
+        }
+    }
+
+    /// Append a row (used by row-wise producers like the CPU baseline).
+    pub fn push_row(&mut self, row: &ProcessedRow) {
+        self.labels.push(row.label);
+        for (c, v) in self.dense.iter_mut().zip(&row.dense) {
+            c.push(*v);
+        }
+        for (c, v) in self.sparse.iter_mut().zip(&row.sparse) {
+            c.push(*v);
+        }
+    }
+
+    /// Concatenate another column block after this one (the CFR stage).
+    pub fn extend_from(&mut self, other: &ProcessedColumns) {
+        self.labels.extend_from_slice(&other.labels);
+        for (c, o) in self.dense.iter_mut().zip(&other.dense) {
+            c.extend_from_slice(o);
+        }
+        for (c, o) in self.sparse.iter_mut().zip(&other.sparse) {
+            c.extend_from_slice(o);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_roundtrip_order() {
+        let r = DecodedRow { label: 1, dense: vec![-3, 4], sparse: vec![0xdead, 7] };
+        assert_eq!(r.to_words(), vec![1, (-3i32) as u32, 4, 0xdead, 7]);
+    }
+
+    #[test]
+    fn columns_row_roundtrip() {
+        let schema = Schema::new(2, 1);
+        let mut cols = ProcessedColumns::with_schema(schema);
+        let r0 = ProcessedRow { label: 1, dense: vec![0.5, 1.5], sparse: vec![3] };
+        let r1 = ProcessedRow { label: 0, dense: vec![2.5, 3.5], sparse: vec![9] };
+        cols.push_row(&r0);
+        cols.push_row(&r1);
+        assert_eq!(cols.num_rows(), 2);
+        assert_eq!(cols.row(0), r0);
+        assert_eq!(cols.row(1), r1);
+    }
+
+    #[test]
+    fn extend_concatenates_in_order() {
+        let schema = Schema::new(1, 1);
+        let mut a = ProcessedColumns::with_schema(schema);
+        let mut b = ProcessedColumns::with_schema(schema);
+        a.push_row(&ProcessedRow { label: 1, dense: vec![1.0], sparse: vec![1] });
+        b.push_row(&ProcessedRow { label: 0, dense: vec![2.0], sparse: vec![2] });
+        a.extend_from(&b);
+        assert_eq!(a.num_rows(), 2);
+        assert_eq!(a.row(1).sparse, vec![2]);
+    }
+}

@@ -1,0 +1,67 @@
+//! Tabular schema: label + dense + sparse columns.
+
+/// Column counts for a Criteo-style tabular dataset.
+///
+/// The paper's dataset has 1 label, 13 dense (signed decimal integers,
+/// e.g. click counts) and 26 sparse (8-hex-digit hashed categoricals)
+/// columns. Other tabular datasets (MovieLens, Yelp, ... — paper §5) map
+/// onto the same shape with different counts, so both are parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schema {
+    /// Number of dense (numerical) feature columns.
+    pub num_dense: usize,
+    /// Number of sparse (categorical, hex-hashed) feature columns.
+    pub num_sparse: usize,
+}
+
+impl Schema {
+    /// The Criteo Kaggle shape used throughout the paper: 13 dense + 26
+    /// sparse.
+    pub const CRITEO: Schema = Schema { num_dense: 13, num_sparse: 26 };
+
+    pub fn new(num_dense: usize, num_sparse: usize) -> Self {
+        Schema { num_dense, num_sparse }
+    }
+
+    /// Total feature columns excluding the label.
+    pub fn num_features(&self) -> usize {
+        self.num_dense + self.num_sparse
+    }
+
+    /// Total columns including the label.
+    pub fn num_columns(&self) -> usize {
+        1 + self.num_features()
+    }
+
+    /// Bytes per row in the decoded binary format: every value is a
+    /// 32-bit little-endian word (label, dense..., sparse...).
+    pub fn binary_row_bytes(&self) -> usize {
+        4 * self.num_columns()
+    }
+}
+
+impl Default for Schema {
+    fn default() -> Self {
+        Schema::CRITEO
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn criteo_shape() {
+        let s = Schema::CRITEO;
+        assert_eq!(s.num_features(), 39);
+        assert_eq!(s.num_columns(), 40);
+        assert_eq!(s.binary_row_bytes(), 160);
+    }
+
+    #[test]
+    fn custom_shape() {
+        let s = Schema::new(2, 3);
+        assert_eq!(s.num_columns(), 6);
+        assert_eq!(s.binary_row_bytes(), 24);
+    }
+}

@@ -1,0 +1,286 @@
+//! Deterministic synthetic Criteo-format dataset generator.
+//!
+//! Substitution for the gated Criteo Kaggle dataset (DESIGN.md §6). The
+//! generator reproduces the statistical properties that matter to the
+//! pipeline under study:
+//!
+//! * **sparse columns** are Zipf-skewed hashes with per-column cardinality
+//!   (Criteo columns range from tens to millions of distinct values), so
+//!   `GenVocab`'s unique-filtering and the 5K-vs-1M vocabulary regimes
+//!   behave like the real data;
+//! * **dense columns** are integer counts with negative values and a
+//!   realistic missing-rate, so `Neg2Zero`/`Logarithm`/`FillMissing` all
+//!   exercise their interesting branches;
+//! * the raw encoding is byte-compatible with the paper's Fig. 4 (UTF-8,
+//!   tab-separated, 8-hex-digit sparse values, empty string = missing).
+
+use crate::util::{XorShift64, Zipf};
+
+use super::row::DecodedRow;
+use super::schema::Schema;
+
+/// Knobs for the synthetic dataset.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub schema: Schema,
+    pub rows: usize,
+    pub seed: u64,
+    /// Zipf exponent for sparse columns (1.05–1.3 matches web-scale logs).
+    pub zipf_exponent: f64,
+    /// Distinct raw hash values per sparse column before Modulus.
+    /// Per-column cardinality cycles through `base`, `base*4`, `base*16`…
+    /// capped at `max_cardinality`, mimicking Criteo's wide spread.
+    pub base_cardinality: u64,
+    pub max_cardinality: u64,
+    /// Probability a feature (dense or sparse) is missing (empty field).
+    pub missing_rate: f64,
+    /// Probability a dense value is negative.
+    pub negative_rate: f64,
+    /// Scale of dense count values.
+    pub dense_scale: f64,
+}
+
+impl SynthConfig {
+    /// Named presets for the other tabular datasets the paper's §5 says
+    /// PIPER's modular dataflows adapt to — differing column counts and
+    /// cardinality spreads, same row grammar.
+    pub fn preset(name: &str, rows: usize) -> crate::Result<Self> {
+        let mut cfg = Self::small(rows);
+        match name {
+            // Criteo Kaggle: the paper's default (13 dense / 26 sparse).
+            "criteo" => {}
+            // MovieLens-style: few columns, small vocabularies
+            // (user, movie, tags...), dense = ratings/timestamps.
+            "movielens" => {
+                cfg.schema = Schema::new(3, 4);
+                cfg.base_cardinality = 1_000;
+                cfg.max_cardinality = 200_000;
+                cfg.zipf_exponent = 1.05;
+                cfg.missing_rate = 0.01;
+            }
+            // Yelp-style reviews: moderate sparse set, skewed businesses.
+            "yelp" => {
+                cfg.schema = Schema::new(6, 12);
+                cfg.base_cardinality = 500;
+                cfg.max_cardinality = 2_000_000;
+                cfg.zipf_exponent = 1.25;
+                cfg.missing_rate = 0.08;
+            }
+            // Amazon-reviews-style: wide sparse set, huge product space.
+            "amazon" => {
+                cfg.schema = Schema::new(4, 20);
+                cfg.base_cardinality = 4_096;
+                cfg.max_cardinality = 10_000_000;
+                cfg.zipf_exponent = 1.3;
+                cfg.missing_rate = 0.15;
+            }
+            other => anyhow::bail!(
+                "unknown dataset preset `{other}` (criteo|movielens|yelp|amazon)"
+            ),
+        }
+        Ok(cfg)
+    }
+
+    pub fn small(rows: usize) -> Self {
+        SynthConfig {
+            schema: Schema::CRITEO,
+            rows,
+            seed: 0xC217E0,
+            zipf_exponent: 1.15,
+            base_cardinality: 64,
+            max_cardinality: 2_000_000,
+            missing_rate: 0.12,
+            negative_rate: 0.04,
+            dense_scale: 300.0,
+        }
+    }
+}
+
+/// A generated dataset held as decoded rows plus a per-field missing mask
+/// (needed to emit empty UTF-8 fields faithfully).
+#[derive(Debug, Clone)]
+pub struct SynthDataset {
+    pub config: SynthConfig,
+    pub rows: Vec<DecodedRow>,
+    /// `missing[r]` is a bitmask over feature positions
+    /// (0..num_dense are dense, then sparse), bit set = field was missing.
+    pub missing: Vec<u64>,
+}
+
+impl SynthDataset {
+    /// Generate the dataset. Deterministic in `config.seed`.
+    pub fn generate(config: SynthConfig) -> Self {
+        assert!(
+            config.schema.num_features() <= 64,
+            "missing mask packs into u64; widen if you need >64 features"
+        );
+        let mut root = XorShift64::new(config.seed);
+        let schema = config.schema;
+
+        // Per-column samplers. Each sparse column owns a cardinality and a
+        // salt so its hash space doesn't collide with other columns'.
+        let mut card = config.base_cardinality;
+        let sparse_cols: Vec<(Zipf, u64)> = (0..schema.num_sparse)
+            .map(|c| {
+                let z = Zipf::new(card.max(1), config.zipf_exponent);
+                let salt = 0x9E3779B9u64.wrapping_mul(c as u64 + 1);
+                card = (card * 4).min(config.max_cardinality);
+                if card == config.max_cardinality {
+                    card = config.base_cardinality; // cycle the spread
+                }
+                (z, salt)
+            })
+            .collect();
+
+        let mut rows = Vec::with_capacity(config.rows);
+        let mut missing = Vec::with_capacity(config.rows);
+        let mut rng = root.fork(1);
+
+        for _ in 0..config.rows {
+            let mut mask = 0u64;
+            let label = i32::from(rng.chance(0.25));
+
+            let mut dense = Vec::with_capacity(schema.num_dense);
+            for d in 0..schema.num_dense {
+                if rng.chance(config.missing_rate) {
+                    mask |= 1 << d;
+                    dense.push(0); // FillMissing default (paper: 0)
+                    continue;
+                }
+                // log-normal-ish counts: exp of a half-gaussian, scaled.
+                let mag = (rng.gaussian().abs() * config.dense_scale) as i64;
+                let v = if rng.chance(config.negative_rate) { -mag - 1 } else { mag };
+                dense.push(v as i32);
+            }
+
+            let mut sparse = Vec::with_capacity(schema.num_sparse);
+            for (s, (zipf, salt)) in sparse_cols.iter().enumerate() {
+                if rng.chance(config.missing_rate) {
+                    mask |= 1 << (schema.num_dense + s);
+                    sparse.push(0);
+                    continue;
+                }
+                let rank = zipf.sample(&mut rng);
+                // Hash the rank into a 32-bit value — what Criteo's
+                // anonymization does ("hashed string values", paper §4.1).
+                let h = splitmix(rank ^ salt);
+                sparse.push((h >> 32) as u32);
+            }
+
+            rows.push(DecodedRow { label, dense, sparse });
+            missing.push(mask);
+        }
+
+        SynthDataset { config, rows, missing }
+    }
+
+    pub fn schema(&self) -> Schema {
+        self.config.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Was feature `f` (dense-then-sparse index) of row `r` missing?
+    pub fn is_missing(&self, r: usize, f: usize) -> bool {
+        self.missing[r] & (1 << f) != 0
+    }
+}
+
+/// splitmix64 finalizer — a good standalone integer hash.
+#[inline]
+pub fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = SynthDataset::generate(SynthConfig::small(200));
+        let b = SynthDataset::generate(SynthConfig::small(200));
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.missing, b.missing);
+    }
+
+    #[test]
+    fn shapes_match_schema() {
+        let ds = SynthDataset::generate(SynthConfig::small(50));
+        assert_eq!(ds.num_rows(), 50);
+        for r in &ds.rows {
+            assert_eq!(r.dense.len(), 13);
+            assert_eq!(r.sparse.len(), 26);
+        }
+    }
+
+    #[test]
+    fn missing_fields_are_zero() {
+        let ds = SynthDataset::generate(SynthConfig::small(500));
+        let nd = ds.schema().num_dense;
+        for (r, row) in ds.rows.iter().enumerate() {
+            for d in 0..nd {
+                if ds.is_missing(r, d) {
+                    assert_eq!(row.dense[d], 0);
+                }
+            }
+            for s in 0..ds.schema().num_sparse {
+                if ds.is_missing(r, nd + s) {
+                    assert_eq!(row.sparse[s], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn missing_rate_roughly_honored() {
+        let ds = SynthDataset::generate(SynthConfig::small(2000));
+        let total = 2000 * ds.schema().num_features();
+        let miss: u32 = ds.missing.iter().map(|m| m.count_ones()).sum();
+        let rate = miss as f64 / total as f64;
+        assert!((rate - 0.12).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn has_negative_dense_values() {
+        let ds = SynthDataset::generate(SynthConfig::small(2000));
+        let negs = ds.rows.iter().flat_map(|r| &r.dense).filter(|&&d| d < 0).count();
+        assert!(negs > 0, "negative_rate should produce some negatives");
+    }
+
+    #[test]
+    fn presets_produce_valid_datasets() {
+        for name in ["criteo", "movielens", "yelp", "amazon"] {
+            let cfg = SynthConfig::preset(name, 80).unwrap();
+            let ds = SynthDataset::generate(cfg);
+            assert_eq!(ds.num_rows(), 80, "{name}");
+            // every preset must survive the full pipeline
+            let raw = crate::data::utf8::encode_dataset(&ds);
+            let out = crate::decode::ParallelDecoder::new(ds.schema()).decode(&raw);
+            assert_eq!(out.rows, ds.rows, "{name} roundtrip");
+        }
+        assert!(SynthConfig::preset("nope", 10).is_err());
+    }
+
+    #[test]
+    fn sparse_columns_are_skewed() {
+        let ds = SynthDataset::generate(SynthConfig::small(3000));
+        // column 0 has base cardinality 64 and zipf skew: top value should
+        // cover a large share of the rows.
+        let mut counts = std::collections::HashMap::new();
+        for (r, row) in ds.rows.iter().enumerate() {
+            if !ds.is_missing(r, ds.schema().num_dense) {
+                *counts.entry(row.sparse[0]).or_insert(0usize) += 1;
+            }
+        }
+        let max = counts.values().copied().max().unwrap();
+        let total: usize = counts.values().sum();
+        assert!(max as f64 / total as f64 > 0.10, "head share {max}/{total}");
+        assert!(counts.len() <= 64);
+    }
+}

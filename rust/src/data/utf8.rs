@@ -1,0 +1,142 @@
+//! The raw UTF-8 on-disk format (paper Fig. 4).
+//!
+//! One row = `label \t dense... \t sparse... \n`, where dense values are
+//! signed decimal integers, sparse values are 8-hex-digit lowercase
+//! hashes, and a missing value is an empty field (two adjacent tabs).
+//! Only the byte values `\t`, `\n`, `-`, `0-9`, `a-f` appear (paper §3.2,
+//! Decode PE).
+
+use crate::Result;
+use std::io::Write as _;
+use std::path::Path;
+
+use super::row::DecodedRow;
+use super::synth::SynthDataset;
+
+/// Encode one decoded row back to the raw UTF-8 line format.
+/// `missing_mask` bit `f` set ⇒ feature `f` (dense-then-sparse order)
+/// is emitted as an empty field.
+pub fn encode_row(row: &DecodedRow, missing_mask: u64, out: &mut Vec<u8>) {
+    // Label is a bare decimal (never missing in Criteo).
+    push_decimal(out, row.label as i64);
+    for (d, &v) in row.dense.iter().enumerate() {
+        out.push(b'\t');
+        if missing_mask & (1 << d) == 0 {
+            push_decimal(out, v as i64);
+        }
+    }
+    let nd = row.dense.len();
+    for (s, &v) in row.sparse.iter().enumerate() {
+        out.push(b'\t');
+        if missing_mask & (1 << (nd + s)) == 0 {
+            push_hex8(out, v);
+        }
+    }
+    out.push(b'\n');
+}
+
+/// Encode a whole synthetic dataset to raw UTF-8 bytes.
+pub fn encode_dataset(ds: &SynthDataset) -> Vec<u8> {
+    // Rough pre-size: ~6 bytes/dense, 9/sparse, 2/label.
+    let per_row = 2 + 7 * ds.schema().num_dense + 9 * ds.schema().num_sparse;
+    let mut out = Vec::with_capacity(per_row * ds.num_rows());
+    for (r, row) in ds.rows.iter().enumerate() {
+        encode_row(row, ds.missing[r], &mut out);
+    }
+    out
+}
+
+/// Write the UTF-8 dataset to a file.
+pub fn write_file(ds: &SynthDataset, path: &Path) -> Result<()> {
+    let bytes = encode_dataset(ds);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+fn push_decimal(out: &mut Vec<u8>, v: i64) {
+    let mut buf = [0u8; 20];
+    let mut n = v;
+    if n < 0 {
+        out.push(b'-');
+        n = -n;
+    }
+    let mut i = buf.len();
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (n % 10) as u8;
+        n /= 10;
+        if n == 0 {
+            break;
+        }
+    }
+    out.extend_from_slice(&buf[i..]);
+}
+
+fn push_hex8(out: &mut Vec<u8>, v: u32) {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    for shift in (0..8).rev() {
+        out.push(HEX[((v >> (shift * 4)) & 0xf) as usize]);
+    }
+}
+
+/// Count rows in a raw buffer (the "Get Row Number" host step, Fig. 10).
+pub fn count_rows(raw: &[u8]) -> usize {
+    raw.iter().filter(|&&b| b == b'\n').count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Schema, SynthConfig};
+
+    #[test]
+    fn encode_simple_row() {
+        let row = DecodedRow { label: 1, dense: vec![-5, 0], sparse: vec![0xdeadbeef] };
+        let mut out = Vec::new();
+        encode_row(&row, 0, &mut out);
+        assert_eq!(out, b"1\t-5\t0\tdeadbeef\n");
+    }
+
+    #[test]
+    fn encode_missing_fields_are_empty() {
+        let row = DecodedRow { label: 0, dense: vec![7, 0], sparse: vec![0, 0x1] };
+        // dense[1] missing (bit 1), sparse[0] missing (bit 2)
+        let mut out = Vec::new();
+        encode_row(&row, 0b110, &mut out);
+        assert_eq!(out, b"0\t7\t\t\t00000001\n");
+    }
+
+    #[test]
+    fn only_legal_bytes_appear() {
+        let ds = SynthDataset::generate(SynthConfig::small(300));
+        let raw = encode_dataset(&ds);
+        for &b in &raw {
+            assert!(
+                b == b'\t' || b == b'\n' || b == b'-'
+                    || b.is_ascii_digit()
+                    || (b'a'..=b'f').contains(&b),
+                "illegal byte {b:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn row_count_matches() {
+        let ds = SynthDataset::generate(SynthConfig::small(123));
+        let raw = encode_dataset(&ds);
+        assert_eq!(count_rows(&raw), 123);
+    }
+
+    #[test]
+    fn field_count_per_row() {
+        let mut cfg = SynthConfig::small(10);
+        cfg.schema = Schema::new(3, 4);
+        let ds = SynthDataset::generate(cfg);
+        let raw = encode_dataset(&ds);
+        for line in raw.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let tabs = line.iter().filter(|&&b| b == b'\t').count();
+            assert_eq!(tabs, 7); // num_features columns ⇒ num_features tabs
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! UTF-8 decoding: the paper's `Decode` + `FillMissing` operators.
+//!
+//! Two implementations, bit-exact to each other:
+//!
+//! * [`scalar`] — the byte-at-a-time state machine of paper Fig. 6
+//!   (II = 1 cycle/byte on the FPGA ⇒ ~300 MB/s at 300 MHz, the paper's
+//!   identified bottleneck);
+//! * [`parallel`] — the 4-byte-per-cycle combination decoder of paper
+//!   Script 1 (generalized to width 1/2/4/8 for the ablation bench).
+//!
+//! Both consume raw bytes and produce [`DecodedRow`]s with missing fields
+//! already filled with 0 (on hardware there is no `Null`, paper §3.1),
+//! plus a cycle count for the accelerator timing model.
+
+pub mod parallel;
+pub mod scalar;
+
+use crate::data::{DecodedRow, Schema};
+
+pub use parallel::ParallelDecoder;
+pub use scalar::ScalarDecoder;
+
+/// Byte classes of the raw format (paper §3.2: only `\t \n - 0-9 a-f`
+/// can appear).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ByteClass {
+    /// `\t` or `\n` — both delimiters ("we regard \t and \n the same",
+    /// paper §3.3); `\n` additionally ends the row.
+    Delim { end_of_row: bool },
+    /// `-` minus sign (dense features only).
+    Minus,
+    /// A hex nibble `0-9a-f` with its 4-bit value.
+    Nibble(u8),
+    /// Anything else — illegal in the format.
+    Illegal,
+}
+
+/// Classify one byte (the "upstream module" of paper §3.3 that maps ASCII
+/// values to `\t`, `\n`, `-`, `0~f`).
+#[inline]
+pub fn classify(b: u8) -> ByteClass {
+    match CLASS_LUT[b as usize] {
+        c if c < 16 => ByteClass::Nibble(c),
+        CODE_TAB => ByteClass::Delim { end_of_row: false },
+        CODE_NL => ByteClass::Delim { end_of_row: true },
+        CODE_MINUS => ByteClass::Minus,
+        _ => ByteClass::Illegal,
+    }
+}
+
+// Byte-class codes for the hot loop: 0..=15 nibble value, then specials.
+// In hardware this is the one-cycle combinational classifier; in software
+// it is a 256-entry table lookup, which is what lets the per-byte loop
+// run branch-lean (EXPERIMENTS.md §Perf).
+const CODE_TAB: u8 = 16;
+const CODE_NL: u8 = 17;
+const CODE_MINUS: u8 = 18;
+const CODE_ILLEGAL: u8 = 19;
+
+const CLASS_LUT: [u8; 256] = {
+    let mut t = [CODE_ILLEGAL; 256];
+    let mut b = b'0';
+    while b <= b'9' {
+        t[b as usize] = b - b'0';
+        b += 1;
+    }
+    let mut b = b'a';
+    while b <= b'f' {
+        t[b as usize] = b - b'a' + 10;
+        b += 1;
+    }
+    t[b'\t' as usize] = CODE_TAB;
+    t[b'\n' as usize] = CODE_NL;
+    t[b'-' as usize] = CODE_MINUS;
+    t
+};
+
+/// Shared row-assembly state machine: accumulates nibbles into the 32-bit
+/// register, finalizes fields on delimiters, assembles [`DecodedRow`]s.
+///
+/// The field's *mode* (decimal vs hexadecimal accumulate) is selected by
+/// the column counter against the [`Schema`] — "what we should know in
+/// advance is the data format for each feature" (paper §3.2).
+#[derive(Debug)]
+pub struct RowAssembler {
+    schema: Schema,
+    /// 32-bit accumulation register (paper keeps the same width).
+    reg: u32,
+    /// Set when a `-` was seen in the current field.
+    negative_flag: bool,
+    /// Current column index (0 = label, then dense, then sparse).
+    col: usize,
+    /// Cached accumulate mode of the current column (avoids re-deriving
+    /// it per nibble — §Perf).
+    hex_mode: bool,
+    cur: DecodedRow,
+    out: Vec<DecodedRow>,
+}
+
+impl RowAssembler {
+    pub fn new(schema: Schema) -> Self {
+        RowAssembler {
+            schema,
+            reg: 0,
+            negative_flag: false,
+            col: 0,
+            hex_mode: false, // column 0 is the (decimal) label
+            cur: DecodedRow::zeroed(schema),
+            out: Vec::new(),
+        }
+    }
+
+    /// Feed one classified byte.
+    #[inline]
+    pub fn step(&mut self, class: ByteClass) {
+        match class {
+            ByteClass::Nibble(n) => self.push_nibble(n),
+            ByteClass::Minus => self.negative_flag = true,
+            ByteClass::Delim { end_of_row } => {
+                self.finish_field();
+                if end_of_row {
+                    self.finish_row();
+                }
+            }
+            ByteClass::Illegal => {
+                // Hardware would flag an error line; we skip the byte.
+                // Kept non-panicking so fuzzed inputs can't crash the PE.
+            }
+        }
+    }
+
+    #[inline]
+    fn push_nibble(&mut self, n: u8) {
+        // (a)/(b) of paper §3.2: decimal ×10+digit, hex <<4|digit.
+        self.reg = if self.hex_mode {
+            (self.reg << 4) | n as u32
+        } else {
+            self.reg.wrapping_mul(10).wrapping_add(n as u32)
+        };
+    }
+
+    /// The hot loop: feed a raw byte slice through the LUT classifier.
+    /// Equivalent to `for b in bytes { step(classify(b)) }` but
+    /// branch-lean — this is what both decoders and the streaming path
+    /// call (EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn feed_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            let code = CLASS_LUT[b as usize];
+            if code < 16 {
+                self.push_nibble(code);
+            } else if code == CODE_TAB {
+                self.finish_field();
+            } else if code == CODE_NL {
+                self.finish_field();
+                self.finish_row();
+            } else if code == CODE_MINUS {
+                self.negative_flag = true;
+            }
+            // CODE_ILLEGAL: skipped
+        }
+    }
+
+    /// (c) of paper §3.2: extract the register on a delimiter. An empty
+    /// field leaves reg = 0, which *is* the FillMissing default.
+    #[inline]
+    fn finish_field(&mut self) {
+        let value = if self.negative_flag {
+            (self.reg as i32).wrapping_neg() as u32 // two's complement
+        } else {
+            self.reg
+        };
+        let nd = self.schema.num_dense;
+        if self.col == 0 {
+            self.cur.label = value as i32;
+        } else if self.col <= nd {
+            self.cur.dense[self.col - 1] = value as i32;
+        } else if self.col <= nd + self.schema.num_sparse {
+            self.cur.sparse[self.col - 1 - nd] = value;
+        }
+        // Columns beyond the schema are dropped (malformed line).
+        self.reg = 0;
+        self.negative_flag = false;
+        self.col += 1;
+        self.hex_mode = self.col > nd;
+    }
+
+    #[inline]
+    fn finish_row(&mut self) {
+        let done = std::mem::replace(&mut self.cur, DecodedRow::zeroed(self.schema));
+        self.out.push(done);
+        self.col = 0;
+        self.hex_mode = false;
+    }
+
+    /// Drain the rows completed so far without consuming the assembler —
+    /// the streaming (network) path calls this after each chunk.
+    pub fn take_rows(&mut self) -> Vec<DecodedRow> {
+        std::mem::take(&mut self.out)
+    }
+
+    /// Flush: if input ended without a trailing `\n`, complete the open row.
+    pub fn finish(mut self) -> Vec<DecodedRow> {
+        if self.col != 0 || self.reg != 0 || self.negative_flag {
+            self.finish_field();
+            self.finish_row();
+        }
+        self.out
+    }
+
+    pub fn rows_so_far(&self) -> usize {
+        self.out.len()
+    }
+}
+
+/// Output of a decoder run: the rows plus the cycle count of the modeled
+/// hardware unit (used by [`crate::accel`]'s timing model; meaningless
+/// for pure-software use).
+#[derive(Debug)]
+pub struct DecodeOutput {
+    pub rows: Vec<DecodedRow>,
+    /// Modeled FPGA cycles consumed by the decode PE.
+    pub cycles: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_all_legal() {
+        assert_eq!(classify(b'\t'), ByteClass::Delim { end_of_row: false });
+        assert_eq!(classify(b'\n'), ByteClass::Delim { end_of_row: true });
+        assert_eq!(classify(b'-'), ByteClass::Minus);
+        assert_eq!(classify(b'0'), ByteClass::Nibble(0));
+        assert_eq!(classify(b'9'), ByteClass::Nibble(9));
+        assert_eq!(classify(b'a'), ByteClass::Nibble(10));
+        assert_eq!(classify(b'f'), ByteClass::Nibble(15));
+        assert_eq!(classify(b'g'), ByteClass::Illegal);
+        assert_eq!(classify(b' '), ByteClass::Illegal);
+    }
+}

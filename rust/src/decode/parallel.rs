@@ -1,0 +1,206 @@
+//! Parallel combination decoder — paper Script 1.
+//!
+//! The paper's key decode optimization: instead of one byte per cycle, the
+//! PE ingests a W-byte word (W = 4 in Script 1), classifies all W bytes
+//! combinationally ("upstream module"), counts the delimiters to determine
+//! how many of the 0..=W outputs are valid, and merges the partial-field
+//! nibbles into the carry register in one cycle ("downstream module" —
+//! a state machine extracting valid 32-bit outputs from the wide input
+//! stream).
+//!
+//! The software model reproduces the exact same combination semantics —
+//! one *group* of W classified bytes is folded per modeled cycle, carrying
+//! the register across group boundaries — and is checked bit-exact against
+//! [`super::ScalarDecoder`] by unit + property tests. Width is a runtime
+//! parameter so the ablation bench can sweep W ∈ {1, 2, 4, 8}.
+
+use crate::data::{DecodedRow, Schema};
+
+use super::{classify, ByteClass, DecodeOutput, RowAssembler};
+
+/// The parallel decode PE (paper Script 1; default width 4).
+#[derive(Debug)]
+pub struct ParallelDecoder {
+    schema: Schema,
+    width: usize,
+}
+
+impl ParallelDecoder {
+    /// Script 1's 4-byte configuration.
+    pub fn new(schema: Schema) -> Self {
+        Self::with_width(schema, 4)
+    }
+
+    /// Generalized width (1, 2, 4, 8, ... — ablation bench).
+    pub fn with_width(schema: Schema, width: usize) -> Self {
+        assert!(width >= 1 && width <= 64, "decode width out of range");
+        ParallelDecoder { schema, width }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Decode a raw buffer. Cycles = number of W-byte groups
+    /// (`ceil(len/W)`): the whole group is folded combinationally in one
+    /// modeled cycle.
+    ///
+    /// The group fold is associative over the byte stream (each group's
+    /// effect is exactly the left-to-right byte fold carrying the
+    /// register), so functionally the whole buffer can be fed in one
+    /// pass — the group structure only determines the cycle count. This
+    /// avoids per-4-byte loop overhead in software (§Perf);
+    /// [`Self::fold_group`] remains the faithful per-cycle form and the
+    /// property tests assert both produce identical rows.
+    pub fn decode(&self, raw: &[u8]) -> DecodeOutput {
+        let mut asm = RowAssembler::new(self.schema);
+        asm.feed_bytes(raw);
+        let cycles = (raw.len() as u64).div_ceil(self.width as u64);
+        DecodeOutput { rows: asm.finish(), cycles }
+    }
+
+    /// The faithful per-cycle decode: fold group by group (slower in
+    /// software, identical output — used by tests and the FIFO burst
+    /// model, which needs per-cycle emission counts).
+    pub fn decode_by_groups(&self, raw: &[u8]) -> DecodeOutput {
+        let mut asm = RowAssembler::new(self.schema);
+        let mut cycles = 0u64;
+        for group in raw.chunks(self.width) {
+            cycles += 1;
+            self.fold_group(group, &mut asm);
+        }
+        DecodeOutput { rows: asm.finish(), cycles }
+    }
+
+    /// Fold one W-byte group into the assembler.
+    ///
+    /// Mirrors Script 1's structure: split the group into sub-inputs
+    /// s0..s{W-1}, classify each, and resolve the (delimiter-count →
+    /// valid-output-count) combination by scanning the classified lanes
+    /// in order, merging nibble runs into the carried register `v` and
+    /// emitting an output o_i at each delimiter. In HLS this unrolls into
+    /// the 2^W-case combinational network the paper enumerates (16
+    /// combinations for W = 4); semantically it is this exact fold.
+    #[inline]
+    fn fold_group(&self, group: &[u8], asm: &mut RowAssembler) {
+        // Upstream module: map ASCII → {delim, minus, nibble} (LUT).
+        // Downstream module: merge lanes left-to-right. The scan is data-
+        // independent per lane, which is what makes the hardware version a
+        // fixed-depth circuit.
+        asm.feed_bytes(group);
+    }
+
+    /// Count the delimiters in one group — the quantity Script 1 computes
+    /// first ("count how many \t exist in the input because it determines
+    /// the number of valid outputs"). Exposed for the PE's output-FIFO
+    /// width assertions in [`crate::accel`].
+    pub fn delimiters_in(group: &[u8]) -> usize {
+        group
+            .iter()
+            .filter(|&&b| matches!(classify(b), ByteClass::Delim { .. }))
+            .count()
+    }
+
+    /// Decode a single line.
+    pub fn decode_line(&self, line: &[u8]) -> Option<DecodedRow> {
+        self.decode(line).rows.into_iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth::SynthConfig, utf8, SynthDataset};
+    use crate::decode::ScalarDecoder;
+    use crate::util::XorShift64;
+
+    #[test]
+    fn matches_scalar_on_synth_dataset() {
+        let ds = SynthDataset::generate(SynthConfig::small(300));
+        let raw = utf8::encode_dataset(&ds);
+        let scalar = ScalarDecoder::new(ds.schema()).decode(&raw);
+        for w in [1usize, 2, 4, 8] {
+            let par = ParallelDecoder::with_width(ds.schema(), w).decode(&raw);
+            assert_eq!(par.rows, scalar.rows, "width {w} diverged from scalar");
+        }
+    }
+
+    #[test]
+    fn cycle_count_is_quarter_of_scalar_at_width_4() {
+        let ds = SynthDataset::generate(SynthConfig::small(100));
+        let raw = utf8::encode_dataset(&ds);
+        let s = ScalarDecoder::new(ds.schema()).decode(&raw);
+        let p = ParallelDecoder::new(ds.schema()).decode(&raw);
+        assert_eq!(s.cycles, raw.len() as u64);
+        assert_eq!(p.cycles, (raw.len() as u64).div_ceil(4));
+    }
+
+    #[test]
+    fn fast_path_equals_per_group_fold() {
+        let ds = SynthDataset::generate(SynthConfig::small(200));
+        let raw = utf8::encode_dataset(&ds);
+        for w in [1usize, 2, 4, 8] {
+            let d = ParallelDecoder::with_width(ds.schema(), w);
+            let fast = d.decode(&raw);
+            let slow = d.decode_by_groups(&raw);
+            assert_eq!(fast.rows, slow.rows, "width {w}");
+            assert_eq!(fast.cycles, slow.cycles, "width {w}");
+        }
+    }
+
+    #[test]
+    fn delimiter_count() {
+        assert_eq!(ParallelDecoder::delimiters_in(b"\t1\n2"), 2);
+        assert_eq!(ParallelDecoder::delimiters_in(b"abcd"), 0);
+        assert_eq!(ParallelDecoder::delimiters_in(b"\t\t\t\t"), 4);
+    }
+
+    #[test]
+    fn fields_split_across_group_boundaries() {
+        // "12345" spans two 4-byte groups; register must carry across.
+        let schema = crate::data::Schema::new(1, 0);
+        let p = ParallelDecoder::new(schema);
+        let row = p.decode_line(b"0\t12345").unwrap();
+        assert_eq!(row.dense[0], 12345);
+    }
+
+    /// Property test: random legal-byte soup decodes identically under
+    /// scalar and all parallel widths (even when it isn't a well-formed
+    /// table — the state machines must still agree).
+    #[test]
+    fn property_random_soup_bit_exact() {
+        let legal = b"\t\n-0123456789abcdef";
+        let schema = crate::data::Schema::new(3, 3);
+        let mut rng = XorShift64::new(0xDEC0DE);
+        for case in 0..200 {
+            let len = rng.below(200) as usize;
+            let raw: Vec<u8> =
+                (0..len).map(|_| legal[rng.below(legal.len() as u64) as usize]).collect();
+            let s = ScalarDecoder::new(schema).decode(&raw);
+            for w in [2usize, 4, 8] {
+                let p = ParallelDecoder::with_width(schema, w).decode(&raw);
+                assert_eq!(p.rows, s.rows, "case {case} width {w}: {:?}", raw);
+            }
+        }
+    }
+
+    /// Property test: encode(decode(x)) == x for well-formed datasets of
+    /// random shapes.
+    #[test]
+    fn property_roundtrip_random_schemas() {
+        let mut rng = XorShift64::new(0xE2E);
+        for case in 0..30 {
+            let schema = crate::data::Schema::new(
+                1 + rng.below(8) as usize,
+                1 + rng.below(8) as usize,
+            );
+            let mut cfg = SynthConfig::small(40);
+            cfg.schema = schema;
+            cfg.seed = rng.next_u64();
+            let ds = SynthDataset::generate(cfg);
+            let raw = utf8::encode_dataset(&ds);
+            let out = ParallelDecoder::new(schema).decode(&raw);
+            assert_eq!(out.rows, ds.rows, "case {case} schema {schema:?}");
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Byte-at-a-time decoder — paper Fig. 6.
+//!
+//! On the FPGA this PE has II = 1 cycle but consumes **one byte per
+//! cycle**: a 512-bit memory lane delivers 64 B/cycle, so the straight
+//! decoder caps effective memory throughput at 1/64th (paper §3.3 —
+//! "decoding data per byte is 64 times slower and limits the valid
+//! throughput to 300MB/s"). It is the reference implementation the
+//! parallel decoder must match bit-for-bit.
+
+use crate::data::{DecodedRow, Schema};
+
+use super::{DecodeOutput, RowAssembler};
+
+/// The scalar decode PE.
+#[derive(Debug)]
+pub struct ScalarDecoder {
+    schema: Schema,
+}
+
+impl ScalarDecoder {
+    pub fn new(schema: Schema) -> Self {
+        ScalarDecoder { schema }
+    }
+
+    /// Decode a whole raw buffer. Cycles = number of input bytes
+    /// (II = 1, one byte/cycle).
+    pub fn decode(&self, raw: &[u8]) -> DecodeOutput {
+        let mut asm = RowAssembler::new(self.schema);
+        asm.feed_bytes(raw);
+        DecodeOutput { rows: asm.finish(), cycles: raw.len() as u64 }
+    }
+
+    /// Decode a single line (no trailing newline required).
+    pub fn decode_line(&self, line: &[u8]) -> Option<DecodedRow> {
+        let mut asm = RowAssembler::new(self.schema);
+        asm.feed_bytes(line);
+        asm.finish().into_iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth::SynthConfig, utf8, SynthDataset};
+
+    fn tiny_schema() -> Schema {
+        Schema::new(2, 2)
+    }
+
+    #[test]
+    fn decodes_simple_line() {
+        let d = ScalarDecoder::new(tiny_schema());
+        let row = d.decode_line(b"1\t42\t-7\tdeadbeef\t0000000a").unwrap();
+        assert_eq!(row.label, 1);
+        assert_eq!(row.dense, vec![42, -7]);
+        assert_eq!(row.sparse, vec![0xdeadbeef, 0xa]);
+    }
+
+    #[test]
+    fn empty_fields_become_zero() {
+        let d = ScalarDecoder::new(tiny_schema());
+        let row = d.decode_line(b"0\t\t5\t\tff").unwrap();
+        assert_eq!(row.dense, vec![0, 5]);
+        assert_eq!(row.sparse, vec![0, 0xff]);
+    }
+
+    #[test]
+    fn negative_two_complement() {
+        let d = ScalarDecoder::new(tiny_schema());
+        let row = d.decode_line(b"0\t-123\t-1\t0\t0").unwrap();
+        assert_eq!(row.dense, vec![-123, -1]);
+    }
+
+    #[test]
+    fn multiple_rows_and_cycles() {
+        let d = ScalarDecoder::new(tiny_schema());
+        let raw = b"1\t1\t2\taa\tbb\n0\t3\t4\tcc\tdd\n";
+        let out = d.decode(raw);
+        assert_eq!(out.rows.len(), 2);
+        assert_eq!(out.cycles, raw.len() as u64);
+        assert_eq!(out.rows[1].sparse, vec![0xcc, 0xdd]);
+    }
+
+    #[test]
+    fn missing_trailing_newline_still_emits_row() {
+        let d = ScalarDecoder::new(tiny_schema());
+        let out = d.decode(b"1\t1\t2\taa\tbb");
+        assert_eq!(out.rows.len(), 1);
+        assert_eq!(out.rows[0].sparse, vec![0xaa, 0xbb]);
+    }
+
+    #[test]
+    fn roundtrips_synth_dataset() {
+        let ds = SynthDataset::generate(SynthConfig::small(400));
+        let raw = utf8::encode_dataset(&ds);
+        let out = ScalarDecoder::new(ds.schema()).decode(&raw);
+        assert_eq!(out.rows, ds.rows, "decode(encode(x)) must equal x");
+    }
+
+    #[test]
+    fn illegal_bytes_skipped_not_panic() {
+        let d = ScalarDecoder::new(tiny_schema());
+        let row = d.decode_line(b"1\t4 2\t0\t0\t0").unwrap();
+        assert_eq!(row.dense[0], 42); // space skipped
+    }
+
+    #[test]
+    fn hex_register_shift_matches_paper() {
+        // sparse accumulation: reg = (reg << 4) | nibble
+        let d = ScalarDecoder::new(Schema::new(0, 1));
+        let row = d.decode_line(b"0\t00000123").unwrap();
+        assert_eq!(row.sparse[0], 0x123);
+    }
+}

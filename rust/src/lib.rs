@@ -1,0 +1,58 @@
+//! # PIPER — simulated accelerator for tabular ML data preprocessing
+//!
+//! Reproduction of *"Efficient Tabular Data Preprocessing of ML Pipelines"*
+//! (Zhu, Jiang, Alonso — 2024). The paper builds an FPGA dataflow
+//! accelerator (PIPER) for the stateful DLRM preprocessing pipeline
+//! (decode → hex2int → modulus → gen-vocab → apply-vocab → neg2zero →
+//! logarithm → concatenate) and compares it against a 128-core CPU server
+//! and a V100 GPU.
+//!
+//! This crate reproduces the whole system on commodity hardware:
+//!
+//! * [`data`] — the dataset substrate: Criteo-format schema, a
+//!   deterministic synthetic generator, and the UTF-8 / binary on-disk
+//!   formats of the paper's Figure 4.
+//! * [`decode`] — the byte-at-a-time UTF-8 decoder (paper Fig. 6) and the
+//!   4-byte-per-cycle *parallel* decoder (paper Script 1), bit-exact to
+//!   each other.
+//! * [`ops`] — the operator library of Table 1, plus the insertion-ordered
+//!   vocabulary with mergeable per-thread sub-dictionaries.
+//! * [`cpu_baseline`] — Meta's row-partitioned multithreaded pipeline
+//!   (Split-Input-File → Generate-Vocab → Apply-Vocab → Concatenate) in
+//!   the paper's Configs I/II/III. This baseline is *measured*, not
+//!   simulated.
+//! * [`accel`] — the PIPER accelerator as a functional + cycle-level
+//!   simulator: heterogeneous PEs with the paper's initiation intervals,
+//!   FIFO channels, SRAM/HBM vocabulary placement, local (PCIe) and
+//!   network-attached modes.
+//! * [`gpu_sim`] — the RAPIDS-style column-parallel GPU baseline
+//!   (functional column pipeline + V100-calibrated timing model).
+//! * [`net`] — network-attached mode over real TCP (loopback): leader
+//!   streams raw rows, the accelerator node preprocesses in a pipelined
+//!   fashion.
+//! * [`runtime`] / [`train`] — PJRT runtime that loads the AOT-compiled
+//!   JAX/Pallas DLRM (`artifacts/*.hlo.txt`) and the training loop that
+//!   consumes preprocessed batches (paper Fig. 1 consumer).
+//! * [`coordinator`] — backend dispatch, pipeline config, scheduling.
+//! * [`report`] — the table/figure renderers used by `rust/benches/`.
+//!
+//! Simulated time and measured wallclock are never mixed silently — see
+//! [`report::TimeTag`].
+
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod cpu_baseline;
+pub mod data;
+pub mod decode;
+pub mod gpu_sim;
+pub mod net;
+pub mod ops;
+pub mod accel;
+pub mod report;
+pub mod runtime;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,261 @@
+//! `piper` — the launcher CLI.
+//!
+//! Subcommands:
+//!   gen-data    generate a synthetic Criteo-format dataset file
+//!   preprocess  run one backend over a dataset and print stage timings
+//!   compare     run the Fig. 9 style CPU/GPU/PIPER comparison
+//!   serve       run a network-attached PIPER worker (TCP)
+//!   submit      stream a dataset to a worker and collect results
+//!   train       end-to-end: preprocess + train the DLRM via PJRT
+//!
+//! Every knob is a `key=value` override (see `--help`), optionally layered
+//! on a `--config FILE`.
+
+use std::path::Path;
+
+use piper::accel::{InputFormat, Mode};
+use piper::config::Config;
+use piper::coordinator::{self, Backend, Experiment};
+use piper::cpu_baseline::ConfigKind;
+use piper::data::{binary, synth::SynthConfig, utf8, Schema, SynthDataset};
+use piper::net::{self, protocol::Job, stream::WireFormat};
+use piper::ops::Modulus;
+use piper::report::{fmt_duration, fmt_rows_per_sec, fmt_speedup, fmt_tagged, Table};
+use piper::Result;
+
+const HELP: &str = "\
+piper — simulated PIPER accelerator for tabular ML preprocessing
+
+USAGE: piper <COMMAND> [key=value]... [--config FILE]
+
+COMMANDS:
+  gen-data    rows=100000 format=utf8|binary out=PATH seed=N
+  preprocess  input=PATH format=utf8|binary backend=cpu|gpu|piper-local|piper-host-decode|piper-net
+              vocab=5000 threads=8 cpu_config=1|2|3
+  compare     rows=20000 vocab=5000 format=utf8|binary
+  serve       addr=127.0.0.1:7700 jobs=1
+  submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000
+  train       input=PATH format=utf8 vocab=5000 steps=100 artifacts=artifacts
+  help        print this message
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_args() -> Result<(String, Config)> {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = args.collect();
+    let mut cfg = Config::new();
+    let mut i = 0;
+    while i < rest.len() {
+        if rest[i] == "--config" {
+            let path = rest
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("--config needs a path"))?;
+            let file = Config::from_file(Path::new(path))?;
+            for k in file.keys().map(str::to_string).collect::<Vec<_>>() {
+                if cfg.get(&k).is_none() {
+                    cfg.set(&k, file.get(&k).unwrap());
+                }
+            }
+            i += 2;
+        } else {
+            cfg.apply_overrides([rest[i].as_str()])?;
+            i += 1;
+        }
+    }
+    Ok((cmd, cfg))
+}
+
+fn run() -> Result<()> {
+    let (cmd, cfg) = parse_args()?;
+    match cmd.as_str() {
+        "gen-data" => cmd_gen_data(&cfg),
+        "preprocess" => cmd_preprocess(&cfg),
+        "compare" => cmd_compare(&cfg),
+        "serve" => cmd_serve(&cfg),
+        "submit" => cmd_submit(&cfg),
+        "train" => cmd_train(&cfg),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn modulus_of(cfg: &Config) -> Result<Modulus> {
+    Ok(Modulus::new(cfg.get_usize("vocab", 5000)? as u32))
+}
+
+fn format_of(cfg: &Config) -> Result<InputFormat> {
+    match cfg.get_or("format", "utf8") {
+        "utf8" => Ok(InputFormat::Utf8),
+        "binary" => Ok(InputFormat::Binary),
+        other => anyhow::bail!("unknown format `{other}`"),
+    }
+}
+
+fn read_input(cfg: &Config) -> Result<Vec<u8>> {
+    let path = cfg
+        .get("input")
+        .ok_or_else(|| anyhow::anyhow!("missing input=PATH"))?;
+    Ok(std::fs::read(path)?)
+}
+
+fn cmd_gen_data(cfg: &Config) -> Result<()> {
+    let rows = cfg.get_usize("rows", 100_000)?;
+    let out = cfg.get_or("out", "dataset.txt");
+    let mut scfg = SynthConfig::preset(cfg.get_or("dataset", "criteo"), rows)?;
+    scfg.seed = cfg.get_u64("seed", scfg.seed)?;
+    if cfg.get("dense").is_some() || cfg.get("sparse").is_some() {
+        scfg.schema = Schema::new(
+            cfg.get_usize("dense", scfg.schema.num_dense)?,
+            cfg.get_usize("sparse", scfg.schema.num_sparse)?,
+        );
+    }
+    let ds = SynthDataset::generate(scfg);
+    match format_of(cfg)? {
+        InputFormat::Utf8 => utf8::write_file(&ds, Path::new(out))?,
+        InputFormat::Binary => binary::write_file(&ds, Path::new(out))?,
+    }
+    println!("wrote {} rows to {out}", ds.num_rows());
+    Ok(())
+}
+
+fn backend_of(cfg: &Config) -> Result<Backend> {
+    let threads = cfg.get_usize("threads", 8)?;
+    let kind = match cfg.get_usize("cpu_config", 1)? {
+        1 => ConfigKind::I,
+        2 => ConfigKind::II,
+        3 => ConfigKind::III,
+        n => anyhow::bail!("cpu_config must be 1..3, got {n}"),
+    };
+    Ok(match cfg.get_or("backend", "piper-net") {
+        "cpu" => Backend::Cpu { kind, threads },
+        "gpu" => Backend::Gpu,
+        "piper-local" => Backend::Piper { mode: Mode::LocalDecodeInKernel },
+        "piper-host-decode" => Backend::Piper { mode: Mode::LocalDecodeInHost },
+        "piper-net" => Backend::Piper { mode: Mode::Network },
+        other => anyhow::bail!("unknown backend `{other}`"),
+    })
+}
+
+fn cmd_preprocess(cfg: &Config) -> Result<()> {
+    let raw = read_input(cfg)?;
+    let backend = backend_of(cfg)?;
+    let exp = Experiment::new(modulus_of(cfg)?, format_of(cfg)?);
+    let summary = coordinator::run_backend(&backend, &exp, &raw)?;
+    let mut t = Table::new("preprocess", &["backend", "rows", "e2e", "rows/s"]);
+    t.row(&[
+        summary.backend.clone(),
+        summary.rows.to_string(),
+        fmt_tagged(summary.e2e, summary.tag),
+        fmt_rows_per_sec(summary.e2e_rows_per_sec()),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_compare(cfg: &Config) -> Result<()> {
+    let rows = cfg.get_usize("rows", 20_000)?;
+    let input = format_of(cfg)?;
+    let m = modulus_of(cfg)?;
+    let ds = SynthDataset::generate(SynthConfig::small(rows));
+    let raw = match input {
+        InputFormat::Utf8 => utf8::encode_dataset(&ds),
+        InputFormat::Binary => binary::encode_dataset(&ds),
+    };
+    let threads = cfg.get_usize("threads", 8)?;
+    let cpu_kind = match input {
+        InputFormat::Utf8 => ConfigKind::II,
+        InputFormat::Binary => ConfigKind::III,
+    };
+    let backends = vec![
+        Backend::Cpu { kind: cpu_kind, threads },
+        Backend::Gpu,
+        Backend::Piper { mode: Mode::LocalDecodeInKernel },
+        Backend::Piper { mode: Mode::Network },
+    ];
+    let exp = Experiment::new(m, input);
+    let rows_out = coordinator::compare(&backends, &exp, &raw)?;
+    let mut t = Table::new(
+        &format!("compare ({:?}, vocab {})", input, m.range),
+        &["backend", "e2e", "rows/s", "speedup vs best CPU"],
+    );
+    for r in &rows_out {
+        t.row(&[
+            r.backend.clone(),
+            fmt_tagged(r.e2e, r.tag),
+            fmt_rows_per_sec(r.rows_per_sec),
+            fmt_speedup(r.speedup_vs_ref),
+        ]);
+    }
+    t.note("sim-tagged rows model paper hardware; meas rows ran on this machine");
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    let addr = cfg.get_or("addr", "127.0.0.1:7700");
+    let jobs = cfg.get_usize("jobs", 1)?;
+    let listener = std::net::TcpListener::bind(addr)?;
+    println!("piper worker listening on {addr} for {jobs} job(s)");
+    for i in 0..jobs {
+        let stats = net::serve_one(&listener)?;
+        println!("job {}: {} rows, {} vocab entries", i + 1, stats.rows, stats.vocab_entries);
+    }
+    Ok(())
+}
+
+fn cmd_submit(cfg: &Config) -> Result<()> {
+    let raw = read_input(cfg)?;
+    let addr = cfg.get_or("addr", "127.0.0.1:7700");
+    let format = match format_of(cfg)? {
+        InputFormat::Utf8 => WireFormat::Utf8,
+        InputFormat::Binary => WireFormat::Binary,
+    };
+    let job = Job { schema: Schema::CRITEO, modulus: modulus_of(cfg)?, format };
+    let chunk = cfg.get_usize("chunk", 1 << 20)?;
+    let run = net::run_leader(addr, job, &raw, chunk)?;
+    println!(
+        "preprocessed {} rows ({} vocab entries) in {} over TCP",
+        run.stats.rows,
+        run.stats.vocab_entries,
+        fmt_duration(run.wallclock)
+    );
+    Ok(())
+}
+
+fn cmd_train(cfg: &Config) -> Result<()> {
+    let raw = read_input(cfg)?;
+    let exp = Experiment::new(modulus_of(cfg)?, format_of(cfg)?);
+    let backend = backend_of(cfg)?;
+    let summary = coordinator::run_backend(&backend, &exp, &raw)?;
+    println!(
+        "preprocessed {} rows via {} in {}",
+        summary.rows,
+        summary.backend,
+        fmt_tagged(summary.e2e, summary.tag)
+    );
+
+    let artifacts = Path::new(cfg.get_or("artifacts", "artifacts"));
+    let rt = piper::runtime::Runtime::new(artifacts)?;
+    let mut trainer = piper::train::Trainer::new(&rt, artifacts)?;
+    let steps = cfg.get_usize("steps", 100)?;
+    let losses = piper::train::train_loop(&mut trainer, &summary.processed, steps)?;
+    for (i, chunk) in losses.chunks(10).enumerate() {
+        let avg = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        println!("steps {:>4}-{:<4} mean loss {avg:.4}", i * 10, i * 10 + chunk.len() - 1);
+    }
+    println!(
+        "final loss {:.4} (first {:.4})",
+        losses.last().unwrap(),
+        losses.first().unwrap()
+    );
+    Ok(())
+}

@@ -1,0 +1,251 @@
+//! Multi-accelerator deployment: shard the dataset across several PIPER
+//! workers (paper §3.4.2 — "the disaggregated architecture offers the
+//! flexibility to scale the number of FPGAs ... individually"; §4.4.6 —
+//! "using multiple FPGAs can further improve the overall performance").
+//!
+//! The interesting part is the *stateful* operator: each worker builds
+//! sub-vocabularies over its row shard in pass 1, the leader gathers and
+//! merges them in shard order (deterministically equivalent to a single
+//! sequential scan, the same argument as for CPU threads), broadcasts
+//! the merged vocabularies, and pass 2 runs sharded with the global
+//! state. Exactly one synchronization point — the same merge the CPU
+//! baseline pays per-thread, paid once per worker here.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::data::row::ProcessedColumns;
+use crate::data::Schema;
+use crate::Result;
+
+use super::protocol::{self, Job, RunStats, Tag};
+
+/// Result of a cluster run.
+#[derive(Debug)]
+pub struct ClusterRun {
+    pub processed: ProcessedColumns,
+    pub stats: RunStats,
+    pub workers: usize,
+    pub wallclock: Duration,
+}
+
+/// One leader-side worker connection.
+struct WorkerConn {
+    writer: std::io::BufWriter<TcpStream>,
+    reader: std::io::BufReader<TcpStream>,
+    shard: std::ops::Range<usize>,
+}
+
+/// Split a raw buffer into `n` contiguous shards on row boundaries.
+pub fn shard_rows(raw: &[u8], schema: Schema, binary: bool, n: usize) -> Vec<std::ops::Range<usize>> {
+    let n = n.max(1);
+    if binary {
+        let rb = schema.binary_row_bytes();
+        let rows = raw.len() / rb;
+        crate::cpu_baseline::pipeline::partition_rows(rows, n)
+            .into_iter()
+            .map(|r| r.start * rb..r.end * rb)
+            .collect()
+    } else {
+        // cut at the newline nearest each equal byte split
+        let mut cuts = vec![0usize];
+        for i in 1..n {
+            let target = raw.len() * i / n;
+            let cut = raw[target..]
+                .iter()
+                .position(|&b| b == b'\n')
+                .map(|p| target + p + 1)
+                .unwrap_or(raw.len());
+            cuts.push(cut.max(*cuts.last().unwrap()));
+        }
+        cuts.push(raw.len());
+        (0..n).map(|i| cuts[i]..cuts[i + 1]).collect()
+    }
+}
+
+/// Run a sharded two-pass job against `addrs` workers.
+pub fn run_cluster(
+    addrs: &[String],
+    job: Job,
+    raw: &[u8],
+    chunk_size: usize,
+) -> Result<ClusterRun> {
+    anyhow::ensure!(!addrs.is_empty(), "cluster needs at least one worker");
+    let start = Instant::now();
+    let binary = matches!(job.format, super::stream::WireFormat::Binary);
+    let shards = shard_rows(raw, job.schema, binary, addrs.len());
+
+    // connect + send job + pass 1 per worker
+    let mut conns = Vec::with_capacity(addrs.len());
+    for (addr, shard) in addrs.iter().zip(shards) {
+        let stream = TcpStream::connect(addr.as_str())?;
+        stream.set_nodelay(true)?;
+        let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream.try_clone()?);
+        let reader = std::io::BufReader::with_capacity(1 << 20, stream);
+        protocol::write_frame(&mut writer, Tag::Job, &job.encode())?;
+        for chunk in raw[shard.clone()].chunks(chunk_size.max(1)) {
+            protocol::write_frame(&mut writer, Tag::Pass1Chunk, chunk)?;
+        }
+        protocol::write_frame(&mut writer, Tag::Pass1End, &[])?;
+        protocol::write_frame(&mut writer, Tag::VocabSync, &[])?;
+        use std::io::Write as _;
+        writer.flush()?;
+        conns.push(WorkerConn { writer, reader, shard });
+    }
+
+    // gather sub-vocabularies, merge in shard order
+    let mut merged: Vec<crate::ops::HashVocab> =
+        (0..job.schema.num_sparse).map(|_| Default::default()).collect();
+    for conn in conns.iter_mut() {
+        let (tag, payload) = protocol::read_frame(&mut conn.reader)?;
+        anyhow::ensure!(tag == Tag::VocabDump, "expected VocabDump, got {tag:?}");
+        let cols = protocol::unpack_vocabs(&payload)?;
+        anyhow::ensure!(cols.len() == merged.len(), "worker vocab column mismatch");
+        use crate::ops::Vocab as _;
+        for (dst, keys) in merged.iter_mut().zip(cols) {
+            for k in keys {
+                dst.observe(k);
+            }
+        }
+    }
+    let global: Vec<Vec<u32>> = merged
+        .iter()
+        .map(|v| v.iter_ordered().map(|(k, _)| k).collect())
+        .collect();
+    let vocab_entries: usize = global.iter().map(|c| c.len()).sum();
+
+    // broadcast merged vocabularies + pass 2, collecting results per
+    // worker on a reader thread (streams overlap).
+    let mut collectors = Vec::new();
+    for mut conn in conns {
+        let packed = protocol::pack_vocabs(&global);
+        protocol::write_frame(&mut conn.writer, Tag::VocabLoad, &packed)?;
+        let schema = job.schema;
+        let reader_handle = std::thread::spawn(move || -> Result<ProcessedColumns> {
+            let mut cols = ProcessedColumns::with_schema(schema);
+            loop {
+                let (tag, payload) = protocol::read_frame(&mut conn.reader)?;
+                match tag {
+                    Tag::ResultChunk => {
+                        for row in protocol::unpack_rows(&payload, schema)? {
+                            cols.push_row(&row);
+                        }
+                    }
+                    Tag::ResultEnd => return Ok(cols),
+                    other => anyhow::bail!("unexpected {other:?} in pass 2"),
+                }
+            }
+        });
+        // keep writing on this thread
+        for chunk in raw[conn.shard.clone()].chunks(chunk_size.max(1)) {
+            protocol::write_frame(&mut conn.writer, Tag::Pass2Chunk, chunk)?;
+        }
+        protocol::write_frame(&mut conn.writer, Tag::Pass2End, &[])?;
+        use std::io::Write as _;
+        conn.writer.flush()?;
+        collectors.push(reader_handle);
+    }
+
+    // concatenate shard outputs in order (the CFR step)
+    let mut processed = ProcessedColumns::with_schema(job.schema);
+    for h in collectors {
+        let part = h.join().map_err(|_| anyhow::anyhow!("collector panicked"))??;
+        processed.extend_from(&part);
+    }
+    let rows = processed.num_rows() as u64;
+    Ok(ClusterRun {
+        processed,
+        stats: RunStats { rows, vocab_entries: vocab_entries as u64 },
+        workers: addrs.len(),
+        wallclock: start.elapsed(),
+    })
+}
+
+/// Spawn `n` loopback workers and run a sharded job against them.
+pub fn run_cluster_loopback(n: usize, job: Job, raw: &[u8], chunk_size: usize) -> Result<ClusterRun> {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n.max(1) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(listener.local_addr()?.to_string());
+        handles.push(std::thread::spawn(move || super::worker::serve_one(&listener)));
+    }
+    let run = run_cluster(&addrs, job, raw, chunk_size)?;
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    }
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{binary, synth::SynthConfig, utf8, SynthDataset};
+    use crate::net::stream::WireFormat;
+    use crate::ops::Modulus;
+
+    fn reference(ds: &SynthDataset, m: Modulus) -> ProcessedColumns {
+        let raw = utf8::encode_dataset(ds);
+        crate::cpu_baseline::run(
+            &crate::cpu_baseline::BaselineConfig::new(
+                crate::cpu_baseline::ConfigKind::I,
+                2,
+                m,
+            ),
+            &raw,
+        )
+        .processed
+    }
+
+    #[test]
+    fn cluster_sizes_agree_with_single_scan() {
+        let ds = SynthDataset::generate(SynthConfig::small(240));
+        let m = Modulus::new(997);
+        let raw = utf8::encode_dataset(&ds);
+        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+        let want = reference(&ds, m);
+        for n in [1usize, 2, 4] {
+            let run = run_cluster_loopback(n, job, &raw, 777).unwrap();
+            assert_eq!(run.workers, n);
+            assert_eq!(run.processed, want, "{n} workers must equal sequential scan");
+        }
+    }
+
+    #[test]
+    fn cluster_binary_format() {
+        let ds = SynthDataset::generate(SynthConfig::small(150));
+        let m = Modulus::new(499);
+        let raw = binary::encode_dataset(&ds);
+        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Binary };
+        let run = run_cluster_loopback(3, job, &raw, 512).unwrap();
+        assert_eq!(run.stats.rows, 150);
+        assert_eq!(run.processed, reference(&ds, m));
+    }
+
+    #[test]
+    fn shards_cover_and_respect_rows() {
+        let ds = SynthDataset::generate(SynthConfig::small(101));
+        let raw = utf8::encode_dataset(&ds);
+        for n in [1usize, 2, 5, 8] {
+            let shards = shard_rows(&raw, ds.schema(), false, n);
+            assert_eq!(shards.len(), n);
+            assert_eq!(shards[0].start, 0);
+            assert_eq!(shards.last().unwrap().end, raw.len());
+            for w in shards.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+                // every shard ends on a row boundary
+                if w[0].end > 0 {
+                    assert_eq!(raw[w[0].end - 1], b'\n');
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vocab_frame_roundtrip() {
+        let cols = vec![vec![5u32, 1, 9], vec![], vec![42]];
+        let packed = protocol::pack_vocabs(&cols);
+        assert_eq!(protocol::unpack_vocabs(&packed).unwrap(), cols);
+        assert!(protocol::unpack_vocabs(&packed[..packed.len() - 1]).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! The leader: streams the dataset to a PIPER worker twice (the two
+//! loops) and collects the preprocessed rows as they come back.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::data::row::ProcessedColumns;
+use crate::Result;
+
+use super::protocol::{self, Job, RunStats, Tag};
+#[cfg(test)]
+use super::stream::WireFormat;
+
+/// Result of a leader-side run.
+#[derive(Debug)]
+pub struct LeaderRun {
+    pub processed: ProcessedColumns,
+    pub stats: RunStats,
+    /// Measured wallclock of the whole exchange on loopback.
+    pub wallclock: Duration,
+}
+
+/// Stream `raw` (twice) to the worker at `addr` and collect results.
+///
+/// Pass 2 reads interleaved with writes: a reader thread drains
+/// ResultChunks while the main thread keeps sending, so the socket can't
+/// deadlock on full buffers and the measured time reflects true
+/// streaming overlap.
+pub fn run_leader(
+    addr: &str,
+    job: Job,
+    raw: &[u8],
+    chunk_size: usize,
+) -> Result<LeaderRun> {
+    let start = Instant::now();
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream.try_clone()?);
+
+    protocol::write_frame(&mut writer, Tag::Job, &job.encode())?;
+    for chunk in raw.chunks(chunk_size.max(1)) {
+        protocol::write_frame(&mut writer, Tag::Pass1Chunk, chunk)?;
+    }
+    protocol::write_frame(&mut writer, Tag::Pass1End, &[])?;
+
+    // Reader thread: collect results while pass 2 streams out.
+    let schema = job.schema;
+    let reader_stream = stream.try_clone()?;
+    let collector = std::thread::spawn(move || -> Result<(ProcessedColumns, RunStats)> {
+        let mut reader = std::io::BufReader::with_capacity(1 << 20, reader_stream);
+        let mut cols = ProcessedColumns::with_schema(schema);
+        loop {
+            let (tag, payload) = protocol::read_frame(&mut reader)?;
+            match tag {
+                Tag::ResultChunk => {
+                    for row in protocol::unpack_rows(&payload, schema)? {
+                        cols.push_row(&row);
+                    }
+                }
+                Tag::ResultEnd => {
+                    let stats = RunStats::decode(&payload)?;
+                    return Ok((cols, stats));
+                }
+                other => anyhow::bail!("unexpected frame {other:?} from worker"),
+            }
+        }
+    });
+
+    for chunk in raw.chunks(chunk_size.max(1)) {
+        protocol::write_frame(&mut writer, Tag::Pass2Chunk, chunk)?;
+    }
+    protocol::write_frame(&mut writer, Tag::Pass2End, &[])?;
+    use std::io::Write as _;
+    writer.flush()?;
+
+    let (processed, stats) = collector
+        .join()
+        .map_err(|_| anyhow::anyhow!("collector thread panicked"))??;
+    Ok(LeaderRun { processed, stats, wallclock: start.elapsed() })
+}
+
+/// Spawn a worker on an ephemeral loopback port, run the leader against
+/// it, and return the result — the one-call path used by examples and
+/// tests.
+pub fn run_loopback(job: Job, raw: &[u8], chunk_size: usize) -> Result<LeaderRun> {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let worker = std::thread::spawn(move || super::worker::serve_one(&listener));
+    let run = run_leader(&addr.to_string(), job, raw, chunk_size)?;
+    worker
+        .join()
+        .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{binary, synth::SynthConfig, utf8, SynthDataset};
+    use crate::ops::Modulus;
+
+    #[test]
+    fn loopback_utf8_matches_cpu_baseline() {
+        let ds = SynthDataset::generate(SynthConfig::small(200));
+        let m = Modulus::new(997);
+        let raw = utf8::encode_dataset(&ds);
+        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+        let run = run_loopback(job, &raw, 4096).unwrap();
+
+        let baseline = crate::cpu_baseline::run(
+            &crate::cpu_baseline::BaselineConfig::new(
+                crate::cpu_baseline::ConfigKind::I,
+                2,
+                m,
+            ),
+            &raw,
+        );
+        assert_eq!(run.processed, baseline.processed);
+        assert_eq!(run.stats.rows, 200);
+    }
+
+    #[test]
+    fn loopback_binary_works() {
+        let ds = SynthDataset::generate(SynthConfig::small(120));
+        let m = Modulus::new(101);
+        let raw = binary::encode_dataset(&ds);
+        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Binary };
+        let run = run_loopback(job, &raw, 333).unwrap();
+        assert_eq!(run.processed.num_rows(), 120);
+        assert!(run.stats.vocab_entries > 0);
+    }
+
+    #[test]
+    fn tiny_chunks_stress_framing() {
+        let ds = SynthDataset::generate(SynthConfig::small(30));
+        let m = Modulus::new(53);
+        let raw = utf8::encode_dataset(&ds);
+        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+        let a = run_loopback(job, &raw, 7).unwrap();
+        let b = run_loopback(job, &raw, 64 * 1024).unwrap();
+        assert_eq!(a.processed, b.processed);
+    }
+}

@@ -1,0 +1,275 @@
+//! Wire protocol: length-prefixed tagged frames over TCP.
+//!
+//! ```text
+//! frame := tag:u8 len:u64le payload[len]
+//! ```
+//!
+//! Leader → worker: `Job`, `Pass1Chunk`*, `Pass1End`, `Pass2Chunk`*,
+//! `Pass2End`. Worker → leader: `ResultChunk`* (packed processed rows),
+//! `ResultEnd` (stats). Results for a pass-2 chunk are streamed back as
+//! soon as they are produced — the overlap that makes network mode win.
+
+use crate::data::row::ProcessedRow;
+use crate::data::Schema;
+use crate::ops::Modulus;
+use crate::Result;
+use std::io::{Read, Write};
+
+use super::stream::WireFormat;
+
+/// Frame tags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Tag {
+    Job = 1,
+    Pass1Chunk = 2,
+    Pass1End = 3,
+    Pass2Chunk = 4,
+    Pass2End = 5,
+    ResultChunk = 6,
+    ResultEnd = 7,
+    /// Leader → worker (cluster mode, after Pass1End): request the
+    /// worker's sub-vocabularies for the global merge.
+    VocabSync = 8,
+    /// Worker → leader: sub-vocabulary keys in appearance order.
+    VocabDump = 9,
+    /// Leader → worker: the merged global vocabularies to apply in pass 2.
+    VocabLoad = 10,
+}
+
+impl Tag {
+    pub fn from_u8(v: u8) -> Result<Tag> {
+        Ok(match v {
+            1 => Tag::Job,
+            2 => Tag::Pass1Chunk,
+            3 => Tag::Pass1End,
+            4 => Tag::Pass2Chunk,
+            5 => Tag::Pass2End,
+            6 => Tag::ResultChunk,
+            7 => Tag::ResultEnd,
+            8 => Tag::VocabSync,
+            9 => Tag::VocabDump,
+            10 => Tag::VocabLoad,
+            other => anyhow::bail!("unknown frame tag {other}"),
+        })
+    }
+}
+
+/// Encode per-column vocabulary keys: `ncols:u32 (len:u32 keys:u32*)*`.
+pub fn pack_vocabs(cols: &[Vec<u32>]) -> Vec<u8> {
+    let total: usize = cols.iter().map(|c| c.len()).sum();
+    let mut out = Vec::with_capacity(4 + cols.len() * 4 + total * 4);
+    out.extend_from_slice(&(cols.len() as u32).to_le_bytes());
+    for col in cols {
+        out.extend_from_slice(&(col.len() as u32).to_le_bytes());
+        for &k in col {
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode [`pack_vocabs`] output.
+pub fn unpack_vocabs(buf: &[u8]) -> Result<Vec<Vec<u32>>> {
+    let rd_u32 = |at: usize| -> Result<u32> {
+        let s = buf
+            .get(at..at + 4)
+            .ok_or_else(|| anyhow::anyhow!("vocab frame truncated at {at}"))?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    };
+    let ncols = rd_u32(0)? as usize;
+    anyhow::ensure!(ncols <= 4096, "unreasonable column count {ncols}");
+    let mut cols = Vec::with_capacity(ncols);
+    let mut at = 4;
+    for _ in 0..ncols {
+        let len = rd_u32(at)? as usize;
+        at += 4;
+        let mut col = Vec::with_capacity(len);
+        for _ in 0..len {
+            col.push(rd_u32(at)?);
+            at += 4;
+        }
+        cols.push(col);
+    }
+    anyhow::ensure!(at == buf.len(), "trailing bytes in vocab frame");
+    Ok(cols)
+}
+
+/// Write one frame.
+pub fn write_frame<W: Write>(w: &mut W, tag: Tag, payload: &[u8]) -> Result<()> {
+    w.write_all(&[tag as u8])?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame. Payload size is capped to keep a corrupt peer from
+/// forcing a huge allocation.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(Tag, Vec<u8>)> {
+    const MAX_FRAME: u64 = 1 << 30;
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let len = u64::from_le_bytes(len);
+    anyhow::ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds cap");
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok((Tag::from_u8(tag[0])?, payload))
+}
+
+/// Job header: schema, modulus range, wire format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Job {
+    pub schema: Schema,
+    pub modulus: Modulus,
+    pub format: WireFormat,
+}
+
+impl Job {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(13);
+        out.extend_from_slice(&(self.schema.num_dense as u32).to_le_bytes());
+        out.extend_from_slice(&(self.schema.num_sparse as u32).to_le_bytes());
+        out.extend_from_slice(&self.modulus.range.to_le_bytes());
+        out.push(match self.format {
+            WireFormat::Utf8 => 0,
+            WireFormat::Binary => 1,
+        });
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Job> {
+        anyhow::ensure!(buf.len() == 13, "job frame must be 13 bytes, got {}", buf.len());
+        let rd = |i: usize| u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]]);
+        let format = match buf[12] {
+            0 => WireFormat::Utf8,
+            1 => WireFormat::Binary,
+            v => anyhow::bail!("bad wire format {v}"),
+        };
+        Ok(Job {
+            schema: Schema::new(rd(0) as usize, rd(4) as usize),
+            modulus: Modulus::new(rd(8)),
+            format,
+        })
+    }
+}
+
+/// Pack processed rows for a ResultChunk: per row
+/// `label:i32 dense...:f32 sparse...:u32`, all little-endian.
+pub fn pack_rows(rows: &[ProcessedRow], schema: Schema) -> Vec<u8> {
+    let mut out = Vec::with_capacity(rows.len() * schema.binary_row_bytes());
+    for r in rows {
+        out.extend_from_slice(&r.label.to_le_bytes());
+        for &d in &r.dense {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        for &s in &r.sparse {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Unpack a ResultChunk.
+pub fn unpack_rows(buf: &[u8], schema: Schema) -> Result<Vec<ProcessedRow>> {
+    let rb = schema.binary_row_bytes();
+    anyhow::ensure!(buf.len() % rb == 0, "result chunk misaligned");
+    let mut rows = Vec::with_capacity(buf.len() / rb);
+    for chunk in buf.chunks_exact(rb) {
+        let w = |i: usize| [chunk[4 * i], chunk[4 * i + 1], chunk[4 * i + 2], chunk[4 * i + 3]];
+        let label = i32::from_le_bytes(w(0));
+        let dense = (0..schema.num_dense)
+            .map(|c| f32::from_le_bytes(w(1 + c)))
+            .collect();
+        let sparse = (0..schema.num_sparse)
+            .map(|c| u32::from_le_bytes(w(1 + schema.num_dense + c)))
+            .collect();
+        rows.push(ProcessedRow { label, dense, sparse });
+    }
+    Ok(rows)
+}
+
+/// Stats returned in ResultEnd.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunStats {
+    pub rows: u64,
+    pub vocab_entries: u64,
+}
+
+impl RunStats {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.extend_from_slice(&self.rows.to_le_bytes());
+        out.extend_from_slice(&self.vocab_entries.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<RunStats> {
+        anyhow::ensure!(buf.len() == 16, "stats frame must be 16 bytes");
+        let rd = |i: usize| {
+            u64::from_le_bytes([
+                buf[i], buf[i + 1], buf[i + 2], buf[i + 3],
+                buf[i + 4], buf[i + 5], buf[i + 6], buf[i + 7],
+            ])
+        };
+        Ok(RunStats { rows: rd(0), vocab_entries: rd(8) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Tag::Pass1Chunk, b"hello").unwrap();
+        write_frame(&mut buf, Tag::Pass1End, b"").unwrap();
+        let mut r = &buf[..];
+        let (t1, p1) = read_frame(&mut r).unwrap();
+        assert_eq!((t1, p1.as_slice()), (Tag::Pass1Chunk, &b"hello"[..]));
+        let (t2, p2) = read_frame(&mut r).unwrap();
+        assert_eq!((t2, p2.len()), (Tag::Pass1End, 0));
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        let buf = [99u8, 0, 0, 0, 0, 0, 0, 0, 0];
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn job_roundtrip() {
+        let job = Job {
+            schema: Schema::new(13, 26),
+            modulus: Modulus::VOCAB_5K,
+            format: WireFormat::Binary,
+        };
+        assert_eq!(Job::decode(&job.encode()).unwrap(), job);
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let schema = Schema::new(2, 3);
+        let rows = vec![
+            ProcessedRow { label: 1, dense: vec![0.5, -2.0], sparse: vec![1, 2, 3] },
+            ProcessedRow { label: 0, dense: vec![1.5, 9.0], sparse: vec![4, 5, 6] },
+        ];
+        let packed = pack_rows(&rows, schema);
+        assert_eq!(unpack_rows(&packed, schema).unwrap(), rows);
+    }
+
+    #[test]
+    fn stats_roundtrip() {
+        let s = RunStats { rows: 123, vocab_entries: 456 };
+        assert_eq!(RunStats::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn frame_cap_enforced() {
+        let mut buf = vec![Tag::Job as u8];
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+}

@@ -1,0 +1,329 @@
+//! Streaming two-pass preprocessor — the worker-side core, independent of
+//! the transport so it can be tested without sockets.
+
+use crate::data::row::{ProcessedColumns, ProcessedRow};
+use crate::data::{DecodedRow, Schema};
+use crate::decode::RowAssembler;
+use crate::ops::{log1p, HashVocab, Modulus, Vocab};
+use crate::Result;
+
+/// Raw wire format of the incoming stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    Utf8,
+    Binary,
+}
+
+/// Incremental decoder that survives arbitrary chunk boundaries.
+#[derive(Debug)]
+enum ChunkDecoder {
+    Utf8(RowAssembler),
+    Binary { schema: Schema, partial: Vec<u8> },
+}
+
+impl ChunkDecoder {
+    fn new(format: WireFormat, schema: Schema) -> Self {
+        match format {
+            WireFormat::Utf8 => ChunkDecoder::Utf8(RowAssembler::new(schema)),
+            WireFormat::Binary => ChunkDecoder::Binary { schema, partial: Vec::new() },
+        }
+    }
+
+    /// Feed a chunk, returning all rows completed by it.
+    fn feed(&mut self, chunk: &[u8]) -> Result<Vec<DecodedRow>> {
+        match self {
+            ChunkDecoder::Utf8(asm) => {
+                asm.feed_bytes(chunk);
+                Ok(asm.take_rows())
+            }
+            ChunkDecoder::Binary { schema, partial } => {
+                partial.extend_from_slice(chunk);
+                let rb = schema.binary_row_bytes();
+                let full = partial.len() / rb * rb;
+                let rows = crate::data::binary::decode_bytes(&partial[..full], *schema)?;
+                partial.drain(..full);
+                Ok(rows)
+            }
+        }
+    }
+
+    /// Finish the pass; any trailing partial row is completed (UTF-8
+    /// without final newline) or rejected (truncated binary row).
+    fn finish(self) -> Result<Vec<DecodedRow>> {
+        match self {
+            ChunkDecoder::Utf8(asm) => Ok(asm.finish()),
+            ChunkDecoder::Binary { partial, .. } => {
+                anyhow::ensure!(
+                    partial.is_empty(),
+                    "binary stream ended mid-row ({} stray bytes)",
+                    partial.len()
+                );
+                Ok(Vec::new())
+            }
+        }
+    }
+}
+
+/// Phase of the two-pass protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Pass1,
+    BetweenPasses,
+    Pass2,
+    Done,
+}
+
+/// The streaming preprocessor: GenVocab during pass 1, ApplyVocab +
+/// dense finishing during pass 2. Memory high-water is the vocabularies
+/// plus one chunk — never the dataset.
+#[derive(Debug)]
+pub struct StreamingPreprocessor {
+    schema: Schema,
+    modulus: Modulus,
+    format: WireFormat,
+    vocabs: Vec<HashVocab>,
+    decoder: ChunkDecoder,
+    phase: Phase,
+    rows_pass1: usize,
+    rows_pass2: usize,
+}
+
+impl StreamingPreprocessor {
+    pub fn new(schema: Schema, modulus: Modulus, format: WireFormat) -> Self {
+        StreamingPreprocessor {
+            schema,
+            modulus,
+            format,
+            vocabs: (0..schema.num_sparse).map(|_| HashVocab::new()).collect(),
+            decoder: ChunkDecoder::new(format, schema),
+            phase: Phase::Pass1,
+            rows_pass1: 0,
+            rows_pass2: 0,
+        }
+    }
+
+    /// Pass-1 chunk: observe sparse values into the vocabularies.
+    pub fn pass1_chunk(&mut self, chunk: &[u8]) -> Result<()> {
+        anyhow::ensure!(self.phase == Phase::Pass1, "pass1_chunk in phase {:?}", self.phase);
+        let rows = self.decoder.feed(chunk)?;
+        self.observe(&rows);
+        Ok(())
+    }
+
+    /// End of pass 1: flush the decoder, reset it for pass 2.
+    pub fn pass1_end(&mut self) -> Result<()> {
+        anyhow::ensure!(self.phase == Phase::Pass1, "pass1_end in phase {:?}", self.phase);
+        let decoder = std::mem::replace(
+            &mut self.decoder,
+            ChunkDecoder::new(self.format, self.schema),
+        );
+        let rows = decoder.finish()?;
+        self.observe(&rows);
+        self.phase = Phase::BetweenPasses;
+        Ok(())
+    }
+
+    fn observe(&mut self, rows: &[DecodedRow]) {
+        for row in rows {
+            for (c, &s) in row.sparse.iter().enumerate() {
+                self.vocabs[c].observe(self.modulus.apply(s));
+            }
+        }
+        self.rows_pass1 += rows.len();
+    }
+
+    /// Pass-2 chunk: returns the preprocessed rows it completes.
+    pub fn pass2_chunk(&mut self, chunk: &[u8]) -> Result<Vec<ProcessedRow>> {
+        if self.phase == Phase::BetweenPasses {
+            self.phase = Phase::Pass2;
+        }
+        anyhow::ensure!(self.phase == Phase::Pass2, "pass2_chunk in phase {:?}", self.phase);
+        let rows = self.decoder.feed(chunk)?;
+        Ok(self.apply(&rows))
+    }
+
+    /// End of pass 2: flush, return trailing rows.
+    pub fn pass2_end(&mut self) -> Result<Vec<ProcessedRow>> {
+        if self.phase == Phase::BetweenPasses {
+            self.phase = Phase::Pass2; // empty pass 2 is legal
+        }
+        anyhow::ensure!(self.phase == Phase::Pass2, "pass2_end in phase {:?}", self.phase);
+        let decoder = std::mem::replace(
+            &mut self.decoder,
+            ChunkDecoder::new(self.format, self.schema),
+        );
+        let rows = decoder.finish()?;
+        let out = self.apply(&rows);
+        self.phase = Phase::Done;
+        Ok(out)
+    }
+
+    fn apply(&mut self, rows: &[DecodedRow]) -> Vec<ProcessedRow> {
+        let mut out = Vec::with_capacity(rows.len());
+        for row in rows {
+            let dense = row.dense.iter().map(|&d| log1p(d)).collect();
+            let sparse = row
+                .sparse
+                .iter()
+                .enumerate()
+                .map(|(c, &s)| self.vocabs[c].apply(self.modulus.apply(s)).unwrap_or(0))
+                .collect();
+            out.push(ProcessedRow { label: row.label, dense, sparse });
+        }
+        self.rows_pass2 += rows.len();
+        out
+    }
+
+    pub fn vocab_entries(&self) -> usize {
+        self.vocabs.iter().map(|v| v.len()).sum()
+    }
+
+    /// Export the per-column vocabularies as keys in appearance order —
+    /// the payload a cluster worker ships to the leader for the global
+    /// merge (multi-accelerator deployment, paper §3.4.2/§4.4.6).
+    pub fn export_vocabs(&self) -> Vec<Vec<u32>> {
+        self.vocabs
+            .iter()
+            .map(|v| v.iter_ordered().map(|(k, _)| k).collect())
+            .collect()
+    }
+
+    /// Replace the vocabularies with merged global ones (keys in global
+    /// appearance order). Called between the passes on cluster workers.
+    pub fn import_vocabs(&mut self, columns: Vec<Vec<u32>>) -> Result<()> {
+        anyhow::ensure!(
+            columns.len() == self.schema.num_sparse,
+            "vocab import has {} columns, schema wants {}",
+            columns.len(),
+            self.schema.num_sparse
+        );
+        anyhow::ensure!(
+            self.phase == Phase::BetweenPasses,
+            "vocab import only between passes (phase {:?})",
+            self.phase
+        );
+        self.vocabs = columns
+            .into_iter()
+            .map(|keys| {
+                let mut v = HashVocab::new();
+                for k in keys {
+                    v.observe(k);
+                }
+                v
+            })
+            .collect();
+        Ok(())
+    }
+
+    pub fn rows_seen(&self) -> (usize, usize) {
+        (self.rows_pass1, self.rows_pass2)
+    }
+}
+
+/// Convenience: run both passes over an in-memory buffer with a given
+/// chunk size, collecting columns (used by tests and the leader's
+/// loopback fallback).
+pub fn preprocess_buffered(
+    schema: Schema,
+    modulus: Modulus,
+    format: WireFormat,
+    raw: &[u8],
+    chunk_size: usize,
+) -> Result<ProcessedColumns> {
+    let mut sp = StreamingPreprocessor::new(schema, modulus, format);
+    for chunk in raw.chunks(chunk_size.max(1)) {
+        sp.pass1_chunk(chunk)?;
+    }
+    sp.pass1_end()?;
+    let mut cols = ProcessedColumns::with_schema(schema);
+    for chunk in raw.chunks(chunk_size.max(1)) {
+        for row in sp.pass2_chunk(chunk)? {
+            cols.push_row(&row);
+        }
+    }
+    for row in sp.pass2_end()? {
+        cols.push_row(&row);
+    }
+    Ok(cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{binary, synth::SynthConfig, utf8, SynthDataset};
+
+    #[test]
+    fn streaming_matches_batch_for_all_chunk_sizes() {
+        let ds = SynthDataset::generate(SynthConfig::small(200));
+        let m = Modulus::new(997);
+        let raw = utf8::encode_dataset(&ds);
+
+        let reference = crate::cpu_baseline::run(
+            &crate::cpu_baseline::BaselineConfig::new(
+                crate::cpu_baseline::ConfigKind::I,
+                2,
+                m,
+            ),
+            &raw,
+        )
+        .processed;
+
+        for chunk in [1usize, 3, 17, 64, 1024, raw.len()] {
+            let got =
+                preprocess_buffered(ds.schema(), m, WireFormat::Utf8, &raw, chunk).unwrap();
+            assert_eq!(got, reference, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn binary_stream_matches_utf8_stream() {
+        let ds = SynthDataset::generate(SynthConfig::small(150));
+        let m = Modulus::new(499);
+        let u = preprocess_buffered(
+            ds.schema(), m, WireFormat::Utf8, &utf8::encode_dataset(&ds), 53,
+        ).unwrap();
+        let b = preprocess_buffered(
+            ds.schema(), m, WireFormat::Binary, &binary::encode_dataset(&ds), 53,
+        ).unwrap();
+        assert_eq!(u, b);
+    }
+
+    #[test]
+    fn phase_order_enforced() {
+        let ds = SynthDataset::generate(SynthConfig::small(5));
+        let raw = utf8::encode_dataset(&ds);
+        let mut sp =
+            StreamingPreprocessor::new(ds.schema(), Modulus::new(97), WireFormat::Utf8);
+        // pass2 before pass1_end is an error
+        assert!(sp.pass2_chunk(&raw).is_err());
+        sp.pass1_chunk(&raw).unwrap();
+        sp.pass1_end().unwrap();
+        assert!(sp.pass1_chunk(&raw).is_err(), "pass1 after end must fail");
+        sp.pass2_chunk(&raw).unwrap();
+        sp.pass2_end().unwrap();
+        assert!(sp.pass2_chunk(&raw).is_err(), "pass2 after done must fail");
+    }
+
+    #[test]
+    fn truncated_binary_is_rejected() {
+        let ds = SynthDataset::generate(SynthConfig::small(3));
+        let mut raw = binary::encode_dataset(&ds);
+        raw.pop(); // corrupt
+        let mut sp =
+            StreamingPreprocessor::new(ds.schema(), Modulus::new(97), WireFormat::Binary);
+        sp.pass1_chunk(&raw).unwrap();
+        assert!(sp.pass1_end().is_err());
+    }
+
+    #[test]
+    fn vocab_counts_reported() {
+        let ds = SynthDataset::generate(SynthConfig::small(100));
+        let raw = utf8::encode_dataset(&ds);
+        let mut sp =
+            StreamingPreprocessor::new(ds.schema(), Modulus::new(997), WireFormat::Utf8);
+        sp.pass1_chunk(&raw).unwrap();
+        sp.pass1_end().unwrap();
+        assert!(sp.vocab_entries() > 0);
+        assert_eq!(sp.rows_seen().0, 100);
+    }
+}

@@ -1,0 +1,81 @@
+//! The accelerator node: accept a job over TCP, run the streaming
+//! two-pass preprocessor, stream results back.
+
+use std::net::{TcpListener, TcpStream};
+
+use crate::Result;
+
+use super::protocol::{self, RunStats, Tag};
+use super::stream::StreamingPreprocessor;
+
+/// Serve a single connection on `listener` and return after the job
+/// completes. The caller loops for a long-lived service.
+pub fn serve_one(listener: &TcpListener) -> Result<RunStats> {
+    let (stream, _addr) = listener.accept()?;
+    handle(stream)
+}
+
+/// Serve `n` jobs then return (used by tests and the example binary).
+pub fn serve_n(listener: &TcpListener, n: usize) -> Result<()> {
+    for _ in 0..n {
+        serve_one(listener)?;
+    }
+    Ok(())
+}
+
+fn handle(stream: TcpStream) -> Result<RunStats> {
+    stream.set_nodelay(true)?;
+    let mut reader = std::io::BufReader::with_capacity(1 << 20, stream.try_clone()?);
+    let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream);
+
+    // First frame must be the job header.
+    let (tag, payload) = protocol::read_frame(&mut reader)?;
+    anyhow::ensure!(tag == Tag::Job, "expected Job frame, got {tag:?}");
+    let job = protocol::Job::decode(&payload)?;
+    let mut sp = StreamingPreprocessor::new(job.schema, job.modulus, job.format);
+
+    loop {
+        let (tag, payload) = protocol::read_frame(&mut reader)?;
+        match tag {
+            Tag::Pass1Chunk => sp.pass1_chunk(&payload)?,
+            Tag::Pass1End => sp.pass1_end()?,
+            Tag::VocabSync => {
+                // Cluster mode: ship sub-vocabularies for the global
+                // merge (the one synchronization point of the sharded
+                // deployment — paper §2.4's merge, moved to the leader).
+                let dump = protocol::pack_vocabs(&sp.export_vocabs());
+                protocol::write_frame(&mut writer, Tag::VocabDump, &dump)?;
+                use std::io::Write as _;
+                writer.flush()?;
+            }
+            Tag::VocabLoad => {
+                sp.import_vocabs(protocol::unpack_vocabs(&payload)?)?;
+            }
+            Tag::Pass2Chunk => {
+                // Stream results back immediately — the pipelined overlap
+                // of Fig. 7d.
+                let rows = sp.pass2_chunk(&payload)?;
+                if !rows.is_empty() {
+                    let packed = protocol::pack_rows(&rows, job.schema);
+                    protocol::write_frame(&mut writer, Tag::ResultChunk, &packed)?;
+                }
+            }
+            Tag::Pass2End => {
+                let rows = sp.pass2_end()?;
+                if !rows.is_empty() {
+                    let packed = protocol::pack_rows(&rows, job.schema);
+                    protocol::write_frame(&mut writer, Tag::ResultChunk, &packed)?;
+                }
+                let stats = RunStats {
+                    rows: sp.rows_seen().1 as u64,
+                    vocab_entries: sp.vocab_entries() as u64,
+                };
+                protocol::write_frame(&mut writer, Tag::ResultEnd, &stats.encode())?;
+                use std::io::Write as _;
+                writer.flush()?;
+                return Ok(stats);
+            }
+            other => anyhow::bail!("unexpected frame {other:?} from leader"),
+        }
+    }
+}

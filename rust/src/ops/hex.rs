@@ -1,0 +1,107 @@
+//! `Hex2Int` — hexadecimal string → integer (paper Table 1).
+//!
+//! In Meta's CPU pipeline this is a real per-value string conversion
+//! ("each thread has to convert them first to decimal values before
+//! processing", paper §2.3) and one of the costliest operators in
+//! Table 4 (655 s single-thread over the dataset). On PIPER it
+//! disappears: the decode PE already leaves a 32-bit value in the
+//! register, so "there is no need to transform from hexadecimal to
+//! decimal explicitly" (paper §3.1).
+//!
+//! The CPU baseline calls [`hex2int`] in its GV hot loop to reproduce
+//! that cost honestly.
+
+/// Parse an up-to-8-digit lowercase-hex field. Returns `None` on any
+/// illegal byte (caller treats as missing → 0).
+#[inline]
+pub fn hex2int(field: &[u8]) -> Option<u32> {
+    if field.is_empty() || field.len() > 8 {
+        return None;
+    }
+    let mut v: u32 = 0;
+    for &b in field {
+        let nibble = match b {
+            b'0'..=b'9' => b - b'0',
+            b'a'..=b'f' => b - b'a' + 10,
+            _ => return None,
+        };
+        v = (v << 4) | nibble as u32;
+    }
+    Some(v)
+}
+
+/// Parse a signed decimal field (dense features / label).
+#[inline]
+pub fn dec2int(field: &[u8]) -> Option<i32> {
+    if field.is_empty() {
+        return None;
+    }
+    let (neg, digits) = match field[0] {
+        b'-' => (true, &field[1..]),
+        _ => (false, field),
+    };
+    if digits.is_empty() {
+        return None;
+    }
+    let mut v: i64 = 0;
+    for &b in digits {
+        if !b.is_ascii_digit() {
+            return None;
+        }
+        v = v * 10 + (b - b'0') as i64;
+        if v > u32::MAX as i64 {
+            return None; // 32-bit register semantics
+        }
+    }
+    Some(if neg { -(v as i32) } else { v as i32 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_parses() {
+        assert_eq!(hex2int(b"0"), Some(0));
+        assert_eq!(hex2int(b"ff"), Some(255));
+        assert_eq!(hex2int(b"deadbeef"), Some(0xdeadbeef));
+        assert_eq!(hex2int(b"00000001"), Some(1));
+    }
+
+    #[test]
+    fn hex_rejects_bad() {
+        assert_eq!(hex2int(b""), None);
+        assert_eq!(hex2int(b"deadbeef0"), None); // 9 digits
+        assert_eq!(hex2int(b"xyz"), None);
+        assert_eq!(hex2int(b"DEAD"), None); // uppercase not in format
+    }
+
+    #[test]
+    fn dec_parses() {
+        assert_eq!(dec2int(b"0"), Some(0));
+        assert_eq!(dec2int(b"42"), Some(42));
+        assert_eq!(dec2int(b"-7"), Some(-7));
+    }
+
+    #[test]
+    fn dec_rejects_bad() {
+        assert_eq!(dec2int(b""), None);
+        assert_eq!(dec2int(b"-"), None);
+        assert_eq!(dec2int(b"1a"), None);
+        assert_eq!(dec2int(b"99999999999"), None);
+    }
+
+    #[test]
+    fn hex_matches_decoder_register_semantics() {
+        // The decode PE computes reg = (reg<<4)|nibble — same result.
+        use crate::data::Schema;
+        use crate::decode::ScalarDecoder;
+        let d = ScalarDecoder::new(Schema::new(0, 1));
+        for s in [&b"abc123"[..], b"0", b"ffffffff"] {
+            let mut line = b"0\t".to_vec();
+            line.extend_from_slice(s);
+            let row = d.decode_line(&line).unwrap();
+            assert_eq!(row.sparse[0], hex2int(s).unwrap());
+        }
+    }
+}

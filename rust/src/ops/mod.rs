@@ -1,0 +1,211 @@
+//! The operator library of paper Table 1.
+//!
+//! | op          | here                                   |
+//! |-------------|----------------------------------------|
+//! | Decode      | [`crate::decode`]                      |
+//! | FillMissing | merged into Decode (hardware default 0) + [`fill_missing`] |
+//! | Hex2Int     | [`hex::hex2int`] (string→u32; a no-op post-decode, paper §3.1) |
+//! | Modulus     | [`Modulus`]                            |
+//! | GenVocab    | [`vocab::Vocab::observe`] / loop-1 PEs  |
+//! | ApplyVocab  | [`vocab::Vocab::apply`] / loop-2 PEs    |
+//! | Neg2Zero    | [`neg2zero`]                           |
+//! | Logarithm   | [`log1p`]                              |
+//! | Concatenate | [`crate::data::row::ProcessedColumns::extend_from`] |
+//!
+//! All operators are value-level functions plus slice-level batch forms —
+//! the batch forms are what the CPU baseline's hot loops and the
+//! accelerator's PE models call.
+
+pub mod hex;
+pub mod spec;
+pub mod vocab;
+
+pub use spec::{OpSpec, PipelineSpec};
+pub use vocab::{DirectVocab, HashVocab, Vocab, VocabSet};
+
+/// `FillMissing`: absent value → 0 (paper Table 1 — the default for empty
+/// entries "irrespective of whether the feature is sparse or dense").
+#[inline]
+pub fn fill_missing<T: Default>(v: Option<T>) -> T {
+    v.unwrap_or_default()
+}
+
+/// `Neg2Zero`: the ternary operator `x < 0 ? 0 : x` (paper §3.2 — dense
+/// features have a non-negativity constraint).
+#[inline]
+pub fn neg2zero(x: i32) -> i32 {
+    if x < 0 {
+        0
+    } else {
+        x
+    }
+}
+
+/// Batch `Neg2Zero` over a dense column.
+pub fn neg2zero_slice(xs: &mut [i32]) {
+    for x in xs {
+        *x = neg2zero(*x);
+    }
+}
+
+/// `Logarithm`: `log(x + 1)` (paper Table 1). Input is post-`Neg2Zero`,
+/// i.e. non-negative; negative inputs are clamped first so the function
+/// is total. Computed as f32 `ln_1p` — exact to f32 rounding for the
+/// integer inputs this pipeline sees, and ~2× faster than the f64 path
+/// (EXPERIMENTS.md §Perf).
+#[inline]
+pub fn log1p(x: i32) -> f32 {
+    (neg2zero(x) as f32).ln_1p()
+}
+
+/// Batch dense finisher: `Neg2Zero` + `Logarithm` fused (the accelerator
+/// chains the two PEs; software fuses the loop). Small non-negative
+/// integers — the overwhelmingly common case for count features — hit an
+/// L1-resident lookup table instead of `ln_1p` (§Perf).
+pub fn dense_finish_slice(xs: &[i32], out: &mut Vec<f32>) {
+    out.reserve(xs.len());
+    for &x in xs {
+        let v = if (x as usize) < LOG_LUT_SIZE {
+            // non-negative and < LUT size (negatives wrap to huge usize)
+            log_lut()[x as usize]
+        } else {
+            log1p(x)
+        };
+        out.push(v);
+    }
+}
+
+const LOG_LUT_SIZE: usize = 4096;
+
+/// `log(x+1)` for x in 0..4096, built once (16 KiB, L1-resident).
+fn log_lut() -> &'static [f32; LOG_LUT_SIZE] {
+    use std::sync::OnceLock;
+    static LUT: OnceLock<[f32; LOG_LUT_SIZE]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0.0f32; LOG_LUT_SIZE];
+        for (i, v) in t.iter_mut().enumerate() {
+            *v = log1p(i as i32);
+        }
+        t
+    })
+}
+
+/// `Modulus`: positive modulus limiting a sparse feature to the embedding
+/// range (paper Table 1 — "sets the range of sparse features to limit the
+/// size ... of the embedding table").
+///
+/// Uses Lemire's fastmod (precomputed magic) instead of a hardware
+/// divide: the parse hot loop applies this 26× per row, and the
+/// division was a measurable fraction of GV (§Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Modulus {
+    pub range: u32,
+    magic: u64,
+}
+
+const fn fastmod_magic(range: u32) -> u64 {
+    if range == 1 {
+        0 // unused: x % 1 == 0, special-cased in apply()
+    } else {
+        (u64::MAX / range as u64) + 1
+    }
+}
+
+impl Modulus {
+    pub fn new(range: u32) -> Self {
+        assert!(range > 0, "modulus range must be positive");
+        Modulus { range, magic: fastmod_magic(range) }
+    }
+
+    /// The paper's two vocabulary regimes.
+    pub const VOCAB_5K: Modulus =
+        Modulus { range: 5_000, magic: fastmod_magic(5_000) };
+    pub const VOCAB_1M: Modulus =
+        Modulus { range: 1_000_000, magic: fastmod_magic(1_000_000) };
+
+    #[inline]
+    pub fn apply(&self, x: u32) -> u32 {
+        if self.range == 1 {
+            return 0; // magic overflows for d=1; trivially 0 anyway
+        }
+        let lowbits = self.magic.wrapping_mul(x as u64);
+        ((lowbits as u128 * self.range as u128) >> 64) as u32
+    }
+
+    /// Positive modulus of a *signed* value (Meta's software treats the
+    /// hash as signed; `((x % m) + m) % m` keeps the result in range).
+    #[inline]
+    pub fn apply_signed(&self, x: i64) -> u32 {
+        let m = self.range as i64;
+        (((x % m) + m) % m) as u32
+    }
+
+    /// Batch form over a sparse column.
+    pub fn apply_slice(&self, xs: &mut [u32]) {
+        for x in xs {
+            *x %= self.range;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_missing_defaults() {
+        assert_eq!(fill_missing::<i32>(None), 0);
+        assert_eq!(fill_missing(Some(7)), 7);
+    }
+
+    #[test]
+    fn neg2zero_ternary() {
+        assert_eq!(neg2zero(-5), 0);
+        assert_eq!(neg2zero(0), 0);
+        assert_eq!(neg2zero(5), 5);
+        assert_eq!(neg2zero(i32::MIN), 0);
+    }
+
+    #[test]
+    fn log1p_values() {
+        assert_eq!(log1p(0), 0.0);
+        assert!((log1p(1) - std::f32::consts::LN_2).abs() < 1e-6);
+        // negative input clamps to 0 first
+        assert_eq!(log1p(-10), 0.0);
+        // monotone
+        assert!(log1p(100) < log1p(101));
+    }
+
+    #[test]
+    fn modulus_limits_range() {
+        let m = Modulus::new(5000);
+        assert_eq!(m.apply(4999), 4999);
+        assert_eq!(m.apply(5000), 0);
+        assert_eq!(m.apply(123_456_789), 123_456_789 % 5000);
+    }
+
+    #[test]
+    fn modulus_signed_is_positive() {
+        let m = Modulus::new(100);
+        assert_eq!(m.apply_signed(-1), 99);
+        assert_eq!(m.apply_signed(-100), 0);
+        assert_eq!(m.apply_signed(250), 50);
+    }
+
+    #[test]
+    fn batch_forms_match_scalar() {
+        let mut xs = vec![5u32, 10_001, 4_999];
+        Modulus::new(5000).apply_slice(&mut xs);
+        assert_eq!(xs, vec![5, 5001 % 5000, 4999]);
+
+        let mut d = vec![-1, 0, 3];
+        neg2zero_slice(&mut d);
+        assert_eq!(d, vec![0, 0, 3]);
+
+        let mut out = Vec::new();
+        dense_finish_slice(&[-1, 0, 1], &mut out);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1], 0.0);
+        assert!((out[2] - std::f32::consts::LN_2).abs() < 1e-6);
+    }
+}

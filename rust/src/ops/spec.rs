@@ -1,0 +1,281 @@
+//! Runtime-configurable operator pipelines (paper §5: "it is feasible to
+//! dynamically configure the operators in the pipeline at runtime" — the
+//! modular-PE generalizability claim).
+//!
+//! A [`PipelineSpec`] is parsed from a compact string such as
+//!
+//! ```text
+//! decode | fillmissing | hex2int | modulus:5000 | genvocab | applyvocab
+//!        | neg2zero | logarithm | concatenate
+//! ```
+//!
+//! validated against the operator dependency rules (GenVocab needs
+//! Modulus; ApplyVocab needs GenVocab; Logarithm wants Neg2Zero), and
+//! executed over decoded rows by [`PipelineSpec::execute`] — the same
+//! column-wise semantics the fixed DLRM pipeline uses, with optional
+//! stages actually optional (e.g. Table 1 notes Logarithm "is optional").
+
+use crate::data::row::ProcessedColumns;
+use crate::data::{DecodedRow, Schema};
+use crate::ops::{neg2zero, DirectVocab, Modulus, Vocab};
+use crate::Result;
+
+/// One operator in a pipeline (Table 1 names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpSpec {
+    Decode,
+    FillMissing,
+    Hex2Int,
+    Modulus(u32),
+    GenVocab,
+    ApplyVocab,
+    Neg2Zero,
+    Logarithm,
+    Concatenate,
+}
+
+impl OpSpec {
+    pub fn parse(token: &str) -> Result<OpSpec> {
+        let t = token.trim().to_ascii_lowercase();
+        let (name, arg) = match t.split_once(':') {
+            Some((n, a)) => (n.trim().to_string(), Some(a.trim().to_string())),
+            None => (t, None),
+        };
+        let no_arg = |op: OpSpec| -> Result<OpSpec> {
+            anyhow::ensure!(arg.is_none(), "operator `{name}` takes no argument");
+            Ok(op)
+        };
+        match name.as_str() {
+            "decode" => no_arg(OpSpec::Decode),
+            "fillmissing" => no_arg(OpSpec::FillMissing),
+            "hex2int" => no_arg(OpSpec::Hex2Int),
+            "modulus" => {
+                let r: u32 = arg
+                    .as_deref()
+                    .ok_or_else(|| anyhow::anyhow!("modulus needs a range, e.g. modulus:5000"))?
+                    .replace('_', "")
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("modulus range: {e}"))?;
+                anyhow::ensure!(r > 0, "modulus range must be positive");
+                Ok(OpSpec::Modulus(r))
+            }
+            "genvocab" => no_arg(OpSpec::GenVocab),
+            "applyvocab" => no_arg(OpSpec::ApplyVocab),
+            "neg2zero" => no_arg(OpSpec::Neg2Zero),
+            "logarithm" | "log" => no_arg(OpSpec::Logarithm),
+            "concatenate" | "concat" => no_arg(OpSpec::Concatenate),
+            other => anyhow::bail!("unknown operator `{other}`"),
+        }
+    }
+}
+
+/// A validated operator pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSpec {
+    pub ops: Vec<OpSpec>,
+}
+
+impl PipelineSpec {
+    /// The paper's full DLRM pipeline at a given vocabulary size.
+    pub fn dlrm(vocab: u32) -> PipelineSpec {
+        PipelineSpec {
+            ops: vec![
+                OpSpec::Decode,
+                OpSpec::FillMissing,
+                OpSpec::Hex2Int,
+                OpSpec::Modulus(vocab),
+                OpSpec::GenVocab,
+                OpSpec::ApplyVocab,
+                OpSpec::Neg2Zero,
+                OpSpec::Logarithm,
+                OpSpec::Concatenate,
+            ],
+        }
+    }
+
+    /// Parse a `|`- or `,`-separated spec string and validate it.
+    pub fn parse(spec: &str) -> Result<PipelineSpec> {
+        let ops = spec
+            .split(|c| c == '|' || c == ',')
+            .filter(|s| !s.trim().is_empty())
+            .map(OpSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let p = PipelineSpec { ops };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Dependency rules between stateful/ordered operators.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.ops.is_empty(), "empty pipeline");
+        let pos = |op: fn(&OpSpec) -> bool| self.ops.iter().position(op);
+        let modulus = pos(|o| matches!(o, OpSpec::Modulus(_)));
+        let gen = pos(|o| matches!(o, OpSpec::GenVocab));
+        let apply = pos(|o| matches!(o, OpSpec::ApplyVocab));
+        let n2z = pos(|o| matches!(o, OpSpec::Neg2Zero));
+        let log = pos(|o| matches!(o, OpSpec::Logarithm));
+
+        if let Some(g) = gen {
+            let m = modulus
+                .ok_or_else(|| anyhow::anyhow!("GenVocab requires Modulus earlier in the pipeline"))?;
+            anyhow::ensure!(m < g, "Modulus must precede GenVocab");
+        }
+        if let Some(a) = apply {
+            let g = gen
+                .ok_or_else(|| anyhow::anyhow!("ApplyVocab requires GenVocab earlier in the pipeline"))?;
+            anyhow::ensure!(g < a, "GenVocab must precede ApplyVocab");
+        }
+        if let (Some(l), Some(n)) = (log, n2z) {
+            anyhow::ensure!(n < l, "Neg2Zero must precede Logarithm");
+        }
+        // duplicates of stateful ops are not meaningful
+        for kind in ["GenVocab", "ApplyVocab"] {
+            let count = self
+                .ops
+                .iter()
+                .filter(|o| format!("{o:?}").starts_with(kind))
+                .count();
+            anyhow::ensure!(count <= 1, "{kind} may appear at most once");
+        }
+        Ok(())
+    }
+
+    fn has(&self, f: fn(&OpSpec) -> bool) -> bool {
+        self.ops.iter().any(f)
+    }
+
+    pub fn modulus(&self) -> Option<Modulus> {
+        self.ops.iter().find_map(|o| match o {
+            OpSpec::Modulus(r) => Some(Modulus::new(*r)),
+            _ => None,
+        })
+    }
+
+    /// Execute over decoded rows (the post-`Decode` boundary — Decode /
+    /// FillMissing / Hex2Int are already reflected in [`DecodedRow`]).
+    ///
+    /// Sparse columns: Modulus → (GenVocab → ApplyVocab) as configured —
+    /// without ApplyVocab the (modulus-limited) raw values pass through.
+    /// Dense columns: Neg2Zero and/or Logarithm as configured.
+    pub fn execute(&self, rows: &[DecodedRow], schema: Schema) -> Result<ProcessedColumns> {
+        self.validate()?;
+        let modulus = self.modulus();
+        let do_gen = self.has(|o| matches!(o, OpSpec::GenVocab));
+        let do_apply = self.has(|o| matches!(o, OpSpec::ApplyVocab));
+        let do_n2z = self.has(|o| matches!(o, OpSpec::Neg2Zero));
+        let do_log = self.has(|o| matches!(o, OpSpec::Logarithm));
+
+        let mut out = ProcessedColumns::with_schema(schema);
+        // pass 1: vocabularies
+        let mut vocabs: Vec<DirectVocab> = Vec::new();
+        if do_gen {
+            let m = modulus.expect("validated: GenVocab implies Modulus");
+            vocabs = (0..schema.num_sparse).map(|_| DirectVocab::new(m.range)).collect();
+            for row in rows {
+                for (c, &s) in row.sparse.iter().enumerate() {
+                    vocabs[c].observe(m.apply(s));
+                }
+            }
+        }
+        // pass 2: emit
+        for row in rows {
+            out.labels.push(row.label);
+            for (c, &d) in row.dense.iter().enumerate() {
+                let v = if do_n2z { neg2zero(d) } else { d };
+                let v = if do_log { crate::ops::log1p(v) } else { v as f32 };
+                out.dense[c].push(v);
+            }
+            for (c, &s) in row.sparse.iter().enumerate() {
+                let v = modulus.map_or(s, |m| m.apply(s));
+                let v = if do_apply {
+                    vocabs[c].apply(v).unwrap_or(0)
+                } else {
+                    v
+                };
+                out.sparse[c].push(v);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth::SynthConfig, SynthDataset};
+
+    fn rows() -> (Vec<DecodedRow>, Schema) {
+        let ds = SynthDataset::generate(SynthConfig::small(120));
+        (ds.rows.clone(), ds.schema())
+    }
+
+    #[test]
+    fn parses_full_dlrm_pipeline() {
+        let p = PipelineSpec::parse(
+            "decode | fillmissing | hex2int | modulus:5_000 | genvocab | applyvocab \
+             | neg2zero | logarithm | concatenate",
+        )
+        .unwrap();
+        assert_eq!(p, PipelineSpec::dlrm(5000));
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(PipelineSpec::parse("").is_err());
+        assert!(PipelineSpec::parse("frobnicate").is_err());
+        assert!(PipelineSpec::parse("modulus").is_err(), "modulus needs arg");
+        assert!(PipelineSpec::parse("modulus:0").is_err());
+        assert!(PipelineSpec::parse("genvocab").is_err(), "needs modulus");
+        assert!(PipelineSpec::parse("applyvocab|modulus:5|genvocab").is_err(), "order");
+        assert!(PipelineSpec::parse("logarithm|neg2zero").is_err(), "order");
+        assert!(PipelineSpec::parse("decode:4").is_err(), "unexpected arg");
+    }
+
+    #[test]
+    fn full_pipeline_matches_fixed_implementation() {
+        let (rows, schema) = rows();
+        let p = PipelineSpec::dlrm(997);
+        let got = p.execute(&rows, schema).unwrap();
+
+        let raw = crate::data::utf8::encode_dataset(&SynthDataset::generate(
+            SynthConfig::small(120),
+        ));
+        let reference = crate::cpu_baseline::run(
+            &crate::cpu_baseline::BaselineConfig::new(
+                crate::cpu_baseline::ConfigKind::I,
+                2,
+                Modulus::new(997),
+            ),
+            &raw,
+        )
+        .processed;
+        assert_eq!(got, reference);
+    }
+
+    #[test]
+    fn logarithm_is_optional() {
+        let (rows, schema) = rows();
+        let no_log = PipelineSpec::parse("modulus:97|genvocab|applyvocab|neg2zero")
+            .unwrap()
+            .execute(&rows, schema)
+            .unwrap();
+        // dense values are the raw neg2zero'd integers as f32
+        for (c, col) in no_log.dense.iter().enumerate() {
+            for (r, &v) in col.iter().enumerate() {
+                assert_eq!(v, neg2zero(rows[r].dense[c]) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn modulus_only_passthrough_sparse() {
+        let (rows, schema) = rows();
+        let p = PipelineSpec::parse("modulus:53").unwrap();
+        let got = p.execute(&rows, schema).unwrap();
+        for (c, col) in got.sparse.iter().enumerate() {
+            for (r, &v) in col.iter().enumerate() {
+                assert_eq!(v, rows[r].sparse[c] % 53);
+            }
+        }
+    }
+}

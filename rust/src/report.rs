@@ -1,0 +1,176 @@
+//! Table/figure renderers for the bench harness — ASCII tables with the
+//! same rows/series the paper reports, every time cell tagged as
+//! `measured` (wallclock on this machine) or `sim` (model output).
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Provenance of a reported time — never mixed silently (DESIGN.md §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeTag {
+    /// Really elapsed on this machine.
+    Measured,
+    /// Output of a calibrated model (FPGA cycles, GPU model, disk model).
+    Sim,
+    /// Sum of measured and simulated components.
+    Mixed,
+}
+
+impl TimeTag {
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            TimeTag::Measured => "meas",
+            TimeTag::Sim => "sim",
+            TimeTag::Mixed => "meas+sim",
+        }
+    }
+}
+
+/// Format a duration compactly (µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 100.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.0}s", s)
+    }
+}
+
+/// Format a tagged duration, e.g. `1.25s[sim]`.
+pub fn fmt_tagged(d: Duration, tag: TimeTag) -> String {
+    format!("{}[{}]", fmt_duration(d), tag.suffix())
+}
+
+/// Format a throughput in rows/s with scientific mantissa like the
+/// paper's Table 3 (e.g. `1.56E+6`).
+pub fn fmt_rows_per_sec(v: f64) -> String {
+    if v <= 0.0 {
+        return "-".to_string();
+    }
+    let exp = v.log10().floor() as i32;
+    let mant = v / 10f64.powi(exp);
+    format!("{mant:.2}E+{exp}")
+}
+
+/// Format a speedup factor like the paper (`4.7×`).
+pub fn fmt_speedup(v: f64) -> String {
+    format!("{v:.1}×")
+}
+
+/// A renderable ASCII table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn note(&mut self, n: &str) -> &mut Self {
+        self.notes.push(n.to_string());
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line_len: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+        let sep = "-".repeat(line_len);
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:<w$} |", c, w = widths[i]);
+            }
+            s
+        };
+        let _ = writeln!(out, "{sep}");
+        let _ = writeln!(out, "{}", fmt_row(&self.headers));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        let _ = writeln!(out, "{sep}");
+        for n in &self.notes {
+            let _ = writeln!(out, "  note: {n}");
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_formats() {
+        assert_eq!(fmt_duration(Duration::from_micros(5)), "5.0µs");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.00ms");
+        assert_eq!(fmt_duration(Duration::from_secs(3)), "3.00s");
+        assert_eq!(fmt_duration(Duration::from_secs(250)), "250s");
+    }
+
+    #[test]
+    fn rows_per_sec_matches_paper_style() {
+        assert_eq!(fmt_rows_per_sec(1.56e6), "1.56E+6");
+        assert_eq!(fmt_rows_per_sec(975_000.0), "9.75E+5");
+        assert_eq!(fmt_rows_per_sec(0.0), "-");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "column"]);
+        t.row(&["1".into(), "x".into()]);
+        t.row(&["1234".into(), "y".into()]);
+        t.note("hello");
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| 1234 | y"));
+        assert!(s.contains("note: hello"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_enforced() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn tags_are_explicit() {
+        let s = fmt_tagged(Duration::from_secs(1), TimeTag::Sim);
+        assert!(s.ends_with("[sim]"));
+        assert!(fmt_tagged(Duration::from_secs(1), TimeTag::Measured).ends_with("[meas]"));
+    }
+}

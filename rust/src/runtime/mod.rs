@@ -1,0 +1,155 @@
+//! PJRT runtime: load AOT-compiled HLO text (produced once by
+//! `python/compile/aot.py`) and execute it from rust. Python is never on
+//! this path — the interchange format is HLO *text* (not serialized
+//! protos: jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids).
+
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// A PJRT CPU client plus the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client. `artifacts_dir` is where `make
+    /// artifacts` wrote the `*.hlo.txt` files.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact by file name (e.g.
+    /// `"train_step.hlo.txt"`).
+    pub fn load(&self, name: &str) -> Result<LoadedFn> {
+        let path = self.artifacts_dir.join(name);
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} not found — run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(LoadedFn { exe, name: name.to_string() })
+    }
+}
+
+/// One compiled executable (a jax function lowered with
+/// `return_tuple=True`, so outputs always come back as a tuple).
+pub struct LoadedFn {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl LoadedFn {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn call(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow::anyhow!("{} returned no buffers", self.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {} output: {e:?}", self.name))?;
+        out.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {} output: {e:?}", self.name))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Helpers for building literals from rust slices.
+pub mod lit {
+    use crate::Result;
+
+    /// f32 tensor of the given shape.
+    pub fn f32_tensor(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    /// i32 tensor of the given shape.
+    pub fn i32_tensor(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+
+    /// Extract an f32 scalar.
+    pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+        l.get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("scalar read: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they are skipped
+    /// (not failed) when artifacts are missing so `cargo test` stays
+    /// green on a fresh checkout.
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("train_step.hlo.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn runtime_creates_cpu_client() {
+        let rt = Runtime::new(Path::new("/nonexistent")).unwrap();
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = Runtime::new(Path::new("/nonexistent")).unwrap();
+        let err = match rt.load("nope.hlo.txt") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("loading a missing artifact must fail"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn lit_shape_checks() {
+        assert!(lit::f32_tensor(&[1.0, 2.0], &[3]).is_err());
+        let t = lit::f32_tensor(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(t.element_count(), 4);
+    }
+
+    #[test]
+    fn loads_and_runs_train_step_artifact_if_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::new(&dir).unwrap();
+        let f = rt.load("train_step.hlo.txt").unwrap();
+        assert_eq!(f.name(), "train_step.hlo.txt");
+    }
+}

@@ -1,0 +1,119 @@
+//! Minibatch assembly from preprocessed column storage — the boundary
+//! where the preprocessing pipeline's output becomes training input
+//! ("ML models require complete rows as the input", paper §2.3).
+
+use crate::data::row::ProcessedColumns;
+use crate::Result;
+
+use super::Batch;
+
+/// Cycling minibatch iterator over [`ProcessedColumns`] (wraps around —
+/// an epoch boundary is `rows/batch` calls).
+#[derive(Debug)]
+pub struct BatchIter<'a> {
+    data: &'a ProcessedColumns,
+    batch: usize,
+    cursor: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a ProcessedColumns, batch: usize, num_sparse: usize) -> Result<Self> {
+        anyhow::ensure!(batch > 0, "batch size must be positive");
+        anyhow::ensure!(
+            data.num_rows() >= batch,
+            "need at least one batch of rows ({} < {batch})",
+            data.num_rows()
+        );
+        anyhow::ensure!(
+            data.sparse.len() == num_sparse,
+            "dataset has {} sparse columns, model wants {num_sparse}",
+            data.sparse.len()
+        );
+        Ok(BatchIter { data, batch, cursor: 0 })
+    }
+
+    /// Assemble the next row-major batch (wrapping).
+    pub fn next_batch(&mut self) -> Batch {
+        let n = self.data.num_rows();
+        let nd = self.data.dense.len();
+        let ns = self.data.sparse.len();
+        let mut dense = Vec::with_capacity(self.batch * nd);
+        let mut sparse = Vec::with_capacity(self.batch * ns);
+        let mut labels = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            let r = (self.cursor + i) % n;
+            for c in 0..nd {
+                dense.push(self.data.dense[c][r]);
+            }
+            for c in 0..ns {
+                sparse.push(self.data.sparse[c][r] as i32);
+            }
+            labels.push(self.data.labels[r] as f32);
+        }
+        self.cursor = (self.cursor + self.batch) % n;
+        Batch { dense, sparse, labels }
+    }
+
+    /// Batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.data.num_rows() / self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::row::ProcessedRow;
+    use crate::data::Schema;
+
+    fn columns(rows: usize) -> ProcessedColumns {
+        let mut c = ProcessedColumns::with_schema(Schema::new(2, 3));
+        for r in 0..rows {
+            c.push_row(&ProcessedRow {
+                label: (r % 2) as i32,
+                dense: vec![r as f32, r as f32 + 0.5],
+                sparse: vec![r as u32, r as u32 + 1, r as u32 + 2],
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn batch_is_row_major() {
+        let cols = columns(10);
+        let mut it = BatchIter::new(&cols, 4, 3).unwrap();
+        let b = it.next_batch();
+        assert_eq!(b.dense.len(), 8);
+        assert_eq!(b.sparse.len(), 12);
+        assert_eq!(b.labels.len(), 4);
+        // row 1's dense features are at positions [2..4]
+        assert_eq!(&b.dense[2..4], &[1.0, 1.5]);
+        assert_eq!(&b.sparse[3..6], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn wraps_around() {
+        let cols = columns(5);
+        let mut it = BatchIter::new(&cols, 4, 3).unwrap();
+        let _ = it.next_batch();
+        let b = it.next_batch(); // rows 4,0,1,2
+        assert_eq!(b.labels[0], 0.0); // row 4
+        assert_eq!(b.dense[0], 4.0);
+        assert_eq!(b.dense[2], 0.0); // row 0
+    }
+
+    #[test]
+    fn validates_shapes() {
+        let cols = columns(3);
+        assert!(BatchIter::new(&cols, 4, 3).is_err(), "too few rows");
+        assert!(BatchIter::new(&cols, 2, 5).is_err(), "wrong sparse count");
+        assert!(BatchIter::new(&cols, 0, 3).is_err(), "zero batch");
+    }
+
+    #[test]
+    fn batches_per_epoch() {
+        let cols = columns(10);
+        let it = BatchIter::new(&cols, 4, 3).unwrap();
+        assert_eq!(it.batches_per_epoch(), 2);
+    }
+}

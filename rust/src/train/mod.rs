@@ -1,0 +1,157 @@
+//! The training consumer: a DLRM (paper §2.2) whose fwd/bwd + SGD step
+//! was authored in JAX (with Pallas kernels for the interaction and MLP
+//! hot-spots), AOT-lowered by `python/compile/aot.py`, and is executed
+//! here through PJRT. This is the GPU-side of paper Fig. 1/2 — the
+//! consumer the preprocessing pipeline must keep fed.
+//!
+//! Parameters are carried as ONE flat f32 vector across the rust↔XLA
+//! boundary (the jax side unflattens with static shapes), so the rust
+//! driver needs no knowledge of the model's pytree.
+
+pub mod batch;
+
+use std::path::Path;
+
+use crate::config::Config;
+use crate::data::row::ProcessedColumns;
+use crate::runtime::{lit, LoadedFn, Runtime};
+use crate::Result;
+
+pub use batch::BatchIter;
+
+/// Metadata written by aot.py next to the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub batch: usize,
+    pub num_dense: usize,
+    pub num_sparse: usize,
+    pub embed_dim: usize,
+    pub vocab: usize,
+    pub param_count: usize,
+}
+
+impl ModelMeta {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        Self::load_suffixed(artifacts_dir, "")
+    }
+
+    /// Load a batch-variant meta file (`meta_b128.txt` etc. — written by
+    /// `aot.py --batch-variants`).
+    pub fn load_suffixed(artifacts_dir: &Path, suffix: &str) -> Result<Self> {
+        let cfg = Config::from_file(&artifacts_dir.join(format!("meta{suffix}.txt")))?;
+        Ok(ModelMeta {
+            batch: cfg.get_usize("batch", 0)?,
+            num_dense: cfg.get_usize("num_dense", 0)?,
+            num_sparse: cfg.get_usize("num_sparse", 0)?,
+            embed_dim: cfg.get_usize("embed_dim", 0)?,
+            vocab: cfg.get_usize("vocab", 0)?,
+            param_count: cfg.get_usize("param_count", 0)?,
+        })
+    }
+}
+
+/// One minibatch in the layout the artifacts expect.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// `[B, num_dense]` row-major.
+    pub dense: Vec<f32>,
+    /// `[B, num_sparse]` row-major vocabulary indices.
+    pub sparse: Vec<i32>,
+    /// `[B]` click labels as f32.
+    pub labels: Vec<f32>,
+}
+
+/// The training driver.
+pub struct Trainer {
+    pub meta: ModelMeta,
+    step_fn: LoadedFn,
+    forward_fn: Option<LoadedFn>,
+    params: xla::Literal,
+    steps_done: usize,
+}
+
+impl Trainer {
+    /// Load artifacts and initialize parameters (by running the AOT
+    /// `init` computation — deterministic, seeded at lowering time).
+    pub fn new(runtime: &Runtime, artifacts_dir: &Path) -> Result<Self> {
+        Self::with_suffix(runtime, artifacts_dir, "")
+    }
+
+    /// Load a batch-variant artifact set (suffix `_b128` etc.).
+    pub fn with_suffix(runtime: &Runtime, artifacts_dir: &Path, suffix: &str) -> Result<Self> {
+        let meta = ModelMeta::load_suffixed(artifacts_dir, suffix)?;
+        let init_fn = runtime.load(&format!("init{suffix}.hlo.txt"))?;
+        let step_fn = runtime.load(&format!("train_step{suffix}.hlo.txt"))?;
+        let forward_fn = runtime.load(&format!("forward{suffix}.hlo.txt")).ok();
+        let mut out = init_fn.call(&[])?;
+        anyhow::ensure!(out.len() == 1, "init must return exactly the flat params");
+        let params = out.remove(0);
+        anyhow::ensure!(
+            params.element_count() == meta.param_count,
+            "init returned {} params, meta says {}",
+            params.element_count(),
+            meta.param_count
+        );
+        Ok(Trainer { meta, step_fn, forward_fn, params, steps_done: 0 })
+    }
+
+    /// Run one SGD step; returns the loss.
+    pub fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let b = self.meta.batch as i64;
+        anyhow::ensure!(
+            batch.dense.len() == self.meta.batch * self.meta.num_dense
+                && batch.sparse.len() == self.meta.batch * self.meta.num_sparse
+                && batch.labels.len() == self.meta.batch,
+            "batch shape mismatch (expected B={b})"
+        );
+        let dense = lit::f32_tensor(&batch.dense, &[b, self.meta.num_dense as i64])?;
+        let sparse = lit::i32_tensor(&batch.sparse, &[b, self.meta.num_sparse as i64])?;
+        let labels = lit::f32_tensor(&batch.labels, &[b])?;
+        let mut out = self.step_fn.call(&[
+            self.params.clone(),
+            dense,
+            sparse,
+            labels,
+        ])?;
+        anyhow::ensure!(out.len() == 2, "train_step must return (params, loss)");
+        let loss = lit::scalar_f32(&out[1])?;
+        self.params = out.remove(0);
+        self.steps_done += 1;
+        Ok(loss)
+    }
+
+    /// Forward pass (inference) over one batch; returns probabilities.
+    pub fn forward(&self, batch: &Batch) -> Result<Vec<f32>> {
+        let f = self
+            .forward_fn
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("forward artifact not built"))?;
+        let b = self.meta.batch as i64;
+        let dense = lit::f32_tensor(&batch.dense, &[b, self.meta.num_dense as i64])?;
+        let sparse = lit::i32_tensor(&batch.sparse, &[b, self.meta.num_sparse as i64])?;
+        let out = f.call(&[self.params.clone(), dense, sparse])?;
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("reading preds: {e:?}"))
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.steps_done
+    }
+}
+
+/// Train for `steps` steps cycling over the preprocessed dataset; returns
+/// the loss curve.
+pub fn train_loop(
+    trainer: &mut Trainer,
+    data: &ProcessedColumns,
+    steps: usize,
+) -> Result<Vec<f32>> {
+    let mut iter = BatchIter::new(data, trainer.meta.batch, trainer.meta.num_sparse)?;
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let batch = iter.next_batch();
+        losses.push(trainer.step(&batch)?);
+    }
+    Ok(losses)
+}

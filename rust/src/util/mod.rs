@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic PRNG, Zipf sampler, timing.
+
+pub mod prng;
+pub mod zipf;
+pub mod timer;
+
+pub use prng::XorShift64;
+pub use timer::Stopwatch;
+pub use zipf::Zipf;

@@ -1,0 +1,83 @@
+//! Wallclock stopwatch with named laps — used by the measured (CPU
+//! baseline) paths and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A stopwatch accumulating named laps. Laps with the same name add up,
+/// so per-stage times can be collected across repeated calls.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now(), laps: Vec::new() }
+    }
+
+    /// Restart the lap timer (does not clear recorded laps).
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+
+    /// Record the time since the last `reset`/`lap` under `name` and
+    /// restart the lap timer.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let d = self.start.elapsed();
+        if let Some(entry) = self.laps.iter_mut().find(|(n, _)| n == name) {
+            entry.1 += d;
+        } else {
+            self.laps.push((name.to_string(), d));
+        }
+        self.start = Instant::now();
+        d
+    }
+
+    /// Total accumulated time across all laps.
+    pub fn total(&self) -> Duration {
+        self.laps.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Accumulated time for one lap name (zero if never recorded).
+    pub fn get(&self, name: &str) -> Duration {
+        self.laps
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    /// All laps in recording order.
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate_by_name() {
+        let mut sw = Stopwatch::new();
+        sw.lap("a");
+        sw.lap("b");
+        sw.lap("a");
+        assert_eq!(sw.laps().len(), 2);
+        assert!(sw.get("a") >= sw.laps()[0].1 - sw.get("a")); // sanity: non-negative
+        assert_eq!(sw.total(), sw.get("a") + sw.get("b"));
+    }
+
+    #[test]
+    fn get_missing_is_zero() {
+        let sw = Stopwatch::new();
+        assert_eq!(sw.get("nope"), Duration::ZERO);
+    }
+}

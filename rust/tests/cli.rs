@@ -1,0 +1,106 @@
+//! Integration tests for the `piper` launcher binary: spawn the real
+//! executable and check the user-facing flows end to end.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn piper_bin() -> PathBuf {
+    // target/<profile>/piper next to the test binary's directory
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("piper");
+    p
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(piper_bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn piper");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["gen-data", "preprocess", "compare", "serve", "submit", "train"] {
+        assert!(text.contains(cmd), "help must mention {cmd}: {text}");
+    }
+}
+
+#[test]
+fn gen_data_then_preprocess_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("piper-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("ds.txt");
+
+    let (ok, text) = run(&[
+        "gen-data",
+        "rows=500",
+        &format!("out={}", data.display()),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("wrote 500 rows"), "{text}");
+
+    let (ok, text) = run(&[
+        "preprocess",
+        &format!("input={}", data.display()),
+        "backend=piper-net",
+        "vocab=997",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("500"), "row count must appear: {text}");
+    assert!(text.contains("[sim]"), "PIPER times must be sim-tagged: {text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn gen_data_presets_and_binary() {
+    let dir = std::env::temp_dir().join(format!("piper-cli-b-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("ml.bin");
+    let (ok, text) = run(&[
+        "gen-data",
+        "rows=200",
+        "dataset=movielens",
+        "format=binary",
+        &format!("out={}", data.display()),
+    ]);
+    assert!(ok, "{text}");
+    // movielens preset: 3 dense + 4 sparse + label = 8 words/row
+    assert_eq!(std::fs::metadata(&data).unwrap().len(), 200 * 8 * 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bad_arguments_fail_cleanly() {
+    let (ok, text) = run(&["preprocess"]); // missing input=
+    assert!(!ok);
+    assert!(text.contains("input"), "{text}");
+
+    let (ok, text) = run(&["gen-data", "dataset=unknown"]);
+    assert!(!ok);
+    assert!(text.contains("preset"), "{text}");
+
+    let (ok, _) = run(&["preprocess", "input=/nonexistent-file", "backend=cpu"]);
+    assert!(!ok);
+}
+
+#[test]
+fn compare_prints_all_backends() {
+    let (ok, text) = run(&["compare", "rows=2000", "vocab=499"]);
+    assert!(ok, "{text}");
+    for b in ["CPU", "GPU", "PIPER"] {
+        assert!(text.contains(b), "compare must include {b}: {text}");
+    }
+    assert!(text.contains("speedup"), "{text}");
+}

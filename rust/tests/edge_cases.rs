@@ -1,0 +1,176 @@
+//! Edge cases and failure injection across the public API: empty and
+//! degenerate datasets, malformed wire traffic, adversarial raw bytes,
+//! and schema extremes. Nothing here may panic — errors must surface as
+//! `Err`, and degenerate-but-legal inputs must round-trip.
+
+use piper::accel::{InputFormat, Mode, PiperConfig};
+use piper::coordinator::{run_backend, Backend, Experiment};
+use piper::cpu_baseline::{run as cpu_run, BaselineConfig, ConfigKind};
+use piper::data::{binary, synth::SynthConfig, utf8, Schema, SynthDataset};
+use piper::decode::{ParallelDecoder, ScalarDecoder};
+use piper::net::protocol::{read_frame, write_frame, Job, Tag};
+use piper::net::stream::{preprocess_buffered, WireFormat};
+use piper::ops::Modulus;
+use piper::util::XorShift64;
+
+#[test]
+fn empty_input_all_backends() {
+    let raw: &[u8] = b"";
+    let exp = Experiment::new(Modulus::new(97), InputFormat::Utf8);
+    for b in [
+        Backend::Cpu { kind: ConfigKind::I, threads: 4 },
+        Backend::Gpu,
+        Backend::Piper { mode: Mode::Network },
+    ] {
+        let s = run_backend(&b, &exp, raw).unwrap();
+        assert_eq!(s.rows, 0, "{}", s.backend);
+    }
+}
+
+#[test]
+fn single_row_dataset() {
+    let mut cfg = SynthConfig::small(1);
+    cfg.schema = Schema::CRITEO;
+    let ds = SynthDataset::generate(cfg);
+    let raw = utf8::encode_dataset(&ds);
+    let r = cpu_run(&BaselineConfig::new(ConfigKind::I, 8, Modulus::new(13)), &raw);
+    assert_eq!(r.rows, 1, "8 threads over 1 row must still work");
+}
+
+#[test]
+fn more_threads_than_rows() {
+    let ds = SynthDataset::generate(SynthConfig::small(5));
+    let raw = binary::encode_dataset(&ds);
+    let r = cpu_run(&BaselineConfig::new(ConfigKind::III, 64, Modulus::new(13)), &raw);
+    assert_eq!(r.rows, 5);
+}
+
+#[test]
+fn zero_dense_or_zero_sparse_schemas() {
+    for schema in [Schema::new(0, 4), Schema::new(4, 0)] {
+        let mut cfg = SynthConfig::small(50);
+        cfg.schema = schema;
+        let ds = SynthDataset::generate(cfg);
+        let raw = utf8::encode_dataset(&ds);
+        let out = ParallelDecoder::new(schema).decode(&raw);
+        assert_eq!(out.rows, ds.rows, "schema {schema:?}");
+        // streaming path too
+        let cols =
+            preprocess_buffered(schema, Modulus::new(7), WireFormat::Utf8, &raw, 13).unwrap();
+        assert_eq!(cols.num_rows(), 50);
+    }
+}
+
+#[test]
+fn adversarial_bytes_never_panic_decoders() {
+    let mut rng = XorShift64::new(0xFEED);
+    let schema = Schema::new(3, 3);
+    for _ in 0..200 {
+        let len = rng.below(300) as usize;
+        let raw: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let _ = ScalarDecoder::new(schema).decode(&raw);
+        let _ = ParallelDecoder::new(schema).decode(&raw);
+        // streaming decoder with random chunking
+        let _ = preprocess_buffered(schema, Modulus::new(11), WireFormat::Utf8, &raw, 7);
+    }
+}
+
+#[test]
+fn adversarial_binary_streams_error_cleanly() {
+    let schema = Schema::CRITEO;
+    let mut rng = XorShift64::new(0xFACE);
+    for _ in 0..50 {
+        let len = rng.below(1000) as usize;
+        let raw: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        // must either succeed (if length is row-aligned) or return Err
+        let res = preprocess_buffered(schema, Modulus::new(11), WireFormat::Binary, &raw, 64);
+        if len % schema.binary_row_bytes() == 0 {
+            assert!(res.is_ok(), "aligned length {len} should parse");
+        } else {
+            assert!(res.is_err(), "misaligned length {len} must be rejected");
+        }
+    }
+}
+
+#[test]
+fn protocol_rejects_garbage_frames() {
+    // random byte soups must never panic the frame reader
+    let mut rng = XorShift64::new(0xD0D0);
+    for _ in 0..100 {
+        let len = rng.below(64) as usize;
+        let raw: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let _ = read_frame(&mut &raw[..]);
+    }
+}
+
+#[test]
+fn worker_errors_on_out_of_order_frames() {
+    // Pass2 before Pass1End ⇒ the worker must close with an error, and
+    // the leader must see a failure, not a hang or panic.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let worker = std::thread::spawn(move || piper::net::serve_one(&listener));
+
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut w = std::io::BufWriter::new(stream);
+    let job = Job {
+        schema: Schema::new(1, 1),
+        modulus: Modulus::new(7),
+        format: WireFormat::Utf8,
+    };
+    write_frame(&mut w, Tag::Job, &job.encode()).unwrap();
+    write_frame(&mut w, Tag::Pass2Chunk, b"1\t2\taa\n").unwrap();
+    use std::io::Write as _;
+    w.flush().unwrap();
+    let res = worker.join().unwrap();
+    assert!(res.is_err(), "worker must reject out-of-order pass frames");
+}
+
+#[test]
+fn worker_rejects_wrong_first_frame() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let worker = std::thread::spawn(move || piper::net::serve_one(&listener));
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut w = std::io::BufWriter::new(stream);
+    write_frame(&mut w, Tag::Pass1Chunk, b"hello").unwrap();
+    use std::io::Write as _;
+    w.flush().unwrap();
+    assert!(worker.join().unwrap().is_err());
+}
+
+#[test]
+fn modulus_one_collapses_vocab() {
+    // degenerate modulus: every sparse value maps to 0 → vocab size 1
+    let ds = SynthDataset::generate(SynthConfig::small(40));
+    let raw = utf8::encode_dataset(&ds);
+    let cfg = PiperConfig::paper(Mode::Network, InputFormat::Utf8, Modulus::new(1));
+    let run = piper::accel::run(&cfg, &raw).unwrap();
+    for v in &run.vocabs {
+        use piper::ops::Vocab as _;
+        assert!(v.len() <= 1);
+    }
+    for col in &run.processed.sparse {
+        assert!(col.iter().all(|&x| x == 0));
+    }
+}
+
+#[test]
+fn huge_thread_count_is_clamped_not_crashing() {
+    let ds = SynthDataset::generate(SynthConfig::small(20));
+    let raw = utf8::encode_dataset(&ds);
+    let r = cpu_run(&BaselineConfig::new(ConfigKind::II, 256, Modulus::new(13)), &raw);
+    assert_eq!(r.rows, 20);
+}
+
+#[test]
+fn rows_with_wrong_column_count_are_tolerated() {
+    // short row (missing fields) and long row (extra fields): the decoder
+    // fills missing with 0 and drops extras — no panic, row count right.
+    let schema = Schema::new(2, 2);
+    let raw = b"1\t5\n0\t1\t2\taa\tbb\tcc\tdd\n";
+    let out = ScalarDecoder::new(schema).decode(raw);
+    assert_eq!(out.rows.len(), 2);
+    assert_eq!(out.rows[0].dense, vec![5, 0]);
+    assert_eq!(out.rows[1].sparse, vec![0xaa, 0xbb]);
+}

@@ -1,0 +1,144 @@
+//! Integration: all preprocessing backends over the same dataset must
+//! agree functionally, and the paper's qualitative performance ordering
+//! must hold in the timing models at paper scale.
+
+use piper::accel::{dataflow, host::HostModel, network, InputFormat, Mode, PiperConfig};
+use piper::coordinator::{compare, run_backend, Backend, Experiment};
+use piper::cpu_baseline::ConfigKind;
+use piper::data::{binary, synth::SynthConfig, utf8, SynthDataset};
+use piper::net::{protocol::Job, stream::WireFormat};
+use piper::ops::Modulus;
+
+fn dataset(rows: usize) -> SynthDataset {
+    SynthDataset::generate(SynthConfig::small(rows))
+}
+
+#[test]
+fn five_backends_one_answer() {
+    let ds = dataset(400);
+    let m = Modulus::new(997);
+    let raw = utf8::encode_dataset(&ds);
+    let exp = Experiment { schema: ds.schema(), ..Experiment::new(m, InputFormat::Utf8) };
+
+    let cpu = run_backend(&Backend::Cpu { kind: ConfigKind::I, threads: 5 }, &exp, &raw)
+        .unwrap();
+    let gpu = run_backend(&Backend::Gpu, &exp, &raw).unwrap();
+    let p_net = run_backend(&Backend::Piper { mode: Mode::Network }, &exp, &raw).unwrap();
+    let p_loc =
+        run_backend(&Backend::Piper { mode: Mode::LocalDecodeInKernel }, &exp, &raw).unwrap();
+    // real TCP loopback
+    let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+    let tcp = piper::net::leader::run_loopback(job, &raw, 8 * 1024).unwrap();
+
+    assert_eq!(cpu.processed, gpu.processed);
+    assert_eq!(cpu.processed, p_net.processed);
+    assert_eq!(cpu.processed, p_loc.processed);
+    assert_eq!(cpu.processed, tcp.processed);
+}
+
+#[test]
+fn binary_pipeline_agrees_with_utf8() {
+    let ds = dataset(300);
+    let m = Modulus::new(499);
+    let exp_u = Experiment { schema: ds.schema(), ..Experiment::new(m, InputFormat::Utf8) };
+    let exp_b = Experiment { schema: ds.schema(), ..Experiment::new(m, InputFormat::Binary) };
+    let from_utf8 = run_backend(
+        &Backend::Piper { mode: Mode::Network },
+        &exp_u,
+        &utf8::encode_dataset(&ds),
+    )
+    .unwrap();
+    let from_bin = run_backend(
+        &Backend::Cpu { kind: ConfigKind::III, threads: 3 },
+        &exp_b,
+        &binary::encode_dataset(&ds),
+    )
+    .unwrap();
+    assert_eq!(from_utf8.processed, from_bin.processed);
+}
+
+#[test]
+fn compare_emits_speedups_for_all_rows() {
+    let ds = dataset(250);
+    let m = Modulus::new(997);
+    let raw = utf8::encode_dataset(&ds);
+    let exp = Experiment { schema: ds.schema(), ..Experiment::new(m, InputFormat::Utf8) };
+    let rows = compare(
+        &[
+            Backend::Cpu { kind: ConfigKind::II, threads: 4 },
+            Backend::Gpu,
+            Backend::Piper { mode: Mode::Network },
+        ],
+        &exp,
+        &raw,
+    )
+    .unwrap();
+    assert_eq!(rows.len(), 3);
+    for r in &rows {
+        assert!(r.rows_per_sec > 0.0, "{}", r.backend);
+        assert!(r.speedup_vs_ref > 0.0);
+    }
+}
+
+/// Paper-scale model properties (Fig. 9 shape): binary ≫ UTF-8 for
+/// PIPER; 1M vocab slower than 5K; network beats local; decode-in-host
+/// kernel faster but e2e slower than decode-in-kernel.
+#[test]
+fn paper_scale_orderings_hold() {
+    let rows = 46_000_000usize;
+    let utf8_bytes = 11_000_000_000usize;
+    let bin_bytes = rows * 160;
+    let uniq_5k = 26 * 5_000;
+    let uniq_1m = 26 * 700_000; // not all 1M slots hit
+
+    let t = |mode, input, m: Modulus, bytes, uniq| {
+        let cfg = PiperConfig::paper(mode, input, m);
+        dataflow::model_timing(&cfg, bytes, rows, uniq).seconds()
+    };
+
+    // binary ≫ utf8 (paper: 71.3× vs 5.1× speedups come from this gap)
+    let k_utf8 = t(Mode::Network, InputFormat::Utf8, Modulus::VOCAB_5K, utf8_bytes, uniq_5k);
+    let k_bin = t(Mode::Network, InputFormat::Binary, Modulus::VOCAB_5K, bin_bytes, uniq_5k);
+    assert!(k_utf8.as_secs_f64() / k_bin.as_secs_f64() > 5.0);
+
+    // 1M vocab slower than 5K on binary (HBM + lower clock)
+    let k_bin_1m = t(Mode::Network, InputFormat::Binary, Modulus::VOCAB_1M, bin_bytes, uniq_1m);
+    assert!(k_bin_1m > k_bin);
+
+    // decode-in-host: kernel time drops, e2e rises (paper §4.4.3)
+    let hm = HostModel::default();
+    let cfg_k = PiperConfig::paper(Mode::LocalDecodeInKernel, InputFormat::Utf8, Modulus::VOCAB_5K);
+    let cfg_h = PiperConfig::paper(Mode::LocalDecodeInHost, InputFormat::Utf8, Modulus::VOCAB_5K);
+    let kk = dataflow::model_timing(&cfg_k, utf8_bytes, rows, uniq_5k).seconds();
+    let kh = dataflow::model_timing(&cfg_h, utf8_bytes, rows, uniq_5k).seconds();
+    assert!(kh < kk, "host decode must shrink kernel time");
+    let e2e_k = hm.local_breakdown(&cfg_k, utf8_bytes, rows, kk).total();
+    let e2e_h = hm.local_breakdown(&cfg_h, utf8_bytes, rows, kh).total();
+    assert!(e2e_h > e2e_k, "but host decode must lose end-to-end");
+
+    // network beats local e2e
+    let e2e_net = network::stream_time(
+        &PiperConfig::paper(Mode::Network, InputFormat::Utf8, Modulus::VOCAB_5K),
+        utf8_bytes,
+        t(Mode::Network, InputFormat::Utf8, Modulus::VOCAB_5K, utf8_bytes, uniq_5k),
+    );
+    assert!(e2e_net < e2e_k);
+}
+
+/// The paper's headline: PIPER(net, binary, 5K) vs best-CPU ≈ 71×; we
+/// require the model to land in the right decade against the paper's own
+/// CPU numbers (Table 3 best Config III: 5.09e5 rows/s).
+#[test]
+fn headline_speedup_band() {
+    let rows = 46_000_000usize;
+    let bin_bytes = rows * 160;
+    let cfg = PiperConfig::paper(Mode::Network, InputFormat::Binary, Modulus::VOCAB_5K);
+    let kernel = dataflow::model_timing(&cfg, bin_bytes, rows, 26 * 5000);
+    let piper_rps = rows as f64 / kernel.seconds().as_secs_f64();
+    let paper_cpu_best = 5.09e5; // Table 3, Config III, 64 threads
+    let speedup = piper_rps / paper_cpu_best;
+    assert!(
+        (20.0..120.0).contains(&speedup),
+        "modeled binary-5K speedup {speedup:.1}× should be within the paper's decade (46.4×)"
+    );
+}

@@ -1,0 +1,75 @@
+//! Integration: artifacts → PJRT runtime → training loop.
+//!
+//! Exercises the full rust-side consumer path: load the AOT artifacts,
+//! initialize parameters, preprocess a synthetic dataset with PIPER, and
+//! take real SGD steps, checking the loss moves. Skipped (cleanly) when
+//! `make artifacts` hasn't run.
+
+use std::path::PathBuf;
+
+use piper::accel::{InputFormat, Mode, PiperConfig};
+use piper::data::{synth::SynthConfig, utf8, SynthDataset};
+use piper::ops::Modulus;
+use piper::runtime::Runtime;
+use piper::train::{train_loop, Trainer};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("train_step.hlo.txt").exists().then_some(dir)
+}
+
+#[test]
+fn artifacts_load_and_train_step_runs() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut trainer = Trainer::new(&rt, &dir).unwrap();
+    assert_eq!(trainer.meta.num_dense, 13);
+    assert_eq!(trainer.meta.num_sparse, 26);
+
+    // Preprocess a small synthetic dataset through the PIPER simulator.
+    let rows = trainer.meta.batch * 3;
+    let ds = SynthDataset::generate(SynthConfig::small(rows));
+    let raw = utf8::encode_dataset(&ds);
+    let cfg = PiperConfig::paper(
+        Mode::Network,
+        InputFormat::Utf8,
+        Modulus::new(trainer.meta.vocab as u32),
+    );
+    let run = piper::accel::run(&cfg, &raw).unwrap();
+    assert_eq!(run.rows, rows);
+
+    // A few SGD steps: losses must be finite and should decrease on
+    // average over the cycling batches.
+    let losses = train_loop(&mut trainer, &run.processed, 12).unwrap();
+    assert_eq!(losses.len(), 12);
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    let first3: f32 = losses[..3].iter().sum::<f32>() / 3.0;
+    let last3: f32 = losses[9..].iter().sum::<f32>() / 3.0;
+    assert!(
+        last3 < first3,
+        "loss should fall: first3={first3:.4} last3={last3:.4} ({losses:?})"
+    );
+    assert_eq!(trainer.steps_done(), 12);
+}
+
+#[test]
+fn forward_probabilities_in_range() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    let trainer = Trainer::new(&rt, &dir).unwrap();
+    let b = trainer.meta.batch;
+    let batch = piper::train::Batch {
+        dense: vec![0.5; b * trainer.meta.num_dense],
+        sparse: vec![1; b * trainer.meta.num_sparse],
+        labels: vec![0.0; b],
+    };
+    let probs = trainer.forward(&batch).unwrap();
+    assert_eq!(probs.len(), b);
+    assert!(probs.iter().all(|p| (0.0..1.0).contains(p)), "probs out of range");
+}
