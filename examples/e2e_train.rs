@@ -12,17 +12,25 @@
 //!
 //!     cargo run --release --example e2e_train [steps] [rows]
 
-use std::path::Path;
-use std::time::Instant;
-
-use piper::accel::{self, InputFormat, Mode, PiperConfig};
-use piper::data::{synth::SynthConfig, utf8, SynthDataset};
-use piper::ops::Modulus;
-use piper::report::{fmt_duration, Table};
-use piper::runtime::Runtime;
-use piper::train::{train_loop, Trainer};
-
+#[cfg(not(feature = "pjrt"))]
 fn main() -> piper::Result<()> {
+    eprintln!("e2e_train: built without the `pjrt` feature — rebuild with --features pjrt");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn main() -> piper::Result<()> {
+    use std::path::Path;
+    use std::time::Instant;
+
+    use piper::coordinator::{Backend, Experiment};
+    use piper::data::{synth::SynthConfig, utf8, SynthDataset};
+    use piper::accel::{InputFormat, Mode};
+    use piper::ops::Modulus;
+    use piper::report::{fmt_duration, Table};
+    use piper::runtime::Runtime;
+    use piper::train::{train_loop, Trainer};
+
     let args: Vec<String> = std::env::args().collect();
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
     let rows: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8192);
@@ -38,10 +46,14 @@ fn main() -> piper::Result<()> {
     let raw = utf8::encode_dataset(&ds);
     println!("generated {rows} rows ({} raw bytes)", raw.len());
 
-    // --- 2. preprocessing (PIPER, functional + timing model) -----------
+    // --- 2. preprocessing (PIPER via the pipeline engine) ---------------
     let t0 = Instant::now();
-    let cfg = PiperConfig::paper(Mode::Network, InputFormat::Utf8, Modulus::VOCAB_5K);
-    let run = accel::run(&cfg, &raw)?;
+    let backend = Backend::Piper { mode: Mode::Network };
+    let exp = Experiment {
+        schema: ds.schema(),
+        ..Experiment::new(Modulus::VOCAB_5K, InputFormat::Utf8)
+    };
+    let run = piper::coordinator::run_backend(&backend, &exp, &raw)?;
     let preprocess_meas = t0.elapsed();
     println!(
         "preprocessed {} rows: measured {} on this machine, modeled {} on PIPER [sim]",

@@ -1,15 +1,19 @@
-//! Quickstart: generate a synthetic Criteo-format dataset, preprocess it
-//! with the PIPER simulator, and print what happened.
+//! Quickstart: build ONE streaming pipeline, run it over different
+//! sources and executors, and print what happened.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! This is the 30-second tour of the public API: data generation, the
-//! accelerator front-end, and the timing report.
+//! This is the 30-second tour of the public API: the `PipelineBuilder`
+//! (plan once), `Source`s (in-memory, file, synthetic), `Executor`s
+//! (CPU baseline / GPU model / PIPER), and the uniform `RunReport`.
 
-use piper::accel::{self, InputFormat, Mode, PiperConfig};
+use piper::accel::{InputFormat, Mode};
+use piper::coordinator::Backend;
+use piper::cpu_baseline::ConfigKind;
 use piper::data::{synth::SynthConfig, utf8, SynthDataset};
-use piper::ops::{Modulus, Vocab as _};
-use piper::report::{fmt_duration, fmt_rows_per_sec, Table};
+use piper::ops::PipelineSpec;
+use piper::pipeline::{FileSource, MemorySource, PipelineBuilder, SynthSource};
+use piper::report::{fmt_duration, fmt_rows_per_sec, fmt_tagged, Table};
 
 fn main() -> piper::Result<()> {
     // 1. A small synthetic dataset in the paper's raw UTF-8 format
@@ -19,35 +23,91 @@ fn main() -> piper::Result<()> {
     let raw = utf8::encode_dataset(&ds);
     println!("dataset: {rows} rows, {} raw bytes\n", raw.len());
 
-    // 2. Preprocess with PIPER in network mode, 5K vocabulary.
-    let cfg = PiperConfig::paper(Mode::Network, InputFormat::Utf8, Modulus::VOCAB_5K);
-    let run = accel::run(&cfg, &raw)?;
-
-    // 3. What came out: column-major preprocessed features.
-    println!(
-        "processed {} rows; vocabularies hold {} entries across {} sparse columns",
-        run.rows,
-        run.vocabs.iter().map(|v| v.len()).sum::<usize>(),
-        run.vocabs.len(),
+    // 2. Plan pipelines ONCE — the paper's DLRM operator graph at a 5K
+    //    vocabulary, chunked execution. Capability mismatches (e.g. a
+    //    binary-only CPU config on UTF-8 input) fail here, at planning.
+    let backends = [
+        Backend::Cpu { kind: ConfigKind::I, threads: 4 },
+        Backend::Gpu,
+        Backend::Piper { mode: Mode::Network },
+    ];
+    let mut t = Table::new(
+        "one spec, three executors (streamed in 4096-row chunks)",
+        &["executor", "rows", "vocab entries", "e2e", "rows/s"],
     );
-    let r0 = run.processed.row(0);
-    println!(
-        "row 0 → label {}, dense[0] {:.3}, sparse[0] idx {}\n",
-        r0.label, r0.dense[0], r0.sparse[0]
-    );
-
-    // 4. The modeled accelerator timing (tagged sim — this machine has no
-    //    FPGA; cycles follow the paper's IIs and clocks).
-    let mut t = Table::new("PIPER kernel model", &["quantity", "value"]);
-    t.row(&["clock".into(), format!("{:.0} MHz", run.kernel.clock_hz / 1e6)]);
-    t.row(&["loop 1 bottleneck".into(), run.kernel.loop1_bottleneck.into()]);
-    t.row(&["loop 2 bottleneck".into(), run.kernel.loop2_bottleneck.into()]);
-    t.row(&[
-        "cycles/row (loop1+loop2)".into(),
-        format!("{:.1}", run.kernel.loop1_cpr + run.kernel.loop2_cpr),
-    ]);
-    t.row(&["kernel time [sim]".into(), fmt_duration(run.kernel.seconds())]);
-    t.row(&["kernel rows/s [sim]".into(), fmt_rows_per_sec(run.kernel_rows_per_sec())]);
+    let mut reference = None;
+    for backend in &backends {
+        let pipeline = PipelineBuilder::new()
+            .spec(PipelineSpec::dlrm(5_000))
+            .input(InputFormat::Utf8)
+            .chunk_rows(4096)
+            .executor(backend.executor())
+            .build()?;
+        let mut source = MemorySource::new(&raw, InputFormat::Utf8);
+        let (columns, report) = pipeline.run_collect(&mut source)?;
+        // Every executor shares the functional core: outputs are
+        // bit-identical across platforms.
+        let expect = reference.get_or_insert_with(|| columns.clone());
+        assert_eq!(expect, &columns, "{} diverged", report.executor);
+        t.row(&[
+            report.executor.clone(),
+            report.rows.to_string(),
+            report.vocab_entries.to_string(),
+            fmt_tagged(report.e2e, report.tag),
+            fmt_rows_per_sec(report.e2e_rows_per_sec()),
+        ]);
+    }
+    t.note("sim-tagged rows model paper hardware; meas rows ran on this machine");
     t.print();
+    println!();
+
+    // 3. Pipeline reuse across sources: the same built pipeline serves a
+    //    file-backed submission (bounded memory — resident input is one
+    //    chunk) and a generator-backed one, with no replanning.
+    let pipeline = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(5_000))
+        .input(InputFormat::Utf8)
+        .chunk_rows(2048)
+        .executor(Backend::Piper { mode: Mode::Network }.executor())
+        .build()?;
+
+    let path = std::env::temp_dir().join("piper-quickstart.txt");
+    std::fs::write(&path, &raw)?;
+    let mut file_src = FileSource::open(&path, InputFormat::Utf8)?;
+    let (file_cols, file_report) = pipeline.run_collect(&mut file_src)?;
+
+    let mut synth_src = SynthSource::new(SynthConfig::small(rows), InputFormat::Utf8);
+    let (synth_cols, synth_report) = pipeline.run_collect(&mut synth_src)?;
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(file_cols, synth_cols, "same rows → same output, any source");
+    let mut t = Table::new(
+        "one pipeline, two sources (built once, submitted twice)",
+        &["source", "chunks", "rows", "wallclock [meas]", "modeled e2e"],
+    );
+    for (name, rep) in [("file", &file_report), ("synth generator", &synth_report)] {
+        t.row(&[
+            name.into(),
+            rep.chunks.to_string(),
+            rep.rows.to_string(),
+            fmt_duration(rep.wall),
+            fmt_tagged(rep.e2e, rep.tag),
+        ]);
+    }
+    t.note("file submissions hold one chunk in memory — never the dataset");
+    t.print();
+
+    // 4. A custom operator spec (paper §5: operators are runtime-
+    //    configurable): drop the logarithm, keep everything else.
+    let no_log = PipelineBuilder::new()
+        .spec_str("decode | fillmissing | hex2int | modulus:5000 | genvocab | applyvocab | neg2zero")?
+        .input(InputFormat::Utf8)
+        .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
+        .build()?;
+    let (cols, _) = no_log.run_collect(&mut MemorySource::new(&raw, InputFormat::Utf8))?;
+    println!(
+        "\ncustom spec (no logarithm): dense[0][0] = {} (raw count, not log-scaled)",
+        cols.dense[0][0]
+    );
     Ok(())
 }

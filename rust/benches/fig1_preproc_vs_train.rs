@@ -8,18 +8,24 @@
 //! sizes {128, 256, 512, 1024} (each its own artifact — lowered by
 //! `make artifacts`). Requires artifacts; exits cleanly if missing.
 
-use std::path::Path;
-use std::time::Instant;
-
-use piper::benchutil::{bench_rows, dataset};
-use piper::cpu_baseline::{run as cpu_run, BaselineConfig, ConfigKind};
-use piper::data::utf8;
-use piper::ops::Modulus;
-use piper::report::{fmt_duration, Table};
-use piper::runtime::Runtime;
-use piper::train::{BatchIter, Trainer};
-
+#[cfg(not(feature = "pjrt"))]
 fn main() {
+    eprintln!("fig1: built without the `pjrt` feature — rebuild with --features pjrt");
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    use std::path::Path;
+    use std::time::Instant;
+
+    use piper::benchutil::{bench_rows, dataset};
+    use piper::cpu_baseline::{run as cpu_run, BaselineConfig, ConfigKind};
+    use piper::data::utf8;
+    use piper::ops::Modulus;
+    use piper::report::{fmt_duration, Table};
+    use piper::runtime::Runtime;
+    use piper::train::{BatchIter, Trainer};
+
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("train_step.hlo.txt").exists() {
         eprintln!("fig1: artifacts missing — run `make artifacts` first");

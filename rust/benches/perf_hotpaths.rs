@@ -105,5 +105,23 @@ fn main() {
             std::hint::black_box(leader::run_loopback(job, &raw_utf8, 1 << 20).unwrap().stats);
         }), Some(raw_utf8.len() * 2), rows);
 
+    // The streaming engine end to end (planned once, CountSink output).
+    let pipeline = piper::pipeline::PipelineBuilder::new()
+        .spec(piper::ops::PipelineSpec::dlrm(m.range))
+        .schema(ds.schema())
+        .input(piper::accel::InputFormat::Utf8)
+        .chunk_rows(32 * 1024)
+        .executor(Box::new(piper::cpu_baseline::CpuExecutor::new(ConfigKind::I, 1)))
+        .build()
+        .expect("plan");
+    row("pipeline-engine e2e (1t)", time(3, || {
+            let mut src = piper::pipeline::MemorySource::new(
+                &raw_utf8,
+                piper::accel::InputFormat::Utf8,
+            );
+            let mut sink = piper::pipeline::CountSink::new();
+            std::hint::black_box(pipeline.run(&mut src, &mut sink).unwrap().rows);
+        }), Some(raw_utf8.len() * 2), rows);
+
     t.print();
 }

@@ -156,11 +156,11 @@ pub struct PiperRun {
 
 impl PiperRun {
     pub fn e2e_rows_per_sec(&self) -> f64 {
-        self.rows as f64 / self.e2e.as_secs_f64().max(1e-12)
+        crate::report::rows_per_sec(self.rows, self.e2e)
     }
 
     pub fn kernel_rows_per_sec(&self) -> f64 {
-        self.rows as f64 / self.kernel.seconds().as_secs_f64().max(1e-12)
+        crate::report::rows_per_sec(self.rows, self.kernel.seconds())
     }
 }
 
@@ -191,6 +191,131 @@ pub fn run(cfg: &PiperConfig, raw: &[u8]) -> crate::Result<PiperRun> {
         host,
         e2e,
     })
+}
+
+// ---------------------------------------------------------------------
+// Streaming executor
+// ---------------------------------------------------------------------
+
+use crate::data::DecodedRow;
+use crate::pipeline::{
+    ChunkState, Executor, ExecutorReport, ExecutorRun, Plan, StreamStats,
+};
+use crate::report::TimeTag;
+
+/// PIPER as a streaming [`Executor`], covering all three modes of
+/// Fig. 7. The functional two-loop column pipeline runs chunk by chunk;
+/// the cycle model ([`dataflow::model_timing`]) plus the mode's host or
+/// network model are evaluated once at the end over the stream totals —
+/// the same quantities [`run`] derives from a one-shot buffer, so the
+/// modeled times are identical. All times are tagged sim.
+///
+/// The vocabulary-placement capacity check ([`VocabPlacement::validate`])
+/// runs at **planning** time: an over-capacity SRAM build fails in
+/// [`crate::pipeline::PipelineBuilder::build`], not inside a serving
+/// worker.
+#[derive(Debug, Clone)]
+pub struct PiperExecutor {
+    pub mode: Mode,
+    /// Overrides applied on top of [`PiperConfig::paper`] (dataflow
+    /// counts, clock, placement); `None` = the paper configuration.
+    pub config: Option<PiperConfig>,
+}
+
+impl PiperExecutor {
+    pub fn new(mode: Mode) -> Self {
+        PiperExecutor { mode, config: None }
+    }
+
+    pub fn with_config(config: PiperConfig) -> Self {
+        PiperExecutor { mode: config.mode, config: Some(config) }
+    }
+
+    /// The concrete accelerator configuration for a plan.
+    fn config_for(&self, plan: &Plan) -> PiperConfig {
+        let mut cfg = self.config.clone().unwrap_or_else(|| {
+            PiperConfig::paper(
+                self.mode,
+                plan.input,
+                plan.modulus.unwrap_or(crate::ops::Modulus::VOCAB_5K),
+            )
+        });
+        cfg.input = plan.input;
+        cfg.schema = plan.schema;
+        if let Some(m) = plan.modulus {
+            cfg.modulus = m;
+        }
+        cfg
+    }
+}
+
+impl Executor for PiperExecutor {
+    fn name(&self) -> String {
+        format!("PIPER {}", self.mode.name())
+    }
+
+    fn accepts(&self, _input: InputFormat) -> bool {
+        true // decode-in-kernel handles UTF-8; LoadData handles binary
+    }
+
+    fn plan_check(&self, plan: &Plan) -> crate::Result<()> {
+        let cfg = self.config_for(plan);
+        if plan.flags.gen_vocab {
+            cfg.vocab_placement.validate(cfg.vocab_storage_bits())?;
+        }
+        Ok(())
+    }
+
+    fn begin(&self, plan: &Plan) -> crate::Result<Box<dyn ExecutorRun>> {
+        Ok(Box::new(PiperExecRun {
+            cfg: self.config_for(plan),
+            state: ChunkState::new(plan),
+        }))
+    }
+}
+
+struct PiperExecRun {
+    cfg: PiperConfig,
+    state: ChunkState,
+}
+
+impl ExecutorRun for PiperExecRun {
+    fn observe(&mut self, rows: &[DecodedRow]) -> crate::Result<()> {
+        self.state.observe(rows);
+        Ok(())
+    }
+
+    fn process(&mut self, rows: &[DecodedRow]) -> crate::Result<ProcessedColumns> {
+        Ok(self.state.process(rows))
+    }
+
+    fn finish(&mut self, stats: &StreamStats) -> crate::Result<ExecutorReport> {
+        let kernel = dataflow::model_timing(
+            &self.cfg,
+            stats.raw_bytes as usize,
+            stats.rows as usize,
+            self.state.vocab_entries(),
+        );
+        let e2e = match self.cfg.mode {
+            Mode::LocalDecodeInKernel | Mode::LocalDecodeInHost => HostModel::default()
+                .local_breakdown(
+                    &self.cfg,
+                    stats.raw_bytes as usize,
+                    stats.rows as usize,
+                    kernel.seconds(),
+                )
+                .total(),
+            Mode::Network => {
+                network::stream_time(&self.cfg, stats.raw_bytes as usize, kernel.seconds())
+            }
+        };
+        Ok(ExecutorReport {
+            tag: TimeTag::Sim,
+            modeled_e2e: Some(e2e),
+            compute: Some(kernel.seconds()),
+            vocab_entries: self.state.vocab_entries(),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -295,6 +420,46 @@ mod tests {
                         &raw).unwrap();
         assert!(large.kernel.seconds() > small.kernel.seconds(),
             "1M vocab (HBM, 135 MHz) must be slower than 5K (SRAM, 250 MHz)");
+    }
+
+    #[test]
+    fn streaming_executor_matches_one_shot_run() {
+        let ds = SynthDataset::generate(SynthConfig::small(250));
+        let m = crate::ops::Modulus::new(997);
+        let raw = utf8::encode_dataset(&ds);
+        let mut cfg = PiperConfig::paper(Mode::Network, InputFormat::Utf8, m);
+        cfg.schema = ds.schema();
+        let one_shot = run(&cfg, &raw).unwrap();
+
+        let pipeline = crate::pipeline::PipelineBuilder::new()
+            .spec(crate::ops::PipelineSpec::dlrm(m.range))
+            .schema(ds.schema())
+            .input(InputFormat::Utf8)
+            .chunk_rows(100)
+            .executor(Box::new(PiperExecutor::new(Mode::Network)))
+            .build()
+            .unwrap();
+        let mut src = crate::pipeline::MemorySource::new(&raw, InputFormat::Utf8);
+        let (cols, report) = pipeline.run_collect(&mut src).unwrap();
+        assert_eq!(cols, one_shot.processed);
+        assert_eq!(report.tag, TimeTag::Sim);
+        let d = report.e2e.as_secs_f64() - one_shot.e2e.as_secs_f64();
+        assert!(d.abs() < 1e-9, "modeled e2e drifted by {d}");
+        let dk = report.compute.unwrap().as_secs_f64() - one_shot.kernel.seconds().as_secs_f64();
+        assert!(dk.abs() < 1e-9, "kernel time drifted by {dk}");
+    }
+
+    #[test]
+    fn sram_over_capacity_is_a_planning_error() {
+        let mut cfg =
+            PiperConfig::paper(Mode::Network, InputFormat::Binary, crate::ops::Modulus::VOCAB_1M);
+        cfg.vocab_placement = VocabPlacement::Sram;
+        let err = crate::pipeline::PipelineBuilder::new()
+            .spec(crate::ops::PipelineSpec::dlrm(1_000_000))
+            .input(InputFormat::Binary)
+            .executor(Box::new(PiperExecutor::with_config(cfg)))
+            .build();
+        assert!(err.is_err(), "1M×26 vocab must not plan into SRAM");
     }
 
     #[test]

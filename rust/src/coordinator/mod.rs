@@ -3,19 +3,24 @@
 //!
 //! A [`Backend`] is one of the platforms the paper compares (Fig. 9 /
 //! Table 3): the multithreaded CPU baseline, the GPU model, or PIPER in
-//! its three modes. [`run_backend`] executes any of them over the same
-//! raw buffer and returns a [`RunSummary`] with uniformly-tagged timings,
-//! which [`compare`] assembles into the paper's comparison rows.
+//! its three modes. Since the pipeline-engine redesign this module is a
+//! thin adapter: [`Backend::executor`] maps a backend onto its
+//! [`Executor`], [`run_backend`] plans a one-shot [`Pipeline`] over an
+//! in-memory buffer, and [`compare`] assembles the paper's comparison
+//! rows. Long-lived callers should build a pipeline once via
+//! [`pipeline_for`] (or [`PipelineBuilder`] directly) and reuse it
+//! across submissions.
 
 use std::time::Duration;
 
-use crate::accel::{self, InputFormat, Mode, PiperConfig};
-use crate::cpu_baseline::{self, BaselineConfig, ConfigKind};
+use crate::accel::{InputFormat, Mode, PiperExecutor};
+use crate::cpu_baseline::{ConfigKind, CpuExecutor};
 use crate::data::row::ProcessedColumns;
 use crate::data::Schema;
-use crate::gpu_sim::{self, GpuInput, GpuModel};
-use crate::ops::Modulus;
-use crate::report::TimeTag;
+use crate::gpu_sim::GpuExecutor;
+use crate::ops::{Modulus, PipelineSpec};
+use crate::pipeline::{Executor, MemorySource, Pipeline, PipelineBuilder};
+use crate::report::{self, TimeTag};
 use crate::Result;
 
 /// A platform under comparison.
@@ -38,18 +43,20 @@ impl Backend {
         }
     }
 
-    /// Which raw format this backend consumes for a given experiment
-    /// input format.
-    pub fn accepts(&self, input: InputFormat) -> bool {
+    /// The streaming executor implementing this backend.
+    pub fn executor(&self) -> Box<dyn Executor> {
         match self {
-            // Google-cloud CPU config cannot take binary (paper Table 2) —
-            // modeled by ConfigKind::III being the only binary consumer.
-            Backend::Cpu { kind, .. } => match input {
-                InputFormat::Utf8 => !kind.binary_input(),
-                InputFormat::Binary => kind.binary_input(),
-            },
-            _ => true,
+            Backend::Cpu { kind, threads } => Box::new(CpuExecutor::new(*kind, *threads)),
+            Backend::Gpu => Box::new(GpuExecutor::default()),
+            Backend::Piper { mode } => Box::new(PiperExecutor::new(*mode)),
         }
+    }
+
+    /// Which raw format this backend consumes for a given experiment
+    /// input format. Delegates to the executor's planning-time
+    /// capability check (paper Table 2: only Config III takes binary).
+    pub fn accepts(&self, input: InputFormat) -> bool {
+        self.executor().accepts(input)
     }
 }
 
@@ -67,12 +74,11 @@ pub struct RunSummary {
 
 impl RunSummary {
     pub fn e2e_rows_per_sec(&self) -> f64 {
-        self.rows as f64 / self.e2e.as_secs_f64().max(1e-12)
+        report::rows_per_sec(self.rows, self.e2e)
     }
 
     pub fn compute_rows_per_sec(&self) -> Option<f64> {
-        self.compute
-            .map(|c| self.rows as f64 / c.as_secs_f64().max(1e-12))
+        self.compute.map(|c| report::rows_per_sec(self.rows, c))
     }
 }
 
@@ -90,61 +96,43 @@ impl Experiment {
     }
 }
 
-/// Execute one backend over a raw buffer.
+/// Build a reusable [`Pipeline`] for a backend + experiment — planning
+/// (spec validation, capability checks, accelerator capacity) happens
+/// here, once.
+pub fn pipeline_for(backend: &Backend, exp: &Experiment) -> Result<Pipeline> {
+    pipeline_for_chunked(backend, exp, 64 * 1024)
+}
+
+/// [`pipeline_for`] with an explicit chunk size (rows per chunk).
+pub fn pipeline_for_chunked(
+    backend: &Backend,
+    exp: &Experiment,
+    chunk_rows: usize,
+) -> Result<Pipeline> {
+    PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(exp.modulus.range))
+        .schema(exp.schema)
+        .input(exp.input)
+        .chunk_rows(chunk_rows)
+        .executor(backend.executor())
+        .build()
+}
+
+/// Execute one backend over a raw buffer — the one-shot adapter over the
+/// streaming engine, kept for the CLI, benches and tests. Plans a fresh
+/// pipeline per call; reuse [`pipeline_for`] when submitting repeatedly.
 pub fn run_backend(backend: &Backend, exp: &Experiment, raw: &[u8]) -> Result<RunSummary> {
-    anyhow::ensure!(
-        backend.accepts(exp.input),
-        "{} does not accept {:?} input",
-        backend.name(),
-        exp.input
-    );
-    match backend {
-        Backend::Cpu { kind, threads } => {
-            let mut cfg = BaselineConfig::new(*kind, *threads, exp.modulus);
-            cfg.schema = exp.schema;
-            let run = cpu_baseline::run(&cfg, raw);
-            let has_sim = run.times.total() > run.times.sif.measured
-                + run.times.gen_vocab.measured
-                + run.times.apply_vocab.measured
-                + run.times.concat.measured;
-            Ok(RunSummary {
-                backend: backend.name(),
-                rows: run.rows,
-                e2e: run.times.total(),
-                tag: if has_sim { TimeTag::Mixed } else { TimeTag::Measured },
-                compute: Some(run.times.compute()),
-                processed: run.processed,
-            })
-        }
-        Backend::Gpu => {
-            let input = match exp.input {
-                InputFormat::Utf8 => GpuInput::Utf8,
-                InputFormat::Binary => GpuInput::Binary,
-            };
-            let run = gpu_sim::run(&GpuModel::default(), exp.schema, exp.modulus, input, raw)?;
-            Ok(RunSummary {
-                backend: backend.name(),
-                rows: run.rows,
-                e2e: run.breakdown.total(),
-                tag: TimeTag::Sim,
-                compute: Some(run.breakdown.total() - run.breakdown.convert),
-                processed: run.processed,
-            })
-        }
-        Backend::Piper { mode } => {
-            let mut cfg = PiperConfig::paper(*mode, exp.input, exp.modulus);
-            cfg.schema = exp.schema;
-            let run = accel::run(&cfg, raw)?;
-            Ok(RunSummary {
-                backend: backend.name(),
-                rows: run.rows,
-                e2e: run.e2e,
-                tag: TimeTag::Sim,
-                compute: Some(run.kernel.seconds()),
-                processed: run.processed,
-            })
-        }
-    }
+    let pipeline = pipeline_for(backend, exp)?;
+    let mut source = MemorySource::new(raw, exp.input);
+    let (processed, run) = pipeline.run_collect(&mut source)?;
+    Ok(RunSummary {
+        backend: run.executor.clone(),
+        rows: run.rows,
+        e2e: run.e2e,
+        tag: run.tag,
+        compute: run.compute,
+        processed,
+    })
 }
 
 /// One comparison row: backend vs the chosen reference.

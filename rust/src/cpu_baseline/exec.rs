@@ -1,0 +1,238 @@
+//! The CPU baseline as a streaming [`Executor`] — Meta's row-partitioned
+//! multithreading applied per chunk.
+//!
+//! Pass 1 mirrors GV: each chunk is partitioned across `threads`, every
+//! thread builds private per-column sub-dictionaries, and the shards are
+//! merged in order at the chunk barrier (deterministically equivalent to
+//! a sequential scan — the same argument as §2.3's merge). Pass 2
+//! mirrors AV + CFR: threads map their row shards through the sealed
+//! vocabularies and the shard blocks are concatenated in order.
+//!
+//! Compute is **measured** (it really runs on this machine's cores).
+//! Config I's intermediate disk round-trips are still charged by the
+//! calibrated [`SimDisk`] model over the stream totals — the same byte
+//! volumes the staged [`super::run`] charges — so its end-to-end time
+//! stays `meas+sim`-tagged and comparable to the paper. Config II's
+//! shared locked dictionary remains a measurement artifact of the staged
+//! baseline (Fig. 8); the streaming executor always uses private
+//! sub-dictionaries, so its output is deterministic for all configs.
+
+use std::time::{Duration, Instant};
+
+use crate::accel::InputFormat;
+use crate::data::row::ProcessedColumns;
+use crate::data::DecodedRow;
+use crate::ops::HashVocab;
+use crate::pipeline::{ChunkState, Executor, ExecutorReport, ExecutorRun, Plan, StreamStats};
+use crate::report::TimeTag;
+use crate::Result;
+
+use super::pipeline::partition_rows;
+use super::{ConfigKind, SimDisk};
+
+/// The multithreaded CPU baseline, as a reusable streaming executor.
+#[derive(Debug, Clone)]
+pub struct CpuExecutor {
+    pub kind: ConfigKind,
+    pub threads: usize,
+    /// Simulated-disk parameters (only Config I charges them).
+    pub disk: SimDisk,
+}
+
+impl CpuExecutor {
+    pub fn new(kind: ConfigKind, threads: usize) -> Self {
+        CpuExecutor { kind, threads: threads.max(1), disk: SimDisk::default() }
+    }
+}
+
+impl Executor for CpuExecutor {
+    fn name(&self) -> String {
+        format!("CPU-{} {}", self.threads, self.kind.name())
+    }
+
+    /// Paper Table 2: the UTF-8 configs (I/II) cannot take binary input
+    /// and Config III consumes only the pre-decoded binary dataset.
+    fn accepts(&self, input: InputFormat) -> bool {
+        match input {
+            InputFormat::Utf8 => !self.kind.binary_input(),
+            InputFormat::Binary => self.kind.binary_input(),
+        }
+    }
+
+    fn begin(&self, plan: &Plan) -> Result<Box<dyn ExecutorRun>> {
+        Ok(Box::new(CpuRun {
+            state: ChunkState::new(plan),
+            kind: self.kind,
+            threads: self.threads,
+            disk: self.disk,
+            observe_time: Duration::ZERO,
+            process_time: Duration::ZERO,
+        }))
+    }
+}
+
+struct CpuRun {
+    state: ChunkState,
+    kind: ConfigKind,
+    threads: usize,
+    disk: SimDisk,
+    observe_time: Duration,
+    process_time: Duration,
+}
+
+impl ExecutorRun for CpuRun {
+    fn observe(&mut self, rows: &[DecodedRow]) -> Result<()> {
+        let t0 = Instant::now();
+        if self.threads <= 1 || rows.len() < 2 * self.threads {
+            self.state.observe(rows);
+        } else {
+            let parts = partition_rows(rows.len(), self.threads);
+            let mut subs: Vec<Vec<HashVocab>> = Vec::with_capacity(parts.len());
+            let state = &self.state;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = parts
+                    .iter()
+                    .map(|range| {
+                        let shard = &rows[range.clone()];
+                        scope.spawn(move || state.observe_sub(shard))
+                    })
+                    .collect();
+                for h in handles {
+                    subs.push(h.join().expect("GV worker panicked"));
+                }
+            });
+            self.state.merge_subs(&subs);
+        }
+        self.observe_time += t0.elapsed();
+        Ok(())
+    }
+
+    fn process(&mut self, rows: &[DecodedRow]) -> Result<ProcessedColumns> {
+        let t0 = Instant::now();
+        let block = if self.threads <= 1 || rows.len() < 2 * self.threads {
+            self.state.process(rows)
+        } else {
+            let parts = partition_rows(rows.len(), self.threads);
+            let mut blocks: Vec<ProcessedColumns> = Vec::with_capacity(parts.len());
+            let state = &self.state;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = parts
+                    .iter()
+                    .map(|range| {
+                        let shard = &rows[range.clone()];
+                        scope.spawn(move || state.process(shard))
+                    })
+                    .collect();
+                for h in handles {
+                    blocks.push(h.join().expect("AV worker panicked"));
+                }
+            });
+            // CFR within the chunk: shard blocks back in row order.
+            let mut out = blocks.remove(0);
+            for b in &blocks {
+                out.extend_from(b);
+            }
+            out
+        };
+        self.process_time += t0.elapsed();
+        Ok(block)
+    }
+
+    fn finish(&mut self, stats: &StreamStats) -> Result<ExecutorReport> {
+        // Config I round-trips intermediates through (simulated) disk —
+        // the same byte volumes the staged baseline charges: SIF writes
+        // the sub-files, GV reads them back and writes the partially
+        // processed data, AV reads and rewrites it, CFR reads it again
+        // (paper §4.2.1).
+        let disk_sim = if self.kind == ConfigKind::I {
+            let raw = stats.raw_bytes as usize;
+            let part = stats.rows as usize * self.state.schema.binary_row_bytes();
+            self.disk.write_cost(raw, self.threads)
+                + self.disk.read_cost(raw, self.threads)
+                + self.disk.write_cost(part, self.threads)
+                + self.disk.read_cost(part, self.threads)
+                + self.disk.write_cost(part, self.threads)
+                + self.disk.read_cost(part, self.threads)
+        } else {
+            Duration::ZERO
+        };
+        let (tag, modeled_e2e) = if disk_sim > Duration::ZERO {
+            (TimeTag::Mixed, Some(stats.wall + disk_sim))
+        } else {
+            (TimeTag::Measured, None) // the engine's measured wallclock is the e2e
+        };
+        Ok(ExecutorReport {
+            tag,
+            modeled_e2e,
+            // GV+AV work actually executed here (Table 3 scope, measured).
+            compute: Some(self.observe_time + self.process_time),
+            vocab_entries: self.state.vocab_entries(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{utf8, SynthConfig, SynthDataset};
+    use crate::ops::Modulus;
+    use crate::pipeline::{MemorySource, PipelineBuilder};
+
+    #[test]
+    fn streaming_cpu_matches_staged_baseline() {
+        let ds = SynthDataset::generate(SynthConfig::small(400));
+        let raw = utf8::encode_dataset(&ds);
+        let m = Modulus::new(997);
+
+        let staged = super::super::run(
+            &super::super::BaselineConfig::new(ConfigKind::I, 4, m),
+            &raw,
+        );
+
+        for chunk_rows in [32usize, 1000] {
+            let pipeline = PipelineBuilder::new()
+                .spec(crate::ops::PipelineSpec::dlrm(m.range))
+                .schema(ds.schema())
+                .input(InputFormat::Utf8)
+                .chunk_rows(chunk_rows)
+                .executor(Box::new(CpuExecutor::new(ConfigKind::I, 4)))
+                .build()
+                .unwrap();
+            let mut source = MemorySource::new(&raw, InputFormat::Utf8);
+            let (cols, report) = pipeline.run_collect(&mut source).unwrap();
+            assert_eq!(cols, staged.processed, "chunk_rows={chunk_rows}");
+            assert_eq!(report.rows, 400);
+            // Config I charges the simulated disk round-trips on top of
+            // the measured wallclock.
+            assert_eq!(report.tag, TimeTag::Mixed);
+            assert!(report.e2e > report.wall, "disk sim must be charged");
+            assert!(report.compute.unwrap() <= report.wall + Duration::from_millis(50));
+        }
+    }
+
+    #[test]
+    fn config_iii_is_purely_measured() {
+        let ds = SynthDataset::generate(SynthConfig::small(150));
+        let raw = crate::data::binary::encode_dataset(&ds);
+        let pipeline = PipelineBuilder::new()
+            .spec(crate::ops::PipelineSpec::dlrm(499))
+            .schema(ds.schema())
+            .input(InputFormat::Binary)
+            .chunk_rows(64)
+            .executor(Box::new(CpuExecutor::new(ConfigKind::III, 2)))
+            .build()
+            .unwrap();
+        let mut source = MemorySource::new(&raw, InputFormat::Binary);
+        let (_, report) = pipeline.run_collect(&mut source).unwrap();
+        assert_eq!(report.tag, TimeTag::Measured);
+        assert_eq!(report.e2e, report.wall, "no sim component outside Config I");
+    }
+
+    #[test]
+    fn capability_checks_match_paper_table2() {
+        let i = CpuExecutor::new(ConfigKind::I, 2);
+        let iii = CpuExecutor::new(ConfigKind::III, 2);
+        assert!(i.accepts(InputFormat::Utf8) && !i.accepts(InputFormat::Binary));
+        assert!(!iii.accepts(InputFormat::Utf8) && iii.accepts(InputFormat::Binary));
+    }
+}

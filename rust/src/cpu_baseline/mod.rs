@@ -33,10 +33,12 @@
 //! cores), except the Config I disk component which is tagged simulated.
 
 pub mod disk;
+pub mod exec;
 pub mod pipeline;
 pub mod scaling;
 
 pub use disk::SimDisk;
+pub use exec::CpuExecutor;
 pub use pipeline::{run, BaselineRun, StageTimes};
 pub use scaling::{profile_single_thread, project, ServerModel, WorkProfile};
 

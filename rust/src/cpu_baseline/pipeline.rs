@@ -62,12 +62,12 @@ pub struct BaselineRun {
 impl BaselineRun {
     /// Rows/second over GV+AV (Table 3 protocol).
     pub fn compute_rows_per_sec(&self) -> f64 {
-        self.rows as f64 / self.times.compute().as_secs_f64().max(1e-12)
+        crate::report::rows_per_sec(self.rows, self.times.compute())
     }
 
     /// Rows/second end-to-end.
     pub fn e2e_rows_per_sec(&self) -> f64 {
-        self.rows as f64 / self.times.total().as_secs_f64().max(1e-12)
+        crate::report::rows_per_sec(self.rows, self.times.total())
     }
 }
 

@@ -51,7 +51,9 @@ pub fn decode_bytes(raw: &[u8], schema: Schema) -> Result<Vec<DecodedRow>> {
         let mut words = chunk
             .chunks_exact(4)
             .map(|w| u32::from_le_bytes([w[0], w[1], w[2], w[3]]));
-        let label = words.next().unwrap() as i32;
+        // rb = 4 × num_columns, so each chunk holds exactly the label,
+        // dense and sparse words — the length ensure above covers it.
+        let label = words.next().expect("row chunk holds >= 1 word") as i32;
         let dense: Vec<i32> =
             (&mut words).take(schema.num_dense).map(|w| w as i32).collect();
         let sparse: Vec<u32> = words.collect();

@@ -16,4 +16,4 @@ pub mod utf8;
 
 pub use row::{DecodedRow, ProcessedRow};
 pub use schema::Schema;
-pub use synth::{SynthConfig, SynthDataset};
+pub use synth::{RowGen, SynthConfig, SynthDataset};

@@ -43,7 +43,8 @@ pub struct ProcessedRow {
 }
 
 /// Column-major storage for a fully preprocessed dataset — what the
-/// training consumer ([`crate::train`]) slices minibatches from, and what
+/// training consumer (`crate::train`, pjrt feature) slices minibatches
+/// from, and what
 /// `Concatenate` (paper Table 1) assembles back into rows.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ProcessedColumns {

@@ -107,9 +107,21 @@ pub struct SynthDataset {
     pub missing: Vec<u64>,
 }
 
-impl SynthDataset {
-    /// Generate the dataset. Deterministic in `config.seed`.
-    pub fn generate(config: SynthConfig) -> Self {
+/// Streaming row generator — the same deterministic row stream
+/// [`SynthDataset::generate`] materializes, yielded one row at a time so
+/// a [`crate::pipeline::Source`] can produce arbitrarily large datasets
+/// with bounded memory. Re-creating the generator replays the identical
+/// stream (deterministic in `config.seed`).
+#[derive(Debug, Clone)]
+pub struct RowGen {
+    config: SynthConfig,
+    sparse_cols: Vec<(Zipf, u64)>,
+    rng: XorShift64,
+    emitted: usize,
+}
+
+impl RowGen {
+    pub fn new(config: SynthConfig) -> Self {
         assert!(
             config.schema.num_features() <= 64,
             "missing mask packs into u64; widen if you need >64 features"
@@ -132,45 +144,72 @@ impl SynthDataset {
             })
             .collect();
 
-        let mut rows = Vec::with_capacity(config.rows);
-        let mut missing = Vec::with_capacity(config.rows);
-        let mut rng = root.fork(1);
+        let rng = root.fork(1);
+        RowGen { config, sparse_cols, rng, emitted: 0 }
+    }
 
-        for _ in 0..config.rows {
-            let mut mask = 0u64;
-            let label = i32::from(rng.chance(0.25));
+    pub fn schema(&self) -> Schema {
+        self.config.schema
+    }
 
-            let mut dense = Vec::with_capacity(schema.num_dense);
-            for d in 0..schema.num_dense {
-                if rng.chance(config.missing_rate) {
-                    mask |= 1 << d;
-                    dense.push(0); // FillMissing default (paper: 0)
-                    continue;
-                }
-                // log-normal-ish counts: exp of a half-gaussian, scaled.
-                let mag = (rng.gaussian().abs() * config.dense_scale) as i64;
-                let v = if rng.chance(config.negative_rate) { -mag - 1 } else { mag };
-                dense.push(v as i32);
+    /// Rows remaining in the stream.
+    pub fn remaining(&self) -> usize {
+        self.config.rows - self.emitted
+    }
+
+    /// Next row plus its per-field missing mask; `None` after
+    /// `config.rows` rows.
+    pub fn next_row(&mut self) -> Option<(DecodedRow, u64)> {
+        if self.emitted >= self.config.rows {
+            return None;
+        }
+        self.emitted += 1;
+        let schema = self.config.schema;
+        let rng = &mut self.rng;
+        let mut mask = 0u64;
+        let label = i32::from(rng.chance(0.25));
+
+        let mut dense = Vec::with_capacity(schema.num_dense);
+        for d in 0..schema.num_dense {
+            if rng.chance(self.config.missing_rate) {
+                mask |= 1 << d;
+                dense.push(0); // FillMissing default (paper: 0)
+                continue;
             }
-
-            let mut sparse = Vec::with_capacity(schema.num_sparse);
-            for (s, (zipf, salt)) in sparse_cols.iter().enumerate() {
-                if rng.chance(config.missing_rate) {
-                    mask |= 1 << (schema.num_dense + s);
-                    sparse.push(0);
-                    continue;
-                }
-                let rank = zipf.sample(&mut rng);
-                // Hash the rank into a 32-bit value — what Criteo's
-                // anonymization does ("hashed string values", paper §4.1).
-                let h = splitmix(rank ^ salt);
-                sparse.push((h >> 32) as u32);
-            }
-
-            rows.push(DecodedRow { label, dense, sparse });
-            missing.push(mask);
+            // log-normal-ish counts: exp of a half-gaussian, scaled.
+            let mag = (rng.gaussian().abs() * self.config.dense_scale) as i64;
+            let v = if rng.chance(self.config.negative_rate) { -mag - 1 } else { mag };
+            dense.push(v as i32);
         }
 
+        let mut sparse = Vec::with_capacity(schema.num_sparse);
+        for (s, (zipf, salt)) in self.sparse_cols.iter().enumerate() {
+            if rng.chance(self.config.missing_rate) {
+                mask |= 1 << (schema.num_dense + s);
+                sparse.push(0);
+                continue;
+            }
+            let rank = zipf.sample(rng);
+            // Hash the rank into a 32-bit value — what Criteo's
+            // anonymization does ("hashed string values", paper §4.1).
+            let h = splitmix(rank ^ salt);
+            sparse.push((h >> 32) as u32);
+        }
+
+        Some((DecodedRow { label, dense, sparse }, mask))
+    }
+}
+
+impl SynthDataset {
+    /// Generate the dataset. Deterministic in `config.seed`.
+    pub fn generate(config: SynthConfig) -> Self {
+        let mut gen = RowGen::new(config.clone());
+        let mut rows = Vec::with_capacity(config.rows);
+        let mut missing = Vec::with_capacity(config.rows);
+        while let Some((row, mask)) = gen.next_row() {
+            rows.push(row);
+            missing.push(mask);
+        }
         SynthDataset { config, rows, missing }
     }
 
@@ -200,6 +239,21 @@ pub fn splitmix(mut x: u64) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn row_gen_streams_the_same_rows() {
+        let cfg = SynthConfig::small(150);
+        let ds = SynthDataset::generate(cfg.clone());
+        let mut gen = RowGen::new(cfg);
+        assert_eq!(gen.remaining(), 150);
+        for r in 0..150 {
+            let (row, mask) = gen.next_row().unwrap();
+            assert_eq!(row, ds.rows[r], "row {r}");
+            assert_eq!(mask, ds.missing[r], "mask {r}");
+        }
+        assert!(gen.next_row().is_none());
+        assert_eq!(gen.remaining(), 0);
+    }
 
     #[test]
     fn deterministic_generation() {

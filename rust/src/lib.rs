@@ -30,10 +30,22 @@
 //! * [`net`] — network-attached mode over real TCP (loopback): leader
 //!   streams raw rows, the accelerator node preprocesses in a pipelined
 //!   fashion.
-//! * [`runtime`] / [`train`] — PJRT runtime that loads the AOT-compiled
+//! * [`pipeline`] — the composable streaming execution engine: a
+//!   [`pipeline::Source`] of raw chunks (in-memory buffer, file, synth
+//!   generator, TCP stream) feeds a planned operator graph through any
+//!   [`pipeline::Executor`] (CPU baseline, GPU model, the three PIPER
+//!   modes) into a [`pipeline::Sink`], with bounded memory and a
+//!   [`pipeline::Pipeline`] that is planned once and reused across
+//!   submissions. This is the public execution API; everything else
+//!   (CLI, coordinator, benches) builds on it.
+//! * `runtime` / `train` — PJRT runtime that loads the AOT-compiled
 //!   JAX/Pallas DLRM (`artifacts/*.hlo.txt`) and the training loop that
-//!   consumes preprocessed batches (paper Fig. 1 consumer).
-//! * [`coordinator`] — backend dispatch, pipeline config, scheduling.
+//!   consumes preprocessed batches (paper Fig. 1 consumer). Both are
+//!   gated behind the `pjrt` cargo feature (they need the xla_extension
+//!   shared library).
+//! * [`coordinator`] — the [`coordinator::Backend`] enumeration and the
+//!   one-shot [`coordinator::run_backend`] / [`coordinator::compare`]
+//!   drivers, now thin adapters over [`pipeline`].
 //! * [`report`] — the table/figure renderers used by `rust/benches/`.
 //!
 //! Simulated time and measured wallclock are never mixed silently — see
@@ -49,8 +61,11 @@ pub mod gpu_sim;
 pub mod net;
 pub mod ops;
 pub mod accel;
+pub mod pipeline;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;
 

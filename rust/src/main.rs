@@ -15,11 +15,12 @@ use std::path::Path;
 
 use piper::accel::{InputFormat, Mode};
 use piper::config::Config;
-use piper::coordinator::{self, Backend, Experiment};
+use piper::coordinator::{self, Backend};
 use piper::cpu_baseline::ConfigKind;
 use piper::data::{binary, synth::SynthConfig, utf8, Schema, SynthDataset};
 use piper::net::{self, protocol::Job, stream::WireFormat};
 use piper::ops::Modulus;
+use piper::pipeline::FileSource;
 use piper::report::{fmt_duration, fmt_rows_per_sec, fmt_speedup, fmt_tagged, Table};
 use piper::Result;
 
@@ -31,12 +32,15 @@ USAGE: piper <COMMAND> [key=value]... [--config FILE]
 COMMANDS:
   gen-data    rows=100000 format=utf8|binary out=PATH seed=N
   preprocess  input=PATH format=utf8|binary backend=cpu|gpu|piper-local|piper-host-decode|piper-net
-              vocab=5000 threads=8 cpu_config=1|2|3
+              vocab=5000 threads=8 cpu_config=1|2|3 chunk_rows=65536 spec='modulus:5000|genvocab|...'
   compare     rows=20000 vocab=5000 format=utf8|binary
   serve       addr=127.0.0.1:7700 jobs=1
   submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000
   train       input=PATH format=utf8 vocab=5000 steps=100 artifacts=artifacts
   help        print this message
+
+preprocess and submit stream the input file in bounded chunks — the
+dataset is never resident in memory.
 ";
 
 fn main() {
@@ -60,7 +64,9 @@ fn parse_args() -> Result<(String, Config)> {
             let file = Config::from_file(Path::new(path))?;
             for k in file.keys().map(str::to_string).collect::<Vec<_>>() {
                 if cfg.get(&k).is_none() {
-                    cfg.set(&k, file.get(&k).unwrap());
+                    if let Some(v) = file.get(&k) {
+                        cfg.set(&k, v);
+                    }
                 }
             }
             i += 2;
@@ -100,6 +106,10 @@ fn format_of(cfg: &Config) -> Result<InputFormat> {
     }
 }
 
+/// Whole-file read — only the pjrt `train` path still wants the buffer
+/// resident (the trainer slices minibatches from it); everything else
+/// streams via [`FileSource`].
+#[cfg(feature = "pjrt")]
 fn read_input(cfg: &Config) -> Result<Vec<u8>> {
     let path = cfg
         .get("input")
@@ -146,17 +156,41 @@ fn backend_of(cfg: &Config) -> Result<Backend> {
 }
 
 fn cmd_preprocess(cfg: &Config) -> Result<()> {
-    let raw = read_input(cfg)?;
+    let path = cfg
+        .get("input")
+        .ok_or_else(|| anyhow::anyhow!("missing input=PATH"))?;
     let backend = backend_of(cfg)?;
-    let exp = Experiment::new(modulus_of(cfg)?, format_of(cfg)?);
-    let summary = coordinator::run_backend(&backend, &exp, &raw)?;
-    let mut t = Table::new("preprocess", &["backend", "rows", "e2e", "rows/s"]);
+    let format = format_of(cfg)?;
+    let modulus = modulus_of(cfg)?;
+
+    // Plan once (spec + capability checks), then stream the file through
+    // the engine in bounded chunks.
+    let mut builder = piper::pipeline::PipelineBuilder::new()
+        .input(format)
+        .chunk_rows(cfg.get_usize("chunk_rows", 64 * 1024)?)
+        .executor(backend.executor());
+    builder = match cfg.get("spec") {
+        Some(spec) => builder.spec_str(spec)?,
+        None => builder.spec(piper::ops::PipelineSpec::dlrm(modulus.range)),
+    };
+    let pipeline = builder.build()?;
+    let mut source = FileSource::open(Path::new(path), format)?;
+    let mut sink = piper::pipeline::CountSink::new();
+    let report = pipeline.run(&mut source, &mut sink)?;
+
+    let mut t = Table::new(
+        "preprocess",
+        &["backend", "rows", "chunks", "vocab entries", "e2e", "rows/s"],
+    );
     t.row(&[
-        summary.backend.clone(),
-        summary.rows.to_string(),
-        fmt_tagged(summary.e2e, summary.tag),
-        fmt_rows_per_sec(summary.e2e_rows_per_sec()),
+        report.executor.clone(),
+        report.rows.to_string(),
+        report.chunks.to_string(),
+        report.vocab_entries.to_string(),
+        fmt_tagged(report.e2e, report.tag),
+        fmt_rows_per_sec(report.e2e_rows_per_sec()),
     ]);
+    t.note("streamed with bounded memory; one pipeline serves many submissions");
     t.print();
     Ok(())
 }
@@ -213,15 +247,21 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_submit(cfg: &Config) -> Result<()> {
-    let raw = read_input(cfg)?;
+    let path = cfg
+        .get("input")
+        .ok_or_else(|| anyhow::anyhow!("missing input=PATH"))?;
     let addr = cfg.get_or("addr", "127.0.0.1:7700");
-    let format = match format_of(cfg)? {
+    let input = format_of(cfg)?;
+    let format = match input {
         InputFormat::Utf8 => WireFormat::Utf8,
         InputFormat::Binary => WireFormat::Binary,
     };
     let job = Job { schema: Schema::CRITEO, modulus: modulus_of(cfg)?, format };
     let chunk = cfg.get_usize("chunk", 1 << 20)?;
-    let run = net::run_leader(addr, job, &raw, chunk)?;
+    // Stream the file to the worker chunk by chunk — the leader never
+    // holds the dataset either.
+    let mut source = FileSource::open(Path::new(path), input)?;
+    let run = net::run_leader_source(addr, job, &mut source, chunk)?;
     println!(
         "preprocessed {} rows ({} vocab entries) in {} over TCP",
         run.stats.rows,
@@ -231,7 +271,9 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(cfg: &Config) -> Result<()> {
+    use piper::coordinator::Experiment;
     let raw = read_input(cfg)?;
     let exp = Experiment::new(modulus_of(cfg)?, format_of(cfg)?);
     let backend = backend_of(cfg)?;
@@ -252,10 +294,16 @@ fn cmd_train(cfg: &Config) -> Result<()> {
         let avg = chunk.iter().sum::<f32>() / chunk.len() as f32;
         println!("steps {:>4}-{:<4} mean loss {avg:.4}", i * 10, i * 10 + chunk.len() - 1);
     }
-    println!(
-        "final loss {:.4} (first {:.4})",
-        losses.last().unwrap(),
-        losses.first().unwrap()
-    );
+    let first = losses.first().copied().unwrap_or(f32::NAN);
+    let last = losses.last().copied().unwrap_or(f32::NAN);
+    println!("final loss {last:.4} (first {first:.4})");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_cfg: &Config) -> Result<()> {
+    anyhow::bail!(
+        "this build has no PJRT runtime — rebuild with `--features pjrt` \
+         (needs the xla_extension shared library) to enable `train`"
+    )
 }

@@ -56,7 +56,8 @@ pub fn shard_rows(raw: &[u8], schema: Schema, binary: bool, n: usize) -> Vec<std
                 .position(|&b| b == b'\n')
                 .map(|p| target + p + 1)
                 .unwrap_or(raw.len());
-            cuts.push(cut.max(*cuts.last().unwrap()));
+            let floor = cuts.last().copied().unwrap_or(0);
+            cuts.push(cut.max(floor));
         }
         cuts.push(raw.len());
         (0..n).map(|i| cuts[i]..cuts[i + 1]).collect()

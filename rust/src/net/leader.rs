@@ -5,6 +5,7 @@ use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use crate::data::row::ProcessedColumns;
+use crate::pipeline::{MemorySource, Source};
 use crate::Result;
 
 use super::protocol::{self, Job, RunStats, Tag};
@@ -22,26 +23,48 @@ pub struct LeaderRun {
 
 /// Stream `raw` (twice) to the worker at `addr` and collect results.
 ///
-/// Pass 2 reads interleaved with writes: a reader thread drains
-/// ResultChunks while the main thread keeps sending, so the socket can't
-/// deadlock on full buffers and the measured time reflects true
-/// streaming overlap.
+/// Convenience wrapper over [`run_leader_source`] for in-memory buffers.
 pub fn run_leader(
     addr: &str,
     job: Job,
     raw: &[u8],
     chunk_size: usize,
 ) -> Result<LeaderRun> {
+    let mut source = MemorySource::new(raw, job.format.into());
+    run_leader_source(addr, job, &mut source, chunk_size)
+}
+
+/// Stream a [`Source`] (twice, via [`Source::reset`]) to the worker at
+/// `addr` and collect results. The leader holds one chunk at a time —
+/// submitting a file-backed dataset never loads it into memory.
+///
+/// Pass 2 reads interleaved with writes: a reader thread drains
+/// ResultChunks while the main thread keeps sending, so the socket can't
+/// deadlock on full buffers and the measured time reflects true
+/// streaming overlap.
+pub fn run_leader_source(
+    addr: &str,
+    job: Job,
+    source: &mut dyn Source,
+    chunk_size: usize,
+) -> Result<LeaderRun> {
+    anyhow::ensure!(
+        source.format() == job.format.into(),
+        "source yields {:?} but the job wants {:?}",
+        source.format(),
+        job.format
+    );
     let start = Instant::now();
     let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
     let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream.try_clone()?);
 
     protocol::write_frame(&mut writer, Tag::Job, &job.encode())?;
-    for chunk in raw.chunks(chunk_size.max(1)) {
-        protocol::write_frame(&mut writer, Tag::Pass1Chunk, chunk)?;
+    while let Some(chunk) = source.next_chunk(chunk_size.max(1))? {
+        protocol::write_frame(&mut writer, Tag::Pass1Chunk, &chunk)?;
     }
     protocol::write_frame(&mut writer, Tag::Pass1End, &[])?;
+    source.reset()?;
 
     // Reader thread: collect results while pass 2 streams out.
     let schema = job.schema;
@@ -66,8 +89,8 @@ pub fn run_leader(
         }
     });
 
-    for chunk in raw.chunks(chunk_size.max(1)) {
-        protocol::write_frame(&mut writer, Tag::Pass2Chunk, chunk)?;
+    while let Some(chunk) = source.next_chunk(chunk_size.max(1))? {
+        protocol::write_frame(&mut writer, Tag::Pass2Chunk, &chunk)?;
     }
     protocol::write_frame(&mut writer, Tag::Pass2End, &[])?;
     use std::io::Write as _;

@@ -26,6 +26,6 @@ pub mod stream;
 pub mod worker;
 
 pub use cluster::{run_cluster, run_cluster_loopback};
-pub use leader::run_leader;
+pub use leader::{run_leader, run_leader_source};
 pub use stream::StreamingPreprocessor;
 pub use worker::serve_one;

@@ -1,10 +1,11 @@
 //! Streaming two-pass preprocessor — the worker-side core, independent of
 //! the transport so it can be tested without sockets.
 
+use crate::accel::InputFormat;
 use crate::data::row::{ProcessedColumns, ProcessedRow};
 use crate::data::{DecodedRow, Schema};
-use crate::decode::RowAssembler;
 use crate::ops::{log1p, HashVocab, Modulus, Vocab};
+use crate::pipeline::ChunkDecoder;
 use crate::Result;
 
 /// Raw wire format of the incoming stream.
@@ -14,52 +15,11 @@ pub enum WireFormat {
     Binary,
 }
 
-/// Incremental decoder that survives arbitrary chunk boundaries.
-#[derive(Debug)]
-enum ChunkDecoder {
-    Utf8(RowAssembler),
-    Binary { schema: Schema, partial: Vec<u8> },
-}
-
-impl ChunkDecoder {
-    fn new(format: WireFormat, schema: Schema) -> Self {
-        match format {
-            WireFormat::Utf8 => ChunkDecoder::Utf8(RowAssembler::new(schema)),
-            WireFormat::Binary => ChunkDecoder::Binary { schema, partial: Vec::new() },
-        }
-    }
-
-    /// Feed a chunk, returning all rows completed by it.
-    fn feed(&mut self, chunk: &[u8]) -> Result<Vec<DecodedRow>> {
-        match self {
-            ChunkDecoder::Utf8(asm) => {
-                asm.feed_bytes(chunk);
-                Ok(asm.take_rows())
-            }
-            ChunkDecoder::Binary { schema, partial } => {
-                partial.extend_from_slice(chunk);
-                let rb = schema.binary_row_bytes();
-                let full = partial.len() / rb * rb;
-                let rows = crate::data::binary::decode_bytes(&partial[..full], *schema)?;
-                partial.drain(..full);
-                Ok(rows)
-            }
-        }
-    }
-
-    /// Finish the pass; any trailing partial row is completed (UTF-8
-    /// without final newline) or rejected (truncated binary row).
-    fn finish(self) -> Result<Vec<DecodedRow>> {
-        match self {
-            ChunkDecoder::Utf8(asm) => Ok(asm.finish()),
-            ChunkDecoder::Binary { partial, .. } => {
-                anyhow::ensure!(
-                    partial.is_empty(),
-                    "binary stream ended mid-row ({} stray bytes)",
-                    partial.len()
-                );
-                Ok(Vec::new())
-            }
+impl From<WireFormat> for InputFormat {
+    fn from(w: WireFormat) -> InputFormat {
+        match w {
+            WireFormat::Utf8 => InputFormat::Utf8,
+            WireFormat::Binary => InputFormat::Binary,
         }
     }
 }
@@ -95,7 +55,7 @@ impl StreamingPreprocessor {
             modulus,
             format,
             vocabs: (0..schema.num_sparse).map(|_| HashVocab::new()).collect(),
-            decoder: ChunkDecoder::new(format, schema),
+            decoder: ChunkDecoder::new(format.into(), schema),
             phase: Phase::Pass1,
             rows_pass1: 0,
             rows_pass2: 0,
@@ -115,7 +75,7 @@ impl StreamingPreprocessor {
         anyhow::ensure!(self.phase == Phase::Pass1, "pass1_end in phase {:?}", self.phase);
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::new(self.format, self.schema),
+            ChunkDecoder::new(self.format.into(), self.schema),
         );
         let rows = decoder.finish()?;
         self.observe(&rows);
@@ -150,7 +110,7 @@ impl StreamingPreprocessor {
         anyhow::ensure!(self.phase == Phase::Pass2, "pass2_end in phase {:?}", self.phase);
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::new(self.format, self.schema),
+            ChunkDecoder::new(self.format.into(), self.schema),
         );
         let rows = decoder.finish()?;
         let out = self.apply(&rows);

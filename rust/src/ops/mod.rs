@@ -20,7 +20,7 @@ pub mod hex;
 pub mod spec;
 pub mod vocab;
 
-pub use spec::{OpSpec, PipelineSpec};
+pub use spec::{OpFlags, OpSpec, PipelineSpec};
 pub use vocab::{DirectVocab, HashVocab, Vocab, VocabSet};
 
 /// `FillMissing`: absent value → 0 (paper Table 1 — the default for empty

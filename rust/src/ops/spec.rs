@@ -75,6 +75,18 @@ pub struct PipelineSpec {
     pub ops: Vec<OpSpec>,
 }
 
+/// The optional stages of a validated spec, as flags (see
+/// [`PipelineSpec::flags`]). Decode/FillMissing/Hex2Int are implied by
+/// the decoded-row boundary; Modulus is carried separately because it has
+/// an argument.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpFlags {
+    pub gen_vocab: bool,
+    pub apply_vocab: bool,
+    pub neg2zero: bool,
+    pub logarithm: bool,
+}
+
 impl PipelineSpec {
     /// The paper's full DLRM pipeline at a given vocabulary size.
     pub fn dlrm(vocab: u32) -> PipelineSpec {
@@ -151,6 +163,17 @@ impl PipelineSpec {
         })
     }
 
+    /// Which optional stages this spec enables — derived once at planning
+    /// time so executor hot loops branch on bools, not on the op list.
+    pub fn flags(&self) -> OpFlags {
+        OpFlags {
+            gen_vocab: self.has(|o| matches!(o, OpSpec::GenVocab)),
+            apply_vocab: self.has(|o| matches!(o, OpSpec::ApplyVocab)),
+            neg2zero: self.has(|o| matches!(o, OpSpec::Neg2Zero)),
+            logarithm: self.has(|o| matches!(o, OpSpec::Logarithm)),
+        }
+    }
+
     /// Execute over decoded rows (the post-`Decode` boundary — Decode /
     /// FillMissing / Hex2Int are already reflected in [`DecodedRow`]).
     ///
@@ -160,10 +183,12 @@ impl PipelineSpec {
     pub fn execute(&self, rows: &[DecodedRow], schema: Schema) -> Result<ProcessedColumns> {
         self.validate()?;
         let modulus = self.modulus();
-        let do_gen = self.has(|o| matches!(o, OpSpec::GenVocab));
-        let do_apply = self.has(|o| matches!(o, OpSpec::ApplyVocab));
-        let do_n2z = self.has(|o| matches!(o, OpSpec::Neg2Zero));
-        let do_log = self.has(|o| matches!(o, OpSpec::Logarithm));
+        let OpFlags {
+            gen_vocab: do_gen,
+            apply_vocab: do_apply,
+            neg2zero: do_n2z,
+            logarithm: do_log,
+        } = self.flags();
 
         let mut out = ProcessedColumns::with_schema(schema);
         // pass 1: vocabularies

@@ -1,0 +1,240 @@
+//! The executor side of the engine: the trait every backend implements,
+//! plus the shared functional core all executors delegate to.
+//!
+//! Implementations live with their backends:
+//!
+//! * [`crate::cpu_baseline::CpuExecutor`] — Meta's row-partitioned
+//!   multithreaded pipeline, really measured on this machine;
+//! * [`crate::gpu_sim::GpuExecutor`] — RAPIDS-style column pipeline with
+//!   the V100-calibrated timing model (tagged sim);
+//! * [`crate::accel::PiperExecutor`] — the PIPER dataflow in its three
+//!   modes (local decode-in-kernel, local decode-in-host, network), with
+//!   the paper's cycle model (tagged sim).
+//!
+//! All executors share [`ChunkState`] for the operator semantics, so
+//! their outputs are bit-identical by construction; what differs is
+//! parallelism and the timing model.
+
+use std::time::Duration;
+
+use crate::accel::InputFormat;
+use crate::data::row::ProcessedColumns;
+use crate::data::DecodedRow;
+use crate::data::Schema;
+use crate::ops::{log1p, neg2zero, HashVocab, Modulus, OpFlags, Vocab};
+use crate::report::TimeTag;
+use crate::Result;
+
+use super::Plan;
+
+/// A preprocessing backend that can execute a planned operator graph
+/// over a stream of decoded-row chunks. Stateless and reusable: each
+/// submission gets its own [`ExecutorRun`] from [`Executor::begin`].
+pub trait Executor: Send + Sync {
+    /// Display name (stable — reports and the comparison tables key on it).
+    fn name(&self) -> String;
+
+    /// Can this executor consume `input`? Checked at planning time.
+    fn accepts(&self, input: InputFormat) -> bool;
+
+    /// Executor-specific plan validation (e.g. PIPER's SRAM capacity
+    /// check). Runs once, at [`super::PipelineBuilder::build`].
+    fn plan_check(&self, _plan: &Plan) -> Result<()> {
+        Ok(())
+    }
+
+    /// Start one submission over the given plan.
+    fn begin(&self, plan: &Plan) -> Result<Box<dyn ExecutorRun>>;
+}
+
+/// Per-submission executor state, driven by the engine:
+/// `observe`* (pass 1, only when the plan builds vocabularies) → `seal`
+/// → `process`* (pass 2) → `finish`.
+pub trait ExecutorRun: Send {
+    /// Pass 1: observe a chunk of decoded rows (GenVocab).
+    fn observe(&mut self, rows: &[DecodedRow]) -> Result<()>;
+
+    /// Barrier between the passes (merge/freeze vocabulary state).
+    fn seal(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Pass 2: process a chunk into a column block.
+    fn process(&mut self, rows: &[DecodedRow]) -> Result<ProcessedColumns>;
+
+    /// End of submission; `stats` carries the engine's stream totals for
+    /// the timing models.
+    fn finish(&mut self, stats: &StreamStats) -> Result<ExecutorReport>;
+}
+
+/// Stream totals the engine accumulates over one submission.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamStats {
+    /// Raw bytes of one full pass over the source.
+    pub raw_bytes: u64,
+    pub rows: u64,
+    pub chunks: u64,
+    /// Wallclock of the whole submission, measured by the engine.
+    pub wall: Duration,
+}
+
+/// What an executor reports at the end of a submission.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecutorReport {
+    pub tag: TimeTag,
+    /// Modeled end-to-end time; `None` = use the engine's measured wall
+    /// clock (measured executors).
+    pub modeled_e2e: Option<Duration>,
+    /// Pure-computation time (the paper's Table 3 scope) where defined.
+    pub compute: Option<Duration>,
+    pub vocab_entries: usize,
+}
+
+/// The shared functional core: the planned operator graph over decoded
+/// rows. Semantics match [`crate::ops::PipelineSpec::execute`] exactly —
+/// sparse: Modulus → (GenVocab → ApplyVocab) as configured, dense:
+/// Neg2Zero / Logarithm as configured — applied streamingly with
+/// insertion-ordered vocabularies.
+#[derive(Debug)]
+pub struct ChunkState {
+    pub schema: Schema,
+    pub flags: OpFlags,
+    pub modulus: Option<Modulus>,
+    pub vocabs: Vec<HashVocab>,
+}
+
+impl ChunkState {
+    pub fn new(plan: &Plan) -> Self {
+        ChunkState {
+            schema: plan.schema,
+            flags: plan.flags,
+            modulus: plan.modulus,
+            vocabs: (0..plan.schema.num_sparse).map(|_| HashVocab::new()).collect(),
+        }
+    }
+
+    /// Pass-1 GenVocab over a chunk, in row order.
+    pub fn observe(&mut self, rows: &[DecodedRow]) {
+        if !self.flags.gen_vocab {
+            return;
+        }
+        for row in rows {
+            for (c, &s) in row.sparse.iter().enumerate() {
+                let v = self.modulus.map_or(s, |m| m.apply(s));
+                self.vocabs[c].observe(v);
+            }
+        }
+    }
+
+    /// Build private per-column sub-dictionaries over a row range — the
+    /// threaded GV of the CPU baseline, per chunk.
+    pub fn observe_sub(&self, rows: &[DecodedRow]) -> Vec<HashVocab> {
+        let mut subs: Vec<HashVocab> =
+            (0..self.schema.num_sparse).map(|_| HashVocab::new()).collect();
+        for row in rows {
+            for (c, &s) in row.sparse.iter().enumerate() {
+                let v = self.modulus.map_or(s, |m| m.apply(s));
+                subs[c].observe(v);
+            }
+        }
+        subs
+    }
+
+    /// Merge sub-dictionaries in shard order — deterministically
+    /// equivalent to a sequential scan (the same argument the CPU
+    /// baseline's §2.3 merge relies on).
+    pub fn merge_subs(&mut self, subs: &[Vec<HashVocab>]) {
+        for set in subs {
+            for (v, sub) in self.vocabs.iter_mut().zip(set.iter()) {
+                v.merge_from(sub);
+            }
+        }
+    }
+
+    /// Pass-2: process a chunk into a column block (ApplyVocab + dense
+    /// finishing).
+    pub fn process(&self, rows: &[DecodedRow]) -> ProcessedColumns {
+        let mut out = ProcessedColumns::with_schema(self.schema);
+        out.labels.reserve(rows.len());
+        for row in rows {
+            out.labels.push(row.label);
+            for (c, &d) in row.dense.iter().enumerate() {
+                let v = if self.flags.neg2zero { neg2zero(d) } else { d };
+                let v = if self.flags.logarithm { log1p(v) } else { v as f32 };
+                out.dense[c].push(v);
+            }
+            for (c, &s) in row.sparse.iter().enumerate() {
+                let v = self.modulus.map_or(s, |m| m.apply(s));
+                let v = if self.flags.apply_vocab {
+                    self.vocabs[c].apply(v).unwrap_or(0)
+                } else {
+                    v
+                };
+                out.sparse[c].push(v);
+            }
+        }
+        out
+    }
+
+    pub fn vocab_entries(&self) -> usize {
+        self.vocabs.iter().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthConfig, SynthDataset};
+    use crate::ops::PipelineSpec;
+
+    fn plan(spec: &str) -> Plan {
+        super::super::PipelineBuilder::plan_only(
+            PipelineSpec::parse(spec).unwrap(),
+            Schema::CRITEO,
+            InputFormat::Utf8,
+            4096,
+        )
+    }
+
+    #[test]
+    fn chunked_observe_equals_sub_merge() {
+        let ds = SynthDataset::generate(SynthConfig::small(300));
+        let p = plan("modulus:97|genvocab|applyvocab");
+        let mut seq = ChunkState::new(&p);
+        seq.observe(&ds.rows);
+
+        let mut sharded = ChunkState::new(&p);
+        let subs: Vec<Vec<HashVocab>> = ds
+            .rows
+            .chunks(77)
+            .map(|c| sharded.observe_sub(c))
+            .collect();
+        sharded.merge_subs(&subs);
+
+        assert_eq!(seq.vocab_entries(), sharded.vocab_entries());
+        assert_eq!(seq.process(&ds.rows), sharded.process(&ds.rows));
+    }
+
+    #[test]
+    fn process_matches_spec_execute() {
+        let ds = SynthDataset::generate(SynthConfig::small(200));
+        let spec = PipelineSpec::dlrm(997);
+        let reference = spec.execute(&ds.rows, ds.schema()).unwrap();
+
+        let p = super::super::PipelineBuilder::plan_only(
+            spec,
+            ds.schema(),
+            InputFormat::Utf8,
+            4096,
+        );
+        let mut state = ChunkState::new(&p);
+        for chunk in ds.rows.chunks(31) {
+            state.observe(chunk);
+        }
+        let mut got = ProcessedColumns::with_schema(ds.schema());
+        for chunk in ds.rows.chunks(31) {
+            got.extend_from(&state.process(chunk));
+        }
+        assert_eq!(got, reference);
+    }
+}

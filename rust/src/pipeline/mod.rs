@@ -1,0 +1,483 @@
+//! The composable streaming pipeline engine — the crate's execution API.
+//!
+//! The paper's central claim is that preprocessing must be *pipelined
+//! and streamed* to keep accelerators fed. This module is that seam:
+//!
+//! ```text
+//! Source ──raw chunks──▶ [bounded channel] ──decode──▶ Executor ──blocks──▶ Sink
+//! ```
+//!
+//! * a [`Source`] yields the raw dataset in bounded chunks (in-memory
+//!   buffer, file, synthetic generator, TCP stream) and can rewind for
+//!   the second vocabulary pass;
+//! * a [`Plan`] is built **once** by [`PipelineBuilder::build`] from an
+//!   [`crate::ops::PipelineSpec`] plus backend capability checks — a
+//!   format mismatch or an over-capacity vocabulary is a *planning*
+//!   error, not a runtime failure inside a serving worker;
+//! * an [`Executor`] (CPU baseline, GPU model, the three PIPER modes)
+//!   consumes decoded-row chunks; all executors share the same
+//!   functional core, so outputs are bit-identical across backends;
+//! * a [`Sink`] receives processed column blocks as they are produced,
+//!   and a [`RunReport`] carries uniformly [`TimeTag`]-tagged results.
+//!
+//! Execution is chunked with a bounded producer/worker channel sized by
+//! `chunk_rows`, so peak resident raw-input memory is a few chunks —
+//! never the dataset — and a built [`Pipeline`] can be reused across
+//! many submissions (the serving posture the ROADMAP asks for).
+//!
+//! ```no_run
+//! use piper::accel::InputFormat;
+//! use piper::coordinator::Backend;
+//! use piper::cpu_baseline::ConfigKind;
+//! use piper::ops::PipelineSpec;
+//! use piper::pipeline::{FileSource, PipelineBuilder};
+//! use std::path::Path;
+//!
+//! # fn main() -> piper::Result<()> {
+//! let pipeline = PipelineBuilder::new()
+//!     .spec(PipelineSpec::dlrm(5_000))
+//!     .input(InputFormat::Utf8)
+//!     .chunk_rows(64 * 1024)
+//!     .executor(Backend::Cpu { kind: ConfigKind::I, threads: 8 }.executor())
+//!     .build()?; // planning errors surface here
+//! let mut source = FileSource::open(Path::new("dataset.txt"), InputFormat::Utf8)?;
+//! let (columns, report) = pipeline.run_collect(&mut source)?;
+//! println!("{} rows at {:.0} rows/s", report.rows, report.e2e_rows_per_sec());
+//! # Ok(()) }
+//! ```
+
+pub mod executor;
+pub mod sink;
+pub mod source;
+
+pub use executor::{ChunkState, Executor, ExecutorReport, ExecutorRun, StreamStats};
+pub use sink::{CollectSink, CountSink, Sink};
+pub use source::{serve_bytes, FileSource, MemorySource, Source, SynthSource, TcpSource};
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::accel::InputFormat;
+use crate::data::row::ProcessedColumns;
+use crate::data::{DecodedRow, Schema};
+use crate::decode::RowAssembler;
+use crate::ops::{Modulus, OpFlags, PipelineSpec};
+use crate::report::{self, TimeTag};
+use crate::Result;
+
+// ---------------------------------------------------------------------
+// Incremental decode
+// ---------------------------------------------------------------------
+
+/// Incremental decoder that survives arbitrary chunk boundaries — the
+/// decode front of the engine, also used by the network worker
+/// ([`crate::net::stream`]).
+#[derive(Debug)]
+pub struct ChunkDecoder(DecoderInner);
+
+#[derive(Debug)]
+enum DecoderInner {
+    Utf8(RowAssembler),
+    Binary { schema: Schema, partial: Vec<u8> },
+}
+
+impl ChunkDecoder {
+    pub fn new(format: InputFormat, schema: Schema) -> Self {
+        ChunkDecoder(match format {
+            InputFormat::Utf8 => DecoderInner::Utf8(RowAssembler::new(schema)),
+            InputFormat::Binary => DecoderInner::Binary { schema, partial: Vec::new() },
+        })
+    }
+
+    /// Feed a chunk, returning all rows completed by it.
+    pub fn feed(&mut self, chunk: &[u8]) -> Result<Vec<DecodedRow>> {
+        match &mut self.0 {
+            DecoderInner::Utf8(asm) => {
+                asm.feed_bytes(chunk);
+                Ok(asm.take_rows())
+            }
+            DecoderInner::Binary { schema, partial } => {
+                partial.extend_from_slice(chunk);
+                let rb = schema.binary_row_bytes();
+                let full = partial.len() / rb * rb;
+                let rows = crate::data::binary::decode_bytes(&partial[..full], *schema)?;
+                partial.drain(..full);
+                Ok(rows)
+            }
+        }
+    }
+
+    /// Finish the pass; any trailing partial row is completed (UTF-8
+    /// without final newline) or rejected (truncated binary row).
+    pub fn finish(self) -> Result<Vec<DecodedRow>> {
+        match self.0 {
+            DecoderInner::Utf8(asm) => Ok(asm.finish()),
+            DecoderInner::Binary { partial, .. } => {
+                anyhow::ensure!(
+                    partial.is_empty(),
+                    "binary stream ended mid-row ({} stray bytes)",
+                    partial.len()
+                );
+                Ok(Vec::new())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plan + builder
+// ---------------------------------------------------------------------
+
+/// The validated, immutable execution plan: operator graph (as parsed
+/// flags + modulus), schema, input format and chunking. Built once by
+/// [`PipelineBuilder::build`]; executors read it, never mutate it.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub spec: PipelineSpec,
+    pub flags: OpFlags,
+    pub modulus: Option<Modulus>,
+    pub schema: Schema,
+    pub input: InputFormat,
+    /// Rows per chunk the engine aims for (the producer/worker channel
+    /// is sized in these units).
+    pub chunk_rows: usize,
+}
+
+impl Plan {
+    /// Requested raw bytes per chunk, derived from `chunk_rows` and the
+    /// format's approximate row width.
+    pub fn chunk_bytes(&self) -> usize {
+        let per_row = match self.input {
+            InputFormat::Binary => self.schema.binary_row_bytes(),
+            // ~2 bytes label+newline, ~7 per dense field, 9 per sparse.
+            InputFormat::Utf8 => 2 + 7 * self.schema.num_dense + 9 * self.schema.num_sparse,
+        };
+        (self.chunk_rows * per_row).max(1)
+    }
+}
+
+/// Builder for a reusable [`Pipeline`]: operator spec, schema, input
+/// format, chunking, executor. All validation happens in [`Self::build`].
+pub struct PipelineBuilder {
+    spec: PipelineSpec,
+    schema: Schema,
+    input: InputFormat,
+    chunk_rows: usize,
+    executor: Option<Box<dyn Executor>>,
+}
+
+impl PipelineBuilder {
+    pub fn new() -> Self {
+        PipelineBuilder {
+            spec: PipelineSpec::dlrm(Modulus::VOCAB_5K.range),
+            schema: Schema::CRITEO,
+            input: InputFormat::Utf8,
+            chunk_rows: 64 * 1024,
+            executor: None,
+        }
+    }
+
+    /// Operator pipeline (defaults to the paper's DLRM pipeline at 5K).
+    pub fn spec(mut self, spec: PipelineSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Parse a `|`-separated spec string (see [`PipelineSpec::parse`]).
+    pub fn spec_str(mut self, spec: &str) -> Result<Self> {
+        self.spec = PipelineSpec::parse(spec)?;
+        Ok(self)
+    }
+
+    pub fn schema(mut self, schema: Schema) -> Self {
+        self.schema = schema;
+        self
+    }
+
+    pub fn input(mut self, input: InputFormat) -> Self {
+        self.input = input;
+        self
+    }
+
+    pub fn chunk_rows(mut self, rows: usize) -> Self {
+        self.chunk_rows = rows.max(1);
+        self
+    }
+
+    pub fn executor(mut self, executor: Box<dyn Executor>) -> Self {
+        self.executor = Some(executor);
+        self
+    }
+
+    /// Plan and build. Every capability/config mismatch surfaces here as
+    /// a planning error — a built pipeline does not fail on submission
+    /// for reasons knowable up front.
+    pub fn build(self) -> Result<Pipeline> {
+        let executor = self
+            .executor
+            .ok_or_else(|| anyhow::anyhow!("PipelineBuilder needs an executor"))?;
+        self.spec.validate()?;
+        let plan = Plan {
+            flags: self.spec.flags(),
+            modulus: self.spec.modulus(),
+            spec: self.spec,
+            schema: self.schema,
+            input: self.input,
+            chunk_rows: self.chunk_rows,
+        };
+        anyhow::ensure!(
+            executor.accepts(plan.input),
+            "planning: {} does not accept {:?} input",
+            executor.name(),
+            plan.input
+        );
+        executor.plan_check(&plan)?;
+        Ok(Pipeline { plan, executor })
+    }
+
+    /// Assemble a bare [`Plan`] without an executor — internal helper
+    /// for unit tests of executor state.
+    pub(crate) fn plan_only(
+        spec: PipelineSpec,
+        schema: Schema,
+        input: InputFormat,
+        chunk_rows: usize,
+    ) -> Plan {
+        Plan {
+            flags: spec.flags(),
+            modulus: spec.modulus(),
+            spec,
+            schema,
+            input,
+            chunk_rows,
+        }
+    }
+}
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pipeline + engine loop
+// ---------------------------------------------------------------------
+
+/// A planned, reusable preprocessing pipeline: run it over any number of
+/// sources; each submission streams with bounded memory.
+pub struct Pipeline {
+    plan: Plan,
+    executor: Box<dyn Executor>,
+}
+
+/// Raw chunks in flight between the producer thread and the decode/
+/// execute worker. Peak resident raw input ≈ (depth + 2) × chunk_bytes.
+const CHANNEL_DEPTH: usize = 2;
+
+impl Pipeline {
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    pub fn executor_name(&self) -> String {
+        self.executor.name()
+    }
+
+    /// Run one submission: stream `source` through the planned operator
+    /// graph on this pipeline's executor, pushing column blocks into
+    /// `sink` as they are produced.
+    pub fn run(&self, source: &mut dyn Source, sink: &mut dyn Sink) -> Result<RunReport> {
+        anyhow::ensure!(
+            source.format() == self.plan.input,
+            "source yields {:?} but the pipeline was planned for {:?}",
+            source.format(),
+            self.plan.input
+        );
+        let t0 = Instant::now();
+        let mut run = self.executor.begin(&self.plan)?;
+
+        // Pass 1 (GenVocab) only when the plan has stateful vocab ops.
+        if self.plan.flags.gen_vocab {
+            stream_chunks(&self.plan, &mut *source, |rows| run.observe(rows))?;
+            source.reset()?;
+        }
+        run.seal()?;
+
+        let (raw_bytes, rows, chunks) = stream_chunks(&self.plan, &mut *source, |rows| {
+            let block = run.process(rows)?;
+            sink.push(&block)
+        })?;
+
+        let stats = StreamStats { raw_bytes, rows, chunks, wall: t0.elapsed() };
+        let rep = run.finish(&stats)?;
+        Ok(RunReport {
+            executor: self.executor.name(),
+            rows: rows as usize,
+            chunks: chunks as usize,
+            e2e: rep.modeled_e2e.unwrap_or(stats.wall),
+            wall: stats.wall,
+            tag: rep.tag,
+            compute: rep.compute,
+            vocab_entries: rep.vocab_entries,
+        })
+    }
+
+    /// Run and gather the full output — the drop-in replacement for the
+    /// old one-shot drivers.
+    pub fn run_collect(&self, source: &mut dyn Source) -> Result<(ProcessedColumns, RunReport)> {
+        let mut sink = CollectSink::with_schema(self.plan.schema);
+        let report = self.run(source, &mut sink)?;
+        Ok((sink.into_columns(), report))
+    }
+}
+
+/// One streaming pass: a producer thread pulls raw chunks from the
+/// source into a bounded channel while this thread decodes them and
+/// feeds the executor. Returns `(raw_bytes, rows, chunks)`.
+fn stream_chunks<F>(plan: &Plan, source: &mut dyn Source, mut consume: F) -> Result<(u64, u64, u64)>
+where
+    F: FnMut(&[DecodedRow]) -> Result<()>,
+{
+    let chunk_bytes = plan.chunk_bytes();
+    let mut decoder = ChunkDecoder::new(plan.input, plan.schema);
+    let mut raw_bytes = 0u64;
+    let mut rows = 0u64;
+    let mut chunks = 0u64;
+
+    let passed: Result<()> = std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(CHANNEL_DEPTH);
+        let producer = scope.spawn(move || -> Result<()> {
+            while let Some(chunk) = source.next_chunk(chunk_bytes)? {
+                if tx.send(chunk).is_err() {
+                    break; // consumer bailed; its error wins below
+                }
+            }
+            Ok(())
+        });
+
+        let mut consumer_err: Option<anyhow::Error> = None;
+        for chunk in &rx {
+            raw_bytes += chunk.len() as u64;
+            chunks += 1;
+            let step = decoder.feed(&chunk).and_then(|decoded| {
+                if decoded.is_empty() {
+                    return Ok(());
+                }
+                rows += decoded.len() as u64;
+                consume(&decoded)
+            });
+            if let Err(e) = step {
+                consumer_err = Some(e);
+                break;
+            }
+        }
+        drop(rx); // unblock the producer if we bailed early
+
+        let produced = producer.join().expect("pipeline source producer panicked");
+        match (produced, consumer_err) {
+            // A producer error explains any downstream decode error.
+            (Err(e), _) => Err(e),
+            (Ok(()), Some(e)) => Err(e),
+            (Ok(()), None) => Ok(()),
+        }
+    });
+    passed?;
+
+    let tail = decoder.finish()?;
+    if !tail.is_empty() {
+        rows += tail.len() as u64;
+        consume(&tail)?;
+    }
+    Ok((raw_bytes, rows, chunks))
+}
+
+// ---------------------------------------------------------------------
+// Run report
+// ---------------------------------------------------------------------
+
+/// Uniform, [`TimeTag`]-propagating result of one pipeline submission —
+/// the single result type all executors report through.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub executor: String,
+    pub rows: usize,
+    pub chunks: usize,
+    /// End-to-end time: modeled for sim executors, measured wallclock
+    /// for the CPU baseline. Check `tag`.
+    pub e2e: Duration,
+    /// Engine-measured wallclock of this submission (always measured,
+    /// regardless of `tag`).
+    pub wall: Duration,
+    pub tag: TimeTag,
+    /// Pure-computation time (the paper's Table 3 scope) where defined.
+    pub compute: Option<Duration>,
+    pub vocab_entries: usize,
+}
+
+impl RunReport {
+    pub fn e2e_rows_per_sec(&self) -> f64 {
+        report::rows_per_sec(self.rows, self.e2e)
+    }
+
+    pub fn compute_rows_per_sec(&self) -> Option<f64> {
+        self.compute.map(|c| report::rows_per_sec(self.rows, c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{binary, utf8, SynthConfig, SynthDataset};
+
+    #[test]
+    fn chunk_decoder_survives_any_boundary() {
+        let ds = SynthDataset::generate(SynthConfig::small(60));
+        for (format, raw) in [
+            (InputFormat::Utf8, utf8::encode_dataset(&ds)),
+            (InputFormat::Binary, binary::encode_dataset(&ds)),
+        ] {
+            for chunk in [1usize, 7, 64, 4096] {
+                let mut dec = ChunkDecoder::new(format, ds.schema());
+                let mut rows = Vec::new();
+                for c in raw.chunks(chunk) {
+                    rows.extend(dec.feed(c).unwrap());
+                }
+                rows.extend(dec.finish().unwrap());
+                assert_eq!(rows, ds.rows, "{format:?} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_binary_rejected_at_finish() {
+        let ds = SynthDataset::generate(SynthConfig::small(3));
+        let mut raw = binary::encode_dataset(&ds);
+        raw.pop();
+        let mut dec = ChunkDecoder::new(InputFormat::Binary, ds.schema());
+        dec.feed(&raw).unwrap();
+        assert!(dec.finish().is_err());
+    }
+
+    #[test]
+    fn builder_requires_an_executor() {
+        assert!(PipelineBuilder::new().build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_invalid_spec_at_planning() {
+        let b = PipelineBuilder::new().spec_str("genvocab"); // needs modulus
+        assert!(b.is_err() || b.unwrap().build().is_err());
+    }
+
+    #[test]
+    fn plan_chunk_bytes_scales_with_rows() {
+        let p = PipelineBuilder::plan_only(
+            crate::ops::PipelineSpec::dlrm(97),
+            Schema::CRITEO,
+            InputFormat::Binary,
+            1000,
+        );
+        assert_eq!(p.chunk_bytes(), 1000 * Schema::CRITEO.binary_row_bytes());
+    }
+}

@@ -1,0 +1,106 @@
+//! Output sinks for the streaming engine.
+//!
+//! The engine hands each processed column block to a [`Sink`] as soon as
+//! the executor produces it — nothing forces the whole output to be
+//! resident. [`CollectSink`] reproduces the old one-shot behaviour
+//! (gather everything); [`CountSink`] keeps only counters, for
+//! bounded-memory serving paths and throughput measurement.
+
+use crate::data::row::ProcessedColumns;
+use crate::data::Schema;
+use crate::Result;
+
+/// Consumer of processed column blocks, called in row order.
+pub trait Sink {
+    fn push(&mut self, block: &ProcessedColumns) -> Result<()>;
+}
+
+/// Gathers all blocks into one [`ProcessedColumns`] (the Concatenate /
+/// CFR stage of the paper, applied incrementally).
+#[derive(Debug)]
+pub struct CollectSink {
+    columns: ProcessedColumns,
+}
+
+impl CollectSink {
+    pub fn with_schema(schema: Schema) -> Self {
+        CollectSink { columns: ProcessedColumns::with_schema(schema) }
+    }
+
+    pub fn columns(&self) -> &ProcessedColumns {
+        &self.columns
+    }
+
+    pub fn into_columns(self) -> ProcessedColumns {
+        self.columns
+    }
+}
+
+impl Sink for CollectSink {
+    fn push(&mut self, block: &ProcessedColumns) -> Result<()> {
+        self.columns.extend_from(block);
+        Ok(())
+    }
+}
+
+/// Discards the data, keeping only row/block counters — the output side
+/// of a bounded-memory run.
+#[derive(Debug, Default)]
+pub struct CountSink {
+    pub rows: usize,
+    pub blocks: usize,
+}
+
+impl CountSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Sink for CountSink {
+    fn push(&mut self, block: &ProcessedColumns) -> Result<()> {
+        self.rows += block.num_rows();
+        self.blocks += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ProcessedRow;
+
+    fn block(schema: Schema, labels: &[i32]) -> ProcessedColumns {
+        let mut b = ProcessedColumns::with_schema(schema);
+        for &l in labels {
+            b.push_row(&ProcessedRow {
+                label: l,
+                dense: vec![0.5; schema.num_dense],
+                sparse: vec![1; schema.num_sparse],
+            });
+        }
+        b
+    }
+
+    #[test]
+    fn collect_concatenates_in_order() {
+        let schema = Schema::new(2, 3);
+        let mut sink = CollectSink::with_schema(schema);
+        sink.push(&block(schema, &[1, 2])).unwrap();
+        sink.push(&block(schema, &[3])).unwrap();
+        let cols = sink.into_columns();
+        assert_eq!(cols.labels, vec![1, 2, 3]);
+        assert_eq!(cols.dense.len(), 2);
+        assert_eq!(cols.sparse[0].len(), 3);
+    }
+
+    #[test]
+    fn count_sink_counts() {
+        let schema = Schema::new(1, 1);
+        let mut sink = CountSink::new();
+        sink.push(&block(schema, &[1, 2, 3])).unwrap();
+        sink.push(&block(schema, &[4])).unwrap();
+        assert_eq!(sink.rows, 4);
+        assert_eq!(sink.blocks, 2);
+    }
+}

@@ -26,6 +26,12 @@ impl TimeTag {
     }
 }
 
+/// Throughput in rows/second over a duration — the one shared definition
+/// every result type uses (guards against zero durations).
+pub fn rows_per_sec(rows: usize, d: Duration) -> f64 {
+    rows as f64 / d.as_secs_f64().max(1e-12)
+}
+
 /// Format a duration compactly (µs/ms/s).
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
@@ -132,6 +138,14 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rows_per_sec_is_total_rows_over_seconds() {
+        assert_eq!(rows_per_sec(1000, Duration::from_secs(2)), 500.0);
+        // zero duration must not divide by zero
+        assert!(rows_per_sec(10, Duration::ZERO).is_finite());
+        assert_eq!(rows_per_sec(0, Duration::from_secs(1)), 0.0);
+    }
 
     #[test]
     fn duration_formats() {

@@ -174,3 +174,93 @@ fn rows_with_wrong_column_count_are_tolerated() {
     assert_eq!(out.rows[0].dense, vec![5, 0]);
     assert_eq!(out.rows[1].sparse, vec![0xaa, 0xbb]);
 }
+
+// ------------------------------------------------------------------
+// OpSpec::parse error paths (operator grammar + dependency rules)
+// ------------------------------------------------------------------
+
+#[test]
+fn op_spec_rejects_malformed_operators() {
+    use piper::ops::OpSpec;
+    // unknown operator names, with and without arguments
+    assert!(OpSpec::parse("frobnicate").is_err());
+    assert!(OpSpec::parse("frobnicate:7").is_err());
+    // arguments on argument-less operators
+    for op in ["decode", "fillmissing", "hex2int", "genvocab", "applyvocab",
+               "neg2zero", "logarithm", "concatenate"] {
+        assert!(OpSpec::parse(&format!("{op}:3")).is_err(), "{op} takes no arg");
+    }
+    // modulus argument validation: missing, non-numeric, zero, negative,
+    // overflow
+    assert!(OpSpec::parse("modulus").is_err());
+    assert!(OpSpec::parse("modulus:abc").is_err());
+    assert!(OpSpec::parse("modulus:0").is_err());
+    assert!(OpSpec::parse("modulus:-5").is_err());
+    assert!(OpSpec::parse("modulus:99999999999999999999").is_err());
+    // well-formed forms still parse (case/whitespace-insensitive, aliases)
+    assert_eq!(OpSpec::parse("  MODULUS:5_000 ").unwrap(), OpSpec::Modulus(5000));
+    assert_eq!(OpSpec::parse("log").unwrap(), OpSpec::Logarithm);
+    assert_eq!(OpSpec::parse("concat").unwrap(), OpSpec::Concatenate);
+}
+
+#[test]
+fn pipeline_spec_dependency_rules() {
+    use piper::ops::PipelineSpec;
+    // GenVocab requires a preceding Modulus
+    assert!(PipelineSpec::parse("genvocab").is_err());
+    assert!(PipelineSpec::parse("genvocab|modulus:5").is_err(), "wrong order");
+    // ApplyVocab requires a preceding GenVocab
+    assert!(PipelineSpec::parse("modulus:5|applyvocab").is_err());
+    assert!(PipelineSpec::parse("applyvocab|modulus:5|genvocab").is_err());
+    // Neg2Zero must precede Logarithm when both are present
+    assert!(PipelineSpec::parse("logarithm|neg2zero").is_err());
+    // stateful operators may appear at most once
+    assert!(PipelineSpec::parse("modulus:5|genvocab|genvocab").is_err());
+    assert!(PipelineSpec::parse("modulus:5|genvocab|applyvocab|applyvocab").is_err());
+    // empty and comma-separated specs
+    assert!(PipelineSpec::parse("").is_err());
+    assert!(PipelineSpec::parse(" | , ").is_err());
+    assert!(PipelineSpec::parse("modulus:5,genvocab,applyvocab").is_ok());
+}
+
+// ------------------------------------------------------------------
+// partition_rows edge cases (row-partitioned threading)
+// ------------------------------------------------------------------
+
+#[test]
+fn partition_rows_zero_rows_yields_empty_ranges() {
+    use piper::cpu_baseline::pipeline::partition_rows;
+    let parts = partition_rows(0, 5);
+    assert_eq!(parts.len(), 5);
+    assert!(parts.iter().all(|r| r.is_empty()));
+    // zero threads is clamped to one
+    let parts = partition_rows(0, 0);
+    assert_eq!(parts.len(), 1);
+    assert!(parts[0].is_empty());
+}
+
+#[test]
+fn partition_rows_more_threads_than_rows() {
+    use piper::cpu_baseline::pipeline::partition_rows;
+    let parts = partition_rows(3, 8);
+    assert_eq!(parts.len(), 8);
+    let total: usize = parts.iter().map(|r| r.len()).sum();
+    assert_eq!(total, 3, "every row lands exactly once");
+    // the first `rows` threads get one row each, the rest are empty
+    assert!(parts[..3].iter().all(|r| r.len() == 1));
+    assert!(parts[3..].iter().all(|r| r.is_empty()));
+    // contiguous and ordered
+    for w in parts.windows(2) {
+        assert_eq!(w[0].end, w[1].start);
+    }
+}
+
+#[test]
+fn partition_rows_remainder_spread_evenly() {
+    use piper::cpu_baseline::pipeline::partition_rows;
+    let parts = partition_rows(10, 4); // 3,3,2,2
+    let lens: Vec<usize> = parts.iter().map(|r| r.len()).collect();
+    assert_eq!(lens, vec![3, 3, 2, 2]);
+    assert_eq!(parts[0].start, 0);
+    assert_eq!(parts.last().map(|r| r.end), Some(10));
+}

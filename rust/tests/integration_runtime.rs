@@ -3,7 +3,8 @@
 //! Exercises the full rust-side consumer path: load the AOT artifacts,
 //! initialize parameters, preprocess a synthetic dataset with PIPER, and
 //! take real SGD steps, checking the loss moves. Skipped (cleanly) when
-//! `make artifacts` hasn't run.
+//! `make artifacts` hasn't run. The whole file needs the `pjrt` feature.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

@@ -1,0 +1,253 @@
+//! Acceptance tests for the Source/Plan/Executor/Sink redesign:
+//!
+//! * a `Pipeline` built ONCE runs multiple `Source`s (in-memory, file,
+//!   synth, TCP) on all executors (CPU baseline, GPU model, PIPER) with
+//!   bit-identical `ProcessedColumns` to the pre-redesign one-shot paths
+//!   (`cpu_baseline::run`, `gpu_sim::run`, `accel::run`);
+//! * capability/config mismatches are planning errors;
+//! * resident raw input during a file-sourced run is bounded by the
+//!   chunk size, never the dataset.
+
+use piper::accel::{self, InputFormat, Mode, PiperConfig};
+use piper::coordinator::Backend;
+use piper::cpu_baseline::{self, BaselineConfig, ConfigKind};
+use piper::data::row::ProcessedColumns;
+use piper::data::{binary, synth::SynthConfig, utf8, SynthDataset};
+use piper::gpu_sim::{self, GpuInput, GpuModel};
+use piper::ops::{Modulus, PipelineSpec};
+use piper::pipeline::{
+    serve_bytes, CountSink, FileSource, MemorySource, Pipeline, PipelineBuilder, Source,
+    SynthSource, TcpSource,
+};
+use piper::report::TimeTag;
+
+const ROWS: usize = 350;
+const VOCAB: u32 = 997;
+
+fn dataset() -> SynthDataset {
+    SynthDataset::generate(SynthConfig::small(ROWS))
+}
+
+fn build(backend: &Backend, input: InputFormat, chunk_rows: usize) -> Pipeline {
+    PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .schema(dataset().schema())
+        .input(input)
+        .chunk_rows(chunk_rows)
+        .executor(backend.executor())
+        .build()
+        .expect("planning must succeed for a valid config")
+}
+
+/// The pre-redesign reference output: the staged CPU baseline run
+/// directly over the raw buffer (all legacy backends agreed with it, as
+/// their tests still assert).
+fn legacy_reference(raw: &[u8]) -> ProcessedColumns {
+    cpu_baseline::run(
+        &BaselineConfig::new(ConfigKind::I, 3, Modulus::new(VOCAB)),
+        raw,
+    )
+    .processed
+}
+
+#[test]
+fn one_pipeline_many_sources_many_executors_bit_identical() {
+    let ds = dataset();
+    let raw = utf8::encode_dataset(&ds);
+    let reference = legacy_reference(&raw);
+
+    // Also pin the other legacy one-shot paths to the same reference.
+    let gpu_legacy = gpu_sim::run(
+        &GpuModel::default(),
+        ds.schema(),
+        Modulus::new(VOCAB),
+        GpuInput::Utf8,
+        &raw,
+    )
+    .unwrap()
+    .processed;
+    assert_eq!(gpu_legacy, reference);
+    let mut piper_cfg = PiperConfig::paper(Mode::Network, InputFormat::Utf8, Modulus::new(VOCAB));
+    piper_cfg.schema = ds.schema();
+    let piper_legacy = accel::run(&piper_cfg, &raw).unwrap().processed;
+    assert_eq!(piper_legacy, reference);
+
+    let file = std::env::temp_dir().join(format!("piper-api-{}.txt", std::process::id()));
+    std::fs::write(&file, &raw).unwrap();
+
+    for backend in [
+        Backend::Cpu { kind: ConfigKind::I, threads: 4 },
+        Backend::Gpu,
+        Backend::Piper { mode: Mode::Network },
+        Backend::Piper { mode: Mode::LocalDecodeInKernel },
+    ] {
+        // Built once…
+        let pipeline = build(&backend, InputFormat::Utf8, 64);
+        // …run over an in-memory source…
+        let mut mem = MemorySource::new(&raw, InputFormat::Utf8);
+        let (mem_cols, mem_report) = pipeline.run_collect(&mut mem).unwrap();
+        assert_eq!(mem_cols, reference, "{} / memory", backend.name());
+        assert_eq!(mem_report.rows, ROWS);
+        // …a file source…
+        let mut fsrc = FileSource::open(&file, InputFormat::Utf8).unwrap();
+        let (file_cols, file_report) = pipeline.run_collect(&mut fsrc).unwrap();
+        assert_eq!(file_cols, reference, "{} / file", backend.name());
+        assert!(file_report.chunks > 1, "small chunks must chunk the file");
+        // …and a generator source, all through the SAME pipeline object.
+        let mut synth = SynthSource::new(SynthConfig::small(ROWS), InputFormat::Utf8);
+        let (synth_cols, _) = pipeline.run_collect(&mut synth).unwrap();
+        assert_eq!(synth_cols, reference, "{} / synth", backend.name());
+    }
+    std::fs::remove_file(&file).ok();
+}
+
+#[test]
+fn binary_input_is_bit_identical_too() {
+    let ds = dataset();
+    let raw = binary::encode_dataset(&ds);
+    let reference = legacy_reference(&utf8::encode_dataset(&ds));
+
+    for backend in [
+        Backend::Cpu { kind: ConfigKind::III, threads: 2 },
+        Backend::Gpu,
+        Backend::Piper { mode: Mode::Network },
+    ] {
+        let pipeline = build(&backend, InputFormat::Binary, 128);
+        let mut src = MemorySource::new(&raw, InputFormat::Binary);
+        let (cols, _) = pipeline.run_collect(&mut src).unwrap();
+        assert_eq!(cols, reference, "{} / binary", backend.name());
+    }
+}
+
+#[test]
+fn chunk_size_never_changes_output() {
+    let ds = dataset();
+    let raw = utf8::encode_dataset(&ds);
+    let reference = legacy_reference(&raw);
+    for chunk_rows in [1usize, 7, 100, 1_000_000] {
+        let pipeline =
+            build(&Backend::Cpu { kind: ConfigKind::I, threads: 3 }, InputFormat::Utf8, chunk_rows);
+        let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+        let (cols, _) = pipeline.run_collect(&mut src).unwrap();
+        assert_eq!(cols, reference, "chunk_rows={chunk_rows}");
+    }
+}
+
+#[test]
+fn tcp_source_through_the_engine() {
+    let ds = dataset();
+    let raw = utf8::encode_dataset(&ds);
+    let reference = legacy_reference(&raw);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let payload = raw.clone();
+    // Two-pass plan ⇒ the dataset crosses the wire twice.
+    let server = std::thread::spawn(move || serve_bytes(&listener, &payload, 2));
+
+    let pipeline = build(&Backend::Piper { mode: Mode::Network }, InputFormat::Utf8, 50);
+    let mut src = TcpSource::connect(&addr, InputFormat::Utf8);
+    let (cols, report) = pipeline.run_collect(&mut src).unwrap();
+    server.join().unwrap().unwrap();
+    assert_eq!(cols, reference);
+    assert_eq!(report.tag, TimeTag::Sim);
+}
+
+/// Source wrapper that records the largest chunk the engine ever asked
+/// it to hold — the boundedness proof for file-sourced runs.
+struct MeteredSource<S: Source> {
+    inner: S,
+    max_chunk: usize,
+    total: u64,
+}
+
+impl<S: Source> Source for MeteredSource<S> {
+    fn format(&self) -> InputFormat {
+        self.inner.format()
+    }
+    fn next_chunk(&mut self, max_bytes: usize) -> piper::Result<Option<Vec<u8>>> {
+        let got = self.inner.next_chunk(max_bytes)?;
+        if let Some(c) = &got {
+            self.max_chunk = self.max_chunk.max(c.len());
+            self.total += c.len() as u64;
+        }
+        Ok(got)
+    }
+    fn reset(&mut self) -> piper::Result<()> {
+        self.inner.reset()
+    }
+}
+
+#[test]
+fn file_run_memory_is_bounded_by_chunk_rows_not_dataset() {
+    let ds = SynthDataset::generate(SynthConfig::small(2_000));
+    let raw = utf8::encode_dataset(&ds);
+    let file = std::env::temp_dir().join(format!("piper-bound-{}.txt", std::process::id()));
+    std::fs::write(&file, &raw).unwrap();
+
+    let chunk_rows = 100;
+    let pipeline = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .schema(ds.schema())
+        .input(InputFormat::Utf8)
+        .chunk_rows(chunk_rows)
+        .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
+        .build()
+        .unwrap();
+    let chunk_bytes = pipeline.plan().chunk_bytes();
+    assert!(
+        (chunk_bytes as u64) < raw.len() as u64 / 4,
+        "test needs chunks much smaller than the dataset"
+    );
+
+    let mut src = MeteredSource {
+        inner: FileSource::open(&file, InputFormat::Utf8).unwrap(),
+        max_chunk: 0,
+        total: 0,
+    };
+    let mut sink = CountSink::new();
+    let report = pipeline.run(&mut src, &mut sink).unwrap();
+    std::fs::remove_file(&file).ok();
+
+    assert_eq!(sink.rows, 2_000);
+    // Raw input is only ever materialized in ≤ chunk_bytes pieces; the
+    // engine keeps at most a few of them in flight at once.
+    assert!(src.max_chunk <= chunk_bytes, "{} > {chunk_bytes}", src.max_chunk);
+    // Two passes really streamed the whole file twice.
+    assert_eq!(src.total, 2 * raw.len() as u64);
+    assert!(report.chunks >= raw.len() / chunk_bytes, "chunked, not slurped");
+}
+
+#[test]
+fn planning_errors_surface_at_build_not_run() {
+    // Config III is binary-only (paper Table 2): planning must refuse.
+    let err = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .input(InputFormat::Utf8)
+        .executor(Backend::Cpu { kind: ConfigKind::III, threads: 2 }.executor())
+        .build();
+    assert!(err.is_err(), "Config III must not plan over UTF-8");
+    let msg = format!("{:#}", err.err().expect("checked above"));
+    assert!(msg.contains("planning"), "error should read as a planning error: {msg}");
+
+    // Mismatched source format is rejected before any work happens.
+    let pipeline = build(&Backend::Gpu, InputFormat::Binary, 64);
+    let raw = utf8::encode_dataset(&dataset());
+    let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+    assert!(pipeline.run_collect(&mut src).is_err());
+}
+
+#[test]
+fn reused_pipeline_is_deterministic_across_submissions() {
+    let ds = dataset();
+    let raw = utf8::encode_dataset(&ds);
+    let pipeline = build(&Backend::Piper { mode: Mode::Network }, InputFormat::Utf8, 64);
+    let mut first = None;
+    for _ in 0..3 {
+        let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+        let (cols, report) = pipeline.run_collect(&mut src).unwrap();
+        assert!(report.vocab_entries > 0);
+        let expect = first.get_or_insert_with(|| cols.clone());
+        assert_eq!(expect, &cols, "resubmission must not mutate the pipeline");
+    }
+}
