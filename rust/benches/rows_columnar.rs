@@ -1,0 +1,247 @@
+//! Columnar data-plane bench: the old row-wise `Vec<DecodedRow>`
+//! representation vs the column-major `RowBlock` plane, over the full
+//! decode → GenVocab → ApplyVocab hot path (two passes, like the
+//! engine's two-loop design), single-threaded so the representation —
+//! not parallelism — is what's measured.
+//!
+//! What to look for:
+//!   * binary input: the row-wise path pays two heap `Vec`s per row plus
+//!     an `extend_from_slice`+`drain` staging memmove per chunk; the
+//!     columnar path bulk-copies words straight into column planes and
+//!     recycles one scratch block — the ISSUE's ≥2× target lives here;
+//!   * UTF-8 input: byte-at-a-time decode dominates, so the win is
+//!     smaller but the allocation delta still shows;
+//!   * both paths must produce identical checksums (bit-identical
+//!     outputs) — asserted, not assumed.
+
+use std::time::Instant;
+
+use piper::accel::InputFormat;
+use piper::benchutil::{bench_reps, bench_rows, dataset, median};
+use piper::data::row::ProcessedColumns;
+use piper::data::{binary, utf8, DecodedRow, RowBlock, Schema};
+use piper::decode::RowAssembler;
+use piper::ops::{log1p, neg2zero, HashVocab, Modulus, PipelineSpec, Vocab};
+use piper::pipeline::{ChunkDecoder, ChunkState, Plan};
+use piper::report::{fmt_duration, fmt_rows_per_sec, fmt_speedup, Table};
+
+const CHUNK_ROWS: usize = 16 * 1024;
+
+/// Fold a processed block into a cheap order-sensitive checksum so the
+/// sink cost is identical for both paths and outputs stay comparable.
+fn fold(sum: &mut u64, cols: &ProcessedColumns) {
+    for &l in &cols.labels {
+        *sum = sum.wrapping_mul(31).wrapping_add(l as u64);
+    }
+    for col in &cols.sparse {
+        for &v in col {
+            *sum = sum.wrapping_mul(31).wrapping_add(v as u64);
+        }
+    }
+    for col in &cols.dense {
+        for &v in col {
+            *sum = sum.wrapping_mul(31).wrapping_add(v.to_bits() as u64);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The OLD data plane: per-row decode, row-wise GV/AV (what the engine
+// did before the RowBlock redesign — reproduced here as the baseline).
+// ---------------------------------------------------------------------
+
+/// Chunked decoder to `Vec<DecodedRow>`: binary stages bytes through a
+/// partial buffer (`extend` + `drain` per chunk) and allocates two
+/// `Vec`s per row; UTF-8 assembles rows then materializes them.
+struct RowWiseDecoder {
+    schema: Schema,
+    input: InputFormat,
+    asm: RowAssembler,
+    partial: Vec<u8>,
+}
+
+impl RowWiseDecoder {
+    fn new(schema: Schema, input: InputFormat) -> Self {
+        RowWiseDecoder { schema, input, asm: RowAssembler::new(schema), partial: Vec::new() }
+    }
+
+    fn feed(&mut self, chunk: &[u8]) -> Vec<DecodedRow> {
+        match self.input {
+            InputFormat::Utf8 => {
+                self.asm.feed_bytes(chunk);
+                self.asm.take_rows()
+            }
+            InputFormat::Binary => {
+                self.partial.extend_from_slice(chunk);
+                let rb = self.schema.binary_row_bytes();
+                let full = self.partial.len() / rb * rb;
+                let rows = binary::decode_bytes(&self.partial[..full], self.schema).unwrap();
+                self.partial.drain(..full);
+                rows
+            }
+        }
+    }
+}
+
+struct RowWiseState {
+    modulus: Modulus,
+    vocabs: Vec<HashVocab>,
+}
+
+impl RowWiseState {
+    fn observe(&mut self, rows: &[DecodedRow]) {
+        for row in rows {
+            for (c, &s) in row.sparse.iter().enumerate() {
+                self.vocabs[c].observe(self.modulus.apply(s));
+            }
+        }
+    }
+
+    fn process(&self, schema: Schema, rows: &[DecodedRow]) -> ProcessedColumns {
+        let mut out = ProcessedColumns::with_schema(schema);
+        out.labels.reserve(rows.len());
+        for row in rows {
+            out.labels.push(row.label);
+            for (c, &d) in row.dense.iter().enumerate() {
+                out.dense[c].push(log1p(neg2zero(d)));
+            }
+            for (c, &s) in row.sparse.iter().enumerate() {
+                out.sparse[c].push(self.vocabs[c].apply(self.modulus.apply(s)).unwrap_or(0));
+            }
+        }
+        out
+    }
+}
+
+fn run_rowwise(
+    raw: &[u8],
+    schema: Schema,
+    input: InputFormat,
+    m: Modulus,
+    cb: usize,
+) -> (u64, usize) {
+    let mut state = RowWiseState {
+        modulus: m,
+        vocabs: (0..schema.num_sparse).map(|_| HashVocab::new()).collect(),
+    };
+    let mut dec = RowWiseDecoder::new(schema, input);
+    let mut rows_seen = 0usize;
+    for chunk in raw.chunks(cb) {
+        let rows = dec.feed(chunk);
+        state.observe(&rows);
+        rows_seen += rows.len();
+    }
+    let mut sum = 0u64;
+    let mut dec = RowWiseDecoder::new(schema, input);
+    for chunk in raw.chunks(cb) {
+        let rows = dec.feed(chunk);
+        let cols = state.process(schema, &rows);
+        fold(&mut sum, &cols);
+    }
+    (sum, rows_seen)
+}
+
+// ---------------------------------------------------------------------
+// The NEW data plane: ChunkDecoder → reused RowBlock → ChunkState.
+// ---------------------------------------------------------------------
+
+fn run_columnar(raw: &[u8], plan: &Plan) -> (u64, usize) {
+    // The engine's own chunking estimate — both paths chunk identically.
+    let cb = plan.chunk_bytes();
+    let mut state = ChunkState::new(plan);
+    let mut block = RowBlock::with_capacity(plan.schema, CHUNK_ROWS);
+    let mut rows_seen = 0usize;
+    let mut dec = ChunkDecoder::new(plan.input, plan.schema);
+    for chunk in raw.chunks(cb) {
+        block.clear();
+        dec.feed_into(chunk, &mut block).unwrap();
+        state.observe(&block);
+        rows_seen += block.num_rows();
+    }
+    block.clear();
+    dec.finish_into(&mut block).unwrap();
+    state.observe(&block);
+    rows_seen += block.num_rows();
+
+    let mut sum = 0u64;
+    let mut dec = ChunkDecoder::new(plan.input, plan.schema);
+    for chunk in raw.chunks(cb) {
+        block.clear();
+        dec.feed_into(chunk, &mut block).unwrap();
+        fold(&mut sum, &state.process(&block));
+    }
+    block.clear();
+    dec.finish_into(&mut block).unwrap();
+    fold(&mut sum, &state.process(&block));
+    (sum, rows_seen)
+}
+
+fn main() {
+    let rows = bench_rows(200_000);
+    let reps = bench_reps(3);
+    let ds = dataset(rows);
+    let m = Modulus::VOCAB_5K;
+    let spec = PipelineSpec::dlrm(m.range);
+
+    let mut t = Table::new(
+        &format!(
+            "row-wise Vec<DecodedRow> vs columnar RowBlock — decode+GV+AV, \
+             1 thread, {rows} rows, median of {reps} [meas]"
+        ),
+        &["input", "row-wise", "columnar", "rows/s (columnar)", "speedup"],
+    );
+
+    for input in [InputFormat::Binary, InputFormat::Utf8] {
+        let raw = match input {
+            InputFormat::Binary => binary::encode_dataset(&ds),
+            InputFormat::Utf8 => utf8::encode_dataset(&ds),
+        };
+        let plan = Plan {
+            flags: spec.flags(),
+            modulus: spec.modulus(),
+            spec: spec.clone(),
+            schema: ds.schema(),
+            input,
+            chunk_rows: CHUNK_ROWS,
+            channel_depth: 2,
+        };
+
+        // Correctness gate: identical checksums before timing anything.
+        let cb = plan.chunk_bytes();
+        let (sum_old, n_old) = run_rowwise(&raw, ds.schema(), input, m, cb);
+        let (sum_new, n_new) = run_columnar(&raw, &plan);
+        assert_eq!(n_old, rows, "row-wise row count");
+        assert_eq!(n_new, rows, "columnar row count");
+        assert_eq!(sum_old, sum_new, "representations must be bit-identical");
+
+        let old = median(
+            (0..reps)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    std::hint::black_box(run_rowwise(&raw, ds.schema(), input, m, cb));
+                    t0.elapsed()
+                })
+                .collect(),
+        );
+        let new = median(
+            (0..reps)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    std::hint::black_box(run_columnar(&raw, &plan));
+                    t0.elapsed()
+                })
+                .collect(),
+        );
+        let speedup = old.as_secs_f64() / new.as_secs_f64().max(1e-12);
+        t.row(&[
+            format!("{input:?}"),
+            fmt_duration(old),
+            fmt_duration(new),
+            fmt_rows_per_sec(rows as f64 / new.as_secs_f64().max(1e-12)),
+            fmt_speedup(speedup),
+        ]);
+    }
+    t.note("both paths: two passes (GenVocab rewind), identical checksums asserted");
+    t.note("row-wise = pre-RowBlock engine: 2 heap Vecs/row + chunk staging memmove");
+    t.print();
+}

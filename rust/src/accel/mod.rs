@@ -197,7 +197,7 @@ pub fn run(cfg: &PiperConfig, raw: &[u8]) -> crate::Result<PiperRun> {
 // Streaming executor
 // ---------------------------------------------------------------------
 
-use crate::data::DecodedRow;
+use crate::data::RowBlock;
 use crate::pipeline::{
     ChunkState, Executor, ExecutorReport, ExecutorRun, Plan, StreamStats,
 };
@@ -280,13 +280,13 @@ struct PiperExecRun {
 }
 
 impl ExecutorRun for PiperExecRun {
-    fn observe(&mut self, rows: &[DecodedRow]) -> crate::Result<()> {
-        self.state.observe(rows);
+    fn observe(&mut self, block: &RowBlock) -> crate::Result<()> {
+        self.state.observe(block);
         Ok(())
     }
 
-    fn process(&mut self, rows: &[DecodedRow]) -> crate::Result<ProcessedColumns> {
-        Ok(self.state.process(rows))
+    fn process(&mut self, block: &RowBlock) -> crate::Result<ProcessedColumns> {
+        Ok(self.state.process(block))
     }
 
     fn finish(&mut self, stats: &StreamStats) -> crate::Result<ExecutorReport> {

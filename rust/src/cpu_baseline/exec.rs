@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use crate::accel::InputFormat;
 use crate::data::row::ProcessedColumns;
-use crate::data::DecodedRow;
+use crate::data::RowBlock;
 use crate::ops::HashVocab;
 use crate::pipeline::{ChunkState, Executor, ExecutorReport, ExecutorRun, Plan, StreamStats};
 use crate::report::TimeTag;
@@ -81,20 +81,23 @@ struct CpuRun {
 }
 
 impl ExecutorRun for CpuRun {
-    fn observe(&mut self, rows: &[DecodedRow]) -> Result<()> {
+    fn observe(&mut self, block: &RowBlock) -> Result<()> {
         let t0 = Instant::now();
-        if self.threads <= 1 || rows.len() < 2 * self.threads {
-            self.state.observe(rows);
+        let rows = block.num_rows();
+        if self.threads <= 1 || rows < 2 * self.threads {
+            self.state.observe(block);
         } else {
-            let parts = partition_rows(rows.len(), self.threads);
+            // Sharding is range-slicing of the column-major block: each
+            // thread scans its row range of every column slice.
+            let parts = partition_rows(rows, self.threads);
             let mut subs: Vec<Vec<HashVocab>> = Vec::with_capacity(parts.len());
             let state = &self.state;
             std::thread::scope(|scope| {
                 let handles: Vec<_> = parts
                     .iter()
                     .map(|range| {
-                        let shard = &rows[range.clone()];
-                        scope.spawn(move || state.observe_sub(shard))
+                        let range = range.clone();
+                        scope.spawn(move || state.observe_sub(block, range))
                     })
                     .collect();
                 for h in handles {
@@ -107,35 +110,36 @@ impl ExecutorRun for CpuRun {
         Ok(())
     }
 
-    fn process(&mut self, rows: &[DecodedRow]) -> Result<ProcessedColumns> {
+    fn process(&mut self, block: &RowBlock) -> Result<ProcessedColumns> {
         let t0 = Instant::now();
-        let block = if self.threads <= 1 || rows.len() < 2 * self.threads {
-            self.state.process(rows)
+        let rows = block.num_rows();
+        let out = if self.threads <= 1 || rows < 2 * self.threads {
+            self.state.process(block)
         } else {
-            let parts = partition_rows(rows.len(), self.threads);
-            let mut blocks: Vec<ProcessedColumns> = Vec::with_capacity(parts.len());
+            let parts = partition_rows(rows, self.threads);
+            let mut shards: Vec<ProcessedColumns> = Vec::with_capacity(parts.len());
             let state = &self.state;
             std::thread::scope(|scope| {
                 let handles: Vec<_> = parts
                     .iter()
                     .map(|range| {
-                        let shard = &rows[range.clone()];
-                        scope.spawn(move || state.process(shard))
+                        let range = range.clone();
+                        scope.spawn(move || state.process_range(block, range))
                     })
                     .collect();
                 for h in handles {
-                    blocks.push(h.join().expect("AV worker panicked"));
+                    shards.push(h.join().expect("AV worker panicked"));
                 }
             });
-            // CFR within the chunk: shard blocks back in row order.
-            let mut out = blocks.remove(0);
-            for b in &blocks {
+            // CFR within the chunk: shard outputs back in row order.
+            let mut out = shards.remove(0);
+            for b in &shards {
                 out.extend_from(b);
             }
             out
         };
         self.process_time += t0.elapsed();
-        Ok(block)
+        Ok(out)
     }
 
     fn finish(&mut self, stats: &StreamStats) -> Result<ExecutorReport> {

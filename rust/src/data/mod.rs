@@ -9,11 +9,13 @@
 //! (paper Fig. 4).
 
 pub mod binary;
+pub mod block;
 pub mod row;
 pub mod schema;
 pub mod synth;
 pub mod utf8;
 
+pub use block::RowBlock;
 pub use row::{DecodedRow, ProcessedRow};
 pub use schema::Schema;
 pub use synth::{RowGen, SynthConfig, SynthDataset};

@@ -8,14 +8,17 @@
 //! * [`parallel`] — the 4-byte-per-cycle combination decoder of paper
 //!   Script 1 (generalized to width 1/2/4/8 for the ablation bench).
 //!
-//! Both consume raw bytes and produce [`DecodedRow`]s with missing fields
+//! Both consume raw bytes and produce decoded rows with missing fields
 //! already filled with 0 (on hardware there is no `Null`, paper §3.1),
-//! plus a cycle count for the accelerator timing model.
+//! plus a cycle count for the accelerator timing model. The shared
+//! [`RowAssembler`] writes completed rows either into a column-major
+//! [`RowBlock`] (the engine's zero-alloc streaming path) or into
+//! [`DecodedRow`]s (the one-shot decoders' legacy view).
 
 pub mod parallel;
 pub mod scalar;
 
-use crate::data::{DecodedRow, Schema};
+use crate::data::{DecodedRow, RowBlock, Schema};
 
 pub use parallel::ParallelDecoder;
 pub use scalar::ScalarDecoder;
@@ -76,11 +79,20 @@ const CLASS_LUT: [u8; 256] = {
 };
 
 /// Shared row-assembly state machine: accumulates nibbles into the 32-bit
-/// register, finalizes fields on delimiters, assembles [`DecodedRow`]s.
+/// register, finalizes fields on delimiters, assembles rows.
 ///
 /// The field's *mode* (decimal vs hexadecimal accumulate) is selected by
 /// the column counter against the [`Schema`] — "what we should know in
 /// advance is the data format for each feature" (paper §3.2).
+///
+/// Completed rows go to a caller-provided column-major [`RowBlock`]
+/// ([`Self::feed_bytes_into`] / [`Self::finish_into`] — the engine's
+/// zero-alloc path: the assembler owns one fixed scratch row and never
+/// allocates per row). The row-wise API ([`Self::feed_bytes`],
+/// [`Self::take_rows`], [`Self::finish`]) materializes [`DecodedRow`]s
+/// directly (two heap `Vec`s per row, the pre-`RowBlock` cost) — kept
+/// for the one-shot decoders, tests, and as the faithful baseline the
+/// `rows_columnar` bench measures against.
 #[derive(Debug)]
 pub struct RowAssembler {
     schema: Schema,
@@ -93,7 +105,11 @@ pub struct RowAssembler {
     /// Cached accumulate mode of the current column (avoids re-deriving
     /// it per nibble — §Perf).
     hex_mode: bool,
-    cur: DecodedRow,
+    cur_label: i32,
+    cur_dense: Vec<i32>,
+    cur_sparse: Vec<u32>,
+    /// Rows completed through the row-wise API only; the `_into`
+    /// methods bypass it entirely.
     out: Vec<DecodedRow>,
 }
 
@@ -105,27 +121,10 @@ impl RowAssembler {
             negative_flag: false,
             col: 0,
             hex_mode: false, // column 0 is the (decimal) label
-            cur: DecodedRow::zeroed(schema),
+            cur_label: 0,
+            cur_dense: vec![0; schema.num_dense],
+            cur_sparse: vec![0; schema.num_sparse],
             out: Vec::new(),
-        }
-    }
-
-    /// Feed one classified byte.
-    #[inline]
-    pub fn step(&mut self, class: ByteClass) {
-        match class {
-            ByteClass::Nibble(n) => self.push_nibble(n),
-            ByteClass::Minus => self.negative_flag = true,
-            ByteClass::Delim { end_of_row } => {
-                self.finish_field();
-                if end_of_row {
-                    self.finish_row();
-                }
-            }
-            ByteClass::Illegal => {
-                // Hardware would flag an error line; we skip the byte.
-                // Kept non-panicking so fuzzed inputs can't crash the PE.
-            }
         }
     }
 
@@ -139,10 +138,37 @@ impl RowAssembler {
         };
     }
 
-    /// The hot loop: feed a raw byte slice through the LUT classifier.
-    /// Equivalent to `for b in bytes { step(classify(b)) }` but
-    /// branch-lean — this is what both decoders and the streaming path
-    /// call (EXPERIMENTS.md §Perf).
+    /// The hot loop: feed a raw byte slice through the LUT classifier
+    /// (see [`classify`] for the byte-class semantics), appending every
+    /// completed row to `out` — this is what the streaming engine calls
+    /// (EXPERIMENTS.md §Perf). No allocation happens per row: fields
+    /// accumulate in the assembler's scratch row, and `finish_row_into`
+    /// writes it column-wise into the block. Illegal bytes are skipped
+    /// non-panicking (hardware would flag an error line), so fuzzed
+    /// inputs can't crash the PE.
+    #[inline]
+    pub fn feed_bytes_into(&mut self, bytes: &[u8], out: &mut RowBlock) {
+        for &b in bytes {
+            let code = CLASS_LUT[b as usize];
+            if code < 16 {
+                self.push_nibble(code);
+            } else if code == CODE_TAB {
+                self.finish_field();
+            } else if code == CODE_NL {
+                self.finish_field();
+                self.finish_row_into(out);
+            } else if code == CODE_MINUS {
+                self.negative_flag = true;
+            }
+            // CODE_ILLEGAL: skipped
+        }
+    }
+
+    /// Row-wise feed: the same classifier loop, materializing each
+    /// completed row as a [`DecodedRow`] (two allocations per row —
+    /// exactly the representation the columnar engine retired; kept
+    /// un-degraded so the one-shot decoders and the `rows_columnar`
+    /// baseline measure the true pre-`RowBlock` cost).
     #[inline]
     pub fn feed_bytes(&mut self, bytes: &[u8]) {
         for &b in bytes {
@@ -153,7 +179,7 @@ impl RowAssembler {
                 self.finish_field();
             } else if code == CODE_NL {
                 self.finish_field();
-                self.finish_row();
+                self.finish_row_vec();
             } else if code == CODE_MINUS {
                 self.negative_flag = true;
             }
@@ -172,11 +198,11 @@ impl RowAssembler {
         };
         let nd = self.schema.num_dense;
         if self.col == 0 {
-            self.cur.label = value as i32;
+            self.cur_label = value as i32;
         } else if self.col <= nd {
-            self.cur.dense[self.col - 1] = value as i32;
+            self.cur_dense[self.col - 1] = value as i32;
         } else if self.col <= nd + self.schema.num_sparse {
-            self.cur.sparse[self.col - 1 - nd] = value;
+            self.cur_sparse[self.col - 1 - nd] = value;
         }
         // Columns beyond the schema are dropped (malformed line).
         self.reg = 0;
@@ -185,25 +211,58 @@ impl RowAssembler {
         self.hex_mode = self.col > nd;
     }
 
+    /// Reset the scratch row after emitting: unseen trailing columns of
+    /// the next row must read as FillMissing's 0.
     #[inline]
-    fn finish_row(&mut self) {
-        let done = std::mem::replace(&mut self.cur, DecodedRow::zeroed(self.schema));
-        self.out.push(done);
+    fn reset_row(&mut self) {
+        self.cur_label = 0;
+        self.cur_dense.fill(0);
+        self.cur_sparse.fill(0);
         self.col = 0;
         self.hex_mode = false;
     }
 
-    /// Drain the rows completed so far without consuming the assembler —
-    /// the streaming (network) path calls this after each chunk.
+    #[inline]
+    fn finish_row_into(&mut self, out: &mut RowBlock) {
+        out.push_row(self.cur_label, &self.cur_dense, &self.cur_sparse);
+        self.reset_row();
+    }
+
+    #[inline]
+    fn finish_row_vec(&mut self) {
+        self.out.push(DecodedRow {
+            label: self.cur_label,
+            dense: self.cur_dense.clone(),
+            sparse: self.cur_sparse.clone(),
+        });
+        self.reset_row();
+    }
+
+    /// Drain the rows completed so far through the row-wise API without
+    /// consuming the assembler.
     pub fn take_rows(&mut self) -> Vec<DecodedRow> {
         std::mem::take(&mut self.out)
     }
 
-    /// Flush: if input ended without a trailing `\n`, complete the open row.
+    /// Flush into `out`: if input ended without a trailing `\n`, complete
+    /// the open row. Callers that fed via [`Self::feed_bytes_into`] must
+    /// finish through here (any row-wise-fed rows are appended first,
+    /// in order).
+    pub fn finish_into(mut self, out: &mut RowBlock) {
+        for row in &self.out {
+            out.push_row(row.label, &row.dense, &row.sparse);
+        }
+        if self.col != 0 || self.reg != 0 || self.negative_flag {
+            self.finish_field();
+            self.finish_row_into(out);
+        }
+    }
+
+    /// Row-wise flush: complete the open row, return everything.
     pub fn finish(mut self) -> Vec<DecodedRow> {
         if self.col != 0 || self.reg != 0 || self.negative_flag {
             self.finish_field();
-            self.finish_row();
+            self.finish_row_vec();
         }
         self.out
     }

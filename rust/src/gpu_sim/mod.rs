@@ -260,13 +260,13 @@ struct GpuExecRun {
 }
 
 impl ExecutorRun for GpuExecRun {
-    fn observe(&mut self, rows: &[DecodedRow]) -> Result<()> {
-        self.state.observe(rows);
+    fn observe(&mut self, block: &crate::data::RowBlock) -> Result<()> {
+        self.state.observe(block);
         Ok(())
     }
 
-    fn process(&mut self, rows: &[DecodedRow]) -> Result<ProcessedColumns> {
-        Ok(self.state.process(rows))
+    fn process(&mut self, block: &crate::data::RowBlock) -> Result<ProcessedColumns> {
+        Ok(self.state.process(block))
     }
 
     fn finish(&mut self, stats: &StreamStats) -> Result<ExecutorReport> {

@@ -36,8 +36,11 @@
 //!   [`pipeline::Executor`] (CPU baseline, GPU model, the three PIPER
 //!   modes) into a [`pipeline::Sink`], with bounded memory and a
 //!   [`pipeline::Pipeline`] that is planned once and reused across
-//!   submissions. This is the public execution API; everything else
-//!   (CLI, coordinator, benches) builds on it.
+//!   submissions. Decoded chunks travel as the column-major, zero-alloc
+//!   [`data::RowBlock`]; raw buffers and the decode scratch recycle, so
+//!   steady state allocates nothing per chunk. This is the public
+//!   execution API; everything else (CLI, coordinator, benches) builds
+//!   on it.
 //! * `runtime` / `train` — PJRT runtime that loads the AOT-compiled
 //!   JAX/Pallas DLRM (`artifacts/*.hlo.txt`) and the training loop that
 //!   consumes preprocessed batches (paper Fig. 1 consumer). Both are

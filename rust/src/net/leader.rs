@@ -60,7 +60,10 @@ pub fn run_leader_source(
     let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream.try_clone()?);
 
     protocol::write_frame(&mut writer, Tag::Job, &job.encode())?;
-    while let Some(chunk) = source.next_chunk(chunk_size.max(1))? {
+    // One reused chunk buffer per submission — the leader's resident
+    // raw-input memory, regardless of dataset size.
+    let mut chunk = Vec::new();
+    while source.next_chunk(chunk_size.max(1), &mut chunk)? {
         protocol::write_frame(&mut writer, Tag::Pass1Chunk, &chunk)?;
     }
     protocol::write_frame(&mut writer, Tag::Pass1End, &[])?;
@@ -89,7 +92,7 @@ pub fn run_leader_source(
         }
     });
 
-    while let Some(chunk) = source.next_chunk(chunk_size.max(1))? {
+    while source.next_chunk(chunk_size.max(1), &mut chunk)? {
         protocol::write_frame(&mut writer, Tag::Pass2Chunk, &chunk)?;
     }
     protocol::write_frame(&mut writer, Tag::Pass2End, &[])?;

@@ -3,7 +3,7 @@
 
 use crate::accel::InputFormat;
 use crate::data::row::{ProcessedColumns, ProcessedRow};
-use crate::data::{DecodedRow, Schema};
+use crate::data::{RowBlock, Schema};
 use crate::ops::{log1p, HashVocab, Modulus, Vocab};
 use crate::pipeline::ChunkDecoder;
 use crate::Result;
@@ -34,8 +34,10 @@ enum Phase {
 }
 
 /// The streaming preprocessor: GenVocab during pass 1, ApplyVocab +
-/// dense finishing during pass 2. Memory high-water is the vocabularies
-/// plus one chunk — never the dataset.
+/// dense finishing during pass 2. Shares the engine's [`ChunkDecoder`]
+/// and decodes every chunk into one reusable column-major [`RowBlock`]
+/// scratch — memory high-water is the vocabularies plus one chunk,
+/// never the dataset, and no per-row allocation happens on either pass.
 #[derive(Debug)]
 pub struct StreamingPreprocessor {
     schema: Schema,
@@ -43,6 +45,7 @@ pub struct StreamingPreprocessor {
     format: WireFormat,
     vocabs: Vec<HashVocab>,
     decoder: ChunkDecoder,
+    scratch: RowBlock,
     phase: Phase,
     rows_pass1: usize,
     rows_pass2: usize,
@@ -56,6 +59,7 @@ impl StreamingPreprocessor {
             format,
             vocabs: (0..schema.num_sparse).map(|_| HashVocab::new()).collect(),
             decoder: ChunkDecoder::new(format.into(), schema),
+            scratch: RowBlock::new(schema),
             phase: Phase::Pass1,
             rows_pass1: 0,
             rows_pass2: 0,
@@ -65,8 +69,9 @@ impl StreamingPreprocessor {
     /// Pass-1 chunk: observe sparse values into the vocabularies.
     pub fn pass1_chunk(&mut self, chunk: &[u8]) -> Result<()> {
         anyhow::ensure!(self.phase == Phase::Pass1, "pass1_chunk in phase {:?}", self.phase);
-        let rows = self.decoder.feed(chunk)?;
-        self.observe(&rows);
+        self.scratch.clear();
+        self.decoder.feed_into(chunk, &mut self.scratch)?;
+        self.observe_scratch();
         Ok(())
     }
 
@@ -77,19 +82,22 @@ impl StreamingPreprocessor {
             &mut self.decoder,
             ChunkDecoder::new(self.format.into(), self.schema),
         );
-        let rows = decoder.finish()?;
-        self.observe(&rows);
+        self.scratch.clear();
+        decoder.finish_into(&mut self.scratch)?;
+        self.observe_scratch();
         self.phase = Phase::BetweenPasses;
         Ok(())
     }
 
-    fn observe(&mut self, rows: &[DecodedRow]) {
-        for row in rows {
-            for (c, &s) in row.sparse.iter().enumerate() {
-                self.vocabs[c].observe(self.modulus.apply(s));
+    /// GenVocab over the scratch block: one tight loop per sparse column.
+    fn observe_scratch(&mut self) {
+        let m = self.modulus;
+        for (c, vocab) in self.vocabs.iter_mut().enumerate() {
+            for &s in self.scratch.sparse_col(c) {
+                vocab.observe(m.apply(s));
             }
         }
-        self.rows_pass1 += rows.len();
+        self.rows_pass1 += self.scratch.num_rows();
     }
 
     /// Pass-2 chunk: returns the preprocessed rows it completes.
@@ -98,8 +106,11 @@ impl StreamingPreprocessor {
             self.phase = Phase::Pass2;
         }
         anyhow::ensure!(self.phase == Phase::Pass2, "pass2_chunk in phase {:?}", self.phase);
-        let rows = self.decoder.feed(chunk)?;
-        Ok(self.apply(&rows))
+        self.scratch.clear();
+        self.decoder.feed_into(chunk, &mut self.scratch)?;
+        let out = self.apply_scratch();
+        self.rows_pass2 += out.len();
+        Ok(out)
     }
 
     /// End of pass 2: flush, return trailing rows.
@@ -112,25 +123,33 @@ impl StreamingPreprocessor {
             &mut self.decoder,
             ChunkDecoder::new(self.format.into(), self.schema),
         );
-        let rows = decoder.finish()?;
-        let out = self.apply(&rows);
+        self.scratch.clear();
+        decoder.finish_into(&mut self.scratch)?;
+        let out = self.apply_scratch();
+        self.rows_pass2 += out.len();
         self.phase = Phase::Done;
         Ok(out)
     }
 
-    fn apply(&mut self, rows: &[DecodedRow]) -> Vec<ProcessedRow> {
-        let mut out = Vec::with_capacity(rows.len());
-        for row in rows {
-            let dense = row.dense.iter().map(|&d| log1p(d)).collect();
-            let sparse = row
-                .sparse
+    /// ApplyVocab + dense finishing over the scratch block, re-assembled
+    /// into the wire's row-major frames. Column slices are hoisted once
+    /// per chunk so the per-row transpose does no repeated slicing.
+    fn apply_scratch(&self) -> Vec<ProcessedRow> {
+        let block = &self.scratch;
+        let n = block.num_rows();
+        let dcols: Vec<&[i32]> = (0..self.schema.num_dense).map(|c| block.dense_col(c)).collect();
+        let scols: Vec<&[u32]> =
+            (0..self.schema.num_sparse).map(|c| block.sparse_col(c)).collect();
+        let mut out = Vec::with_capacity(n);
+        for r in 0..n {
+            let dense = dcols.iter().map(|col| log1p(col[r])).collect();
+            let sparse = scols
                 .iter()
-                .enumerate()
-                .map(|(c, &s)| self.vocabs[c].apply(self.modulus.apply(s)).unwrap_or(0))
+                .zip(&self.vocabs)
+                .map(|(col, vocab)| vocab.apply(self.modulus.apply(col[r])).unwrap_or(0))
                 .collect();
-            out.push(ProcessedRow { label: row.label, dense, sparse });
+            out.push(ProcessedRow { label: block.labels()[r], dense, sparse });
         }
-        self.rows_pass2 += rows.len();
         out
     }
 

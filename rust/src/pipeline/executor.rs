@@ -13,13 +13,17 @@
 //!
 //! All executors share [`ChunkState`] for the operator semantics, so
 //! their outputs are bit-identical by construction; what differs is
-//! parallelism and the timing model.
+//! parallelism and the timing model. Chunks arrive as column-major
+//! [`RowBlock`]s, so GenVocab/ApplyVocab run as tight loops over
+//! contiguous column slices; row sharding (the CPU baseline) is range
+//! slicing of the block, not row object shuffling.
 
+use std::ops::Range;
 use std::time::Duration;
 
 use crate::accel::InputFormat;
 use crate::data::row::ProcessedColumns;
-use crate::data::DecodedRow;
+use crate::data::RowBlock;
 use crate::data::Schema;
 use crate::ops::{log1p, neg2zero, HashVocab, Modulus, OpFlags, Vocab};
 use crate::report::TimeTag;
@@ -28,7 +32,7 @@ use crate::Result;
 use super::Plan;
 
 /// A preprocessing backend that can execute a planned operator graph
-/// over a stream of decoded-row chunks. Stateless and reusable: each
+/// over a stream of decoded chunks. Stateless and reusable: each
 /// submission gets its own [`ExecutorRun`] from [`Executor::begin`].
 pub trait Executor: Send + Sync {
     /// Display name (stable — reports and the comparison tables key on it).
@@ -49,18 +53,20 @@ pub trait Executor: Send + Sync {
 
 /// Per-submission executor state, driven by the engine:
 /// `observe`* (pass 1, only when the plan builds vocabularies) → `seal`
-/// → `process`* (pass 2) → `finish`.
+/// → `process`* (pass 2) → `finish`. Chunks are borrowed column-major
+/// blocks — the engine reuses one scratch block per pass, so executors
+/// must not hold on to them across calls.
 pub trait ExecutorRun: Send {
-    /// Pass 1: observe a chunk of decoded rows (GenVocab).
-    fn observe(&mut self, rows: &[DecodedRow]) -> Result<()>;
+    /// Pass 1: observe a decoded chunk (GenVocab).
+    fn observe(&mut self, block: &RowBlock) -> Result<()>;
 
     /// Barrier between the passes (merge/freeze vocabulary state).
     fn seal(&mut self) -> Result<()> {
         Ok(())
     }
 
-    /// Pass 2: process a chunk into a column block.
-    fn process(&mut self, rows: &[DecodedRow]) -> Result<ProcessedColumns>;
+    /// Pass 2: process a decoded chunk into a column block.
+    fn process(&mut self, block: &RowBlock) -> Result<ProcessedColumns>;
 
     /// End of submission; `stats` carries the engine's stream totals for
     /// the timing models.
@@ -91,10 +97,13 @@ pub struct ExecutorReport {
 }
 
 /// The shared functional core: the planned operator graph over decoded
-/// rows. Semantics match [`crate::ops::PipelineSpec::execute`] exactly —
-/// sparse: Modulus → (GenVocab → ApplyVocab) as configured, dense:
-/// Neg2Zero / Logarithm as configured — applied streamingly with
-/// insertion-ordered vocabularies.
+/// column blocks. Semantics match [`crate::ops::PipelineSpec::execute`]
+/// exactly — sparse: Modulus → (GenVocab → ApplyVocab) as configured,
+/// dense: Neg2Zero / Logarithm as configured — applied streamingly with
+/// insertion-ordered vocabularies. Every loop scans a contiguous column
+/// slice; per-column vocabularies make the column visit order
+/// irrelevant, so the columnar scan assigns exactly the indices the old
+/// row-wise scan did.
 #[derive(Debug)]
 pub struct ChunkState {
     pub schema: Schema,
@@ -113,28 +122,38 @@ impl ChunkState {
         }
     }
 
-    /// Pass-1 GenVocab over a chunk, in row order.
-    pub fn observe(&mut self, rows: &[DecodedRow]) {
+    /// Pass-1 GenVocab over a chunk: one tight loop per sparse column.
+    pub fn observe(&mut self, block: &RowBlock) {
         if !self.flags.gen_vocab {
             return;
         }
-        for row in rows {
-            for (c, &s) in row.sparse.iter().enumerate() {
-                let v = self.modulus.map_or(s, |m| m.apply(s));
-                self.vocabs[c].observe(v);
+        for (c, vocab) in self.vocabs.iter_mut().enumerate() {
+            let col = block.sparse_col(c);
+            match self.modulus {
+                Some(m) => {
+                    for &s in col {
+                        vocab.observe(m.apply(s));
+                    }
+                }
+                None => vocab.observe_slice(col),
             }
         }
     }
 
-    /// Build private per-column sub-dictionaries over a row range — the
-    /// threaded GV of the CPU baseline, per chunk.
-    pub fn observe_sub(&self, rows: &[DecodedRow]) -> Vec<HashVocab> {
+    /// Build private per-column sub-dictionaries over a row range of the
+    /// block — the threaded GV of the CPU baseline, per chunk shard.
+    pub fn observe_sub(&self, block: &RowBlock, range: Range<usize>) -> Vec<HashVocab> {
         let mut subs: Vec<HashVocab> =
             (0..self.schema.num_sparse).map(|_| HashVocab::new()).collect();
-        for row in rows {
-            for (c, &s) in row.sparse.iter().enumerate() {
-                let v = self.modulus.map_or(s, |m| m.apply(s));
-                subs[c].observe(v);
+        for (c, sub) in subs.iter_mut().enumerate() {
+            let col = &block.sparse_col(c)[range.clone()];
+            match self.modulus {
+                Some(m) => {
+                    for &s in col {
+                        sub.observe(m.apply(s));
+                    }
+                }
+                None => sub.observe_slice(col),
             }
         }
         subs
@@ -151,26 +170,34 @@ impl ChunkState {
         }
     }
 
-    /// Pass-2: process a chunk into a column block (ApplyVocab + dense
-    /// finishing).
-    pub fn process(&self, rows: &[DecodedRow]) -> ProcessedColumns {
+    /// Pass-2: process a whole chunk into a column block (ApplyVocab +
+    /// dense finishing).
+    pub fn process(&self, block: &RowBlock) -> ProcessedColumns {
+        self.process_range(block, 0..block.num_rows())
+    }
+
+    /// Pass-2 over a row range of the block — the shard form the CPU
+    /// baseline's threads use. Slicing at any partition boundary and
+    /// concatenating shard outputs in order equals [`Self::process`] of
+    /// the whole block.
+    pub fn process_range(&self, block: &RowBlock, range: Range<usize>) -> ProcessedColumns {
         let mut out = ProcessedColumns::with_schema(self.schema);
-        out.labels.reserve(rows.len());
-        for row in rows {
-            out.labels.push(row.label);
-            for (c, &d) in row.dense.iter().enumerate() {
+        out.labels.extend_from_slice(&block.labels()[range.clone()]);
+        for (c, dst) in out.dense.iter_mut().enumerate() {
+            let col = &block.dense_col(c)[range.clone()];
+            dst.reserve(col.len());
+            for &d in col {
                 let v = if self.flags.neg2zero { neg2zero(d) } else { d };
-                let v = if self.flags.logarithm { log1p(v) } else { v as f32 };
-                out.dense[c].push(v);
+                dst.push(if self.flags.logarithm { log1p(v) } else { v as f32 });
             }
-            for (c, &s) in row.sparse.iter().enumerate() {
+        }
+        for (c, dst) in out.sparse.iter_mut().enumerate() {
+            let col = &block.sparse_col(c)[range.clone()];
+            dst.reserve(col.len());
+            let vocab = &self.vocabs[c];
+            for &s in col {
                 let v = self.modulus.map_or(s, |m| m.apply(s));
-                let v = if self.flags.apply_vocab {
-                    self.vocabs[c].apply(v).unwrap_or(0)
-                } else {
-                    v
-                };
-                out.sparse[c].push(v);
+                dst.push(if self.flags.apply_vocab { vocab.apply(v).unwrap_or(0) } else { v });
             }
         }
         out
@@ -199,20 +226,23 @@ mod tests {
     #[test]
     fn chunked_observe_equals_sub_merge() {
         let ds = SynthDataset::generate(SynthConfig::small(300));
+        let block = RowBlock::from_rows(&ds.rows, ds.schema());
         let p = plan("modulus:97|genvocab|applyvocab");
         let mut seq = ChunkState::new(&p);
-        seq.observe(&ds.rows);
+        seq.observe(&block);
 
         let mut sharded = ChunkState::new(&p);
-        let subs: Vec<Vec<HashVocab>> = ds
-            .rows
-            .chunks(77)
-            .map(|c| sharded.observe_sub(c))
-            .collect();
+        let mut subs = Vec::new();
+        let mut start = 0;
+        while start < block.num_rows() {
+            let end = (start + 77).min(block.num_rows());
+            subs.push(sharded.observe_sub(&block, start..end));
+            start = end;
+        }
         sharded.merge_subs(&subs);
 
         assert_eq!(seq.vocab_entries(), sharded.vocab_entries());
-        assert_eq!(seq.process(&ds.rows), sharded.process(&ds.rows));
+        assert_eq!(seq.process(&block), sharded.process(&block));
     }
 
     #[test]
@@ -228,13 +258,35 @@ mod tests {
             4096,
         );
         let mut state = ChunkState::new(&p);
-        for chunk in ds.rows.chunks(31) {
+        let chunks: Vec<RowBlock> = ds
+            .rows
+            .chunks(31)
+            .map(|c| RowBlock::from_rows(c, ds.schema()))
+            .collect();
+        for chunk in &chunks {
             state.observe(chunk);
         }
         let mut got = ProcessedColumns::with_schema(ds.schema());
-        for chunk in ds.rows.chunks(31) {
+        for chunk in &chunks {
             got.extend_from(&state.process(chunk));
         }
         assert_eq!(got, reference);
+    }
+
+    #[test]
+    fn range_slicing_matches_whole_block() {
+        let ds = SynthDataset::generate(SynthConfig::small(150));
+        let block = RowBlock::from_rows(&ds.rows, ds.schema());
+        let p = plan("modulus:97|genvocab|applyvocab");
+        let mut state = ChunkState::new(&p);
+        state.observe(&block);
+        let whole = state.process(&block);
+        for parts in [1usize, 2, 3, 7] {
+            let mut glued = ProcessedColumns::with_schema(ds.schema());
+            for r in crate::cpu_baseline::pipeline::partition_rows(block.num_rows(), parts) {
+                glued.extend_from(&state.process_range(&block, r));
+            }
+            assert_eq!(glued, whole, "{parts} shards");
+        }
     }
 }

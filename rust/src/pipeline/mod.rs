@@ -4,26 +4,37 @@
 //! and streamed* to keep accelerators fed. This module is that seam:
 //!
 //! ```text
-//! Source ──raw chunks──▶ [bounded channel] ──decode──▶ Executor ──blocks──▶ Sink
+//! Source ──raw Vec<u8>──▶ [bounded channel] ──decode──▶ RowBlock ──▶ Executor ──▶ Sink
+//!    ▲                                                                 (columns)
+//!    └────────────── recycled raw buffers (pool lane) ◀────────────────────┘
 //! ```
 //!
-//! * a [`Source`] yields the raw dataset in bounded chunks (in-memory
-//!   buffer, file, synthetic generator, TCP stream) and can rewind for
-//!   the second vocabulary pass;
+//! * a [`Source`] fills engine-recycled byte buffers with the raw
+//!   dataset in bounded chunks (in-memory buffer, file, synthetic
+//!   generator, TCP stream) and can rewind for the second vocabulary
+//!   pass;
 //! * a [`Plan`] is built **once** by [`PipelineBuilder::build`] from an
 //!   [`crate::ops::PipelineSpec`] plus backend capability checks — a
 //!   format mismatch or an over-capacity vocabulary is a *planning*
 //!   error, not a runtime failure inside a serving worker;
-//! * an [`Executor`] (CPU baseline, GPU model, the three PIPER modes)
-//!   consumes decoded-row chunks; all executors share the same
-//!   functional core, so outputs are bit-identical across backends;
+//! * the decoded-chunk currency is the column-major
+//!   [`RowBlock`](crate::data::RowBlock): [`ChunkDecoder`] decodes every
+//!   raw chunk into one reusable scratch block (no per-row allocation),
+//!   and an [`Executor`] (CPU baseline, GPU model, the three PIPER
+//!   modes) runs GenVocab/ApplyVocab as tight loops over its contiguous
+//!   column slices; all executors share the same functional core, so
+//!   outputs are bit-identical across backends;
 //! * a [`Sink`] receives processed column blocks as they are produced,
 //!   and a [`RunReport`] carries uniformly [`TimeTag`]-tagged results.
 //!
 //! Execution is chunked with a bounded producer/worker channel sized by
-//! `chunk_rows`, so peak resident raw-input memory is a few chunks —
-//! never the dataset — and a built [`Pipeline`] can be reused across
-//! many submissions (the serving posture the ROADMAP asks for).
+//! `chunk_rows` × [`PipelineBuilder::channel_depth`], so peak resident
+//! raw-input memory is a few chunks — never the dataset — and a built
+//! [`Pipeline`] can be reused across many submissions (the serving
+//! posture the ROADMAP asks for). Two allocation-recycling loops keep
+//! the steady state alloc-free: raw chunk buffers return to the
+//! producer through a pool lane instead of being freed per chunk, and
+//! each pass decodes into a single reusable [`RowBlock`] scratch.
 //!
 //! ```no_run
 //! use piper::accel::InputFormat;
@@ -59,7 +70,7 @@ use std::time::{Duration, Instant};
 
 use crate::accel::InputFormat;
 use crate::data::row::ProcessedColumns;
-use crate::data::{DecodedRow, Schema};
+use crate::data::{RowBlock, Schema};
 use crate::decode::RowAssembler;
 use crate::ops::{Modulus, OpFlags, PipelineSpec};
 use crate::report::{self, TimeTag};
@@ -89,36 +100,59 @@ impl ChunkDecoder {
         })
     }
 
-    /// Feed a chunk, returning all rows completed by it.
-    pub fn feed(&mut self, chunk: &[u8]) -> Result<Vec<DecodedRow>> {
+    /// Feed a chunk, appending all rows it completes to `out`.
+    ///
+    /// Binary input takes a fast path: when no partial row is carried
+    /// and the chunk is row-aligned, the chunk's bytes are bulk-decoded
+    /// straight into the block's column planes — no `extend_from_slice`
+    /// + `drain` staging buffer (an O(chunk) memmove per chunk in the
+    /// old row-wise decoder). Only the straddling tail bytes (< one row)
+    /// ever touch the `partial` buffer.
+    pub fn feed_into(&mut self, chunk: &[u8], out: &mut RowBlock) -> Result<()> {
         match &mut self.0 {
             DecoderInner::Utf8(asm) => {
-                asm.feed_bytes(chunk);
-                Ok(asm.take_rows())
+                asm.feed_bytes_into(chunk, out);
+                Ok(())
             }
             DecoderInner::Binary { schema, partial } => {
-                partial.extend_from_slice(chunk);
                 let rb = schema.binary_row_bytes();
-                let full = partial.len() / rb * rb;
-                let rows = crate::data::binary::decode_bytes(&partial[..full], *schema)?;
-                partial.drain(..full);
-                Ok(rows)
+                let mut chunk = chunk;
+                if !partial.is_empty() {
+                    // Complete the row straddling the previous chunk.
+                    let need = rb - partial.len();
+                    let take = need.min(chunk.len());
+                    partial.extend_from_slice(&chunk[..take]);
+                    chunk = &chunk[take..];
+                    if partial.len() == rb {
+                        out.append_binary(partial);
+                        partial.clear();
+                    }
+                }
+                // Fast path: bulk-decode the row-aligned prefix directly
+                // from the incoming chunk.
+                let full = chunk.len() / rb * rb;
+                out.append_binary(&chunk[..full]);
+                partial.extend_from_slice(&chunk[full..]);
+                Ok(())
             }
         }
     }
 
     /// Finish the pass; any trailing partial row is completed (UTF-8
     /// without final newline) or rejected (truncated binary row).
-    pub fn finish(self) -> Result<Vec<DecodedRow>> {
+    pub fn finish_into(self, out: &mut RowBlock) -> Result<()> {
         match self.0 {
-            DecoderInner::Utf8(asm) => Ok(asm.finish()),
+            DecoderInner::Utf8(asm) => {
+                asm.finish_into(out);
+                Ok(())
+            }
             DecoderInner::Binary { partial, .. } => {
                 anyhow::ensure!(
                     partial.is_empty(),
                     "binary stream ended mid-row ({} stray bytes)",
                     partial.len()
                 );
-                Ok(Vec::new())
+                Ok(())
             }
         }
     }
@@ -141,6 +175,9 @@ pub struct Plan {
     /// Rows per chunk the engine aims for (the producer/worker channel
     /// is sized in these units).
     pub chunk_rows: usize,
+    /// Raw chunks the producer may queue ahead of the decode/execute
+    /// worker (see [`PipelineBuilder::channel_depth`]).
+    pub channel_depth: usize,
 }
 
 impl Plan {
@@ -163,8 +200,13 @@ pub struct PipelineBuilder {
     schema: Schema,
     input: InputFormat,
     chunk_rows: usize,
+    channel_depth: usize,
     executor: Option<Box<dyn Executor>>,
 }
+
+/// Default raw-chunk queue depth between the producer thread and the
+/// decode/execute worker.
+const DEFAULT_CHANNEL_DEPTH: usize = 2;
 
 impl PipelineBuilder {
     pub fn new() -> Self {
@@ -173,6 +215,7 @@ impl PipelineBuilder {
             schema: Schema::CRITEO,
             input: InputFormat::Utf8,
             chunk_rows: 64 * 1024,
+            channel_depth: DEFAULT_CHANNEL_DEPTH,
             executor: None,
         }
     }
@@ -204,6 +247,19 @@ impl PipelineBuilder {
         self
     }
 
+    /// Raw chunks the producer may queue ahead of the worker (default 2).
+    ///
+    /// Peak resident raw input ≈ `(channel_depth + 2) × chunk_bytes`:
+    /// one chunk being filled by the producer, `channel_depth` queued in
+    /// the channel, and one being decoded by the worker. Depth 1
+    /// minimizes memory but stalls the producer on every decode; deeper
+    /// queues absorb source jitter (file/TCP reads) at linear memory
+    /// cost. Validated ≥ 1 at [`Self::build`].
+    pub fn channel_depth(mut self, depth: usize) -> Self {
+        self.channel_depth = depth;
+        self
+    }
+
     pub fn executor(mut self, executor: Box<dyn Executor>) -> Self {
         self.executor = Some(executor);
         self
@@ -217,6 +273,11 @@ impl PipelineBuilder {
             .executor
             .ok_or_else(|| anyhow::anyhow!("PipelineBuilder needs an executor"))?;
         self.spec.validate()?;
+        anyhow::ensure!(
+            self.channel_depth >= 1,
+            "planning: channel_depth must be >= 1 (got {})",
+            self.channel_depth
+        );
         let plan = Plan {
             flags: self.spec.flags(),
             modulus: self.spec.modulus(),
@@ -224,6 +285,7 @@ impl PipelineBuilder {
             schema: self.schema,
             input: self.input,
             chunk_rows: self.chunk_rows,
+            channel_depth: self.channel_depth,
         };
         anyhow::ensure!(
             executor.accepts(plan.input),
@@ -250,6 +312,7 @@ impl PipelineBuilder {
             schema,
             input,
             chunk_rows,
+            channel_depth: DEFAULT_CHANNEL_DEPTH,
         }
     }
 }
@@ -270,10 +333,6 @@ pub struct Pipeline {
     plan: Plan,
     executor: Box<dyn Executor>,
 }
-
-/// Raw chunks in flight between the producer thread and the decode/
-/// execute worker. Peak resident raw input ≈ (depth + 2) × chunk_bytes.
-const CHANNEL_DEPTH: usize = 2;
 
 impl Pipeline {
     pub fn plan(&self) -> &Plan {
@@ -297,17 +356,25 @@ impl Pipeline {
         let t0 = Instant::now();
         let mut run = self.executor.begin(&self.plan)?;
 
-        // Pass 1 (GenVocab) only when the plan has stateful vocab ops.
+        // Raw chunk buffers recycle through this pool across *both*
+        // passes: pass 2 (after the GenVocab rewind) reuses pass 1's
+        // buffers instead of re-allocating per chunk.
+        let mut pool: Vec<Vec<u8>> = Vec::new();
+
+        // Pass 1 (GenVocab) only when the plan has stateful vocab ops —
+        // it forces a source rewind, i.e. a second decode pass.
+        let decode_passes = if self.plan.flags.gen_vocab { 2 } else { 1 };
         if self.plan.flags.gen_vocab {
-            stream_chunks(&self.plan, &mut *source, |rows| run.observe(rows))?;
+            stream_chunks(&self.plan, &mut *source, &mut pool, |block| run.observe(block))?;
             source.reset()?;
         }
         run.seal()?;
 
-        let (raw_bytes, rows, chunks) = stream_chunks(&self.plan, &mut *source, |rows| {
-            let block = run.process(rows)?;
-            sink.push(&block)
-        })?;
+        let (raw_bytes, rows, chunks) =
+            stream_chunks(&self.plan, &mut *source, &mut pool, |block| {
+                let columns = run.process(block)?;
+                sink.push(&columns)
+            })?;
 
         let stats = StreamStats { raw_bytes, rows, chunks, wall: t0.elapsed() };
         let rep = run.finish(&stats)?;
@@ -315,6 +382,7 @@ impl Pipeline {
             executor: self.executor.name(),
             rows: rows as usize,
             chunks: chunks as usize,
+            decode_passes,
             e2e: rep.modeled_e2e.unwrap_or(stats.wall),
             wall: stats.wall,
             tag: rep.tag,
@@ -333,40 +401,70 @@ impl Pipeline {
 }
 
 /// One streaming pass: a producer thread pulls raw chunks from the
-/// source into a bounded channel while this thread decodes them and
-/// feeds the executor. Returns `(raw_bytes, rows, chunks)`.
-fn stream_chunks<F>(plan: &Plan, source: &mut dyn Source, mut consume: F) -> Result<(u64, u64, u64)>
+/// source into a bounded channel while this thread decodes them into a
+/// reused [`RowBlock`] scratch and feeds the executor. Consumed raw
+/// buffers return to the producer through an unbounded pool lane (seeded
+/// from, and drained back into, the caller's `pool` so recycling spans
+/// passes), so steady state allocates nothing per chunk — neither raw
+/// `Vec<u8>`s nor decoded rows. Returns `(raw_bytes, rows, chunks)`.
+fn stream_chunks<F>(
+    plan: &Plan,
+    source: &mut dyn Source,
+    pool: &mut Vec<Vec<u8>>,
+    mut consume: F,
+) -> Result<(u64, u64, u64)>
 where
-    F: FnMut(&[DecodedRow]) -> Result<()>,
+    F: FnMut(&RowBlock) -> Result<()>,
 {
     let chunk_bytes = plan.chunk_bytes();
     let mut decoder = ChunkDecoder::new(plan.input, plan.schema);
+    let mut block = RowBlock::with_capacity(plan.schema, plan.chunk_rows);
     let mut raw_bytes = 0u64;
     let mut rows = 0u64;
     let mut chunks = 0u64;
 
     let passed: Result<()> = std::thread::scope(|scope| {
-        let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(CHANNEL_DEPTH);
-        let producer = scope.spawn(move || -> Result<()> {
-            while let Some(chunk) = source.next_chunk(chunk_bytes)? {
-                if tx.send(chunk).is_err() {
-                    break; // consumer bailed; its error wins below
+        let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(plan.channel_depth);
+        let (pool_tx, pool_rx) = mpsc::channel::<Vec<u8>>();
+        for buf in pool.drain(..) {
+            let _ = pool_tx.send(buf); // seed with the previous pass's buffers
+        }
+        let producer_pool = pool_tx.clone();
+        let producer = scope.spawn(move || {
+            let result = (|| -> Result<()> {
+                loop {
+                    // Reuse a recycled buffer when one has come back;
+                    // only ever `channel_depth + 2`-ish buffers exist.
+                    let mut buf = pool_rx.try_recv().unwrap_or_default();
+                    if !source.next_chunk(chunk_bytes, &mut buf)? {
+                        let _ = producer_pool.send(buf);
+                        break;
+                    }
+                    if let Err(back) = tx.send(buf) {
+                        // Consumer bailed; its error wins below. Keep the
+                        // buffer pooled for the caller.
+                        let _ = producer_pool.send(back.0);
+                        break;
+                    }
                 }
-            }
-            Ok(())
+                Ok(())
+            })();
+            (result, pool_rx)
         });
 
         let mut consumer_err: Option<anyhow::Error> = None;
         for chunk in &rx {
             raw_bytes += chunk.len() as u64;
             chunks += 1;
-            let step = decoder.feed(&chunk).and_then(|decoded| {
-                if decoded.is_empty() {
+            block.clear();
+            let step = decoder.feed_into(&chunk, &mut block).and_then(|()| {
+                if block.is_empty() {
                     return Ok(());
                 }
-                rows += decoded.len() as u64;
-                consume(&decoded)
+                rows += block.num_rows() as u64;
+                consume(&block)
             });
+            let _ = pool_tx.send(chunk); // recycle the raw buffer
             if let Err(e) = step {
                 consumer_err = Some(e);
                 break;
@@ -374,7 +472,10 @@ where
         }
         drop(rx); // unblock the producer if we bailed early
 
-        let produced = producer.join().expect("pipeline source producer panicked");
+        let (produced, pool_rx) =
+            producer.join().expect("pipeline source producer panicked");
+        // Reclaim every pooled buffer for the caller's next pass.
+        pool.extend(pool_rx.try_iter());
         match (produced, consumer_err) {
             // A producer error explains any downstream decode error.
             (Err(e), _) => Err(e),
@@ -384,10 +485,11 @@ where
     });
     passed?;
 
-    let tail = decoder.finish()?;
-    if !tail.is_empty() {
-        rows += tail.len() as u64;
-        consume(&tail)?;
+    block.clear();
+    decoder.finish_into(&mut block)?;
+    if !block.is_empty() {
+        rows += block.num_rows() as u64;
+        consume(&block)?;
     }
     Ok((raw_bytes, rows, chunks))
 }
@@ -403,6 +505,11 @@ pub struct RunReport {
     pub executor: String,
     pub rows: usize,
     pub chunks: usize,
+    /// Decode passes over the source: 2 when a `gen_vocab` plan forced a
+    /// rewind (the paper's two-loop design), 1 otherwise. Surfaces the
+    /// cost the second pass adds so callers can reason about the decode
+    /// waste a vocabulary-free plan avoids.
+    pub decode_passes: usize,
     /// End-to-end time: modeled for sim executors, measured wallclock
     /// for the CPU baseline. Check `tag`.
     pub e2e: Duration,
@@ -439,14 +546,35 @@ mod tests {
         ] {
             for chunk in [1usize, 7, 64, 4096] {
                 let mut dec = ChunkDecoder::new(format, ds.schema());
-                let mut rows = Vec::new();
+                let mut out = RowBlock::new(ds.schema());
                 for c in raw.chunks(chunk) {
-                    rows.extend(dec.feed(c).unwrap());
+                    dec.feed_into(c, &mut out).unwrap();
                 }
-                rows.extend(dec.finish().unwrap());
-                assert_eq!(rows, ds.rows, "{format:?} chunk {chunk}");
+                dec.finish_into(&mut out).unwrap();
+                assert_eq!(out.to_rows(), ds.rows, "{format:?} chunk {chunk}");
             }
         }
+    }
+
+    #[test]
+    fn chunk_decoder_scratch_reuse_matches_one_shot() {
+        // The engine's calling convention: one scratch block, cleared
+        // between chunks. Rows accumulated across clears must equal a
+        // single-shot decode.
+        let ds = SynthDataset::generate(SynthConfig::small(45));
+        let raw = binary::encode_dataset(&ds);
+        let mut dec = ChunkDecoder::new(InputFormat::Binary, ds.schema());
+        let mut scratch = RowBlock::new(ds.schema());
+        let mut rows = Vec::new();
+        for c in raw.chunks(101) {
+            scratch.clear();
+            dec.feed_into(c, &mut scratch).unwrap();
+            rows.extend(scratch.to_rows());
+        }
+        scratch.clear();
+        dec.finish_into(&mut scratch).unwrap();
+        rows.extend(scratch.to_rows());
+        assert_eq!(rows, ds.rows);
     }
 
     #[test]
@@ -455,8 +583,18 @@ mod tests {
         let mut raw = binary::encode_dataset(&ds);
         raw.pop();
         let mut dec = ChunkDecoder::new(InputFormat::Binary, ds.schema());
-        dec.feed(&raw).unwrap();
-        assert!(dec.finish().is_err());
+        let mut out = RowBlock::new(ds.schema());
+        dec.feed_into(&raw, &mut out).unwrap();
+        assert!(dec.finish_into(&mut out).is_err());
+    }
+
+    #[test]
+    fn builder_rejects_zero_channel_depth() {
+        let err = PipelineBuilder::new()
+            .channel_depth(0)
+            .executor(crate::coordinator::Backend::Gpu.executor())
+            .build();
+        assert!(err.is_err(), "channel_depth 0 must fail at planning");
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //!
 //! A [`Source`] yields the raw dataset bytes (UTF-8 or binary, the
 //! paper's two on-disk formats) in bounded chunks, and can rewind for
-//! the second vocabulary pass. Four implementations cover the serving
-//! postures the ROADMAP asks for:
+//! the second vocabulary pass. Chunks are written into caller-provided
+//! buffers: the engine recycles consumed chunk buffers back to the
+//! producer, so a steady-state pass allocates nothing per chunk. Four
+//! implementations cover the serving postures the ROADMAP asks for:
 //!
 //! * [`MemorySource`] — a borrowed in-memory buffer (the old
 //!   `run_backend` calling convention);
@@ -30,10 +32,11 @@ pub trait Source: Send {
     /// Raw format of the bytes this source yields.
     fn format(&self) -> InputFormat;
 
-    /// Next chunk of at most `max_bytes` bytes; `None` ends the pass.
-    /// Chunks may cut rows anywhere — the engine's incremental decoder
-    /// handles boundaries.
-    fn next_chunk(&mut self, max_bytes: usize) -> Result<Option<Vec<u8>>>;
+    /// Fill `buf` (cleared first, allocation reused) with the next chunk
+    /// of at most `max_bytes` bytes; returns `false` when the pass is
+    /// over. Chunks may cut rows anywhere — the engine's incremental
+    /// decoder handles boundaries.
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> Result<bool>;
 
     /// Rewind to the start of the dataset for another pass. The replayed
     /// byte stream must be identical.
@@ -68,14 +71,15 @@ impl Source for MemorySource<'_> {
         self.format
     }
 
-    fn next_chunk(&mut self, max_bytes: usize) -> Result<Option<Vec<u8>>> {
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> Result<bool> {
+        buf.clear();
         if self.pos >= self.raw.len() {
-            return Ok(None);
+            return Ok(false);
         }
         let end = (self.pos + max_bytes.max(1)).min(self.raw.len());
-        let chunk = self.raw[self.pos..end].to_vec();
+        buf.extend_from_slice(&self.raw[self.pos..end]);
         self.pos = end;
-        Ok(Some(chunk))
+        Ok(true)
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -118,21 +122,12 @@ impl Source for FileSource {
         self.format
     }
 
-    fn next_chunk(&mut self, max_bytes: usize) -> Result<Option<Vec<u8>>> {
-        let mut buf = vec![0u8; max_bytes.max(1)];
-        let mut filled = 0;
-        while filled < buf.len() {
-            let n = self.file.read(&mut buf[filled..])?;
-            if n == 0 {
-                break;
-            }
-            filled += n;
-        }
-        if filled == 0 {
-            return Ok(None);
-        }
-        buf.truncate(filled);
-        Ok(Some(buf))
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> Result<bool> {
+        buf.clear();
+        // read_to_end on a Take fills the recycled buffer up to the
+        // budget with no zero-fill of the dirty capacity.
+        let filled = self.file.by_ref().take(max_bytes.max(1) as u64).read_to_end(buf)?;
+        Ok(filled > 0)
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -175,7 +170,8 @@ impl Source for SynthSource {
         self.format
     }
 
-    fn next_chunk(&mut self, max_bytes: usize) -> Result<Option<Vec<u8>>> {
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> Result<bool> {
+        buf.clear();
         let cap = max_bytes.max(1);
         while self.pending.len() < cap {
             let Some((row, mask)) = self.gen.next_row() else { break };
@@ -193,14 +189,13 @@ impl Source for SynthSource {
             }
         }
         if self.pending.is_empty() {
-            return Ok(None);
+            return Ok(false);
         }
-        if self.pending.len() <= cap {
-            return Ok(Some(std::mem::take(&mut self.pending)));
-        }
-        let rest = self.pending.split_off(cap);
-        let out = std::mem::replace(&mut self.pending, rest);
-        Ok(Some(out))
+        let take = self.pending.len().min(cap);
+        buf.extend_from_slice(&self.pending[..take]);
+        // The carry is at most one encoded row — a small memmove.
+        self.pending.drain(..take);
+        Ok(true)
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -248,9 +243,10 @@ impl Source for TcpSource {
         self.format
     }
 
-    fn next_chunk(&mut self, max_bytes: usize) -> Result<Option<Vec<u8>>> {
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> Result<bool> {
+        buf.clear();
         if self.done {
-            return Ok(None);
+            return Ok(false);
         }
         if self.conn.is_none() {
             let stream = TcpStream::connect(&self.addr)
@@ -259,24 +255,16 @@ impl Source for TcpSource {
             self.conn = Some(stream);
         }
         let conn = self.conn.as_mut().expect("connection established above");
-        let mut buf = vec![0u8; max_bytes.max(1)];
-        let mut filled = 0;
-        while filled < buf.len() {
-            let n = conn.read(&mut buf[filled..])?;
-            if n == 0 {
-                break; // peer closed: end of this pass
-            }
-            filled += n;
-        }
-        if filled < buf.len() {
+        let budget = max_bytes.max(1);
+        // As for FileSource: fill the recycled buffer without zeroing
+        // its dirty capacity. A short read means the peer closed — the
+        // end of this pass.
+        let filled = conn.take(budget as u64).read_to_end(buf)?;
+        if filled < budget {
             self.done = true;
             self.conn = None;
         }
-        if filled == 0 {
-            return Ok(None);
-        }
-        buf.truncate(filled);
-        Ok(Some(buf))
+        Ok(filled > 0)
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -305,9 +293,10 @@ mod tests {
 
     fn drain(src: &mut dyn Source, chunk: usize) -> Vec<u8> {
         let mut out = Vec::new();
-        while let Some(c) = src.next_chunk(chunk).unwrap() {
-            assert!(c.len() <= chunk.max(1), "chunk over budget");
-            out.extend_from_slice(&c);
+        let mut buf = Vec::new();
+        while src.next_chunk(chunk, &mut buf).unwrap() {
+            assert!(buf.len() <= chunk.max(1), "chunk over budget");
+            out.extend_from_slice(&buf);
         }
         out
     }
@@ -317,10 +306,26 @@ mod tests {
         let raw = b"0\t1\t2\n3\t4\t5\n".to_vec();
         let mut src = MemorySource::new(&raw, InputFormat::Utf8);
         assert_eq!(drain(&mut src, 5), raw);
-        assert!(src.next_chunk(5).unwrap().is_none());
+        let mut buf = Vec::new();
+        assert!(!src.next_chunk(5, &mut buf).unwrap());
         src.reset().unwrap();
         assert_eq!(drain(&mut src, 3), raw);
         assert_eq!(src.len_hint(), Some(raw.len() as u64));
+    }
+
+    #[test]
+    fn sources_reuse_the_caller_buffer() {
+        let raw: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let mut src = MemorySource::new(&raw, InputFormat::Binary);
+        let mut buf = Vec::new();
+        let mut out = Vec::new();
+        while src.next_chunk(1000, &mut buf).unwrap() {
+            out.extend_from_slice(&buf);
+        }
+        assert_eq!(out, raw);
+        // The buffer kept its allocation across calls — no regrow after
+        // the first chunk.
+        assert!(buf.capacity() >= 1000);
     }
 
     #[test]
@@ -368,7 +373,8 @@ mod tests {
 
         let mut src = TcpSource::connect(&addr, InputFormat::Binary);
         assert_eq!(drain(&mut src, 512), raw, "pass 1");
-        assert!(src.next_chunk(512).unwrap().is_none(), "EOF is sticky");
+        let mut buf = Vec::new();
+        assert!(!src.next_chunk(512, &mut buf).unwrap(), "EOF is sticky");
         src.reset().unwrap();
         assert_eq!(drain(&mut src, 2048), raw, "pass 2 reconnects");
         server.join().unwrap().unwrap();

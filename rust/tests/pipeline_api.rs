@@ -165,11 +165,11 @@ impl<S: Source> Source for MeteredSource<S> {
     fn format(&self) -> InputFormat {
         self.inner.format()
     }
-    fn next_chunk(&mut self, max_bytes: usize) -> piper::Result<Option<Vec<u8>>> {
-        let got = self.inner.next_chunk(max_bytes)?;
-        if let Some(c) = &got {
-            self.max_chunk = self.max_chunk.max(c.len());
-            self.total += c.len() as u64;
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> piper::Result<bool> {
+        let got = self.inner.next_chunk(max_bytes, buf)?;
+        if got {
+            self.max_chunk = self.max_chunk.max(buf.len());
+            self.total += buf.len() as u64;
         }
         Ok(got)
     }

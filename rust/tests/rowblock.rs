@@ -1,0 +1,189 @@
+//! Acceptance tests for the columnar data plane:
+//!
+//! * property-style `RowBlock ↔ DecodedRow` round trips over random
+//!   schemas and row counts;
+//! * `partition_rows` range-slicing of a block matches the unsliced
+//!   result at every boundary;
+//! * the engine's allocation-recycling loops: a two-pass (`gen_vocab`)
+//!   run over a `SynthSource` reuses pooled raw buffers instead of
+//!   allocating per chunk, and `RunReport::decode_passes` pins the
+//!   rewind count.
+
+use piper::accel::InputFormat;
+use piper::coordinator::Backend;
+use piper::cpu_baseline::{pipeline::partition_rows, ConfigKind};
+use piper::data::row::ProcessedColumns;
+use piper::data::{RowBlock, SynthConfig, SynthDataset};
+use piper::ops::PipelineSpec;
+use piper::pipeline::{CountSink, PipelineBuilder, Source, SynthSource};
+use piper::util::XorShift64;
+
+#[test]
+fn property_rowblock_roundtrip_random_schemas() {
+    let mut rng = XorShift64::new(0xB10C);
+    for case in 0..40 {
+        let schema = piper::data::Schema::new(
+            1 + rng.below(8) as usize,
+            1 + rng.below(12) as usize,
+        );
+        let mut cfg = SynthConfig::small(1 + rng.below(200) as usize);
+        cfg.schema = schema;
+        cfg.seed = rng.next_u64();
+        let ds = SynthDataset::generate(cfg);
+
+        let block = RowBlock::from_rows(&ds.rows, schema);
+        assert_eq!(block.num_rows(), ds.rows.len(), "case {case}");
+        assert_eq!(block.to_rows(), ds.rows, "case {case} schema {schema:?}");
+        for (r, row) in ds.rows.iter().enumerate() {
+            assert_eq!(&block.row(r), row, "case {case} row {r}");
+        }
+        // Column slices agree with the row view.
+        for c in 0..schema.num_sparse {
+            let col: Vec<u32> = ds.rows.iter().map(|r| r.sparse[c]).collect();
+            assert_eq!(block.sparse_col(c), &col[..], "case {case} sparse col {c}");
+        }
+        for c in 0..schema.num_dense {
+            let col: Vec<i32> = ds.rows.iter().map(|r| r.dense[c]).collect();
+            assert_eq!(block.dense_col(c), &col[..], "case {case} dense col {c}");
+        }
+    }
+}
+
+#[test]
+fn property_binary_append_roundtrip_random_cuts() {
+    let mut rng = XorShift64::new(0xA99E);
+    for case in 0..20 {
+        let mut cfg = SynthConfig::small(1 + rng.below(120) as usize);
+        cfg.seed = rng.next_u64();
+        let ds = SynthDataset::generate(cfg);
+        let raw = piper::data::binary::encode_dataset(&ds);
+        let rb = ds.schema().binary_row_bytes();
+
+        // Append in random row-aligned pieces; contents must round-trip.
+        let mut block = RowBlock::new(ds.schema());
+        let mut at = 0;
+        while at < raw.len() {
+            let rows_left = (raw.len() - at) / rb;
+            let take = (1 + rng.below(rows_left as u64)) as usize * rb;
+            block.append_binary(&raw[at..at + take]);
+            at += take;
+        }
+        assert_eq!(block.to_rows(), ds.rows, "case {case}");
+    }
+}
+
+/// Range-slicing a block at every `partition_rows` boundary and gluing
+/// the shard outputs must equal processing the unsliced block — the
+/// invariant the CPU executor's threading relies on.
+#[test]
+fn partition_boundaries_match_unsliced_process() {
+    let ds = SynthDataset::generate(SynthConfig::small(257)); // prime row count
+    let block = RowBlock::from_rows(&ds.rows, ds.schema());
+    let spec = PipelineSpec::dlrm(97);
+    let plan = piper::pipeline::Plan {
+        flags: spec.flags(),
+        modulus: spec.modulus(),
+        spec,
+        schema: ds.schema(),
+        input: InputFormat::Utf8,
+        chunk_rows: 4096,
+        channel_depth: 2,
+    };
+    let mut state = piper::pipeline::ChunkState::new(&plan);
+    state.observe(&block);
+    let whole = state.process(&block);
+
+    for threads in [1usize, 2, 3, 5, 8, 13, 256, 257, 300] {
+        let parts = partition_rows(block.num_rows(), threads);
+        // partition_rows covers the rows exactly, in order.
+        assert_eq!(parts.first().map(|r| r.start), Some(0));
+        assert_eq!(parts.iter().map(|r| r.len()).sum::<usize>(), block.num_rows());
+        let mut glued = ProcessedColumns::with_schema(ds.schema());
+        for range in parts {
+            glued.extend_from(&state.process_range(&block, range));
+        }
+        assert_eq!(glued, whole, "threads={threads}");
+    }
+}
+
+/// Source wrapper that counts how many times the engine handed it a
+/// fresh (zero-capacity) buffer vs a recycled one.
+struct PoolMeter {
+    inner: SynthSource,
+    fresh: usize,
+    calls: usize,
+}
+
+impl Source for PoolMeter {
+    fn format(&self) -> InputFormat {
+        self.inner.format()
+    }
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> piper::Result<bool> {
+        self.calls += 1;
+        if buf.capacity() == 0 {
+            self.fresh += 1;
+        }
+        self.inner.next_chunk(max_bytes, buf)
+    }
+    fn reset(&mut self) -> piper::Result<()> {
+        self.inner.reset()
+    }
+}
+
+/// Regression pin for the two-pass decode waste: the second (rewound)
+/// pass must reuse the pooled raw buffers of the first, so fresh
+/// allocations stay bounded by the channel depth — not by the chunk
+/// count — and resident memory does not grow with the dataset.
+#[test]
+fn second_pass_reuses_pooled_buffers() {
+    let rows = 4_000usize;
+    let depth = 2usize;
+    let pipeline = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(997))
+        .input(InputFormat::Utf8)
+        .chunk_rows(64) // many chunks per pass
+        .channel_depth(depth)
+        .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
+        .build()
+        .unwrap();
+
+    let mut src = PoolMeter {
+        inner: SynthSource::new(SynthConfig::small(rows), InputFormat::Utf8),
+        fresh: 0,
+        calls: 0,
+    };
+    let mut sink = CountSink::new();
+    let report = pipeline.run(&mut src, &mut sink).unwrap();
+
+    assert_eq!(report.decode_passes, 2, "gen_vocab plan must rewind once");
+    assert_eq!(sink.rows, rows);
+    assert!(src.calls > 40, "test needs many chunks, got {}", src.calls);
+    // At most depth + 2 buffers are in flight at once (producer + queue
+    // + consumer); everything else — including all of pass 2 after the
+    // rewind — must come from the pool. A small slack absorbs transient
+    // send/try_recv races; the point is O(depth), not O(chunks).
+    assert!(
+        src.fresh <= depth + 4,
+        "pass 2 leaked allocations: {} fresh buffers over {} chunks",
+        src.fresh,
+        src.calls
+    );
+}
+
+/// Non-vocab plans stream in a single pass.
+#[test]
+fn single_pass_plans_report_one_decode_pass() {
+    let pipeline = PipelineBuilder::new()
+        .spec_str("modulus:97|logarithm")
+        .unwrap()
+        .input(InputFormat::Utf8)
+        .chunk_rows(256)
+        .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
+        .build()
+        .unwrap();
+    let mut src = SynthSource::new(SynthConfig::small(500), InputFormat::Utf8);
+    let mut sink = CountSink::new();
+    let report = pipeline.run(&mut src, &mut sink).unwrap();
+    assert_eq!(report.decode_passes, 1);
+    assert_eq!(sink.rows, 500);
+}
