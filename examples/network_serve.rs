@@ -1,9 +1,12 @@
 //! Network-attached PIPER over real TCP (paper Fig. 7d on loopback).
 //!
 //! Spawns a worker on an ephemeral port, streams a synthetic dataset to
-//! it twice (the two vocabulary loops), and collects the preprocessed
-//! rows as they stream back — demonstrating that the worker holds only
-//! the vocabularies, never the dataset.
+//! it under the fused single-pass protocol (the dataset crosses the
+//! wire once; appearance indices are assigned on the fly), and collects
+//! the preprocessed rows as they stream back — demonstrating that the
+//! worker holds only the vocabularies, never the dataset. The sharded
+//! cluster below retains the two-pass protocol: its global vocabulary
+//! merge is a barrier between the passes.
 //!
 //!     cargo run --release --example network_serve
 
@@ -28,7 +31,7 @@ fn main() -> piper::Result<()> {
     };
 
     let mut t = Table::new(
-        "network-attached preprocessing (loopback)",
+        "network-attached preprocessing (loopback, fused single pass)",
         &["chunk size", "wallclock [meas]", "rows", "vocab entries"],
     );
     for chunk in [4 * 1024, 64 * 1024, 1024 * 1024] {
@@ -41,6 +44,7 @@ fn main() -> piper::Result<()> {
             run.stats.vocab_entries.to_string(),
         ]);
     }
+    t.note("fused: the dataset crosses the wire ONCE; results stream back mid-pass");
     t.note("worker memory = vocabularies + one chunk; dataset is never resident");
     t.note("paper-scale wire time is modeled at 100 Gbps by accel::network (sim)");
     t.print();
@@ -71,14 +75,14 @@ fn main() -> piper::Result<()> {
     t.print();
 
     // The same ingest as a pipeline Source: a remote dataset server
-    // streams raw bytes over TCP straight into the engine — the dataset
-    // crosses the wire once per vocabulary pass and is never resident on
-    // the preprocessing side.
+    // streams raw bytes over TCP straight into the engine. The fused
+    // plan reads the stream exactly once — one connection, no replay —
+    // and nothing is ever resident on the preprocessing side.
     println!();
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     let payload = raw.clone();
-    let server = std::thread::spawn(move || serve_bytes(&listener, &payload, 2));
+    let server = std::thread::spawn(move || serve_bytes(&listener, &payload, 1));
 
     let pipeline = PipelineBuilder::new()
         .spec(PipelineSpec::dlrm(Modulus::VOCAB_5K.range))
@@ -91,10 +95,12 @@ fn main() -> piper::Result<()> {
     server.join().expect("dataset server panicked")?;
     assert_eq!(cols.num_rows(), rows);
     println!(
-        "TcpSource → pipeline engine: {} rows in {} chunks, {} wallclock (two TCP passes)",
+        "TcpSource → pipeline engine: {} rows in {} chunks, {} wallclock ({}, {} TCP pass)",
         report.rows,
         report.chunks,
         fmt_duration(report.wall),
+        report.strategy.name(),
+        report.decode_passes,
     );
     Ok(())
 }

@@ -116,7 +116,7 @@ fn main() {
     ]);
 
     let t0 = Instant::now();
-    let mut out = Vec::new();
+    let mut out = vec![0u32; sparse.len()];
     vocab.apply_slice(&sparse, &mut out);
     t.row(&[
         "ApplyVocab".into(),

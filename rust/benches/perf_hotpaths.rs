@@ -89,7 +89,7 @@ fn main() {
     let mut dv = DirectVocab::new(m.range);
     dv.observe_slice(&sparse);
     row("applyvocab", time(reps, || {
-            let mut out = Vec::new();
+            let mut out = vec![0u32; sparse.len()];
             dv.apply_slice(&sparse, &mut out);
             std::hint::black_box(out.len());
         }), None, sparse.len());
@@ -101,9 +101,10 @@ fn main() {
         }), None, dense.len());
 
     let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+    // run_loopback is fused: the dataset crosses the wire once.
     row("tcp-loopback e2e", time(3, || {
             std::hint::black_box(leader::run_loopback(job, &raw_utf8, 1 << 20).unwrap().stats);
-        }), Some(raw_utf8.len() * 2), rows);
+        }), Some(raw_utf8.len()), rows);
 
     // The streaming engine end to end (planned once, CountSink output).
     let pipeline = piper::pipeline::PipelineBuilder::new()

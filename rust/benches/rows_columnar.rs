@@ -204,6 +204,7 @@ fn main() {
             input,
             chunk_rows: CHUNK_ROWS,
             channel_depth: 2,
+            strategy: piper::pipeline::ExecStrategy::TwoPass,
         };
 
         // Correctness gate: identical checksums before timing anything.

@@ -81,7 +81,7 @@ fn main() {
                 std::hint::black_box(&v2);
             },
             uniques.len().max(1), gv.len().max(1) * 26 / 26);
-        let mut applied = Vec::new();
+        let mut applied = vec![0u32; sparse.len()];
         let t_av2 = measure_scaled(
             || gv.apply_slice(&sparse, &mut applied), sparse.len(), sparse_vals);
         let mut d2 = dense.clone();

@@ -204,7 +204,11 @@ use crate::pipeline::{
 use crate::report::TimeTag;
 
 /// PIPER as a streaming [`Executor`], covering all three modes of
-/// Fig. 7. The functional two-loop column pipeline runs chunk by chunk;
+/// Fig. 7. The fused single-pass strategy *is* the hardware design:
+/// GenVocab-1's bitmap and ApplyVocab-1's counter live in the same
+/// dataflow, so a value's appearance index is assigned the cycle its
+/// novelty is decided — one scan, no rewind. The functional pipeline
+/// runs chunk by chunk (fused or two-loop, bit-identical either way);
 /// the cycle model ([`dataflow::model_timing`]) plus the mode's host or
 /// network model are evaluated once at the end over the stream totals —
 /// the same quantities [`run`] derives from a one-shot buffer, so the
@@ -258,6 +262,13 @@ impl Executor for PiperExecutor {
         true // decode-in-kernel handles UTF-8; LoadData handles binary
     }
 
+    /// The fused single pass is PIPER's native dataflow (GenVocab-1
+    /// bitmap + ApplyVocab-1 counter in one pipeline) — always
+    /// supported.
+    fn supports_fused(&self, _plan: &Plan) -> bool {
+        true
+    }
+
     fn plan_check(&self, plan: &Plan) -> crate::Result<()> {
         let cfg = self.config_for(plan);
         if plan.flags.gen_vocab {
@@ -270,6 +281,8 @@ impl Executor for PiperExecutor {
         Ok(Box::new(PiperExecRun {
             cfg: self.config_for(plan),
             state: ChunkState::new(plan),
+            observe_time: Duration::ZERO,
+            process_time: Duration::ZERO,
         }))
     }
 }
@@ -277,16 +290,34 @@ impl Executor for PiperExecutor {
 struct PiperExecRun {
     cfg: PiperConfig,
     state: ChunkState,
+    observe_time: Duration,
+    process_time: Duration,
 }
 
 impl ExecutorRun for PiperExecRun {
+    fn process_observing(
+        &mut self,
+        block: &RowBlock,
+        sink: &mut dyn crate::pipeline::Sink,
+    ) -> crate::Result<()> {
+        let t0 = std::time::Instant::now();
+        let out = self.state.process_fused(block);
+        self.process_time += t0.elapsed();
+        sink.push(&out)
+    }
+
     fn observe(&mut self, block: &RowBlock) -> crate::Result<()> {
+        let t0 = std::time::Instant::now();
         self.state.observe(block);
+        self.observe_time += t0.elapsed();
         Ok(())
     }
 
     fn process(&mut self, block: &RowBlock) -> crate::Result<ProcessedColumns> {
-        Ok(self.state.process(block))
+        let t0 = std::time::Instant::now();
+        let out = self.state.process(block);
+        self.process_time += t0.elapsed();
+        Ok(out)
     }
 
     fn finish(&mut self, stats: &StreamStats) -> crate::Result<ExecutorReport> {
@@ -313,6 +344,8 @@ impl ExecutorRun for PiperExecRun {
             tag: TimeTag::Sim,
             modeled_e2e: Some(e2e),
             compute: Some(kernel.seconds()),
+            observe_time: self.observe_time,
+            process_time: self.process_time,
             vocab_entries: self.state.vocab_entries(),
         })
     }

@@ -7,7 +7,10 @@
 //! thin adapter: [`Backend::executor`] maps a backend onto its
 //! [`Executor`], [`run_backend`] plans a one-shot [`Pipeline`] over an
 //! in-memory buffer, and [`compare`] assembles the paper's comparison
-//! rows. Long-lived callers should build a pipeline once via
+//! rows. Plans built here inherit the engine's default execution
+//! strategy — fused single-pass on every backend (all three support
+//! it); use [`PipelineBuilder::strategy`] directly to pin the two-pass
+//! baseline. Long-lived callers should build a pipeline once via
 //! [`pipeline_for`] (or [`PipelineBuilder`] directly) and reuse it
 //! across submissions.
 
@@ -19,7 +22,7 @@ use crate::data::row::ProcessedColumns;
 use crate::data::Schema;
 use crate::gpu_sim::GpuExecutor;
 use crate::ops::{Modulus, PipelineSpec};
-use crate::pipeline::{Executor, MemorySource, Pipeline, PipelineBuilder};
+use crate::pipeline::{ExecStrategy, Executor, MemorySource, Pipeline, PipelineBuilder};
 use crate::report::{self, TimeTag};
 use crate::Result;
 
@@ -70,6 +73,8 @@ pub struct RunSummary {
     pub tag: TimeTag,
     /// Pure-computation time (Table 3 scope) where defined.
     pub compute: Option<Duration>,
+    /// Execution strategy the plan ran under.
+    pub strategy: ExecStrategy,
 }
 
 impl RunSummary {
@@ -109,20 +114,45 @@ pub fn pipeline_for_chunked(
     exp: &Experiment,
     chunk_rows: usize,
 ) -> Result<Pipeline> {
-    PipelineBuilder::new()
+    pipeline_with(backend, exp, chunk_rows, None)
+}
+
+/// Build a pipeline with an optional strategy override (`None` = the
+/// engine default, which is fused wherever the executor supports it).
+fn pipeline_with(
+    backend: &Backend,
+    exp: &Experiment,
+    chunk_rows: usize,
+    strategy: Option<ExecStrategy>,
+) -> Result<Pipeline> {
+    let mut builder = PipelineBuilder::new()
         .spec(PipelineSpec::dlrm(exp.modulus.range))
         .schema(exp.schema)
         .input(exp.input)
         .chunk_rows(chunk_rows)
-        .executor(backend.executor())
-        .build()
+        .executor(backend.executor());
+    if let Some(s) = strategy {
+        builder = builder.strategy(s);
+    }
+    builder.build()
 }
 
 /// Execute one backend over a raw buffer — the one-shot adapter over the
 /// streaming engine, kept for the CLI, benches and tests. Plans a fresh
 /// pipeline per call; reuse [`pipeline_for`] when submitting repeatedly.
 pub fn run_backend(backend: &Backend, exp: &Experiment, raw: &[u8]) -> Result<RunSummary> {
-    let pipeline = pipeline_for(backend, exp)?;
+    run_backend_with(backend, exp, raw, None)
+}
+
+/// [`run_backend`] with an explicit strategy override (`None` = engine
+/// default).
+pub fn run_backend_with(
+    backend: &Backend,
+    exp: &Experiment,
+    raw: &[u8],
+    strategy: Option<ExecStrategy>,
+) -> Result<RunSummary> {
+    let pipeline = pipeline_with(backend, exp, 64 * 1024, strategy)?;
     let mut source = MemorySource::new(raw, exp.input);
     let (processed, run) = pipeline.run_collect(&mut source)?;
     Ok(RunSummary {
@@ -131,6 +161,7 @@ pub fn run_backend(backend: &Backend, exp: &Experiment, raw: &[u8]) -> Result<Ru
         e2e: run.e2e,
         tag: run.tag,
         compute: run.compute,
+        strategy: run.strategy,
         processed,
     })
 }
@@ -139,6 +170,7 @@ pub fn run_backend(backend: &Backend, exp: &Experiment, raw: &[u8]) -> Result<Ru
 #[derive(Debug)]
 pub struct CompareRow {
     pub backend: String,
+    pub strategy: ExecStrategy,
     pub e2e: Duration,
     pub tag: TimeTag,
     pub rows_per_sec: f64,
@@ -147,6 +179,12 @@ pub struct CompareRow {
 
 /// Run several backends over the same input and compute speedups against
 /// the *best CPU* entry (the paper's convention).
+///
+/// The CPU rows are pinned to the two-pass strategy: they model the
+/// paper's staged two-loop baseline, and Fig. 9's speedups are measured
+/// against exactly that. Sim backends keep the engine default — their
+/// modeled times are evaluated over stream totals and therefore
+/// strategy-independent. Each row reports the strategy it ran.
 pub fn compare(
     backends: &[Backend],
     exp: &Experiment,
@@ -154,7 +192,11 @@ pub fn compare(
 ) -> Result<Vec<CompareRow>> {
     let mut runs = Vec::new();
     for b in backends {
-        runs.push(run_backend(b, exp, raw)?);
+        let strategy = match b {
+            Backend::Cpu { .. } => Some(ExecStrategy::TwoPass),
+            _ => None,
+        };
+        runs.push(run_backend_with(b, exp, raw, strategy)?);
     }
     // Functional cross-check: deterministic backends must agree.
     let reference_output = runs
@@ -184,6 +226,7 @@ pub fn compare(
         .iter()
         .map(|r| CompareRow {
             backend: r.backend.clone(),
+            strategy: r.strategy,
             e2e: r.e2e,
             tag: r.tag,
             rows_per_sec: r.e2e_rows_per_sec(),

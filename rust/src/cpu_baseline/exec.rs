@@ -1,12 +1,23 @@
 //! The CPU baseline as a streaming [`Executor`] — Meta's row-partitioned
 //! multithreading applied per chunk.
 //!
-//! Pass 1 mirrors GV: each chunk is partitioned across `threads`, every
-//! thread builds private per-column sub-dictionaries, and the shards are
-//! merged in order at the chunk barrier (deterministically equivalent to
-//! a sequential scan — the same argument as §2.3's merge). Pass 2
-//! mirrors AV + CFR: threads map their row shards through the sealed
-//! vocabularies and the shard blocks are concatenated in order.
+//! Two-pass: pass 1 mirrors GV — each chunk is partitioned across
+//! `threads`, every thread builds private per-column sub-dictionaries,
+//! and the shards are merged in order at the chunk barrier
+//! (deterministically equivalent to a sequential scan — the same
+//! argument as §2.3's merge). Pass 2 mirrors AV + CFR: threads map
+//! their row shards through the sealed vocabularies and the shard
+//! blocks are concatenated in order.
+//!
+//! Fused: the stateless ops (labels, dense finishing) stay sharded
+//! across threads, but the vocabulary assignment becomes a *sequential
+//! in-order stage* per chunk — on-the-fly appearance indices admit no
+//! row partitioning, because a shard cannot know whether an earlier row
+//! already named a value. This faithfully models why CPUs scale poorly
+//! on the fused dataflow (the paper's argument for hardware): the fused
+//! strategy deletes a whole decode+observe pass but serializes the
+//! stateful stage, so CPU fused wins on decode-dominated input and the
+//! win shrinks as threads grow.
 //!
 //! Compute is **measured** (it really runs on this machine's cores).
 //! Config I's intermediate disk round-trips are still charged by the
@@ -17,6 +28,7 @@
 //! baseline (Fig. 8); the streaming executor always uses private
 //! sub-dictionaries, so its output is deterministic for all configs.
 
+use std::ops::Range;
 use std::time::{Duration, Instant};
 
 use crate::accel::InputFormat;
@@ -59,12 +71,20 @@ impl Executor for CpuExecutor {
         }
     }
 
+    /// Any plan can fuse on the CPU — the vocab stage just degrades to
+    /// sequential (see module docs).
+    fn supports_fused(&self, _plan: &Plan) -> bool {
+        true
+    }
+
     fn begin(&self, plan: &Plan) -> Result<Box<dyn ExecutorRun>> {
         Ok(Box::new(CpuRun {
             state: ChunkState::new(plan),
             kind: self.kind,
             threads: self.threads,
             disk: self.disk,
+            fused_gv: plan.strategy == crate::pipeline::ExecStrategy::Fused
+                && plan.flags.gen_vocab,
             observe_time: Duration::ZERO,
             process_time: Duration::ZERO,
         }))
@@ -76,11 +96,84 @@ struct CpuRun {
     kind: ConfigKind,
     threads: usize,
     disk: SimDisk,
+    /// True when the plan actually fuses a GenVocab stage — Config I's
+    /// disk charge drops the GV→AV intermediate round-trip only then (a
+    /// vocabulary-free plan executes identically under both strategies
+    /// and must model identically too).
+    fused_gv: bool,
     observe_time: Duration,
     process_time: Duration,
 }
 
+impl CpuRun {
+    /// The one shard-and-concatenate scaffold every emitting path uses:
+    /// partition the chunk's rows across `threads`, run `f` per range on
+    /// a scoped thread, glue the outputs back in row order (the CFR
+    /// step). Small chunks take one direct call.
+    fn sharded<F>(&self, block: &RowBlock, f: F) -> ProcessedColumns
+    where
+        F: Fn(&ChunkState, &RowBlock, Range<usize>) -> ProcessedColumns + Sync,
+    {
+        let rows = block.num_rows();
+        if self.threads <= 1 || rows < 2 * self.threads {
+            return f(&self.state, block, 0..rows);
+        }
+        let parts = partition_rows(rows, self.threads);
+        let mut shards: Vec<ProcessedColumns> = Vec::with_capacity(parts.len());
+        let state = &self.state;
+        let f = &f;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = parts
+                .iter()
+                .map(|range| {
+                    let range = range.clone();
+                    scope.spawn(move || f(state, block, range))
+                })
+                .collect();
+            for h in handles {
+                shards.push(h.join().expect("CPU shard worker panicked"));
+            }
+        });
+        let mut out = shards.remove(0);
+        for b in &shards {
+            out.extend_from(b);
+        }
+        out
+    }
+}
+
 impl ExecutorRun for CpuRun {
+    /// Fused single pass: the stateless stage (labels + dense finishing)
+    /// is sharded exactly like pass 2, then the sparse columns run
+    /// through the sequential in-order vocab-assign stage. The
+    /// sequential stage is charged to `observe_time` (it *is* the
+    /// GenVocab work, now inline), the sharded stage to `process_time`,
+    /// so fused-vs-two-pass reports show where the saved pass went.
+    ///
+    /// A plan with no GenVocab has no stateful stage at all — there is
+    /// nothing to fuse, so it keeps the fully sharded pass-2 path
+    /// (sparse included) instead of paying a pointless sequential scan.
+    fn process_observing(
+        &mut self,
+        block: &RowBlock,
+        sink: &mut dyn crate::pipeline::Sink,
+    ) -> Result<()> {
+        if !self.state.flags.gen_vocab {
+            let out = self.process(block)?;
+            return sink.push(&out);
+        }
+        let t0 = Instant::now();
+        let mut out = self.sharded(block, |s, b, r| s.process_stateless_range(b, r));
+        self.process_time += t0.elapsed();
+
+        // The stateful stage: one thread, row order — the CPU's fused
+        // bottleneck.
+        let t1 = Instant::now();
+        self.state.fuse_sparse(block, &mut out);
+        self.observe_time += t1.elapsed();
+        sink.push(&out)
+    }
+
     fn observe(&mut self, block: &RowBlock) -> Result<()> {
         let t0 = Instant::now();
         let rows = block.num_rows();
@@ -112,32 +205,7 @@ impl ExecutorRun for CpuRun {
 
     fn process(&mut self, block: &RowBlock) -> Result<ProcessedColumns> {
         let t0 = Instant::now();
-        let rows = block.num_rows();
-        let out = if self.threads <= 1 || rows < 2 * self.threads {
-            self.state.process(block)
-        } else {
-            let parts = partition_rows(rows, self.threads);
-            let mut shards: Vec<ProcessedColumns> = Vec::with_capacity(parts.len());
-            let state = &self.state;
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = parts
-                    .iter()
-                    .map(|range| {
-                        let range = range.clone();
-                        scope.spawn(move || state.process_range(block, range))
-                    })
-                    .collect();
-                for h in handles {
-                    shards.push(h.join().expect("AV worker panicked"));
-                }
-            });
-            // CFR within the chunk: shard outputs back in row order.
-            let mut out = shards.remove(0);
-            for b in &shards {
-                out.extend_from(b);
-            }
-            out
-        };
+        let out = self.sharded(block, |s, b, r| s.process_range(b, r));
         self.process_time += t0.elapsed();
         Ok(out)
     }
@@ -147,16 +215,20 @@ impl ExecutorRun for CpuRun {
         // the same byte volumes the staged baseline charges: SIF writes
         // the sub-files, GV reads them back and writes the partially
         // processed data, AV reads and rewrites it, CFR reads it again
-        // (paper §4.2.1).
+        // (paper §4.2.1). A fused run has one combined GV+AV stage, so
+        // the GV→AV intermediate round-trip disappears.
         let disk_sim = if self.kind == ConfigKind::I {
             let raw = stats.raw_bytes as usize;
             let part = stats.rows as usize * self.state.schema.binary_row_bytes();
-            self.disk.write_cost(raw, self.threads)
+            let mut d = self.disk.write_cost(raw, self.threads)
                 + self.disk.read_cost(raw, self.threads)
                 + self.disk.write_cost(part, self.threads)
-                + self.disk.read_cost(part, self.threads)
-                + self.disk.write_cost(part, self.threads)
-                + self.disk.read_cost(part, self.threads)
+                + self.disk.read_cost(part, self.threads);
+            if !self.fused_gv {
+                d += self.disk.write_cost(part, self.threads)
+                    + self.disk.read_cost(part, self.threads);
+            }
+            d
         } else {
             Duration::ZERO
         };
@@ -170,6 +242,8 @@ impl ExecutorRun for CpuRun {
             modeled_e2e,
             // GV+AV work actually executed here (Table 3 scope, measured).
             compute: Some(self.observe_time + self.process_time),
+            observe_time: self.observe_time,
+            process_time: self.process_time,
             vocab_entries: self.state.vocab_entries(),
         })
     }
@@ -212,6 +286,47 @@ mod tests {
             assert!(report.e2e > report.wall, "disk sim must be charged");
             assert!(report.compute.unwrap() <= report.wall + Duration::from_millis(50));
         }
+    }
+
+    /// The fused strategy must be bit-identical to two-pass, charge a
+    /// smaller Config I disk sim (one intermediate round-trip fewer) and
+    /// populate the per-stage timing split.
+    #[test]
+    fn fused_matches_two_pass_and_splits_timing() {
+        use crate::pipeline::ExecStrategy;
+        let ds = SynthDataset::generate(SynthConfig::small(600));
+        let raw = utf8::encode_dataset(&ds);
+        let build = |strategy: ExecStrategy| {
+            PipelineBuilder::new()
+                .spec(crate::ops::PipelineSpec::dlrm(997))
+                .schema(ds.schema())
+                .input(InputFormat::Utf8)
+                .chunk_rows(64)
+                .strategy(strategy)
+                .executor(Box::new(CpuExecutor::new(ConfigKind::I, 4)))
+                .build()
+                .unwrap()
+        };
+        let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+        let (fused_cols, fused) = build(ExecStrategy::Fused).run_collect(&mut src).unwrap();
+        let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+        let (two_cols, two) = build(ExecStrategy::TwoPass).run_collect(&mut src).unwrap();
+
+        assert_eq!(fused_cols, two_cols, "fused output must be bit-identical");
+        assert_eq!(fused.strategy, ExecStrategy::Fused);
+        assert_eq!(fused.decode_passes, 1);
+        assert_eq!(two.decode_passes, 2);
+        // Both strategies separate the vocab stage from the stateless one.
+        assert!(fused.observe_time > Duration::ZERO, "fused vocab stage must be timed");
+        assert!(fused.process_time > Duration::ZERO);
+        assert!(two.observe_time > Duration::ZERO);
+        // Fused Config I charges one intermediate disk round-trip fewer.
+        let fused_sim = fused.e2e.saturating_sub(fused.wall);
+        let two_sim = two.e2e.saturating_sub(two.wall);
+        assert!(
+            fused_sim < two_sim,
+            "fused disk charge {fused_sim:?} must undercut two-pass {two_sim:?}"
+        );
     }
 
     #[test]

@@ -249,7 +249,9 @@ pub fn run(cfg: &BaselineConfig, raw: &[u8]) -> BaselineRun {
                         }
                     }
                     for (c, col) in block.sparse.iter().enumerate() {
-                        vocab.vocabs[c].apply_slice(col, &mut out.sparse[c]);
+                        let dst = &mut out.sparse[c];
+                        dst.resize(col.len(), 0);
+                        vocab.vocabs[c].apply_slice(col, dst);
                     }
                     out
                 })

@@ -188,7 +188,9 @@ pub fn run(
         let mut v = HashVocab::new();
         v.observe_slice(col);
         unique_total += v.len();
-        v.apply_slice(col, &mut processed.sparse[c]);
+        let dst = &mut processed.sparse[c];
+        dst.resize(col.len(), 0);
+        v.apply_slice(col, dst);
     }
     for (c, col) in dense_cols.iter().enumerate() {
         let dst = &mut processed.dense[c];
@@ -244,11 +246,22 @@ impl Executor for GpuExecutor {
         true
     }
 
+    /// cudf's hash-based categorify can build and gather in one pass —
+    /// the functional pipeline fuses without restriction. (The *timing*
+    /// model is evaluated over stream totals either way, so the modeled
+    /// V100 time is strategy-independent; what fusing changes is the
+    /// host-side functional wallclock.)
+    fn supports_fused(&self, _plan: &Plan) -> bool {
+        true
+    }
+
     fn begin(&self, plan: &Plan) -> Result<Box<dyn ExecutorRun>> {
         Ok(Box::new(GpuExecRun {
             model: self.model,
             input: plan.input,
             state: ChunkState::new(plan),
+            observe_time: Duration::ZERO,
+            process_time: Duration::ZERO,
         }))
     }
 }
@@ -257,16 +270,34 @@ struct GpuExecRun {
     model: GpuModel,
     input: crate::accel::InputFormat,
     state: ChunkState,
+    observe_time: Duration,
+    process_time: Duration,
 }
 
 impl ExecutorRun for GpuExecRun {
+    fn process_observing(
+        &mut self,
+        block: &crate::data::RowBlock,
+        sink: &mut dyn crate::pipeline::Sink,
+    ) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let out = self.state.process_fused(block);
+        self.process_time += t0.elapsed();
+        sink.push(&out)
+    }
+
     fn observe(&mut self, block: &crate::data::RowBlock) -> Result<()> {
+        let t0 = std::time::Instant::now();
         self.state.observe(block);
+        self.observe_time += t0.elapsed();
         Ok(())
     }
 
     fn process(&mut self, block: &crate::data::RowBlock) -> Result<ProcessedColumns> {
-        Ok(self.state.process(block))
+        let t0 = std::time::Instant::now();
+        let out = self.state.process(block);
+        self.process_time += t0.elapsed();
+        Ok(out)
     }
 
     fn finish(&mut self, stats: &StreamStats) -> Result<ExecutorReport> {
@@ -285,6 +316,8 @@ impl ExecutorRun for GpuExecRun {
             tag: TimeTag::Sim,
             modeled_e2e: Some(breakdown.total()),
             compute: Some(breakdown.total() - breakdown.convert),
+            observe_time: self.observe_time,
+            process_time: self.process_time,
             vocab_entries: unique_total,
         })
     }

@@ -33,14 +33,18 @@ COMMANDS:
   gen-data    rows=100000 format=utf8|binary out=PATH seed=N
   preprocess  input=PATH format=utf8|binary backend=cpu|gpu|piper-local|piper-host-decode|piper-net
               vocab=5000 threads=8 cpu_config=1|2|3 chunk_rows=65536 spec='modulus:5000|genvocab|...'
+              strategy=fused|two-pass (default: fused when the backend supports it)
   compare     rows=20000 vocab=5000 format=utf8|binary
   serve       addr=127.0.0.1:7700 jobs=1
-  submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000
+  submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000 strategy=fused|two-pass
   train       input=PATH format=utf8 vocab=5000 steps=100 artifacts=artifacts
   help        print this message
 
 preprocess and submit stream the input file in bounded chunks — the
-dataset is never resident in memory.
+dataset is never resident in memory. Under the fused strategy (the
+default) vocabulary generation and application run in ONE decode pass;
+strategy=two-pass reproduces the classic two-loop baseline with its
+rewind.
 ";
 
 fn main() {
@@ -163,8 +167,8 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
     let format = format_of(cfg)?;
     let modulus = modulus_of(cfg)?;
 
-    // Plan once (spec + capability checks), then stream the file through
-    // the engine in bounded chunks.
+    // Plan once (spec + capability checks + strategy selection), then
+    // stream the file through the engine in bounded chunks.
     let mut builder = piper::pipeline::PipelineBuilder::new()
         .input(format)
         .chunk_rows(cfg.get_usize("chunk_rows", 64 * 1024)?)
@@ -173,6 +177,9 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
         Some(spec) => builder.spec_str(spec)?,
         None => builder.spec(piper::ops::PipelineSpec::dlrm(modulus.range)),
     };
+    if let Some(s) = cfg.get("strategy") {
+        builder = builder.strategy(piper::pipeline::ExecStrategy::parse(s)?);
+    }
     let pipeline = builder.build()?;
     let mut source = FileSource::open(Path::new(path), format)?;
     let mut sink = piper::pipeline::CountSink::new();
@@ -180,10 +187,12 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
 
     let mut t = Table::new(
         "preprocess",
-        &["backend", "rows", "chunks", "vocab entries", "e2e", "rows/s"],
+        &["backend", "strategy", "passes", "rows", "chunks", "vocab entries", "e2e", "rows/s"],
     );
     t.row(&[
         report.executor.clone(),
+        report.strategy.name().to_string(),
+        report.decode_passes.to_string(),
         report.rows.to_string(),
         report.chunks.to_string(),
         report.vocab_entries.to_string(),
@@ -191,6 +200,11 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
         fmt_rows_per_sec(report.e2e_rows_per_sec()),
     ]);
     t.note("streamed with bounded memory; one pipeline serves many submissions");
+    t.note(&format!(
+        "executor time split: observe {} / process {} [meas]",
+        piper::report::fmt_duration(report.observe_time),
+        piper::report::fmt_duration(report.process_time),
+    ));
     t.print();
     Ok(())
 }
@@ -219,17 +233,19 @@ fn cmd_compare(cfg: &Config) -> Result<()> {
     let rows_out = coordinator::compare(&backends, &exp, &raw)?;
     let mut t = Table::new(
         &format!("compare ({:?}, vocab {})", input, m.range),
-        &["backend", "e2e", "rows/s", "speedup vs best CPU"],
+        &["backend", "strategy", "e2e", "rows/s", "speedup vs best CPU"],
     );
     for r in &rows_out {
         t.row(&[
             r.backend.clone(),
+            r.strategy.name().to_string(),
             fmt_tagged(r.e2e, r.tag),
             fmt_rows_per_sec(r.rows_per_sec),
             fmt_speedup(r.speedup_vs_ref),
         ]);
     }
     t.note("sim-tagged rows model paper hardware; meas rows ran on this machine");
+    t.note("CPU rows are pinned two-pass (the paper's staged baseline)");
     t.print();
     Ok(())
 }
@@ -258,15 +274,20 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
     };
     let job = Job { schema: Schema::CRITEO, modulus: modulus_of(cfg)?, format };
     let chunk = cfg.get_usize("chunk", 1 << 20)?;
+    let strategy = match cfg.get("strategy") {
+        Some(s) => piper::pipeline::ExecStrategy::parse(s)?,
+        None => piper::pipeline::ExecStrategy::Fused, // single-node default
+    };
     // Stream the file to the worker chunk by chunk — the leader never
-    // holds the dataset either.
+    // holds the dataset either. Fused sends it once; two-pass twice.
     let mut source = FileSource::open(Path::new(path), input)?;
-    let run = net::run_leader_source(addr, job, &mut source, chunk)?;
+    let run = net::run_leader_source(addr, job, &mut source, chunk, strategy)?;
     println!(
-        "preprocessed {} rows ({} vocab entries) in {} over TCP",
+        "preprocessed {} rows ({} vocab entries) in {} over TCP ({})",
         run.stats.rows,
         run.stats.vocab_entries,
-        fmt_duration(run.wallclock)
+        fmt_duration(run.wallclock),
+        strategy.name(),
     );
     Ok(())
 }

@@ -65,6 +65,12 @@ pub fn shard_rows(raw: &[u8], schema: Schema, binary: bool, n: usize) -> Vec<std
 }
 
 /// Run a sharded two-pass job against `addrs` workers.
+///
+/// The cluster path is inherently two-pass: the global vocabulary merge
+/// is a barrier *between* the passes, so no worker may emit a row until
+/// every worker has observed its whole shard — the fused single-pass
+/// strategy cannot apply here, which is why the engine retains the
+/// two-pass protocol at all.
 pub fn run_cluster(
     addrs: &[String],
     job: Job,

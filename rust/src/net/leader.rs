@@ -1,11 +1,14 @@
-//! The leader: streams the dataset to a PIPER worker twice (the two
-//! loops) and collects the preprocessed rows as they come back.
+//! The leader: streams the dataset to a PIPER worker and collects the
+//! preprocessed rows as they come back. Under the fused strategy (the
+//! single-node default) the dataset crosses the wire **once** and the
+//! source never rewinds; under two-pass it is streamed twice (the two
+//! vocabulary loops), which the cluster leader-merge path requires.
 
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use crate::data::row::ProcessedColumns;
-use crate::pipeline::{MemorySource, Source};
+use crate::pipeline::{ExecStrategy, MemorySource, Source};
 use crate::Result;
 
 use super::protocol::{self, Job, RunStats, Tag};
@@ -21,7 +24,7 @@ pub struct LeaderRun {
     pub wallclock: Duration,
 }
 
-/// Stream `raw` (twice) to the worker at `addr` and collect results.
+/// Stream `raw` to the worker at `addr` and collect results.
 ///
 /// Convenience wrapper over [`run_leader_source`] for in-memory buffers.
 pub fn run_leader(
@@ -29,16 +32,22 @@ pub fn run_leader(
     job: Job,
     raw: &[u8],
     chunk_size: usize,
+    strategy: ExecStrategy,
 ) -> Result<LeaderRun> {
     let mut source = MemorySource::new(raw, job.format.into());
-    run_leader_source(addr, job, &mut source, chunk_size)
+    run_leader_source(addr, job, &mut source, chunk_size, strategy)
 }
 
-/// Stream a [`Source`] (twice, via [`Source::reset`]) to the worker at
-/// `addr` and collect results. The leader holds one chunk at a time —
-/// submitting a file-backed dataset never loads it into memory.
+/// Stream a [`Source`] to the worker at `addr` and collect results. The
+/// leader holds one chunk at a time — submitting a file-backed dataset
+/// never loads it into memory.
 ///
-/// Pass 2 reads interleaved with writes: a reader thread drains
+/// Fused: one pass of `FusedChunk` frames; the source never rewinds (so
+/// one-shot sources work) and results stream back while the dataset is
+/// still going out. Two-pass: `Pass1Chunk`* then [`Source::reset`] then
+/// `Pass2Chunk`* — requires [`Source::can_rewind`].
+///
+/// Emitting reads interleave with writes: a reader thread drains
 /// ResultChunks while the main thread keeps sending, so the socket can't
 /// deadlock on full buffers and the measured time reflects true
 /// streaming overlap.
@@ -47,6 +56,7 @@ pub fn run_leader_source(
     job: Job,
     source: &mut dyn Source,
     chunk_size: usize,
+    strategy: ExecStrategy,
 ) -> Result<LeaderRun> {
     anyhow::ensure!(
         source.format() == job.format.into(),
@@ -54,6 +64,12 @@ pub fn run_leader_source(
         source.format(),
         job.format
     );
+    if strategy == ExecStrategy::TwoPass {
+        anyhow::ensure!(
+            source.can_rewind(),
+            "two-pass submission needs a rewindable source; use the fused strategy"
+        );
+    }
     let start = Instant::now();
     let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
@@ -63,13 +79,17 @@ pub fn run_leader_source(
     // One reused chunk buffer per submission — the leader's resident
     // raw-input memory, regardless of dataset size.
     let mut chunk = Vec::new();
-    while source.next_chunk(chunk_size.max(1), &mut chunk)? {
-        protocol::write_frame(&mut writer, Tag::Pass1Chunk, &chunk)?;
-    }
-    protocol::write_frame(&mut writer, Tag::Pass1End, &[])?;
-    source.reset()?;
 
-    // Reader thread: collect results while pass 2 streams out.
+    if strategy == ExecStrategy::TwoPass {
+        // Pass 1 produces no results, so no reader is needed yet.
+        while source.next_chunk(chunk_size.max(1), &mut chunk)? {
+            protocol::write_frame(&mut writer, Tag::Pass1Chunk, &chunk)?;
+        }
+        protocol::write_frame(&mut writer, Tag::Pass1End, &[])?;
+        source.reset()?;
+    }
+
+    // Reader thread: collect results while the emitting pass streams out.
     let schema = job.schema;
     let reader_stream = stream.try_clone()?;
     let collector = std::thread::spawn(move || -> Result<(ProcessedColumns, RunStats)> {
@@ -92,10 +112,14 @@ pub fn run_leader_source(
         }
     });
 
+    let (chunk_tag, end_tag) = match strategy {
+        ExecStrategy::Fused => (Tag::FusedChunk, Tag::FusedEnd),
+        ExecStrategy::TwoPass => (Tag::Pass2Chunk, Tag::Pass2End),
+    };
     while source.next_chunk(chunk_size.max(1), &mut chunk)? {
-        protocol::write_frame(&mut writer, Tag::Pass2Chunk, &chunk)?;
+        protocol::write_frame(&mut writer, chunk_tag, &chunk)?;
     }
-    protocol::write_frame(&mut writer, Tag::Pass2End, &[])?;
+    protocol::write_frame(&mut writer, end_tag, &[])?;
     use std::io::Write as _;
     writer.flush()?;
 
@@ -106,13 +130,13 @@ pub fn run_leader_source(
 }
 
 /// Spawn a worker on an ephemeral loopback port, run the leader against
-/// it, and return the result — the one-call path used by examples and
-/// tests.
+/// it (fused — the single-node default), and return the result — the
+/// one-call path used by examples and tests.
 pub fn run_loopback(job: Job, raw: &[u8], chunk_size: usize) -> Result<LeaderRun> {
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let worker = std::thread::spawn(move || super::worker::serve_one(&listener));
-    let run = run_leader(&addr.to_string(), job, raw, chunk_size)?;
+    let run = run_leader(&addr.to_string(), job, raw, chunk_size, ExecStrategy::Fused)?;
     worker
         .join()
         .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
@@ -154,6 +178,30 @@ mod tests {
         let run = run_loopback(job, &raw, 333).unwrap();
         assert_eq!(run.processed.num_rows(), 120);
         assert!(run.stats.vocab_entries > 0);
+    }
+
+    /// Both wire strategies against a real worker must produce
+    /// bit-identical rows and stats; the fused run sends the dataset
+    /// over the wire once, the two-pass run twice.
+    #[test]
+    fn fused_wire_run_matches_two_pass_wire_run() {
+        let ds = SynthDataset::generate(SynthConfig::small(180));
+        let m = Modulus::new(997);
+        let raw = utf8::encode_dataset(&ds);
+        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+
+        let run_with = |strategy: ExecStrategy| {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let worker = std::thread::spawn(move || super::super::worker::serve_one(&listener));
+            let run = run_leader(&addr.to_string(), job, &raw, 1024, strategy).unwrap();
+            worker.join().unwrap().unwrap();
+            run
+        };
+        let fused = run_with(ExecStrategy::Fused);
+        let two = run_with(ExecStrategy::TwoPass);
+        assert_eq!(fused.processed, two.processed);
+        assert_eq!(fused.stats, two.stats);
     }
 
     #[test]

@@ -5,16 +5,20 @@
 //! nothing is ever staged in a host buffer. We reproduce the *structure*
 //! with a real TCP implementation on loopback:
 //!
-//! * [`stream`] — the streaming two-pass preprocessor: pass 1 builds the
-//!   vocabularies chunk by chunk, pass 2 re-streams the dataset and emits
-//!   preprocessed rows immediately. Only the vocabularies are resident —
-//!   the worker never holds the dataset ("the FPGA can process
-//!   larger-than-memory datasets in a streaming fashion", §3.4.2).
+//! * [`stream`] — the streaming preprocessor, speaking both execution
+//!   strategies: fused (single-node default — observe and emit per
+//!   chunk, the dataset arrives **once**) and two-pass (pass 1 builds
+//!   the vocabularies, pass 2 re-streams and emits — retained because
+//!   the cluster's global vocabulary merge is a barrier between the
+//!   passes). Only the vocabularies are resident — the worker never
+//!   holds the dataset ("the FPGA can process larger-than-memory
+//!   datasets in a streaming fashion", §3.4.2).
 //! * [`protocol`] — length-prefixed frames for jobs, data passes and
-//!   results.
-//! * [`worker`] — the accelerator node: accepts a job, runs the two
-//!   passes, streams results back.
-//! * [`leader`] — the client: sends the dataset twice, collects results.
+//!   results; the first data frame picks the strategy.
+//! * [`worker`] — the accelerator node: accepts a job, runs either
+//!   protocol, streams results back.
+//! * [`leader`] — the client: sends the dataset (once or twice per the
+//!   strategy), collects results.
 //!
 //! Functional times on loopback are measured; the 100 Gbps figure comes
 //! from [`crate::accel::network`]'s line-rate model (tagged `sim`).

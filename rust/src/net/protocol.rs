@@ -4,10 +4,15 @@
 //! frame := tag:u8 len:u64le payload[len]
 //! ```
 //!
-//! Leader → worker: `Job`, `Pass1Chunk`*, `Pass1End`, `Pass2Chunk`*,
-//! `Pass2End`. Worker → leader: `ResultChunk`* (packed processed rows),
-//! `ResultEnd` (stats). Results for a pass-2 chunk are streamed back as
-//! soon as they are produced — the overlap that makes network mode win.
+//! Leader → worker, two-pass protocol: `Job`, `Pass1Chunk`*, `Pass1End`,
+//! `Pass2Chunk`*, `Pass2End`. Fused single-pass protocol: `Job`,
+//! `FusedChunk`*, `FusedEnd` — the dataset crosses the wire **once**,
+//! appearance indices are assigned on the fly and results stream back
+//! while the input is still arriving. Worker → leader: `ResultChunk`*
+//! (packed processed rows), `ResultEnd` (stats). The strategy is not in
+//! the job header — the first data frame picks the protocol, so old
+//! leaders keep working and the cluster leader-merge path simply keeps
+//! sending pass frames.
 
 use crate::data::row::ProcessedRow;
 use crate::data::Schema;
@@ -35,6 +40,11 @@ pub enum Tag {
     VocabDump = 9,
     /// Leader → worker: the merged global vocabularies to apply in pass 2.
     VocabLoad = 10,
+    /// Leader → worker (fused single-pass protocol): a raw chunk to
+    /// observe *and* process in one scan.
+    FusedChunk = 11,
+    /// Leader → worker: end of the fused stream.
+    FusedEnd = 12,
 }
 
 impl Tag {
@@ -50,6 +60,8 @@ impl Tag {
             8 => Tag::VocabSync,
             9 => Tag::VocabDump,
             10 => Tag::VocabLoad,
+            11 => Tag::FusedChunk,
+            12 => Tag::FusedEnd,
             other => anyhow::bail!("unknown frame tag {other}"),
         })
     }

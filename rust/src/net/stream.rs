@@ -1,11 +1,15 @@
-//! Streaming two-pass preprocessor — the worker-side core, independent of
-//! the transport so it can be tested without sockets.
+//! Streaming preprocessor — the worker-side core, independent of the
+//! transport so it can be tested without sockets. Speaks both execution
+//! strategies: the classic two-pass protocol (pass 1 GenVocab, pass 2
+//! ApplyVocab — required by the cluster leader-merge, whose vocabulary
+//! barrier sits between the passes) and the fused single-pass protocol
+//! (observe + emit per chunk, the dataset arrives once).
 
 use crate::accel::InputFormat;
 use crate::data::row::{ProcessedColumns, ProcessedRow};
 use crate::data::{RowBlock, Schema};
-use crate::ops::{log1p, HashVocab, Modulus, Vocab};
-use crate::pipeline::ChunkDecoder;
+use crate::ops::{log1p, HashVocab, Modulus, Vocab, VOCAB_MISS};
+use crate::pipeline::{ChunkDecoder, ExecStrategy};
 use crate::Result;
 
 /// Raw wire format of the incoming stream.
@@ -24,20 +28,26 @@ impl From<WireFormat> for InputFormat {
     }
 }
 
-/// Phase of the two-pass protocol.
+/// Phase of the streaming protocol. The first data chunk commits the
+/// strategy: `Pass1` (two-pass) or `Fused` (single pass).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
+    /// Nothing received yet — either protocol may start.
+    Start,
     Pass1,
     BetweenPasses,
     Pass2,
+    Fused,
     Done,
 }
 
-/// The streaming preprocessor: GenVocab during pass 1, ApplyVocab +
-/// dense finishing during pass 2. Shares the engine's [`ChunkDecoder`]
-/// and decodes every chunk into one reusable column-major [`RowBlock`]
-/// scratch — memory high-water is the vocabularies plus one chunk,
-/// never the dataset, and no per-row allocation happens on either pass.
+/// The streaming preprocessor. Two-pass: GenVocab during pass 1,
+/// ApplyVocab + dense finishing during pass 2. Fused: both in one scan
+/// per chunk ([`Self::fused_chunk`]), emitting rows immediately. Shares
+/// the engine's [`ChunkDecoder`] and decodes every chunk into one
+/// reusable column-major [`RowBlock`] scratch — memory high-water is
+/// the vocabularies plus one chunk, never the dataset, and no per-row
+/// allocation happens on any pass.
 #[derive(Debug)]
 pub struct StreamingPreprocessor {
     schema: Schema,
@@ -60,7 +70,7 @@ impl StreamingPreprocessor {
             vocabs: (0..schema.num_sparse).map(|_| HashVocab::new()).collect(),
             decoder: ChunkDecoder::new(format.into(), schema),
             scratch: RowBlock::new(schema),
-            phase: Phase::Pass1,
+            phase: Phase::Start,
             rows_pass1: 0,
             rows_pass2: 0,
         }
@@ -68,7 +78,12 @@ impl StreamingPreprocessor {
 
     /// Pass-1 chunk: observe sparse values into the vocabularies.
     pub fn pass1_chunk(&mut self, chunk: &[u8]) -> Result<()> {
-        anyhow::ensure!(self.phase == Phase::Pass1, "pass1_chunk in phase {:?}", self.phase);
+        anyhow::ensure!(
+            matches!(self.phase, Phase::Start | Phase::Pass1),
+            "pass1_chunk in phase {:?}",
+            self.phase
+        );
+        self.phase = Phase::Pass1;
         self.scratch.clear();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
         self.observe_scratch();
@@ -77,7 +92,11 @@ impl StreamingPreprocessor {
 
     /// End of pass 1: flush the decoder, reset it for pass 2.
     pub fn pass1_end(&mut self) -> Result<()> {
-        anyhow::ensure!(self.phase == Phase::Pass1, "pass1_end in phase {:?}", self.phase);
+        anyhow::ensure!(
+            matches!(self.phase, Phase::Start | Phase::Pass1),
+            "pass1_end in phase {:?}",
+            self.phase
+        );
         let decoder = std::mem::replace(
             &mut self.decoder,
             ChunkDecoder::new(self.format.into(), self.schema),
@@ -131,6 +150,69 @@ impl StreamingPreprocessor {
         Ok(out)
     }
 
+    /// Fused chunk: observe sparse values *and* emit processed rows in
+    /// one scan — the single-pass protocol. Bit-identical to the
+    /// two-pass result because appearance indices are fixed at first
+    /// appearance.
+    pub fn fused_chunk(&mut self, chunk: &[u8]) -> Result<Vec<ProcessedRow>> {
+        anyhow::ensure!(
+            matches!(self.phase, Phase::Start | Phase::Fused),
+            "fused_chunk in phase {:?}",
+            self.phase
+        );
+        self.phase = Phase::Fused;
+        self.scratch.clear();
+        self.decoder.feed_into(chunk, &mut self.scratch)?;
+        let out = self.fuse_scratch();
+        self.rows_pass1 += out.len();
+        self.rows_pass2 += out.len();
+        Ok(out)
+    }
+
+    /// End of the fused stream: flush the decoder, return trailing rows.
+    pub fn fused_end(&mut self) -> Result<Vec<ProcessedRow>> {
+        anyhow::ensure!(
+            matches!(self.phase, Phase::Start | Phase::Fused),
+            "fused_end in phase {:?}",
+            self.phase
+        );
+        let decoder = std::mem::replace(
+            &mut self.decoder,
+            ChunkDecoder::new(self.format.into(), self.schema),
+        );
+        self.scratch.clear();
+        decoder.finish_into(&mut self.scratch)?;
+        let out = self.fuse_scratch();
+        self.rows_pass1 += out.len();
+        self.rows_pass2 += out.len();
+        self.phase = Phase::Done;
+        Ok(out)
+    }
+
+    /// Fused GenVocab+ApplyVocab + dense finishing over the scratch
+    /// block. Row-major iteration visits each column's values in row
+    /// order, so [`Vocab::observe_apply`] assigns exactly the indices
+    /// the column-major two-pass scan does.
+    fn fuse_scratch(&mut self) -> Vec<ProcessedRow> {
+        let m = self.modulus;
+        let schema = self.schema;
+        let block = &self.scratch;
+        let vocabs = &mut self.vocabs;
+        let n = block.num_rows();
+        let dcols: Vec<&[i32]> = (0..schema.num_dense).map(|c| block.dense_col(c)).collect();
+        let scols: Vec<&[u32]> = (0..schema.num_sparse).map(|c| block.sparse_col(c)).collect();
+        let mut out = Vec::with_capacity(n);
+        for r in 0..n {
+            let dense = dcols.iter().map(|col| log1p(col[r])).collect();
+            let mut sparse = Vec::with_capacity(schema.num_sparse);
+            for (col, vocab) in scols.iter().zip(vocabs.iter_mut()) {
+                sparse.push(vocab.observe_apply(m.apply(col[r])));
+            }
+            out.push(ProcessedRow { label: block.labels()[r], dense, sparse });
+        }
+        out
+    }
+
     /// ApplyVocab + dense finishing over the scratch block, re-assembled
     /// into the wire's row-major frames. Column slices are hoisted once
     /// per chunk so the per-row transpose does no repeated slicing.
@@ -146,7 +228,9 @@ impl StreamingPreprocessor {
             let sparse = scols
                 .iter()
                 .zip(&self.vocabs)
-                .map(|(col, vocab)| vocab.apply(self.modulus.apply(col[r])).unwrap_or(0))
+                // a miss is impossible after pass 1 / a vocab import;
+                // the sentinel keeps it loud instead of aliasing index 0
+                .map(|(col, vocab)| vocab.apply(self.modulus.apply(col[r])).unwrap_or(VOCAB_MISS))
                 .collect();
             out.push(ProcessedRow { label: block.labels()[r], dense, sparse });
         }
@@ -199,29 +283,44 @@ impl StreamingPreprocessor {
     }
 }
 
-/// Convenience: run both passes over an in-memory buffer with a given
-/// chunk size, collecting columns (used by tests and the leader's
-/// loopback fallback).
+/// Convenience: preprocess an in-memory buffer with a given chunk size
+/// under either strategy, collecting columns (used by tests and the
+/// leader's loopback fallback).
 pub fn preprocess_buffered(
     schema: Schema,
     modulus: Modulus,
     format: WireFormat,
     raw: &[u8],
     chunk_size: usize,
+    strategy: ExecStrategy,
 ) -> Result<ProcessedColumns> {
     let mut sp = StreamingPreprocessor::new(schema, modulus, format);
-    for chunk in raw.chunks(chunk_size.max(1)) {
-        sp.pass1_chunk(chunk)?;
-    }
-    sp.pass1_end()?;
     let mut cols = ProcessedColumns::with_schema(schema);
-    for chunk in raw.chunks(chunk_size.max(1)) {
-        for row in sp.pass2_chunk(chunk)? {
-            cols.push_row(&row);
+    match strategy {
+        ExecStrategy::TwoPass => {
+            for chunk in raw.chunks(chunk_size.max(1)) {
+                sp.pass1_chunk(chunk)?;
+            }
+            sp.pass1_end()?;
+            for chunk in raw.chunks(chunk_size.max(1)) {
+                for row in sp.pass2_chunk(chunk)? {
+                    cols.push_row(&row);
+                }
+            }
+            for row in sp.pass2_end()? {
+                cols.push_row(&row);
+            }
         }
-    }
-    for row in sp.pass2_end()? {
-        cols.push_row(&row);
+        ExecStrategy::Fused => {
+            for chunk in raw.chunks(chunk_size.max(1)) {
+                for row in sp.fused_chunk(chunk)? {
+                    cols.push_row(&row);
+                }
+            }
+            for row in sp.fused_end()? {
+                cols.push_row(&row);
+            }
+        }
     }
     Ok(cols)
 }
@@ -247,10 +346,13 @@ mod tests {
         )
         .processed;
 
-        for chunk in [1usize, 3, 17, 64, 1024, raw.len()] {
-            let got =
-                preprocess_buffered(ds.schema(), m, WireFormat::Utf8, &raw, chunk).unwrap();
-            assert_eq!(got, reference, "chunk size {chunk}");
+        for strategy in [ExecStrategy::TwoPass, ExecStrategy::Fused] {
+            for chunk in [1usize, 3, 17, 64, 1024, raw.len()] {
+                let got = preprocess_buffered(
+                    ds.schema(), m, WireFormat::Utf8, &raw, chunk, strategy,
+                ).unwrap();
+                assert_eq!(got, reference, "chunk size {chunk} ({strategy:?})");
+            }
         }
     }
 
@@ -258,13 +360,44 @@ mod tests {
     fn binary_stream_matches_utf8_stream() {
         let ds = SynthDataset::generate(SynthConfig::small(150));
         let m = Modulus::new(499);
-        let u = preprocess_buffered(
-            ds.schema(), m, WireFormat::Utf8, &utf8::encode_dataset(&ds), 53,
+        for strategy in [ExecStrategy::TwoPass, ExecStrategy::Fused] {
+            let u = preprocess_buffered(
+                ds.schema(), m, WireFormat::Utf8, &utf8::encode_dataset(&ds), 53, strategy,
+            ).unwrap();
+            let b = preprocess_buffered(
+                ds.schema(), m, WireFormat::Binary, &binary::encode_dataset(&ds), 53, strategy,
+            ).unwrap();
+            assert_eq!(u, b, "{strategy:?}");
+        }
+    }
+
+    /// The worker's strategies must agree bit for bit — the wire-level
+    /// face of the fused == two-pass identity.
+    #[test]
+    fn fused_stream_matches_two_pass_stream() {
+        let ds = SynthDataset::generate(SynthConfig::small(260));
+        let m = Modulus::new(997);
+        let raw = utf8::encode_dataset(&ds);
+        let two = preprocess_buffered(
+            ds.schema(), m, WireFormat::Utf8, &raw, 97, ExecStrategy::TwoPass,
         ).unwrap();
-        let b = preprocess_buffered(
-            ds.schema(), m, WireFormat::Binary, &binary::encode_dataset(&ds), 53,
+        let fused = preprocess_buffered(
+            ds.schema(), m, WireFormat::Utf8, &raw, 97, ExecStrategy::Fused,
         ).unwrap();
-        assert_eq!(u, b);
+        assert_eq!(fused, two);
+    }
+
+    #[test]
+    fn strategies_cannot_mix_mid_stream() {
+        let ds = SynthDataset::generate(SynthConfig::small(5));
+        let raw = utf8::encode_dataset(&ds);
+        let mut sp =
+            StreamingPreprocessor::new(ds.schema(), Modulus::new(97), WireFormat::Utf8);
+        sp.fused_chunk(&raw).unwrap();
+        assert!(sp.pass1_chunk(&raw).is_err(), "two-pass frame after fused must fail");
+        assert!(sp.pass2_chunk(&raw).is_err());
+        sp.fused_end().unwrap();
+        assert!(sp.fused_chunk(&raw).is_err(), "fused after done must fail");
     }
 
     #[test]

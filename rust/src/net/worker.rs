@@ -1,5 +1,9 @@
 //! The accelerator node: accept a job over TCP, run the streaming
-//! two-pass preprocessor, stream results back.
+//! preprocessor, stream results back. Speaks both protocols — the
+//! leader's first data frame decides: `FusedChunk` runs the single-pass
+//! fused dataflow (results stream back while the dataset is still
+//! arriving, once over the wire), `Pass1Chunk` runs the two-pass
+//! protocol (required by the cluster leader-merge).
 
 use std::net::{TcpListener, TcpStream};
 
@@ -37,6 +41,30 @@ fn handle(stream: TcpStream) -> Result<RunStats> {
     loop {
         let (tag, payload) = protocol::read_frame(&mut reader)?;
         match tag {
+            Tag::FusedChunk => {
+                // Single-pass protocol: observe + apply in one scan,
+                // stream the rows straight back.
+                let rows = sp.fused_chunk(&payload)?;
+                if !rows.is_empty() {
+                    let packed = protocol::pack_rows(&rows, job.schema);
+                    protocol::write_frame(&mut writer, Tag::ResultChunk, &packed)?;
+                }
+            }
+            Tag::FusedEnd => {
+                let rows = sp.fused_end()?;
+                if !rows.is_empty() {
+                    let packed = protocol::pack_rows(&rows, job.schema);
+                    protocol::write_frame(&mut writer, Tag::ResultChunk, &packed)?;
+                }
+                let stats = RunStats {
+                    rows: sp.rows_seen().1 as u64,
+                    vocab_entries: sp.vocab_entries() as u64,
+                };
+                protocol::write_frame(&mut writer, Tag::ResultEnd, &stats.encode())?;
+                use std::io::Write as _;
+                writer.flush()?;
+                return Ok(stats);
+            }
             Tag::Pass1Chunk => sp.pass1_chunk(&payload)?,
             Tag::Pass1End => sp.pass1_end()?,
             Tag::VocabSync => {

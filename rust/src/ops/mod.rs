@@ -21,7 +21,7 @@ pub mod spec;
 pub mod vocab;
 
 pub use spec::{OpFlags, OpSpec, PipelineSpec};
-pub use vocab::{DirectVocab, HashVocab, Vocab, VocabSet};
+pub use vocab::{DirectVocab, HashVocab, Vocab, VocabSet, VOCAB_MISS};
 
 /// `FillMissing`: absent value → 0 (paper Table 1 — the default for empty
 /// entries "irrespective of whether the feature is sparse or dense").

@@ -213,7 +213,8 @@ impl PipelineSpec {
             for (c, &s) in row.sparse.iter().enumerate() {
                 let v = modulus.map_or(s, |m| m.apply(s));
                 let v = if do_apply {
-                    vocabs[c].apply(v).unwrap_or(0)
+                    // validated: GenVocab ran, so every value was observed
+                    vocabs[c].apply(v).unwrap_or(crate::ops::VOCAB_MISS)
                 } else {
                     v
                 };

@@ -20,6 +20,15 @@
 //! Both produce identical assignments for the same observation order —
 //! asserted by tests and relied on by the CPU↔FPGA equivalence suite.
 
+/// Sentinel written for a value that was never observed. `0` is a
+/// legitimate appearance index (the first unique value gets it), so it
+/// must not double as "unknown"; `u32::MAX` is free because keys are
+/// modulus-limited (and [`HashVocab`] already reserves it as its empty
+/// slot marker). In the two-loop design every applied value has been
+/// observed, so seeing `VOCAB_MISS` in output means the caller skipped
+/// GenVocab — an explicit, greppable signal instead of a silent `0`.
+pub const VOCAB_MISS: u32 = u32::MAX;
+
 /// Common vocabulary behaviour.
 pub trait Vocab {
     /// Observe a value during the GenVocab pass. Returns `true` when the
@@ -36,6 +45,17 @@ pub trait Vocab {
         self.len() == 0
     }
 
+    /// Fused GenVocab+ApplyVocab: observe `v` and return its appearance
+    /// index in one step — the hardware single-pass semantics (PIPER's
+    /// GenVocab-1 bitmap test-and-set feeding ApplyVocab-1's counter in
+    /// the same cycle). Because an appearance index is fixed at first
+    /// appearance, a fused scan assigns exactly the indices the two-loop
+    /// scan does. Backends override this to avoid the double lookup.
+    fn observe_apply(&mut self, v: u32) -> u32 {
+        self.observe(v);
+        self.apply(v).unwrap_or(VOCAB_MISS) // unreachable: just observed
+    }
+
     /// Observe every value in a column slice (GenVocab batch form).
     fn observe_slice(&mut self, xs: &[u32]) {
         for &x in xs {
@@ -43,13 +63,17 @@ pub trait Vocab {
         }
     }
 
-    /// Apply over a column slice, writing indices (unknown → 0, which can
-    /// only happen for values never observed; in the two-loop design every
-    /// value has been observed).
-    fn apply_slice(&self, xs: &[u32], out: &mut Vec<u32>) {
-        out.reserve(xs.len());
-        for &x in xs {
-            out.push(self.apply(x).unwrap_or(0));
+    /// Apply over a column slice, writing appearance indices into `out`
+    /// (same length as `xs` — allocation-free, the caller provides the
+    /// storage). Values never observed write the explicit [`VOCAB_MISS`]
+    /// sentinel rather than a fake index.
+    fn apply_slice(&self, xs: &[u32], out: &mut [u32]) {
+        // Hard assert: a zip over mismatched lengths would silently leave
+        // trailing rows stale — the aliasing failure VOCAB_MISS exists to
+        // prevent. One comparison against a per-element loop is free.
+        assert_eq!(xs.len(), out.len(), "apply_slice output length mismatch");
+        for (&x, o) in xs.iter().zip(out.iter_mut()) {
+            *o = self.apply(x).unwrap_or(VOCAB_MISS);
         }
     }
 }
@@ -82,16 +106,12 @@ impl DirectVocab {
         !was
     }
 
-    /// Memory footprint in bits of the bitmap + table — what decides
-    /// SRAM vs HBM placement on the accelerator.
-    pub fn storage_bits(&self) -> u64 {
-        (self.seen.len() as u64) * 64 + (self.table.len() as u64) * 32
-    }
-}
-
-impl Vocab for DirectVocab {
+    /// The one hardware step both `observe` and `observe_apply` share:
+    /// bitmap test-and-set, latching the counter into the table for a
+    /// fresh value. Returns whether the value was new; either way
+    /// `table[v]` holds the appearance index afterwards.
     #[inline]
-    fn observe(&mut self, v: u32) -> bool {
+    fn latch(&mut self, v: u32) -> bool {
         debug_assert!((v as usize) < self.table.len(), "value escaped Modulus range");
         if self.test_and_set(v) {
             self.table[v as usize] = self.counter;
@@ -102,6 +122,19 @@ impl Vocab for DirectVocab {
         }
     }
 
+    /// Memory footprint in bits of the bitmap + table — what decides
+    /// SRAM vs HBM placement on the accelerator.
+    pub fn storage_bits(&self) -> u64 {
+        (self.seen.len() as u64) * 64 + (self.table.len() as u64) * 32
+    }
+}
+
+impl Vocab for DirectVocab {
+    #[inline]
+    fn observe(&mut self, v: u32) -> bool {
+        self.latch(v)
+    }
+
     #[inline]
     fn apply(&self, v: u32) -> Option<u32> {
         let (w, b) = ((v / 64) as usize, v % 64);
@@ -110,6 +143,14 @@ impl Vocab for DirectVocab {
         } else {
             None
         }
+    }
+
+    /// The literal hardware dataflow: one bitmap test-and-set, one table
+    /// access — the same [`Self::latch`] `observe` uses, plus the read.
+    #[inline]
+    fn observe_apply(&mut self, v: u32) -> u32 {
+        self.latch(v);
+        self.table[v as usize]
     }
 
     fn len(&self) -> usize {
@@ -173,6 +214,28 @@ impl HashVocab {
         }
     }
 
+    /// The one probe-and-insert both `observe` and `observe_apply`
+    /// share: grow at 0.75 load, find `v`'s slot, insert it with the
+    /// next appearance index if absent. Returns `(slot, was_new)` — the
+    /// slot's `vals` entry is the appearance index either way.
+    #[inline]
+    fn upsert_slot(&mut self, v: u32) -> (usize, bool) {
+        debug_assert_ne!(v, EMPTY, "u32::MAX is reserved");
+        if (self.len + 1) * 4 > (self.mask + 1) * 3 {
+            self.grow();
+        }
+        let s = self.slot_of(v);
+        if self.keys[s] == EMPTY {
+            self.keys[s] = v;
+            self.vals[s] = self.len as u32;
+            self.order.push(v);
+            self.len += 1;
+            (s, true)
+        } else {
+            (s, false)
+        }
+    }
+
     fn grow(&mut self) {
         let new_cap = (self.mask + 1) * 2;
         let mut bigger = HashVocab {
@@ -225,20 +288,7 @@ impl Default for HashVocab {
 impl Vocab for HashVocab {
     #[inline]
     fn observe(&mut self, v: u32) -> bool {
-        debug_assert_ne!(v, EMPTY, "u32::MAX is reserved");
-        if (self.len + 1) * 4 > (self.mask + 1) * 3 {
-            self.grow();
-        }
-        let s = self.slot_of(v);
-        if self.keys[s] == EMPTY {
-            self.keys[s] = v;
-            self.vals[s] = self.len as u32;
-            self.order.push(v);
-            self.len += 1;
-            true
-        } else {
-            false
-        }
+        self.upsert_slot(v).1
     }
 
     #[inline]
@@ -249,6 +299,14 @@ impl Vocab for HashVocab {
         } else {
             None
         }
+    }
+
+    /// Single probe for the fused pass: the same [`Self::upsert_slot`]
+    /// `observe` uses, returning the slot's appearance index.
+    #[inline]
+    fn observe_apply(&mut self, v: u32) -> u32 {
+        let (s, _) = self.upsert_slot(v);
+        self.vals[s]
     }
 
     fn len(&self) -> usize {
@@ -287,7 +345,7 @@ impl VocabSet {
             .iter()
             .zip(cols)
             .map(|(v, col)| {
-                let mut out = Vec::new();
+                let mut out = vec![0u32; col.len()];
                 v.apply_slice(col, &mut out);
                 out
             })
@@ -349,6 +407,60 @@ mod tests {
         let mut d = DirectVocab::new(10);
         d.observe(5);
         assert_eq!(d.apply(6), None);
+    }
+
+    #[test]
+    fn apply_slice_marks_misses_with_sentinel_not_zero() {
+        // 0 is the first appearance index — a miss must be told apart.
+        let mut v = HashVocab::new();
+        v.observe(5);
+        let mut out = vec![7u32; 3];
+        v.apply_slice(&[5, 6, 5], &mut out);
+        assert_eq!(out, vec![0, VOCAB_MISS, 0]);
+        let mut d = DirectVocab::new(10);
+        d.observe(5);
+        let mut out = vec![7u32; 3];
+        d.apply_slice(&[5, 6, 5], &mut out);
+        assert_eq!(out, vec![0, VOCAB_MISS, 0]);
+    }
+
+    /// The fused scan must assign exactly the indices the two-loop scan
+    /// does, for both backends — the invariant the engine's fused
+    /// strategy is built on.
+    #[test]
+    fn observe_apply_equals_observe_then_apply() {
+        let mut rng = XorShift64::new(0xF05E);
+        for _ in 0..30 {
+            let range = 1 + rng.below(1500) as u32;
+            let xs: Vec<u32> =
+                (0..rng.below(2000) as usize).map(|_| rng.below(range as u64) as u32).collect();
+
+            let mut two_pass = HashVocab::new();
+            for &x in &xs {
+                two_pass.observe(x);
+            }
+            let want: Vec<u32> = xs.iter().map(|&x| two_pass.apply(x).unwrap()).collect();
+
+            let mut fused_h = HashVocab::new();
+            let got_h: Vec<u32> = xs.iter().map(|&x| fused_h.observe_apply(x)).collect();
+            let mut fused_d = DirectVocab::new(range);
+            let got_d: Vec<u32> = xs.iter().map(|&x| fused_d.observe_apply(x)).collect();
+
+            assert_eq!(got_h, want, "fused HashVocab drifted from two-pass");
+            assert_eq!(got_d, want, "fused DirectVocab drifted from two-pass");
+            assert_eq!(fused_h.len(), two_pass.len());
+            assert_eq!(fused_d.len(), two_pass.len());
+        }
+    }
+
+    #[test]
+    fn observe_apply_grows_the_hash_table() {
+        let mut v = HashVocab::with_capacity(16);
+        for x in 0..10_000u32 {
+            assert_eq!(v.observe_apply(x), x); // inserted in order 0,1,2,...
+            assert_eq!(v.observe_apply(x), x); // second visit: pure lookup
+        }
+        assert_eq!(v.len(), 10_000);
     }
 
     #[test]

@@ -17,6 +17,23 @@
 //! [`RowBlock`]s, so GenVocab/ApplyVocab run as tight loops over
 //! contiguous column slices; row sharding (the CPU baseline) is range
 //! slicing of the block, not row object shuffling.
+//!
+//! ## The two execution strategies
+//!
+//! The trait is built around **fused** single-pass execution
+//! ([`ExecutorRun::process_observing`]): every chunk is observed *and*
+//! emitted in one scan, appearance indices assigned on the fly with
+//! [`Vocab::observe_apply`] — exactly the bitmap+counter dataflow
+//! PIPER's GenVocab-1/ApplyVocab-1 PEs implement in hardware. The
+//! classic **two-pass** protocol (`observe`* → [`ExecutorRun::seal`] →
+//! `process`*) remains for plans that need a global barrier before any
+//! output is produced (the distributed leader-merge path) or for
+//! executors that cannot fuse. Both strategies are bit-identical by
+//! construction: an appearance index is fixed at first appearance, so
+//! assigning it during the first scan or after it yields the same
+//! value — [`super::PipelineBuilder::build`] picks the strategy from
+//! [`Executor::supports_fused`] and the equivalence suite pins the
+//! identity for every backend.
 
 use std::ops::Range;
 use std::time::Duration;
@@ -25,11 +42,11 @@ use crate::accel::InputFormat;
 use crate::data::row::ProcessedColumns;
 use crate::data::RowBlock;
 use crate::data::Schema;
-use crate::ops::{log1p, neg2zero, HashVocab, Modulus, OpFlags, Vocab};
+use crate::ops::{log1p, neg2zero, HashVocab, Modulus, OpFlags, Vocab, VOCAB_MISS};
 use crate::report::TimeTag;
 use crate::Result;
 
-use super::Plan;
+use super::{Plan, Sink};
 
 /// A preprocessing backend that can execute a planned operator graph
 /// over a stream of decoded chunks. Stateless and reusable: each
@@ -41,6 +58,15 @@ pub trait Executor: Send + Sync {
     /// Can this executor consume `input`? Checked at planning time.
     fn accepts(&self, input: InputFormat) -> bool;
 
+    /// Can this executor run `plan` in the fused single-pass mode
+    /// ([`ExecutorRun::process_observing`])? Checked at planning time:
+    /// [`super::PipelineBuilder::build`] picks
+    /// [`super::ExecStrategy::Fused`] when it can, and refuses a forced
+    /// fused build when it can't. Default: no (two-pass only).
+    fn supports_fused(&self, _plan: &Plan) -> bool {
+        false
+    }
+
     /// Executor-specific plan validation (e.g. PIPER's SRAM capacity
     /// check). Runs once, at [`super::PipelineBuilder::build`].
     fn plan_check(&self, _plan: &Plan) -> Result<()> {
@@ -51,21 +77,38 @@ pub trait Executor: Send + Sync {
     fn begin(&self, plan: &Plan) -> Result<Box<dyn ExecutorRun>>;
 }
 
-/// Per-submission executor state, driven by the engine:
-/// `observe`* (pass 1, only when the plan builds vocabularies) → `seal`
-/// → `process`* (pass 2) → `finish`. Chunks are borrowed column-major
-/// blocks — the engine reuses one scratch block per pass, so executors
-/// must not hold on to them across calls.
+/// Per-submission executor state, driven by the engine in one of two
+/// call patterns chosen by the plan's [`super::ExecStrategy`]:
+///
+/// * **fused** — `process_observing`* → `finish`: one decode pass, no
+///   barrier, output streams to the sink while vocabularies build;
+/// * **two-pass** — `observe`* (only when the plan builds
+///   vocabularies) → `seal` → `process`* → `finish`.
+///
+/// Chunks are borrowed column-major blocks — the engine reuses one
+/// scratch block per pass, so executors must not hold on to them across
+/// calls.
 pub trait ExecutorRun: Send {
-    /// Pass 1: observe a decoded chunk (GenVocab).
+    /// Fused single pass: observe the chunk's sparse values *and* emit
+    /// the processed block in the same scan, pushing output to `sink`.
+    /// Appearance indices are assigned on the fly
+    /// ([`Vocab::observe_apply`]) and must be bit-identical to the
+    /// two-pass result. Executors that cannot fuse
+    /// ([`Executor::supports_fused`] = false) are never called here and
+    /// may bail.
+    fn process_observing(&mut self, block: &RowBlock, sink: &mut dyn Sink) -> Result<()>;
+
+    /// Two-pass, pass 1: observe a decoded chunk (GenVocab).
     fn observe(&mut self, block: &RowBlock) -> Result<()>;
 
-    /// Barrier between the passes (merge/freeze vocabulary state).
+    /// Two-pass barrier between the passes (merge/freeze vocabulary
+    /// state). Never called under the fused strategy — there is no
+    /// barrier to cross.
     fn seal(&mut self) -> Result<()> {
         Ok(())
     }
 
-    /// Pass 2: process a decoded chunk into a column block.
+    /// Two-pass, pass 2: process a decoded chunk into a column block.
     fn process(&mut self, block: &RowBlock) -> Result<ProcessedColumns>;
 
     /// End of submission; `stats` carries the engine's stream totals for
@@ -93,6 +136,15 @@ pub struct ExecutorReport {
     pub modeled_e2e: Option<Duration>,
     /// Pure-computation time (the paper's Table 3 scope) where defined.
     pub compute: Option<Duration>,
+    /// Measured wallclock spent in GenVocab-attributable work: the
+    /// whole observe pass under two-pass, the sequential vocab-assign
+    /// stage under fused (zero where the executor fuses inseparably).
+    /// Always measured host time — even for sim-tagged executors, where
+    /// it times the functional evaluation, not the model.
+    pub observe_time: Duration,
+    /// Measured wallclock spent emitting output (two-pass pass 2, or
+    /// the fused pass minus any separable vocab stage).
+    pub process_time: Duration,
     pub vocab_entries: usize,
 }
 
@@ -181,6 +233,35 @@ impl ChunkState {
     /// concatenating shard outputs in order equals [`Self::process`] of
     /// the whole block.
     pub fn process_range(&self, block: &RowBlock, range: Range<usize>) -> ProcessedColumns {
+        let mut out = self.process_stateless_range(block, range.clone());
+        for (c, dst) in out.sparse.iter_mut().enumerate() {
+            let col = &block.sparse_col(c)[range.clone()];
+            let start = dst.len();
+            dst.resize(start + col.len(), 0);
+            let dst = &mut dst[start..];
+            let vocab = &self.vocabs[c];
+            for (&s, o) in col.iter().zip(dst.iter_mut()) {
+                let v = self.modulus.map_or(s, |m| m.apply(s));
+                *o = if self.flags.apply_vocab {
+                    vocab.apply(v).unwrap_or(VOCAB_MISS)
+                } else {
+                    v
+                };
+            }
+        }
+        out
+    }
+
+    /// The stateless slice of pass 2 over a row range: labels + dense
+    /// finishing, sparse columns left empty. Shardable across threads in
+    /// *both* strategies because no vocabulary state is touched; the
+    /// fused CPU executor runs this in parallel and fills the sparse
+    /// planes with the sequential [`Self::fuse_sparse`] stage.
+    pub fn process_stateless_range(
+        &self,
+        block: &RowBlock,
+        range: Range<usize>,
+    ) -> ProcessedColumns {
         let mut out = ProcessedColumns::with_schema(self.schema);
         out.labels.extend_from_slice(&block.labels()[range.clone()]);
         for (c, dst) in out.dense.iter_mut().enumerate() {
@@ -191,15 +272,59 @@ impl ChunkState {
                 dst.push(if self.flags.logarithm { log1p(v) } else { v as f32 });
             }
         }
-        for (c, dst) in out.sparse.iter_mut().enumerate() {
-            let col = &block.sparse_col(c)[range.clone()];
-            dst.reserve(col.len());
-            let vocab = &self.vocabs[c];
-            for &s in col {
-                let v = self.modulus.map_or(s, |m| m.apply(s));
-                dst.push(if self.flags.apply_vocab { vocab.apply(v).unwrap_or(0) } else { v });
+        out
+    }
+
+    /// Fused sparse stage: one sequential in-order scan per sparse
+    /// column that observes *and* emits — GenVocab-1's bitmap and
+    /// ApplyVocab-1's counter in the same pass ([`Vocab::observe_apply`]).
+    /// Appends `block.num_rows()` indices to each of `out`'s sparse
+    /// columns; bit-identical to `observe(block)` followed by the sparse
+    /// half of `process(block)` because appearance indices are fixed at
+    /// first appearance. Inherently sequential per column — the reason
+    /// the fused CPU path cannot shard this stage across threads, which
+    /// is exactly the scaling wall §2.3 describes.
+    pub fn fuse_sparse(&mut self, block: &RowBlock, out: &mut ProcessedColumns) {
+        let modulus = self.modulus;
+        let flags = self.flags;
+        for (c, vocab) in self.vocabs.iter_mut().enumerate() {
+            let col = block.sparse_col(c);
+            let dst = &mut out.sparse[c];
+            let start = dst.len();
+            dst.resize(start + col.len(), 0);
+            let dst = &mut dst[start..];
+            match (flags.gen_vocab, flags.apply_vocab) {
+                (true, true) => {
+                    for (&s, o) in col.iter().zip(dst.iter_mut()) {
+                        let v = modulus.map_or(s, |m| m.apply(s));
+                        *o = vocab.observe_apply(v);
+                    }
+                }
+                (true, false) => {
+                    for (&s, o) in col.iter().zip(dst.iter_mut()) {
+                        let v = modulus.map_or(s, |m| m.apply(s));
+                        vocab.observe(v);
+                        *o = v;
+                    }
+                }
+                (false, apply) => {
+                    // no GenVocab in the plan: stateless passthrough (an
+                    // apply against never-filled vocabs would be all
+                    // misses; spec validation forbids that combination).
+                    for (&s, o) in col.iter().zip(dst.iter_mut()) {
+                        let v = modulus.map_or(s, |m| m.apply(s));
+                        *o = if apply { vocab.apply(v).unwrap_or(VOCAB_MISS) } else { v };
+                    }
+                }
             }
         }
+    }
+
+    /// Fused single pass over a whole chunk: stateless stage + fused
+    /// sparse stage. Equals `observe(block)` then `process(block)`.
+    pub fn process_fused(&mut self, block: &RowBlock) -> ProcessedColumns {
+        let mut out = self.process_stateless_range(block, 0..block.num_rows());
+        self.fuse_sparse(block, &mut out);
         out
     }
 
@@ -271,6 +396,60 @@ mod tests {
             got.extend_from(&state.process(chunk));
         }
         assert_eq!(got, reference);
+    }
+
+    /// The load-bearing identity of the fused strategy at the functional
+    /// core: one fused scan == observe-all then process-all, chunk by
+    /// chunk, for every flag combination.
+    #[test]
+    fn fused_scan_equals_two_pass_scan() {
+        let ds = SynthDataset::generate(SynthConfig::small(320));
+        let chunks: Vec<RowBlock> =
+            ds.rows.chunks(47).map(|c| RowBlock::from_rows(c, ds.schema())).collect();
+        for spec in [
+            "modulus:97|genvocab|applyvocab",
+            "modulus:97|genvocab|applyvocab|neg2zero|logarithm",
+            "modulus:97|genvocab",
+            "modulus:53|neg2zero",
+        ] {
+            let p = plan(spec);
+            let mut two_pass = ChunkState::new(&p);
+            for chunk in &chunks {
+                two_pass.observe(chunk);
+            }
+            let mut want = ProcessedColumns::with_schema(ds.schema());
+            for chunk in &chunks {
+                want.extend_from(&two_pass.process(chunk));
+            }
+
+            let mut fused = ChunkState::new(&p);
+            let mut got = ProcessedColumns::with_schema(ds.schema());
+            for chunk in &chunks {
+                got.extend_from(&fused.process_fused(chunk));
+            }
+            assert_eq!(got, want, "spec {spec}");
+            assert_eq!(fused.vocab_entries(), two_pass.vocab_entries(), "spec {spec}");
+        }
+    }
+
+    /// Fused = sharded stateless stage + sequential sparse stage (the
+    /// CPU executor's fused decomposition).
+    #[test]
+    fn fused_decomposition_stateless_shards_plus_sequential_sparse() {
+        let ds = SynthDataset::generate(SynthConfig::small(211));
+        let block = RowBlock::from_rows(&ds.rows, ds.schema());
+        let p = plan("modulus:97|genvocab|applyvocab|neg2zero|logarithm");
+
+        let mut whole = ChunkState::new(&p);
+        let want = whole.process_fused(&block);
+
+        let mut decomposed = ChunkState::new(&p);
+        let mut out = ProcessedColumns::with_schema(ds.schema());
+        for r in crate::cpu_baseline::pipeline::partition_rows(block.num_rows(), 4) {
+            out.extend_from(&decomposed.process_stateless_range(&block, r));
+        }
+        decomposed.fuse_sparse(&block, &mut out);
+        assert_eq!(out, want);
     }
 
     #[test]

@@ -11,12 +11,17 @@
 //!
 //! * a [`Source`] fills engine-recycled byte buffers with the raw
 //!   dataset in bounded chunks (in-memory buffer, file, synthetic
-//!   generator, TCP stream) and can rewind for the second vocabulary
-//!   pass;
+//!   generator, one-shot reader, TCP stream); rewinding is an *optional
+//!   capability* ([`Source::can_rewind`]) that only two-pass plans need;
 //! * a [`Plan`] is built **once** by [`PipelineBuilder::build`] from an
 //!   [`crate::ops::PipelineSpec`] plus backend capability checks — a
 //!   format mismatch or an over-capacity vocabulary is a *planning*
-//!   error, not a runtime failure inside a serving worker;
+//!   error, not a runtime failure inside a serving worker. Planning also
+//!   fixes the [`ExecStrategy`]: **fused** (one decode pass, appearance
+//!   indices assigned while streaming output — the paper's hardware
+//!   dataflow) whenever the executor supports it, **two-pass** (GenVocab
+//!   scan, rewind, ApplyVocab scan) when it doesn't or when a global
+//!   vocabulary barrier is required (the distributed leader-merge path);
 //! * the decoded-chunk currency is the column-major
 //!   [`RowBlock`](crate::data::RowBlock): [`ChunkDecoder`] decodes every
 //!   raw chunk into one reusable scratch block (no per-row allocation),
@@ -63,7 +68,9 @@ pub mod source;
 
 pub use executor::{ChunkState, Executor, ExecutorReport, ExecutorRun, StreamStats};
 pub use sink::{CollectSink, CountSink, Sink};
-pub use source::{serve_bytes, FileSource, MemorySource, Source, SynthSource, TcpSource};
+pub use source::{
+    serve_bytes, FileSource, MemorySource, ReaderSource, Source, SynthSource, TcpSource,
+};
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -162,9 +169,48 @@ impl ChunkDecoder {
 // Plan + builder
 // ---------------------------------------------------------------------
 
+/// How a plan executes its stateful vocabulary operators — fixed at
+/// planning time ([`PipelineBuilder::build`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecStrategy {
+    /// One decode pass: each chunk is observed *and* emitted in the same
+    /// scan ([`ExecutorRun::process_observing`]), appearance indices
+    /// assigned on the fly with the bitmap+counter semantics of
+    /// [`crate::ops::DirectVocab`]. No source rewind, no barrier;
+    /// bit-identical to [`Self::TwoPass`] because an appearance index is
+    /// fixed at first appearance. The default whenever the executor
+    /// supports it.
+    Fused,
+    /// The classic two-loop design: a full GenVocab pass, a source
+    /// rewind, then the ApplyVocab/emit pass. Requires
+    /// [`Source::can_rewind`]. Retained for executors without fused
+    /// support and for deployments that need a global vocabulary
+    /// barrier before any output (the cluster leader-merge path).
+    TwoPass,
+}
+
+impl ExecStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecStrategy::Fused => "fused",
+            ExecStrategy::TwoPass => "two-pass",
+        }
+    }
+
+    /// Parse a CLI-style name.
+    pub fn parse(s: &str) -> Result<ExecStrategy> {
+        match s {
+            "fused" => Ok(ExecStrategy::Fused),
+            "two-pass" | "twopass" | "two_pass" => Ok(ExecStrategy::TwoPass),
+            other => anyhow::bail!("unknown strategy `{other}` (fused|two-pass)"),
+        }
+    }
+}
+
 /// The validated, immutable execution plan: operator graph (as parsed
-/// flags + modulus), schema, input format and chunking. Built once by
-/// [`PipelineBuilder::build`]; executors read it, never mutate it.
+/// flags + modulus), schema, input format, chunking and execution
+/// strategy. Built once by [`PipelineBuilder::build`]; executors read
+/// it, never mutate it.
 #[derive(Debug, Clone)]
 pub struct Plan {
     pub spec: PipelineSpec,
@@ -178,9 +224,22 @@ pub struct Plan {
     /// Raw chunks the producer may queue ahead of the decode/execute
     /// worker (see [`PipelineBuilder::channel_depth`]).
     pub channel_depth: usize,
+    /// Fused single pass vs two-pass-with-rewind (see [`ExecStrategy`]).
+    pub strategy: ExecStrategy,
 }
 
 impl Plan {
+    /// Decode passes over the source this plan costs per submission: 2
+    /// only when a `gen_vocab` plan runs under [`ExecStrategy::TwoPass`]
+    /// (the rewind), 1 otherwise.
+    pub fn decode_passes(&self) -> usize {
+        if self.flags.gen_vocab && self.strategy == ExecStrategy::TwoPass {
+            2
+        } else {
+            1
+        }
+    }
+
     /// Requested raw bytes per chunk, derived from `chunk_rows` and the
     /// format's approximate row width.
     pub fn chunk_bytes(&self) -> usize {
@@ -201,6 +260,7 @@ pub struct PipelineBuilder {
     input: InputFormat,
     chunk_rows: usize,
     channel_depth: usize,
+    strategy: Option<ExecStrategy>,
     executor: Option<Box<dyn Executor>>,
 }
 
@@ -216,6 +276,7 @@ impl PipelineBuilder {
             input: InputFormat::Utf8,
             chunk_rows: 64 * 1024,
             channel_depth: DEFAULT_CHANNEL_DEPTH,
+            strategy: None,
             executor: None,
         }
     }
@@ -251,12 +312,27 @@ impl PipelineBuilder {
     ///
     /// Peak resident raw input ≈ `(channel_depth + 2) × chunk_bytes`:
     /// one chunk being filled by the producer, `channel_depth` queued in
-    /// the channel, and one being decoded by the worker. Depth 1
-    /// minimizes memory but stalls the producer on every decode; deeper
-    /// queues absorb source jitter (file/TCP reads) at linear memory
-    /// cost. Validated ≥ 1 at [`Self::build`].
+    /// the channel, and one being decoded by the worker. The formula is
+    /// per *moment*, not per pass — a fused (one-pass) submission
+    /// allocates exactly that many buffers over its whole lifetime, and
+    /// a two-pass submission reuses the same set across both passes via
+    /// the pool lane, so strategy changes throughput, never peak memory.
+    /// Depth 1 minimizes memory but stalls the producer on every decode;
+    /// deeper queues absorb source jitter (file/TCP reads) at linear
+    /// memory cost. Validated ≥ 1 at [`Self::build`].
     pub fn channel_depth(mut self, depth: usize) -> Self {
         self.channel_depth = depth;
+        self
+    }
+
+    /// Force an execution strategy instead of letting [`Self::build`]
+    /// pick one from executor capabilities. Forcing
+    /// [`ExecStrategy::Fused`] on an executor without fused support is a
+    /// planning error; forcing [`ExecStrategy::TwoPass`] is always legal
+    /// (e.g. to reproduce the paper's two-loop baseline, or when the
+    /// submission needs a vocabulary barrier before any output).
+    pub fn strategy(mut self, strategy: ExecStrategy) -> Self {
+        self.strategy = Some(strategy);
         self
     }
 
@@ -278,7 +354,7 @@ impl PipelineBuilder {
             "planning: channel_depth must be >= 1 (got {})",
             self.channel_depth
         );
-        let plan = Plan {
+        let mut plan = Plan {
             flags: self.spec.flags(),
             modulus: self.spec.modulus(),
             spec: self.spec,
@@ -286,6 +362,7 @@ impl PipelineBuilder {
             input: self.input,
             chunk_rows: self.chunk_rows,
             channel_depth: self.channel_depth,
+            strategy: ExecStrategy::TwoPass, // provisional until capability check
         };
         anyhow::ensure!(
             executor.accepts(plan.input),
@@ -293,6 +370,21 @@ impl PipelineBuilder {
             executor.name(),
             plan.input
         );
+        // Strategy selection: fused whenever the executor can (it is the
+        // cheaper plan — one decode pass), unless the caller forced one.
+        plan.strategy = match self.strategy {
+            Some(ExecStrategy::Fused) => {
+                anyhow::ensure!(
+                    executor.supports_fused(&plan),
+                    "planning: {} cannot run the fused single-pass strategy",
+                    executor.name()
+                );
+                ExecStrategy::Fused
+            }
+            Some(ExecStrategy::TwoPass) => ExecStrategy::TwoPass,
+            None if executor.supports_fused(&plan) => ExecStrategy::Fused,
+            None => ExecStrategy::TwoPass,
+        };
         executor.plan_check(&plan)?;
         Ok(Pipeline { plan, executor })
     }
@@ -313,6 +405,7 @@ impl PipelineBuilder {
             input,
             chunk_rows,
             channel_depth: DEFAULT_CHANNEL_DEPTH,
+            strategy: ExecStrategy::TwoPass,
         }
     }
 }
@@ -356,25 +449,43 @@ impl Pipeline {
         let t0 = Instant::now();
         let mut run = self.executor.begin(&self.plan)?;
 
-        // Raw chunk buffers recycle through this pool across *both*
-        // passes: pass 2 (after the GenVocab rewind) reuses pass 1's
-        // buffers instead of re-allocating per chunk.
+        // Raw chunk buffers recycle through this pool for the lifetime
+        // of the submission; when a two-pass plan streams the source
+        // twice, the second pass reuses the first pass's buffers.
         let mut pool: Vec<Vec<u8>> = Vec::new();
 
-        // Pass 1 (GenVocab) only when the plan has stateful vocab ops —
-        // it forces a source rewind, i.e. a second decode pass.
-        let decode_passes = if self.plan.flags.gen_vocab { 2 } else { 1 };
-        if self.plan.flags.gen_vocab {
-            stream_chunks(&self.plan, &mut *source, &mut pool, |block| run.observe(block))?;
-            source.reset()?;
+        if self.plan.strategy == ExecStrategy::TwoPass {
+            // Pass 1 (GenVocab) only when the plan has stateful vocab
+            // ops — it rewinds the source for a second decode pass.
+            if self.plan.flags.gen_vocab {
+                anyhow::ensure!(
+                    source.can_rewind(),
+                    "two-pass gen_vocab plan needs a rewindable source; \
+                     this source streams once — build the pipeline with the \
+                     fused strategy instead"
+                );
+                stream_chunks(&self.plan, &mut *source, &mut pool, |block| run.observe(block))?;
+                source.reset()?;
+            }
+            run.seal()?;
         }
-        run.seal()?;
 
-        let (raw_bytes, rows, chunks) =
-            stream_chunks(&self.plan, &mut *source, &mut pool, |block| {
-                let columns = run.process(block)?;
-                sink.push(&columns)
-            })?;
+        let (raw_bytes, rows, chunks) = match self.plan.strategy {
+            // Fused: the single decode pass observes and emits at once —
+            // no rewind, no barrier, output streams while vocabularies
+            // build.
+            ExecStrategy::Fused => {
+                stream_chunks(&self.plan, &mut *source, &mut pool, |block| {
+                    run.process_observing(block, sink)
+                })?
+            }
+            ExecStrategy::TwoPass => {
+                stream_chunks(&self.plan, &mut *source, &mut pool, |block| {
+                    let columns = run.process(block)?;
+                    sink.push(&columns)
+                })?
+            }
+        };
 
         let stats = StreamStats { raw_bytes, rows, chunks, wall: t0.elapsed() };
         let rep = run.finish(&stats)?;
@@ -382,11 +493,14 @@ impl Pipeline {
             executor: self.executor.name(),
             rows: rows as usize,
             chunks: chunks as usize,
-            decode_passes,
+            decode_passes: self.plan.decode_passes(),
+            strategy: self.plan.strategy,
             e2e: rep.modeled_e2e.unwrap_or(stats.wall),
             wall: stats.wall,
             tag: rep.tag,
             compute: rep.compute,
+            observe_time: rep.observe_time,
+            process_time: rep.process_time,
             vocab_entries: rep.vocab_entries,
         })
     }
@@ -403,10 +517,12 @@ impl Pipeline {
 /// One streaming pass: a producer thread pulls raw chunks from the
 /// source into a bounded channel while this thread decodes them into a
 /// reused [`RowBlock`] scratch and feeds the executor. Consumed raw
-/// buffers return to the producer through an unbounded pool lane (seeded
-/// from, and drained back into, the caller's `pool` so recycling spans
-/// passes), so steady state allocates nothing per chunk — neither raw
-/// `Vec<u8>`s nor decoded rows. Returns `(raw_bytes, rows, chunks)`.
+/// buffers return to the producer through an unbounded pool lane, seeded
+/// from and drained back into the caller's `pool`, so steady state
+/// allocates nothing per chunk — neither raw `Vec<u8>`s nor decoded
+/// rows. A fused plan makes exactly one call; a two-pass plan calls
+/// twice and the pool carries the buffers across. Returns
+/// `(raw_bytes, rows, chunks)`.
 fn stream_chunks<F>(
     plan: &Plan,
     source: &mut dyn Source,
@@ -437,14 +553,11 @@ where
                     // only ever `channel_depth + 2`-ish buffers exist.
                     let mut buf = pool_rx.try_recv().unwrap_or_default();
                     if !source.next_chunk(chunk_bytes, &mut buf)? {
-                        let _ = producer_pool.send(buf);
+                        let _ = producer_pool.send(buf); // keep it pooled
                         break;
                     }
-                    if let Err(back) = tx.send(buf) {
-                        // Consumer bailed; its error wins below. Keep the
-                        // buffer pooled for the caller.
-                        let _ = producer_pool.send(back.0);
-                        break;
+                    if tx.send(buf).is_err() {
+                        break; // consumer bailed; its error wins below
                     }
                 }
                 Ok(())
@@ -505,11 +618,13 @@ pub struct RunReport {
     pub executor: String,
     pub rows: usize,
     pub chunks: usize,
-    /// Decode passes over the source: 2 when a `gen_vocab` plan forced a
-    /// rewind (the paper's two-loop design), 1 otherwise. Surfaces the
-    /// cost the second pass adds so callers can reason about the decode
-    /// waste a vocabulary-free plan avoids.
+    /// Decode passes over the source: 2 when a `gen_vocab` plan ran
+    /// two-pass (the paper's two-loop design, with a rewind), 1 under
+    /// the fused strategy or for vocabulary-free plans. Surfaces the
+    /// decode waste the fused strategy eliminates.
     pub decode_passes: usize,
+    /// The execution strategy the plan ran under.
+    pub strategy: ExecStrategy,
     /// End-to-end time: modeled for sim executors, measured wallclock
     /// for the CPU baseline. Check `tag`.
     pub e2e: Duration,
@@ -519,6 +634,17 @@ pub struct RunReport {
     pub tag: TimeTag,
     /// Pure-computation time (the paper's Table 3 scope) where defined.
     pub compute: Option<Duration>,
+    /// Measured time in GenVocab-attributable executor work: the whole
+    /// observe pass under two-pass; the sequential vocab-assign stage
+    /// under fused where the executor separates it (the CPU baseline),
+    /// zero where it fuses inseparably. Comparing the two strategies'
+    /// splits shows *where* the fused strategy's saving comes from —
+    /// the observe pass's decode+scan disappears, while `process_time`
+    /// stays roughly flat.
+    pub observe_time: Duration,
+    /// Measured time in the emit-side executor work (pass 2, or the
+    /// fused pass minus any separable vocab stage).
+    pub process_time: Duration,
     pub vocab_entries: usize,
 }
 
@@ -606,6 +732,44 @@ mod tests {
     fn builder_rejects_invalid_spec_at_planning() {
         let b = PipelineBuilder::new().spec_str("genvocab"); // needs modulus
         assert!(b.is_err() || b.unwrap().build().is_err());
+    }
+
+    #[test]
+    fn builder_defaults_to_fused_and_honors_forced_two_pass() {
+        let fused = PipelineBuilder::new()
+            .executor(crate::coordinator::Backend::Gpu.executor())
+            .build()
+            .unwrap();
+        assert_eq!(fused.plan().strategy, ExecStrategy::Fused);
+        assert_eq!(fused.plan().decode_passes(), 1);
+
+        let two = PipelineBuilder::new()
+            .strategy(ExecStrategy::TwoPass)
+            .executor(crate::coordinator::Backend::Gpu.executor())
+            .build()
+            .unwrap();
+        assert_eq!(two.plan().strategy, ExecStrategy::TwoPass);
+        assert_eq!(two.plan().decode_passes(), 2, "gen_vocab plan rewinds under two-pass");
+    }
+
+    #[test]
+    fn decode_passes_is_one_without_gen_vocab_even_two_pass() {
+        let p = PipelineBuilder::new()
+            .spec_str("modulus:97|logarithm")
+            .unwrap()
+            .strategy(ExecStrategy::TwoPass)
+            .executor(crate::coordinator::Backend::Gpu.executor())
+            .build()
+            .unwrap();
+        assert_eq!(p.plan().decode_passes(), 1);
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for s in [ExecStrategy::Fused, ExecStrategy::TwoPass] {
+            assert_eq!(ExecStrategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(ExecStrategy::parse("sideways").is_err());
     }
 
     #[test]

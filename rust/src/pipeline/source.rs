@@ -1,20 +1,28 @@
 //! Chunked raw-row input sources for the streaming engine.
 //!
 //! A [`Source`] yields the raw dataset bytes (UTF-8 or binary, the
-//! paper's two on-disk formats) in bounded chunks, and can rewind for
-//! the second vocabulary pass. Chunks are written into caller-provided
-//! buffers: the engine recycles consumed chunk buffers back to the
-//! producer, so a steady-state pass allocates nothing per chunk. Four
-//! implementations cover the serving postures the ROADMAP asks for:
+//! paper's two on-disk formats) in bounded chunks. Rewinding for a
+//! second pass is an **optional capability** ([`Source::can_rewind`]):
+//! only two-pass plans need it — the fused strategy streams any source
+//! exactly once. Chunks are written into caller-provided buffers: the
+//! engine recycles consumed chunk buffers back to the producer, so a
+//! steady-state pass allocates nothing per chunk. Five implementations
+//! cover the serving postures the ROADMAP asks for:
 //!
 //! * [`MemorySource`] — a borrowed in-memory buffer (the old
-//!   `run_backend` calling convention);
+//!   `run_backend` calling convention); rewindable;
 //! * [`FileSource`] — reads a dataset file chunk by chunk; resident
-//!   memory is one chunk, never the file;
+//!   memory is one chunk, never the file; rewindable (seek);
 //! * [`SynthSource`] — generates the deterministic synthetic dataset on
 //!   the fly (arbitrarily large workloads with no materialization);
+//!   rewindable (regenerate);
 //! * [`TcpSource`] — streams from a remote dataset server over TCP
-//!   (paper Fig. 7d ingest; each pass is one connection).
+//!   (paper Fig. 7d ingest; each pass is one connection); rewindable
+//!   (reconnect — a two-pass plan sends the dataset over the wire
+//!   twice);
+//! * [`ReaderSource`] — wraps any `Read` (a pipe, a socket, stdin, a
+//!   decompressor): genuinely one-shot, usable only by fused or
+//!   vocabulary-free plans.
 
 use std::io::{Read, Seek, SeekFrom, Write as _};
 use std::net::{TcpListener, TcpStream};
@@ -24,7 +32,7 @@ use crate::accel::InputFormat;
 use crate::data::{utf8, RowGen, SynthConfig};
 use crate::Result;
 
-/// A rewindable stream of raw dataset bytes.
+/// A stream of raw dataset bytes.
 ///
 /// `Send` is required so the engine's producer thread can own the source
 /// for the duration of a pass.
@@ -38,9 +46,21 @@ pub trait Source: Send {
     /// decoder handles boundaries.
     fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> Result<bool>;
 
+    /// Whether this source can replay its byte stream from the start
+    /// ([`Self::reset`]). Only plans running the two-pass strategy need
+    /// it; the engine checks this at submission and the fused strategy
+    /// never asks. Default: `false` — rewinding is an opt-in capability
+    /// a source must claim by overriding both this and `reset`.
+    fn can_rewind(&self) -> bool {
+        false
+    }
+
     /// Rewind to the start of the dataset for another pass. The replayed
-    /// byte stream must be identical.
-    fn reset(&mut self) -> Result<()>;
+    /// byte stream must be identical. Sources that return `false` from
+    /// [`Self::can_rewind`] keep this default, which fails.
+    fn reset(&mut self) -> Result<()> {
+        anyhow::bail!("this source cannot rewind (one-shot stream)")
+    }
 
     /// Total bytes per pass, when known in advance.
     fn len_hint(&self) -> Option<u64> {
@@ -80,6 +100,10 @@ impl Source for MemorySource<'_> {
         buf.extend_from_slice(&self.raw[self.pos..end]);
         self.pos = end;
         Ok(true)
+    }
+
+    fn can_rewind(&self) -> bool {
+        true
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -128,6 +152,10 @@ impl Source for FileSource {
         // budget with no zero-fill of the dirty capacity.
         let filled = self.file.by_ref().take(max_bytes.max(1) as u64).read_to_end(buf)?;
         Ok(filled > 0)
+    }
+
+    fn can_rewind(&self) -> bool {
+        true
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -198,6 +226,10 @@ impl Source for SynthSource {
         Ok(true)
     }
 
+    fn can_rewind(&self) -> bool {
+        true
+    }
+
     fn reset(&mut self) -> Result<()> {
         self.gen = RowGen::new(self.config.clone());
         self.pending.clear();
@@ -221,8 +253,8 @@ impl Source for SynthSource {
 /// Source that streams the dataset from a remote server: one connection
 /// per pass, read to EOF (the convention [`serve_bytes`] implements).
 /// `reset` drops the connection; the next chunk reconnects — so a
-/// two-pass plan costs two connections, exactly the "dataset crosses the
-/// wire twice" of the paper's network-attached mode.
+/// two-pass plan costs two connections ("the dataset crosses the wire
+/// twice"), while a fused plan costs one.
 #[derive(Debug)]
 pub struct TcpSource {
     addr: String,
@@ -267,11 +299,56 @@ impl Source for TcpSource {
         Ok(filled > 0)
     }
 
+    fn can_rewind(&self) -> bool {
+        true // reconnecting replays the dataset (serve_bytes convention)
+    }
+
     fn reset(&mut self) -> Result<()> {
         self.conn = None;
         self.done = false;
         Ok(())
     }
+}
+
+// ---------------------------------------------------------------------
+// One-shot reader
+// ---------------------------------------------------------------------
+
+/// Source over any [`Read`] — a pipe, a socket, stdin, a decompressor.
+/// Genuinely one-shot: it cannot rewind, so only fused or
+/// vocabulary-free plans accept it. This is the ingestion posture the
+/// fused strategy unlocks — a `gen_vocab` pipeline fed straight from a
+/// stream that exists only once.
+#[derive(Debug)]
+pub struct ReaderSource<R: Read + Send> {
+    reader: R,
+    format: InputFormat,
+    done: bool,
+}
+
+impl<R: Read + Send> ReaderSource<R> {
+    pub fn new(reader: R, format: InputFormat) -> Self {
+        ReaderSource { reader, format, done: false }
+    }
+}
+
+impl<R: Read + Send> Source for ReaderSource<R> {
+    fn format(&self) -> InputFormat {
+        self.format
+    }
+
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> Result<bool> {
+        buf.clear();
+        if self.done {
+            return Ok(false);
+        }
+        let filled = self.reader.by_ref().take(max_bytes.max(1) as u64).read_to_end(buf)?;
+        if filled == 0 {
+            self.done = true;
+        }
+        Ok(filled > 0)
+    }
+    // can_rewind/reset keep the one-shot defaults.
 }
 
 /// Serve `passes` copies of `raw` on `listener`, one connection each —
@@ -356,6 +433,28 @@ mod tests {
         src.reset().unwrap();
         assert_eq!(drain(&mut src, 10_000), payload);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reader_source_is_one_shot() {
+        let raw: Vec<u8> = (0..=255u8).cycle().take(3000).collect();
+        let mut src = ReaderSource::new(std::io::Cursor::new(raw.clone()), InputFormat::Binary);
+        assert!(!src.can_rewind());
+        assert_eq!(drain(&mut src, 700), raw);
+        let mut buf = Vec::new();
+        assert!(!src.next_chunk(700, &mut buf).unwrap(), "EOF is sticky");
+        assert!(src.reset().is_err(), "one-shot source must refuse to rewind");
+    }
+
+    #[test]
+    fn rewind_capability_matches_reset_behaviour() {
+        let raw = b"1\t2\t3\n".to_vec();
+        let mem = MemorySource::new(&raw, InputFormat::Utf8);
+        assert!(mem.can_rewind());
+        let tcp = TcpSource::connect("127.0.0.1:1", InputFormat::Utf8);
+        assert!(tcp.can_rewind());
+        let synth = SynthSource::new(SynthConfig::small(1), InputFormat::Utf8);
+        assert!(synth.can_rewind());
     }
 
     #[test]

@@ -10,6 +10,7 @@ use piper::data::{binary, synth::SynthConfig, utf8, Schema, SynthDataset};
 use piper::decode::{ParallelDecoder, ScalarDecoder};
 use piper::net::protocol::{read_frame, write_frame, Job, Tag};
 use piper::net::stream::{preprocess_buffered, WireFormat};
+use piper::pipeline::ExecStrategy;
 use piper::ops::Modulus;
 use piper::util::XorShift64;
 
@@ -54,10 +55,13 @@ fn zero_dense_or_zero_sparse_schemas() {
         let raw = utf8::encode_dataset(&ds);
         let out = ParallelDecoder::new(schema).decode(&raw);
         assert_eq!(out.rows, ds.rows, "schema {schema:?}");
-        // streaming path too
-        let cols =
-            preprocess_buffered(schema, Modulus::new(7), WireFormat::Utf8, &raw, 13).unwrap();
-        assert_eq!(cols.num_rows(), 50);
+        // streaming path too, under both strategies
+        for strategy in [ExecStrategy::TwoPass, ExecStrategy::Fused] {
+            let cols =
+                preprocess_buffered(schema, Modulus::new(7), WireFormat::Utf8, &raw, 13, strategy)
+                    .unwrap();
+            assert_eq!(cols.num_rows(), 50, "{strategy:?}");
+        }
     }
 }
 
@@ -71,7 +75,9 @@ fn adversarial_bytes_never_panic_decoders() {
         let _ = ScalarDecoder::new(schema).decode(&raw);
         let _ = ParallelDecoder::new(schema).decode(&raw);
         // streaming decoder with random chunking
-        let _ = preprocess_buffered(schema, Modulus::new(11), WireFormat::Utf8, &raw, 7);
+        let _ = preprocess_buffered(
+            schema, Modulus::new(11), WireFormat::Utf8, &raw, 7, ExecStrategy::Fused,
+        );
     }
 }
 
@@ -83,7 +89,9 @@ fn adversarial_binary_streams_error_cleanly() {
         let len = rng.below(1000) as usize;
         let raw: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
         // must either succeed (if length is row-aligned) or return Err
-        let res = preprocess_buffered(schema, Modulus::new(11), WireFormat::Binary, &raw, 64);
+        let res = preprocess_buffered(
+            schema, Modulus::new(11), WireFormat::Binary, &raw, 64, ExecStrategy::TwoPass,
+        );
         if len % schema.binary_row_bytes() == 0 {
             assert!(res.is_ok(), "aligned length {len} should parse");
         } else {

@@ -1,0 +1,250 @@
+//! The load-bearing acceptance suite of the execution-strategy
+//! refactor: for every executor (CPU baseline, GPU model, all three
+//! PIPER modes), every source kind and both input formats, the fused
+//! single-pass strategy must produce output **bit-identical** to the
+//! two-pass strategy — and must really run in one decode pass with zero
+//! source rewinds.
+//!
+//! CI runs this suite under `--release` so the fused hot path is
+//! exercised optimized.
+
+use piper::accel::{InputFormat, Mode};
+use piper::coordinator::Backend;
+use piper::cpu_baseline::ConfigKind;
+use piper::data::row::ProcessedColumns;
+use piper::data::{binary, synth::SynthConfig, utf8, SynthDataset};
+use piper::ops::PipelineSpec;
+use piper::pipeline::{
+    CountSink, ExecStrategy, FileSource, MemorySource, Pipeline, PipelineBuilder, ReaderSource,
+    Source, SynthSource,
+};
+
+const ROWS: usize = 350;
+const VOCAB: u32 = 997;
+
+fn dataset() -> SynthDataset {
+    SynthDataset::generate(SynthConfig::small(ROWS))
+}
+
+fn build(backend: &Backend, input: InputFormat, strategy: ExecStrategy) -> Pipeline {
+    PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .schema(dataset().schema())
+        .input(input)
+        .chunk_rows(64)
+        .strategy(strategy)
+        .executor(backend.executor())
+        .build()
+        .expect("planning must succeed")
+}
+
+/// Every backend of the comparison, including all three PIPER modes.
+fn all_backends(input: InputFormat) -> Vec<Backend> {
+    let cpu_kind = match input {
+        InputFormat::Utf8 => ConfigKind::I,
+        InputFormat::Binary => ConfigKind::III,
+    };
+    vec![
+        Backend::Cpu { kind: cpu_kind, threads: 4 },
+        Backend::Gpu,
+        Backend::Piper { mode: Mode::LocalDecodeInKernel },
+        Backend::Piper { mode: Mode::LocalDecodeInHost },
+        Backend::Piper { mode: Mode::Network },
+    ]
+}
+
+/// Source wrapper counting rewinds — the "zero rewinds in fused mode"
+/// regression pin.
+struct ResetMeter<S: Source> {
+    inner: S,
+    resets: usize,
+}
+
+impl<S: Source> Source for ResetMeter<S> {
+    fn format(&self) -> InputFormat {
+        self.inner.format()
+    }
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> piper::Result<bool> {
+        self.inner.next_chunk(max_bytes, buf)
+    }
+    fn can_rewind(&self) -> bool {
+        self.inner.can_rewind()
+    }
+    fn reset(&mut self) -> piper::Result<()> {
+        self.resets += 1;
+        self.inner.reset()
+    }
+}
+
+/// The refactor's core guarantee: fused == two-pass, bit for bit, for
+/// every executor × format × source kind.
+#[test]
+fn fused_equals_two_pass_all_executors_sources_formats() {
+    let ds = dataset();
+    for input in [InputFormat::Utf8, InputFormat::Binary] {
+        let raw = match input {
+            InputFormat::Utf8 => utf8::encode_dataset(&ds),
+            InputFormat::Binary => binary::encode_dataset(&ds),
+        };
+        let file = std::env::temp_dir().join(format!(
+            "piper-fused-eq-{}-{input:?}.dat",
+            std::process::id()
+        ));
+        std::fs::write(&file, &raw).unwrap();
+
+        for backend in all_backends(input) {
+            let fused = build(&backend, input, ExecStrategy::Fused);
+            let two_pass = build(&backend, input, ExecStrategy::TwoPass);
+
+            // Memory source (the reference run).
+            let mut src = MemorySource::new(&raw, input);
+            let (two_cols, two_report) = two_pass.run_collect(&mut src).unwrap();
+            let mut src = MemorySource::new(&raw, input);
+            let (fused_cols, fused_report) = fused.run_collect(&mut src).unwrap();
+            assert_eq!(
+                fused_cols, two_cols,
+                "{} {input:?}: fused output must be bit-identical to two-pass",
+                backend.name()
+            );
+            assert_eq!(fused_report.strategy, ExecStrategy::Fused);
+            assert_eq!(two_report.strategy, ExecStrategy::TwoPass);
+            assert_eq!(fused_report.decode_passes, 1, "{}", backend.name());
+            assert_eq!(two_report.decode_passes, 2, "{}", backend.name());
+            assert_eq!(fused_report.vocab_entries, two_report.vocab_entries);
+            assert_eq!(fused_report.rows, ROWS);
+
+            // File source through the same fused pipeline.
+            let mut fsrc = FileSource::open(&file, input).unwrap();
+            let (file_cols, _) = fused.run_collect(&mut fsrc).unwrap();
+            assert_eq!(file_cols, two_cols, "{} {input:?} / file", backend.name());
+
+            // Generator source — nothing materialized anywhere.
+            let mut synth = SynthSource::new(SynthConfig::small(ROWS), input);
+            let (synth_cols, _) = fused.run_collect(&mut synth).unwrap();
+            assert_eq!(synth_cols, two_cols, "{} {input:?} / synth", backend.name());
+        }
+        std::fs::remove_file(&file).ok();
+    }
+}
+
+/// Regression pin: a fused `gen_vocab` run performs exactly one decode
+/// pass and never calls `Source::reset`; the two-pass run rewinds once.
+#[test]
+fn fused_mode_never_rewinds() {
+    let ds = dataset();
+    let raw = utf8::encode_dataset(&ds);
+    for (strategy, want_resets, want_passes) in
+        [(ExecStrategy::Fused, 0usize, 1usize), (ExecStrategy::TwoPass, 1, 2)]
+    {
+        let pipeline =
+            build(&Backend::Cpu { kind: ConfigKind::I, threads: 2 }, InputFormat::Utf8, strategy);
+        let mut src = ResetMeter { inner: MemorySource::new(&raw, InputFormat::Utf8), resets: 0 };
+        let mut sink = CountSink::new();
+        let report = pipeline.run(&mut src, &mut sink).unwrap();
+        assert_eq!(src.resets, want_resets, "{strategy:?}");
+        assert_eq!(report.decode_passes, want_passes, "{strategy:?}");
+        assert_eq!(sink.rows, ROWS);
+    }
+}
+
+/// The builder defaults to fused for every backend that supports it —
+/// which is all of them.
+#[test]
+fn builder_defaults_to_fused_for_all_backends() {
+    for backend in all_backends(InputFormat::Utf8) {
+        let pipeline = PipelineBuilder::new()
+            .spec(PipelineSpec::dlrm(VOCAB))
+            .schema(dataset().schema())
+            .input(InputFormat::Utf8)
+            .executor(backend.executor())
+            .build()
+            .unwrap();
+        assert_eq!(
+            pipeline.plan().strategy,
+            ExecStrategy::Fused,
+            "{} should plan fused by default",
+            backend.name()
+        );
+    }
+}
+
+/// A one-shot (non-rewindable) source is accepted by a fused `gen_vocab`
+/// plan and rejected — at submission, with a clear error — by a two-pass
+/// one. This is the serving posture the fused strategy unlocks: stateful
+/// preprocessing over a stream that exists only once.
+#[test]
+fn one_shot_reader_source_requires_fused() {
+    let ds = dataset();
+    let raw = utf8::encode_dataset(&ds);
+
+    let cpu = Backend::Cpu { kind: ConfigKind::I, threads: 2 };
+    let fused = build(&cpu, InputFormat::Utf8, ExecStrategy::Fused);
+    let mut src = ReaderSource::new(std::io::Cursor::new(raw.clone()), InputFormat::Utf8);
+    let (cols, report) = fused.run_collect(&mut src).unwrap();
+    let mut mem = MemorySource::new(&raw, InputFormat::Utf8);
+    let two_pass = build(&cpu, InputFormat::Utf8, ExecStrategy::TwoPass);
+    let (want, _) = two_pass.run_collect(&mut mem).unwrap();
+    assert_eq!(cols, want, "fused over a one-shot reader must match");
+    assert_eq!(report.decode_passes, 1);
+
+    let mut src = ReaderSource::new(std::io::Cursor::new(raw.clone()), InputFormat::Utf8);
+    let err = two_pass.run_collect(&mut src);
+    assert!(err.is_err(), "two-pass over a one-shot source must fail at submission");
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("rewind"), "error should explain the rewind requirement: {msg}");
+}
+
+/// Custom operator graphs fuse too: every valid flag combination agrees
+/// across strategies (including genvocab-without-applyvocab, where the
+/// vocab builds but raw modulus values pass through).
+#[test]
+fn custom_specs_fuse_identically() {
+    let ds = dataset();
+    let raw = utf8::encode_dataset(&ds);
+    for spec in [
+        "modulus:97|genvocab|applyvocab",
+        "modulus:97|genvocab",
+        "modulus:97|genvocab|applyvocab|neg2zero|logarithm",
+        "modulus:53|neg2zero",
+    ] {
+        let run = |strategy: ExecStrategy| -> ProcessedColumns {
+            let pipeline = PipelineBuilder::new()
+                .spec_str(spec)
+                .unwrap()
+                .schema(ds.schema())
+                .input(InputFormat::Utf8)
+                .chunk_rows(64)
+                .strategy(strategy)
+                .executor(Backend::Cpu { kind: ConfigKind::I, threads: 3 }.executor())
+                .build()
+                .unwrap();
+            let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+            pipeline.run_collect(&mut src).unwrap().0
+        };
+        assert_eq!(run(ExecStrategy::Fused), run(ExecStrategy::TwoPass), "spec {spec}");
+    }
+}
+
+/// Chunk size must not change fused output (the vocab state spans
+/// chunks).
+#[test]
+fn fused_output_is_chunk_size_invariant() {
+    let ds = dataset();
+    let raw = utf8::encode_dataset(&ds);
+    let mut reference: Option<ProcessedColumns> = None;
+    for chunk_rows in [1usize, 7, 100, 1_000_000] {
+        let pipeline = PipelineBuilder::new()
+            .spec(PipelineSpec::dlrm(VOCAB))
+            .schema(ds.schema())
+            .input(InputFormat::Utf8)
+            .chunk_rows(chunk_rows)
+            .strategy(ExecStrategy::Fused)
+            .executor(Backend::Piper { mode: Mode::Network }.executor())
+            .build()
+            .unwrap();
+        let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+        let (cols, _) = pipeline.run_collect(&mut src).unwrap();
+        let expect = reference.get_or_insert_with(|| cols.clone());
+        assert_eq!(expect, &cols, "chunk_rows={chunk_rows}");
+    }
+}

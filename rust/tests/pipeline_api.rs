@@ -16,8 +16,8 @@ use piper::data::{binary, synth::SynthConfig, utf8, SynthDataset};
 use piper::gpu_sim::{self, GpuInput, GpuModel};
 use piper::ops::{Modulus, PipelineSpec};
 use piper::pipeline::{
-    serve_bytes, CountSink, FileSource, MemorySource, Pipeline, PipelineBuilder, Source,
-    SynthSource, TcpSource,
+    serve_bytes, CountSink, ExecStrategy, FileSource, MemorySource, Pipeline, PipelineBuilder,
+    Source, SynthSource, TcpSource,
 };
 use piper::report::TimeTag;
 
@@ -142,15 +142,44 @@ fn tcp_source_through_the_engine() {
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let payload = raw.clone();
-    // Two-pass plan ⇒ the dataset crosses the wire twice.
-    let server = std::thread::spawn(move || serve_bytes(&listener, &payload, 2));
+    // Fused plan (the default) ⇒ the dataset crosses the wire ONCE.
+    let server = std::thread::spawn(move || serve_bytes(&listener, &payload, 1));
 
     let pipeline = build(&Backend::Piper { mode: Mode::Network }, InputFormat::Utf8, 50);
+    assert_eq!(pipeline.plan().strategy, ExecStrategy::Fused);
     let mut src = TcpSource::connect(&addr, InputFormat::Utf8);
     let (cols, report) = pipeline.run_collect(&mut src).unwrap();
     server.join().unwrap().unwrap();
     assert_eq!(cols, reference);
     assert_eq!(report.tag, TimeTag::Sim);
+    assert_eq!(report.decode_passes, 1);
+}
+
+#[test]
+fn tcp_source_two_pass_crosses_the_wire_twice() {
+    let ds = dataset();
+    let raw = utf8::encode_dataset(&ds);
+    let reference = legacy_reference(&raw);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let payload = raw.clone();
+    let server = std::thread::spawn(move || serve_bytes(&listener, &payload, 2));
+
+    let pipeline = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .schema(ds.schema())
+        .input(InputFormat::Utf8)
+        .chunk_rows(50)
+        .strategy(ExecStrategy::TwoPass)
+        .executor(Backend::Piper { mode: Mode::Network }.executor())
+        .build()
+        .unwrap();
+    let mut src = TcpSource::connect(&addr, InputFormat::Utf8);
+    let (cols, report) = pipeline.run_collect(&mut src).unwrap();
+    server.join().unwrap().unwrap();
+    assert_eq!(cols, reference);
+    assert_eq!(report.decode_passes, 2);
 }
 
 /// Source wrapper that records the largest chunk the engine ever asked
@@ -173,6 +202,9 @@ impl<S: Source> Source for MeteredSource<S> {
         }
         Ok(got)
     }
+    fn can_rewind(&self) -> bool {
+        self.inner.can_rewind()
+    }
     fn reset(&mut self) -> piper::Result<()> {
         self.inner.reset()
     }
@@ -186,36 +218,44 @@ fn file_run_memory_is_bounded_by_chunk_rows_not_dataset() {
     std::fs::write(&file, &raw).unwrap();
 
     let chunk_rows = 100;
-    let pipeline = PipelineBuilder::new()
-        .spec(PipelineSpec::dlrm(VOCAB))
-        .schema(ds.schema())
-        .input(InputFormat::Utf8)
-        .chunk_rows(chunk_rows)
-        .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
-        .build()
-        .unwrap();
-    let chunk_bytes = pipeline.plan().chunk_bytes();
-    assert!(
-        (chunk_bytes as u64) < raw.len() as u64 / 4,
-        "test needs chunks much smaller than the dataset"
-    );
+    for strategy in [ExecStrategy::Fused, ExecStrategy::TwoPass] {
+        let pipeline = PipelineBuilder::new()
+            .spec(PipelineSpec::dlrm(VOCAB))
+            .schema(ds.schema())
+            .input(InputFormat::Utf8)
+            .chunk_rows(chunk_rows)
+            .strategy(strategy)
+            .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
+            .build()
+            .unwrap();
+        let chunk_bytes = pipeline.plan().chunk_bytes();
+        assert!(
+            (chunk_bytes as u64) < raw.len() as u64 / 4,
+            "test needs chunks much smaller than the dataset"
+        );
 
-    let mut src = MeteredSource {
-        inner: FileSource::open(&file, InputFormat::Utf8).unwrap(),
-        max_chunk: 0,
-        total: 0,
-    };
-    let mut sink = CountSink::new();
-    let report = pipeline.run(&mut src, &mut sink).unwrap();
+        let mut src = MeteredSource {
+            inner: FileSource::open(&file, InputFormat::Utf8).unwrap(),
+            max_chunk: 0,
+            total: 0,
+        };
+        let mut sink = CountSink::new();
+        let report = pipeline.run(&mut src, &mut sink).unwrap();
+
+        assert_eq!(sink.rows, 2_000);
+        // Raw input is only ever materialized in ≤ chunk_bytes pieces;
+        // the engine keeps at most a few of them in flight at once.
+        assert!(src.max_chunk <= chunk_bytes, "{} > {chunk_bytes}", src.max_chunk);
+        // The decode-pass count is exactly what crossed the file.
+        let passes = match strategy {
+            ExecStrategy::Fused => 1,
+            ExecStrategy::TwoPass => 2,
+        };
+        assert_eq!(src.total, passes * raw.len() as u64, "{strategy:?}");
+        assert_eq!(report.decode_passes, passes as usize);
+        assert!(report.chunks >= raw.len() / chunk_bytes, "chunked, not slurped");
+    }
     std::fs::remove_file(&file).ok();
-
-    assert_eq!(sink.rows, 2_000);
-    // Raw input is only ever materialized in ≤ chunk_bytes pieces; the
-    // engine keeps at most a few of them in flight at once.
-    assert!(src.max_chunk <= chunk_bytes, "{} > {chunk_bytes}", src.max_chunk);
-    // Two passes really streamed the whole file twice.
-    assert_eq!(src.total, 2 * raw.len() as u64);
-    assert!(report.chunks >= raw.len() / chunk_bytes, "chunked, not slurped");
 }
 
 #[test]

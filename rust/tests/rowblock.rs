@@ -88,6 +88,7 @@ fn partition_boundaries_match_unsliced_process() {
         input: InputFormat::Utf8,
         chunk_rows: 4096,
         channel_depth: 2,
+        strategy: piper::pipeline::ExecStrategy::TwoPass,
     };
     let mut state = piper::pipeline::ChunkState::new(&plan);
     state.observe(&block);
@@ -125,6 +126,9 @@ impl Source for PoolMeter {
         }
         self.inner.next_chunk(max_bytes, buf)
     }
+    fn can_rewind(&self) -> bool {
+        self.inner.can_rewind()
+    }
     fn reset(&mut self) -> piper::Result<()> {
         self.inner.reset()
     }
@@ -143,6 +147,7 @@ fn second_pass_reuses_pooled_buffers() {
         .input(InputFormat::Utf8)
         .chunk_rows(64) // many chunks per pass
         .channel_depth(depth)
+        .strategy(piper::pipeline::ExecStrategy::TwoPass) // the rewind under test
         .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
         .build()
         .unwrap();
