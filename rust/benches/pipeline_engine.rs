@@ -206,6 +206,88 @@ fn main() {
     t.print();
     println!();
 
+    // ---- decode-threads sweep (row-sharded SWAR decode scaling) --------
+    // The decode stage through the full engine: same plan, same
+    // executor, only `decode_threads` varies. Outputs are
+    // checksum-verified identical first; the table then reports the
+    // engine's decode/execute wallclock split, whose decode side is the
+    // ISSUE's ≥2×-at-4-threads acceptance gate. BENCH_JSON=path writes
+    // the sweep machine-readably (scripts/bench_snapshot.sh).
+    let mut t = Table::new(
+        &format!("decode-threads sweep — UTF-8, {rows} rows, median of {reps} [meas]"),
+        &["decode_threads", "decode", "rows/s (decode)", "wall", "speedup (decode)"],
+    );
+    let thread_sweep = [1usize, 2, 4, 8];
+    let mut sweep_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    let mut want_sum = None;
+    let mut base_decode = None;
+    for &threads in &thread_sweep {
+        let pipeline = PipelineBuilder::new()
+            .spec(PipelineSpec::dlrm(m.range))
+            .schema(ds.schema())
+            .input(InputFormat::Utf8)
+            .chunk_rows(64 * 1024)
+            .decode_threads(threads)
+            .executor(Backend::Cpu { kind: ConfigKind::I, threads: 1 }.executor())
+            .build()
+            .expect("plan");
+        // Correctness gate: decode_threads must not change one bit.
+        let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+        let (cols, _) = pipeline.run_collect(&mut src).expect("sweep run");
+        let sum = checksum(&cols);
+        drop(cols);
+        match want_sum {
+            None => want_sum = Some(sum),
+            Some(w) => assert_eq!(sum, w, "decode_threads={threads} changed the output"),
+        }
+        let mut decode_times = Vec::with_capacity(reps);
+        let mut walls = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+            let mut sink = CountSink::new();
+            let t0 = Instant::now();
+            let report = pipeline.run(&mut src, &mut sink).expect("sweep run");
+            walls.push(t0.elapsed());
+            decode_times.push(report.decode_time);
+        }
+        let decode = median(decode_times);
+        let wall = median(walls);
+        let decode_rps = rows as f64 / decode.as_secs_f64().max(1e-12);
+        let base = *base_decode.get_or_insert(decode);
+        t.row(&[
+            threads.to_string(),
+            fmt_duration(decode),
+            fmt_rows_per_sec(decode_rps),
+            fmt_duration(wall),
+            fmt_speedup(base.as_secs_f64() / decode.as_secs_f64().max(1e-12)),
+        ]);
+        sweep_rows.push((threads, decode.as_secs_f64(), decode_rps, wall.as_secs_f64()));
+    }
+    t.note("row-sharded SWAR decode (decode/ shard module); checksums asserted identical");
+    t.note("decode column = engine-measured wallclock inside the decode front");
+    t.print();
+    println!();
+
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        let mut json = String::from("{\n  \"bench\": \"pipeline_engine/decode_threads_sweep\",\n");
+        json.push_str(&format!("  \"rows\": {rows},\n  \"reps\": {reps},\n"));
+        json.push_str(&format!(
+            "  \"checksum\": \"{:#018x}\",\n  \"sweep\": [\n",
+            want_sum.unwrap()
+        ));
+        for (i, (threads, decode_s, decode_rps, wall_s)) in sweep_rows.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"decode_threads\": {threads}, \"decode_s\": {decode_s:.6}, \
+                 \"decode_rows_per_s\": {decode_rps:.0}, \"wall_s\": {wall_s:.6}}}{}\n",
+                if i + 1 < sweep_rows.len() { "," } else { "" }
+            ));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(&path, json).expect("writing BENCH_JSON");
+        println!("decode sweep written to {path}");
+        println!();
+    }
+
     // ---- generator-fed run: no materialized dataset anywhere -----------
     let gen_rows = rows.max(50_000);
     let pipeline = PipelineBuilder::new()

@@ -205,6 +205,7 @@ fn main() {
             chunk_rows: CHUNK_ROWS,
             channel_depth: 2,
             strategy: piper::pipeline::ExecStrategy::TwoPass,
+            decode_threads: 1,
         };
 
         // Correctness gate: identical checksums before timing anything.
@@ -245,4 +246,99 @@ fn main() {
     t.note("both paths: two passes (GenVocab rewind), identical checksums asserted");
     t.note("row-wise = pre-RowBlock engine: 2 heap Vecs/row + chunk staging memmove");
     t.print();
+    println!();
+
+    // ---- decode-threads × SWAR on/off sweep (decode stage only) --------
+    // The EXPERIMENTS.md §Decode ablation: the same UTF-8 buffer through
+    // the chunked decode front alone — scalar vs SWAR loop, 1..8 row
+    // shards — all eight combinations checksum-verified identical.
+    let raw = utf8::encode_dataset(&ds);
+    let schema = ds.schema();
+    let mb = raw.len() as f64 / (1024.0 * 1024.0);
+    let mut t = Table::new(
+        &format!(
+            "decode stage: SWAR × decode threads — UTF-8, {rows} rows \
+             ({mb:.1} MiB), median of {reps} [meas]"
+        ),
+        &["loop", "threads", "wallclock", "MiB/s", "speedup vs scalar-1"],
+    );
+    let mut want_sum = None;
+    let mut scalar1 = None;
+    for swar in [false, true] {
+        for threads in [1usize, 2, 4, 8] {
+            let (sum, n) = decode_only(schema, &raw, threads, swar);
+            assert_eq!(n, rows, "row count (swar={swar} threads={threads})");
+            match want_sum {
+                None => want_sum = Some(sum),
+                Some(w) => {
+                    assert_eq!(sum, w, "decode checksum (swar={swar} threads={threads})")
+                }
+            }
+            let d = median(
+                (0..reps)
+                    .map(|_| {
+                        let t0 = Instant::now();
+                        std::hint::black_box(decode_only(schema, &raw, threads, swar));
+                        t0.elapsed()
+                    })
+                    .collect(),
+            );
+            let base = *scalar1.get_or_insert(d);
+            t.row(&[
+                if swar { "SWAR".into() } else { "scalar".to_string() },
+                threads.to_string(),
+                fmt_duration(d),
+                format!("{:.0}", mb / d.as_secs_f64().max(1e-12)),
+                fmt_speedup(base.as_secs_f64() / d.as_secs_f64().max(1e-12)),
+            ]);
+        }
+    }
+    t.note("decode only: raw chunks → RowBlock, no GV/AV — the tentpole's scope");
+    t.note("all 8 combinations decode bit-identical blocks (checksummed)");
+    t.print();
+}
+
+/// Decode `raw` through the chunked front exactly like the engine (1 MiB
+/// chunks, one reused scratch block) and fold an order-sensitive
+/// checksum over every decoded block. Returns `(checksum, rows)`.
+fn decode_only(schema: Schema, raw: &[u8], threads: usize, swar: bool) -> (u64, usize) {
+    use piper::pipeline::DecodeOptions;
+    let mut dec = ChunkDecoder::with_options(
+        InputFormat::Utf8,
+        schema,
+        DecodeOptions { threads, swar },
+    );
+    let mut block = RowBlock::with_capacity(schema, CHUNK_ROWS);
+    let mut sum = 0xcbf29ce484222325u64;
+    let mut rows = 0usize;
+    let mut fold_block = |sum: &mut u64, block: &RowBlock| {
+        let mut mix = |v: u64| {
+            *sum ^= v;
+            *sum = sum.wrapping_mul(0x100000001b3);
+        };
+        for &l in block.labels() {
+            mix(l as u64);
+        }
+        for c in 0..schema.num_dense {
+            for &v in block.dense_col(c) {
+                mix(v as u64);
+            }
+        }
+        for c in 0..schema.num_sparse {
+            for &v in block.sparse_col(c) {
+                mix(v as u64);
+            }
+        }
+    };
+    for chunk in raw.chunks(1 << 20) {
+        block.clear();
+        dec.feed_into(chunk, &mut block).expect("utf8 decode is infallible");
+        rows += block.num_rows();
+        fold_block(&mut sum, &block);
+    }
+    block.clear();
+    dec.finish_into(&mut block).expect("utf8 finish is infallible");
+    rows += block.num_rows();
+    fold_block(&mut sum, &block);
+    (sum, rows)
 }

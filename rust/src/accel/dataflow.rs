@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use crate::data::row::ProcessedColumns;
 use crate::data::{binary, DecodedRow};
-use crate::decode::ParallelDecoder;
+use crate::decode::shard;
 use crate::ops::{log1p, DirectVocab, Vocab};
 use crate::Result;
 
@@ -58,10 +58,13 @@ pub struct KernelRun {
 /// Execute the kernel over a raw buffer.
 pub fn run_kernel(cfg: &PiperConfig, raw: &[u8]) -> Result<KernelRun> {
     // ---- functional: obtain decoded rows -----------------------------
+    // Row-sharded SWAR decode — bit-identical to
+    // `ParallelDecoder::with_width(cfg.schema, cfg.decode_width)` at
+    // every width (width changes modeled cycles, never rows), so the
+    // kernel's functional front end runs at software speed while the
+    // cycle model below stays pinned to `cfg.decode_width`.
     let rows: Vec<DecodedRow> = match cfg.input {
-        InputFormat::Utf8 => {
-            ParallelDecoder::with_width(cfg.schema, cfg.decode_width).decode(raw).rows
-        }
+        InputFormat::Utf8 => shard::decode_rows(cfg.schema, raw, shard::default_threads()),
         InputFormat::Binary => binary::decode_bytes(raw, cfg.schema)?,
     };
     let n_rows = rows.len();

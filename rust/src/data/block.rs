@@ -17,6 +17,30 @@
 use super::row::DecodedRow;
 use super::schema::Schema;
 
+/// A sink that accepts assembled rows as field slices — implemented by
+/// [`RowBlock`] (the engine's column-major currency), [`RowWindow`] (a
+/// disjoint row range of a block, the parallel decoder's target) and
+/// `Vec<DecodedRow>` (the one-shot decoders' row-wise view). The
+/// decoder's hot loop is generic over this, so every sink monomorphizes
+/// to the same zero-alloc inner loop.
+pub trait PushRow {
+    fn push_row(&mut self, label: i32, dense: &[i32], sparse: &[u32]);
+}
+
+impl PushRow for RowBlock {
+    #[inline]
+    fn push_row(&mut self, label: i32, dense: &[i32], sparse: &[u32]) {
+        RowBlock::push_row(self, label, dense, sparse);
+    }
+}
+
+impl PushRow for Vec<DecodedRow> {
+    #[inline]
+    fn push_row(&mut self, label: i32, dense: &[i32], sparse: &[u32]) {
+        self.push(DecodedRow { label, dense: dense.to_vec(), sparse: sparse.to_vec() });
+    }
+}
+
 /// One decoded chunk in column-major layout.
 ///
 /// Invariants: `dense.len() == num_dense * cap`,
@@ -162,6 +186,73 @@ impl RowBlock {
         self.len += n;
     }
 
+    /// Split the block's *next* rows into disjoint, independently
+    /// writable windows of the given sizes — the safe seam the
+    /// row-sharded parallel decoder writes through. The block grows (if
+    /// needed) and commits `sum(counts)` rows up front; each returned
+    /// [`RowWindow`] owns `&mut` column slices over its row range only,
+    /// so shard threads fill their ranges concurrently with no
+    /// post-merge memmove and the column-major stride-=-capacity
+    /// invariant holds throughout. Callers are expected to fill every
+    /// window completely; a window dropped short zero-fills its
+    /// remaining rows (FillMissing semantics) at drop time, so the
+    /// fully-filled fast path never pays a redundant plane memset.
+    pub fn disjoint_row_windows(&mut self, counts: &[usize]) -> Vec<RowWindow<'_>> {
+        let total: usize = counts.iter().sum();
+        let start = self.len;
+        if start + total > self.cap {
+            self.grow(start + total);
+        }
+        self.labels.resize(start + total, 0);
+        self.len = start + total;
+        let cap = self.cap;
+        let (nd, ns) = (self.schema.num_dense, self.schema.num_sparse);
+
+        let mut windows: Vec<RowWindow<'_>> = counts
+            .iter()
+            .map(|&c| RowWindow {
+                rows: c,
+                filled: 0,
+                labels: &mut [],
+                dense: Vec::with_capacity(nd),
+                sparse: Vec::with_capacity(ns),
+            })
+            .collect();
+
+        let mut rest: &mut [i32] = &mut self.labels[start..start + total];
+        for (w, &c) in windows.iter_mut().zip(counts) {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(c);
+            w.labels = head;
+            rest = tail;
+        }
+        // Window rows must be zero-initialized (FillMissing semantics for
+        // anything a shard leaves untouched) — the planes may hold stale
+        // values from a previous chunk decoded into the same scratch.
+        let mut plane: &mut [i32] = &mut self.dense;
+        for _ in 0..nd {
+            let (col, tail) = std::mem::take(&mut plane).split_at_mut(cap);
+            plane = tail;
+            let mut rest: &mut [i32] = &mut col[start..start + total];
+            for (w, &c) in windows.iter_mut().zip(counts) {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(c);
+                w.dense.push(head);
+                rest = tail;
+            }
+        }
+        let mut plane: &mut [u32] = &mut self.sparse;
+        for _ in 0..ns {
+            let (col, tail) = std::mem::take(&mut plane).split_at_mut(cap);
+            plane = tail;
+            let mut rest: &mut [u32] = &mut col[start..start + total];
+            for (w, &c) in windows.iter_mut().zip(counts) {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(c);
+                w.sparse.push(head);
+                rest = tail;
+            }
+        }
+        windows
+    }
+
     /// Row `r` as an owned [`DecodedRow`] — test/convenience view.
     pub fn row(&self, r: usize) -> DecodedRow {
         assert!(r < self.len, "row {r} out of {} rows", self.len);
@@ -184,6 +275,78 @@ impl RowBlock {
             b.push_row(row.label, &row.dense, &row.sparse);
         }
         b
+    }
+}
+
+/// One disjoint row range of a [`RowBlock`], independently writable —
+/// what [`RowBlock::disjoint_row_windows`] hands each decode shard.
+/// Holds `&mut` slices of the parent's column planes covering exactly
+/// this window's rows, so concurrent shard writes are safe Rust, not a
+/// synchronization argument.
+#[derive(Debug)]
+pub struct RowWindow<'a> {
+    /// Rows this window must receive.
+    rows: usize,
+    /// Rows received so far.
+    filled: usize,
+    labels: &'a mut [i32],
+    /// Per dense column: this window's row range of the column plane.
+    dense: Vec<&'a mut [i32]>,
+    /// Per sparse column: this window's row range of the column plane.
+    sparse: Vec<&'a mut [u32]>,
+}
+
+impl RowWindow<'_> {
+    /// Rows this window was sized for.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Rows pushed so far.
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// Has the window received every row it was sized for?
+    pub fn is_full(&self) -> bool {
+        self.filled == self.rows
+    }
+}
+
+impl Drop for RowWindow<'_> {
+    /// Unfilled rows must read as FillMissing zeros even though the
+    /// parent's planes may hold stale values from a previous chunk
+    /// decoded into the same scratch block. Zeroing only the shortfall
+    /// here keeps the common fully-filled case free of any extra plane
+    /// pass (every pushed row already wrote all its cells).
+    fn drop(&mut self) {
+        if self.filled == self.rows {
+            return;
+        }
+        let short = self.filled..self.rows;
+        self.labels[short.clone()].fill(0);
+        for col in &mut self.dense {
+            col[short.clone()].fill(0);
+        }
+        for col in &mut self.sparse {
+            col[short.clone()].fill(0);
+        }
+    }
+}
+
+impl PushRow for RowWindow<'_> {
+    #[inline]
+    fn push_row(&mut self, label: i32, dense: &[i32], sparse: &[u32]) {
+        let r = self.filled;
+        assert!(r < self.rows, "row window overflow: {} rows committed", self.rows);
+        self.labels[r] = label;
+        for (col, &v) in self.dense.iter_mut().zip(dense) {
+            col[r] = v;
+        }
+        for (col, &v) in self.sparse.iter_mut().zip(sparse) {
+            col[r] = v;
+        }
+        self.filled += 1;
     }
 }
 
@@ -258,6 +421,71 @@ mod tests {
         assert_eq!(b.capacity(), cap, "clear must not free the planes");
         b.append_binary(&binary::encode_dataset(&ds));
         assert_eq!(b.to_rows(), ds.rows);
+    }
+
+    #[test]
+    fn disjoint_windows_fill_disjoint_ranges() {
+        let schema = Schema::new(2, 2);
+        let ds = SynthDataset::generate(SynthConfig { schema, ..SynthConfig::small(30) });
+        let mut whole = RowBlock::from_rows(&ds.rows, schema);
+
+        let mut sharded = RowBlock::new(schema);
+        let counts = [11usize, 0, 7, 12];
+        let mut windows = sharded.disjoint_row_windows(&counts);
+        assert_eq!(windows.len(), 4);
+        // Fill out of order — disjointness means order cannot matter.
+        let mut start_of = [0usize; 4];
+        let mut acc = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            start_of[i] = acc;
+            acc += c;
+        }
+        for w_idx in [2usize, 0, 3, 1] {
+            let w = &mut windows[w_idx];
+            for r in 0..counts[w_idx] {
+                let row = &ds.rows[start_of[w_idx] + r];
+                w.push_row(row.label, &row.dense, &row.sparse);
+            }
+            assert!(w.is_full());
+        }
+        drop(windows);
+        assert_eq!(sharded.num_rows(), 30);
+        assert_eq!(sharded, whole);
+
+        // Appending after a window pass continues normally.
+        sharded.push_row(7, &[1, 2], &[3, 4]);
+        whole.push_row(7, &[1, 2], &[3, 4]);
+        assert_eq!(sharded, whole);
+    }
+
+    #[test]
+    fn disjoint_windows_zero_stale_plane_values() {
+        let schema = Schema::new(1, 1);
+        let mut b = RowBlock::with_capacity(schema, 8);
+        for i in 0..8i32 {
+            b.push_row(i, &[i + 100], &[i as u32 + 200]);
+        }
+        b.clear();
+        // Leave the second window untouched: its rows must read as
+        // FillMissing zeros, not the stale values above.
+        let mut windows = b.disjoint_row_windows(&[2, 3]);
+        windows[0].push_row(1, &[2], &[3]);
+        windows[0].push_row(4, &[5], &[6]);
+        drop(windows);
+        assert_eq!(b.num_rows(), 5);
+        assert_eq!(b.labels(), &[1, 4, 0, 0, 0]);
+        assert_eq!(b.dense_col(0), &[2, 5, 0, 0, 0]);
+        assert_eq!(b.sparse_col(0), &[3, 6, 0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row window overflow")]
+    fn overfilled_window_panics() {
+        let schema = Schema::new(1, 1);
+        let mut b = RowBlock::new(schema);
+        let mut windows = b.disjoint_row_windows(&[1]);
+        windows[0].push_row(1, &[1], &[1]);
+        windows[0].push_row(2, &[2], &[2]);
     }
 
     #[test]

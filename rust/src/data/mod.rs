@@ -15,7 +15,7 @@ pub mod schema;
 pub mod synth;
 pub mod utf8;
 
-pub use block::RowBlock;
+pub use block::{PushRow, RowBlock, RowWindow};
 pub use row::{DecodedRow, ProcessedRow};
 pub use schema::Schema;
 pub use synth::{RowGen, SynthConfig, SynthDataset};

@@ -158,8 +158,20 @@ impl RowGen {
     }
 
     /// Next row plus its per-field missing mask; `None` after
-    /// `config.rows` rows.
+    /// `config.rows` rows. Allocates the row's field `Vec`s — use
+    /// [`Self::next_row_into`] on hot paths.
     pub fn next_row(&mut self) -> Option<(DecodedRow, u64)> {
+        let mut row = DecodedRow { label: 0, dense: Vec::new(), sparse: Vec::new() };
+        self.next_row_into(&mut row).map(|mask| (row, mask))
+    }
+
+    /// Generate the next row into a caller-owned scratch row (cleared
+    /// and refilled; its buffers are reused across calls), returning
+    /// the per-field missing mask. The alloc-free form of
+    /// [`Self::next_row`] — a [`crate::pipeline::SynthSource`] keeps
+    /// one persistent scratch row so synthetic-input benches measure
+    /// decode, not generator allocation.
+    pub fn next_row_into(&mut self, row: &mut DecodedRow) -> Option<u64> {
         if self.emitted >= self.config.rows {
             return None;
         }
@@ -167,36 +179,38 @@ impl RowGen {
         let schema = self.config.schema;
         let rng = &mut self.rng;
         let mut mask = 0u64;
-        let label = i32::from(rng.chance(0.25));
+        row.label = i32::from(rng.chance(0.25));
 
-        let mut dense = Vec::with_capacity(schema.num_dense);
+        row.dense.clear();
+        row.dense.reserve(schema.num_dense);
         for d in 0..schema.num_dense {
             if rng.chance(self.config.missing_rate) {
                 mask |= 1 << d;
-                dense.push(0); // FillMissing default (paper: 0)
+                row.dense.push(0); // FillMissing default (paper: 0)
                 continue;
             }
             // log-normal-ish counts: exp of a half-gaussian, scaled.
             let mag = (rng.gaussian().abs() * self.config.dense_scale) as i64;
             let v = if rng.chance(self.config.negative_rate) { -mag - 1 } else { mag };
-            dense.push(v as i32);
+            row.dense.push(v as i32);
         }
 
-        let mut sparse = Vec::with_capacity(schema.num_sparse);
+        row.sparse.clear();
+        row.sparse.reserve(schema.num_sparse);
         for (s, (zipf, salt)) in self.sparse_cols.iter().enumerate() {
             if rng.chance(self.config.missing_rate) {
                 mask |= 1 << (schema.num_dense + s);
-                sparse.push(0);
+                row.sparse.push(0);
                 continue;
             }
             let rank = zipf.sample(rng);
             // Hash the rank into a 32-bit value — what Criteo's
             // anonymization does ("hashed string values", paper §4.1).
             let h = splitmix(rank ^ salt);
-            sparse.push((h >> 32) as u32);
+            row.sparse.push((h >> 32) as u32);
         }
 
-        Some((DecodedRow { label, dense, sparse }, mask))
+        Some(mask)
     }
 }
 
@@ -253,6 +267,20 @@ mod tests {
         }
         assert!(gen.next_row().is_none());
         assert_eq!(gen.remaining(), 0);
+    }
+
+    #[test]
+    fn next_row_into_reuses_scratch_and_matches() {
+        let cfg = SynthConfig::small(120);
+        let ds = SynthDataset::generate(cfg.clone());
+        let mut gen = RowGen::new(cfg);
+        let mut scratch = DecodedRow { label: 0, dense: Vec::new(), sparse: Vec::new() };
+        for r in 0..120 {
+            let mask = gen.next_row_into(&mut scratch).unwrap();
+            assert_eq!(scratch, ds.rows[r], "row {r}");
+            assert_eq!(mask, ds.missing[r], "mask {r}");
+        }
+        assert!(gen.next_row_into(&mut scratch).is_none());
     }
 
     #[test]

@@ -1,27 +1,47 @@
 //! UTF-8 decoding: the paper's `Decode` + `FillMissing` operators.
 //!
-//! Two implementations, bit-exact to each other:
+//! Three implementations, bit-exact to each other:
 //!
 //! * [`scalar`] — the byte-at-a-time state machine of paper Fig. 6
 //!   (II = 1 cycle/byte on the FPGA ⇒ ~300 MB/s at 300 MHz, the paper's
-//!   identified bottleneck);
+//!   identified bottleneck); kept branch-by-branch simple because it is
+//!   the bit-exactness **oracle** every faster path is pinned against;
 //! * [`parallel`] — the 4-byte-per-cycle combination decoder of paper
 //!   Script 1 (generalized to width 1/2/4/8 for the ablation bench).
+//!   Its *cycle model* is unchanged by any software optimization; its
+//!   software fast path now runs the [`swar`] wide-word loop;
+//! * [`swar`] + [`shard`] — the software throughput path: a SWAR
+//!   classifier finds delimiter/minus/illegal bytes 8 bytes at a time
+//!   and folds nibble runs in word-sized gulps, and the shard module
+//!   splits a chunk at `\n` boundaries to decode row shards on threads
+//!   into disjoint ranges of one [`crate::data::RowBlock`].
 //!
-//! Both consume raw bytes and produce decoded rows with missing fields
-//! already filled with 0 (on hardware there is no `Null`, paper §3.1),
-//! plus a cycle count for the accelerator timing model. The shared
-//! [`RowAssembler`] writes completed rows either into a column-major
-//! [`RowBlock`] (the engine's zero-alloc streaming path) or into
-//! [`DecodedRow`]s (the one-shot decoders' legacy view).
+//! All paths consume raw bytes and produce decoded rows with missing
+//! fields already filled with 0 (on hardware there is no `Null`, paper
+//! §3.1), plus — for the one-shot decoders — a cycle count for the
+//! accelerator timing model. The shared [`RowAssembler`] writes
+//! completed rows into any [`PushRow`] sink: a column-major
+//! [`crate::data::RowBlock`] (the engine's zero-alloc streaming path),
+//! a [`crate::data::RowWindow`] (the parallel path's disjoint slice of
+//! a block) or a `Vec<DecodedRow>` (the one-shot decoders' legacy
+//! view).
+//!
+//! Illegal bytes are skipped non-panicking (hardware would flag an
+//! error line) but are now *recorded*: every path logs the byte and its
+//! absolute offset in the fed stream ([`IllegalLog`]), so a sharded
+//! decode reports positions within the original chunk, never within a
+//! shard.
 
 pub mod parallel;
 pub mod scalar;
+pub mod shard;
+pub mod swar;
 
-use crate::data::{DecodedRow, RowBlock, Schema};
+use crate::data::{DecodedRow, PushRow, Schema};
 
 pub use parallel::ParallelDecoder;
 pub use scalar::ScalarDecoder;
+pub use shard::ShardedUtf8Decoder;
 
 /// Byte classes of the raw format (paper §3.2: only `\t \n - 0-9 a-f`
 /// can appear).
@@ -51,10 +71,12 @@ pub fn classify(b: u8) -> ByteClass {
     }
 }
 
-// Byte-class codes for the hot loop: 0..=15 nibble value, then specials.
-// In hardware this is the one-cycle combinational classifier; in software
-// it is a 256-entry table lookup, which is what lets the per-byte loop
-// run branch-lean (EXPERIMENTS.md §Perf).
+// Byte-class codes for the scalar loop: 0..=15 nibble value, then
+// specials. In hardware this is the one-cycle combinational classifier;
+// in software it is a 256-entry table lookup, which keeps the per-byte
+// oracle loop branch-lean (EXPERIMENTS.md §Perf). The SWAR fast path
+// replaces the per-byte lookup with [`swar::nibble_mask`] over whole
+// words and only consults the LUT at special bytes.
 const CODE_TAB: u8 = 16;
 const CODE_NL: u8 = 17;
 const CODE_MINUS: u8 = 18;
@@ -78,6 +100,60 @@ const CLASS_LUT: [u8; 256] = {
     t
 };
 
+/// One skipped illegal byte: its value and its absolute offset in the
+/// byte stream fed so far (for a sharded decode, offsets are relative
+/// to the original chunk/stream, never to a shard —
+/// [`RowAssembler::set_stream_offset`] rebases each shard's assembler).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IllegalByte {
+    pub offset: u64,
+    pub byte: u8,
+}
+
+/// Detail cap of [`IllegalLog`]: garbage input must not grow memory
+/// without bound, so only the first bytes are recorded individually
+/// while `total` keeps counting.
+pub const MAX_RECORDED_ILLEGAL: usize = 64;
+
+/// Record of the illegal bytes a decode skipped: the first
+/// [`MAX_RECORDED_ILLEGAL`] in stream order, plus the total count.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IllegalLog {
+    /// The first illegal bytes, in stream order.
+    pub recorded: Vec<IllegalByte>,
+    /// Total illegal bytes seen (may exceed `recorded.len()`).
+    pub total: u64,
+}
+
+impl IllegalLog {
+    #[inline]
+    pub fn note(&mut self, offset: u64, byte: u8) {
+        if self.recorded.len() < MAX_RECORDED_ILLEGAL {
+            self.recorded.push(IllegalByte { offset, byte });
+        }
+        self.total += 1;
+    }
+
+    /// Append another log's entries (stream order: `other` follows
+    /// `self`). Per-shard prefix truncation followed by this merge
+    /// equals global prefix truncation, because a shard only drops
+    /// entries once it has recorded [`MAX_RECORDED_ILLEGAL`] of its
+    /// own — all of which precede the dropped ones globally.
+    pub fn merge(&mut self, other: &IllegalLog) {
+        for b in &other.recorded {
+            if self.recorded.len() == MAX_RECORDED_ILLEGAL {
+                break;
+            }
+            self.recorded.push(*b);
+        }
+        self.total += other.total;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+}
+
 /// Shared row-assembly state machine: accumulates nibbles into the 32-bit
 /// register, finalizes fields on delimiters, assembles rows.
 ///
@@ -85,14 +161,16 @@ const CLASS_LUT: [u8; 256] = {
 /// the column counter against the [`Schema`] — "what we should know in
 /// advance is the data format for each feature" (paper §3.2).
 ///
-/// Completed rows go to a caller-provided column-major [`RowBlock`]
+/// Completed rows go to any caller-provided [`PushRow`] sink
 /// ([`Self::feed_bytes_into`] / [`Self::finish_into`] — the engine's
 /// zero-alloc path: the assembler owns one fixed scratch row and never
-/// allocates per row). The row-wise API ([`Self::feed_bytes`],
-/// [`Self::take_rows`], [`Self::finish`]) materializes [`DecodedRow`]s
-/// directly (two heap `Vec`s per row, the pre-`RowBlock` cost) — kept
-/// for the one-shot decoders, tests, and as the faithful baseline the
-/// `rows_columnar` bench measures against.
+/// allocates per row). [`Self::feed_bytes_into`] runs the SWAR
+/// wide-word loop; [`Self::feed_bytes_scalar_into`] is the same state
+/// machine one byte at a time (the ablation baseline). The row-wise API
+/// ([`Self::feed_bytes`], [`Self::take_rows`], [`Self::finish`])
+/// materializes [`DecodedRow`]s directly (two heap `Vec`s per row, the
+/// pre-`RowBlock` cost) — kept byte-at-a-time as the faithful oracle
+/// for the one-shot [`ScalarDecoder`] and the `rows_columnar` baseline.
 #[derive(Debug)]
 pub struct RowAssembler {
     schema: Schema,
@@ -103,7 +181,7 @@ pub struct RowAssembler {
     /// Current column index (0 = label, then dense, then sparse).
     col: usize,
     /// Cached accumulate mode of the current column (avoids re-deriving
-    /// it per nibble — §Perf).
+    /// it per nibble — EXPERIMENTS.md §Perf).
     hex_mode: bool,
     cur_label: i32,
     cur_dense: Vec<i32>,
@@ -111,6 +189,11 @@ pub struct RowAssembler {
     /// Rows completed through the row-wise API only; the `_into`
     /// methods bypass it entirely.
     out: Vec<DecodedRow>,
+    /// Absolute offset of the next byte to be fed — the base for
+    /// illegal-byte positions. Advances with every feed; shard decoding
+    /// rebases it per shard via [`Self::set_stream_offset`].
+    stream_offset: u64,
+    illegal: IllegalLog,
 }
 
 impl RowAssembler {
@@ -125,7 +208,31 @@ impl RowAssembler {
             cur_dense: vec![0; schema.num_dense],
             cur_sparse: vec![0; schema.num_sparse],
             out: Vec::new(),
+            stream_offset: 0,
+            illegal: IllegalLog::default(),
         }
+    }
+
+    pub fn schema(&self) -> Schema {
+        self.schema
+    }
+
+    /// Rebase the absolute offset used for illegal-byte positions: a
+    /// shard's assembler reports offsets within the *original* chunk,
+    /// so the shard decoder sets this to the shard's start offset.
+    pub fn set_stream_offset(&mut self, offset: u64) {
+        self.stream_offset = offset;
+    }
+
+    /// Illegal bytes skipped so far (absolute offsets).
+    pub fn illegal(&self) -> &IllegalLog {
+        &self.illegal
+    }
+
+    /// Drain the illegal-byte log (the shard decoder aggregates shard
+    /// logs in stream order).
+    pub fn take_illegal(&mut self) -> IllegalLog {
+        std::mem::take(&mut self.illegal)
     }
 
     #[inline]
@@ -138,53 +245,143 @@ impl RowAssembler {
         };
     }
 
-    /// The hot loop: feed a raw byte slice through the LUT classifier
-    /// (see [`classify`] for the byte-class semantics), appending every
-    /// completed row to `out` — this is what the streaming engine calls
-    /// (EXPERIMENTS.md §Perf). No allocation happens per row: fields
-    /// accumulate in the assembler's scratch row, and `finish_row_into`
-    /// writes it column-wise into the block. Illegal bytes are skipped
-    /// non-panicking (hardware would flag an error line), so fuzzed
-    /// inputs can't crash the PE.
     #[inline]
-    pub fn feed_bytes_into(&mut self, bytes: &[u8], out: &mut RowBlock) {
-        for &b in bytes {
-            let code = CLASS_LUT[b as usize];
-            if code < 16 {
-                self.push_nibble(code);
-            } else if code == CODE_TAB {
-                self.finish_field();
-            } else if code == CODE_NL {
-                self.finish_field();
-                self.finish_row_into(out);
-            } else if code == CODE_MINUS {
-                self.negative_flag = true;
-            }
-            // CODE_ILLEGAL: skipped
+    fn note_illegal(&mut self, rel: usize, byte: u8) {
+        self.illegal.note(self.stream_offset + rel as u64, byte);
+    }
+
+    /// Emit the scratch row into the sink and reset it.
+    #[inline]
+    fn emit_row<S: PushRow + ?Sized>(&mut self, out: &mut S) {
+        out.push_row(self.cur_label, &self.cur_dense, &self.cur_sparse);
+        self.reset_row();
+    }
+
+    /// One classified byte through the state machine — THE byte-class
+    /// dispatch, shared by the scalar loop, the SWAR loop's special
+    /// bytes and its sub-word tail, so the SWAR == scalar bit-exactness
+    /// contract has a single point of truth. `rel` is the byte's offset
+    /// within the current feed (for the illegal log).
+    #[inline]
+    fn step<S: PushRow + ?Sized>(&mut self, rel: usize, b: u8, out: &mut S) {
+        let code = CLASS_LUT[b as usize];
+        if code < 16 {
+            self.push_nibble(code);
+        } else if code == CODE_TAB {
+            self.finish_field();
+        } else if code == CODE_NL {
+            self.finish_field();
+            self.emit_row(out);
+        } else if code == CODE_MINUS {
+            self.negative_flag = true;
+        } else {
+            self.note_illegal(rel, b);
         }
     }
 
-    /// Row-wise feed: the same classifier loop, materializing each
-    /// completed row as a [`DecodedRow`] (two allocations per row —
+    /// The hot loop: the SWAR wide-word classifier over `bytes`,
+    /// appending every completed row to `out` — this is what the
+    /// streaming engine calls (EXPERIMENTS.md §Decode). Each 8-byte
+    /// word is classified branch-free ([`swar::nibble_mask`]); a word
+    /// with no special bytes folds all 8 nibbles into the register in
+    /// one gulp, and words with specials gulp the nibble runs between
+    /// them. No allocation happens per row: fields accumulate in the
+    /// assembler's scratch row, and `emit_row` writes it column-wise
+    /// into the sink. Illegal bytes are skipped non-panicking and
+    /// logged with their absolute offset, so fuzzed inputs can't crash
+    /// the PE. Bit-exact to [`Self::feed_bytes_scalar_into`] for all
+    /// 256 byte values (pinned by `tests/decode_equivalence.rs`).
+    #[inline]
+    pub fn feed_bytes_into<S: PushRow + ?Sized>(&mut self, bytes: &[u8], out: &mut S) {
+        let mut words = bytes.chunks_exact(8);
+        let mut pos = 0usize;
+        for word in words.by_ref() {
+            let w = u64::from_le_bytes(word.try_into().expect("8-byte word"));
+            let specials = swar::HI & !swar::nibble_mask(w);
+            if specials == 0 {
+                self.gulp(word);
+            } else {
+                self.fold_word(word, specials, pos, out);
+            }
+            pos += 8;
+        }
+        for (j, &b) in words.remainder().iter().enumerate() {
+            self.step(pos + j, b, out);
+        }
+        self.stream_offset += bytes.len() as u64;
+    }
+
+    /// Fold a run of 1..=8 nibble bytes into the register in one step —
+    /// the software form of Script 1's combinational merge. Equivalent
+    /// to `push_nibble` per byte: hex runs OR into a left-shifted
+    /// register (`u32` truncation discards overflow exactly like eight
+    /// single shifts), decimal runs use `reg·10^k + D mod 2^32`, which
+    /// equals `k` wrapping `reg = reg*10 + d` steps by distributivity.
+    #[inline]
+    fn gulp(&mut self, run: &[u8]) {
+        let k = run.len();
+        debug_assert!((1..=8).contains(&k));
+        let vals = swar::nibble_values(swar::load_le(run));
+        if self.hex_mode {
+            let packed = swar::pack_hex(vals) >> (4 * (8 - k));
+            self.reg = (((self.reg as u64) << (4 * k)) | packed as u64) as u32;
+        } else {
+            let d = swar::fold_dec(vals << (8 * (8 - k)));
+            self.reg = self.reg.wrapping_mul(swar::POW10[k]).wrapping_add(d);
+        }
+    }
+
+    /// Slow lane of the SWAR loop: a word containing at least one
+    /// special byte. Nibble runs between specials still fold in gulps;
+    /// each special byte is resolved through the scalar classifier.
+    fn fold_word<S: PushRow + ?Sized>(
+        &mut self,
+        word: &[u8],
+        mut specials: u64,
+        base: usize,
+        out: &mut S,
+    ) {
+        let mut i = 0usize;
+        while specials != 0 {
+            let sp = (specials.trailing_zeros() >> 3) as usize;
+            if sp > i {
+                self.gulp(&word[i..sp]);
+            }
+            self.step(base + sp, word[sp], out);
+            i = sp + 1;
+            specials &= specials - 1;
+        }
+        if i < word.len() {
+            self.gulp(&word[i..]);
+        }
+    }
+
+    /// The scalar hot loop: one LUT lookup per byte — the pre-SWAR
+    /// engine path, kept as the streaming oracle and the "SWAR off" arm
+    /// of the ablation benches.
+    pub fn feed_bytes_scalar_into<S: PushRow + ?Sized>(&mut self, bytes: &[u8], out: &mut S) {
+        for (j, &b) in bytes.iter().enumerate() {
+            self.step(j, b, out);
+        }
+        self.stream_offset += bytes.len() as u64;
+    }
+
+    /// Row-wise feed: the byte-at-a-time classifier loop, materializing
+    /// each completed row as a [`DecodedRow`] (two allocations per row —
     /// exactly the representation the columnar engine retired; kept
-    /// un-degraded so the one-shot decoders and the `rows_columnar`
+    /// un-degraded so the one-shot scalar oracle and the `rows_columnar`
     /// baseline measure the true pre-`RowBlock` cost).
     #[inline]
     pub fn feed_bytes(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            let code = CLASS_LUT[b as usize];
-            if code < 16 {
-                self.push_nibble(code);
-            } else if code == CODE_TAB {
-                self.finish_field();
-            } else if code == CODE_NL {
-                self.finish_field();
-                self.finish_row_vec();
-            } else if code == CODE_MINUS {
-                self.negative_flag = true;
-            }
-            // CODE_ILLEGAL: skipped
+        // Same single-point-of-truth dispatch, sinking into the
+        // assembler's own row buffer (briefly moved out so `step` can
+        // borrow it as the sink).
+        let mut out = std::mem::take(&mut self.out);
+        for (j, &b) in bytes.iter().enumerate() {
+            self.step(j, b, &mut out);
         }
+        self.out = out;
+        self.stream_offset += bytes.len() as u64;
     }
 
     /// (c) of paper §3.2: extract the register on a delimiter. An empty
@@ -223,12 +420,6 @@ impl RowAssembler {
     }
 
     #[inline]
-    fn finish_row_into(&mut self, out: &mut RowBlock) {
-        out.push_row(self.cur_label, &self.cur_dense, &self.cur_sparse);
-        self.reset_row();
-    }
-
-    #[inline]
     fn finish_row_vec(&mut self) {
         self.out.push(DecodedRow {
             label: self.cur_label,
@@ -248,13 +439,13 @@ impl RowAssembler {
     /// the open row. Callers that fed via [`Self::feed_bytes_into`] must
     /// finish through here (any row-wise-fed rows are appended first,
     /// in order).
-    pub fn finish_into(mut self, out: &mut RowBlock) {
-        for row in &self.out {
+    pub fn finish_into<S: PushRow + ?Sized>(mut self, out: &mut S) {
+        for row in std::mem::take(&mut self.out) {
             out.push_row(row.label, &row.dense, &row.sparse);
         }
         if self.col != 0 || self.reg != 0 || self.negative_flag {
             self.finish_field();
-            self.finish_row_into(out);
+            self.emit_row(out);
         }
     }
 
@@ -274,17 +465,20 @@ impl RowAssembler {
 
 /// Output of a decoder run: the rows plus the cycle count of the modeled
 /// hardware unit (used by [`crate::accel`]'s timing model; meaningless
-/// for pure-software use).
+/// for pure-software use) and the illegal bytes the run skipped.
 #[derive(Debug)]
 pub struct DecodeOutput {
     pub rows: Vec<DecodedRow>,
     /// Modeled FPGA cycles consumed by the decode PE.
     pub cycles: u64,
+    /// Illegal bytes skipped, with absolute offsets in `raw`.
+    pub illegal: IllegalLog,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::RowBlock;
 
     #[test]
     fn classify_all_legal() {
@@ -297,5 +491,44 @@ mod tests {
         assert_eq!(classify(b'f'), ByteClass::Nibble(15));
         assert_eq!(classify(b'g'), ByteClass::Illegal);
         assert_eq!(classify(b' '), ByteClass::Illegal);
+    }
+
+    #[test]
+    fn illegal_log_caps_details_but_counts_all() {
+        let mut log = IllegalLog::default();
+        for i in 0..(MAX_RECORDED_ILLEGAL as u64 + 10) {
+            log.note(i, b'!');
+        }
+        assert_eq!(log.recorded.len(), MAX_RECORDED_ILLEGAL);
+        assert_eq!(log.total, MAX_RECORDED_ILLEGAL as u64 + 10);
+        assert_eq!(log.recorded[0].offset, 0);
+    }
+
+    #[test]
+    fn illegal_merge_preserves_stream_order_prefix() {
+        let mut a = IllegalLog::default();
+        a.note(3, b'x');
+        let mut b = IllegalLog::default();
+        b.note(9, b'y');
+        b.note(11, b'z');
+        a.merge(&b);
+        assert_eq!(a.total, 3);
+        assert_eq!(a.recorded.iter().map(|i| i.offset).collect::<Vec<_>>(), vec![3, 9, 11]);
+    }
+
+    #[test]
+    fn swar_feed_records_offsets_like_scalar() {
+        let schema = Schema::new(1, 1);
+        let raw = b"1\t4 2\t00x0ff\n9\t!8\taa\n";
+        let mut swar_asm = RowAssembler::new(schema);
+        let mut swar_rows = RowBlock::new(schema);
+        swar_asm.feed_bytes_into(raw, &mut swar_rows);
+        let mut scalar_asm = RowAssembler::new(schema);
+        let mut scalar_rows = RowBlock::new(schema);
+        scalar_asm.feed_bytes_scalar_into(raw, &mut scalar_rows);
+        assert_eq!(swar_asm.illegal(), scalar_asm.illegal());
+        assert_eq!(swar_rows.to_rows(), scalar_rows.to_rows());
+        let offsets: Vec<u64> = swar_asm.illegal().recorded.iter().map(|i| i.offset).collect();
+        assert_eq!(offsets, vec![3, 8, 15]); // ' ', 'x', '!'
     }
 }

@@ -48,15 +48,22 @@ impl ParallelDecoder {
     /// The group fold is associative over the byte stream (each group's
     /// effect is exactly the left-to-right byte fold carrying the
     /// register), so functionally the whole buffer can be fed in one
-    /// pass — the group structure only determines the cycle count. This
-    /// avoids per-4-byte loop overhead in software (§Perf);
-    /// [`Self::fold_group`] remains the faithful per-cycle form and the
-    /// property tests assert both produce identical rows.
+    /// pass — the group structure only determines the cycle count. The
+    /// software pass is the SWAR wide-word loop
+    /// ([`RowAssembler::feed_bytes_into`], the genuine software
+    /// combination decoder — EXPERIMENTS.md §Decode); the cycle model
+    /// is untouched by it, because modeled cycles are a property of the
+    /// hardware width, not of simulator speed. [`Self::fold_group`]
+    /// remains the faithful per-cycle form and the property tests
+    /// assert both produce identical rows and cycles.
     pub fn decode(&self, raw: &[u8]) -> DecodeOutput {
         let mut asm = RowAssembler::new(self.schema);
-        asm.feed_bytes(raw);
+        let mut rows: Vec<DecodedRow> = Vec::new();
+        asm.feed_bytes_into(raw, &mut rows);
         let cycles = (raw.len() as u64).div_ceil(self.width as u64);
-        DecodeOutput { rows: asm.finish(), cycles }
+        let illegal = asm.take_illegal();
+        asm.finish_into(&mut rows);
+        DecodeOutput { rows, cycles, illegal }
     }
 
     /// The faithful per-cycle decode: fold group by group (slower in
@@ -69,7 +76,8 @@ impl ParallelDecoder {
             cycles += 1;
             self.fold_group(group, &mut asm);
         }
-        DecodeOutput { rows: asm.finish(), cycles }
+        let illegal = asm.take_illegal();
+        DecodeOutput { rows: asm.finish(), cycles, illegal }
     }
 
     /// Fold one W-byte group into the assembler.

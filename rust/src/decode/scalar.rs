@@ -27,7 +27,8 @@ impl ScalarDecoder {
     pub fn decode(&self, raw: &[u8]) -> DecodeOutput {
         let mut asm = RowAssembler::new(self.schema);
         asm.feed_bytes(raw);
-        DecodeOutput { rows: asm.finish(), cycles: raw.len() as u64 }
+        let illegal = asm.take_illegal();
+        DecodeOutput { rows: asm.finish(), cycles: raw.len() as u64, illegal }
     }
 
     /// Decode a single line (no trailing newline required).

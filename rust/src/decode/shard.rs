@@ -1,0 +1,319 @@
+//! Row-sharded parallel UTF-8 decode: split a raw chunk at `\n`
+//! boundaries and decode the shards on scoped threads, each writing
+//! into a disjoint row range of one shared [`RowBlock`].
+//!
+//! This is the software counterpart of scaling Piper's PE array: where
+//! the paper widens the combination decoder (Script 1) to raise
+//! bytes/cycle, the engine raises bytes/second by running the SWAR
+//! decoder on `N` row shards at once. The split is cheap and exact:
+//!
+//! 1. a SWAR newline scan picks shard boundaries at `\n` bytes near the
+//!    even byte-split points (shards always hold whole rows);
+//! 2. a prefix row-count pass ([`swar::count_newlines`]) sizes each
+//!    shard's row range — every `\n` emits exactly one row, so the
+//!    count is exact before any field is parsed;
+//! 3. [`RowBlock::disjoint_row_windows`] commits the rows and hands
+//!    each thread `&mut` column slices over its range only — no
+//!    post-merge memmove, no locks, and the column-major
+//!    stride-=-capacity invariant holds throughout.
+//!
+//! Bit-exactness falls out of the state machine: the assembler's
+//! carried state is fully reset after every `\n`, so a fresh
+//! [`RowAssembler`] per shard reproduces the sequential decode exactly,
+//! for *any* input bytes (pinned against the scalar oracle by
+//! `tests/decode_equivalence.rs`). Illegal-byte offsets are rebased per
+//! shard ([`RowAssembler::set_stream_offset`]) so errors report
+//! positions within the original stream, never within a shard.
+
+use std::ops::Range;
+
+use crate::data::{DecodedRow, RowBlock, Schema};
+
+use super::{swar, IllegalLog, RowAssembler};
+
+/// Don't spin up a shard for less than this many bytes — below it the
+/// scoped-thread overhead outweighs the decode (EXPERIMENTS.md §Decode).
+const MIN_SHARD_BYTES: usize = 16 * 1024;
+
+/// Streaming UTF-8 decoder that survives arbitrary chunk boundaries and
+/// decodes each chunk's interior rows on `threads` scoped threads.
+/// `threads <= 1` is exactly the sequential engine path (one persistent
+/// assembler); `swar = false` selects the byte-at-a-time loop in both
+/// cases (the ablation baseline).
+#[derive(Debug)]
+pub struct ShardedUtf8Decoder {
+    schema: Schema,
+    threads: usize,
+    swar: bool,
+    /// The persistent assembler: carries the row straddling chunk
+    /// boundaries, and decodes each chunk's prefix/tail sequentially.
+    carry: RowAssembler,
+    /// Absolute offset of the next chunk's first byte.
+    stream_pos: u64,
+    illegal: IllegalLog,
+}
+
+impl ShardedUtf8Decoder {
+    pub fn new(schema: Schema, threads: usize, swar: bool) -> Self {
+        ShardedUtf8Decoder {
+            schema,
+            threads: threads.max(1),
+            swar,
+            carry: RowAssembler::new(schema),
+            stream_pos: 0,
+            illegal: IllegalLog::default(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Illegal bytes skipped so far, offsets absolute in the stream.
+    pub fn illegal(&self) -> &IllegalLog {
+        &self.illegal
+    }
+
+    /// Feed one chunk, appending every row it completes to `out`.
+    /// Chunks may cut rows anywhere; the carried partial row is
+    /// completed at the head of the next chunk (sequentially, through
+    /// the persistent assembler) before the interior rows fan out.
+    pub fn feed_into(&mut self, chunk: &[u8], out: &mut RowBlock) {
+        let base = self.stream_pos;
+        self.stream_pos += chunk.len() as u64;
+
+        if self.threads <= 1 || chunk.len() < 2 * MIN_SHARD_BYTES {
+            self.feed_carry(chunk, base, out);
+            return;
+        }
+        // Prefix: finish the row carried from the previous chunk (up to
+        // and including the first `\n`). No `\n` at all ⇒ the whole
+        // chunk is one partial row.
+        let Some(first_nl) = swar::find_newline(chunk, 0) else {
+            self.feed_carry(chunk, base, out);
+            return;
+        };
+        self.feed_carry(&chunk[..=first_nl], base, out);
+
+        // Interior: whole rows between the first and last `\n`.
+        let body_start = first_nl + 1;
+        let rest = &chunk[body_start..];
+        let (body, tail) = match swar::rfind_newline(rest) {
+            Some(last) => rest.split_at(last + 1),
+            None => rest.split_at(0),
+        };
+        if !body.is_empty() {
+            self.decode_body(body, base + body_start as u64, out);
+        }
+        // Tail: the partial row carried into the next chunk.
+        if !tail.is_empty() {
+            let tail_base = base + (chunk.len() - tail.len()) as u64;
+            self.feed_carry(tail, tail_base, out);
+        }
+    }
+
+    /// Finish the stream: complete a trailing row without `\n`, if any.
+    pub fn finish_into(self, out: &mut RowBlock) -> IllegalLog {
+        self.carry.finish_into(out);
+        self.illegal
+    }
+
+    /// Sequential lane: feed `bytes` through the persistent assembler
+    /// and absorb its illegal log (keeping stream order: carry segments
+    /// are always drained before and after any sharded body).
+    fn feed_carry(&mut self, bytes: &[u8], base: u64, out: &mut RowBlock) {
+        self.carry.set_stream_offset(base);
+        if self.swar {
+            self.carry.feed_bytes_into(bytes, out);
+        } else {
+            self.carry.feed_bytes_scalar_into(bytes, out);
+        }
+        let log = self.carry.take_illegal();
+        self.illegal.merge(&log);
+    }
+
+    /// Parallel lane: `body` is whole rows (ends with `\n`). Shards are
+    /// decoded on scoped threads into disjoint row windows of `out`.
+    fn decode_body(&mut self, body: &[u8], base: u64, out: &mut RowBlock) {
+        let shards = (body.len() / MIN_SHARD_BYTES).clamp(1, self.threads);
+        if shards <= 1 {
+            self.feed_carry(body, base, out);
+            return;
+        }
+        let ranges = shard_ranges(body, shards);
+        if ranges.len() <= 1 {
+            self.feed_carry(body, base, out);
+            return;
+        }
+        // The prefix row-count pass: rows per shard = newlines per
+        // shard, exact before any field is parsed.
+        let counts: Vec<usize> =
+            ranges.iter().map(|r| swar::count_newlines(&body[r.clone()])).collect();
+        let windows = out.disjoint_row_windows(&counts);
+
+        let schema = self.schema;
+        let swar_on = self.swar;
+        let mut logs: Vec<IllegalLog> = Vec::with_capacity(ranges.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .zip(windows)
+                .map(|(r, mut win)| {
+                    let seg = &body[r.clone()];
+                    let seg_base = base + r.start as u64;
+                    scope.spawn(move || {
+                        let mut asm = RowAssembler::new(schema);
+                        asm.set_stream_offset(seg_base);
+                        if swar_on {
+                            asm.feed_bytes_into(seg, &mut win);
+                        } else {
+                            asm.feed_bytes_scalar_into(seg, &mut win);
+                        }
+                        debug_assert!(
+                            win.is_full(),
+                            "shard decoded {} of {} rows",
+                            win.filled(),
+                            win.rows()
+                        );
+                        asm.take_illegal()
+                    })
+                })
+                .collect();
+            for h in handles {
+                logs.push(h.join().expect("decode shard panicked"));
+            }
+        });
+        for log in &logs {
+            self.illegal.merge(log);
+        }
+    }
+}
+
+/// Newline-aligned shard byte ranges over `body` (which must end with
+/// `\n`): boundaries land on the first `\n` at or after each even
+/// byte-split point, so shards hold whole rows and stay within one row
+/// of equal byte share.
+fn shard_ranges(body: &[u8], shards: usize) -> Vec<Range<usize>> {
+    let mut ranges = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for i in 1..shards {
+        let target = body.len() * i / shards;
+        if target <= start {
+            continue;
+        }
+        match swar::find_newline(body, target) {
+            Some(nl) if nl + 1 < body.len() => {
+                ranges.push(start..nl + 1);
+                start = nl + 1;
+            }
+            // The split point fell inside the final row: everything
+            // left belongs to the last shard.
+            _ => break,
+        }
+    }
+    if start < body.len() {
+        ranges.push(start..body.len());
+    }
+    ranges
+}
+
+/// One-shot parallel decode of a whole raw UTF-8 buffer into rows — the
+/// functional front end the sim executors (GPU model, PIPER kernel)
+/// use. Bit-identical to [`super::ScalarDecoder`]; cycle counts are the
+/// caller's concern (they model hardware width, not software speed).
+pub fn decode_rows(schema: Schema, raw: &[u8], threads: usize) -> Vec<DecodedRow> {
+    let mut block = RowBlock::with_capacity(schema, swar::count_newlines(raw) + 1);
+    let mut dec = ShardedUtf8Decoder::new(schema, threads, true);
+    dec.feed_into(raw, &mut block);
+    dec.finish_into(&mut block);
+    block.to_rows()
+}
+
+/// Default decode-thread count: one per available core (the engine's
+/// planning default; 1 when parallelism cannot be probed).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{utf8, SynthConfig, SynthDataset};
+    use crate::decode::ScalarDecoder;
+
+    #[test]
+    fn shard_ranges_cover_exactly_and_end_on_newlines() {
+        let ds = SynthDataset::generate(SynthConfig::small(500));
+        let raw = utf8::encode_dataset(&ds);
+        for shards in [2usize, 3, 4, 7, 16] {
+            let ranges = shard_ranges(&raw, shards);
+            assert!(!ranges.is_empty());
+            assert_eq!(ranges.first().unwrap().start, 0);
+            assert_eq!(ranges.last().unwrap().end, raw.len());
+            for pair in ranges.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start, "gap at shard seam");
+            }
+            for r in &ranges {
+                assert_eq!(raw[r.end - 1], b'\n', "shard must end after a row");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_scalar_across_thread_counts() {
+        let ds = SynthDataset::generate(SynthConfig::small(2_000));
+        let raw = utf8::encode_dataset(&ds);
+        let want = ScalarDecoder::new(ds.schema()).decode(&raw);
+        for threads in [1usize, 2, 3, 8] {
+            let mut block = RowBlock::new(ds.schema());
+            let mut dec = ShardedUtf8Decoder::new(ds.schema(), threads, true);
+            dec.feed_into(&raw, &mut block);
+            dec.finish_into(&mut block);
+            assert_eq!(block.to_rows(), want.rows, "{threads} threads");
+        }
+        assert_eq!(decode_rows(ds.schema(), &raw, 4), want.rows);
+    }
+
+    #[test]
+    fn sharded_survives_chunk_boundaries_mid_field() {
+        let ds = SynthDataset::generate(SynthConfig::small(300));
+        let raw = utf8::encode_dataset(&ds);
+        let want = ScalarDecoder::new(ds.schema()).decode(&raw);
+        for chunk in [1usize, 7, 131, 4096] {
+            let mut dec = ShardedUtf8Decoder::new(ds.schema(), 4, true);
+            let mut block = RowBlock::new(ds.schema());
+            for c in raw.chunks(chunk) {
+                dec.feed_into(c, &mut block);
+            }
+            dec.finish_into(&mut block);
+            assert_eq!(block.to_rows(), want.rows, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn illegal_offsets_are_stream_absolute() {
+        // Rows padded so the body is large enough to shard; the illegal
+        // bytes sit at known absolute offsets.
+        let mut raw = Vec::new();
+        let mut offsets = Vec::new();
+        for i in 0..4_000u32 {
+            let line = format!("{}\t{:06}\tdeadbeef\n", i % 2, i);
+            let mut line = line.into_bytes();
+            if i % 1000 == 17 {
+                offsets.push(raw.len() as u64 + 2);
+                line[2] = b'@'; // corrupt inside the dense field
+            }
+            raw.extend_from_slice(&line);
+        }
+        let schema = Schema::new(1, 1);
+        let want = ScalarDecoder::new(schema).decode(&raw);
+        let mut dec = ShardedUtf8Decoder::new(schema, 4, true);
+        let mut block = RowBlock::new(schema);
+        dec.feed_into(&raw, &mut block);
+        let log = dec.finish_into(&mut block);
+        assert_eq!(block.to_rows(), want.rows);
+        assert_eq!(log, want.illegal);
+        let got: Vec<u64> = log.recorded.iter().map(|b| b.offset).collect();
+        assert_eq!(got, offsets);
+    }
+}

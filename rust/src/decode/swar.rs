@@ -1,0 +1,261 @@
+//! SWAR (SIMD-within-a-register) primitives for the wide-word decode
+//! fast path — the software analog of paper Script 1's W-byte
+//! combination decoder, at W = 8.
+//!
+//! The hardware decoder classifies all W bytes of a word in one cycle
+//! and folds the partial fields combinationally. In software the same
+//! structure becomes: load a `u64`, compute one branch-free *special*
+//! mask (everything that is not a hex nibble), and fold the nibble runs
+//! between specials in word-sized gulps ([`pack_hex`] / [`fold_dec`])
+//! instead of one LUT lookup per byte. The per-byte state machines in
+//! [`super::scalar`] stay untouched as the bit-exactness oracle, and
+//! the modeled cycle counts never come from this module — cycles are
+//! a property of the *hardware* width, not of how fast the simulator
+//! decodes (see EXPERIMENTS.md §Decode for the sweep methodology).
+//!
+//! Every helper here is **exact for all 256 byte values** — including
+//! bytes ≥ 0x80 and the false-positive-prone neighbors of `\0` that the
+//! classic `(w - 0x01…) & !w & 0x80…` zero test misclassifies. The
+//! equivalence suite (`tests/decode_equivalence.rs`) pins SWAR output
+//! bit-identical to the scalar oracle on adversarial byte soup, not
+//! just well-formed tables.
+
+/// `0x01` in every byte lane.
+pub const LO: u64 = 0x0101_0101_0101_0101;
+/// `0x80` in every byte lane — the lane-flag bit all masks here use.
+pub const HI: u64 = 0x8080_8080_8080_8080;
+
+/// Broadcast one byte to all 8 lanes.
+#[inline]
+pub fn splat(b: u8) -> u64 {
+    LO.wrapping_mul(b as u64)
+}
+
+/// Exact per-lane zero test: bit 7 of lane `i` is set iff byte `i` of
+/// `v` is zero. Uses the carry-free Hacker's Delight form rather than
+/// the cheaper `(v - LO) & !v & HI`, whose borrow propagation flags a
+/// `0x01` lane that follows a zero lane (a real miss for adversarial
+/// input: `"\t\x08"` would classify `\x08` as a tab).
+#[inline]
+pub fn zero_bytes(v: u64) -> u64 {
+    !(((v & !HI).wrapping_add(!HI)) | v | !HI)
+}
+
+/// Per-lane equality with `b`: bit 7 of lane `i` set iff byte `i == b`.
+#[inline]
+pub fn eq_bytes(w: u64, b: u8) -> u64 {
+    zero_bytes(w ^ splat(b))
+}
+
+/// Per-lane `v >= c` for lanes already known < 0x80 and `c <= 0x80`.
+/// Adding `0x80 - c` cannot carry across lanes (max 0x7f + 0x80 = 0xff).
+#[inline]
+fn ge7(v: u64, c: u8) -> u64 {
+    v.wrapping_add(splat(0x80 - c)) & HI
+}
+
+/// Per-lane mask of hex-nibble bytes (`0-9`, `a-f`), exact for all byte
+/// values: lanes with bit 7 set in the input are excluded before the
+/// range checks (a `0xb5` lane must not alias `0x35`'s digit range).
+#[inline]
+pub fn nibble_mask(w: u64) -> u64 {
+    let hib = w & HI;
+    let v = w & !HI;
+    let digit = ge7(v, b'0') & !ge7(v, b'9' + 1);
+    let letter = ge7(v, b'a') & !ge7(v, b'f' + 1);
+    (digit | letter) & !hib
+}
+
+/// Per-lane nibble *values* for lanes that hold hex nibbles: digits map
+/// via the low nibble, letters add 9 (`'a'` = 0x61 → 1 + 9 = 10). Lanes
+/// that are not nibbles produce garbage the caller must mask out.
+#[inline]
+pub fn nibble_values(w: u64) -> u64 {
+    (w & splat(0x0f)) + ((w >> 6) & LO).wrapping_mul(9)
+}
+
+/// Pack 8 nibble-value lanes into a `u32`, lane 0 (the first byte of
+/// the stream) becoming the most significant nibble — the wide-word
+/// form of eight successive `reg = (reg << 4) | n` steps. Unused high
+/// lanes must be zero (they become trailing zero nibbles the caller
+/// shifts away).
+#[inline]
+pub fn pack_hex(v: u64) -> u32 {
+    // Pairs → quads → octet: each step halves the lane count by gluing
+    // lane 2i (high nibble side) to lane 2i+1.
+    let y = ((v << 4) | (v >> 8)) & 0x00ff_00ff_00ff_00ff;
+    let z = ((y << 8) | (y >> 16)) & 0x0000_ffff_0000_ffff;
+    (((z << 16) | (z >> 32)) & 0xffff_ffff) as u32
+}
+
+/// Fold 8 decimal-digit-value lanes into their value, lane 0 most
+/// significant — the wide-word form of eight `reg = reg*10 + d` steps
+/// (Lemire's two-multiply digit gather). Lanes may legally hold values
+/// up to 15: the scalar state machine accumulates hex letters in
+/// decimal columns as `reg*10 + 12` and so must we; every intermediate
+/// lane stays below its carry bound (pair ≤ 165, total ≤ 15·11111111).
+/// Callers place shorter runs in the *high* lanes and zero the low
+/// ones, which act as leading zero digits.
+#[inline]
+pub fn fold_dec(v: u64) -> u32 {
+    let v = v.wrapping_mul(10).wrapping_add(v >> 8);
+    const MASK: u64 = 0x0000_00ff_0000_00ff;
+    const MUL1: u64 = 100 + (1_000_000u64 << 32);
+    const MUL2: u64 = 1 + (10_000u64 << 32);
+    let r = (v & MASK)
+        .wrapping_mul(MUL1)
+        .wrapping_add(((v >> 16) & MASK).wrapping_mul(MUL2));
+    (r >> 32) as u32
+}
+
+/// Load up to 8 bytes little-endian, zero-padding the high lanes.
+#[inline]
+pub fn load_le(bytes: &[u8]) -> u64 {
+    debug_assert!(bytes.len() <= 8);
+    let mut buf = [0u8; 8];
+    buf[..bytes.len()].copy_from_slice(bytes);
+    u64::from_le_bytes(buf)
+}
+
+/// Powers of ten for the decimal gulp (`10^8` still fits a `u32`).
+pub const POW10: [u32; 9] =
+    [1, 10, 100, 1_000, 10_000, 100_000, 1_000_000, 10_000_000, 100_000_000];
+
+/// Count `\n` bytes — the SWAR form of the row-count prefix pass
+/// (one popcount per word instead of one compare per byte).
+pub fn count_newlines(bytes: &[u8]) -> usize {
+    let mut n = 0usize;
+    let mut words = bytes.chunks_exact(8);
+    for w in words.by_ref() {
+        let w = u64::from_le_bytes(w.try_into().expect("chunks_exact(8)"));
+        n += eq_bytes(w, b'\n').count_ones() as usize;
+    }
+    n + words.remainder().iter().filter(|&&b| b == b'\n').count()
+}
+
+/// First `\n` at or after `from` (SWAR memchr).
+pub fn find_newline(bytes: &[u8], from: usize) -> Option<usize> {
+    let mut i = from;
+    while i + 8 <= bytes.len() {
+        let w = u64::from_le_bytes(bytes[i..i + 8].try_into().expect("8-byte window"));
+        let m = eq_bytes(w, b'\n');
+        if m != 0 {
+            return Some(i + (m.trailing_zeros() >> 3) as usize);
+        }
+        i += 8;
+    }
+    bytes[i..].iter().position(|&b| b == b'\n').map(|p| i + p)
+}
+
+/// Last `\n` in `bytes`, if any.
+pub fn rfind_newline(bytes: &[u8]) -> Option<usize> {
+    let mut i = bytes.len();
+    let tail = bytes.len() % 8;
+    if let Some(p) = bytes[i - tail..].iter().rposition(|&b| b == b'\n') {
+        return Some(i - tail + p);
+    }
+    i -= tail;
+    while i >= 8 {
+        let w = u64::from_le_bytes(bytes[i - 8..i].try_into().expect("8-byte window"));
+        let m = eq_bytes(w, b'\n');
+        if m != 0 {
+            return Some(i - 8 + (63 - m.leading_zeros() as usize) / 8);
+        }
+        i -= 8;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_is_exact_per_lane() {
+        // The classic borrow-propagating test fails on [0x00, 0x01]; the
+        // exact form must not.
+        let w = u64::from_le_bytes([0x00, 0x01, 0xff, 0x80, 0x00, 0x7f, 0x01, 0x00]);
+        let m = zero_bytes(w);
+        for lane in 0..8 {
+            let byte = (w >> (8 * lane)) as u8;
+            let flagged = m & (0x80u64 << (8 * lane)) != 0;
+            assert_eq!(flagged, byte == 0, "lane {lane} byte {byte:#x}");
+        }
+    }
+
+    #[test]
+    fn eq_bytes_matches_naive_on_all_values() {
+        for b in [b'\t', b'\n', b'-', 0u8, 0x80, 0xff] {
+            for base in 0..=255u8 {
+                let bytes = [base, b, base.wrapping_add(1), 0, 0xff, b, 0x80, base];
+                let m = eq_bytes(u64::from_le_bytes(bytes), b);
+                for (lane, &x) in bytes.iter().enumerate() {
+                    let flagged = m & (0x80u64 << (8 * lane)) != 0;
+                    assert_eq!(flagged, x == b, "b={b:#x} lane={lane} x={x:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_mask_matches_classifier_for_all_bytes() {
+        for b in 0..=255u8 {
+            let bytes = [b; 8];
+            let m = nibble_mask(u64::from_le_bytes(bytes));
+            let is_nibble = b.is_ascii_digit() || (b'a'..=b'f').contains(&b);
+            let expect = if is_nibble { HI } else { 0 };
+            assert_eq!(m, expect, "byte {b:#x}");
+        }
+    }
+
+    #[test]
+    fn nibble_values_map_hex_digits() {
+        let w = u64::from_le_bytes(*b"09afbc18");
+        let v = nibble_values(w);
+        let expect = [0u8, 9, 10, 15, 11, 12, 1, 8];
+        for (lane, &e) in expect.iter().enumerate() {
+            assert_eq!((v >> (8 * lane)) as u8, e, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn pack_hex_packs_in_stream_order() {
+        let v = u64::from_le_bytes([1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(pack_hex(v), 0x1234_5678);
+        // Short runs: zero-padded high lanes become trailing nibbles.
+        let v = u64::from_le_bytes([0xd, 0xe, 0xa, 0, 0, 0, 0, 0]);
+        assert_eq!(pack_hex(v) >> (4 * 5), 0xdea);
+    }
+
+    #[test]
+    fn fold_dec_matches_horner() {
+        let v = u64::from_le_bytes([1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(fold_dec(v), 12_345_678);
+        // Hex letters in a decimal column accumulate as values > 9,
+        // exactly like the scalar `reg*10 + n` loop.
+        let v = u64::from_le_bytes([15, 9, 0, 0, 0, 0, 0, 0]);
+        let mut reg = 0u32;
+        for d in [15u32, 9, 0, 0, 0, 0, 0, 0] {
+            reg = reg.wrapping_mul(10).wrapping_add(d);
+        }
+        assert_eq!(fold_dec(v), reg);
+    }
+
+    #[test]
+    fn newline_scan_matches_naive() {
+        let data: Vec<u8> = (0..1000u32)
+            .map(|i| if i % 7 == 3 { b'\n' } else { (i % 251) as u8 })
+            .collect();
+        assert_eq!(count_newlines(&data), data.iter().filter(|&&b| b == b'\n').count());
+        let naive_first = data.iter().position(|&b| b == b'\n');
+        assert_eq!(find_newline(&data, 0), naive_first);
+        for from in [0usize, 1, 7, 63, 997, 1000] {
+            let naive = data[from..].iter().position(|&b| b == b'\n').map(|p| from + p);
+            assert_eq!(find_newline(&data, from), naive, "from {from}");
+        }
+        assert_eq!(rfind_newline(&data), data.iter().rposition(|&b| b == b'\n'));
+        assert_eq!(find_newline(b"abc", 0), None);
+        assert_eq!(rfind_newline(b"abc"), None);
+        assert_eq!(rfind_newline(b""), None);
+    }
+}

@@ -21,7 +21,7 @@ use std::time::Duration;
 
 use crate::data::row::ProcessedColumns;
 use crate::data::{binary, DecodedRow, Schema};
-use crate::decode::ParallelDecoder;
+use crate::decode::shard;
 use crate::ops::{log1p, HashVocab, Modulus, Vocab};
 use crate::Result;
 
@@ -160,8 +160,10 @@ pub fn run(
     raw: &[u8],
 ) -> Result<GpuRun> {
     // ---- functional column pipeline (executed on CPU) ------------------
+    // Row-sharded SWAR decode: bit-identical to ParallelDecoder (the
+    // timing below is the V100 model, not this decode's wallclock).
     let rows: Vec<DecodedRow> = match input {
-        GpuInput::Utf8 => ParallelDecoder::new(schema).decode(raw).rows,
+        GpuInput::Utf8 => shard::decode_rows(schema, raw, shard::default_threads()),
         GpuInput::Binary => binary::decode_bytes(raw, schema)?,
     };
     let n = rows.len();

@@ -34,6 +34,7 @@ COMMANDS:
   preprocess  input=PATH format=utf8|binary backend=cpu|gpu|piper-local|piper-host-decode|piper-net
               vocab=5000 threads=8 cpu_config=1|2|3 chunk_rows=65536 spec='modulus:5000|genvocab|...'
               strategy=fused|two-pass (default: fused when the backend supports it)
+              decode_threads=N (default: one per core; 1 = sequential decode)
   compare     rows=20000 vocab=5000 format=utf8|binary
   serve       addr=127.0.0.1:7700 jobs=1
   submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000 strategy=fused|two-pass
@@ -180,6 +181,9 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
     if let Some(s) = cfg.get("strategy") {
         builder = builder.strategy(piper::pipeline::ExecStrategy::parse(s)?);
     }
+    if cfg.get("decode_threads").is_some() {
+        builder = builder.decode_threads(cfg.get_usize("decode_threads", 1)?);
+    }
     let pipeline = builder.build()?;
     let mut source = FileSource::open(Path::new(path), format)?;
     let mut sink = piper::pipeline::CountSink::new();
@@ -205,6 +209,17 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
         piper::report::fmt_duration(report.observe_time),
         piper::report::fmt_duration(report.process_time),
     ));
+    t.note(&format!(
+        "decode: {} across {} decode thread(s) [meas]",
+        piper::report::fmt_duration(report.decode_time),
+        report.decode_threads,
+    ));
+    if report.illegal_bytes > 0 {
+        t.note(&format!(
+            "WARNING: {} illegal input byte(s) skipped — affected fields may be corrupt",
+            report.illegal_bytes,
+        ));
+    }
     t.print();
     Ok(())
 }

@@ -9,7 +9,7 @@ use crate::accel::InputFormat;
 use crate::data::row::{ProcessedColumns, ProcessedRow};
 use crate::data::{RowBlock, Schema};
 use crate::ops::{log1p, HashVocab, Modulus, Vocab, VOCAB_MISS};
-use crate::pipeline::{ChunkDecoder, ExecStrategy};
+use crate::pipeline::{ChunkDecoder, DecodeOptions, ExecStrategy};
 use crate::Result;
 
 /// Raw wire format of the incoming stream.
@@ -53,6 +53,7 @@ pub struct StreamingPreprocessor {
     schema: Schema,
     modulus: Modulus,
     format: WireFormat,
+    decode: DecodeOptions,
     vocabs: Vec<HashVocab>,
     decoder: ChunkDecoder,
     scratch: RowBlock,
@@ -62,13 +63,28 @@ pub struct StreamingPreprocessor {
 }
 
 impl StreamingPreprocessor {
+    /// Sequential decode (decode threads = 1) — deterministic across
+    /// deployments and right for the small frames tests feed.
     pub fn new(schema: Schema, modulus: Modulus, format: WireFormat) -> Self {
+        Self::with_decode_options(schema, modulus, format, DecodeOptions::default())
+    }
+
+    /// Worker deployments pass the engine's decode options here so wire
+    /// chunks fan out across decode threads exactly like local chunks
+    /// ([`crate::decode::shard`]); output is bit-identical either way.
+    pub fn with_decode_options(
+        schema: Schema,
+        modulus: Modulus,
+        format: WireFormat,
+        decode: DecodeOptions,
+    ) -> Self {
         StreamingPreprocessor {
             schema,
             modulus,
             format,
+            decode,
             vocabs: (0..schema.num_sparse).map(|_| HashVocab::new()).collect(),
-            decoder: ChunkDecoder::new(format.into(), schema),
+            decoder: ChunkDecoder::with_options(format.into(), schema, decode),
             scratch: RowBlock::new(schema),
             phase: Phase::Start,
             rows_pass1: 0,
@@ -99,7 +115,7 @@ impl StreamingPreprocessor {
         );
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::new(self.format.into(), self.schema),
+            ChunkDecoder::with_options(self.format.into(), self.schema, self.decode),
         );
         self.scratch.clear();
         decoder.finish_into(&mut self.scratch)?;
@@ -140,7 +156,7 @@ impl StreamingPreprocessor {
         anyhow::ensure!(self.phase == Phase::Pass2, "pass2_end in phase {:?}", self.phase);
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::new(self.format.into(), self.schema),
+            ChunkDecoder::with_options(self.format.into(), self.schema, self.decode),
         );
         self.scratch.clear();
         decoder.finish_into(&mut self.scratch)?;
@@ -178,7 +194,7 @@ impl StreamingPreprocessor {
         );
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::new(self.format.into(), self.schema),
+            ChunkDecoder::with_options(self.format.into(), self.schema, self.decode),
         );
         self.scratch.clear();
         decoder.finish_into(&mut self.scratch)?;

@@ -36,7 +36,15 @@ fn handle(stream: TcpStream) -> Result<RunStats> {
     let (tag, payload) = protocol::read_frame(&mut reader)?;
     anyhow::ensure!(tag == Tag::Job, "expected Job frame, got {tag:?}");
     let job = protocol::Job::decode(&payload)?;
-    let mut sp = StreamingPreprocessor::new(job.schema, job.modulus, job.format);
+    // Worker posture: decode wire chunks with every local core (the
+    // same row-sharded path the engine uses; output is bit-identical
+    // to the sequential decode).
+    let decode = crate::pipeline::DecodeOptions {
+        threads: crate::decode::shard::default_threads(),
+        swar: true,
+    };
+    let mut sp =
+        StreamingPreprocessor::with_decode_options(job.schema, job.modulus, job.format, decode);
 
     loop {
         let (tag, payload) = protocol::read_frame(&mut reader)?;

@@ -78,7 +78,7 @@ use std::time::{Duration, Instant};
 use crate::accel::InputFormat;
 use crate::data::row::ProcessedColumns;
 use crate::data::{RowBlock, Schema};
-use crate::decode::RowAssembler;
+use crate::decode::{shard, IllegalLog, ShardedUtf8Decoder};
 use crate::ops::{Modulus, OpFlags, PipelineSpec};
 use crate::report::{self, TimeTag};
 use crate::Result;
@@ -86,6 +86,26 @@ use crate::Result;
 // ---------------------------------------------------------------------
 // Incremental decode
 // ---------------------------------------------------------------------
+
+/// Knobs of the engine's decode front: how many row shards decode a
+/// chunk in parallel ([`crate::decode::shard`]) and whether the SWAR
+/// wide-word loop or the byte-at-a-time oracle loop runs per shard
+/// (the latter exists for the ablation benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeOptions {
+    /// Decode threads per UTF-8 chunk; 1 = today's sequential path.
+    /// Binary input ignores this (its bulk column copy already runs at
+    /// memcpy speed).
+    pub threads: usize,
+    /// SWAR wide-word hot loop (default) vs the scalar per-byte loop.
+    pub swar: bool,
+}
+
+impl Default for DecodeOptions {
+    fn default() -> Self {
+        DecodeOptions { threads: 1, swar: true }
+    }
+}
 
 /// Incremental decoder that survives arbitrary chunk boundaries — the
 /// decode front of the engine, also used by the network worker
@@ -95,30 +115,53 @@ pub struct ChunkDecoder(DecoderInner);
 
 #[derive(Debug)]
 enum DecoderInner {
-    Utf8(RowAssembler),
+    Utf8(ShardedUtf8Decoder),
     Binary { schema: Schema, partial: Vec<u8> },
 }
 
 impl ChunkDecoder {
+    /// Sequential decoder (decode threads = 1, SWAR on) — the network
+    /// worker's default and the engine's `decode_threads(1)` path.
     pub fn new(format: InputFormat, schema: Schema) -> Self {
+        Self::with_options(format, schema, DecodeOptions::default())
+    }
+
+    /// Decoder with explicit decode options (the engine passes the
+    /// plan's `decode_threads` here).
+    pub fn with_options(format: InputFormat, schema: Schema, opts: DecodeOptions) -> Self {
         ChunkDecoder(match format {
-            InputFormat::Utf8 => DecoderInner::Utf8(RowAssembler::new(schema)),
+            InputFormat::Utf8 => {
+                DecoderInner::Utf8(ShardedUtf8Decoder::new(schema, opts.threads, opts.swar))
+            }
             InputFormat::Binary => DecoderInner::Binary { schema, partial: Vec::new() },
         })
     }
 
+    /// Illegal bytes skipped so far (UTF-8 only; offsets are absolute
+    /// in the fed stream, never shard-relative).
+    pub fn illegal(&self) -> Option<&IllegalLog> {
+        match &self.0 {
+            DecoderInner::Utf8(dec) => Some(dec.illegal()),
+            DecoderInner::Binary { .. } => None,
+        }
+    }
+
     /// Feed a chunk, appending all rows it completes to `out`.
     ///
-    /// Binary input takes a fast path: when no partial row is carried
-    /// and the chunk is row-aligned, the chunk's bytes are bulk-decoded
-    /// straight into the block's column planes — no `extend_from_slice`
-    /// + `drain` staging buffer (an O(chunk) memmove per chunk in the
-    /// old row-wise decoder). Only the straddling tail bytes (< one row)
+    /// UTF-8 decodes through the row-sharded SWAR decoder: the chunk's
+    /// interior rows fan out across the configured decode threads into
+    /// disjoint row ranges of `out`, while the rows straddling chunk
+    /// boundaries stay on the sequential carry path. Binary input takes
+    /// a bulk fast path: when no partial row is carried and the chunk
+    /// is row-aligned, the chunk's bytes are bulk-decoded straight into
+    /// the block's column planes — no `extend_from_slice` + `drain`
+    /// staging buffer (an O(chunk) memmove per chunk in the old
+    /// row-wise decoder). Only the straddling tail bytes (< one row)
     /// ever touch the `partial` buffer.
     pub fn feed_into(&mut self, chunk: &[u8], out: &mut RowBlock) -> Result<()> {
         match &mut self.0 {
-            DecoderInner::Utf8(asm) => {
-                asm.feed_bytes_into(chunk, out);
+            DecoderInner::Utf8(dec) => {
+                dec.feed_into(chunk, out);
                 Ok(())
             }
             DecoderInner::Binary { schema, partial } => {
@@ -147,19 +190,18 @@ impl ChunkDecoder {
 
     /// Finish the pass; any trailing partial row is completed (UTF-8
     /// without final newline) or rejected (truncated binary row).
-    pub fn finish_into(self, out: &mut RowBlock) -> Result<()> {
+    /// Returns the full illegal-byte log of the pass (always empty for
+    /// binary — a malformed binary stream is an error, not a skip).
+    pub fn finish_into(self, out: &mut RowBlock) -> Result<IllegalLog> {
         match self.0 {
-            DecoderInner::Utf8(asm) => {
-                asm.finish_into(out);
-                Ok(())
-            }
+            DecoderInner::Utf8(dec) => Ok(dec.finish_into(out)),
             DecoderInner::Binary { partial, .. } => {
                 anyhow::ensure!(
                     partial.is_empty(),
                     "binary stream ended mid-row ({} stray bytes)",
                     partial.len()
                 );
-                Ok(())
+                Ok(IllegalLog::default())
             }
         }
     }
@@ -226,6 +268,9 @@ pub struct Plan {
     pub channel_depth: usize,
     /// Fused single pass vs two-pass-with-rewind (see [`ExecStrategy`]).
     pub strategy: ExecStrategy,
+    /// Row shards decoding each UTF-8 chunk in parallel (see
+    /// [`PipelineBuilder::decode_threads`]); 1 is the sequential path.
+    pub decode_threads: usize,
 }
 
 impl Plan {
@@ -261,6 +306,7 @@ pub struct PipelineBuilder {
     chunk_rows: usize,
     channel_depth: usize,
     strategy: Option<ExecStrategy>,
+    decode_threads: Option<usize>,
     executor: Option<Box<dyn Executor>>,
 }
 
@@ -277,6 +323,7 @@ impl PipelineBuilder {
             chunk_rows: 64 * 1024,
             channel_depth: DEFAULT_CHANNEL_DEPTH,
             strategy: None,
+            decode_threads: None,
             executor: None,
         }
     }
@@ -336,6 +383,19 @@ impl PipelineBuilder {
         self
     }
 
+    /// Row shards decoding each UTF-8 chunk in parallel (default: one
+    /// per available core). The chunk splits at `\n` boundaries and the
+    /// shards decode on scoped threads into disjoint row ranges of the
+    /// scratch block ([`crate::decode::shard`]), so output is
+    /// bit-identical for every thread count; `1` preserves the
+    /// sequential decode path. Binary input ignores the knob (its bulk
+    /// column copy is already memcpy-bound). Validated ≥ 1 at
+    /// [`Self::build`].
+    pub fn decode_threads(mut self, threads: usize) -> Self {
+        self.decode_threads = Some(threads);
+        self
+    }
+
     pub fn executor(mut self, executor: Box<dyn Executor>) -> Self {
         self.executor = Some(executor);
         self
@@ -354,6 +414,11 @@ impl PipelineBuilder {
             "planning: channel_depth must be >= 1 (got {})",
             self.channel_depth
         );
+        let decode_threads = match self.decode_threads {
+            Some(0) => anyhow::bail!("planning: decode_threads must be >= 1 (got 0)"),
+            Some(n) => n,
+            None => shard::default_threads(),
+        };
         let mut plan = Plan {
             flags: self.spec.flags(),
             modulus: self.spec.modulus(),
@@ -363,6 +428,7 @@ impl PipelineBuilder {
             chunk_rows: self.chunk_rows,
             channel_depth: self.channel_depth,
             strategy: ExecStrategy::TwoPass, // provisional until capability check
+            decode_threads,
         };
         anyhow::ensure!(
             executor.accepts(plan.input),
@@ -406,6 +472,7 @@ impl PipelineBuilder {
             chunk_rows,
             channel_depth: DEFAULT_CHANNEL_DEPTH,
             strategy: ExecStrategy::TwoPass,
+            decode_threads: 1,
         }
     }
 }
@@ -453,6 +520,7 @@ impl Pipeline {
         // of the submission; when a two-pass plan streams the source
         // twice, the second pass reuses the first pass's buffers.
         let mut pool: Vec<Vec<u8>> = Vec::new();
+        let mut decode_time = Duration::ZERO;
 
         if self.plan.strategy == ExecStrategy::TwoPass {
             // Pass 1 (GenVocab) only when the plan has stateful vocab
@@ -464,13 +532,16 @@ impl Pipeline {
                      this source streams once — build the pipeline with the \
                      fused strategy instead"
                 );
-                stream_chunks(&self.plan, &mut *source, &mut pool, |block| run.observe(block))?;
+                let pass1 = stream_chunks(&self.plan, &mut *source, &mut pool, |block| {
+                    run.observe(block)
+                })?;
+                decode_time += pass1.decode;
                 source.reset()?;
             }
             run.seal()?;
         }
 
-        let (raw_bytes, rows, chunks) = match self.plan.strategy {
+        let totals = match self.plan.strategy {
             // Fused: the single decode pass observes and emits at once —
             // no rewind, no barrier, output streams while vocabularies
             // build.
@@ -486,15 +557,24 @@ impl Pipeline {
                 })?
             }
         };
+        decode_time += totals.decode;
 
-        let stats = StreamStats { raw_bytes, rows, chunks, wall: t0.elapsed() };
+        let stats = StreamStats {
+            raw_bytes: totals.raw_bytes,
+            rows: totals.rows,
+            chunks: totals.chunks,
+            wall: t0.elapsed(),
+        };
         let rep = run.finish(&stats)?;
         Ok(RunReport {
             executor: self.executor.name(),
-            rows: rows as usize,
-            chunks: chunks as usize,
+            rows: totals.rows as usize,
+            chunks: totals.chunks as usize,
             decode_passes: self.plan.decode_passes(),
             strategy: self.plan.strategy,
+            decode_threads: self.plan.decode_threads,
+            decode_time,
+            illegal_bytes: totals.illegal_bytes,
             e2e: rep.modeled_e2e.unwrap_or(stats.wall),
             wall: stats.wall,
             tag: rep.tag,
@@ -514,30 +594,50 @@ impl Pipeline {
     }
 }
 
+/// Totals of one streaming pass over the source.
+#[derive(Debug, Default, Clone, Copy)]
+struct PassTotals {
+    raw_bytes: u64,
+    rows: u64,
+    chunks: u64,
+    /// Wallclock spent inside the decode front (feed + finish), summed
+    /// over the pass — the numerator of the decode-scaling tables.
+    decode: Duration,
+    /// Illegal input bytes the decode skipped during this pass.
+    illegal_bytes: u64,
+}
+
 /// One streaming pass: a producer thread pulls raw chunks from the
 /// source into a bounded channel while this thread decodes them into a
-/// reused [`RowBlock`] scratch and feeds the executor. Consumed raw
-/// buffers return to the producer through an unbounded pool lane, seeded
-/// from and drained back into the caller's `pool`, so steady state
-/// allocates nothing per chunk — neither raw `Vec<u8>`s nor decoded
-/// rows. A fused plan makes exactly one call; a two-pass plan calls
-/// twice and the pool carries the buffers across. Returns
-/// `(raw_bytes, rows, chunks)`.
+/// reused [`RowBlock`] scratch and feeds the executor. UTF-8 decode
+/// fans each chunk's interior rows out across `plan.decode_threads`
+/// scoped threads ([`crate::decode::shard`]); decode wallclock is
+/// accumulated separately so reports can show the decode/execute
+/// split. Consumed raw buffers return to the producer through an
+/// unbounded pool lane, seeded from and drained back into the caller's
+/// `pool`, so steady state allocates nothing per chunk — neither raw
+/// `Vec<u8>`s nor decoded rows. A fused plan makes exactly one call; a
+/// two-pass plan calls twice and the pool carries the buffers across.
 fn stream_chunks<F>(
     plan: &Plan,
     source: &mut dyn Source,
     pool: &mut Vec<Vec<u8>>,
     mut consume: F,
-) -> Result<(u64, u64, u64)>
+) -> Result<PassTotals>
 where
     F: FnMut(&RowBlock) -> Result<()>,
 {
     let chunk_bytes = plan.chunk_bytes();
-    let mut decoder = ChunkDecoder::new(plan.input, plan.schema);
+    let mut decoder = ChunkDecoder::with_options(
+        plan.input,
+        plan.schema,
+        DecodeOptions { threads: plan.decode_threads, swar: true },
+    );
     let mut block = RowBlock::with_capacity(plan.schema, plan.chunk_rows);
     let mut raw_bytes = 0u64;
     let mut rows = 0u64;
     let mut chunks = 0u64;
+    let mut decode = Duration::ZERO;
 
     let passed: Result<()> = std::thread::scope(|scope| {
         let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(plan.channel_depth);
@@ -570,7 +670,10 @@ where
             raw_bytes += chunk.len() as u64;
             chunks += 1;
             block.clear();
-            let step = decoder.feed_into(&chunk, &mut block).and_then(|()| {
+            let td = Instant::now();
+            let fed = decoder.feed_into(&chunk, &mut block);
+            decode += td.elapsed();
+            let step = fed.and_then(|()| {
                 if block.is_empty() {
                     return Ok(());
                 }
@@ -599,12 +702,14 @@ where
     passed?;
 
     block.clear();
-    decoder.finish_into(&mut block)?;
+    let td = Instant::now();
+    let illegal = decoder.finish_into(&mut block)?;
+    decode += td.elapsed();
     if !block.is_empty() {
         rows += block.num_rows() as u64;
         consume(&block)?;
     }
-    Ok((raw_bytes, rows, chunks))
+    Ok(PassTotals { raw_bytes, rows, chunks, decode, illegal_bytes: illegal.total })
 }
 
 // ---------------------------------------------------------------------
@@ -625,6 +730,20 @@ pub struct RunReport {
     pub decode_passes: usize,
     /// The execution strategy the plan ran under.
     pub strategy: ExecStrategy,
+    /// Row shards that decoded each UTF-8 chunk (the plan's
+    /// `decode_threads`); 1 = the sequential decode path.
+    pub decode_threads: usize,
+    /// Measured wallclock inside the decode front (SWAR + sharding),
+    /// summed over every pass of the submission. `wall - decode_time`
+    /// is the execute/stream side of the split — the decode-scaling
+    /// bench tables report both.
+    pub decode_time: Duration,
+    /// Illegal input bytes the decode skipped (non-panicking, per the
+    /// hardware's error-line semantics; offsets are logged stream-
+    /// absolute at the decoder — [`crate::decode::IllegalLog`]).
+    /// Counted over one decode pass: a two-pass plan reads the same
+    /// bytes twice but reports them once. Zero for well-formed input.
+    pub illegal_bytes: u64,
     /// End-to-end time: modeled for sim executors, measured wallclock
     /// for the CPU baseline. Check `tag`.
     pub e2e: Duration,
@@ -721,6 +840,56 @@ mod tests {
             .executor(crate::coordinator::Backend::Gpu.executor())
             .build();
         assert!(err.is_err(), "channel_depth 0 must fail at planning");
+    }
+
+    #[test]
+    fn builder_resolves_decode_threads() {
+        let auto = PipelineBuilder::new()
+            .executor(crate::coordinator::Backend::Gpu.executor())
+            .build()
+            .unwrap();
+        assert!(auto.plan().decode_threads >= 1, "default must resolve to >= 1");
+
+        let pinned = PipelineBuilder::new()
+            .decode_threads(3)
+            .executor(crate::coordinator::Backend::Gpu.executor())
+            .build()
+            .unwrap();
+        assert_eq!(pinned.plan().decode_threads, 3);
+
+        let err = PipelineBuilder::new()
+            .decode_threads(0)
+            .executor(crate::coordinator::Backend::Gpu.executor())
+            .build();
+        assert!(err.is_err(), "decode_threads 0 must fail at planning");
+    }
+
+    #[test]
+    fn decode_threads_produce_identical_output_and_report_split() {
+        let ds = SynthDataset::generate(SynthConfig::small(400));
+        let raw = utf8::encode_dataset(&ds);
+        let run_with = |threads: usize| {
+            let pipeline = PipelineBuilder::new()
+                .spec(crate::ops::PipelineSpec::dlrm(997))
+                .schema(ds.schema())
+                .input(InputFormat::Utf8)
+                .chunk_rows(64)
+                .decode_threads(threads)
+                .executor(crate::coordinator::Backend::Gpu.executor())
+                .build()
+                .unwrap();
+            let mut src = crate::pipeline::MemorySource::new(&raw, InputFormat::Utf8);
+            pipeline.run_collect(&mut src).unwrap()
+        };
+        let (cols1, rep1) = run_with(1);
+        let (cols4, rep4) = run_with(4);
+        assert_eq!(cols1, cols4, "decode_threads must not change output");
+        assert_eq!(rep1.decode_threads, 1);
+        assert_eq!(rep4.decode_threads, 4);
+        assert!(rep1.decode_time <= rep1.wall);
+        assert!(rep4.decode_time <= rep4.wall);
+        assert_eq!(rep1.illegal_bytes, 0, "well-formed input must report no skips");
+        assert_eq!(rep4.illegal_bytes, 0);
     }
 
     #[test]

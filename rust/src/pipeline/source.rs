@@ -181,6 +181,11 @@ pub struct SynthSource {
     config: SynthConfig,
     format: InputFormat,
     gen: RowGen,
+    /// Persistent scratch row the generator refills in place — without
+    /// it every `next_chunk` call would allocate two field `Vec`s per
+    /// generated row, and synthetic-input benches would measure source
+    /// allocation instead of decode.
+    scratch: crate::data::DecodedRow,
     /// Encoded bytes generated but not yet emitted (a row can overshoot
     /// one chunk's byte budget; the excess carries into the next chunk).
     pending: Vec<u8>,
@@ -189,7 +194,9 @@ pub struct SynthSource {
 impl SynthSource {
     pub fn new(config: SynthConfig, format: InputFormat) -> Self {
         let gen = RowGen::new(config.clone());
-        SynthSource { config, format, gen, pending: Vec::new() }
+        let scratch =
+            crate::data::DecodedRow { label: 0, dense: Vec::new(), sparse: Vec::new() };
+        SynthSource { config, format, gen, scratch, pending: Vec::new() }
     }
 }
 
@@ -202,9 +209,10 @@ impl Source for SynthSource {
         buf.clear();
         let cap = max_bytes.max(1);
         while self.pending.len() < cap {
-            let Some((row, mask)) = self.gen.next_row() else { break };
+            let Some(mask) = self.gen.next_row_into(&mut self.scratch) else { break };
+            let row = &self.scratch;
             match self.format {
-                InputFormat::Utf8 => utf8::encode_row(&row, mask, &mut self.pending),
+                InputFormat::Utf8 => utf8::encode_row(row, mask, &mut self.pending),
                 InputFormat::Binary => {
                     self.pending.extend_from_slice(&row.label.to_le_bytes());
                     for &d in &row.dense {

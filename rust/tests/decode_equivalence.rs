@@ -1,0 +1,183 @@
+//! Decode equivalence suite: the SWAR wide-word loop, the row-sharded
+//! parallel decoder and the `ParallelDecoder` fast path must be
+//! bit-identical to the byte-at-a-time scalar oracle — rows,
+//! fill-missing zeros *and* illegal-byte positions — across widths,
+//! shard counts and chunk boundaries that split rows mid-field. The
+//! accelerator's modeled cycle counts must be untouched by any software
+//! speedup. CI runs this under `--release` as well: the SWAR bit tricks
+//! must hold with optimizations on, not just in the debug profile.
+
+use piper::accel::InputFormat;
+use piper::data::{utf8, RowBlock, Schema, SynthConfig, SynthDataset};
+use piper::decode::{ParallelDecoder, ScalarDecoder, ShardedUtf8Decoder};
+use piper::pipeline::{ChunkDecoder, DecodeOptions};
+use piper::util::XorShift64;
+
+const WIDTHS: [usize; 4] = [1, 2, 4, 8];
+const THREADS: [usize; 4] = [1, 2, 3, 8];
+const CHUNKS: [usize; 5] = [1, 7, 64, 4096, usize::MAX];
+
+/// Decode `raw` through the chunked engine front with the given decode
+/// options, collecting all rows and the illegal log.
+fn chunked_decode(
+    schema: Schema,
+    raw: &[u8],
+    chunk: usize,
+    opts: DecodeOptions,
+) -> (Vec<piper::data::DecodedRow>, piper::decode::IllegalLog) {
+    let mut dec = ChunkDecoder::with_options(InputFormat::Utf8, schema, opts);
+    let mut out = RowBlock::new(schema);
+    for c in raw.chunks(chunk.clamp(1, raw.len())) {
+        dec.feed_into(c, &mut out).expect("utf8 decode is infallible");
+    }
+    let illegal = dec.finish_into(&mut out).expect("utf8 finish is infallible");
+    (out.to_rows(), illegal)
+}
+
+/// Every path over one buffer: rows, error log and cycles pinned to the
+/// scalar oracle.
+fn assert_all_paths_match(schema: Schema, raw: &[u8], tag: &str) {
+    let oracle = ScalarDecoder::new(schema).decode(raw);
+    assert_eq!(oracle.cycles, raw.len() as u64, "{tag}: scalar II = 1 byte/cycle");
+
+    for w in WIDTHS {
+        let par = ParallelDecoder::with_width(schema, w).decode(raw);
+        assert_eq!(par.rows, oracle.rows, "{tag}: width {w} rows");
+        assert_eq!(par.illegal, oracle.illegal, "{tag}: width {w} error positions");
+        assert_eq!(
+            par.cycles,
+            (raw.len() as u64).div_ceil(w as u64),
+            "{tag}: width {w} cycles must stay the hardware model's"
+        );
+        let groups = ParallelDecoder::with_width(schema, w).decode_by_groups(raw);
+        assert_eq!(groups.rows, oracle.rows, "{tag}: width {w} per-group rows");
+        assert_eq!(groups.cycles, par.cycles, "{tag}: width {w} per-group cycles");
+        assert_eq!(groups.illegal, oracle.illegal, "{tag}: width {w} per-group errors");
+    }
+
+    for threads in THREADS {
+        for swar in [false, true] {
+            for chunk in CHUNKS {
+                let opts = DecodeOptions { threads, swar };
+                let (rows, illegal) = chunked_decode(schema, raw, chunk, opts);
+                let ctx = format!("{tag}: threads={threads} swar={swar} chunk={chunk}");
+                assert_eq!(rows, oracle.rows, "{ctx} rows");
+                assert_eq!(illegal, oracle.illegal, "{ctx} error positions");
+            }
+        }
+    }
+}
+
+#[test]
+fn well_formed_datasets_bit_identical() {
+    for (nd, ns, rows) in [(13usize, 26usize, 600usize), (1, 1, 400), (0, 4, 300), (5, 0, 300)] {
+        let mut cfg = SynthConfig::small(rows);
+        cfg.schema = Schema::new(nd, ns);
+        cfg.missing_rate = 0.25; // exercise FillMissing zeros heavily
+        let ds = SynthDataset::generate(cfg);
+        let raw = utf8::encode_dataset(&ds);
+        let decoded = ScalarDecoder::new(ds.schema()).decode(&raw);
+        assert_eq!(decoded.rows, ds.rows, "oracle round-trip {nd}x{ns}");
+        assert!(decoded.illegal.is_empty());
+        assert_all_paths_match(ds.schema(), &raw, &format!("schema {nd}x{ns}"));
+    }
+}
+
+#[test]
+fn random_legal_soup_bit_identical() {
+    // Legal bytes only, but no row structure: fields longer than 8
+    // nibbles (register wrap), empty rows, minus signs mid-field,
+    // columns beyond the schema — the state machines must agree on all
+    // of it, including across shard seams.
+    let legal = b"\t\n-0123456789abcdef";
+    let schema = Schema::new(3, 3);
+    let mut rng = XorShift64::new(0x5AAB_0001);
+    for case in 0..40 {
+        let len = 200 + rng.below(3_000) as usize;
+        let raw: Vec<u8> =
+            (0..len).map(|_| legal[rng.below(legal.len() as u64) as usize]).collect();
+        assert_all_paths_match(schema, &raw, &format!("legal soup case {case}"));
+    }
+}
+
+#[test]
+fn random_arbitrary_bytes_bit_identical_with_error_positions() {
+    // Fully adversarial: all 256 byte values, so the SWAR classifier's
+    // exactness (high-bit lanes, zero-test false positives) is load
+    // bearing, and every path must report the same skipped offsets.
+    let schema = Schema::new(2, 2);
+    let mut rng = XorShift64::new(0xD15C0);
+    for case in 0..40 {
+        let len = 100 + rng.below(2_000) as usize;
+        let mut raw: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        // Sprinkle newlines so rows actually terminate now and then.
+        for i in (0..raw.len()).step_by(97) {
+            raw[i] = b'\n';
+        }
+        let oracle = ScalarDecoder::new(schema).decode(&raw);
+        assert!(oracle.illegal.total > 0, "case {case} should contain illegal bytes");
+        assert_all_paths_match(schema, &raw, &format!("arbitrary soup case {case}"));
+    }
+}
+
+#[test]
+fn sharded_error_offsets_are_chunk_absolute() {
+    // Regression for the sharded path: illegal bytes at known absolute
+    // offsets, decoded with chunk boundaries that split rows mid-field
+    // and enough volume that chunks really shard. Offsets must be
+    // reported within the original stream, never within a shard.
+    let schema = Schema::new(1, 1);
+    let mut raw = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..40_000u32 {
+        let mut line = format!("{}\t{:07}\tcafef00d\n", i % 2, i).into_bytes();
+        if i % 9_000 == 1_234 {
+            expected.push(raw.len() as u64 + 4);
+            line[4] = b'Z'; // corrupt a dense digit
+        }
+        raw.extend_from_slice(&line);
+    }
+    assert!(!expected.is_empty());
+    let oracle = ScalarDecoder::new(schema).decode(&raw);
+    let got_oracle: Vec<u64> = oracle.illegal.recorded.iter().map(|b| b.offset).collect();
+    assert_eq!(got_oracle, expected, "oracle offsets");
+
+    for threads in [2usize, 4, 8] {
+        // One big feed (chunk interior shards) and mid-row cut feeds.
+        for chunk in [usize::MAX, 1 << 20, 300_001] {
+            let opts = DecodeOptions { threads, swar: true };
+            let (rows, illegal) = chunked_decode(schema, &raw, chunk, opts);
+            assert_eq!(rows, oracle.rows, "threads={threads} chunk={chunk}");
+            let got: Vec<u64> = illegal.recorded.iter().map(|b| b.offset).collect();
+            assert_eq!(got, expected, "threads={threads} chunk={chunk} offsets");
+            assert_eq!(illegal.total, expected.len() as u64);
+        }
+    }
+}
+
+#[test]
+fn sharded_decoder_streams_like_one_shot() {
+    // Drive the sharded decoder directly (not through ChunkDecoder)
+    // with pathological chunk cuts; the carried row must cross every
+    // boundary intact.
+    let ds = SynthDataset::generate(SynthConfig::small(800));
+    let raw = utf8::encode_dataset(&ds);
+    let oracle = ScalarDecoder::new(ds.schema()).decode(&raw);
+    for cut in [13usize, 257, 100_000] {
+        let mut dec = ShardedUtf8Decoder::new(ds.schema(), 4, true);
+        let mut out = RowBlock::new(ds.schema());
+        for c in raw.chunks(cut) {
+            dec.feed_into(c, &mut out);
+        }
+        dec.finish_into(&mut out);
+        assert_eq!(out.to_rows(), oracle.rows, "cut {cut}");
+    }
+}
+
+#[test]
+fn missing_trailing_newline_consistent_across_paths() {
+    let ds = SynthDataset::generate(SynthConfig::small(120));
+    let mut raw = utf8::encode_dataset(&ds);
+    raw.pop(); // drop the final `\n`: the last row completes at finish
+    assert_all_paths_match(ds.schema(), &raw, "no trailing newline");
+}

@@ -89,6 +89,7 @@ fn partition_boundaries_match_unsliced_process() {
         chunk_rows: 4096,
         channel_depth: 2,
         strategy: piper::pipeline::ExecStrategy::TwoPass,
+        decode_threads: 1,
     };
     let mut state = piper::pipeline::ChunkState::new(&plan);
     state.observe(&block);

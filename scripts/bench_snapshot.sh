@@ -1,0 +1,20 @@
+#!/usr/bin/env sh
+# Snapshot the decode-threads sweep into BENCH_pr4.json at the repo root.
+#
+# Runs the pipeline_engine bench (which checksum-verifies every sweep
+# point before timing it) with BENCH_JSON pointed at the snapshot file.
+# Usage: scripts/bench_snapshot.sh [rows] [reps]
+set -eu
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+ROWS="${1:-200000}"
+REPS="${2:-5}"
+OUT="$ROOT/BENCH_pr4.json"
+
+echo "decode sweep: $ROWS rows, $REPS reps -> $OUT"
+cd "$ROOT/rust"
+PIPER_BENCH_ROWS="$ROWS" PIPER_BENCH_REPS="$REPS" BENCH_JSON="$OUT" \
+    cargo bench --bench pipeline_engine
+
+echo "snapshot written:"
+cat "$OUT"
