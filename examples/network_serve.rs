@@ -24,18 +24,16 @@ fn main() -> piper::Result<()> {
     let raw = utf8::encode_dataset(&ds);
     println!("streaming {} rows ({} bytes) to a loopback PIPER worker…", rows, raw.len());
 
-    let job = Job {
-        schema: ds.schema(),
-        modulus: Modulus::VOCAB_5K,
-        format: WireFormat::Utf8,
-    };
+    // The wire handshake carries the full per-column spec; dlrm() is
+    // the uniform preset at one vocabulary size.
+    let job = Job::dlrm(ds.schema(), Modulus::VOCAB_5K, WireFormat::Utf8);
 
     let mut t = Table::new(
         "network-attached preprocessing (loopback, fused single pass)",
         &["chunk size", "wallclock [meas]", "rows", "vocab entries"],
     );
     for chunk in [4 * 1024, 64 * 1024, 1024 * 1024] {
-        let run = leader::run_loopback(job, &raw, chunk)?;
+        let run = leader::run_loopback(&job, &raw, chunk)?;
         assert_eq!(run.processed.num_rows(), rows);
         t.row(&[
             format!("{} KiB", chunk / 1024),
@@ -57,9 +55,9 @@ fn main() -> piper::Result<()> {
         "sharded cluster (loopback workers)",
         &["workers", "wallclock [meas]", "rows", "vocab entries"],
     );
-    let single = piper::net::run_cluster_loopback(1, job, &raw, 256 * 1024)?;
+    let single = piper::net::run_cluster_loopback(1, &job, &raw, 256 * 1024)?;
     for n in [1usize, 2, 4] {
-        let run = piper::net::run_cluster_loopback(n, job, &raw, 256 * 1024)?;
+        let run = piper::net::run_cluster_loopback(n, &job, &raw, 256 * 1024)?;
         assert_eq!(
             run.processed, single.processed,
             "sharding must not change the output"

@@ -140,6 +140,10 @@ fn main() {
         "modulus:5000 | genvocab | applyvocab | neg2zero | logarithm",
         "modulus:5000 | neg2zero | logarithm", // passthrough sparse
         "modulus:53",                          // bare modulus
+        // per-column programs: two vocab sizes + a bucketized column
+        "sparse[*]: modulus:5000|genvocab|applyvocab; \
+         sparse[0..4]: modulus:100000|genvocab|applyvocab; \
+         dense[*]: neg2zero|log; dense[0]: clip:0:100|bucketize:1:10:100",
         "applyvocab | modulus:5000",           // invalid: needs genvocab first
     ] {
         let built = piper::pipeline::PipelineBuilder::new()

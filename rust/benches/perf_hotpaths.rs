@@ -100,10 +100,10 @@ fn main() {
             std::hint::black_box(out.len());
         }), None, dense.len());
 
-    let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+    let job = Job::dlrm(ds.schema(), m, WireFormat::Utf8);
     // run_loopback is fused: the dataset crosses the wire once.
     row("tcp-loopback e2e", time(3, || {
-            std::hint::black_box(leader::run_loopback(job, &raw_utf8, 1 << 20).unwrap().stats);
+            std::hint::black_box(leader::run_loopback(&job, &raw_utf8, 1 << 20).unwrap().stats);
         }), Some(raw_utf8.len()), rows);
 
     // The streaming engine end to end (planned once, CountSink output).

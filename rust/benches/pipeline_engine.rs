@@ -288,6 +288,88 @@ fn main() {
         println!();
     }
 
+    // ---- per-column programs: uniform vs heterogeneous ------------------
+    // The program-dispatch overhead question: does replacing the global
+    // flag branches with per-column slot dispatch cost anything on a
+    // uniform plan, and what does a genuinely heterogeneous plan (two
+    // vocab sizes, partial dense log, one bucketized column) cost
+    // relative to it? Same executor, same input, fused strategy. Each
+    // pipeline is checksum-gated for run-to-run determinism before
+    // timing. BENCH_PR5_JSON=path writes the rows machine-readably
+    // (scripts/bench_snapshot.sh).
+    let hetero_spec = "sparse[*]: modulus:5000|genvocab|applyvocab; \
+                       sparse[0..4]: modulus:100000|genvocab|applyvocab; \
+                       sparse[5]: modulus:53; \
+                       dense[*]: neg2zero|logarithm; \
+                       dense[0..3]: neg2zero; \
+                       dense[12]: clip:0:100|bucketize:1:10:100";
+    let mut t = Table::new(
+        &format!("per-column programs — CPU-4 fused, UTF-8, {rows} rows, median of {reps} [meas]"),
+        &["program set", "wallclock", "rows/s", "vs uniform"],
+    );
+    let mut pr5_rows: Vec<(&str, f64, f64)> = Vec::new();
+    let mut uniform_wall: Option<std::time::Duration> = None;
+    for (name, spec) in [
+        ("uniform dlrm(5000)", PipelineSpec::dlrm(5000)),
+        ("heterogeneous", PipelineSpec::parse(hetero_spec).expect("hetero spec parses")),
+    ] {
+        let pipeline = PipelineBuilder::new()
+            .spec(spec)
+            .schema(ds.schema())
+            .input(InputFormat::Utf8)
+            .chunk_rows(32 * 1024)
+            .strategy(ExecStrategy::Fused)
+            .executor(Backend::Cpu { kind: ConfigKind::I, threads: 4 }.executor())
+            .build()
+            .expect("plan");
+        // Determinism gate: two collected runs must checksum equal.
+        let sum_of = |pipe: &piper::pipeline::Pipeline| {
+            let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+            checksum(&pipe.run_collect(&mut src).expect("program run").0)
+        };
+        assert_eq!(sum_of(&pipeline), sum_of(&pipeline), "{name}: nondeterministic output");
+        let wall = median(
+            (0..reps)
+                .map(|_| {
+                    let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+                    let mut sink = CountSink::new();
+                    let t0 = Instant::now();
+                    pipeline.run(&mut src, &mut sink).expect("submission");
+                    t0.elapsed()
+                })
+                .collect(),
+        );
+        let base = *uniform_wall.get_or_insert(wall);
+        let ratio = wall.as_secs_f64() / base.as_secs_f64().max(1e-12);
+        t.row(&[
+            name.into(),
+            fmt_duration(wall),
+            fmt_rows_per_sec(rows as f64 / wall.as_secs_f64()),
+            format!("{ratio:.2}×"),
+        ]);
+        pr5_rows.push((name, wall.as_secs_f64(), rows as f64 / wall.as_secs_f64()));
+    }
+    t.note("per-column dispatch replaces the old global OpFlags branches in both rows");
+    t.note("heterogeneous = 2 vocab sizes + vocab-free col + partial log + bucketize col");
+    t.print();
+    println!();
+
+    if let Ok(path) = std::env::var("BENCH_PR5_JSON") {
+        let mut json = String::from("{\n  \"bench\": \"pipeline_engine/per_column_programs\",\n");
+        json.push_str(&format!("  \"rows\": {rows},\n  \"reps\": {reps},\n  \"programs\": [\n"));
+        for (i, (name, wall_s, rps)) in pr5_rows.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"program\": \"{name}\", \"wall_s\": {wall_s:.6}, \
+                 \"rows_per_s\": {rps:.0}}}{}\n",
+                if i + 1 < pr5_rows.len() { "," } else { "" }
+            ));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(&path, json).expect("writing BENCH_PR5_JSON");
+        println!("per-column program rows written to {path}");
+        println!();
+    }
+
     // ---- generator-fed run: no materialized dataset anywhere -----------
     let gen_rows = rows.max(50_000);
     let pipeline = PipelineBuilder::new()

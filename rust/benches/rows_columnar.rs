@@ -149,9 +149,9 @@ fn run_columnar(raw: &[u8], plan: &Plan) -> (u64, usize) {
     // The engine's own chunking estimate — both paths chunk identically.
     let cb = plan.chunk_bytes();
     let mut state = ChunkState::new(plan);
-    let mut block = RowBlock::with_capacity(plan.schema, CHUNK_ROWS);
+    let mut block = RowBlock::with_capacity(plan.schema(), CHUNK_ROWS);
     let mut rows_seen = 0usize;
-    let mut dec = ChunkDecoder::new(plan.input, plan.schema);
+    let mut dec = ChunkDecoder::new(plan.input, plan.schema());
     for chunk in raw.chunks(cb) {
         block.clear();
         dec.feed_into(chunk, &mut block).unwrap();
@@ -164,7 +164,7 @@ fn run_columnar(raw: &[u8], plan: &Plan) -> (u64, usize) {
     rows_seen += block.num_rows();
 
     let mut sum = 0u64;
-    let mut dec = ChunkDecoder::new(plan.input, plan.schema);
+    let mut dec = ChunkDecoder::new(plan.input, plan.schema());
     for chunk in raw.chunks(cb) {
         block.clear();
         dec.feed_into(chunk, &mut block).unwrap();
@@ -196,17 +196,8 @@ fn main() {
             InputFormat::Binary => binary::encode_dataset(&ds),
             InputFormat::Utf8 => utf8::encode_dataset(&ds),
         };
-        let plan = Plan {
-            flags: spec.flags(),
-            modulus: spec.modulus(),
-            spec: spec.clone(),
-            schema: ds.schema(),
-            input,
-            chunk_rows: CHUNK_ROWS,
-            channel_depth: 2,
-            strategy: piper::pipeline::ExecStrategy::TwoPass,
-            decode_threads: 1,
-        };
+        let plan = Plan::compile(spec.clone(), ds.schema(), input, CHUNK_ROWS)
+            .expect("DLRM spec compiles against the synth schema");
 
         // Correctness gate: identical checksums before timing anything.
         let cb = plan.chunk_bytes();

@@ -214,6 +214,15 @@ use crate::report::TimeTag;
 /// the same quantities [`run`] derives from a one-shot buffer, so the
 /// modeled times are identical. All times are tagged sim.
 ///
+/// Per-column programs map naturally onto the modular-PE design: each
+/// sparse dataflow instantiates the column's own Modulus → GenVocab →
+/// ApplyVocab chain with its own vocabulary capacity, each dense
+/// dataflow the column's kernel chain — §5's "dynamically configured"
+/// PEs. The build-level knobs (kernel clock, SRAM-vs-HBM placement) key
+/// on the plan's largest vocabulary, and the SRAM capacity check sums
+/// the **per-column** capacities, so a heterogeneous plan only pays for
+/// what its programs declare.
+///
 /// The vocabulary-placement capacity check ([`VocabPlacement::validate`])
 /// runs at **planning** time: an over-capacity SRAM build fails in
 /// [`crate::pipeline::PipelineBuilder::build`], not inside a serving
@@ -235,18 +244,25 @@ impl PiperExecutor {
         PiperExecutor { mode: config.mode, config: Some(config) }
     }
 
-    /// The concrete accelerator configuration for a plan.
+    /// The concrete accelerator configuration for a plan. The build's
+    /// clock and vocabulary placement key on the plan's largest
+    /// **vocabulary-building** modulus (the biggest vocabulary decides
+    /// SRAM vs HBM and how the build closes timing — a modulus-only
+    /// passthrough column stores nothing, however large its range); the
+    /// SRAM capacity check itself sums each column's own capacity
+    /// ([`Plan::programs`]).
     fn config_for(&self, plan: &Plan) -> PiperConfig {
+        let modulus = plan.programs.max_vocab_modulus();
         let mut cfg = self.config.clone().unwrap_or_else(|| {
             PiperConfig::paper(
                 self.mode,
                 plan.input,
-                plan.modulus.unwrap_or(crate::ops::Modulus::VOCAB_5K),
+                modulus.unwrap_or(crate::ops::Modulus::VOCAB_5K),
             )
         });
         cfg.input = plan.input;
-        cfg.schema = plan.schema;
-        if let Some(m) = plan.modulus {
+        cfg.schema = plan.schema();
+        if let Some(m) = modulus {
             cfg.modulus = m;
         }
         cfg
@@ -271,8 +287,12 @@ impl Executor for PiperExecutor {
 
     fn plan_check(&self, plan: &Plan) -> crate::Result<()> {
         let cfg = self.config_for(plan);
-        if plan.flags.gen_vocab {
-            cfg.vocab_placement.validate(cfg.vocab_storage_bits())?;
+        if plan.has_gen_vocab() {
+            // Sum each column's own vocabulary capacity — a
+            // heterogeneous plan (a few big columns, many small ones)
+            // prices exactly what its programs ask for, not
+            // columns × max.
+            cfg.vocab_placement.validate(plan.programs.vocab_storage_bits())?;
         }
         Ok(())
     }

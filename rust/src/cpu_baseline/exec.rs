@@ -84,7 +84,7 @@ impl Executor for CpuExecutor {
             threads: self.threads,
             disk: self.disk,
             fused_gv: plan.strategy == crate::pipeline::ExecStrategy::Fused
-                && plan.flags.gen_vocab,
+                && plan.has_gen_vocab(),
             observe_time: Duration::ZERO,
             process_time: Duration::ZERO,
         }))
@@ -158,7 +158,7 @@ impl ExecutorRun for CpuRun {
         block: &RowBlock,
         sink: &mut dyn crate::pipeline::Sink,
     ) -> Result<()> {
-        if !self.state.flags.gen_vocab {
+        if !self.state.has_gen_vocab() {
             let out = self.process(block)?;
             return sink.push(&out);
         }
@@ -219,7 +219,7 @@ impl ExecutorRun for CpuRun {
         // the GV→AV intermediate round-trip disappears.
         let disk_sim = if self.kind == ConfigKind::I {
             let raw = stats.raw_bytes as usize;
-            let part = stats.rows as usize * self.state.schema.binary_row_bytes();
+            let part = stats.rows as usize * self.state.schema().binary_row_bytes();
             let mut d = self.disk.write_cost(raw, self.threads)
                 + self.disk.read_cost(raw, self.threads)
                 + self.disk.write_cost(part, self.threads)

@@ -64,10 +64,10 @@ impl Default for GpuModel {
 }
 
 impl GpuModel {
-    /// The full V100 timing model over run totals — the one definition
-    /// shared by the one-shot [`run`] and the streaming [`GpuExecutor`].
-    /// `utf8_bytes` is the raw text size when the input was UTF-8 (it
-    /// prices the host-side columnar conversion); `None` for binary.
+    /// The full V100 timing model over run totals for the paper's fixed
+    /// DLRM pipeline — the one-shot [`run`]'s model. `utf8_bytes` is the
+    /// raw text size when the input was UTF-8 (it prices the host-side
+    /// columnar conversion); `None` for binary.
     pub fn breakdown(
         &self,
         schema: Schema,
@@ -75,9 +75,63 @@ impl GpuModel {
         utf8_bytes: Option<usize>,
         unique_total: usize,
     ) -> GpuBreakdown {
+        // The DLRM chain: every sparse column runs modulus + genvocab +
+        // applyvocab + store, every dense column neg2zero + log + store,
+        // and every sparse column builds a vocabulary.
+        self.model(
+            schema,
+            rows,
+            utf8_bytes,
+            unique_total,
+            4 * schema.num_sparse,
+            3 * schema.num_dense,
+            schema.num_sparse,
+        )
+    }
+
+    /// The same model driven by compiled per-column programs: the
+    /// **dispatch launches** (per physical op per column) and the
+    /// **categorify volume** (values of vocabulary-building columns
+    /// only) follow what each column actually runs. The streaming-
+    /// kernel byte estimate stays a whole-table read+write per pass —
+    /// kernel chains are memory-bound, so chain length barely moves
+    /// bytes touched. For the uniform DLRM plan this reduces to
+    /// [`Self::breakdown`] — the streaming executor and the one-shot
+    /// model agree bit for bit.
+    pub fn breakdown_programs(
+        &self,
+        plans: &crate::ops::ColumnPlans,
+        rows: usize,
+        utf8_bytes: Option<usize>,
+        unique_total: usize,
+    ) -> GpuBreakdown {
+        let (ops_sparse, ops_dense) = plans.dispatch_ops();
+        self.model(
+            plans.schema,
+            rows,
+            utf8_bytes,
+            unique_total,
+            ops_sparse,
+            ops_dense,
+            plans.vocab_columns(),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn model(
+        &self,
+        schema: Schema,
+        rows: usize,
+        utf8_bytes: Option<usize>,
+        unique_total: usize,
+        ops_sparse: usize,
+        ops_dense: usize,
+        vocab_columns: usize,
+    ) -> GpuBreakdown {
         let bin_bytes = rows * schema.binary_row_bytes();
         let sparse_values = (rows * schema.num_sparse) as f64;
         let dense_values = (rows * schema.num_dense) as f64;
+        let vocab_values = (rows * vocab_columns) as f64;
 
         let convert = match utf8_bytes {
             Some(bytes) => Duration::from_secs_f64(bytes as f64 / self.convert_bps),
@@ -86,21 +140,20 @@ impl GpuModel {
         let transfer = Duration::from_secs_f64(2.0 * bin_bytes as f64 / self.pcie_bps);
 
         // Streaming kernels: each op reads+writes its column once.
-        // Sparse: modulus + gather-write; dense: neg2zero + log.
+        // Sparse: modulus + gather-write; dense: the kernel chain.
         let stream_bytes = (2.0 * sparse_values + 2.0 * dense_values) * 2.0 * 4.0;
         let stream_kernels =
             Duration::from_secs_f64(stream_bytes / (self.hbm_bps * self.stream_efficiency));
 
-        // Vocabulary: sort-based categorify over every sparse value +
-        // random gathers for apply + hash-build proportional to uniques.
-        let vocab_secs = sparse_values / self.sort_keys_per_sec
-            + sparse_values * 16.0 / self.random_bps
+        // Vocabulary: sort-based categorify over the vocabulary-building
+        // columns' values + random gathers for apply + hash-build
+        // proportional to uniques.
+        let vocab_secs = vocab_values / self.sort_keys_per_sec
+            + vocab_values * 16.0 / self.random_bps
             + unique_total as f64 * 32.0 / self.random_bps;
         let vocab = Duration::from_secs_f64(vocab_secs);
 
         // Dispatch: nvtabular launches per op per column per pass.
-        let ops_sparse = 4 * schema.num_sparse; // modulus, genvocab, applyvocab, store
-        let ops_dense = 3 * schema.num_dense; // neg2zero, log, store
         let dispatch = self.per_op_dispatch * (ops_sparse + ops_dense) as u32;
 
         GpuBreakdown { convert, transfer, stream_kernels, vocab, dispatch }
@@ -308,8 +361,11 @@ impl ExecutorRun for GpuExecRun {
             crate::accel::InputFormat::Utf8 => Some(stats.raw_bytes as usize),
             crate::accel::InputFormat::Binary => None,
         };
-        let breakdown = self.model.breakdown(
-            self.state.schema,
+        // Priced per compiled program: for the uniform DLRM plan this is
+        // exactly `breakdown` (the one-shot model), so the equivalence
+        // test between the two paths pins the reduction.
+        let breakdown = self.model.breakdown_programs(
+            &self.state.programs,
             stats.rows as usize,
             utf8_bytes,
             unique_total,

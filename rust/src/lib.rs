@@ -15,8 +15,11 @@
 //! * [`decode`] — the byte-at-a-time UTF-8 decoder (paper Fig. 6) and the
 //!   4-byte-per-cycle *parallel* decoder (paper Script 1), bit-exact to
 //!   each other.
-//! * [`ops`] — the operator library of Table 1, plus the insertion-ordered
-//!   vocabulary with mergeable per-thread sub-dictionaries.
+//! * [`ops`] — the operator library of Table 1, the insertion-ordered
+//!   vocabulary with mergeable per-thread sub-dictionaries, and the typed
+//!   per-column program layer ([`ops::ColumnProgram`] /
+//!   [`ops::PipelineSpec`]): different transforms on different columns,
+//!   compiled at planning time into per-column fixed-function slots.
 //! * [`cpu_baseline`] — Meta's row-partitioned multithreaded pipeline
 //!   (Split-Input-File → Generate-Vocab → Apply-Vocab → Concatenate) in
 //!   the paper's Configs I/II/III. This baseline is *measured*, not

@@ -37,9 +37,17 @@ COMMANDS:
               decode_threads=N (default: one per core; 1 = sequential decode)
   compare     rows=20000 vocab=5000 format=utf8|binary
   serve       addr=127.0.0.1:7700 jobs=1
-  submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000 strategy=fused|two-pass
+  submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000 spec='...'
+              strategy=fused|two-pass
   train       input=PATH format=utf8 vocab=5000 steps=100 artifacts=artifacts
   help        print this message
+
+spec= accepts per-column operator programs — `;`-separated rules of the
+form `sparse[*]: modulus:5000|genvocab|applyvocab`, with selectors
+sparse[*], sparse[3], sparse[0..4] (same for dense) and the dense ops
+neg2zero, log, clip:lo:hi, bucketize:b1:b2:... Later rules override
+earlier ones; a flat op list (no selector) means every column.
+vocab=N is sugar for the uniform DLRM preset at modulus N.
 
 preprocess and submit stream the input file in bounded chunks — the
 dataset is never resident in memory. Under the fused strategy (the
@@ -287,7 +295,17 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
         InputFormat::Utf8 => WireFormat::Utf8,
         InputFormat::Binary => WireFormat::Binary,
     };
-    let job = Job { schema: Schema::CRITEO, modulus: modulus_of(cfg)?, format };
+    // The wire handshake carries the full per-column spec; vocab= is
+    // sugar for the uniform DLRM preset.
+    let spec = match cfg.get("spec") {
+        Some(s) => piper::ops::PipelineSpec::parse(s)?,
+        None => piper::ops::PipelineSpec::dlrm(modulus_of(cfg)?.range),
+    };
+    // Resolve the spec against the job schema *before* connecting: a
+    // selector/schema mismatch should be this planning error, not a
+    // broken pipe after the worker rejects the handshake.
+    spec.compile(Schema::CRITEO)?;
+    let job = Job { schema: Schema::CRITEO, spec, format };
     let chunk = cfg.get_usize("chunk", 1 << 20)?;
     let strategy = match cfg.get("strategy") {
         Some(s) => piper::pipeline::ExecStrategy::parse(s)?,
@@ -296,7 +314,7 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
     // Stream the file to the worker chunk by chunk — the leader never
     // holds the dataset either. Fused sends it once; two-pass twice.
     let mut source = FileSource::open(Path::new(path), input)?;
-    let run = net::run_leader_source(addr, job, &mut source, chunk, strategy)?;
+    let run = net::run_leader_source(addr, &job, &mut source, chunk, strategy)?;
     println!(
         "preprocessed {} rows ({} vocab entries) in {} over TCP ({})",
         run.stats.rows,

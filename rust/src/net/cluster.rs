@@ -73,7 +73,7 @@ pub fn shard_rows(raw: &[u8], schema: Schema, binary: bool, n: usize) -> Vec<std
 /// two-pass protocol at all.
 pub fn run_cluster(
     addrs: &[String],
-    job: Job,
+    job: &Job,
     raw: &[u8],
     chunk_size: usize,
 ) -> Result<ClusterRun> {
@@ -122,10 +122,12 @@ pub fn run_cluster(
     let vocab_entries: usize = global.iter().map(|c| c.len()).sum();
 
     // broadcast merged vocabularies + pass 2, collecting results per
-    // worker on a reader thread (streams overlap).
+    // worker on a reader thread (streams overlap). The merged payload
+    // is serialized once — it can be many megabytes for large
+    // per-column vocabularies.
+    let packed = protocol::pack_vocabs(&global);
     let mut collectors = Vec::new();
     for mut conn in conns {
-        let packed = protocol::pack_vocabs(&global);
         protocol::write_frame(&mut conn.writer, Tag::VocabLoad, &packed)?;
         let schema = job.schema;
         let reader_handle = std::thread::spawn(move || -> Result<ProcessedColumns> {
@@ -169,7 +171,12 @@ pub fn run_cluster(
 }
 
 /// Spawn `n` loopback workers and run a sharded job against them.
-pub fn run_cluster_loopback(n: usize, job: Job, raw: &[u8], chunk_size: usize) -> Result<ClusterRun> {
+pub fn run_cluster_loopback(
+    n: usize,
+    job: &Job,
+    raw: &[u8],
+    chunk_size: usize,
+) -> Result<ClusterRun> {
     let mut addrs = Vec::new();
     let mut handles = Vec::new();
     for _ in 0..n.max(1) {
@@ -209,10 +216,10 @@ mod tests {
         let ds = SynthDataset::generate(SynthConfig::small(240));
         let m = Modulus::new(997);
         let raw = utf8::encode_dataset(&ds);
-        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+        let job = Job::dlrm(ds.schema(), m, WireFormat::Utf8);
         let want = reference(&ds, m);
         for n in [1usize, 2, 4] {
-            let run = run_cluster_loopback(n, job, &raw, 777).unwrap();
+            let run = run_cluster_loopback(n, &job, &raw, 777).unwrap();
             assert_eq!(run.workers, n);
             assert_eq!(run.processed, want, "{n} workers must equal sequential scan");
         }
@@ -223,10 +230,33 @@ mod tests {
         let ds = SynthDataset::generate(SynthConfig::small(150));
         let m = Modulus::new(499);
         let raw = binary::encode_dataset(&ds);
-        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Binary };
-        let run = run_cluster_loopback(3, job, &raw, 512).unwrap();
+        let job = Job::dlrm(ds.schema(), m, WireFormat::Binary);
+        let run = run_cluster_loopback(3, &job, &raw, 512).unwrap();
         assert_eq!(run.stats.rows, 150);
         assert_eq!(run.processed, reference(&ds, m));
+    }
+
+    /// The cluster's vocabulary merge is per column, so per-column
+    /// programs shard too: a heterogeneous job across workers equals
+    /// the sequential reference.
+    #[test]
+    fn cluster_heterogeneous_spec_agrees_with_single_scan() {
+        let ds = SynthDataset::generate(SynthConfig::small(200));
+        let spec = crate::ops::PipelineSpec::parse(
+            "sparse[*]: modulus:997|genvocab|applyvocab; \
+             sparse[0..4]: modulus:101|genvocab|applyvocab; \
+             sparse[5]: modulus:53; \
+             dense[*]: neg2zero|log; \
+             dense[1]: clip:0:50|bucketize:2:8:32",
+        )
+        .unwrap();
+        let want = spec.execute(&ds.rows, ds.schema()).unwrap();
+        let raw = utf8::encode_dataset(&ds);
+        let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+        for n in [1usize, 3] {
+            let run = run_cluster_loopback(n, &job, &raw, 619).unwrap();
+            assert_eq!(run.processed, want, "{n} workers");
+        }
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub struct LeaderRun {
 /// Convenience wrapper over [`run_leader_source`] for in-memory buffers.
 pub fn run_leader(
     addr: &str,
-    job: Job,
+    job: &Job,
     raw: &[u8],
     chunk_size: usize,
     strategy: ExecStrategy,
@@ -53,7 +53,7 @@ pub fn run_leader(
 /// streaming overlap.
 pub fn run_leader_source(
     addr: &str,
-    job: Job,
+    job: &Job,
     source: &mut dyn Source,
     chunk_size: usize,
     strategy: ExecStrategy,
@@ -132,7 +132,7 @@ pub fn run_leader_source(
 /// Spawn a worker on an ephemeral loopback port, run the leader against
 /// it (fused — the single-node default), and return the result — the
 /// one-call path used by examples and tests.
-pub fn run_loopback(job: Job, raw: &[u8], chunk_size: usize) -> Result<LeaderRun> {
+pub fn run_loopback(job: &Job, raw: &[u8], chunk_size: usize) -> Result<LeaderRun> {
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let worker = std::thread::spawn(move || super::worker::serve_one(&listener));
@@ -154,8 +154,8 @@ mod tests {
         let ds = SynthDataset::generate(SynthConfig::small(200));
         let m = Modulus::new(997);
         let raw = utf8::encode_dataset(&ds);
-        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
-        let run = run_loopback(job, &raw, 4096).unwrap();
+        let job = Job::dlrm(ds.schema(), m, WireFormat::Utf8);
+        let run = run_loopback(&job, &raw, 4096).unwrap();
 
         let baseline = crate::cpu_baseline::run(
             &crate::cpu_baseline::BaselineConfig::new(
@@ -174,10 +174,31 @@ mod tests {
         let ds = SynthDataset::generate(SynthConfig::small(120));
         let m = Modulus::new(101);
         let raw = binary::encode_dataset(&ds);
-        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Binary };
-        let run = run_loopback(job, &raw, 333).unwrap();
+        let job = Job::dlrm(ds.schema(), m, WireFormat::Binary);
+        let run = run_loopback(&job, &raw, 333).unwrap();
         assert_eq!(run.processed.num_rows(), 120);
         assert!(run.stats.vocab_entries > 0);
+    }
+
+    /// A heterogeneous per-column job over real TCP equals the spec's
+    /// reference interpreter — the wire handshake carries the whole
+    /// program set, not just one modulus.
+    #[test]
+    fn loopback_heterogeneous_spec_matches_reference() {
+        let ds = SynthDataset::generate(SynthConfig::small(210));
+        let spec = crate::ops::PipelineSpec::parse(
+            "sparse[*]: modulus:997|genvocab|applyvocab; \
+             sparse[0..4]: modulus:101|genvocab|applyvocab; \
+             dense[*]: neg2zero|log; \
+             dense[2]: clip:0:100|bucketize:1:10:100",
+        )
+        .unwrap();
+        let want = spec.execute(&ds.rows, ds.schema()).unwrap();
+        let raw = utf8::encode_dataset(&ds);
+        let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+        let run = run_loopback(&job, &raw, 2048).unwrap();
+        assert_eq!(run.processed, want);
+        assert_eq!(run.stats.rows, 210);
     }
 
     /// Both wire strategies against a real worker must produce
@@ -188,13 +209,13 @@ mod tests {
         let ds = SynthDataset::generate(SynthConfig::small(180));
         let m = Modulus::new(997);
         let raw = utf8::encode_dataset(&ds);
-        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
+        let job = Job::dlrm(ds.schema(), m, WireFormat::Utf8);
 
         let run_with = |strategy: ExecStrategy| {
             let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
             let addr = listener.local_addr().unwrap();
             let worker = std::thread::spawn(move || super::super::worker::serve_one(&listener));
-            let run = run_leader(&addr.to_string(), job, &raw, 1024, strategy).unwrap();
+            let run = run_leader(&addr.to_string(), &job, &raw, 1024, strategy).unwrap();
             worker.join().unwrap().unwrap();
             run
         };
@@ -209,9 +230,9 @@ mod tests {
         let ds = SynthDataset::generate(SynthConfig::small(30));
         let m = Modulus::new(53);
         let raw = utf8::encode_dataset(&ds);
-        let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
-        let a = run_loopback(job, &raw, 7).unwrap();
-        let b = run_loopback(job, &raw, 64 * 1024).unwrap();
+        let job = Job::dlrm(ds.schema(), m, WireFormat::Utf8);
+        let a = run_loopback(&job, &raw, 7).unwrap();
+        let b = run_loopback(&job, &raw, 64 * 1024).unwrap();
         assert_eq!(a.processed, b.processed);
     }
 }

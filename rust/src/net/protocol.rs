@@ -16,7 +16,7 @@
 
 use crate::data::row::ProcessedRow;
 use crate::data::Schema;
-use crate::ops::Modulus;
+use crate::ops::{Modulus, PipelineSpec};
 use crate::Result;
 use std::io::{Read, Write};
 
@@ -130,38 +130,55 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<(Tag, Vec<u8>)> {
     Ok((Tag::from_u8(tag[0])?, payload))
 }
 
-/// Job header: schema, modulus range, wire format.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Job header: schema, wire format and the full per-column operator
+/// spec. The spec crosses the wire in its canonical [`PipelineSpec`]
+/// display form and is re-parsed (and therefore re-validated) on the
+/// worker — `parse(display(spec)) == spec` is pinned by the spec
+/// round-trip property test.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Job {
     pub schema: Schema,
-    pub modulus: Modulus,
+    pub spec: PipelineSpec,
     pub format: WireFormat,
 }
 
 impl Job {
+    /// The classic fixed-pipeline job: the paper's DLRM preset at one
+    /// uniform vocabulary size (what the old modulus-only header could
+    /// express).
+    pub fn dlrm(schema: Schema, modulus: Modulus, format: WireFormat) -> Job {
+        Job { schema, spec: PipelineSpec::dlrm(modulus.range), format }
+    }
+
+    /// Frame layout: `num_dense:u32 num_sparse:u32 format:u8 spec:utf8`
+    /// (the spec takes the rest of the frame — frames are already
+    /// length-prefixed).
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(13);
+        let spec = self.spec.to_string();
+        let mut out = Vec::with_capacity(9 + spec.len());
         out.extend_from_slice(&(self.schema.num_dense as u32).to_le_bytes());
         out.extend_from_slice(&(self.schema.num_sparse as u32).to_le_bytes());
-        out.extend_from_slice(&self.modulus.range.to_le_bytes());
         out.push(match self.format {
             WireFormat::Utf8 => 0,
             WireFormat::Binary => 1,
         });
+        out.extend_from_slice(spec.as_bytes());
         out
     }
 
     pub fn decode(buf: &[u8]) -> Result<Job> {
-        anyhow::ensure!(buf.len() == 13, "job frame must be 13 bytes, got {}", buf.len());
+        anyhow::ensure!(buf.len() >= 9, "job frame must be >= 9 bytes, got {}", buf.len());
         let rd = |i: usize| u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]]);
-        let format = match buf[12] {
+        let format = match buf[8] {
             0 => WireFormat::Utf8,
             1 => WireFormat::Binary,
             v => anyhow::bail!("bad wire format {v}"),
         };
+        let spec = std::str::from_utf8(&buf[9..])
+            .map_err(|e| anyhow::anyhow!("job spec is not UTF-8: {e}"))?;
         Ok(Job {
             schema: Schema::new(rd(0) as usize, rd(4) as usize),
-            modulus: Modulus::new(rd(8)),
+            spec: PipelineSpec::parse(spec)?,
             format,
         })
     }
@@ -253,12 +270,35 @@ mod tests {
 
     #[test]
     fn job_roundtrip() {
+        let job = Job::dlrm(Schema::new(13, 26), Modulus::VOCAB_5K, WireFormat::Binary);
+        assert_eq!(Job::decode(&job.encode()).unwrap(), job);
+    }
+
+    #[test]
+    fn job_roundtrip_heterogeneous_spec() {
         let job = Job {
             schema: Schema::new(13, 26),
-            modulus: Modulus::VOCAB_5K,
-            format: WireFormat::Binary,
+            spec: PipelineSpec::parse(
+                "sparse[*]: modulus:5000|genvocab|applyvocab; \
+                 sparse[0..4]: modulus:100000|genvocab|applyvocab; \
+                 dense[*]: neg2zero|log; dense[3]: clip:0:100|bucketize:1:10:100",
+            )
+            .unwrap(),
+            format: WireFormat::Utf8,
         };
         assert_eq!(Job::decode(&job.encode()).unwrap(), job);
+    }
+
+    #[test]
+    fn job_decode_rejects_garbage() {
+        assert!(Job::decode(&[0u8; 4]).is_err(), "short frame");
+        let mut bad = Job::dlrm(Schema::CRITEO, Modulus::VOCAB_5K, WireFormat::Utf8).encode();
+        bad[8] = 9;
+        assert!(Job::decode(&bad).is_err(), "bad format byte");
+        let mut junk = Job::dlrm(Schema::CRITEO, Modulus::VOCAB_5K, WireFormat::Utf8).encode();
+        junk.truncate(9);
+        junk.extend_from_slice(b"frobnicate");
+        assert!(Job::decode(&junk).is_err(), "invalid spec string");
     }
 
     #[test]

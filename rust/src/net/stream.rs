@@ -1,5 +1,9 @@
 //! Streaming preprocessor — the worker-side core, independent of the
-//! transport so it can be tested without sockets. Speaks both execution
+//! transport so it can be tested without sockets. Runs the job's
+//! compiled per-column programs through the engine's shared functional
+//! core ([`ChunkState`]), so a wire job supports everything a local
+//! plan does (per-column vocabulary sizes, partial dense chains,
+//! clip/bucketize) with bit-identical output. Speaks both execution
 //! strategies: the classic two-pass protocol (pass 1 GenVocab, pass 2
 //! ApplyVocab — required by the cluster leader-merge, whose vocabulary
 //! barrier sits between the passes) and the fused single-pass protocol
@@ -8,8 +12,8 @@
 use crate::accel::InputFormat;
 use crate::data::row::{ProcessedColumns, ProcessedRow};
 use crate::data::{RowBlock, Schema};
-use crate::ops::{log1p, HashVocab, Modulus, Vocab, VOCAB_MISS};
-use crate::pipeline::{ChunkDecoder, DecodeOptions, ExecStrategy};
+use crate::ops::PipelineSpec;
+use crate::pipeline::{ChunkDecoder, ChunkState, DecodeOptions, ExecStrategy};
 use crate::Result;
 
 /// Raw wire format of the incoming stream.
@@ -44,17 +48,15 @@ enum Phase {
 /// The streaming preprocessor. Two-pass: GenVocab during pass 1,
 /// ApplyVocab + dense finishing during pass 2. Fused: both in one scan
 /// per chunk ([`Self::fused_chunk`]), emitting rows immediately. Shares
-/// the engine's [`ChunkDecoder`] and decodes every chunk into one
-/// reusable column-major [`RowBlock`] scratch — memory high-water is
-/// the vocabularies plus one chunk, never the dataset, and no per-row
-/// allocation happens on any pass.
+/// the engine's [`ChunkDecoder`] and per-column [`ChunkState`], and
+/// decodes every chunk into one reusable column-major [`RowBlock`]
+/// scratch — memory high-water is the vocabularies plus one chunk,
+/// never the dataset.
 #[derive(Debug)]
 pub struct StreamingPreprocessor {
-    schema: Schema,
-    modulus: Modulus,
+    state: ChunkState,
     format: WireFormat,
     decode: DecodeOptions,
-    vocabs: Vec<HashVocab>,
     decoder: ChunkDecoder,
     scratch: RowBlock,
     phase: Phase,
@@ -64,32 +66,36 @@ pub struct StreamingPreprocessor {
 
 impl StreamingPreprocessor {
     /// Sequential decode (decode threads = 1) — deterministic across
-    /// deployments and right for the small frames tests feed.
-    pub fn new(schema: Schema, modulus: Modulus, format: WireFormat) -> Self {
-        Self::with_decode_options(schema, modulus, format, DecodeOptions::default())
+    /// deployments and right for the small frames tests feed. Compiles
+    /// the spec against the schema (the worker-side planning step — a
+    /// selector/schema mismatch fails here, before any data frame).
+    pub fn new(spec: &PipelineSpec, schema: Schema, format: WireFormat) -> Result<Self> {
+        Self::with_decode_options(spec, schema, format, DecodeOptions::default())
     }
 
     /// Worker deployments pass the engine's decode options here so wire
     /// chunks fan out across decode threads exactly like local chunks
     /// ([`crate::decode::shard`]); output is bit-identical either way.
     pub fn with_decode_options(
+        spec: &PipelineSpec,
         schema: Schema,
-        modulus: Modulus,
         format: WireFormat,
         decode: DecodeOptions,
-    ) -> Self {
-        StreamingPreprocessor {
-            schema,
-            modulus,
+    ) -> Result<Self> {
+        Ok(StreamingPreprocessor {
+            state: ChunkState::with_programs(spec.compile(schema)?),
             format,
             decode,
-            vocabs: (0..schema.num_sparse).map(|_| HashVocab::new()).collect(),
             decoder: ChunkDecoder::with_options(format.into(), schema, decode),
             scratch: RowBlock::new(schema),
             phase: Phase::Start,
             rows_pass1: 0,
             rows_pass2: 0,
-        }
+        })
+    }
+
+    fn schema(&self) -> Schema {
+        self.state.schema()
     }
 
     /// Pass-1 chunk: observe sparse values into the vocabularies.
@@ -102,7 +108,8 @@ impl StreamingPreprocessor {
         self.phase = Phase::Pass1;
         self.scratch.clear();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
-        self.observe_scratch();
+        self.state.observe(&self.scratch);
+        self.rows_pass1 += self.scratch.num_rows();
         Ok(())
     }
 
@@ -115,24 +122,14 @@ impl StreamingPreprocessor {
         );
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::with_options(self.format.into(), self.schema, self.decode),
+            ChunkDecoder::with_options(self.format.into(), self.schema(), self.decode),
         );
         self.scratch.clear();
         decoder.finish_into(&mut self.scratch)?;
-        self.observe_scratch();
+        self.state.observe(&self.scratch);
+        self.rows_pass1 += self.scratch.num_rows();
         self.phase = Phase::BetweenPasses;
         Ok(())
-    }
-
-    /// GenVocab over the scratch block: one tight loop per sparse column.
-    fn observe_scratch(&mut self) {
-        let m = self.modulus;
-        for (c, vocab) in self.vocabs.iter_mut().enumerate() {
-            for &s in self.scratch.sparse_col(c) {
-                vocab.observe(m.apply(s));
-            }
-        }
-        self.rows_pass1 += self.scratch.num_rows();
     }
 
     /// Pass-2 chunk: returns the preprocessed rows it completes.
@@ -143,7 +140,7 @@ impl StreamingPreprocessor {
         anyhow::ensure!(self.phase == Phase::Pass2, "pass2_chunk in phase {:?}", self.phase);
         self.scratch.clear();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
-        let out = self.apply_scratch();
+        let out = rows_of(&self.state.process(&self.scratch));
         self.rows_pass2 += out.len();
         Ok(out)
     }
@@ -156,20 +153,21 @@ impl StreamingPreprocessor {
         anyhow::ensure!(self.phase == Phase::Pass2, "pass2_end in phase {:?}", self.phase);
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::with_options(self.format.into(), self.schema, self.decode),
+            ChunkDecoder::with_options(self.format.into(), self.schema(), self.decode),
         );
         self.scratch.clear();
         decoder.finish_into(&mut self.scratch)?;
-        let out = self.apply_scratch();
+        let out = rows_of(&self.state.process(&self.scratch));
         self.rows_pass2 += out.len();
         self.phase = Phase::Done;
         Ok(out)
     }
 
     /// Fused chunk: observe sparse values *and* emit processed rows in
-    /// one scan — the single-pass protocol. Bit-identical to the
-    /// two-pass result because appearance indices are fixed at first
-    /// appearance.
+    /// one scan — the single-pass protocol ([`ChunkState::process_fused`],
+    /// the same fused core the local executors run). Bit-identical to
+    /// the two-pass result because appearance indices are fixed at
+    /// first appearance.
     pub fn fused_chunk(&mut self, chunk: &[u8]) -> Result<Vec<ProcessedRow>> {
         anyhow::ensure!(
             matches!(self.phase, Phase::Start | Phase::Fused),
@@ -179,7 +177,7 @@ impl StreamingPreprocessor {
         self.phase = Phase::Fused;
         self.scratch.clear();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
-        let out = self.fuse_scratch();
+        let out = rows_of(&self.state.process_fused(&self.scratch));
         self.rows_pass1 += out.len();
         self.rows_pass2 += out.len();
         Ok(out)
@@ -194,74 +192,28 @@ impl StreamingPreprocessor {
         );
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::with_options(self.format.into(), self.schema, self.decode),
+            ChunkDecoder::with_options(self.format.into(), self.schema(), self.decode),
         );
         self.scratch.clear();
         decoder.finish_into(&mut self.scratch)?;
-        let out = self.fuse_scratch();
+        let out = rows_of(&self.state.process_fused(&self.scratch));
         self.rows_pass1 += out.len();
         self.rows_pass2 += out.len();
         self.phase = Phase::Done;
         Ok(out)
     }
 
-    /// Fused GenVocab+ApplyVocab + dense finishing over the scratch
-    /// block. Row-major iteration visits each column's values in row
-    /// order, so [`Vocab::observe_apply`] assigns exactly the indices
-    /// the column-major two-pass scan does.
-    fn fuse_scratch(&mut self) -> Vec<ProcessedRow> {
-        let m = self.modulus;
-        let schema = self.schema;
-        let block = &self.scratch;
-        let vocabs = &mut self.vocabs;
-        let n = block.num_rows();
-        let dcols: Vec<&[i32]> = (0..schema.num_dense).map(|c| block.dense_col(c)).collect();
-        let scols: Vec<&[u32]> = (0..schema.num_sparse).map(|c| block.sparse_col(c)).collect();
-        let mut out = Vec::with_capacity(n);
-        for r in 0..n {
-            let dense = dcols.iter().map(|col| log1p(col[r])).collect();
-            let mut sparse = Vec::with_capacity(schema.num_sparse);
-            for (col, vocab) in scols.iter().zip(vocabs.iter_mut()) {
-                sparse.push(vocab.observe_apply(m.apply(col[r])));
-            }
-            out.push(ProcessedRow { label: block.labels()[r], dense, sparse });
-        }
-        out
-    }
-
-    /// ApplyVocab + dense finishing over the scratch block, re-assembled
-    /// into the wire's row-major frames. Column slices are hoisted once
-    /// per chunk so the per-row transpose does no repeated slicing.
-    fn apply_scratch(&self) -> Vec<ProcessedRow> {
-        let block = &self.scratch;
-        let n = block.num_rows();
-        let dcols: Vec<&[i32]> = (0..self.schema.num_dense).map(|c| block.dense_col(c)).collect();
-        let scols: Vec<&[u32]> =
-            (0..self.schema.num_sparse).map(|c| block.sparse_col(c)).collect();
-        let mut out = Vec::with_capacity(n);
-        for r in 0..n {
-            let dense = dcols.iter().map(|col| log1p(col[r])).collect();
-            let sparse = scols
-                .iter()
-                .zip(&self.vocabs)
-                // a miss is impossible after pass 1 / a vocab import;
-                // the sentinel keeps it loud instead of aliasing index 0
-                .map(|(col, vocab)| vocab.apply(self.modulus.apply(col[r])).unwrap_or(VOCAB_MISS))
-                .collect();
-            out.push(ProcessedRow { label: block.labels()[r], dense, sparse });
-        }
-        out
-    }
-
     pub fn vocab_entries(&self) -> usize {
-        self.vocabs.iter().map(|v| v.len()).sum()
+        self.state.vocab_entries()
     }
 
     /// Export the per-column vocabularies as keys in appearance order —
     /// the payload a cluster worker ships to the leader for the global
     /// merge (multi-accelerator deployment, paper §3.4.2/§4.4.6).
+    /// Columns whose program builds no vocabulary export empty lists.
     pub fn export_vocabs(&self) -> Vec<Vec<u32>> {
-        self.vocabs
+        self.state
+            .vocabs
             .iter()
             .map(|v| v.iter_ordered().map(|(k, _)| k).collect())
             .collect()
@@ -271,20 +223,21 @@ impl StreamingPreprocessor {
     /// appearance order). Called between the passes on cluster workers.
     pub fn import_vocabs(&mut self, columns: Vec<Vec<u32>>) -> Result<()> {
         anyhow::ensure!(
-            columns.len() == self.schema.num_sparse,
+            columns.len() == self.schema().num_sparse,
             "vocab import has {} columns, schema wants {}",
             columns.len(),
-            self.schema.num_sparse
+            self.schema().num_sparse
         );
         anyhow::ensure!(
             self.phase == Phase::BetweenPasses,
             "vocab import only between passes (phase {:?})",
             self.phase
         );
-        self.vocabs = columns
+        use crate::ops::Vocab as _;
+        self.state.vocabs = columns
             .into_iter()
             .map(|keys| {
-                let mut v = HashVocab::new();
+                let mut v = crate::ops::HashVocab::new();
                 for k in keys {
                     v.observe(k);
                 }
@@ -299,18 +252,23 @@ impl StreamingPreprocessor {
     }
 }
 
+/// Re-assemble a column block into the wire's row-major frames.
+fn rows_of(cols: &ProcessedColumns) -> Vec<ProcessedRow> {
+    (0..cols.num_rows()).map(|r| cols.row(r)).collect()
+}
+
 /// Convenience: preprocess an in-memory buffer with a given chunk size
 /// under either strategy, collecting columns (used by tests and the
 /// leader's loopback fallback).
 pub fn preprocess_buffered(
+    spec: &PipelineSpec,
     schema: Schema,
-    modulus: Modulus,
     format: WireFormat,
     raw: &[u8],
     chunk_size: usize,
     strategy: ExecStrategy,
 ) -> Result<ProcessedColumns> {
-    let mut sp = StreamingPreprocessor::new(schema, modulus, format);
+    let mut sp = StreamingPreprocessor::new(spec, schema, format)?;
     let mut cols = ProcessedColumns::with_schema(schema);
     match strategy {
         ExecStrategy::TwoPass => {
@@ -345,6 +303,11 @@ pub fn preprocess_buffered(
 mod tests {
     use super::*;
     use crate::data::{binary, synth::SynthConfig, utf8, SynthDataset};
+    use crate::ops::Modulus;
+
+    fn dlrm(m: Modulus) -> PipelineSpec {
+        PipelineSpec::dlrm(m.range)
+    }
 
     #[test]
     fn streaming_matches_batch_for_all_chunk_sizes() {
@@ -365,7 +328,7 @@ mod tests {
         for strategy in [ExecStrategy::TwoPass, ExecStrategy::Fused] {
             for chunk in [1usize, 3, 17, 64, 1024, raw.len()] {
                 let got = preprocess_buffered(
-                    ds.schema(), m, WireFormat::Utf8, &raw, chunk, strategy,
+                    &dlrm(m), ds.schema(), WireFormat::Utf8, &raw, chunk, strategy,
                 ).unwrap();
                 assert_eq!(got, reference, "chunk size {chunk} ({strategy:?})");
             }
@@ -378,10 +341,11 @@ mod tests {
         let m = Modulus::new(499);
         for strategy in [ExecStrategy::TwoPass, ExecStrategy::Fused] {
             let u = preprocess_buffered(
-                ds.schema(), m, WireFormat::Utf8, &utf8::encode_dataset(&ds), 53, strategy,
+                &dlrm(m), ds.schema(), WireFormat::Utf8, &utf8::encode_dataset(&ds), 53, strategy,
             ).unwrap();
             let b = preprocess_buffered(
-                ds.schema(), m, WireFormat::Binary, &binary::encode_dataset(&ds), 53, strategy,
+                &dlrm(m), ds.schema(), WireFormat::Binary, &binary::encode_dataset(&ds), 53,
+                strategy,
             ).unwrap();
             assert_eq!(u, b, "{strategy:?}");
         }
@@ -395,12 +359,50 @@ mod tests {
         let m = Modulus::new(997);
         let raw = utf8::encode_dataset(&ds);
         let two = preprocess_buffered(
-            ds.schema(), m, WireFormat::Utf8, &raw, 97, ExecStrategy::TwoPass,
+            &dlrm(m), ds.schema(), WireFormat::Utf8, &raw, 97, ExecStrategy::TwoPass,
         ).unwrap();
         let fused = preprocess_buffered(
-            ds.schema(), m, WireFormat::Utf8, &raw, 97, ExecStrategy::Fused,
+            &dlrm(m), ds.schema(), WireFormat::Utf8, &raw, 97, ExecStrategy::Fused,
         ).unwrap();
         assert_eq!(fused, two);
+    }
+
+    /// A heterogeneous per-column job through the wire core equals the
+    /// spec's reference interpreter, under both strategies.
+    #[test]
+    fn per_column_programs_stream_bit_identically() {
+        let ds = SynthDataset::generate(SynthConfig::small(240));
+        let spec = PipelineSpec::parse(
+            "sparse[*]: modulus:997|genvocab|applyvocab; \
+             sparse[0..4]: modulus:101|genvocab|applyvocab; \
+             sparse[5]: modulus:53; \
+             dense[*]: neg2zero|log; \
+             dense[0]: clip:0:100|bucketize:1:10:100; \
+             dense[1]: neg2zero",
+        )
+        .unwrap();
+        let reference = spec.execute(&ds.rows, ds.schema()).unwrap();
+        for (format, raw) in [
+            (WireFormat::Utf8, utf8::encode_dataset(&ds)),
+            (WireFormat::Binary, binary::encode_dataset(&ds)),
+        ] {
+            for strategy in [ExecStrategy::TwoPass, ExecStrategy::Fused] {
+                let got = preprocess_buffered(
+                    &spec, ds.schema(), format, &raw, 131, strategy,
+                ).unwrap();
+                assert_eq!(got, reference, "{format:?} {strategy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_schema_mismatch_fails_at_construction() {
+        let spec = PipelineSpec::parse("sparse[40]: modulus:7|genvocab|applyvocab").unwrap();
+        assert!(
+            StreamingPreprocessor::new(&spec, crate::data::Schema::CRITEO, WireFormat::Utf8)
+                .is_err(),
+            "selector out of schema must fail before any data frame"
+        );
     }
 
     #[test]
@@ -408,7 +410,8 @@ mod tests {
         let ds = SynthDataset::generate(SynthConfig::small(5));
         let raw = utf8::encode_dataset(&ds);
         let mut sp =
-            StreamingPreprocessor::new(ds.schema(), Modulus::new(97), WireFormat::Utf8);
+            StreamingPreprocessor::new(&dlrm(Modulus::new(97)), ds.schema(), WireFormat::Utf8)
+                .unwrap();
         sp.fused_chunk(&raw).unwrap();
         assert!(sp.pass1_chunk(&raw).is_err(), "two-pass frame after fused must fail");
         assert!(sp.pass2_chunk(&raw).is_err());
@@ -421,7 +424,8 @@ mod tests {
         let ds = SynthDataset::generate(SynthConfig::small(5));
         let raw = utf8::encode_dataset(&ds);
         let mut sp =
-            StreamingPreprocessor::new(ds.schema(), Modulus::new(97), WireFormat::Utf8);
+            StreamingPreprocessor::new(&dlrm(Modulus::new(97)), ds.schema(), WireFormat::Utf8)
+                .unwrap();
         // pass2 before pass1_end is an error
         assert!(sp.pass2_chunk(&raw).is_err());
         sp.pass1_chunk(&raw).unwrap();
@@ -438,7 +442,8 @@ mod tests {
         let mut raw = binary::encode_dataset(&ds);
         raw.pop(); // corrupt
         let mut sp =
-            StreamingPreprocessor::new(ds.schema(), Modulus::new(97), WireFormat::Binary);
+            StreamingPreprocessor::new(&dlrm(Modulus::new(97)), ds.schema(), WireFormat::Binary)
+                .unwrap();
         sp.pass1_chunk(&raw).unwrap();
         assert!(sp.pass1_end().is_err());
     }
@@ -448,7 +453,8 @@ mod tests {
         let ds = SynthDataset::generate(SynthConfig::small(100));
         let raw = utf8::encode_dataset(&ds);
         let mut sp =
-            StreamingPreprocessor::new(ds.schema(), Modulus::new(997), WireFormat::Utf8);
+            StreamingPreprocessor::new(&dlrm(Modulus::new(997)), ds.schema(), WireFormat::Utf8)
+                .unwrap();
         sp.pass1_chunk(&raw).unwrap();
         sp.pass1_end().unwrap();
         assert!(sp.vocab_entries() > 0);

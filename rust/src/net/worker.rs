@@ -32,7 +32,10 @@ fn handle(stream: TcpStream) -> Result<RunStats> {
     let mut reader = std::io::BufReader::with_capacity(1 << 20, stream.try_clone()?);
     let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream);
 
-    // First frame must be the job header.
+    // First frame must be the job header. Decoding it re-parses (and
+    // re-validates) the per-column spec; compiling it against the job's
+    // schema is the worker-side planning step — both fail here, before
+    // any data frame is accepted.
     let (tag, payload) = protocol::read_frame(&mut reader)?;
     anyhow::ensure!(tag == Tag::Job, "expected Job frame, got {tag:?}");
     let job = protocol::Job::decode(&payload)?;
@@ -44,7 +47,7 @@ fn handle(stream: TcpStream) -> Result<RunStats> {
         swar: true,
     };
     let mut sp =
-        StreamingPreprocessor::with_decode_options(job.schema, job.modulus, job.format, decode);
+        StreamingPreprocessor::with_decode_options(&job.spec, job.schema, job.format, decode)?;
 
     loop {
         let (tag, payload) = protocol::read_frame(&mut reader)?;

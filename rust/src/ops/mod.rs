@@ -11,16 +11,28 @@
 //! | Neg2Zero    | [`neg2zero`]                           |
 //! | Logarithm   | [`log1p`]                              |
 //! | Concatenate | [`crate::data::row::ProcessedColumns::extend_from`] |
+//! | Clip        | [`DenseKernel::Clip`] (per-column extension)     |
+//! | Bucketize   | [`DenseKernel::Bucketize`] (per-column extension) |
 //!
 //! All operators are value-level functions plus slice-level batch forms —
 //! the batch forms are what the CPU baseline's hot loops and the
-//! accelerator's PE models call.
+//! accelerator's PE models call. Which operator runs on which column is
+//! decided by typed per-column programs ([`program`]): a
+//! [`PipelineSpec`] binds a [`ColumnProgram`] to column selectors and
+//! compiles to one fixed-function slot per column ([`ColumnPlans`]).
 
 pub mod hex;
+pub mod program;
 pub mod spec;
 pub mod vocab;
 
-pub use spec::{OpFlags, OpSpec, PipelineSpec};
+pub use program::{
+    ColumnKind, ColumnOp, ColumnPlans, ColumnProgram, ColumnRange, ColumnSelector,
+    DenseColPlan, DenseKernel, SparseColPlan,
+};
+/// Historical name for [`ColumnOp`] — the parsed spec token.
+pub use program::ColumnOp as OpSpec;
+pub use spec::{PipelineSpec, SpecRule};
 pub use vocab::{DirectVocab, HashVocab, Vocab, VocabSet, VOCAB_MISS};
 
 /// `FillMissing`: absent value → 0 (paper Table 1 — the default for empty

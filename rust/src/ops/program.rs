@@ -1,0 +1,946 @@
+//! Typed per-column operator programs — the plan layer of the paper's
+//! generalizability claim (§5: the modular PEs can be "dynamically
+//! configured" per pipeline and per dataset).
+//!
+//! Different tabular workloads need *different transforms on different
+//! columns* (per-feature vocabulary sizes, log-scaling only some dense
+//! features, bucketizing one column). This module provides the typed
+//! vocabulary for that:
+//!
+//! * [`ColumnOp`] — one per-value kernel, parsed from a spec token
+//!   (`modulus:5000`, `clip:0:100`, `bucketize:1:10:100`, ...);
+//! * [`ColumnProgram`] — a **validated** op chain for one column, typed
+//!   by [`ColumnKind`] (sparse chains may hold Modulus/GenVocab/
+//!   ApplyVocab, dense chains Neg2Zero/Logarithm/Clip/Bucketize;
+//!   FillMissing/Hex2Int are legal in both and compile to nothing —
+//!   they are implied by the decoded-row boundary);
+//! * [`ColumnSelector`]/[`ColumnRange`] — which columns a program binds
+//!   to in the spec grammar (`sparse[*]`, `dense[3]`, `sparse[0..4]`);
+//! * the compiled physical side: [`SparseColPlan`] (fixed-function
+//!   modulus + vocab slots), [`DenseKernel`]/[`DenseColPlan`] (an f32
+//!   kernel chain), and [`ColumnPlans`] — one slot per column of a
+//!   [`Schema`], the thing executor hot loops dispatch on.
+//!
+//! Validation happens at **construction** ([`ColumnProgram::new`]), so
+//! everything downstream of a program is infallible on the validation
+//! axis; resolution against a concrete schema (selector bounds) happens
+//! once at planning time ([`crate::ops::PipelineSpec::compile`]).
+
+use std::fmt;
+use std::ops::Range;
+
+use crate::data::row::ProcessedColumns;
+use crate::data::{DecodedRow, Schema};
+use crate::ops::{log1p, neg2zero, DirectVocab, HashVocab, Modulus, Vocab, VOCAB_MISS};
+use crate::Result;
+
+// ---------------------------------------------------------------------
+// Ops
+// ---------------------------------------------------------------------
+
+/// One operator token (Table 1 names plus the per-column extensions).
+///
+/// `Decode` and `Concatenate` are pipeline *boundary markers*: they are
+/// accepted by the flat spec grammar for compatibility (the classic
+/// `decode | ... | concatenate` string) but are not column operators —
+/// a [`ColumnProgram`] rejects them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ColumnOp {
+    Decode,
+    FillMissing,
+    Hex2Int,
+    Modulus(u32),
+    GenVocab,
+    ApplyVocab,
+    Neg2Zero,
+    Logarithm,
+    /// Clamp a dense value into `[lo, hi]`.
+    Clip { lo: f32, hi: f32 },
+    /// Map a dense value to its bucket index: the number of (strictly
+    /// increasing) boundaries ≤ the value.
+    Bucketize { boundaries: Vec<f32> },
+    Concatenate,
+}
+
+impl ColumnOp {
+    /// Parse one spec token. Multi-argument ops separate arguments with
+    /// `:` (commas stay free as a top-level op separator):
+    /// `clip:0:100`, `bucketize:1:10:100`.
+    pub fn parse(token: &str) -> Result<ColumnOp> {
+        let t = token.trim().to_ascii_lowercase();
+        let (name, arg) = match t.split_once(':') {
+            Some((n, a)) => (n.trim().to_string(), Some(a.trim().to_string())),
+            None => (t, None),
+        };
+        let no_arg = |op: ColumnOp| -> Result<ColumnOp> {
+            anyhow::ensure!(arg.is_none(), "operator `{name}` takes no argument");
+            Ok(op)
+        };
+        let f32_args = |what: &str| -> Result<Vec<f32>> {
+            arg.as_deref()
+                .ok_or_else(|| anyhow::anyhow!("{name} needs arguments, e.g. {what}"))?
+                .split(':')
+                .map(|s| {
+                    let v: f32 = s
+                        .trim()
+                        .replace('_', "")
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("{name} argument `{s}`: {e}"))?;
+                    anyhow::ensure!(v.is_finite(), "{name} argument `{s}` must be finite");
+                    Ok(v)
+                })
+                .collect()
+        };
+        match name.as_str() {
+            "decode" => no_arg(ColumnOp::Decode),
+            "fillmissing" => no_arg(ColumnOp::FillMissing),
+            "hex2int" => no_arg(ColumnOp::Hex2Int),
+            "modulus" => {
+                let r: u32 = arg
+                    .as_deref()
+                    .ok_or_else(|| anyhow::anyhow!("modulus needs a range, e.g. modulus:5000"))?
+                    .replace('_', "")
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("modulus range: {e}"))?;
+                ColumnOp::Modulus(r).validated()
+            }
+            "genvocab" => no_arg(ColumnOp::GenVocab),
+            "applyvocab" => no_arg(ColumnOp::ApplyVocab),
+            "neg2zero" => no_arg(ColumnOp::Neg2Zero),
+            "logarithm" | "log" => no_arg(ColumnOp::Logarithm),
+            "clip" => {
+                let args = f32_args("clip:0:100")?;
+                anyhow::ensure!(args.len() == 2, "clip takes exactly two arguments (lo:hi)");
+                ColumnOp::Clip { lo: args[0], hi: args[1] }.validated()
+            }
+            "bucketize" => ColumnOp::Bucketize { boundaries: f32_args("bucketize:1:10:100")? }
+                .validated(),
+            "concatenate" | "concat" => no_arg(ColumnOp::Concatenate),
+            other => anyhow::bail!("unknown operator `{other}`"),
+        }
+    }
+
+    /// [`Self::validate_args`] in builder position.
+    fn validated(self) -> Result<ColumnOp> {
+        self.validate_args()?;
+        Ok(self)
+    }
+
+    /// Argument well-formedness — the single source of truth shared by
+    /// the token parser and [`ColumnProgram::new`], so programs built in
+    /// code (the fields are public) uphold the same rules as parsed
+    /// ones.
+    pub fn validate_args(&self) -> Result<()> {
+        match self {
+            ColumnOp::Modulus(r) => {
+                anyhow::ensure!(*r > 0, "modulus range must be positive");
+            }
+            ColumnOp::Clip { lo, hi } => {
+                anyhow::ensure!(lo.is_finite() && hi.is_finite(), "clip bounds must be finite");
+                anyhow::ensure!(lo <= hi, "clip lo ({lo}) must be <= hi ({hi})");
+            }
+            ColumnOp::Bucketize { boundaries } => {
+                anyhow::ensure!(!boundaries.is_empty(), "bucketize needs >= 1 boundary");
+                anyhow::ensure!(
+                    boundaries.iter().all(|b| b.is_finite()),
+                    "bucketize boundaries must be finite"
+                );
+                anyhow::ensure!(
+                    boundaries.windows(2).all(|w| w[0] < w[1]),
+                    "bucketize boundaries must be strictly increasing"
+                );
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Is this a real column operator (vs a flat-grammar boundary marker)?
+    pub fn is_column_op(&self) -> bool {
+        !matches!(self, ColumnOp::Decode | ColumnOp::Concatenate)
+    }
+
+    /// Which column kinds may run this op.
+    pub fn applies_to(&self, kind: ColumnKind) -> bool {
+        match self {
+            ColumnOp::FillMissing => true,
+            ColumnOp::Hex2Int
+            | ColumnOp::Modulus(_)
+            | ColumnOp::GenVocab
+            | ColumnOp::ApplyVocab => kind == ColumnKind::Sparse,
+            ColumnOp::Neg2Zero
+            | ColumnOp::Logarithm
+            | ColumnOp::Clip { .. }
+            | ColumnOp::Bucketize { .. } => kind == ColumnKind::Dense,
+            ColumnOp::Decode | ColumnOp::Concatenate => false,
+        }
+    }
+}
+
+impl fmt::Display for ColumnOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ColumnOp::Decode => write!(f, "decode"),
+            ColumnOp::FillMissing => write!(f, "fillmissing"),
+            ColumnOp::Hex2Int => write!(f, "hex2int"),
+            ColumnOp::Modulus(r) => write!(f, "modulus:{r}"),
+            ColumnOp::GenVocab => write!(f, "genvocab"),
+            ColumnOp::ApplyVocab => write!(f, "applyvocab"),
+            ColumnOp::Neg2Zero => write!(f, "neg2zero"),
+            ColumnOp::Logarithm => write!(f, "logarithm"),
+            ColumnOp::Clip { lo, hi } => write!(f, "clip:{lo}:{hi}"),
+            ColumnOp::Bucketize { boundaries } => {
+                write!(f, "bucketize")?;
+                for b in boundaries {
+                    write!(f, ":{b}")?;
+                }
+                Ok(())
+            }
+            ColumnOp::Concatenate => write!(f, "concatenate"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Programs
+// ---------------------------------------------------------------------
+
+/// The two feature-column kinds of the tabular [`Schema`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnKind {
+    Sparse,
+    Dense,
+}
+
+impl ColumnKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ColumnKind::Sparse => "sparse",
+            ColumnKind::Dense => "dense",
+        }
+    }
+}
+
+/// A validated op chain for one column. Construction is the validation
+/// boundary: a `ColumnProgram` that exists is well-formed, so compiling
+/// and executing it cannot fail on the validation axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnProgram {
+    kind: ColumnKind,
+    ops: Vec<ColumnOp>,
+}
+
+impl ColumnProgram {
+    /// Validate an op chain for a column kind.
+    ///
+    /// Shared rules: only column ops (no Decode/Concatenate), each op
+    /// applicable to `kind`. Sparse rules: Modulus/GenVocab/ApplyVocab
+    /// at most once each; GenVocab requires an earlier Modulus (it
+    /// bounds the vocabulary capacity); ApplyVocab requires an earlier
+    /// GenVocab. Dense rule: Neg2Zero precedes Logarithm when both are
+    /// present (Table 1's order; Logarithm alone still clamps).
+    pub fn new(kind: ColumnKind, ops: Vec<ColumnOp>) -> Result<ColumnProgram> {
+        anyhow::ensure!(!ops.is_empty(), "empty {} program", kind.name());
+        for op in &ops {
+            anyhow::ensure!(
+                op.is_column_op(),
+                "`{op}` is a pipeline boundary marker, not a column operator"
+            );
+            anyhow::ensure!(
+                op.applies_to(kind),
+                "`{op}` does not apply to {} columns",
+                kind.name()
+            );
+            // Programs built in code (ColumnOp fields are public) must
+            // uphold the same argument rules parsed tokens do.
+            op.validate_args()?;
+        }
+        // Stateful/argumented ops may appear at most once per column.
+        for (what, hit) in [
+            ("modulus", ops.iter().filter(|o| matches!(o, ColumnOp::Modulus(_))).count()),
+            ("genvocab", ops.iter().filter(|o| matches!(o, ColumnOp::GenVocab)).count()),
+            ("applyvocab", ops.iter().filter(|o| matches!(o, ColumnOp::ApplyVocab)).count()),
+        ] {
+            anyhow::ensure!(hit <= 1, "{what} may appear at most once per column");
+        }
+        let pos = |f: fn(&ColumnOp) -> bool| ops.iter().position(f);
+        if let Some(g) = pos(|o| matches!(o, ColumnOp::GenVocab)) {
+            let m = pos(|o| matches!(o, ColumnOp::Modulus(_)))
+                .ok_or_else(|| anyhow::anyhow!("GenVocab requires Modulus earlier in the program"))?;
+            anyhow::ensure!(m < g, "Modulus must precede GenVocab");
+        }
+        if let Some(a) = pos(|o| matches!(o, ColumnOp::ApplyVocab)) {
+            let g = pos(|o| matches!(o, ColumnOp::GenVocab)).ok_or_else(|| {
+                anyhow::anyhow!("ApplyVocab requires GenVocab earlier in the program")
+            })?;
+            anyhow::ensure!(g < a, "GenVocab must precede ApplyVocab");
+        }
+        if let (Some(l), Some(n)) = (
+            pos(|o| matches!(o, ColumnOp::Logarithm)),
+            pos(|o| matches!(o, ColumnOp::Neg2Zero)),
+        ) {
+            anyhow::ensure!(n < l, "Neg2Zero must precede Logarithm");
+        }
+        Ok(ColumnProgram { kind, ops })
+    }
+
+    pub fn kind(&self) -> ColumnKind {
+        self.kind
+    }
+
+    pub fn ops(&self) -> &[ColumnOp] {
+        &self.ops
+    }
+
+    /// Compile to the fixed-function sparse slot. Panics in debug if the
+    /// program is dense-kinded (construction prevents it).
+    pub(crate) fn compile_sparse(&self) -> SparseColPlan {
+        debug_assert_eq!(self.kind, ColumnKind::Sparse);
+        let mut slot = SparseColPlan::default();
+        for op in &self.ops {
+            match op {
+                ColumnOp::Modulus(r) => slot.modulus = Some(Modulus::new(*r)),
+                ColumnOp::GenVocab => slot.gen_vocab = true,
+                ColumnOp::ApplyVocab => slot.apply_vocab = true,
+                // implied by the decoded-row boundary
+                ColumnOp::FillMissing | ColumnOp::Hex2Int => {}
+                _ => unreachable!("validated sparse program"),
+            }
+        }
+        slot
+    }
+
+    /// Compile to the dense kernel chain.
+    pub(crate) fn compile_dense(&self) -> DenseColPlan {
+        debug_assert_eq!(self.kind, ColumnKind::Dense);
+        let kernels = self
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                ColumnOp::Neg2Zero => Some(DenseKernel::Neg2Zero),
+                ColumnOp::Logarithm => Some(DenseKernel::Log1p),
+                ColumnOp::Clip { lo, hi } => Some(DenseKernel::Clip { lo: *lo, hi: *hi }),
+                ColumnOp::Bucketize { boundaries } => {
+                    Some(DenseKernel::Bucketize { boundaries: boundaries.clone() })
+                }
+                ColumnOp::FillMissing => None, // implied by decode
+                _ => unreachable!("validated dense program"),
+            })
+            .collect();
+        DenseColPlan { kernels }
+    }
+}
+
+impl fmt::Display for ColumnProgram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, op) in self.ops.iter().enumerate() {
+            if i > 0 {
+                write!(f, "|")?;
+            }
+            write!(f, "{op}")?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Selectors
+// ---------------------------------------------------------------------
+
+/// Column indices a spec rule binds to, within one column kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnRange {
+    /// Every column of the kind: `[*]`.
+    All,
+    /// A single column: `[3]`.
+    One(usize),
+    /// A half-open span: `[0..4]` = columns 0,1,2,3.
+    Span(usize, usize),
+}
+
+impl ColumnRange {
+    /// Concrete indices against a kind with `n` columns — bounds are a
+    /// *resolution* error (schema mismatch), not a validation error.
+    pub fn resolve(&self, n: usize) -> Result<Range<usize>> {
+        match *self {
+            ColumnRange::All => Ok(0..n),
+            ColumnRange::One(i) => {
+                anyhow::ensure!(i < n, "column index {i} out of range (have {n})");
+                Ok(i..i + 1)
+            }
+            ColumnRange::Span(a, b) => {
+                anyhow::ensure!(a < b, "empty column range {a}..{b}");
+                anyhow::ensure!(b <= n, "column range {a}..{b} out of range (have {n})");
+                Ok(a..b)
+            }
+        }
+    }
+
+    fn parse(body: &str) -> Result<ColumnRange> {
+        let body = body.trim();
+        if body == "*" {
+            return Ok(ColumnRange::All);
+        }
+        if let Some((a, b)) = body.split_once("..") {
+            let a: usize = a.trim().parse().map_err(|e| anyhow::anyhow!("range start: {e}"))?;
+            let b: usize = b.trim().parse().map_err(|e| anyhow::anyhow!("range end: {e}"))?;
+            anyhow::ensure!(a < b, "empty column range {a}..{b}");
+            return Ok(ColumnRange::Span(a, b));
+        }
+        let i: usize = body.parse().map_err(|e| anyhow::anyhow!("column index: {e}"))?;
+        Ok(ColumnRange::One(i))
+    }
+}
+
+impl fmt::Display for ColumnRange {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ColumnRange::All => write!(f, "*"),
+            ColumnRange::One(i) => write!(f, "{i}"),
+            ColumnRange::Span(a, b) => write!(f, "{a}..{b}"),
+        }
+    }
+}
+
+/// A column selector of the spec grammar: kind + range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColumnSelector {
+    pub kind: ColumnKind,
+    pub range: ColumnRange,
+}
+
+impl ColumnSelector {
+    pub fn sparse(range: ColumnRange) -> Self {
+        ColumnSelector { kind: ColumnKind::Sparse, range }
+    }
+
+    pub fn dense(range: ColumnRange) -> Self {
+        ColumnSelector { kind: ColumnKind::Dense, range }
+    }
+
+    /// Parse `sparse[*]` / `dense[0..4]` / `sparse[3]`.
+    pub fn parse(s: &str) -> Result<ColumnSelector> {
+        let s = s.trim().to_ascii_lowercase();
+        let (kind, rest) = if let Some(r) = s.strip_prefix("sparse") {
+            (ColumnKind::Sparse, r)
+        } else if let Some(r) = s.strip_prefix("dense") {
+            (ColumnKind::Dense, r)
+        } else {
+            anyhow::bail!("selector `{s}` must start with sparse[...] or dense[...]");
+        };
+        let body = rest
+            .trim()
+            .strip_prefix('[')
+            .and_then(|r| r.strip_suffix(']'))
+            .ok_or_else(|| anyhow::anyhow!("selector `{s}` needs [*], [i] or [a..b]"))?;
+        Ok(ColumnSelector { kind, range: ColumnRange::parse(body)? })
+    }
+}
+
+impl fmt::Display for ColumnSelector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]", self.kind.name(), self.range)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compiled physical plans
+// ---------------------------------------------------------------------
+
+/// The compiled fixed-function slot of one sparse column: optional
+/// modulus plus the vocabulary stages — exactly the modular-PE chain
+/// (Modulus → GenVocab → ApplyVocab) the accelerator instantiates per
+/// sparse dataflow.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SparseColPlan {
+    pub modulus: Option<Modulus>,
+    pub gen_vocab: bool,
+    pub apply_vocab: bool,
+}
+
+impl SparseColPlan {
+    /// The stateless prefix of the chain (modulus limiting).
+    #[inline]
+    pub fn map(&self, v: u32) -> u32 {
+        self.modulus.map_or(v, |m| m.apply(v))
+    }
+
+    /// Does this column touch no vocabulary state at all
+    /// (modulus-only / passthrough)? Stateless columns are shardable
+    /// across threads even under the fused strategy — the engine's
+    /// stateless stage fills them, the sequential fused stage skips
+    /// them.
+    #[inline]
+    pub fn is_stateless(&self) -> bool {
+        !self.gen_vocab && !self.apply_vocab
+    }
+
+    /// Vocabulary capacity this column needs (the modulus range bounds
+    /// the key universe). `None` when the column builds no vocabulary.
+    pub fn vocab_capacity(&self) -> Option<u32> {
+        if self.gen_vocab {
+            self.modulus.map(|m| m.range)
+        } else {
+            None
+        }
+    }
+
+    /// Ops in the physical chain (the GPU model's dispatch unit): one
+    /// per fixed-function stage plus the final store.
+    pub fn num_ops(&self) -> usize {
+        1 + usize::from(self.modulus.is_some())
+            + usize::from(self.gen_vocab)
+            + usize::from(self.apply_vocab)
+    }
+}
+
+/// One compiled dense kernel: f32 → f32, applied after the decoded i32
+/// is widened once (`x as f32`). The f32 chain is bit-identical to the
+/// historical integer forms: `max(x as f32, 0) == neg2zero(x) as f32`
+/// for every i32, and `ln_1p` of that equals [`crate::ops::log1p`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum DenseKernel {
+    Neg2Zero,
+    Log1p,
+    Clip { lo: f32, hi: f32 },
+    Bucketize { boundaries: Vec<f32> },
+}
+
+impl DenseKernel {
+    #[inline]
+    pub fn apply(&self, v: f32) -> f32 {
+        match self {
+            DenseKernel::Neg2Zero => {
+                if v < 0.0 {
+                    0.0
+                } else {
+                    v
+                }
+            }
+            DenseKernel::Log1p => {
+                let v = if v < 0.0 { 0.0 } else { v };
+                v.ln_1p()
+            }
+            DenseKernel::Clip { lo, hi } => v.clamp(*lo, *hi),
+            DenseKernel::Bucketize { boundaries } => {
+                boundaries.partition_point(|b| *b <= v) as f32
+            }
+        }
+    }
+}
+
+/// The compiled kernel chain of one dense column.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DenseColPlan {
+    pub kernels: Vec<DenseKernel>,
+}
+
+impl DenseColPlan {
+    /// One dense value through the chain.
+    #[inline]
+    pub fn apply_value(&self, d: i32) -> f32 {
+        let mut v = d as f32;
+        for k in &self.kernels {
+            v = k.apply(v);
+        }
+        v
+    }
+
+    /// A column slice through the chain, appended to `dst`. The common
+    /// chains are specialized so the uniform DLRM plan keeps its exact
+    /// pre-redesign hot loop (and its bit patterns).
+    pub fn run(&self, col: &[i32], dst: &mut Vec<f32>) {
+        dst.reserve(col.len());
+        match self.kernels.as_slice() {
+            [] => {
+                for &d in col {
+                    dst.push(d as f32);
+                }
+            }
+            [DenseKernel::Neg2Zero] => {
+                for &d in col {
+                    dst.push(neg2zero(d) as f32);
+                }
+            }
+            [DenseKernel::Neg2Zero, DenseKernel::Log1p] => {
+                for &d in col {
+                    dst.push(log1p(d));
+                }
+            }
+            kernels => {
+                for &d in col {
+                    let mut v = d as f32;
+                    for k in kernels {
+                        v = k.apply(v);
+                    }
+                    dst.push(v);
+                }
+            }
+        }
+    }
+
+    /// Physical ops incl. the final store (GPU dispatch model unit).
+    pub fn num_ops(&self) -> usize {
+        1 + self.kernels.len()
+    }
+}
+
+/// The fully compiled physical plan: one slot per column of the schema.
+/// This is what [`crate::pipeline::ChunkState`] dispatches on — built
+/// once at planning time, immutable afterwards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnPlans {
+    pub schema: Schema,
+    /// One slot per sparse column.
+    pub sparse: Vec<SparseColPlan>,
+    /// One kernel chain per dense column.
+    pub dense: Vec<DenseColPlan>,
+}
+
+impl ColumnPlans {
+    /// A passthrough plan (no ops on any column) for a schema.
+    pub fn passthrough(schema: Schema) -> Self {
+        ColumnPlans {
+            schema,
+            sparse: vec![SparseColPlan::default(); schema.num_sparse],
+            dense: vec![DenseColPlan::default(); schema.num_dense],
+        }
+    }
+
+    /// Does any column build a vocabulary? (Decides the two-pass rewind
+    /// and the fused-vs-sharded CPU decomposition.)
+    pub fn any_gen_vocab(&self) -> bool {
+        self.sparse.iter().any(|c| c.gen_vocab)
+    }
+
+    /// Number of sparse columns that build a vocabulary.
+    pub fn vocab_columns(&self) -> usize {
+        self.sparse.iter().filter(|c| c.gen_vocab).count()
+    }
+
+    /// The largest modulus range across all columns.
+    pub fn max_modulus(&self) -> Option<Modulus> {
+        self.sparse
+            .iter()
+            .filter_map(|c| c.modulus)
+            .max_by_key(|m| m.range)
+    }
+
+    /// The largest modulus range among **vocabulary-building** columns —
+    /// what the accelerator's clock/placement heuristic keys on (a
+    /// modulus-only passthrough column occupies no vocabulary storage,
+    /// however large its range). Falls back to [`Self::max_modulus`]
+    /// when no column builds a vocabulary.
+    pub fn max_vocab_modulus(&self) -> Option<Modulus> {
+        self.sparse
+            .iter()
+            .filter(|c| c.gen_vocab)
+            .filter_map(|c| c.modulus)
+            .max_by_key(|m| m.range)
+            .or_else(|| self.max_modulus())
+    }
+
+    /// SRAM bits the vocabulary structures need, summed **per column**
+    /// over each column's own capacity (a heterogeneous plan with four
+    /// 100K columns and twenty-two 5K columns needs far less than a
+    /// uniform 100K plan — the check prices exactly what the programs
+    /// ask for).
+    pub fn vocab_storage_bits(&self) -> u64 {
+        self.sparse
+            .iter()
+            .filter_map(|c| c.vocab_capacity())
+            .map(DirectVocab::storage_bits_for)
+            .sum()
+    }
+
+    /// Physical op counts `(sparse_ops, dense_ops)` across all columns,
+    /// incl. one store per column — the GPU model's dispatch units.
+    pub fn dispatch_ops(&self) -> (usize, usize) {
+        (
+            self.sparse.iter().map(|c| c.num_ops()).sum(),
+            self.dense.iter().map(|c| c.num_ops()).sum(),
+        )
+    }
+
+    /// Reference (two-pass, row-wise) execution over decoded rows — the
+    /// semantics oracle the streaming executors are pinned against.
+    pub fn execute_rows(&self, rows: &[DecodedRow]) -> ProcessedColumns {
+        // pass 1: vocabularies (insertion-ordered, per column)
+        let mut vocabs: Vec<HashVocab> =
+            (0..self.schema.num_sparse).map(|_| HashVocab::new()).collect();
+        if self.any_gen_vocab() {
+            for row in rows {
+                for ((slot, vocab), &s) in
+                    self.sparse.iter().zip(vocabs.iter_mut()).zip(&row.sparse)
+                {
+                    if slot.gen_vocab {
+                        vocab.observe(slot.map(s));
+                    }
+                }
+            }
+        }
+        // pass 2: emit
+        let mut out = ProcessedColumns::with_schema(self.schema);
+        for row in rows {
+            out.labels.push(row.label);
+            for ((plan, col), &d) in self.dense.iter().zip(out.dense.iter_mut()).zip(&row.dense)
+            {
+                col.push(plan.apply_value(d));
+            }
+            for (((slot, vocab), col), &s) in self
+                .sparse
+                .iter()
+                .zip(&vocabs)
+                .zip(out.sparse.iter_mut())
+                .zip(&row.sparse)
+            {
+                let v = slot.map(s);
+                col.push(if slot.apply_vocab {
+                    // validated: ApplyVocab implies GenVocab observed v
+                    vocab.apply(v).unwrap_or(VOCAB_MISS)
+                } else {
+                    v
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparse_prog(ops: Vec<ColumnOp>) -> Result<ColumnProgram> {
+        ColumnProgram::new(ColumnKind::Sparse, ops)
+    }
+
+    fn dense_prog(ops: Vec<ColumnOp>) -> Result<ColumnProgram> {
+        ColumnProgram::new(ColumnKind::Dense, ops)
+    }
+
+    #[test]
+    fn op_tokens_round_trip_display() {
+        for token in [
+            "fillmissing",
+            "hex2int",
+            "modulus:5000",
+            "genvocab",
+            "applyvocab",
+            "neg2zero",
+            "logarithm",
+            "clip:0:100",
+            "clip:-3.5:2.25",
+            "bucketize:1:10:100",
+            "decode",
+            "concatenate",
+        ] {
+            let op = ColumnOp::parse(token).unwrap();
+            assert_eq!(ColumnOp::parse(&op.to_string()).unwrap(), op, "{token}");
+        }
+    }
+
+    #[test]
+    fn clip_and_bucketize_args_validated() {
+        assert!(ColumnOp::parse("clip").is_err(), "clip needs args");
+        assert!(ColumnOp::parse("clip:1").is_err(), "clip needs two args");
+        assert!(ColumnOp::parse("clip:5:1").is_err(), "lo > hi");
+        assert!(ColumnOp::parse("clip:a:b").is_err());
+        assert!(ColumnOp::parse("clip:nan:1").is_err(), "finite only");
+        assert!(ColumnOp::parse("bucketize").is_err());
+        assert!(ColumnOp::parse("bucketize:3:1").is_err(), "must increase");
+        assert!(ColumnOp::parse("bucketize:1:1").is_err(), "strictly");
+        assert_eq!(
+            ColumnOp::parse("bucketize:1").unwrap(),
+            ColumnOp::Bucketize { boundaries: vec![1.0] }
+        );
+    }
+
+    #[test]
+    fn program_kind_rules() {
+        // dense ops on sparse columns and vice versa are rejected
+        assert!(sparse_prog(vec![ColumnOp::Neg2Zero]).is_err());
+        assert!(sparse_prog(vec![ColumnOp::Clip { lo: 0.0, hi: 1.0 }]).is_err());
+        assert!(dense_prog(vec![ColumnOp::Modulus(5)]).is_err());
+        assert!(dense_prog(vec![ColumnOp::GenVocab]).is_err());
+        // boundary markers are not column ops
+        assert!(sparse_prog(vec![ColumnOp::Decode]).is_err());
+        assert!(dense_prog(vec![ColumnOp::Concatenate]).is_err());
+        // fillmissing is legal on both
+        assert!(sparse_prog(vec![ColumnOp::FillMissing, ColumnOp::Modulus(5)]).is_ok());
+        assert!(dense_prog(vec![ColumnOp::FillMissing, ColumnOp::Neg2Zero]).is_ok());
+    }
+
+    #[test]
+    fn program_dependency_rules() {
+        assert!(sparse_prog(vec![ColumnOp::GenVocab]).is_err(), "needs modulus");
+        assert!(
+            sparse_prog(vec![ColumnOp::GenVocab, ColumnOp::Modulus(5)]).is_err(),
+            "order"
+        );
+        assert!(
+            sparse_prog(vec![ColumnOp::Modulus(5), ColumnOp::ApplyVocab]).is_err(),
+            "apply needs gen"
+        );
+        assert!(
+            sparse_prog(vec![
+                ColumnOp::Modulus(5),
+                ColumnOp::GenVocab,
+                ColumnOp::GenVocab
+            ])
+            .is_err(),
+            "duplicate gen"
+        );
+        assert!(
+            sparse_prog(vec![
+                ColumnOp::Modulus(5),
+                ColumnOp::Modulus(7),
+                ColumnOp::GenVocab
+            ])
+            .is_err(),
+            "duplicate modulus"
+        );
+        assert!(
+            dense_prog(vec![ColumnOp::Logarithm, ColumnOp::Neg2Zero]).is_err(),
+            "n2z must precede log"
+        );
+        assert!(dense_prog(vec![ColumnOp::Logarithm]).is_ok(), "log alone clamps");
+    }
+
+    /// Programmatic construction must uphold the same argument
+    /// well-formedness the token parser enforces — a `ColumnProgram`
+    /// that exists never panics downstream.
+    #[test]
+    fn program_argument_rules() {
+        assert!(sparse_prog(vec![ColumnOp::Modulus(0)]).is_err(), "zero modulus");
+        assert!(
+            dense_prog(vec![ColumnOp::Clip { lo: 5.0, hi: 1.0 }]).is_err(),
+            "clip lo > hi"
+        );
+        assert!(
+            dense_prog(vec![ColumnOp::Clip { lo: f32::NAN, hi: 1.0 }]).is_err(),
+            "NaN clip bound"
+        );
+        assert!(
+            dense_prog(vec![ColumnOp::Bucketize { boundaries: vec![] }]).is_err(),
+            "empty boundaries"
+        );
+        assert!(
+            dense_prog(vec![ColumnOp::Bucketize { boundaries: vec![3.0, 1.0] }]).is_err(),
+            "unsorted boundaries"
+        );
+        assert!(
+            dense_prog(vec![ColumnOp::Bucketize { boundaries: vec![1.0, f32::INFINITY] }])
+                .is_err(),
+            "non-finite boundary"
+        );
+    }
+
+    #[test]
+    fn selectors_parse_and_round_trip() {
+        for (s, want) in [
+            ("sparse[*]", ColumnSelector::sparse(ColumnRange::All)),
+            ("dense[*]", ColumnSelector::dense(ColumnRange::All)),
+            ("sparse[3]", ColumnSelector::sparse(ColumnRange::One(3))),
+            ("dense[0..4]", ColumnSelector::dense(ColumnRange::Span(0, 4))),
+            (" SPARSE[ 0..26 ] ", ColumnSelector::sparse(ColumnRange::Span(0, 26))),
+        ] {
+            let sel = ColumnSelector::parse(s).unwrap();
+            assert_eq!(sel, want, "{s}");
+            assert_eq!(ColumnSelector::parse(&sel.to_string()).unwrap(), sel);
+        }
+        assert!(ColumnSelector::parse("label[*]").is_err());
+        assert!(ColumnSelector::parse("sparse").is_err());
+        assert!(ColumnSelector::parse("sparse[4..2]").is_err());
+        assert!(ColumnSelector::parse("sparse[x]").is_err());
+    }
+
+    #[test]
+    fn range_resolution_bounds() {
+        assert_eq!(ColumnRange::All.resolve(4).unwrap(), 0..4);
+        assert_eq!(ColumnRange::One(3).resolve(4).unwrap(), 3..4);
+        assert!(ColumnRange::One(4).resolve(4).is_err());
+        assert_eq!(ColumnRange::Span(1, 3).resolve(4).unwrap(), 1..3);
+        assert!(ColumnRange::Span(1, 5).resolve(4).is_err());
+    }
+
+    #[test]
+    fn dense_kernels_semantics() {
+        let clip = DenseKernel::Clip { lo: 0.0, hi: 10.0 };
+        assert_eq!(clip.apply(-5.0), 0.0);
+        assert_eq!(clip.apply(5.0), 5.0);
+        assert_eq!(clip.apply(50.0), 10.0);
+        let b = DenseKernel::Bucketize { boundaries: vec![1.0, 10.0, 100.0] };
+        assert_eq!(b.apply(0.5), 0.0);
+        assert_eq!(b.apply(1.0), 1.0, "boundary is inclusive below");
+        assert_eq!(b.apply(9.9), 1.0);
+        assert_eq!(b.apply(10.0), 2.0);
+        assert_eq!(b.apply(1e9), 3.0);
+    }
+
+    /// The f32 kernel chain must reproduce the historical integer dense
+    /// path bit for bit — the uniform-spec compatibility guarantee.
+    #[test]
+    fn dense_chain_matches_integer_forms() {
+        let values: Vec<i32> =
+            vec![i32::MIN, -100, -1, 0, 1, 7, 4095, 4096, 1 << 24, i32::MAX];
+        let n2z = dense_prog(vec![ColumnOp::Neg2Zero]).unwrap().compile_dense();
+        let n2z_log = dense_prog(vec![ColumnOp::Neg2Zero, ColumnOp::Logarithm])
+            .unwrap()
+            .compile_dense();
+        let log_only = dense_prog(vec![ColumnOp::Logarithm]).unwrap().compile_dense();
+        for &d in &values {
+            assert_eq!(n2z.apply_value(d).to_bits(), (neg2zero(d) as f32).to_bits());
+            assert_eq!(n2z_log.apply_value(d).to_bits(), log1p(d).to_bits());
+            assert_eq!(log_only.apply_value(d).to_bits(), log1p(d).to_bits());
+        }
+        // the specialized slice paths equal the general per-value path
+        for plan in [&n2z, &n2z_log, &log_only] {
+            let mut fast = Vec::new();
+            plan.run(&values, &mut fast);
+            let slow: Vec<f32> = values.iter().map(|&d| plan.apply_value(d)).collect();
+            assert_eq!(
+                fast.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                slow.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn plans_capacity_and_dispatch_accounting() {
+        let mut plans = ColumnPlans::passthrough(Schema::new(2, 3));
+        assert!(!plans.any_gen_vocab());
+        assert_eq!(plans.vocab_storage_bits(), 0);
+        plans.sparse[0] =
+            SparseColPlan { modulus: Some(Modulus::new(64)), gen_vocab: true, apply_vocab: true };
+        plans.sparse[2] =
+            SparseColPlan { modulus: Some(Modulus::new(128)), gen_vocab: true, apply_vocab: false };
+        assert!(plans.any_gen_vocab());
+        assert_eq!(plans.vocab_columns(), 2);
+        assert_eq!(plans.max_modulus().unwrap().range, 128);
+        assert_eq!(
+            plans.vocab_storage_bits(),
+            DirectVocab::storage_bits_for(64) + DirectVocab::storage_bits_for(128)
+        );
+        // dispatch: col0 = mod+gen+apply+store, col1 = store, col2 = mod+gen+store
+        let (s, d) = plans.dispatch_ops();
+        assert_eq!(s, 4 + 1 + 3);
+        assert_eq!(d, 2); // two dense passthrough stores
+
+        // a huge modulus on a vocab-FREE column must not drive the
+        // vocabulary heuristic (it stores nothing) — only the storage
+        // sum and placement of actual vocabularies matter
+        plans.sparse[1] = SparseColPlan {
+            modulus: Some(Modulus::new(1 << 20)),
+            gen_vocab: false,
+            apply_vocab: false,
+        };
+        assert_eq!(plans.max_modulus().unwrap().range, 1 << 20);
+        assert_eq!(plans.max_vocab_modulus().unwrap().range, 128);
+        assert_eq!(
+            plans.vocab_storage_bits(),
+            DirectVocab::storage_bits_for(64) + DirectVocab::storage_bits_for(128),
+            "vocab-free columns occupy no vocabulary storage"
+        );
+    }
+}

@@ -2,226 +2,297 @@
 //! dynamically configure the operators in the pipeline at runtime" — the
 //! modular-PE generalizability claim).
 //!
-//! A [`PipelineSpec`] is parsed from a compact string such as
+//! A [`PipelineSpec`] is a list of *rules*, each binding a validated
+//! [`ColumnProgram`] to a set of columns via a [`ColumnSelector`] — so
+//! different columns can run different transforms (per-feature
+//! vocabulary sizes, log-scaling only some dense features, a bucketized
+//! column). The spec grammar:
+//!
+//! ```text
+//! sparse[*]: modulus:5000|genvocab|applyvocab;
+//! sparse[0..4]: modulus:100000|genvocab|applyvocab;
+//! dense[*]: neg2zero|log;
+//! dense[12]: clip:0:100|bucketize:1:10:100
+//! ```
+//!
+//! Rules apply in order — later rules **override** earlier ones for the
+//! columns they select — and columns no rule covers pass through
+//! unchanged. The classic flat grammar
 //!
 //! ```text
 //! decode | fillmissing | hex2int | modulus:5000 | genvocab | applyvocab
 //!        | neg2zero | logarithm | concatenate
 //! ```
 //!
-//! validated against the operator dependency rules (GenVocab needs
-//! Modulus; ApplyVocab needs GenVocab; Logarithm wants Neg2Zero), and
-//! executed over decoded rows by [`PipelineSpec::execute`] — the same
-//! column-wise semantics the fixed DLRM pipeline uses, with optional
-//! stages actually optional (e.g. Table 1 notes Logarithm "is optional").
+//! keeps parsing as `[*]`-selector sugar: sparse-applicable ops become a
+//! `sparse[*]` rule, dense-applicable ops a `dense[*]` rule, and the
+//! Decode/Concatenate boundary markers are dropped (they are implied by
+//! the decoded-row boundary). CLI flags, tests and the wire handshake
+//! therefore stay compatible.
+//!
+//! A spec is **validated at construction** (parse / [`PipelineSpec::from_rules`]
+//! / the [`PipelineSpec::dlrm`] preset): every program obeys the operator
+//! dependency rules (GenVocab needs Modulus; ApplyVocab needs GenVocab;
+//! Logarithm wants Neg2Zero). Resolution against a concrete [`Schema`]
+//! — selector bounds, one compiled slot per column — happens once at
+//! planning time via [`PipelineSpec::compile`], which produces the
+//! [`ColumnPlans`] executor hot loops dispatch on.
+
+use std::fmt;
 
 use crate::data::row::ProcessedColumns;
 use crate::data::{DecodedRow, Schema};
-use crate::ops::{neg2zero, DirectVocab, Modulus, Vocab};
+use crate::ops::program::{
+    ColumnKind, ColumnOp, ColumnPlans, ColumnProgram, ColumnRange, ColumnSelector,
+};
 use crate::Result;
 
-/// One operator in a pipeline (Table 1 names).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum OpSpec {
-    Decode,
-    FillMissing,
-    Hex2Int,
-    Modulus(u32),
-    GenVocab,
-    ApplyVocab,
-    Neg2Zero,
-    Logarithm,
-    Concatenate,
+/// One rule of a spec: a program bound to a set of columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecRule {
+    pub selector: ColumnSelector,
+    pub program: ColumnProgram,
 }
 
-impl OpSpec {
-    pub fn parse(token: &str) -> Result<OpSpec> {
-        let t = token.trim().to_ascii_lowercase();
-        let (name, arg) = match t.split_once(':') {
-            Some((n, a)) => (n.trim().to_string(), Some(a.trim().to_string())),
-            None => (t, None),
-        };
-        let no_arg = |op: OpSpec| -> Result<OpSpec> {
-            anyhow::ensure!(arg.is_none(), "operator `{name}` takes no argument");
-            Ok(op)
-        };
-        match name.as_str() {
-            "decode" => no_arg(OpSpec::Decode),
-            "fillmissing" => no_arg(OpSpec::FillMissing),
-            "hex2int" => no_arg(OpSpec::Hex2Int),
-            "modulus" => {
-                let r: u32 = arg
-                    .as_deref()
-                    .ok_or_else(|| anyhow::anyhow!("modulus needs a range, e.g. modulus:5000"))?
-                    .replace('_', "")
-                    .parse()
-                    .map_err(|e| anyhow::anyhow!("modulus range: {e}"))?;
-                anyhow::ensure!(r > 0, "modulus range must be positive");
-                Ok(OpSpec::Modulus(r))
-            }
-            "genvocab" => no_arg(OpSpec::GenVocab),
-            "applyvocab" => no_arg(OpSpec::ApplyVocab),
-            "neg2zero" => no_arg(OpSpec::Neg2Zero),
-            "logarithm" | "log" => no_arg(OpSpec::Logarithm),
-            "concatenate" | "concat" => no_arg(OpSpec::Concatenate),
-            other => anyhow::bail!("unknown operator `{other}`"),
-        }
+impl fmt::Display for SpecRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.selector, self.program)
     }
 }
 
-/// A validated operator pipeline.
+/// A validated per-column operator pipeline: an ordered list of
+/// selector→program rules. Construction validates; a `PipelineSpec`
+/// that exists is well-formed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PipelineSpec {
-    pub ops: Vec<OpSpec>,
-}
-
-/// The optional stages of a validated spec, as flags (see
-/// [`PipelineSpec::flags`]). Decode/FillMissing/Hex2Int are implied by
-/// the decoded-row boundary; Modulus is carried separately because it has
-/// an argument.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct OpFlags {
-    pub gen_vocab: bool,
-    pub apply_vocab: bool,
-    pub neg2zero: bool,
-    pub logarithm: bool,
+    rules: Vec<SpecRule>,
 }
 
 impl PipelineSpec {
-    /// The paper's full DLRM pipeline at a given vocabulary size.
+    /// Build from explicit rules. Validates that the list is non-empty
+    /// and every selector kind matches its program kind (the programs
+    /// themselves were validated at their construction).
+    pub fn from_rules(rules: Vec<SpecRule>) -> Result<PipelineSpec> {
+        anyhow::ensure!(!rules.is_empty(), "empty pipeline");
+        for rule in &rules {
+            anyhow::ensure!(
+                rule.selector.kind == rule.program.kind(),
+                "selector {} bound to a {} program",
+                rule.selector,
+                rule.program.kind().name()
+            );
+        }
+        Ok(PipelineSpec { rules })
+    }
+
+    pub fn rules(&self) -> &[SpecRule] {
+        &self.rules
+    }
+
+    /// The paper's full DLRM pipeline at a given vocabulary size, as a
+    /// per-column preset: every sparse column runs
+    /// `fillmissing|hex2int|modulus:v|genvocab|applyvocab`, every dense
+    /// column `fillmissing|neg2zero|logarithm`.
     pub fn dlrm(vocab: u32) -> PipelineSpec {
+        let sparse = ColumnProgram::new(
+            ColumnKind::Sparse,
+            vec![
+                ColumnOp::FillMissing,
+                ColumnOp::Hex2Int,
+                ColumnOp::Modulus(vocab),
+                ColumnOp::GenVocab,
+                ColumnOp::ApplyVocab,
+            ],
+        )
+        .expect("DLRM sparse program is valid by construction");
+        let dense = ColumnProgram::new(
+            ColumnKind::Dense,
+            vec![ColumnOp::FillMissing, ColumnOp::Neg2Zero, ColumnOp::Logarithm],
+        )
+        .expect("DLRM dense program is valid by construction");
         PipelineSpec {
-            ops: vec![
-                OpSpec::Decode,
-                OpSpec::FillMissing,
-                OpSpec::Hex2Int,
-                OpSpec::Modulus(vocab),
-                OpSpec::GenVocab,
-                OpSpec::ApplyVocab,
-                OpSpec::Neg2Zero,
-                OpSpec::Logarithm,
-                OpSpec::Concatenate,
+            rules: vec![
+                SpecRule { selector: ColumnSelector::sparse(ColumnRange::All), program: sparse },
+                SpecRule { selector: ColumnSelector::dense(ColumnRange::All), program: dense },
             ],
         }
     }
 
-    /// Parse a `|`- or `,`-separated spec string and validate it.
+    /// Parse a spec string and validate it. Accepts both grammars:
+    /// `;`-separated `selector: ops` rules, or the classic flat
+    /// `|`/`,`-separated op list (parsed as `[*]`-selector sugar).
     pub fn parse(spec: &str) -> Result<PipelineSpec> {
+        // A segment is selector-shaped when a kind keyword is followed
+        // by `[` (whitespace tolerated, exactly as ColumnSelector::parse
+        // accepts it) — so the same rule string routes the same way
+        // whether it stands alone or beside other rules.
+        let selector_style = spec.split(';').any(|seg| {
+            let s = seg.trim().to_ascii_lowercase();
+            ["sparse", "dense"].into_iter().any(|kind| {
+                s.strip_prefix(kind).is_some_and(|r| r.trim_start().starts_with('['))
+            })
+        });
+        if selector_style {
+            Self::parse_rules(spec)
+        } else {
+            anyhow::ensure!(
+                !spec.contains(';'),
+                "rule segments need sparse[...]/dense[...] selectors"
+            );
+            Self::parse_flat(spec)
+        }
+    }
+
+    /// The selector grammar: `sel: op|op; sel: op|op; ...`.
+    fn parse_rules(spec: &str) -> Result<PipelineSpec> {
+        let mut rules = Vec::new();
+        for seg in spec.split(';') {
+            if seg.trim().is_empty() {
+                continue; // tolerate a trailing `;`
+            }
+            let (sel, ops) = seg
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("rule `{}` needs `selector: ops`", seg.trim()))?;
+            let selector = ColumnSelector::parse(sel)?;
+            let ops = ops
+                .split(|c| c == '|' || c == ',')
+                .filter(|s| !s.trim().is_empty())
+                .map(ColumnOp::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let program = ColumnProgram::new(selector.kind, ops)
+                .map_err(|e| anyhow::anyhow!("rule `{selector}`: {e}"))?;
+            rules.push(SpecRule { selector, program });
+        }
+        Self::from_rules(rules)
+    }
+
+    /// The flat grammar as `[*]` sugar: route each op to the column
+    /// kind(s) it applies to, dropping the Decode/Concatenate boundary
+    /// markers. The old flat grammar compiled to global *flags*, so a
+    /// stage mentioned twice (`…|logarithm|log`) applied once and the
+    /// first `modulus` won — repeated legacy tokens collapse here to
+    /// keep that contract (GenVocab/ApplyVocab duplicates still fall
+    /// through to program validation, which rejects them, as before).
+    fn parse_flat(spec: &str) -> Result<PipelineSpec> {
         let ops = spec
             .split(|c| c == '|' || c == ',')
             .filter(|s| !s.trim().is_empty())
-            .map(OpSpec::parse)
+            .map(ColumnOp::parse)
             .collect::<Result<Vec<_>>>()?;
-        let p = PipelineSpec { ops };
-        p.validate()?;
-        Ok(p)
+        anyhow::ensure!(!ops.is_empty(), "empty pipeline");
+        let push_deduped = |list: &mut Vec<ColumnOp>, op: ColumnOp| {
+            let legacy_flag = matches!(
+                op,
+                ColumnOp::FillMissing
+                    | ColumnOp::Hex2Int
+                    | ColumnOp::Modulus(_)
+                    | ColumnOp::Neg2Zero
+                    | ColumnOp::Logarithm
+            );
+            let dup = legacy_flag
+                && list
+                    .iter()
+                    .any(|o| std::mem::discriminant(o) == std::mem::discriminant(&op));
+            if !dup {
+                list.push(op);
+            }
+        };
+        let mut sparse = Vec::new();
+        let mut dense = Vec::new();
+        for op in ops {
+            if op.applies_to(ColumnKind::Sparse) {
+                push_deduped(&mut sparse, op.clone());
+            }
+            if op.applies_to(ColumnKind::Dense) {
+                push_deduped(&mut dense, op);
+            }
+        }
+        let mut rules = Vec::new();
+        if !sparse.is_empty() {
+            rules.push(SpecRule {
+                selector: ColumnSelector::sparse(ColumnRange::All),
+                program: ColumnProgram::new(ColumnKind::Sparse, sparse)?,
+            });
+        }
+        if !dense.is_empty() {
+            rules.push(SpecRule {
+                selector: ColumnSelector::dense(ColumnRange::All),
+                program: ColumnProgram::new(ColumnKind::Dense, dense)?,
+            });
+        }
+        if rules.is_empty() {
+            // Only boundary markers ("decode|concatenate") — previously
+            // a valid passthrough pipeline; keep accepting it by binding
+            // the no-op FillMissing (merged into decode) to every
+            // column.
+            rules = vec![
+                SpecRule {
+                    selector: ColumnSelector::sparse(ColumnRange::All),
+                    program: ColumnProgram::new(
+                        ColumnKind::Sparse,
+                        vec![ColumnOp::FillMissing],
+                    )?,
+                },
+                SpecRule {
+                    selector: ColumnSelector::dense(ColumnRange::All),
+                    program: ColumnProgram::new(ColumnKind::Dense, vec![ColumnOp::FillMissing])?,
+                },
+            ];
+        }
+        Self::from_rules(rules)
     }
 
-    /// Dependency rules between stateful/ordered operators.
-    pub fn validate(&self) -> Result<()> {
-        anyhow::ensure!(!self.ops.is_empty(), "empty pipeline");
-        let pos = |op: fn(&OpSpec) -> bool| self.ops.iter().position(op);
-        let modulus = pos(|o| matches!(o, OpSpec::Modulus(_)));
-        let gen = pos(|o| matches!(o, OpSpec::GenVocab));
-        let apply = pos(|o| matches!(o, OpSpec::ApplyVocab));
-        let n2z = pos(|o| matches!(o, OpSpec::Neg2Zero));
-        let log = pos(|o| matches!(o, OpSpec::Logarithm));
-
-        if let Some(g) = gen {
-            let m = modulus
-                .ok_or_else(|| anyhow::anyhow!("GenVocab requires Modulus earlier in the pipeline"))?;
-            anyhow::ensure!(m < g, "Modulus must precede GenVocab");
-        }
-        if let Some(a) = apply {
-            let g = gen
-                .ok_or_else(|| anyhow::anyhow!("ApplyVocab requires GenVocab earlier in the pipeline"))?;
-            anyhow::ensure!(g < a, "GenVocab must precede ApplyVocab");
-        }
-        if let (Some(l), Some(n)) = (log, n2z) {
-            anyhow::ensure!(n < l, "Neg2Zero must precede Logarithm");
-        }
-        // duplicates of stateful ops are not meaningful
-        for kind in ["GenVocab", "ApplyVocab"] {
-            let count = self
-                .ops
-                .iter()
-                .filter(|o| format!("{o:?}").starts_with(kind))
-                .count();
-            anyhow::ensure!(count <= 1, "{kind} may appear at most once");
-        }
-        Ok(())
-    }
-
-    fn has(&self, f: fn(&OpSpec) -> bool) -> bool {
-        self.ops.iter().any(f)
-    }
-
-    pub fn modulus(&self) -> Option<Modulus> {
-        self.ops.iter().find_map(|o| match o {
-            OpSpec::Modulus(r) => Some(Modulus::new(*r)),
-            _ => None,
-        })
-    }
-
-    /// Which optional stages this spec enables — derived once at planning
-    /// time so executor hot loops branch on bools, not on the op list.
-    pub fn flags(&self) -> OpFlags {
-        OpFlags {
-            gen_vocab: self.has(|o| matches!(o, OpSpec::GenVocab)),
-            apply_vocab: self.has(|o| matches!(o, OpSpec::ApplyVocab)),
-            neg2zero: self.has(|o| matches!(o, OpSpec::Neg2Zero)),
-            logarithm: self.has(|o| matches!(o, OpSpec::Logarithm)),
-        }
-    }
-
-    /// Execute over decoded rows (the post-`Decode` boundary — Decode /
-    /// FillMissing / Hex2Int are already reflected in [`DecodedRow`]).
-    ///
-    /// Sparse columns: Modulus → (GenVocab → ApplyVocab) as configured —
-    /// without ApplyVocab the (modulus-limited) raw values pass through.
-    /// Dense columns: Neg2Zero and/or Logarithm as configured.
-    pub fn execute(&self, rows: &[DecodedRow], schema: Schema) -> Result<ProcessedColumns> {
-        self.validate()?;
-        let modulus = self.modulus();
-        let OpFlags {
-            gen_vocab: do_gen,
-            apply_vocab: do_apply,
-            neg2zero: do_n2z,
-            logarithm: do_log,
-        } = self.flags();
-
-        let mut out = ProcessedColumns::with_schema(schema);
-        // pass 1: vocabularies
-        let mut vocabs: Vec<DirectVocab> = Vec::new();
-        if do_gen {
-            let m = modulus.expect("validated: GenVocab implies Modulus");
-            vocabs = (0..schema.num_sparse).map(|_| DirectVocab::new(m.range)).collect();
-            for row in rows {
-                for (c, &s) in row.sparse.iter().enumerate() {
-                    vocabs[c].observe(m.apply(s));
+    /// Resolve the rules against a concrete schema into one compiled
+    /// slot per column ([`ColumnPlans`]) — the planning step. Later
+    /// rules override earlier ones; uncovered columns pass through.
+    /// The only failure mode is a selector out of the schema's range.
+    pub fn compile(&self, schema: Schema) -> Result<ColumnPlans> {
+        let mut plans = ColumnPlans::passthrough(schema);
+        for rule in &self.rules {
+            match rule.selector.kind {
+                ColumnKind::Sparse => {
+                    let cols = rule
+                        .selector
+                        .range
+                        .resolve(schema.num_sparse)
+                        .map_err(|e| anyhow::anyhow!("{}: {e}", rule.selector))?;
+                    for c in cols {
+                        plans.sparse[c] = rule.program.compile_sparse();
+                    }
+                }
+                ColumnKind::Dense => {
+                    let cols = rule
+                        .selector
+                        .range
+                        .resolve(schema.num_dense)
+                        .map_err(|e| anyhow::anyhow!("{}: {e}", rule.selector))?;
+                    for c in cols {
+                        plans.dense[c] = rule.program.compile_dense();
+                    }
                 }
             }
         }
-        // pass 2: emit
-        for row in rows {
-            out.labels.push(row.label);
-            for (c, &d) in row.dense.iter().enumerate() {
-                let v = if do_n2z { neg2zero(d) } else { d };
-                let v = if do_log { crate::ops::log1p(v) } else { v as f32 };
-                out.dense[c].push(v);
+        Ok(plans)
+    }
+
+    /// Execute over decoded rows (the post-`Decode` boundary). The spec
+    /// was validated at construction, so the only failure mode is a
+    /// schema-resolution mismatch — [`Self::compile`] then the row-wise
+    /// reference interpreter ([`ColumnPlans::execute_rows`]).
+    pub fn execute(&self, rows: &[DecodedRow], schema: Schema) -> Result<ProcessedColumns> {
+        Ok(self.compile(schema)?.execute_rows(rows))
+    }
+}
+
+impl fmt::Display for PipelineSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, rule) in self.rules.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
             }
-            for (c, &s) in row.sparse.iter().enumerate() {
-                let v = modulus.map_or(s, |m| m.apply(s));
-                let v = if do_apply {
-                    // validated: GenVocab ran, so every value was observed
-                    vocabs[c].apply(v).unwrap_or(crate::ops::VOCAB_MISS)
-                } else {
-                    v
-                };
-                out.sparse[c].push(v);
-            }
+            write!(f, "{rule}")?;
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -229,6 +300,8 @@ impl PipelineSpec {
 mod tests {
     use super::*;
     use crate::data::{synth::SynthConfig, SynthDataset};
+    use crate::ops::{neg2zero, Modulus};
+    use crate::util::XorShift64;
 
     fn rows() -> (Vec<DecodedRow>, Schema) {
         let ds = SynthDataset::generate(SynthConfig::small(120));
@@ -255,6 +328,192 @@ mod tests {
         assert!(PipelineSpec::parse("applyvocab|modulus:5|genvocab").is_err(), "order");
         assert!(PipelineSpec::parse("logarithm|neg2zero").is_err(), "order");
         assert!(PipelineSpec::parse("decode:4").is_err(), "unexpected arg");
+        // selector grammar errors
+        assert!(PipelineSpec::parse("sparse[*]:").is_err(), "empty program");
+        assert!(PipelineSpec::parse("sparse[*]: neg2zero").is_err(), "dense op");
+        assert!(PipelineSpec::parse("dense[*]: modulus:5").is_err(), "sparse op");
+        assert!(PipelineSpec::parse("label[*]: neg2zero").is_err(), "unknown kind");
+        assert!(PipelineSpec::parse("sparse[2..2]: modulus:5").is_err(), "empty range");
+        assert!(
+            PipelineSpec::parse("modulus:5; neg2zero").is_err(),
+            "`;` segments need selectors"
+        );
+        assert!(
+            PipelineSpec::parse("sparse[*]: decode").is_err(),
+            "boundary markers are not column ops"
+        );
+    }
+
+    /// Legacy flat-grammar contracts: the old parser compiled to global
+    /// flags, so repeated stage mentions applied once and the first
+    /// modulus won; boundary-marker-only specs were valid passthroughs.
+    #[test]
+    fn flat_grammar_legacy_contracts() {
+        // `logarithm|log` must apply log1p ONCE (the old flag collapse).
+        let doubled =
+            PipelineSpec::parse("modulus:97|genvocab|applyvocab|neg2zero|logarithm|log").unwrap();
+        let single =
+            PipelineSpec::parse("modulus:97|genvocab|applyvocab|neg2zero|logarithm").unwrap();
+        assert_eq!(doubled, single);
+        // the first modulus wins, as the old `modulus()` accessor did
+        let first = PipelineSpec::parse("modulus:5|modulus:7").unwrap();
+        assert_eq!(first, PipelineSpec::parse("modulus:5").unwrap());
+        // stateful duplicates still error (the old validate() rule)
+        assert!(PipelineSpec::parse("modulus:5|genvocab|genvocab").is_err());
+        // boundary markers alone are a valid passthrough pipeline
+        let (rows, schema) = rows();
+        let pass = PipelineSpec::parse("decode|concatenate").unwrap();
+        let got = pass.execute(&rows, schema).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(got.sparse[0][r], row.sparse[0]);
+            assert_eq!(got.dense[0][r], row.dense[0] as f32);
+        }
+        // ...and round-trips through display like any other spec
+        assert_eq!(PipelineSpec::parse(&pass.to_string()).unwrap(), pass);
+    }
+
+    /// Whitespace between the kind keyword and the bracket routes to
+    /// the selector grammar whether the rule stands alone or not.
+    #[test]
+    fn selector_detection_tolerates_whitespace() {
+        assert_eq!(
+            PipelineSpec::parse("sparse [0]: modulus:5").unwrap(),
+            PipelineSpec::parse("sparse[0]: modulus:5").unwrap()
+        );
+        assert_eq!(
+            PipelineSpec::parse(" DENSE [ * ] : neg2zero ").unwrap(),
+            PipelineSpec::parse("dense[*]: neg2zero").unwrap()
+        );
+    }
+
+    #[test]
+    fn selector_grammar_parses_heterogeneous_spec() {
+        let p = PipelineSpec::parse(
+            "sparse[*]: modulus:5000|genvocab|applyvocab; \
+             sparse[0..4]: modulus:100000|genvocab|applyvocab; \
+             dense[*]: neg2zero|log",
+        )
+        .unwrap();
+        assert_eq!(p.rules().len(), 3);
+        let plans = p.compile(Schema::CRITEO).unwrap();
+        // later rules override earlier ones
+        assert_eq!(plans.sparse[0].modulus.unwrap().range, 100_000);
+        assert_eq!(plans.sparse[3].modulus.unwrap().range, 100_000);
+        assert_eq!(plans.sparse[4].modulus.unwrap().range, 5_000);
+        assert_eq!(plans.sparse[25].modulus.unwrap().range, 5_000);
+        assert!(plans.dense.iter().all(|d| d.kernels.len() == 2));
+        assert_eq!(plans.vocab_columns(), 26);
+        assert_eq!(plans.max_modulus().unwrap().range, 100_000);
+    }
+
+    #[test]
+    fn compile_rejects_out_of_schema_selectors() {
+        let p = PipelineSpec::parse("sparse[30]: modulus:5|genvocab|applyvocab").unwrap();
+        assert!(p.compile(Schema::CRITEO).is_err(), "26 sparse columns only");
+        assert!(p.compile(Schema::new(13, 31)).is_ok());
+        let p = PipelineSpec::parse("dense[10..20]: neg2zero").unwrap();
+        assert!(p.compile(Schema::CRITEO).is_err(), "13 dense columns only");
+    }
+
+    #[test]
+    fn uncovered_columns_pass_through() {
+        let (rows, schema) = rows();
+        let p = PipelineSpec::parse("sparse[1]: modulus:53").unwrap();
+        let got = p.execute(&rows, schema).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(got.sparse[0][r], row.sparse[0], "col 0 untouched");
+            assert_eq!(got.sparse[1][r], row.sparse[1] % 53, "col 1 modulus");
+            assert_eq!(got.dense[0][r], row.dense[0] as f32, "dense untouched");
+        }
+    }
+
+    /// `parse(display(spec)) == spec` — the round-trip the net layer's
+    /// wire handshake serializes through. Deterministic cases plus a
+    /// PRNG-driven property sweep over random rule sets.
+    #[test]
+    fn display_parse_round_trips() {
+        for s in [
+            "modulus:5000|genvocab|applyvocab|neg2zero|logarithm",
+            "sparse[*]: modulus:5000|genvocab|applyvocab; dense[*]: neg2zero|log",
+            "dense[3]: clip:0:100|bucketize:1:10:100",
+            "sparse[0..4]: fillmissing|hex2int|modulus:97|genvocab",
+        ] {
+            let spec = PipelineSpec::parse(s).unwrap();
+            let round = PipelineSpec::parse(&spec.to_string()).unwrap();
+            assert_eq!(round, spec, "{s} → {spec}");
+        }
+
+        let mut rng = XorShift64::new(0x5EC5);
+        for _ in 0..200 {
+            let spec = random_spec(&mut rng);
+            let shown = spec.to_string();
+            let round = PipelineSpec::parse(&shown)
+                .unwrap_or_else(|e| panic!("display must re-parse: `{shown}`: {e}"));
+            assert_eq!(round, spec, "`{shown}`");
+        }
+    }
+
+    /// Random valid spec generator for the round-trip property.
+    fn random_spec(rng: &mut XorShift64) -> PipelineSpec {
+        let n_rules = 1 + rng.below(4) as usize;
+        let mut rules = Vec::new();
+        for _ in 0..n_rules {
+            let sparse = rng.below(2) == 0;
+            let range = match rng.below(3) {
+                0 => ColumnRange::All,
+                1 => ColumnRange::One(rng.below(30) as usize),
+                _ => {
+                    let a = rng.below(20) as usize;
+                    ColumnRange::Span(a, a + 1 + rng.below(10) as usize)
+                }
+            };
+            let (selector, program) = if sparse {
+                let mut ops = vec![ColumnOp::Modulus(1 + rng.below(1_000_000) as u32)];
+                if rng.below(2) == 0 {
+                    ops.insert(0, ColumnOp::Hex2Int);
+                }
+                if rng.below(2) == 0 {
+                    ops.push(ColumnOp::GenVocab);
+                    if rng.below(2) == 0 {
+                        ops.push(ColumnOp::ApplyVocab);
+                    }
+                }
+                (
+                    ColumnSelector::sparse(range),
+                    ColumnProgram::new(ColumnKind::Sparse, ops).unwrap(),
+                )
+            } else {
+                let mut ops = Vec::new();
+                if rng.below(2) == 0 {
+                    ops.push(ColumnOp::Neg2Zero);
+                }
+                if rng.below(2) == 0 {
+                    ops.push(ColumnOp::Logarithm);
+                }
+                if rng.below(2) == 0 {
+                    let lo = rng.below(100) as f32 - 50.0;
+                    ops.push(ColumnOp::Clip { lo, hi: lo + rng.below(100) as f32 });
+                }
+                if rng.below(2) == 0 {
+                    let mut b = rng.below(50) as f32 - 25.0;
+                    let mut boundaries = Vec::new();
+                    for _ in 0..1 + rng.below(4) {
+                        boundaries.push(b);
+                        b += 1.0 + rng.below(20) as f32;
+                    }
+                    ops.push(ColumnOp::Bucketize { boundaries });
+                }
+                if ops.is_empty() {
+                    ops.push(ColumnOp::FillMissing);
+                }
+                (
+                    ColumnSelector::dense(range),
+                    ColumnProgram::new(ColumnKind::Dense, ops).unwrap(),
+                )
+            };
+            rules.push(SpecRule { selector, program });
+        }
+        PipelineSpec::from_rules(rules).unwrap()
     }
 
     #[test]
@@ -302,6 +561,43 @@ mod tests {
             for (r, &v) in col.iter().enumerate() {
                 assert_eq!(v, rows[r].sparse[c] % 53);
             }
+        }
+    }
+
+    /// Heterogeneous semantics, hand-checked: two vocab sizes, partial
+    /// dense log, one clipped+bucketized column, one vocab-free column.
+    #[test]
+    fn heterogeneous_spec_semantics() {
+        let (rows, schema) = rows();
+        let p = PipelineSpec::parse(
+            "sparse[*]: modulus:97|genvocab|applyvocab; \
+             sparse[0]: modulus:13|genvocab|applyvocab; \
+             sparse[1]: modulus:13; \
+             dense[*]: neg2zero|log; \
+             dense[0]: clip:0:50|bucketize:1:10:100; \
+             dense[1]: neg2zero",
+        )
+        .unwrap();
+        let got = p.execute(&rows, schema).unwrap();
+
+        // sparse[0]: its own 13-range vocabulary, appearance-ordered.
+        let mut v0 = crate::ops::HashVocab::new();
+        for row in &rows {
+            v0.observe(row.sparse[0] % 13);
+        }
+        use crate::ops::Vocab as _;
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(got.sparse[0][r], v0.apply(row.sparse[0] % 13).unwrap());
+            // sparse[1]: modulus only, no vocab
+            assert_eq!(got.sparse[1][r], row.sparse[1] % 13);
+            // dense[0]: clip then bucketize
+            let clipped = (row.dense[0] as f32).clamp(0.0, 50.0);
+            let bucket = [1.0f32, 10.0, 100.0].iter().filter(|&&b| b <= clipped).count();
+            assert_eq!(got.dense[0][r], bucket as f32);
+            // dense[1]: neg2zero only
+            assert_eq!(got.dense[1][r], neg2zero(row.dense[1]) as f32);
+            // dense[2]: the [*] rule
+            assert_eq!(got.dense[2][r], crate::ops::log1p(row.dense[2]));
         }
     }
 }

@@ -127,6 +127,14 @@ impl DirectVocab {
     pub fn storage_bits(&self) -> u64 {
         (self.seen.len() as u64) * 64 + (self.table.len() as u64) * 32
     }
+
+    /// [`Self::storage_bits`] for a capacity without allocating the
+    /// table — the planning-time form (the SRAM check sums this per
+    /// column over each column's own vocabulary capacity).
+    pub fn storage_bits_for(range: u32) -> u64 {
+        let words = (range as usize).div_ceil(64) as u64;
+        words * 64 + range as u64 * 32
+    }
 }
 
 impl Vocab for DirectVocab {

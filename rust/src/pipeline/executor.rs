@@ -42,7 +42,7 @@ use crate::accel::InputFormat;
 use crate::data::row::ProcessedColumns;
 use crate::data::RowBlock;
 use crate::data::Schema;
-use crate::ops::{log1p, neg2zero, HashVocab, Modulus, OpFlags, Vocab, VOCAB_MISS};
+use crate::ops::{ColumnPlans, HashVocab, Vocab, VOCAB_MISS};
 use crate::report::TimeTag;
 use crate::Result;
 
@@ -148,40 +148,53 @@ pub struct ExecutorReport {
     pub vocab_entries: usize,
 }
 
-/// The shared functional core: the planned operator graph over decoded
-/// column blocks. Semantics match [`crate::ops::PipelineSpec::execute`]
-/// exactly — sparse: Modulus → (GenVocab → ApplyVocab) as configured,
-/// dense: Neg2Zero / Logarithm as configured — applied streamingly with
+/// The shared functional core: the plan's compiled per-column programs
+/// ([`ColumnPlans`]) over decoded column blocks. Semantics match
+/// [`crate::ops::PipelineSpec::execute`] exactly — each sparse column
+/// runs its own Modulus → (GenVocab → ApplyVocab) slot, each dense
+/// column its own kernel chain — applied streamingly with
 /// insertion-ordered vocabularies. Every loop scans a contiguous column
-/// slice; per-column vocabularies make the column visit order
+/// slice and dispatches on that column's fixed-function slot (no global
+/// flags); per-column vocabularies make the column visit order
 /// irrelevant, so the columnar scan assigns exactly the indices the old
 /// row-wise scan did.
 #[derive(Debug)]
 pub struct ChunkState {
-    pub schema: Schema,
-    pub flags: OpFlags,
-    pub modulus: Option<Modulus>,
+    pub programs: ColumnPlans,
     pub vocabs: Vec<HashVocab>,
 }
 
 impl ChunkState {
     pub fn new(plan: &Plan) -> Self {
-        ChunkState {
-            schema: plan.schema,
-            flags: plan.flags,
-            modulus: plan.modulus,
-            vocabs: (0..plan.schema.num_sparse).map(|_| HashVocab::new()).collect(),
-        }
+        Self::with_programs(plan.programs.clone())
     }
 
-    /// Pass-1 GenVocab over a chunk: one tight loop per sparse column.
+    /// Build from compiled programs directly (the net worker's path —
+    /// it has no engine [`Plan`], just the job's compiled spec).
+    pub fn with_programs(programs: ColumnPlans) -> Self {
+        let n = programs.schema.num_sparse;
+        ChunkState { programs, vocabs: (0..n).map(|_| HashVocab::new()).collect() }
+    }
+
+    pub fn schema(&self) -> Schema {
+        self.programs.schema
+    }
+
+    /// Does any column of the plan build a vocabulary?
+    pub fn has_gen_vocab(&self) -> bool {
+        self.programs.any_gen_vocab()
+    }
+
+    /// Pass-1 GenVocab over a chunk: one tight loop per vocabulary-
+    /// building sparse column (columns without GenVocab are skipped).
     pub fn observe(&mut self, block: &RowBlock) {
-        if !self.flags.gen_vocab {
-            return;
-        }
         for (c, vocab) in self.vocabs.iter_mut().enumerate() {
+            let slot = &self.programs.sparse[c];
+            if !slot.gen_vocab {
+                continue;
+            }
             let col = block.sparse_col(c);
-            match self.modulus {
+            match slot.modulus {
                 Some(m) => {
                     for &s in col {
                         vocab.observe(m.apply(s));
@@ -196,10 +209,14 @@ impl ChunkState {
     /// block — the threaded GV of the CPU baseline, per chunk shard.
     pub fn observe_sub(&self, block: &RowBlock, range: Range<usize>) -> Vec<HashVocab> {
         let mut subs: Vec<HashVocab> =
-            (0..self.schema.num_sparse).map(|_| HashVocab::new()).collect();
+            (0..self.schema().num_sparse).map(|_| HashVocab::new()).collect();
         for (c, sub) in subs.iter_mut().enumerate() {
+            let slot = &self.programs.sparse[c];
+            if !slot.gen_vocab {
+                continue;
+            }
             let col = &block.sparse_col(c)[range.clone()];
-            match self.modulus {
+            match slot.modulus {
                 Some(m) => {
                     for &s in col {
                         sub.observe(m.apply(s));
@@ -235,85 +252,110 @@ impl ChunkState {
     pub fn process_range(&self, block: &RowBlock, range: Range<usize>) -> ProcessedColumns {
         let mut out = self.process_stateless_range(block, range.clone());
         for (c, dst) in out.sparse.iter_mut().enumerate() {
+            let slot = &self.programs.sparse[c];
+            if slot.is_stateless() {
+                continue; // filled by the stateless stage above
+            }
             let col = &block.sparse_col(c)[range.clone()];
             let start = dst.len();
             dst.resize(start + col.len(), 0);
             let dst = &mut dst[start..];
             let vocab = &self.vocabs[c];
-            for (&s, o) in col.iter().zip(dst.iter_mut()) {
-                let v = self.modulus.map_or(s, |m| m.apply(s));
-                *o = if self.flags.apply_vocab {
-                    vocab.apply(v).unwrap_or(VOCAB_MISS)
-                } else {
-                    v
-                };
+            if slot.apply_vocab {
+                for (&s, o) in col.iter().zip(dst.iter_mut()) {
+                    *o = vocab.apply(slot.map(s)).unwrap_or(VOCAB_MISS);
+                }
+            } else {
+                // GenVocab without ApplyVocab: the vocabulary builds,
+                // raw modulus values pass through.
+                for (&s, o) in col.iter().zip(dst.iter_mut()) {
+                    *o = slot.map(s);
+                }
             }
         }
         out
     }
 
-    /// The stateless slice of pass 2 over a row range: labels + dense
-    /// finishing, sparse columns left empty. Shardable across threads in
-    /// *both* strategies because no vocabulary state is touched; the
-    /// fused CPU executor runs this in parallel and fills the sparse
-    /// planes with the sequential [`Self::fuse_sparse`] stage.
+    /// The stateless slice of pass 2 over a row range: labels, dense
+    /// finishing, and the sparse columns whose program touches no
+    /// vocabulary (modulus-only / passthrough —
+    /// [`crate::ops::SparseColPlan::is_stateless`]); the vocabulary
+    /// columns are left empty. Shardable across threads
+    /// in *both* strategies because no vocabulary state is touched; the
+    /// fused CPU executor runs this in parallel and fills the remaining
+    /// sparse planes with the sequential [`Self::fuse_sparse`] stage —
+    /// so vocab-free columns of a heterogeneous plan keep scaling with
+    /// threads even under the fused strategy.
     pub fn process_stateless_range(
         &self,
         block: &RowBlock,
         range: Range<usize>,
     ) -> ProcessedColumns {
-        let mut out = ProcessedColumns::with_schema(self.schema);
+        let mut out = ProcessedColumns::with_schema(self.schema());
         out.labels.extend_from_slice(&block.labels()[range.clone()]);
         for (c, dst) in out.dense.iter_mut().enumerate() {
             let col = &block.dense_col(c)[range.clone()];
+            // each dense column runs its own compiled kernel chain (the
+            // common chains are specialized inside `run`)
+            self.programs.dense[c].run(col, dst);
+        }
+        for (c, dst) in out.sparse.iter_mut().enumerate() {
+            let slot = &self.programs.sparse[c];
+            if !slot.is_stateless() {
+                continue; // the vocabulary stages fill this column
+            }
+            let col = &block.sparse_col(c)[range.clone()];
             dst.reserve(col.len());
-            for &d in col {
-                let v = if self.flags.neg2zero { neg2zero(d) } else { d };
-                dst.push(if self.flags.logarithm { log1p(v) } else { v as f32 });
+            for &s in col {
+                dst.push(slot.map(s));
             }
         }
         out
     }
 
-    /// Fused sparse stage: one sequential in-order scan per sparse
-    /// column that observes *and* emits — GenVocab-1's bitmap and
-    /// ApplyVocab-1's counter in the same pass ([`Vocab::observe_apply`]).
-    /// Appends `block.num_rows()` indices to each of `out`'s sparse
-    /// columns; bit-identical to `observe(block)` followed by the sparse
-    /// half of `process(block)` because appearance indices are fixed at
-    /// first appearance. Inherently sequential per column — the reason
-    /// the fused CPU path cannot shard this stage across threads, which
-    /// is exactly the scaling wall §2.3 describes.
+    /// Fused sparse stage: one sequential in-order scan per
+    /// **vocabulary** column that observes *and* emits — GenVocab-1's
+    /// bitmap and ApplyVocab-1's counter in the same pass
+    /// ([`Vocab::observe_apply`]). Appends `block.num_rows()` indices to
+    /// each vocabulary column of `out` (stateless columns were already
+    /// filled by [`Self::process_stateless_range`]); bit-identical to
+    /// `observe(block)` followed by the sparse half of `process(block)`
+    /// because appearance indices are fixed at first appearance.
+    /// Inherently sequential per column — the reason the fused CPU path
+    /// cannot shard this stage across threads, which is exactly the
+    /// scaling wall §2.3 describes.
     pub fn fuse_sparse(&mut self, block: &RowBlock, out: &mut ProcessedColumns) {
-        let modulus = self.modulus;
-        let flags = self.flags;
         for (c, vocab) in self.vocabs.iter_mut().enumerate() {
+            let slot = self.programs.sparse[c];
+            if slot.is_stateless() {
+                continue; // filled by the sharded stateless stage
+            }
             let col = block.sparse_col(c);
             let dst = &mut out.sparse[c];
             let start = dst.len();
             dst.resize(start + col.len(), 0);
             let dst = &mut dst[start..];
-            match (flags.gen_vocab, flags.apply_vocab) {
+            match (slot.gen_vocab, slot.apply_vocab) {
                 (true, true) => {
                     for (&s, o) in col.iter().zip(dst.iter_mut()) {
-                        let v = modulus.map_or(s, |m| m.apply(s));
-                        *o = vocab.observe_apply(v);
+                        *o = vocab.observe_apply(slot.map(s));
                     }
                 }
                 (true, false) => {
                     for (&s, o) in col.iter().zip(dst.iter_mut()) {
-                        let v = modulus.map_or(s, |m| m.apply(s));
+                        let v = slot.map(s);
                         vocab.observe(v);
                         *o = v;
                     }
                 }
-                (false, apply) => {
-                    // no GenVocab in the plan: stateless passthrough (an
-                    // apply against never-filled vocabs would be all
-                    // misses; spec validation forbids that combination).
+                (false, _) => {
+                    // Only ApplyVocab-without-GenVocab reaches here
+                    // (stateless columns were skipped above) — program
+                    // validation forbids the combination, so if it ever
+                    // slips through, emit the explicit miss sentinel
+                    // rather than aliasing index 0.
                     for (&s, o) in col.iter().zip(dst.iter_mut()) {
-                        let v = modulus.map_or(s, |m| m.apply(s));
-                        *o = if apply { vocab.apply(v).unwrap_or(VOCAB_MISS) } else { v };
+                        *o = vocab.apply(slot.map(s)).unwrap_or(VOCAB_MISS);
                     }
                 }
             }
@@ -340,12 +382,8 @@ mod tests {
     use crate::ops::PipelineSpec;
 
     fn plan(spec: &str) -> Plan {
-        super::super::PipelineBuilder::plan_only(
-            PipelineSpec::parse(spec).unwrap(),
-            Schema::CRITEO,
-            InputFormat::Utf8,
-            4096,
-        )
+        Plan::compile(PipelineSpec::parse(spec).unwrap(), Schema::CRITEO, InputFormat::Utf8, 4096)
+            .unwrap()
     }
 
     #[test]
@@ -376,12 +414,7 @@ mod tests {
         let spec = PipelineSpec::dlrm(997);
         let reference = spec.execute(&ds.rows, ds.schema()).unwrap();
 
-        let p = super::super::PipelineBuilder::plan_only(
-            spec,
-            ds.schema(),
-            InputFormat::Utf8,
-            4096,
-        );
+        let p = Plan::compile(spec, ds.schema(), InputFormat::Utf8, 4096).unwrap();
         let mut state = ChunkState::new(&p);
         let chunks: Vec<RowBlock> = ds
             .rows
@@ -411,6 +444,15 @@ mod tests {
             "modulus:97|genvocab|applyvocab|neg2zero|logarithm",
             "modulus:97|genvocab",
             "modulus:53|neg2zero",
+            // heterogeneous per-column programs fuse identically too:
+            // mixed vocab sizes, a vocab-free column, partial dense log,
+            // one clipped+bucketized column
+            "sparse[*]: modulus:97|genvocab|applyvocab; \
+             sparse[0..3]: modulus:13|genvocab|applyvocab; \
+             sparse[3]: modulus:29; \
+             dense[*]: neg2zero|logarithm; \
+             dense[0]: clip:0:100|bucketize:1:10:100; \
+             dense[1]: neg2zero",
         ] {
             let p = plan(spec);
             let mut two_pass = ChunkState::new(&p);
@@ -430,6 +472,45 @@ mod tests {
             assert_eq!(got, want, "spec {spec}");
             assert_eq!(fused.vocab_entries(), two_pass.vocab_entries(), "spec {spec}");
         }
+    }
+
+    /// The streaming per-column state must match the spec's row-wise
+    /// reference interpreter for a heterogeneous program set.
+    #[test]
+    fn heterogeneous_process_matches_spec_execute() {
+        let ds = SynthDataset::generate(SynthConfig::small(230));
+        let spec = PipelineSpec::parse(
+            "sparse[*]: modulus:997|genvocab|applyvocab; \
+             sparse[0..4]: modulus:101|genvocab|applyvocab; \
+             sparse[5]: modulus:53|genvocab; \
+             dense[*]: neg2zero|logarithm; \
+             dense[2]: clip:0:40|bucketize:2:8:32",
+        )
+        .unwrap();
+        let reference = spec.execute(&ds.rows, ds.schema()).unwrap();
+
+        let p = Plan::compile(spec, ds.schema(), InputFormat::Utf8, 4096).unwrap();
+        let chunks: Vec<RowBlock> =
+            ds.rows.chunks(37).map(|c| RowBlock::from_rows(c, ds.schema())).collect();
+
+        // two-pass
+        let mut state = ChunkState::new(&p);
+        for chunk in &chunks {
+            state.observe(chunk);
+        }
+        let mut two = ProcessedColumns::with_schema(ds.schema());
+        for chunk in &chunks {
+            two.extend_from(&state.process(chunk));
+        }
+        assert_eq!(two, reference, "two-pass");
+
+        // fused
+        let mut fused = ChunkState::new(&p);
+        let mut got = ProcessedColumns::with_schema(ds.schema());
+        for chunk in &chunks {
+            got.extend_from(&fused.process_fused(chunk));
+        }
+        assert_eq!(got, reference, "fused");
     }
 
     /// Fused = sharded stateless stage + sequential sparse stage (the

@@ -79,7 +79,7 @@ use crate::accel::InputFormat;
 use crate::data::row::ProcessedColumns;
 use crate::data::{RowBlock, Schema};
 use crate::decode::{shard, IllegalLog, ShardedUtf8Decoder};
-use crate::ops::{Modulus, OpFlags, PipelineSpec};
+use crate::ops::{ColumnPlans, Modulus, PipelineSpec};
 use crate::report::{self, TimeTag};
 use crate::Result;
 
@@ -249,16 +249,19 @@ impl ExecStrategy {
     }
 }
 
-/// The validated, immutable execution plan: operator graph (as parsed
-/// flags + modulus), schema, input format, chunking and execution
-/// strategy. Built once by [`PipelineBuilder::build`]; executors read
-/// it, never mutate it.
+/// The validated, immutable execution plan: the spec's per-column
+/// programs compiled against the schema into one fixed-function slot
+/// per column ([`ColumnPlans`]), plus input format, chunking and
+/// execution strategy. Built once by [`PipelineBuilder::build`];
+/// executors read it, never mutate it.
 #[derive(Debug, Clone)]
 pub struct Plan {
     pub spec: PipelineSpec,
-    pub flags: OpFlags,
-    pub modulus: Option<Modulus>,
-    pub schema: Schema,
+    /// The compiled physical side of `spec`: per-column modulus/vocab
+    /// slots and dense kernel chains — what executor hot loops dispatch
+    /// on (never the rule list itself). Also the single source of truth
+    /// for the plan's schema ([`Plan::schema`]).
+    pub programs: ColumnPlans,
     pub input: InputFormat,
     /// Rows per chunk the engine aims for (the producer/worker channel
     /// is sized in these units).
@@ -274,11 +277,43 @@ pub struct Plan {
 }
 
 impl Plan {
+    /// Compile a bare plan (no executor attached): resolve the spec's
+    /// rules against the schema. This is the planning core
+    /// [`PipelineBuilder::build`] goes through; exposed for tests and
+    /// benches that drive [`ChunkState`] directly.
+    pub fn compile(
+        spec: PipelineSpec,
+        schema: Schema,
+        input: InputFormat,
+        chunk_rows: usize,
+    ) -> Result<Plan> {
+        Ok(Plan {
+            programs: spec.compile(schema)?,
+            spec,
+            input,
+            chunk_rows,
+            channel_depth: DEFAULT_CHANNEL_DEPTH,
+            strategy: ExecStrategy::TwoPass,
+            decode_threads: 1,
+        })
+    }
+
+    /// The schema the programs were compiled against.
+    pub fn schema(&self) -> Schema {
+        self.programs.schema
+    }
+
+    /// Does any column of the plan build a vocabulary? (Decides the
+    /// two-pass rewind and the fused CPU decomposition.)
+    pub fn has_gen_vocab(&self) -> bool {
+        self.programs.any_gen_vocab()
+    }
+
     /// Decode passes over the source this plan costs per submission: 2
-    /// only when a `gen_vocab` plan runs under [`ExecStrategy::TwoPass`]
-    /// (the rewind), 1 otherwise.
+    /// only when a vocabulary-building plan runs under
+    /// [`ExecStrategy::TwoPass`] (the rewind), 1 otherwise.
     pub fn decode_passes(&self) -> usize {
-        if self.flags.gen_vocab && self.strategy == ExecStrategy::TwoPass {
+        if self.has_gen_vocab() && self.strategy == ExecStrategy::TwoPass {
             2
         } else {
             1
@@ -288,10 +323,11 @@ impl Plan {
     /// Requested raw bytes per chunk, derived from `chunk_rows` and the
     /// format's approximate row width.
     pub fn chunk_bytes(&self) -> usize {
+        let schema = self.schema();
         let per_row = match self.input {
-            InputFormat::Binary => self.schema.binary_row_bytes(),
+            InputFormat::Binary => schema.binary_row_bytes(),
             // ~2 bytes label+newline, ~7 per dense field, 9 per sparse.
-            InputFormat::Utf8 => 2 + 7 * self.schema.num_dense + 9 * self.schema.num_sparse,
+            InputFormat::Utf8 => 2 + 7 * schema.num_dense + 9 * schema.num_sparse,
         };
         (self.chunk_rows * per_row).max(1)
     }
@@ -408,7 +444,6 @@ impl PipelineBuilder {
         let executor = self
             .executor
             .ok_or_else(|| anyhow::anyhow!("PipelineBuilder needs an executor"))?;
-        self.spec.validate()?;
         anyhow::ensure!(
             self.channel_depth >= 1,
             "planning: channel_depth must be >= 1 (got {})",
@@ -419,11 +454,12 @@ impl PipelineBuilder {
             Some(n) => n,
             None => shard::default_threads(),
         };
+        // The spec was validated at its construction; resolving its
+        // column selectors against the schema is the planning step that
+        // can still fail (a schema mismatch is a planning error).
         let mut plan = Plan {
-            flags: self.spec.flags(),
-            modulus: self.spec.modulus(),
+            programs: self.spec.compile(self.schema)?,
             spec: self.spec,
-            schema: self.schema,
             input: self.input,
             chunk_rows: self.chunk_rows,
             channel_depth: self.channel_depth,
@@ -455,26 +491,6 @@ impl PipelineBuilder {
         Ok(Pipeline { plan, executor })
     }
 
-    /// Assemble a bare [`Plan`] without an executor — internal helper
-    /// for unit tests of executor state.
-    pub(crate) fn plan_only(
-        spec: PipelineSpec,
-        schema: Schema,
-        input: InputFormat,
-        chunk_rows: usize,
-    ) -> Plan {
-        Plan {
-            flags: spec.flags(),
-            modulus: spec.modulus(),
-            spec,
-            schema,
-            input,
-            chunk_rows,
-            channel_depth: DEFAULT_CHANNEL_DEPTH,
-            strategy: ExecStrategy::TwoPass,
-            decode_threads: 1,
-        }
-    }
 }
 
 impl Default for PipelineBuilder {
@@ -525,7 +541,7 @@ impl Pipeline {
         if self.plan.strategy == ExecStrategy::TwoPass {
             // Pass 1 (GenVocab) only when the plan has stateful vocab
             // ops — it rewinds the source for a second decode pass.
-            if self.plan.flags.gen_vocab {
+            if self.plan.has_gen_vocab() {
                 anyhow::ensure!(
                     source.can_rewind(),
                     "two-pass gen_vocab plan needs a rewindable source; \
@@ -588,7 +604,7 @@ impl Pipeline {
     /// Run and gather the full output — the drop-in replacement for the
     /// old one-shot drivers.
     pub fn run_collect(&self, source: &mut dyn Source) -> Result<(ProcessedColumns, RunReport)> {
-        let mut sink = CollectSink::with_schema(self.plan.schema);
+        let mut sink = CollectSink::with_schema(self.plan.schema());
         let report = self.run(source, &mut sink)?;
         Ok((sink.into_columns(), report))
     }
@@ -630,10 +646,10 @@ where
     let chunk_bytes = plan.chunk_bytes();
     let mut decoder = ChunkDecoder::with_options(
         plan.input,
-        plan.schema,
+        plan.schema(),
         DecodeOptions { threads: plan.decode_threads, swar: true },
     );
-    let mut block = RowBlock::with_capacity(plan.schema, plan.chunk_rows);
+    let mut block = RowBlock::with_capacity(plan.schema(), plan.chunk_rows);
     let mut raw_bytes = 0u64;
     let mut rows = 0u64;
     let mut chunks = 0u64;
@@ -943,12 +959,25 @@ mod tests {
 
     #[test]
     fn plan_chunk_bytes_scales_with_rows() {
-        let p = PipelineBuilder::plan_only(
+        let p = Plan::compile(
             crate::ops::PipelineSpec::dlrm(97),
             Schema::CRITEO,
             InputFormat::Binary,
             1000,
-        );
+        )
+        .unwrap();
         assert_eq!(p.chunk_bytes(), 1000 * Schema::CRITEO.binary_row_bytes());
+    }
+
+    /// A spec whose selectors don't fit the schema is a planning error
+    /// — caught in `build`, never inside a serving worker.
+    #[test]
+    fn out_of_schema_selector_is_a_planning_error() {
+        let err = PipelineBuilder::new()
+            .spec_str("sparse[40]: modulus:5|genvocab|applyvocab")
+            .unwrap() // parses fine: 40 may exist in some schema
+            .executor(crate::coordinator::Backend::Gpu.executor())
+            .build(); // ... but not in CRITEO's 26
+        assert!(err.is_err(), "selector out of schema must fail at planning");
     }
 }

@@ -82,6 +82,38 @@ fn gen_data_presets_and_binary() {
 }
 
 #[test]
+fn preprocess_accepts_per_column_spec() {
+    let dir = std::env::temp_dir().join(format!("piper-cli-pc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("ds.txt");
+    let (ok, text) = run(&["gen-data", "rows=400", &format!("out={}", data.display())]);
+    assert!(ok, "{text}");
+
+    let (ok, text) = run(&[
+        "preprocess",
+        &format!("input={}", data.display()),
+        "backend=cpu",
+        "threads=2",
+        "spec=sparse[*]: modulus:997|genvocab|applyvocab; \
+         sparse[0..4]: modulus:5000|genvocab|applyvocab; \
+         dense[*]: neg2zero|log; dense[0]: clip:0:100|bucketize:1:10:100",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("400"), "row count must appear: {text}");
+
+    // a selector that doesn't fit the schema is a planning error
+    let (ok, text) = run(&[
+        "preprocess",
+        &format!("input={}", data.display()),
+        "backend=cpu",
+        "spec=sparse[40]: modulus:5|genvocab|applyvocab",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("out of range"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn bad_arguments_fail_cleanly() {
     let (ok, text) = run(&["preprocess"]); // missing input=
     assert!(!ok);

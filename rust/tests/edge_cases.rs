@@ -55,11 +55,18 @@ fn zero_dense_or_zero_sparse_schemas() {
         let raw = utf8::encode_dataset(&ds);
         let out = ParallelDecoder::new(schema).decode(&raw);
         assert_eq!(out.rows, ds.rows, "schema {schema:?}");
-        // streaming path too, under both strategies
+        // streaming path too, under both strategies (a `[*]` selector
+        // over zero columns of a kind resolves to nothing, not an error)
         for strategy in [ExecStrategy::TwoPass, ExecStrategy::Fused] {
-            let cols =
-                preprocess_buffered(schema, Modulus::new(7), WireFormat::Utf8, &raw, 13, strategy)
-                    .unwrap();
+            let cols = preprocess_buffered(
+                &piper::ops::PipelineSpec::dlrm(7),
+                schema,
+                WireFormat::Utf8,
+                &raw,
+                13,
+                strategy,
+            )
+            .unwrap();
             assert_eq!(cols.num_rows(), 50, "{strategy:?}");
         }
     }
@@ -76,7 +83,12 @@ fn adversarial_bytes_never_panic_decoders() {
         let _ = ParallelDecoder::new(schema).decode(&raw);
         // streaming decoder with random chunking
         let _ = preprocess_buffered(
-            schema, Modulus::new(11), WireFormat::Utf8, &raw, 7, ExecStrategy::Fused,
+            &piper::ops::PipelineSpec::dlrm(11),
+            schema,
+            WireFormat::Utf8,
+            &raw,
+            7,
+            ExecStrategy::Fused,
         );
     }
 }
@@ -90,7 +102,12 @@ fn adversarial_binary_streams_error_cleanly() {
         let raw: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
         // must either succeed (if length is row-aligned) or return Err
         let res = preprocess_buffered(
-            schema, Modulus::new(11), WireFormat::Binary, &raw, 64, ExecStrategy::TwoPass,
+            &piper::ops::PipelineSpec::dlrm(11),
+            schema,
+            WireFormat::Binary,
+            &raw,
+            64,
+            ExecStrategy::TwoPass,
         );
         if len % schema.binary_row_bytes() == 0 {
             assert!(res.is_ok(), "aligned length {len} should parse");
@@ -121,11 +138,7 @@ fn worker_errors_on_out_of_order_frames() {
 
     let stream = std::net::TcpStream::connect(addr).unwrap();
     let mut w = std::io::BufWriter::new(stream);
-    let job = Job {
-        schema: Schema::new(1, 1),
-        modulus: Modulus::new(7),
-        format: WireFormat::Utf8,
-    };
+    let job = Job::dlrm(Schema::new(1, 1), Modulus::new(7), WireFormat::Utf8);
     write_frame(&mut w, Tag::Job, &job.encode()).unwrap();
     write_frame(&mut w, Tag::Pass2Chunk, b"1\t2\taa\n").unwrap();
     use std::io::Write as _;
@@ -229,6 +242,31 @@ fn pipeline_spec_dependency_rules() {
     assert!(PipelineSpec::parse("").is_err());
     assert!(PipelineSpec::parse(" | , ").is_err());
     assert!(PipelineSpec::parse("modulus:5,genvocab,applyvocab").is_ok());
+}
+
+#[test]
+fn pipeline_spec_selector_grammar_edges() {
+    use piper::ops::PipelineSpec;
+    // the rules apply per column — a rule violating the dependency
+    // rules fails even when another rule would satisfy them globally
+    assert!(PipelineSpec::parse(
+        "sparse[0]: modulus:5|genvocab; sparse[1]: applyvocab"
+    )
+    .is_err());
+    // kind mismatches
+    assert!(PipelineSpec::parse("sparse[*]: clip:0:1").is_err());
+    assert!(PipelineSpec::parse("dense[*]: genvocab").is_err());
+    // malformed selectors
+    assert!(PipelineSpec::parse("sparse[]: modulus:5").is_err());
+    assert!(PipelineSpec::parse("sparse[1..]: modulus:5").is_err());
+    assert!(PipelineSpec::parse("sparse[-1]: modulus:5").is_err());
+    // a trailing semicolon is tolerated
+    assert!(PipelineSpec::parse("sparse[*]: modulus:5|genvocab|applyvocab;").is_ok());
+    // clip/bucketize argument grammar (`:`-separated, commas stay op
+    // separators)
+    assert!(PipelineSpec::parse("dense[*]: clip:0:10,bucketize:1:5").is_ok());
+    assert!(PipelineSpec::parse("dense[*]: clip:10:0").is_err());
+    assert!(PipelineSpec::parse("dense[*]: bucketize:5:5").is_err());
 }
 
 // ------------------------------------------------------------------

@@ -27,8 +27,8 @@ fn five_backends_one_answer() {
     let p_loc =
         run_backend(&Backend::Piper { mode: Mode::LocalDecodeInKernel }, &exp, &raw).unwrap();
     // real TCP loopback
-    let job = Job { schema: ds.schema(), modulus: m, format: WireFormat::Utf8 };
-    let tcp = piper::net::leader::run_loopback(job, &raw, 8 * 1024).unwrap();
+    let job = Job::dlrm(ds.schema(), m, WireFormat::Utf8);
+    let tcp = piper::net::leader::run_loopback(&job, &raw, 8 * 1024).unwrap();
 
     assert_eq!(cpu.processed, gpu.processed);
     assert_eq!(cpu.processed, p_net.processed);

@@ -79,18 +79,13 @@ fn property_binary_append_roundtrip_random_cuts() {
 fn partition_boundaries_match_unsliced_process() {
     let ds = SynthDataset::generate(SynthConfig::small(257)); // prime row count
     let block = RowBlock::from_rows(&ds.rows, ds.schema());
-    let spec = PipelineSpec::dlrm(97);
-    let plan = piper::pipeline::Plan {
-        flags: spec.flags(),
-        modulus: spec.modulus(),
-        spec,
-        schema: ds.schema(),
-        input: InputFormat::Utf8,
-        chunk_rows: 4096,
-        channel_depth: 2,
-        strategy: piper::pipeline::ExecStrategy::TwoPass,
-        decode_threads: 1,
-    };
+    let plan = piper::pipeline::Plan::compile(
+        PipelineSpec::dlrm(97),
+        ds.schema(),
+        InputFormat::Utf8,
+        4096,
+    )
+    .unwrap();
     let mut state = piper::pipeline::ChunkState::new(&plan);
     state.observe(&block);
     let whole = state.process(&block);

@@ -1,20 +1,25 @@
 #!/usr/bin/env sh
-# Snapshot the decode-threads sweep into BENCH_pr4.json at the repo root.
+# Snapshot the pipeline_engine bench's machine-readable outputs at the
+# repo root:
+#   BENCH_pr4.json — the decode-threads sweep (PR 4)
+#   BENCH_pr5.json — uniform vs heterogeneous per-column programs (PR 5)
 #
-# Runs the pipeline_engine bench (which checksum-verifies every sweep
-# point before timing it) with BENCH_JSON pointed at the snapshot file.
+# The bench checksum-verifies every point before timing it.
 # Usage: scripts/bench_snapshot.sh [rows] [reps]
 set -eu
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 ROWS="${1:-200000}"
 REPS="${2:-5}"
-OUT="$ROOT/BENCH_pr4.json"
+OUT4="$ROOT/BENCH_pr4.json"
+OUT5="$ROOT/BENCH_pr5.json"
 
-echo "decode sweep: $ROWS rows, $REPS reps -> $OUT"
+echo "pipeline_engine snapshot: $ROWS rows, $REPS reps -> $OUT4, $OUT5"
 cd "$ROOT/rust"
-PIPER_BENCH_ROWS="$ROWS" PIPER_BENCH_REPS="$REPS" BENCH_JSON="$OUT" \
+PIPER_BENCH_ROWS="$ROWS" PIPER_BENCH_REPS="$REPS" \
+    BENCH_JSON="$OUT4" BENCH_PR5_JSON="$OUT5" \
     cargo bench --bench pipeline_engine
 
-echo "snapshot written:"
-cat "$OUT"
+echo "snapshots written:"
+cat "$OUT4"
+cat "$OUT5"
