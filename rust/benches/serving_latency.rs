@@ -1,0 +1,143 @@
+//! Serving-latency bench: request/response preprocessing against a
+//! frozen vocabulary artifact over loopback TCP, latency percentiles vs
+//! batch size.
+//!
+//! What to look for:
+//!   * per-request latency is flat and small for serving-sized batches
+//!     (1..512 rows) — the fixed cost is one frame round trip plus one
+//!     `ChunkDecoder` scan, not a pipeline spin-up;
+//!   * throughput grows with batch size as the per-frame overhead
+//!     amortizes — the batch-size knob trades tail latency for rows/s;
+//!   * every response is checked bit-identical to the local
+//!     `FrozenPlan::apply_block` on the same bytes before any time is
+//!     reported, so the numbers are for the *correct* fast path.
+
+use std::time::{Duration, Instant};
+
+use piper::benchutil::{bench_reps, bench_rows, dataset};
+use piper::data::{binary, RowBlock};
+use piper::net::{self, serve::MAX_REQUEST_BYTES, ServeJob, ServeStatus};
+use piper::net::{protocol, stream::WireFormat};
+use piper::ops::{PipelineSpec, VocabArtifact};
+use piper::pipeline::{ChunkDecoder, FrozenPlan, MissPolicy};
+use piper::report::{fmt_duration, fmt_rows_per_sec, Table};
+
+fn percentile(sorted: &[Duration], p: usize) -> Duration {
+    sorted[(sorted.len() - 1) * p / 100]
+}
+
+fn main() {
+    let rows = bench_rows(100_000);
+    let reqs_per_size = bench_reps(3) * 16;
+    let ds = dataset(rows);
+    let schema = ds.schema();
+    let raw = binary::encode_dataset(&ds);
+    let row_bytes = schema.binary_row_bytes();
+    let spec = PipelineSpec::dlrm(5000);
+
+    // Freeze: one GenVocab pass over the dataset, exported into the
+    // artifact the worker will serve.
+    let plans = spec.compile(schema).expect("spec compiles");
+    let mut state = piper::pipeline::ChunkState::with_programs(plans);
+    let mut block = RowBlock::new(schema);
+    let mut dec = ChunkDecoder::new(piper::accel::InputFormat::Binary, schema);
+    dec.feed_into(&raw, &mut block).expect("decode");
+    dec.finish_into(&mut block).expect("decode end");
+    state.observe(&block);
+    let artifact = VocabArtifact::new(
+        spec.clone(),
+        schema,
+        state.vocabs.iter().map(|v| v.export_keys()).collect(),
+    )
+    .expect("artifact");
+    println!(
+        "artifact: {} vocabulary entries across {} columns, {} request rows available",
+        artifact.total_entries(),
+        artifact.vocabs().len(),
+        rows,
+    );
+
+    // Local reference for the equivalence gate.
+    let frozen = FrozenPlan::from_artifact(&artifact, MissPolicy::Sentinel).expect("freeze");
+
+    // Loopback worker, one serving session.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let server = std::thread::spawn(move || net::serve_one(&listener));
+
+    let job = ServeJob {
+        policy: MissPolicy::Sentinel,
+        format: WireFormat::Binary,
+        queue_depth: 32,
+        artifact,
+    };
+    let mut client = net::ServeClient::connect(&addr, &job).expect("connect");
+
+    let mut t = Table::new(
+        &format!("serving latency — loopback TCP, binary, {reqs_per_size} requests per size [meas]"),
+        &["batch rows", "p50", "p99", "rows/s"],
+    );
+    let mut scratch = RowBlock::new(schema);
+    for batch in [1usize, 8, 32, 128, 512] {
+        if batch > rows {
+            continue; // tiny PIPER_BENCH_ROWS runs skip oversized batches
+        }
+        let bytes = batch * row_bytes;
+        assert!(bytes <= MAX_REQUEST_BYTES, "bench batch under the serving cap");
+        // Warm up the path (connection buffers, decoder allocation).
+        for _ in 0..3 {
+            client.request(&raw[..bytes]).expect("warmup");
+        }
+        let mut lat = Vec::with_capacity(reqs_per_size);
+        for i in 0..reqs_per_size {
+            // Slide through the dataset so requests vary (and stay
+            // row-aligned: binary rows are fixed width).
+            let off = (i * bytes) % (raw.len() - bytes + 1);
+            let off = off - off % row_bytes;
+            let req = &raw[off..off + bytes];
+            let t0 = Instant::now();
+            let resp = client.request(req).expect("request");
+            lat.push(t0.elapsed());
+            assert_eq!(resp.status, ServeStatus::Ok, "vocab built from these rows");
+            // Equivalence gate: response bytes == local frozen apply.
+            scratch.clear();
+            let mut dec = ChunkDecoder::new(piper::accel::InputFormat::Binary, schema);
+            dec.feed_into(req, &mut scratch).expect("local decode");
+            dec.finish_into(&mut scratch).expect("local decode end");
+            let local = frozen.apply_block(&scratch);
+            assert_eq!(
+                resp.payload,
+                protocol::pack_columns(&local.columns, schema),
+                "batch {batch}: served bytes must equal the local frozen apply"
+            );
+        }
+        lat.sort_unstable();
+        let p50 = percentile(&lat, 50);
+        let p99 = percentile(&lat, 99);
+        let total: Duration = lat.iter().sum();
+        t.row(&[
+            batch.to_string(),
+            fmt_duration(p50),
+            fmt_duration(p99),
+            fmt_rows_per_sec((batch * reqs_per_size) as f64 / total.as_secs_f64().max(1e-12)),
+        ]);
+    }
+    t.note("every response asserted bit-identical to FrozenPlan::apply_block locally");
+    t.note("latency is client-measured round trip: send → decode → apply → pack → recv");
+    t.print();
+    println!();
+
+    let (report, late) = client.finish().expect("finish");
+    assert!(late.is_empty(), "all responses were consumed in-loop");
+    let stats = server.join().expect("server thread").expect("serve_one");
+    println!(
+        "worker report: {} requests ({} ok), {} rows, {} misses; server-side p50 {} / p99 {}",
+        report.requests,
+        report.ok,
+        report.rows,
+        report.misses,
+        fmt_duration(report.p50()),
+        fmt_duration(report.p99()),
+    );
+    println!("worker session stats: {} rows, {} vocab entries", stats.rows, stats.vocab_entries);
+}

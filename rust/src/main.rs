@@ -6,6 +6,8 @@
 //!   compare     run the Fig. 9 style CPU/GPU/PIPER comparison
 //!   serve       run a network-attached PIPER worker (TCP)
 //!   submit      stream a dataset to a worker and collect results
+//!   freeze      build a frozen vocabulary artifact from a dataset
+//!   request     send a small batch to a serving worker (online mode)
 //!   train       end-to-end: preprocess + train the DLRM via PJRT
 //!
 //! Every knob is a `key=value` override (see `--help`), optionally layered
@@ -15,12 +17,12 @@ use std::path::Path;
 
 use piper::accel::{InputFormat, Mode};
 use piper::config::Config;
-use piper::coordinator::{self, Backend};
+use piper::coordinator::{self, Backend, Experiment};
 use piper::cpu_baseline::ConfigKind;
 use piper::data::{binary, synth::SynthConfig, utf8, Schema, SynthDataset};
 use piper::net::{self, protocol::Job, stream::WireFormat};
-use piper::ops::Modulus;
-use piper::pipeline::FileSource;
+use piper::ops::{Modulus, PipelineSpec, VocabArtifact};
+use piper::pipeline::{FileSource, MissPolicy, Source as _};
 use piper::report::{fmt_duration, fmt_rows_per_sec, fmt_speedup, fmt_tagged, Table};
 use piper::Result;
 
@@ -35,10 +37,15 @@ COMMANDS:
               vocab=5000 threads=8 cpu_config=1|2|3 chunk_rows=65536 spec='modulus:5000|genvocab|...'
               strategy=fused|two-pass (default: fused when the backend supports it)
               decode_threads=N (default: one per core; 1 = sequential decode)
+              save_artifact=PATH (also freeze the vocabularies to an artifact)
   compare     rows=20000 vocab=5000 format=utf8|binary
-  serve       addr=127.0.0.1:7700 jobs=1
+  serve       addr=127.0.0.1:7700 jobs=1 (jobs=0: accept connections forever)
   submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000 spec='...'
               strategy=fused|two-pass
+  freeze      input=PATH format=utf8|binary out=vocab.artifact vocab=5000 spec='...'
+              dense=13 sparse=26 chunk=1048576
+  request     artifact=PATH input=PATH addr=127.0.0.1:7700 format=utf8|binary
+              policy=sentinel|default:N|reject queue_depth=32
   train       input=PATH format=utf8 vocab=5000 steps=100 artifacts=artifacts
   help        print this message
 
@@ -54,6 +61,14 @@ dataset is never resident in memory. Under the fused strategy (the
 default) vocabulary generation and application run in ONE decode pass;
 strategy=two-pass reproduces the classic two-loop baseline with its
 rewind.
+
+freeze builds a versioned, checksummed vocabulary artifact from a
+training dataset; request sends one small batch against a worker
+serving that artifact (start it with `serve jobs=0`) and prints the
+response plus the worker's p50/p99 latency report. policy= decides
+what happens to vocabulary misses at serving time: sentinel keeps the
+u32::MAX marker, default:N rewrites misses to index N, reject drops
+the whole row.
 ";
 
 fn main() {
@@ -99,6 +114,8 @@ fn run() -> Result<()> {
         "compare" => cmd_compare(&cfg),
         "serve" => cmd_serve(&cfg),
         "submit" => cmd_submit(&cfg),
+        "freeze" => cmd_freeze(&cfg),
+        "request" => cmd_request(&cfg),
         "train" => cmd_train(&cfg),
         _ => {
             print!("{HELP}");
@@ -229,6 +246,133 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
         ));
     }
     t.print();
+
+    // Optionally freeze the run's vocabularies for online serving. The
+    // artifact pass re-streams the file through GenVocab only — same
+    // spec, same schema, so the keys match what this run built.
+    if let Some(out) = cfg.get("save_artifact") {
+        let spec = spec_of(cfg)?;
+        let artifact =
+            build_artifact(Path::new(path), format, &spec, Schema::CRITEO, 1 << 20)?;
+        artifact.save(Path::new(out))?;
+        println!(
+            "froze {} vocabulary entries to {out} (spec {:#018x}, schema {:#018x})",
+            artifact.total_entries(),
+            artifact.spec_hash(),
+            artifact.schema_hash(),
+        );
+    }
+    Ok(())
+}
+
+/// The spec every command shares: an explicit `spec=` program, or the
+/// uniform DLRM preset at `vocab=` range.
+fn spec_of(cfg: &Config) -> Result<PipelineSpec> {
+    Ok(match cfg.get("spec") {
+        Some(s) => PipelineSpec::parse(s)?,
+        None => PipelineSpec::dlrm(modulus_of(cfg)?.range),
+    })
+}
+
+/// Stream `path` through a GenVocab-only pass and freeze the resulting
+/// vocabularies into a checksummed [`VocabArtifact`].
+fn build_artifact(
+    path: &Path,
+    input: InputFormat,
+    spec: &PipelineSpec,
+    schema: Schema,
+    chunk: usize,
+) -> Result<VocabArtifact> {
+    let wire = match input {
+        InputFormat::Utf8 => WireFormat::Utf8,
+        InputFormat::Binary => WireFormat::Binary,
+    };
+    let decode = piper::pipeline::DecodeOptions {
+        threads: piper::decode::shard::default_threads(),
+        swar: true,
+    };
+    let mut sp = net::StreamingPreprocessor::with_decode_options(spec, schema, wire, decode)?;
+    let mut source = FileSource::open(path, input)?;
+    let mut buf = Vec::new();
+    while source.next_chunk(chunk.max(1), &mut buf)? {
+        sp.pass1_chunk(&buf)?;
+    }
+    sp.pass1_end()?;
+    VocabArtifact::new(spec.clone(), schema, sp.export_vocabs())
+}
+
+fn cmd_freeze(cfg: &Config) -> Result<()> {
+    let path = cfg
+        .get("input")
+        .ok_or_else(|| anyhow::anyhow!("missing input=PATH"))?;
+    let out = cfg.get_or("out", "vocab.artifact");
+    let input = format_of(cfg)?;
+    let schema = Schema::new(
+        cfg.get_usize("dense", Schema::CRITEO.num_dense)?,
+        cfg.get_usize("sparse", Schema::CRITEO.num_sparse)?,
+    );
+    let spec = spec_of(cfg)?;
+    // Fail on selector/schema mismatch before touching the dataset.
+    spec.compile(schema)?;
+    let chunk = cfg.get_usize("chunk", 1 << 20)?;
+    let artifact = build_artifact(Path::new(path), input, &spec, schema, chunk)?;
+    artifact.save(Path::new(out))?;
+    println!(
+        "froze {} vocabulary entries across {} column(s) to {out}",
+        artifact.total_entries(),
+        artifact.vocabs().len(),
+    );
+    println!(
+        "artifact hashes: spec {:#018x} schema {:#018x}",
+        artifact.spec_hash(),
+        artifact.schema_hash(),
+    );
+    Ok(())
+}
+
+fn cmd_request(cfg: &Config) -> Result<()> {
+    let artifact_path = cfg
+        .get("artifact")
+        .ok_or_else(|| anyhow::anyhow!("missing artifact=PATH"))?;
+    let input_path = cfg
+        .get("input")
+        .ok_or_else(|| anyhow::anyhow!("missing input=PATH"))?;
+    let addr = cfg.get_or("addr", "127.0.0.1:7700");
+    let policy = MissPolicy::parse(cfg.get_or("policy", "sentinel"))?;
+    let format = match format_of(cfg)? {
+        InputFormat::Utf8 => WireFormat::Utf8,
+        InputFormat::Binary => WireFormat::Binary,
+    };
+    let artifact = VocabArtifact::load(Path::new(artifact_path))?;
+    let schema = artifact.schema();
+    let job = net::ServeJob {
+        policy,
+        format,
+        queue_depth: cfg.get_usize("queue_depth", 32)? as u32,
+        artifact,
+    };
+    let raw = std::fs::read(input_path)?;
+    let mut client = net::ServeClient::connect(addr, &job)?;
+    let resp = client.request(&raw)?;
+    let (report, _late) = client.finish()?;
+    match resp.status {
+        net::ServeStatus::BadRequest => println!(
+            "request rejected: {}",
+            String::from_utf8_lossy(&resp.payload)
+        ),
+        status => println!(
+            "status {status:?}: {} row(s) back, {} miss(es), {} rejected row(s)",
+            resp.rows(schema),
+            resp.misses,
+            resp.rejected_rows,
+        ),
+    }
+    println!(
+        "server report: {} request(s), latency p50 {} / p99 {}",
+        report.requests,
+        fmt_duration(report.p50()),
+        fmt_duration(report.p99()),
+    );
     Ok(())
 }
 
@@ -277,6 +421,10 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let addr = cfg.get_or("addr", "127.0.0.1:7700");
     let jobs = cfg.get_usize("jobs", 1)?;
     let listener = std::net::TcpListener::bind(addr)?;
+    if jobs == 0 {
+        println!("piper worker listening on {addr} (forever; ^C to stop)");
+        net::serve_forever(&listener);
+    }
     println!("piper worker listening on {addr} for {jobs} job(s)");
     for i in 0..jobs {
         let stats = net::serve_one(&listener)?;
@@ -327,7 +475,6 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
 
 #[cfg(feature = "pjrt")]
 fn cmd_train(cfg: &Config) -> Result<()> {
-    use piper::coordinator::Experiment;
     let raw = read_input(cfg)?;
     let exp = Experiment::new(modulus_of(cfg)?, format_of(cfg)?);
     let backend = backend_of(cfg)?;

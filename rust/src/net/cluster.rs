@@ -105,6 +105,9 @@ pub fn run_cluster(
         (0..job.schema.num_sparse).map(|_| Default::default()).collect();
     for conn in conns.iter_mut() {
         let (tag, payload) = protocol::read_frame(&mut conn.reader)?;
+        if tag == Tag::ErrorReply {
+            anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload));
+        }
         anyhow::ensure!(tag == Tag::VocabDump, "expected VocabDump, got {tag:?}");
         let cols = protocol::unpack_vocabs(&payload)?;
         anyhow::ensure!(cols.len() == merged.len(), "worker vocab column mismatch");
@@ -141,6 +144,9 @@ pub fn run_cluster(
                         }
                     }
                     Tag::ResultEnd => return Ok(cols),
+                    Tag::ErrorReply => {
+                        anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload))
+                    }
                     other => anyhow::bail!("unexpected {other:?} in pass 2"),
                 }
             }

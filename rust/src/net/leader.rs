@@ -107,6 +107,9 @@ pub fn run_leader_source(
                     let stats = RunStats::decode(&payload)?;
                     return Ok((cols, stats));
                 }
+                Tag::ErrorReply => {
+                    anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload))
+                }
                 other => anyhow::bail!("unexpected frame {other:?} from worker"),
             }
         }

@@ -19,6 +19,9 @@
 //!   protocol, streams results back.
 //! * [`leader`] — the client: sends the dataset (once or twice per the
 //!   strategy), collects results.
+//! * [`serve`] — online serving: small request/response batches against
+//!   a frozen vocabulary artifact, with admission control and latency
+//!   percentiles ([`serve::ServeReport`]).
 //!
 //! Functional times on loopback are measured; the 100 Gbps figure comes
 //! from [`crate::accel::network`]'s line-rate model (tagged `sim`).
@@ -26,10 +29,12 @@
 pub mod cluster;
 pub mod leader;
 pub mod protocol;
+pub mod serve;
 pub mod stream;
 pub mod worker;
 
 pub use cluster::{run_cluster, run_cluster_loopback};
 pub use leader::{run_leader, run_leader_source};
+pub use serve::{ServeClient, ServeJob, ServeReport, ServeResponse, ServeStatus};
 pub use stream::StreamingPreprocessor;
-pub use worker::serve_one;
+pub use worker::{serve_forever, serve_one};

@@ -14,7 +14,7 @@
 //! leaders keep working and the cluster leader-merge path simply keeps
 //! sending pass frames.
 
-use crate::data::row::ProcessedRow;
+use crate::data::row::{ProcessedColumns, ProcessedRow};
 use crate::data::Schema;
 use crate::ops::{Modulus, PipelineSpec};
 use crate::Result;
@@ -45,6 +45,26 @@ pub enum Tag {
     FusedChunk = 11,
     /// Leader → worker: end of the fused stream.
     FusedEnd = 12,
+    /// Client → worker, first frame of the serving protocol: a frozen
+    /// artifact plus miss policy and admission settings
+    /// ([`crate::net::serve::ServeJob`]).
+    ServeJob = 13,
+    /// Client → worker: one small-batch request
+    /// (`req_id:u64` + raw rows in the session's wire format).
+    ServeRequest = 14,
+    /// Worker → client: the response to one request
+    /// ([`crate::net::serve::ServeResponse`]).
+    ServeResponse = 15,
+    /// Client → worker: end of the serving session.
+    ServeEnd = 16,
+    /// Worker → client, final frame of a serving session: aggregate
+    /// latency/miss statistics ([`crate::net::serve::ServeReport`]).
+    ServeReport = 17,
+    /// Worker → peer: a fatal protocol/session error, carried as a
+    /// UTF-8 message just before the worker closes the connection — so
+    /// a malformed stream diagnoses itself instead of surfacing as a
+    /// bare hangup on the other side.
+    ErrorReply = 18,
 }
 
 impl Tag {
@@ -62,6 +82,12 @@ impl Tag {
             10 => Tag::VocabLoad,
             11 => Tag::FusedChunk,
             12 => Tag::FusedEnd,
+            13 => Tag::ServeJob,
+            14 => Tag::ServeRequest,
+            15 => Tag::ServeResponse,
+            16 => Tag::ServeEnd,
+            17 => Tag::ServeReport,
+            18 => Tag::ErrorReply,
             other => anyhow::bail!("unknown frame tag {other}"),
         })
     }
@@ -96,6 +122,13 @@ pub fn unpack_vocabs(buf: &[u8]) -> Result<Vec<Vec<u32>>> {
     for _ in 0..ncols {
         let len = rd_u32(at)? as usize;
         at += 4;
+        // Bound the reservation by the bytes actually present: a
+        // malicious length field must produce a truncation error, not a
+        // multi-gigabyte allocation.
+        anyhow::ensure!(
+            buf.len().saturating_sub(at) / 4 >= len,
+            "vocab frame truncated: column claims {len} keys"
+        );
         let mut col = Vec::with_capacity(len);
         for _ in 0..len {
             col.push(rd_u32(at)?);
@@ -219,6 +252,25 @@ pub fn unpack_rows(buf: &[u8], schema: Schema) -> Result<Vec<ProcessedRow>> {
     Ok(rows)
 }
 
+/// Pack a processed column block straight into the [`pack_rows`] wire
+/// layout — same bytes, no intermediate [`ProcessedRow`] materialization
+/// (the serving path packs every response, so the per-row allocation of
+/// a `row()` round trip would be pure overhead).
+pub fn pack_columns(cols: &ProcessedColumns, schema: Schema) -> Vec<u8> {
+    let rows = cols.num_rows();
+    let mut out = Vec::with_capacity(rows * schema.binary_row_bytes());
+    for r in 0..rows {
+        out.extend_from_slice(&cols.labels[r].to_le_bytes());
+        for col in &cols.dense {
+            out.extend_from_slice(&col[r].to_le_bytes());
+        }
+        for col in &cols.sparse {
+            out.extend_from_slice(&col[r].to_le_bytes());
+        }
+    }
+    out
+}
+
 /// Stats returned in ResultEnd.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RunStats {
@@ -310,6 +362,41 @@ mod tests {
         ];
         let packed = pack_rows(&rows, schema);
         assert_eq!(unpack_rows(&packed, schema).unwrap(), rows);
+    }
+
+    #[test]
+    fn pack_columns_matches_pack_rows() {
+        let schema = Schema::new(2, 3);
+        let rows = vec![
+            ProcessedRow { label: 1, dense: vec![0.5, -2.0], sparse: vec![1, 2, u32::MAX] },
+            ProcessedRow { label: 0, dense: vec![1.5, 9.0], sparse: vec![4, 5, 6] },
+        ];
+        let mut cols = ProcessedColumns::with_schema(schema);
+        for r in &rows {
+            cols.push_row(r);
+        }
+        assert_eq!(pack_columns(&cols, schema), pack_rows(&rows, schema));
+    }
+
+    #[test]
+    fn vocab_roundtrip_and_hostile_lengths() {
+        let cols = vec![vec![5, 1, 9], vec![], vec![42]];
+        let packed = pack_vocabs(&cols);
+        assert_eq!(unpack_vocabs(&packed).unwrap(), cols);
+        // truncation anywhere is an error, never a panic
+        for cut in 0..packed.len() {
+            assert!(unpack_vocabs(&packed[..cut]).is_err(), "cut at {cut}");
+        }
+        // a column length far beyond the buffer must fail fast without
+        // a giant reservation
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(&1u32.to_le_bytes());
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(unpack_vocabs(&hostile).is_err());
+        // trailing bytes rejected
+        let mut trailing = pack_vocabs(&cols);
+        trailing.push(0);
+        assert!(unpack_vocabs(&trailing).is_err());
     }
 
     #[test]

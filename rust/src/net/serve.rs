@@ -1,0 +1,714 @@
+//! Online serving mode: low-latency request/response preprocessing
+//! against a frozen vocabulary artifact.
+//!
+//! Batch mode moves a dataset once; serving answers a stream of *small*
+//! requests (tens of rows) at inference time — the request-path
+//! preprocessing tf.data service disaggregates from training
+//! (PAPERS.md). The session protocol:
+//!
+//! ```text
+//! client                                worker
+//!   ServeJob  (artifact+policy+depth) →   freeze, validate
+//!   ServeRequest (req_id + raw rows)  →   decode → apply → pack
+//!                                     ←   ServeResponse (status+rows)
+//!   ...                                   ...
+//!   ServeEnd                          →
+//!                                     ←   ServeReport (p50/p99, misses)
+//! ```
+//!
+//! Every request runs the engine's existing fast path — one
+//! [`ChunkDecoder`] scan into a reused [`RowBlock`] scratch, then
+//! [`FrozenPlan::apply_block`] (the batch pass-2 hot loop) — so a served
+//! row is bit-identical to the batch ApplyVocab result for the same
+//! artifact; the serving equivalence suite pins this across wire
+//! formats and miss policies.
+//!
+//! **Admission control**: the worker bounds in-flight requests at the
+//! job's `queue_depth`. A request over the bound gets an immediate
+//! explicit [`ServeStatus::Overloaded`] response instead of unbounded
+//! buffering — the client learns it must back off *now*, not after the
+//! queue melts. A malformed request (oversized, misaligned binary,
+//! illegal rows) gets [`ServeStatus::BadRequest`] and the session keeps
+//! serving; only a broken *frame* stream ends the session.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::data::{RowBlock, Schema};
+use crate::ops::artifact::VocabArtifact;
+use crate::pipeline::{ChunkDecoder, FrozenPlan, MissPolicy};
+use crate::Result;
+
+use super::protocol::{self, Tag};
+use super::stream::WireFormat;
+
+/// In-flight bound when the client does not pick one.
+pub const DEFAULT_QUEUE_DEPTH: u32 = 32;
+
+/// Hard per-request payload cap — serving frames are small batches; a
+/// request this large belongs on the batch protocol.
+pub const MAX_REQUEST_BYTES: usize = 1 << 24;
+
+/// Rolling latency window: percentiles cover the last this-many
+/// requests, so a long session reports current behavior, not its
+/// cold-start tail forever.
+const LATENCY_WINDOW: usize = 1024;
+
+/// Session header: everything the worker needs to serve — the frozen
+/// artifact itself (spec + schema + vocabularies, checksummed), the
+/// miss policy, the request wire format, and the admission bound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeJob {
+    pub policy: MissPolicy,
+    pub format: WireFormat,
+    /// Max in-flight requests before [`ServeStatus::Overloaded`]
+    /// replies; 0 means [`DEFAULT_QUEUE_DEPTH`].
+    pub queue_depth: u32,
+    pub artifact: VocabArtifact,
+}
+
+impl ServeJob {
+    /// Frame layout: `policy:u8 default:u32 format:u8 depth:u32
+    /// artifact:rest` — the artifact crosses the wire in its checksummed
+    /// file encoding and is fully re-validated on decode.
+    pub fn encode(&self) -> Vec<u8> {
+        let artifact = self.artifact.encode();
+        let mut out = Vec::with_capacity(10 + artifact.len());
+        let (tag, default) = self.policy.to_wire();
+        out.push(tag);
+        out.extend_from_slice(&default.to_le_bytes());
+        out.push(match self.format {
+            WireFormat::Utf8 => 0,
+            WireFormat::Binary => 1,
+        });
+        out.extend_from_slice(&self.queue_depth.to_le_bytes());
+        out.extend_from_slice(&artifact);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ServeJob> {
+        anyhow::ensure!(buf.len() >= 10, "serve job frame must be >= 10 bytes, got {}", buf.len());
+        let policy = MissPolicy::from_wire(
+            buf[0],
+            u32::from_le_bytes([buf[1], buf[2], buf[3], buf[4]]),
+        )?;
+        let format = match buf[5] {
+            0 => WireFormat::Utf8,
+            1 => WireFormat::Binary,
+            v => anyhow::bail!("bad wire format {v}"),
+        };
+        let queue_depth = u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]);
+        let artifact = VocabArtifact::decode(&buf[10..])?;
+        Ok(ServeJob { policy, format, queue_depth, artifact })
+    }
+}
+
+/// Outcome of one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ServeStatus {
+    /// Transformed rows in the payload, every key in vocabulary.
+    Ok = 0,
+    /// Transformed rows in the payload, minus rows the
+    /// [`MissPolicy::RejectRow`] policy dropped.
+    RejectedRows = 1,
+    /// The request could not be decoded (oversized, misaligned,
+    /// illegal rows); payload carries the reason. The session survives.
+    BadRequest = 2,
+    /// Admission control refused the request — more than `queue_depth`
+    /// requests were in flight. Retry with backoff.
+    Overloaded = 3,
+}
+
+impl ServeStatus {
+    pub fn from_u8(v: u8) -> Result<ServeStatus> {
+        Ok(match v {
+            0 => ServeStatus::Ok,
+            1 => ServeStatus::RejectedRows,
+            2 => ServeStatus::BadRequest,
+            3 => ServeStatus::Overloaded,
+            other => anyhow::bail!("unknown serve status {other}"),
+        })
+    }
+}
+
+/// One response frame: echo of the request id, status, the request's
+/// miss accounting, and the transformed rows in [`protocol::pack_rows`]
+/// layout (or a UTF-8 reason for [`ServeStatus::BadRequest`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeResponse {
+    pub req_id: u64,
+    pub status: ServeStatus,
+    pub misses: u32,
+    pub rejected_rows: u32,
+    pub payload: Vec<u8>,
+}
+
+impl ServeResponse {
+    /// Frame layout: `req_id:u64 status:u8 misses:u32 rejected:u32
+    /// payload:rest`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(17 + self.payload.len());
+        out.extend_from_slice(&self.req_id.to_le_bytes());
+        out.push(self.status as u8);
+        out.extend_from_slice(&self.misses.to_le_bytes());
+        out.extend_from_slice(&self.rejected_rows.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ServeResponse> {
+        anyhow::ensure!(buf.len() >= 17, "serve response must be >= 17 bytes, got {}", buf.len());
+        let rd32 = |i: usize| u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]]);
+        let mut id = [0u8; 8];
+        id.copy_from_slice(&buf[..8]);
+        Ok(ServeResponse {
+            req_id: u64::from_le_bytes(id),
+            status: ServeStatus::from_u8(buf[8])?,
+            misses: rd32(9),
+            rejected_rows: rd32(13),
+            payload: buf[17..].to_vec(),
+        })
+    }
+
+    /// Rows in the payload (0 for error statuses).
+    pub fn rows(&self, schema: Schema) -> usize {
+        self.payload.len() / schema.binary_row_bytes()
+    }
+}
+
+/// Aggregate session statistics, returned as the final frame.
+/// `ok` counts requests answered with transformed rows (including ones
+/// RejectRow trimmed); `bad_requests` and `overloaded` count the error
+/// replies; the latency percentiles are over the rolling window of the
+/// last [`LATENCY_WINDOW`] served requests, admission to response
+/// flushed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub ok: u64,
+    pub bad_requests: u64,
+    pub overloaded: u64,
+    /// Rows returned across all responses (after RejectRow trimming).
+    pub rows: u64,
+    pub misses: u64,
+    pub rejected_rows: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl ServeReport {
+    pub fn p50(&self) -> Duration {
+        Duration::from_micros(self.p50_us)
+    }
+
+    pub fn p99(&self) -> Duration {
+        Duration::from_micros(self.p99_us)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(72);
+        for v in [
+            self.requests,
+            self.ok,
+            self.bad_requests,
+            self.overloaded,
+            self.rows,
+            self.misses,
+            self.rejected_rows,
+            self.p50_us,
+            self.p99_us,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ServeReport> {
+        anyhow::ensure!(buf.len() == 72, "serve report must be 72 bytes, got {}", buf.len());
+        let rd = |i: usize| {
+            let mut w = [0u8; 8];
+            w.copy_from_slice(&buf[8 * i..8 * i + 8]);
+            u64::from_le_bytes(w)
+        };
+        Ok(ServeReport {
+            requests: rd(0),
+            ok: rd(1),
+            bad_requests: rd(2),
+            overloaded: rd(3),
+            rows: rd(4),
+            misses: rd(5),
+            rejected_rows: rd(6),
+            p50_us: rd(7),
+            p99_us: rd(8),
+        })
+    }
+}
+
+/// Ring of the last [`LATENCY_WINDOW`] request latencies (µs).
+#[derive(Debug, Default)]
+struct LatencyWindow {
+    samples: Vec<u64>,
+    next: usize,
+}
+
+impl LatencyWindow {
+    fn record(&mut self, us: u64) {
+        if self.samples.len() < LATENCY_WINDOW {
+            self.samples.push(us);
+        } else {
+            self.samples[self.next] = us;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+    }
+
+    /// The `p`-th percentile (0..=100) by nearest-rank over the window;
+    /// 0 when nothing was recorded.
+    fn percentile(&self, p: u64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        sorted[(sorted.len() - 1) * p as usize / 100]
+    }
+}
+
+/// Messages from the acceptor thread to the responder loop.
+enum Msg {
+    Request { req_id: u64, raw: Vec<u8>, t0: Instant },
+    Overloaded { req_id: u64 },
+    End,
+}
+
+/// Acceptor: read frames, admit or refuse. Admission is a compare-and-
+/// bump on the shared in-flight counter — refusals never wait on the
+/// processor, so an overloaded worker still answers instantly.
+fn accept_loop<R: Read>(
+    mut reader: R,
+    tx: mpsc::Sender<Msg>,
+    in_flight: &AtomicUsize,
+    depth: usize,
+) -> Result<()> {
+    loop {
+        let (tag, payload) = protocol::read_frame(&mut reader)?;
+        match tag {
+            Tag::ServeRequest => {
+                anyhow::ensure!(
+                    payload.len() >= 8,
+                    "serve request of {} bytes has no request id",
+                    payload.len()
+                );
+                let mut id = [0u8; 8];
+                id.copy_from_slice(&payload[..8]);
+                let req_id = u64::from_le_bytes(id);
+                let admitted = in_flight
+                    .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                        (n < depth).then_some(n + 1)
+                    })
+                    .is_ok();
+                let msg = if admitted {
+                    Msg::Request { req_id, raw: payload[8..].to_vec(), t0: Instant::now() }
+                } else {
+                    Msg::Overloaded { req_id }
+                };
+                if tx.send(msg).is_err() {
+                    // Responder gone (it owns whatever error ended it).
+                    return Ok(());
+                }
+            }
+            Tag::ServeEnd => {
+                let _ = tx.send(Msg::End);
+                return Ok(());
+            }
+            other => anyhow::bail!("unexpected frame {other:?} in serving session"),
+        }
+    }
+}
+
+/// Decode and apply one request. `Err` is a client-attributable reason
+/// → [`ServeStatus::BadRequest`]; the session continues.
+fn apply_request(
+    frozen: &FrozenPlan,
+    format: WireFormat,
+    raw: &[u8],
+    scratch: &mut RowBlock,
+) -> std::result::Result<crate::pipeline::ApplyOutcome, String> {
+    if raw.len() > MAX_REQUEST_BYTES {
+        return Err(format!(
+            "request of {} bytes exceeds the serving cap of {MAX_REQUEST_BYTES}",
+            raw.len()
+        ));
+    }
+    scratch.clear();
+    // Sequential decode: serving requests are tens of rows — thread
+    // fan-out would cost more than it saves.
+    let mut dec = ChunkDecoder::new(format.into(), frozen.schema());
+    dec.feed_into(raw, scratch).map_err(|e| e.to_string())?;
+    let illegal = dec.finish_into(scratch).map_err(|e| e.to_string())?;
+    if illegal.total > 0 {
+        return Err(format!("{} illegal bytes in request", illegal.total));
+    }
+    Ok(frozen.apply_block(scratch))
+}
+
+/// Run one serving session over an established connection: freeze the
+/// job's artifact, then answer requests until `ServeEnd`, and emit the
+/// final [`ServeReport`] frame. The acceptor thread keeps reading (and
+/// refusing over-bound requests) while the responder transforms — so
+/// admission latency stays flat even when the processor is saturated.
+pub fn run_session<R, W>(reader: R, writer: &mut W, job: &ServeJob) -> Result<ServeReport>
+where
+    R: Read + Send,
+    W: Write,
+{
+    let frozen = FrozenPlan::from_artifact(&job.artifact, job.policy)?;
+    let schema = frozen.schema();
+    let depth = if job.queue_depth == 0 { DEFAULT_QUEUE_DEPTH } else { job.queue_depth } as usize;
+    let in_flight = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let mut report = ServeReport::default();
+    let mut window = LatencyWindow::default();
+    let mut scratch = RowBlock::new(schema);
+
+    let ended = std::thread::scope(|scope| -> Result<bool> {
+        let acceptor = {
+            let tx = tx.clone();
+            let in_flight = &in_flight;
+            scope.spawn(move || accept_loop(reader, tx, in_flight, depth))
+        };
+        drop(tx); // rx drains to a close once the acceptor exits
+        let mut ended = false;
+        for msg in rx {
+            let resp = match msg {
+                Msg::End => {
+                    ended = true;
+                    break;
+                }
+                Msg::Overloaded { req_id } => {
+                    report.requests += 1;
+                    report.overloaded += 1;
+                    ServeResponse {
+                        req_id,
+                        status: ServeStatus::Overloaded,
+                        misses: 0,
+                        rejected_rows: 0,
+                        payload: Vec::new(),
+                    }
+                }
+                Msg::Request { req_id, raw, t0 } => {
+                    report.requests += 1;
+                    let resp = match apply_request(&frozen, job.format, &raw, &mut scratch) {
+                        Ok(out) => {
+                            report.ok += 1;
+                            report.rows += out.columns.num_rows() as u64;
+                            report.misses += out.misses;
+                            report.rejected_rows += out.rejected_rows;
+                            ServeResponse {
+                                req_id,
+                                status: if out.rejected_rows > 0 {
+                                    ServeStatus::RejectedRows
+                                } else {
+                                    ServeStatus::Ok
+                                },
+                                misses: out.misses.min(u32::MAX as u64) as u32,
+                                rejected_rows: out.rejected_rows.min(u32::MAX as u64) as u32,
+                                payload: protocol::pack_columns(&out.columns, schema),
+                            }
+                        }
+                        Err(reason) => {
+                            report.bad_requests += 1;
+                            ServeResponse {
+                                req_id,
+                                status: ServeStatus::BadRequest,
+                                misses: 0,
+                                rejected_rows: 0,
+                                payload: reason.into_bytes(),
+                            }
+                        }
+                    };
+                    protocol::write_frame(writer, Tag::ServeResponse, &resp.encode())?;
+                    writer.flush()?;
+                    in_flight.fetch_sub(1, Ordering::AcqRel);
+                    window.record(t0.elapsed().as_micros().min(u64::MAX as u128) as u64);
+                    continue;
+                }
+            };
+            // Overloaded refusals: respond immediately, no latency sample.
+            protocol::write_frame(writer, Tag::ServeResponse, &resp.encode())?;
+            writer.flush()?;
+        }
+        acceptor.join().map_err(|_| anyhow::anyhow!("serve acceptor panicked"))??;
+        Ok(ended)
+    })?;
+    anyhow::ensure!(ended, "serving stream closed without ServeEnd");
+
+    report.p50_us = window.percentile(50);
+    report.p99_us = window.percentile(99);
+    protocol::write_frame(writer, Tag::ServeReport, &report.encode())?;
+    writer.flush()?;
+    Ok(report)
+}
+
+/// Client side of the serving protocol — what the CLI `request` command
+/// and the serving bench use.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    schema: Schema,
+    next_id: u64,
+}
+
+impl ServeClient {
+    /// Connect and send the session header.
+    pub fn connect(addr: &str, job: &ServeJob) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::with_capacity(1 << 16, stream.try_clone()?);
+        let mut writer = BufWriter::with_capacity(1 << 16, stream);
+        protocol::write_frame(&mut writer, Tag::ServeJob, &job.encode())?;
+        writer.flush()?;
+        Ok(ServeClient { reader, writer, schema: job.artifact.schema(), next_id: 0 })
+    }
+
+    pub fn schema(&self) -> Schema {
+        self.schema
+    }
+
+    /// Fire one request without waiting for its response; returns the
+    /// request id (responses come back in request order).
+    pub fn send(&mut self, raw: &[u8]) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut payload = Vec::with_capacity(8 + raw.len());
+        payload.extend_from_slice(&id.to_le_bytes());
+        payload.extend_from_slice(raw);
+        protocol::write_frame(&mut self.writer, Tag::ServeRequest, &payload)?;
+        self.writer.flush()?;
+        Ok(id)
+    }
+
+    /// Read the next response; a worker [`Tag::ErrorReply`] surfaces as
+    /// an error carrying the worker's message.
+    pub fn recv(&mut self) -> Result<ServeResponse> {
+        let (tag, payload) = protocol::read_frame(&mut self.reader)?;
+        match tag {
+            Tag::ServeResponse => ServeResponse::decode(&payload),
+            Tag::ErrorReply => {
+                anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload))
+            }
+            other => anyhow::bail!("unexpected frame {other:?} from worker"),
+        }
+    }
+
+    /// One full round trip.
+    pub fn request(&mut self, raw: &[u8]) -> Result<ServeResponse> {
+        let id = self.send(raw)?;
+        let resp = self.recv()?;
+        anyhow::ensure!(resp.req_id == id, "response {} for request {id}", resp.req_id);
+        Ok(resp)
+    }
+
+    /// End the session: drain any outstanding responses and return the
+    /// worker's final report alongside them.
+    pub fn finish(mut self) -> Result<(ServeReport, Vec<ServeResponse>)> {
+        protocol::write_frame(&mut self.writer, Tag::ServeEnd, &[])?;
+        self.writer.flush()?;
+        let mut late = Vec::new();
+        loop {
+            let (tag, payload) = protocol::read_frame(&mut self.reader)?;
+            match tag {
+                Tag::ServeResponse => late.push(ServeResponse::decode(&payload)?),
+                Tag::ServeReport => return Ok((ServeReport::decode(&payload)?, late)),
+                Tag::ErrorReply => {
+                    anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload))
+                }
+                other => anyhow::bail!("unexpected frame {other:?} from worker"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::PipelineSpec;
+
+    fn tiny_job(policy: MissPolicy, queue_depth: u32) -> ServeJob {
+        // Vocabulary {5→0, 12→1} on a 1-dense/1-sparse schema.
+        let spec = PipelineSpec::parse("modulus:97|genvocab|applyvocab").unwrap();
+        let artifact =
+            VocabArtifact::new(spec, Schema::new(1, 1), vec![vec![5, 12]]).unwrap();
+        ServeJob { policy, format: WireFormat::Binary, queue_depth, artifact }
+    }
+
+    fn bin_rows(rows: &[(i32, i32, u32)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &(label, dense, sparse) in rows {
+            out.extend_from_slice(&label.to_le_bytes());
+            out.extend_from_slice(&dense.to_le_bytes());
+            out.extend_from_slice(&sparse.to_le_bytes());
+        }
+        out
+    }
+
+    /// Script a whole session into a buffer, run it against in-memory
+    /// I/O, and hand back the response frames.
+    fn run_scripted(job: &ServeJob, requests: &[Vec<u8>]) -> (ServeReport, Vec<ServeResponse>) {
+        let mut script = Vec::new();
+        for (id, raw) in requests.iter().enumerate() {
+            let mut payload = (id as u64).to_le_bytes().to_vec();
+            payload.extend_from_slice(raw);
+            protocol::write_frame(&mut script, Tag::ServeRequest, &payload).unwrap();
+        }
+        protocol::write_frame(&mut script, Tag::ServeEnd, &[]).unwrap();
+
+        let mut out = Vec::new();
+        let report = run_session(std::io::Cursor::new(script), &mut out, job).unwrap();
+
+        let mut responses = Vec::new();
+        let mut r = &out[..];
+        loop {
+            let (tag, payload) = protocol::read_frame(&mut r).unwrap();
+            match tag {
+                Tag::ServeResponse => responses.push(ServeResponse::decode(&payload).unwrap()),
+                Tag::ServeReport => {
+                    assert_eq!(ServeReport::decode(&payload).unwrap(), report);
+                    assert!(r.is_empty(), "report must be the last frame");
+                    return (report, responses);
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn serve_job_round_trips() {
+        for job in [
+            tiny_job(MissPolicy::Sentinel, 0),
+            tiny_job(MissPolicy::DefaultIndex(3), 8),
+            tiny_job(MissPolicy::RejectRow, 1),
+        ] {
+            assert_eq!(ServeJob::decode(&job.encode()).unwrap(), job);
+        }
+        assert!(ServeJob::decode(&[1, 2, 3]).is_err(), "truncated header");
+        let mut corrupt = tiny_job(MissPolicy::Sentinel, 4).encode();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0xFF;
+        assert!(ServeJob::decode(&corrupt).is_err(), "artifact checksum must hold");
+    }
+
+    #[test]
+    fn serve_response_round_trips() {
+        let resp = ServeResponse {
+            req_id: 7,
+            status: ServeStatus::RejectedRows,
+            misses: 3,
+            rejected_rows: 2,
+            payload: vec![1, 2, 3, 4],
+        };
+        assert_eq!(ServeResponse::decode(&resp.encode()).unwrap(), resp);
+        assert!(ServeResponse::decode(&[0u8; 5]).is_err());
+    }
+
+    #[test]
+    fn serve_report_round_trips() {
+        let report = ServeReport {
+            requests: 10,
+            ok: 7,
+            bad_requests: 1,
+            overloaded: 2,
+            rows: 320,
+            misses: 5,
+            rejected_rows: 1,
+            p50_us: 120,
+            p99_us: 900,
+        };
+        assert_eq!(ServeReport::decode(&report.encode()).unwrap(), report);
+        assert_eq!(report.p50(), Duration::from_micros(120));
+        assert!(ServeReport::decode(&[0u8; 71]).is_err());
+    }
+
+    #[test]
+    fn latency_window_percentiles() {
+        let mut w = LatencyWindow::default();
+        assert_eq!(w.percentile(99), 0, "empty window");
+        for us in 1..=100 {
+            w.record(us);
+        }
+        assert_eq!(w.percentile(0), 1);
+        assert_eq!(w.percentile(50), 50);
+        assert_eq!(w.percentile(99), 99);
+        assert_eq!(w.percentile(100), 100);
+        // Rolling: after 2×LATENCY_WINDOW more samples of value 7, old
+        // samples are gone.
+        for _ in 0..2 * LATENCY_WINDOW {
+            w.record(7);
+        }
+        assert_eq!(w.percentile(99), 7);
+    }
+
+    #[test]
+    fn scripted_session_serves_and_reports() {
+        let job = tiny_job(MissPolicy::Sentinel, 4);
+        let schema = job.artifact.schema();
+        let (report, responses) = run_scripted(
+            &job,
+            &[
+                bin_rows(&[(1, 7, 12), (0, -3, 5)]), // both in vocabulary
+                bin_rows(&[(0, 2, 40)]),             // 40 is a miss
+            ],
+        );
+        assert_eq!(responses.len(), 2);
+        assert_eq!(responses[0].status, ServeStatus::Ok);
+        assert_eq!(responses[0].rows(schema), 2);
+        let rows = protocol::unpack_rows(&responses[0].payload, schema).unwrap();
+        assert_eq!(rows[0].sparse, vec![1]);
+        assert_eq!(rows[1].sparse, vec![0]);
+        assert_eq!(responses[1].status, ServeStatus::Ok, "sentinel policy still answers");
+        assert_eq!(responses[1].misses, 1);
+        assert_eq!((report.requests, report.ok, report.rows), (2, 2, 3));
+        assert_eq!(report.misses, 1);
+        assert!(report.p99_us >= report.p50_us);
+    }
+
+    #[test]
+    fn bad_requests_do_not_end_the_session() {
+        let job = tiny_job(MissPolicy::Sentinel, 4);
+        let (report, responses) = run_scripted(
+            &job,
+            &[
+                bin_rows(&[(1, 7, 12)])[..7].to_vec(), // misaligned binary
+                bin_rows(&[(1, 7, 5)]),                // still served
+            ],
+        );
+        assert_eq!(responses[0].status, ServeStatus::BadRequest);
+        assert!(!responses[0].payload.is_empty(), "reason travels in the payload");
+        assert_eq!(responses[1].status, ServeStatus::Ok);
+        assert_eq!((report.bad_requests, report.ok), (1, 1));
+    }
+
+    #[test]
+    fn unexpected_frame_ends_the_session_with_an_error() {
+        let job = tiny_job(MissPolicy::Sentinel, 4);
+        let mut script = Vec::new();
+        protocol::write_frame(&mut script, Tag::Pass1Chunk, b"nope").unwrap();
+        let mut out = Vec::new();
+        let err = run_session(std::io::Cursor::new(script), &mut out, &job);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn hangup_without_serve_end_is_an_error() {
+        let job = tiny_job(MissPolicy::Sentinel, 4);
+        let mut script = Vec::new();
+        let mut payload = 0u64.to_le_bytes().to_vec();
+        payload.extend_from_slice(&bin_rows(&[(1, 7, 5)]));
+        protocol::write_frame(&mut script, Tag::ServeRequest, &payload).unwrap();
+        let mut out = Vec::new();
+        assert!(run_session(std::io::Cursor::new(script), &mut out, &job).is_err());
+    }
+}

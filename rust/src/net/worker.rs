@@ -1,15 +1,24 @@
 //! The accelerator node: accept a job over TCP, run the streaming
-//! preprocessor, stream results back. Speaks both protocols — the
-//! leader's first data frame decides: `FusedChunk` runs the single-pass
-//! fused dataflow (results stream back while the dataset is still
-//! arriving, once over the wire), `Pass1Chunk` runs the two-pass
-//! protocol (required by the cluster leader-merge).
+//! preprocessor, stream results back. Speaks all three protocols — the
+//! first frame decides: a [`Tag::Job`] header opens a batch session
+//! where the next data frame picks the dataflow (`FusedChunk` runs the
+//! single-pass fused dataflow, `Pass1Chunk` the two-pass protocol the
+//! cluster leader-merge requires); a [`Tag::ServeJob`] header opens an
+//! online serving session against a frozen artifact
+//! ([`crate::net::serve`]).
+//!
+//! Error posture: any session error — malformed frame, bad job header,
+//! decode failure — is reported to the peer as a [`Tag::ErrorReply`]
+//! frame carrying the message, then the connection closes cleanly. A
+//! hostile or buggy client costs the worker one connection, never the
+//! process.
 
 use std::net::{TcpListener, TcpStream};
 
 use crate::Result;
 
 use super::protocol::{self, RunStats, Tag};
+use super::serve;
 use super::stream::StreamingPreprocessor;
 
 /// Serve a single connection on `listener` and return after the job
@@ -27,18 +36,68 @@ pub fn serve_n(listener: &TcpListener, n: usize) -> Result<()> {
     Ok(())
 }
 
+/// Accept connections forever. A failed session is logged and the
+/// worker moves to the next connection — the long-lived posture for a
+/// serving deployment.
+pub fn serve_forever(listener: &TcpListener) -> ! {
+    loop {
+        match serve_one(listener) {
+            Ok(stats) => eprintln!("session done: {} rows", stats.rows),
+            Err(e) => eprintln!("session failed: {e:#}"),
+        }
+    }
+}
+
 fn handle(stream: TcpStream) -> Result<RunStats> {
     stream.set_nodelay(true)?;
     let mut reader = std::io::BufReader::with_capacity(1 << 20, stream.try_clone()?);
     let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream);
 
-    // First frame must be the job header. Decoding it re-parses (and
+    match session(&mut reader, &mut writer) {
+        Ok(stats) => Ok(stats),
+        Err(e) => {
+            // Best effort: tell the peer why before hanging up. The
+            // connection may already be gone — that must not mask the
+            // original error.
+            use std::io::Write as _;
+            let _ = protocol::write_frame(&mut writer, Tag::ErrorReply, e.to_string().as_bytes());
+            let _ = writer.flush();
+            Err(e)
+        }
+    }
+}
+
+/// One full session: dispatch on the header frame, then run the chosen
+/// protocol to completion. Every error propagates to [`handle`], which
+/// turns it into an [`Tag::ErrorReply`] frame.
+fn session(
+    reader: &mut std::io::BufReader<TcpStream>,
+    writer: &mut std::io::BufWriter<TcpStream>,
+) -> Result<RunStats> {
+    // First frame must be a job header. Decoding it re-parses (and
     // re-validates) the per-column spec; compiling it against the job's
     // schema is the worker-side planning step — both fail here, before
     // any data frame is accepted.
-    let (tag, payload) = protocol::read_frame(&mut reader)?;
-    anyhow::ensure!(tag == Tag::Job, "expected Job frame, got {tag:?}");
-    let job = protocol::Job::decode(&payload)?;
+    let (tag, payload) = protocol::read_frame(reader)?;
+    match tag {
+        Tag::Job => batch_session(reader, writer, protocol::Job::decode(&payload)?),
+        Tag::ServeJob => {
+            let job = serve::ServeJob::decode(&payload)?;
+            let report = serve::run_session(reader, writer, &job)?;
+            Ok(RunStats {
+                rows: report.rows,
+                vocab_entries: job.artifact.total_entries() as u64,
+            })
+        }
+        other => anyhow::bail!("expected Job or ServeJob frame, got {other:?}"),
+    }
+}
+
+fn batch_session(
+    reader: &mut std::io::BufReader<TcpStream>,
+    writer: &mut std::io::BufWriter<TcpStream>,
+    job: protocol::Job,
+) -> Result<RunStats> {
     // Worker posture: decode wire chunks with every local core (the
     // same row-sharded path the engine uses; output is bit-identical
     // to the sequential decode).
@@ -50,7 +109,7 @@ fn handle(stream: TcpStream) -> Result<RunStats> {
         StreamingPreprocessor::with_decode_options(&job.spec, job.schema, job.format, decode)?;
 
     loop {
-        let (tag, payload) = protocol::read_frame(&mut reader)?;
+        let (tag, payload) = protocol::read_frame(reader)?;
         match tag {
             Tag::FusedChunk => {
                 // Single-pass protocol: observe + apply in one scan,
@@ -58,20 +117,20 @@ fn handle(stream: TcpStream) -> Result<RunStats> {
                 let rows = sp.fused_chunk(&payload)?;
                 if !rows.is_empty() {
                     let packed = protocol::pack_rows(&rows, job.schema);
-                    protocol::write_frame(&mut writer, Tag::ResultChunk, &packed)?;
+                    protocol::write_frame(writer, Tag::ResultChunk, &packed)?;
                 }
             }
             Tag::FusedEnd => {
                 let rows = sp.fused_end()?;
                 if !rows.is_empty() {
                     let packed = protocol::pack_rows(&rows, job.schema);
-                    protocol::write_frame(&mut writer, Tag::ResultChunk, &packed)?;
+                    protocol::write_frame(writer, Tag::ResultChunk, &packed)?;
                 }
                 let stats = RunStats {
                     rows: sp.rows_seen().1 as u64,
                     vocab_entries: sp.vocab_entries() as u64,
                 };
-                protocol::write_frame(&mut writer, Tag::ResultEnd, &stats.encode())?;
+                protocol::write_frame(writer, Tag::ResultEnd, &stats.encode())?;
                 use std::io::Write as _;
                 writer.flush()?;
                 return Ok(stats);
@@ -83,7 +142,7 @@ fn handle(stream: TcpStream) -> Result<RunStats> {
                 // merge (the one synchronization point of the sharded
                 // deployment — paper §2.4's merge, moved to the leader).
                 let dump = protocol::pack_vocabs(&sp.export_vocabs());
-                protocol::write_frame(&mut writer, Tag::VocabDump, &dump)?;
+                protocol::write_frame(writer, Tag::VocabDump, &dump)?;
                 use std::io::Write as _;
                 writer.flush()?;
             }
@@ -96,20 +155,20 @@ fn handle(stream: TcpStream) -> Result<RunStats> {
                 let rows = sp.pass2_chunk(&payload)?;
                 if !rows.is_empty() {
                     let packed = protocol::pack_rows(&rows, job.schema);
-                    protocol::write_frame(&mut writer, Tag::ResultChunk, &packed)?;
+                    protocol::write_frame(writer, Tag::ResultChunk, &packed)?;
                 }
             }
             Tag::Pass2End => {
                 let rows = sp.pass2_end()?;
                 if !rows.is_empty() {
                     let packed = protocol::pack_rows(&rows, job.schema);
-                    protocol::write_frame(&mut writer, Tag::ResultChunk, &packed)?;
+                    protocol::write_frame(writer, Tag::ResultChunk, &packed)?;
                 }
                 let stats = RunStats {
                     rows: sp.rows_seen().1 as u64,
                     vocab_entries: sp.vocab_entries() as u64,
                 };
-                protocol::write_frame(&mut writer, Tag::ResultEnd, &stats.encode())?;
+                protocol::write_frame(writer, Tag::ResultEnd, &stats.encode())?;
                 use std::io::Write as _;
                 writer.flush()?;
                 return Ok(stats);

@@ -1,0 +1,345 @@
+//! Frozen vocabulary artifacts — the serialization format of the
+//! freeze → serve lifecycle (ROADMAP item 2).
+//!
+//! A batch run builds per-column vocabularies (GenVocab); a serving
+//! deployment must pin them: requests at inference time are transformed
+//! against the *same* appearance indices training saw, or the embedding
+//! rows they address are garbage. The artifact captures everything a
+//! worker needs to reconstruct that state bit-for-bit:
+//!
+//! * the full [`PipelineSpec`] in its canonical display form (re-parsed
+//!   and therefore re-validated at load — the same trick the wire
+//!   [`crate::net::protocol::Job`] uses);
+//! * the [`Schema`] the spec was compiled against;
+//! * every sparse column's vocabulary as **keys in appearance order**
+//!   ([`crate::ops::HashVocab::export_keys`] /
+//!   [`crate::ops::DirectVocab::export_keys`] — both backends export
+//!   the identical list, so artifacts are backend-independent);
+//! * content hashes of the spec and schema, so a consumer can check a
+//!   candidate plan against the artifact *without* decoding the key
+//!   lists, and a whole-file checksum so corruption is an explicit
+//!   load error, never a silently wrong index.
+//!
+//! ## Binary layout (all integers little-endian)
+//!
+//! ```text
+//! magic      4 bytes  "PIPA"
+//! version    u16      ARTIFACT_VERSION
+//! num_dense  u32      ┐ schema
+//! num_sparse u32      ┘
+//! spec_hash  u64      FNV-1a 64 of the spec's display string
+//! schema_hash u64     FNV-1a 64 of (num_dense, num_sparse) as LE words
+//! spec_len   u32
+//! spec       utf8     canonical PipelineSpec display form
+//! ncols      u32      == num_sparse
+//! per column:         len:u32  keys:u32 × len   (appearance order)
+//! checksum   u64      FNV-1a 64 of every preceding byte
+//! ```
+//!
+//! The checksum is last so the writer streams the body once; the reader
+//! verifies it before trusting any length field beyond the basic bounds
+//! checks. Decoding rejects: bad magic, unknown version, truncation,
+//! trailing bytes, checksum mismatch, a spec that no longer parses or
+//! compiles, and stored spec/schema hashes that disagree with the
+//! recomputed ones (a hash mismatch with a valid checksum means the
+//! artifact was assembled inconsistently — refuse it rather than serve
+//! wrong indices).
+
+use std::path::Path;
+
+use crate::data::Schema;
+use crate::ops::PipelineSpec;
+use crate::Result;
+
+/// First four bytes of every artifact file.
+pub const ARTIFACT_MAGIC: [u8; 4] = *b"PIPA";
+
+/// Current artifact format version. Bump on any layout change — old
+/// readers must reject newer artifacts instead of misreading them.
+pub const ARTIFACT_VERSION: u16 = 1;
+
+/// FNV-1a 64-bit over a byte slice — the artifact's content hash and
+/// checksum primitive (no dependencies, stable across platforms; the
+/// same mix the engine's bench checksums use).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A frozen, self-describing vocabulary snapshot: spec + schema +
+/// per-sparse-column keys in appearance order (empty lists for columns
+/// whose program builds no vocabulary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VocabArtifact {
+    spec: PipelineSpec,
+    schema: Schema,
+    vocabs: Vec<Vec<u32>>,
+}
+
+impl VocabArtifact {
+    /// Assemble an artifact. Validates up front that the spec still
+    /// compiles against the schema and that there is exactly one key
+    /// list per sparse column — an artifact that cannot be loaded must
+    /// not be saveable.
+    pub fn new(spec: PipelineSpec, schema: Schema, vocabs: Vec<Vec<u32>>) -> Result<VocabArtifact> {
+        spec.compile(schema)?;
+        anyhow::ensure!(
+            vocabs.len() == schema.num_sparse,
+            "artifact has {} vocabulary columns, schema wants {}",
+            vocabs.len(),
+            schema.num_sparse
+        );
+        Ok(VocabArtifact { spec, schema, vocabs })
+    }
+
+    pub fn spec(&self) -> &PipelineSpec {
+        &self.spec
+    }
+
+    pub fn schema(&self) -> Schema {
+        self.schema
+    }
+
+    /// Per-column keys in appearance order.
+    pub fn vocabs(&self) -> &[Vec<u32>] {
+        &self.vocabs
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.vocabs.iter().map(|c| c.len()).sum()
+    }
+
+    /// Content hash of the spec (over its canonical display string) —
+    /// what consumers compare a candidate plan's spec against.
+    pub fn spec_hash(&self) -> u64 {
+        spec_hash(&self.spec)
+    }
+
+    /// Content hash of the schema dimensions.
+    pub fn schema_hash(&self) -> u64 {
+        schema_hash(self.schema)
+    }
+
+    /// Serialize to the versioned, checksummed byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let spec = self.spec.to_string();
+        let keys: usize = self.total_entries();
+        let mut out = Vec::with_capacity(42 + spec.len() + 4 * self.vocabs.len() + 4 * keys);
+        out.extend_from_slice(&ARTIFACT_MAGIC);
+        out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.schema.num_dense as u32).to_le_bytes());
+        out.extend_from_slice(&(self.schema.num_sparse as u32).to_le_bytes());
+        out.extend_from_slice(&self.spec_hash().to_le_bytes());
+        out.extend_from_slice(&self.schema_hash().to_le_bytes());
+        out.extend_from_slice(&(spec.len() as u32).to_le_bytes());
+        out.extend_from_slice(spec.as_bytes());
+        out.extend_from_slice(&(self.vocabs.len() as u32).to_le_bytes());
+        for col in &self.vocabs {
+            out.extend_from_slice(&(col.len() as u32).to_le_bytes());
+            for &k in col {
+                out.extend_from_slice(&k.to_le_bytes());
+            }
+        }
+        let checksum = fnv1a(&out);
+        out.extend_from_slice(&checksum.to_le_bytes());
+        out
+    }
+
+    /// Decode and fully validate an artifact (see the module docs for
+    /// the rejection list). Every length is bounds-checked before use,
+    /// so a truncated or corrupt buffer is an error, never a panic.
+    pub fn decode(buf: &[u8]) -> Result<VocabArtifact> {
+        anyhow::ensure!(buf.len() >= 42 + 8, "artifact truncated: {} bytes", buf.len());
+        // Checksum first: nothing past the length check is trusted
+        // until the whole file is known intact.
+        let body = &buf[..buf.len() - 8];
+        let stored = rd_u64(buf, buf.len() - 8)?;
+        anyhow::ensure!(
+            fnv1a(body) == stored,
+            "artifact checksum mismatch (corrupt or tampered file)"
+        );
+        anyhow::ensure!(buf[..4] == ARTIFACT_MAGIC, "not a vocabulary artifact (bad magic)");
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        anyhow::ensure!(
+            version == ARTIFACT_VERSION,
+            "artifact version {version} is not supported (this build reads {ARTIFACT_VERSION})"
+        );
+        let num_dense = rd_u32(buf, 6)? as usize;
+        let num_sparse = rd_u32(buf, 10)? as usize;
+        let schema = Schema::new(num_dense, num_sparse);
+        let stored_spec_hash = rd_u64(buf, 14)?;
+        let stored_schema_hash = rd_u64(buf, 22)?;
+        let spec_len = rd_u32(buf, 30)? as usize;
+        let spec_end = 34usize
+            .checked_add(spec_len)
+            .ok_or_else(|| anyhow::anyhow!("artifact spec length overflows"))?;
+        anyhow::ensure!(spec_end <= body.len(), "artifact truncated inside the spec");
+        let spec_str = std::str::from_utf8(&buf[34..spec_end])
+            .map_err(|e| anyhow::anyhow!("artifact spec is not UTF-8: {e}"))?;
+        let spec = PipelineSpec::parse(spec_str)?;
+        anyhow::ensure!(
+            spec_hash(&spec) == stored_spec_hash,
+            "artifact spec hash mismatch (stored {stored_spec_hash:#018x})"
+        );
+        anyhow::ensure!(
+            schema_hash(schema) == stored_schema_hash,
+            "artifact schema hash mismatch (stored {stored_schema_hash:#018x})"
+        );
+
+        let ncols = rd_u32(buf, spec_end)? as usize;
+        anyhow::ensure!(
+            ncols == num_sparse,
+            "artifact has {ncols} vocabulary columns, its schema says {num_sparse}"
+        );
+        let mut at = spec_end + 4;
+        let mut vocabs = Vec::with_capacity(ncols);
+        for c in 0..ncols {
+            let len = rd_u32(buf, at)? as usize;
+            at += 4;
+            // Bound the allocation by the bytes actually present —
+            // a corrupt length must not force a huge reservation.
+            anyhow::ensure!(
+                at + 4 * len <= body.len(),
+                "artifact truncated inside column {c}'s keys"
+            );
+            let mut col = Vec::with_capacity(len);
+            for _ in 0..len {
+                col.push(rd_u32(buf, at)?);
+                at += 4;
+            }
+            vocabs.push(col);
+        }
+        anyhow::ensure!(at == body.len(), "trailing bytes in artifact");
+        VocabArtifact::new(spec, schema, vocabs)
+    }
+
+    /// Write the artifact to a file (encode + single write).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.encode())
+            .map_err(|e| anyhow::anyhow!("writing artifact {}: {e}", path.display()))
+    }
+
+    /// Read and validate an artifact file.
+    pub fn load(path: &Path) -> Result<VocabArtifact> {
+        let buf = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading artifact {}: {e}", path.display()))?;
+        Self::decode(&buf)
+    }
+}
+
+/// FNV-1a 64 of a spec's canonical display string.
+pub fn spec_hash(spec: &PipelineSpec) -> u64 {
+    fnv1a(spec.to_string().as_bytes())
+}
+
+/// FNV-1a 64 of the schema dimensions (as two LE u64 words).
+pub fn schema_hash(schema: Schema) -> u64 {
+    let mut bytes = [0u8; 16];
+    bytes[..8].copy_from_slice(&(schema.num_dense as u64).to_le_bytes());
+    bytes[8..].copy_from_slice(&(schema.num_sparse as u64).to_le_bytes());
+    fnv1a(&bytes)
+}
+
+fn rd_u32(buf: &[u8], at: usize) -> Result<u32> {
+    let s = buf
+        .get(at..at + 4)
+        .ok_or_else(|| anyhow::anyhow!("artifact truncated at byte {at}"))?;
+    Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+}
+
+fn rd_u64(buf: &[u8], at: usize) -> Result<u64> {
+    let s = buf
+        .get(at..at + 8)
+        .ok_or_else(|| anyhow::anyhow!("artifact truncated at byte {at}"))?;
+    Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> VocabArtifact {
+        let spec = PipelineSpec::dlrm(997);
+        let schema = Schema::new(2, 3);
+        let vocabs = vec![vec![5, 1, 9], vec![], vec![42, 0]];
+        VocabArtifact::new(spec, schema, vocabs).unwrap()
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let a = sample();
+        let b = VocabArtifact::decode(&a.encode()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.total_entries(), 5);
+        assert_eq!(b.spec_hash(), a.spec_hash());
+        assert_eq!(b.schema_hash(), a.schema_hash());
+    }
+
+    #[test]
+    fn fnv1a_is_the_reference_function() {
+        // Reference vectors for 64-bit FNV-1a.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let buf = sample().encode();
+        for cut in [0, 3, 5, 13, 33, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                VocabArtifact::decode(&buf[..cut]).is_err(),
+                "truncation to {cut} bytes must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_is_rejected_everywhere() {
+        let clean = sample().encode();
+        // Flip one bit at every byte position: either the checksum (body
+        // flips) or the stored checksum itself (tail flips) must fail.
+        for at in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[at] ^= 0x40;
+            assert!(VocabArtifact::decode(&bad).is_err(), "flip at byte {at} must fail");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut buf = sample().encode();
+        buf.extend_from_slice(&[0u8; 4]);
+        assert!(VocabArtifact::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn schema_column_count_mismatch_rejected_at_build() {
+        let spec = PipelineSpec::dlrm(97);
+        let schema = Schema::new(2, 3);
+        assert!(VocabArtifact::new(spec, schema, vec![vec![]; 2]).is_err());
+    }
+
+    #[test]
+    fn spec_that_cannot_compile_rejected_at_build() {
+        let spec = PipelineSpec::parse("sparse[40]: modulus:7|genvocab|applyvocab").unwrap();
+        assert!(VocabArtifact::new(spec, Schema::CRITEO, vec![vec![]; 26]).is_err());
+    }
+
+    #[test]
+    fn hashes_are_content_hashes() {
+        let a = sample();
+        let other = VocabArtifact::new(
+            PipelineSpec::dlrm(5000),
+            Schema::new(2, 3),
+            vec![vec![]; 3],
+        )
+        .unwrap();
+        assert_ne!(a.spec_hash(), other.spec_hash(), "different specs, different hashes");
+        assert_eq!(a.schema_hash(), other.schema_hash(), "same schema, same hash");
+        assert_ne!(a.schema_hash(), schema_hash(Schema::CRITEO));
+    }
+}

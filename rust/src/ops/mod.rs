@@ -21,11 +21,13 @@
 //! [`PipelineSpec`] binds a [`ColumnProgram`] to column selectors and
 //! compiles to one fixed-function slot per column ([`ColumnPlans`]).
 
+pub mod artifact;
 pub mod hex;
 pub mod program;
 pub mod spec;
 pub mod vocab;
 
+pub use artifact::VocabArtifact;
 pub use program::{
     ColumnKind, ColumnOp, ColumnPlans, ColumnProgram, ColumnRange, ColumnSelector,
     DenseColPlan, DenseKernel, SparseColPlan,

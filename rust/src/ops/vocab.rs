@@ -122,6 +122,27 @@ impl DirectVocab {
         }
     }
 
+    /// Export the observed keys **in appearance order** — the payload of
+    /// a frozen vocabulary artifact ([`crate::ops::artifact`]). The
+    /// direct-mapped table stores `value → appearance index`, never the
+    /// appearance sequence itself, so the export inverts it: for every
+    /// set bit `v` of the seen bitmap, `keys[table[v]] = v`. One pass
+    /// over the bitmap words, no sort — and byte-for-byte the same list
+    /// [`HashVocab::export_keys`] yields for the same observation
+    /// stream (pinned by tests; the artifact format relies on it).
+    pub fn export_keys(&self) -> Vec<u32> {
+        let mut keys = vec![0u32; self.counter as usize];
+        for (w, &word) in self.seen.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let v = (w * 64) as u32 + bits.trailing_zeros();
+                bits &= bits - 1;
+                keys[self.table[v as usize] as usize] = v;
+            }
+        }
+        keys
+    }
+
     /// Memory footprint in bits of the bitmap + table — what decides
     /// SRAM vs HBM placement on the accelerator.
     pub fn storage_bits(&self) -> u64 {
@@ -279,6 +300,14 @@ impl HashVocab {
         for &k in &sub.order {
             self.observe(k);
         }
+    }
+
+    /// Export the observed keys **in appearance order** — the payload of
+    /// a frozen vocabulary artifact ([`crate::ops::artifact`]). The
+    /// insertion-order list is kept explicitly, so this is a copy of it;
+    /// identical to [`DirectVocab::export_keys`] for the same stream.
+    pub fn export_keys(&self) -> Vec<u32> {
+        self.order.clone()
     }
 
     /// Rough heap bytes — used by the baseline's memory accounting.
@@ -525,6 +554,55 @@ mod tests {
         v.observe(1);
         let got: Vec<(u32, u32)> = v.iter_ordered().collect();
         assert_eq!(got, vec![(42, 0), (7, 1), (1, 2)]);
+    }
+
+    /// Both backends must export the same appearance-order key list —
+    /// the invariant a frozen artifact is built on: freezing from a
+    /// DirectVocab (accelerator) or a HashVocab (CPU) run of the same
+    /// stream yields bit-identical artifacts.
+    #[test]
+    fn export_keys_is_appearance_order_for_both_backends() {
+        let mut h = HashVocab::new();
+        let mut d = DirectVocab::new(100);
+        for v in [42u32, 7, 42, 99, 7, 0] {
+            h.observe(v);
+            d.observe(v);
+        }
+        assert_eq!(h.export_keys(), vec![42, 7, 99, 0]);
+        assert_eq!(d.export_keys(), vec![42, 7, 99, 0]);
+
+        let mut rng = XorShift64::new(0xA2F1);
+        for _ in 0..20 {
+            let range = 1 + rng.below(3000) as u32;
+            let mut h = HashVocab::new();
+            let mut d = DirectVocab::new(range);
+            for _ in 0..rng.below(4000) {
+                let v = rng.below(range as u64) as u32;
+                h.observe(v);
+                d.observe(v);
+            }
+            assert_eq!(h.export_keys(), d.export_keys(), "range {range}");
+        }
+    }
+
+    /// Rebuilding a vocabulary by observing exported keys in order must
+    /// reproduce the original assignments exactly — the load half of the
+    /// artifact round trip.
+    #[test]
+    fn export_keys_rebuild_reproduces_assignments() {
+        let mut rng = XorShift64::new(0x51AB);
+        let mut v = HashVocab::new();
+        for _ in 0..2000 {
+            v.observe(rng.below(700) as u32);
+        }
+        let mut rebuilt = HashVocab::new();
+        for k in v.export_keys() {
+            rebuilt.observe(k);
+        }
+        assert_eq!(rebuilt.len(), v.len());
+        for (k, idx) in v.iter_ordered() {
+            assert_eq!(rebuilt.apply(k), Some(idx));
+        }
     }
 
     #[test]

@@ -1,0 +1,390 @@
+//! The frozen half of the freeze → serve lifecycle: ApplyVocab-only
+//! execution against pinned vocabularies.
+//!
+//! A [`FrozenPlan`] is a [`ChunkState`] whose vocabularies were rebuilt
+//! from a [`VocabArtifact`]'s appearance-ordered key lists and are never
+//! observed again — [`FrozenPlan::apply_block`] takes `&self`, so the
+//! GenVocab stage is gone by construction, not by convention. Because
+//! it runs the *same* [`ChunkState::process`] hot loop the batch
+//! two-pass path runs, a frozen apply is bit-identical to batch
+//! ApplyVocab over the same vocabulary state; the serving equivalence
+//! suite pins this for every wire format and miss policy.
+//!
+//! What batch execution never has to decide — what to do with a key the
+//! training pass never saw — serving must: [`MissPolicy`] makes the
+//! choice explicit per plan. [`MissPolicy::Sentinel`] keeps the engine's
+//! [`VOCAB_MISS`] marker (the embedding layer owns the fallback),
+//! [`MissPolicy::DefaultIndex`] rewrites misses to a pinned in-range
+//! index (the classic "OOV bucket"), and [`MissPolicy::RejectRow`] drops
+//! the whole row and reports it — for pipelines where a partial feature
+//! vector is worse than no answer.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::data::row::ProcessedColumns;
+use crate::data::{RowBlock, Schema};
+use crate::ops::artifact::{schema_hash, spec_hash, VocabArtifact};
+use crate::ops::{HashVocab, PipelineSpec, Vocab, VOCAB_MISS};
+use crate::Result;
+
+use super::{ChunkState, Plan};
+
+/// What a frozen plan does with a sparse key outside its pinned
+/// vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MissPolicy {
+    /// Emit [`VOCAB_MISS`] (`u32::MAX`) and count the miss — the
+    /// consumer decides what the sentinel means.
+    Sentinel,
+    /// Rewrite every miss to this index (an out-of-vocabulary bucket
+    /// the embedding table reserves).
+    DefaultIndex(u32),
+    /// Drop rows containing any miss from the response and count them.
+    RejectRow,
+}
+
+impl MissPolicy {
+    /// Parse the CLI/wire spelling: `sentinel`, `default:<index>`, or
+    /// `reject`.
+    pub fn parse(s: &str) -> Result<MissPolicy> {
+        let s = s.trim().to_ascii_lowercase();
+        if let Some(idx) = s.strip_prefix("default:") {
+            let idx: u32 = idx
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("miss policy `default:` index: {e}"))?;
+            anyhow::ensure!(idx != VOCAB_MISS, "default index collides with the miss sentinel");
+            return Ok(MissPolicy::DefaultIndex(idx));
+        }
+        match s.as_str() {
+            "sentinel" => Ok(MissPolicy::Sentinel),
+            "reject" | "reject-row" => Ok(MissPolicy::RejectRow),
+            other => anyhow::bail!(
+                "unknown miss policy `{other}` (want sentinel | default:<index> | reject)"
+            ),
+        }
+    }
+
+    /// Wire form: a tag byte plus the default index (0 when unused).
+    pub fn to_wire(self) -> (u8, u32) {
+        match self {
+            MissPolicy::Sentinel => (0, 0),
+            MissPolicy::DefaultIndex(d) => (1, d),
+            MissPolicy::RejectRow => (2, 0),
+        }
+    }
+
+    pub fn from_wire(tag: u8, default: u32) -> Result<MissPolicy> {
+        match tag {
+            0 => Ok(MissPolicy::Sentinel),
+            1 => Ok(MissPolicy::DefaultIndex(default)),
+            2 => Ok(MissPolicy::RejectRow),
+            other => anyhow::bail!("unknown miss policy wire tag {other}"),
+        }
+    }
+}
+
+/// `Display` is the inverse of [`MissPolicy::parse`].
+impl fmt::Display for MissPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MissPolicy::Sentinel => write!(f, "sentinel"),
+            MissPolicy::DefaultIndex(d) => write!(f, "default:{d}"),
+            MissPolicy::RejectRow => write!(f, "reject"),
+        }
+    }
+}
+
+/// The result of one frozen apply: the transformed columns plus the
+/// miss accounting the serving report aggregates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApplyOutcome {
+    pub columns: ProcessedColumns,
+    /// Vocabulary misses seen in ApplyVocab columns (counted under
+    /// every policy, including the rows RejectRow then dropped).
+    pub misses: u64,
+    /// Rows dropped by [`MissPolicy::RejectRow`]; 0 under the other
+    /// policies.
+    pub rejected_rows: u64,
+}
+
+/// An ApplyVocab-only execution plan over read-only vocabularies.
+#[derive(Debug)]
+pub struct FrozenPlan {
+    state: ChunkState,
+    spec: PipelineSpec,
+    policy: MissPolicy,
+}
+
+impl FrozenPlan {
+    /// Rebuild frozen per-column vocabularies from appearance-ordered
+    /// key lists (the artifact's payload): observing key *k* as the
+    /// *i*-th distinct value assigns it index *i* — exactly the
+    /// assignment the original GenVocab pass made. Duplicate keys in a
+    /// column mean the list is not a valid appearance order; refuse.
+    pub fn new(
+        spec: PipelineSpec,
+        schema: Schema,
+        keys: Vec<Vec<u32>>,
+        policy: MissPolicy,
+    ) -> Result<FrozenPlan> {
+        let programs = spec.compile(schema)?;
+        anyhow::ensure!(
+            keys.len() == schema.num_sparse,
+            "{} vocabulary columns for a schema with {} sparse columns",
+            keys.len(),
+            schema.num_sparse
+        );
+        let mut state = ChunkState::with_programs(programs);
+        for (c, (vocab, col)) in state.vocabs.iter_mut().zip(keys.iter()).enumerate() {
+            let mut v = HashVocab::with_capacity(col.len());
+            for &k in col {
+                v.observe(k);
+            }
+            anyhow::ensure!(
+                v.len() == col.len(),
+                "column {c}: duplicate keys in the frozen vocabulary"
+            );
+            *vocab = v;
+        }
+        Ok(FrozenPlan { state, spec, policy })
+    }
+
+    /// Freeze straight from a validated artifact (the hashes were
+    /// checked when the artifact decoded).
+    pub fn from_artifact(artifact: &VocabArtifact, policy: MissPolicy) -> Result<FrozenPlan> {
+        let keys = artifact.vocabs().to_vec();
+        FrozenPlan::new(artifact.spec().clone(), artifact.schema(), keys, policy)
+    }
+
+    /// Load an artifact file and freeze it.
+    pub fn load(path: &Path, policy: MissPolicy) -> Result<FrozenPlan> {
+        FrozenPlan::from_artifact(&VocabArtifact::load(path)?, policy)
+    }
+
+    pub fn schema(&self) -> Schema {
+        self.state.schema()
+    }
+
+    pub fn spec(&self) -> &PipelineSpec {
+        &self.spec
+    }
+
+    pub fn policy(&self) -> MissPolicy {
+        self.policy
+    }
+
+    pub fn vocab_entries(&self) -> usize {
+        self.state.vocab_entries()
+    }
+
+    /// Content hashes for validating this plan against an artifact —
+    /// the same functions the artifact layer stores.
+    pub fn spec_hash(&self) -> u64 {
+        spec_hash(&self.spec)
+    }
+
+    pub fn schema_hash(&self) -> u64 {
+        schema_hash(self.schema())
+    }
+
+    /// ApplyVocab-only execution of one decoded chunk. Runs the exact
+    /// batch pass-2 hot loop ([`ChunkState::process`], which emits
+    /// [`VOCAB_MISS`] for unknown keys), then resolves misses per the
+    /// plan's policy. `&self`: no vocabulary mutation is reachable.
+    pub fn apply_block(&self, block: &RowBlock) -> ApplyOutcome {
+        let mut columns = self.state.process(block);
+        let mut misses = 0u64;
+        let mut rejected_rows = 0u64;
+        // Only ApplyVocab columns can carry the sentinel *as a marker* —
+        // in passthrough/modulus-only columns u32::MAX is a legitimate
+        // value and must not be touched.
+        let vocab_cols: Vec<usize> = (0..self.schema().num_sparse)
+            .filter(|&c| self.state.programs.sparse[c].apply_vocab)
+            .collect();
+        match self.policy {
+            MissPolicy::Sentinel => {
+                for &c in &vocab_cols {
+                    misses += columns.sparse[c].iter().filter(|&&v| v == VOCAB_MISS).count() as u64;
+                }
+            }
+            MissPolicy::DefaultIndex(d) => {
+                for &c in &vocab_cols {
+                    for v in &mut columns.sparse[c] {
+                        if *v == VOCAB_MISS {
+                            *v = d;
+                            misses += 1;
+                        }
+                    }
+                }
+            }
+            MissPolicy::RejectRow => {
+                let mut reject = vec![false; columns.num_rows()];
+                for &c in &vocab_cols {
+                    for (r, &v) in columns.sparse[c].iter().enumerate() {
+                        if v == VOCAB_MISS {
+                            misses += 1;
+                            reject[r] = true;
+                        }
+                    }
+                }
+                rejected_rows = reject.iter().filter(|&&r| r).count() as u64;
+                if rejected_rows > 0 {
+                    filter_rows(&mut columns.labels, &reject);
+                    for col in &mut columns.dense {
+                        filter_rows(col, &reject);
+                    }
+                    for col in &mut columns.sparse {
+                        filter_rows(col, &reject);
+                    }
+                }
+            }
+        }
+        ApplyOutcome { columns, misses, rejected_rows }
+    }
+}
+
+/// Drop the marked rows from one column, preserving order.
+fn filter_rows<T: Copy>(xs: &mut Vec<T>, reject: &[bool]) {
+    let mut r = 0;
+    xs.retain(|_| {
+        let keep = !reject[r];
+        r += 1;
+        keep
+    });
+}
+
+impl Plan {
+    /// Freeze this plan's spec with explicit vocabulary keys (normally
+    /// the [`crate::ops::Vocab`] `export_keys` of a finished GenVocab
+    /// pass) into an ApplyVocab-only [`FrozenPlan`].
+    pub fn freeze(&self, keys: Vec<Vec<u32>>, policy: MissPolicy) -> Result<FrozenPlan> {
+        FrozenPlan::new(self.spec.clone(), self.schema(), keys, policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::InputFormat;
+    use crate::data::row::DecodedRow;
+    use crate::data::{SynthConfig, SynthDataset};
+
+    /// Two-pass batch state over the training set → export → freeze →
+    /// apply must equal the batch pass-2 output exactly.
+    #[test]
+    fn frozen_apply_is_bit_identical_to_batch_pass2() {
+        let ds = SynthDataset::generate(SynthConfig::small(260));
+        let block = RowBlock::from_rows(&ds.rows, ds.schema());
+        for spec in [
+            "modulus:97|genvocab|applyvocab|neg2zero|logarithm",
+            "sparse[*]: modulus:997|genvocab|applyvocab; sparse[1]: modulus:29; \
+             dense[*]: neg2zero|log",
+        ] {
+            let plan = Plan::compile(
+                PipelineSpec::parse(spec).unwrap(),
+                ds.schema(),
+                InputFormat::Utf8,
+                4096,
+            )
+            .unwrap();
+            let mut batch = ChunkState::new(&plan);
+            batch.observe(&block);
+            let want = batch.process(&block);
+
+            let keys: Vec<Vec<u32>> = batch.vocabs.iter().map(|v| v.export_keys()).collect();
+            let frozen = plan.freeze(keys, MissPolicy::Sentinel).unwrap();
+            assert_eq!(frozen.vocab_entries(), batch.vocab_entries(), "{spec}");
+            let got = frozen.apply_block(&block);
+            assert_eq!(got.columns, want, "{spec}");
+            assert_eq!(got.misses, 0, "{spec}: training keys cannot miss");
+            assert_eq!(got.rejected_rows, 0, "{spec}");
+        }
+    }
+
+    fn tiny_frozen(policy: MissPolicy) -> FrozenPlan {
+        // Pinned vocabulary {5→0, 12→1} on a 1-dense/1-sparse schema.
+        let spec = PipelineSpec::parse("modulus:97|genvocab|applyvocab").unwrap();
+        FrozenPlan::new(spec, Schema::new(1, 1), vec![vec![5, 12]], policy).unwrap()
+    }
+
+    fn request_block() -> RowBlock {
+        // Sparse keys 12 (hit), 40 (miss), 5 (hit).
+        let rows: Vec<DecodedRow> = [(0, 12u32), (1, 40), (0, 5)]
+            .iter()
+            .map(|&(label, s)| DecodedRow { label, dense: vec![7], sparse: vec![s] })
+            .collect();
+        RowBlock::from_rows(&rows, Schema::new(1, 1))
+    }
+
+    #[test]
+    fn sentinel_policy_marks_and_counts() {
+        let out = tiny_frozen(MissPolicy::Sentinel).apply_block(&request_block());
+        assert_eq!(out.columns.sparse[0], vec![1, VOCAB_MISS, 0]);
+        assert_eq!((out.misses, out.rejected_rows), (1, 0));
+    }
+
+    #[test]
+    fn default_index_policy_rewrites() {
+        let out = tiny_frozen(MissPolicy::DefaultIndex(0)).apply_block(&request_block());
+        assert_eq!(out.columns.sparse[0], vec![1, 0, 0]);
+        assert_eq!((out.misses, out.rejected_rows), (1, 0));
+    }
+
+    #[test]
+    fn reject_row_policy_drops_whole_rows() {
+        let out = tiny_frozen(MissPolicy::RejectRow).apply_block(&request_block());
+        assert_eq!(out.columns.num_rows(), 2);
+        assert_eq!(out.columns.sparse[0], vec![1, 0]);
+        assert_eq!(out.columns.labels, vec![0, 0]);
+        assert_eq!((out.misses, out.rejected_rows), (1, 1));
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected() {
+        let spec = PipelineSpec::parse("modulus:97|genvocab|applyvocab").unwrap();
+        let err = FrozenPlan::new(spec, Schema::new(1, 1), vec![vec![3, 3]], MissPolicy::Sentinel);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn column_count_mismatch_is_rejected() {
+        let spec = PipelineSpec::parse("modulus:97|genvocab|applyvocab").unwrap();
+        let err = FrozenPlan::new(spec, Schema::new(1, 2), vec![vec![]], MissPolicy::Sentinel);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn policy_parse_display_round_trips() {
+        for s in ["sentinel", "default:7", "reject"] {
+            let p = MissPolicy::parse(s).unwrap();
+            assert_eq!(p.to_string(), s);
+            let (tag, d) = p.to_wire();
+            assert_eq!(MissPolicy::from_wire(tag, d).unwrap(), p);
+        }
+        assert_eq!(MissPolicy::parse("reject-row").unwrap(), MissPolicy::RejectRow);
+        assert!(MissPolicy::parse("default:").is_err());
+        assert!(MissPolicy::parse(&format!("default:{}", u32::MAX)).is_err());
+        assert!(MissPolicy::parse("banana").is_err());
+        assert!(MissPolicy::from_wire(9, 0).is_err());
+    }
+
+    #[test]
+    fn miss_sentinel_in_passthrough_columns_is_untouched() {
+        // A modulus-free passthrough column can legitimately hold
+        // u32::MAX — RejectRow must not drop those rows.
+        let spec = PipelineSpec::parse(
+            "sparse[0]: modulus:97|genvocab|applyvocab; sparse[1]: fillmissing",
+        )
+        .unwrap();
+        let frozen =
+            FrozenPlan::new(spec, Schema::new(1, 2), vec![vec![5], vec![]], MissPolicy::RejectRow)
+                .unwrap();
+        let rows = vec![DecodedRow { label: 1, dense: vec![0], sparse: vec![5, u32::MAX] }];
+        let out = frozen.apply_block(&RowBlock::from_rows(&rows, Schema::new(1, 2)));
+        assert_eq!(out.columns.num_rows(), 1);
+        assert_eq!(out.columns.sparse[1], vec![u32::MAX]);
+        assert_eq!((out.misses, out.rejected_rows), (0, 0));
+    }
+}

@@ -63,10 +63,12 @@
 //! ```
 
 pub mod executor;
+pub mod frozen;
 pub mod sink;
 pub mod source;
 
 pub use executor::{ChunkState, Executor, ExecutorReport, ExecutorRun, StreamStats};
+pub use frozen::{ApplyOutcome, FrozenPlan, MissPolicy};
 pub use sink::{CollectSink, CountSink, Sink};
 pub use source::{
     serve_bytes, FileSource, MemorySource, ReaderSource, Source, SynthSource, TcpSource,

@@ -1,0 +1,136 @@
+//! Artifact round-trip suite: the frozen vocabulary file format must be
+//! bit-stable across vocabulary backends and must reject every kind of
+//! damage — corruption, truncation, version skew, and spec/schema
+//! mismatch — at load time, never at serving time.
+
+use piper::data::Schema;
+use piper::ops::artifact::{fnv1a, VocabArtifact};
+use piper::ops::{DirectVocab, HashVocab, PipelineSpec, Vocab};
+
+/// An observation stream with repeats and an out-of-order tail.
+const STREAM: [u32; 8] = [42, 7, 42, 0, 99, 7, 3, 99];
+
+fn sample_spec() -> PipelineSpec {
+    PipelineSpec::dlrm(997)
+}
+
+fn sample_artifact() -> VocabArtifact {
+    VocabArtifact::new(
+        sample_spec(),
+        Schema::new(2, 3),
+        vec![vec![42, 7, 0, 99, 3], vec![], vec![5, 1]],
+    )
+    .expect("sample artifact")
+}
+
+/// Patch `buf` in place and restore the trailing checksum, so decode
+/// exercises the *semantic* validation behind the checksum, not the
+/// checksum itself.
+fn patch_and_refix(buf: &mut [u8], at: usize, bytes: &[u8]) {
+    buf[at..at + bytes.len()].copy_from_slice(bytes);
+    let body_end = buf.len() - 8;
+    let sum = fnv1a(&buf[..body_end]).to_le_bytes();
+    buf[body_end..].copy_from_slice(&sum);
+}
+
+#[test]
+fn direct_and_hash_backends_freeze_to_identical_bytes() {
+    // Same observation stream through both GenVocab backends — the
+    // artifact must not remember which backend built it.
+    let mut direct = DirectVocab::new(128);
+    let mut hash = HashVocab::new();
+    for &v in &STREAM {
+        direct.observe(v);
+        hash.observe(v);
+    }
+    assert_eq!(direct.export_keys(), hash.export_keys());
+
+    let schema = Schema::new(1, 1);
+    let a = VocabArtifact::new(sample_spec(), schema, vec![direct.export_keys()]).unwrap();
+    let b = VocabArtifact::new(sample_spec(), schema, vec![hash.export_keys()]).unwrap();
+    assert_eq!(a.encode(), b.encode(), "backend choice must not leak into the artifact");
+}
+
+#[test]
+fn save_load_is_bit_identical() {
+    let artifact = sample_artifact();
+    let path = std::env::temp_dir()
+        .join(format!("piper-artifact-roundtrip-{}.bin", std::process::id()));
+    artifact.save(&path).expect("save");
+    let loaded = VocabArtifact::load(&path).expect("load");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, artifact);
+    assert_eq!(loaded.encode(), artifact.encode(), "re-encode must be bit-identical");
+    assert_eq!(loaded.spec_hash(), artifact.spec_hash());
+    assert_eq!(loaded.schema_hash(), artifact.schema_hash());
+}
+
+#[test]
+fn corrupted_byte_is_rejected() {
+    let good = sample_artifact().encode();
+    // Flip one byte in a vocabulary entry (past the header), leaving
+    // the checksum alone: the trailing FNV must catch it.
+    let mut bad = good.clone();
+    let mid = good.len() / 2;
+    bad[mid] ^= 0x01;
+    assert!(VocabArtifact::decode(&bad).is_err(), "checksum must catch a flipped byte");
+}
+
+#[test]
+fn wrong_version_is_rejected() {
+    let mut buf = sample_artifact().encode();
+    // Version lives at bytes 4..6; refix the checksum so the version
+    // check itself must fire.
+    patch_and_refix(&mut buf, 4, &99u16.to_le_bytes());
+    let err = VocabArtifact::decode(&buf).expect_err("version 99 must be rejected");
+    assert!(err.to_string().contains("version"), "unhelpful error: {err:#}");
+}
+
+#[test]
+fn truncated_file_is_rejected() {
+    let artifact = sample_artifact();
+    let good = artifact.encode();
+    let path = std::env::temp_dir()
+        .join(format!("piper-artifact-truncated-{}.bin", std::process::id()));
+    for cut in [0, 1, 10, good.len() / 2, good.len() - 1] {
+        std::fs::write(&path, &good[..cut]).expect("write truncated");
+        assert!(
+            VocabArtifact::load(&path).is_err(),
+            "a file truncated to {cut} bytes must be rejected"
+        );
+    }
+    // Sanity: the untruncated file still loads.
+    std::fs::write(&path, &good).expect("write full");
+    assert_eq!(VocabArtifact::load(&path).expect("full file loads"), artifact);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tampered_spec_hash_is_rejected() {
+    let mut buf = sample_artifact().encode();
+    // Stored spec hash lives at bytes 14..22.
+    patch_and_refix(&mut buf, 14, &0xdead_beef_dead_beefu64.to_le_bytes());
+    let err = VocabArtifact::decode(&buf).expect_err("spec hash mismatch must be rejected");
+    assert!(err.to_string().contains("spec"), "unhelpful error: {err:#}");
+}
+
+#[test]
+fn tampered_schema_is_rejected() {
+    let mut buf = sample_artifact().encode();
+    // num_sparse lives at bytes 10..14; growing it breaks both the
+    // stored schema hash and the column count — either way, rejected.
+    patch_and_refix(&mut buf, 10, &4u32.to_le_bytes());
+    assert!(VocabArtifact::decode(&buf).is_err(), "schema tamper must be rejected");
+}
+
+#[test]
+fn missing_file_is_a_clean_error() {
+    let path = std::env::temp_dir()
+        .join(format!("piper-artifact-missing-{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let err = VocabArtifact::load(&path).expect_err("missing file");
+    assert!(
+        err.to_string().contains("artifact"),
+        "the error should say what failed to load: {err:#}"
+    );
+}

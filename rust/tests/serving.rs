@@ -1,0 +1,293 @@
+//! Serving-mode suite over real loopback TCP: bit-equivalence of the
+//! online request path against the batch two-pass ApplyVocab path
+//! (across wire formats × miss policies), admission control, and the
+//! worker's error posture against malformed streams.
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+
+use piper::data::{binary, utf8, RowBlock, Schema, SynthConfig, SynthDataset};
+use piper::net::{self, protocol, stream::WireFormat, ServeJob, ServeStatus};
+use piper::ops::{PipelineSpec, VocabArtifact};
+use piper::pipeline::{ChunkDecoder, ChunkState, FrozenPlan, MissPolicy};
+
+/// One GenVocab pass over a dataset, frozen into an artifact.
+fn freeze_from(ds: &SynthDataset, spec: &PipelineSpec) -> VocabArtifact {
+    let schema = ds.schema();
+    let mut state = ChunkState::with_programs(spec.compile(schema).expect("spec compiles"));
+    let raw = binary::encode_dataset(ds);
+    let mut block = RowBlock::new(schema);
+    let mut dec = ChunkDecoder::new(piper::accel::InputFormat::Binary, schema);
+    dec.feed_into(&raw, &mut block).expect("decode");
+    dec.finish_into(&mut block).expect("decode end");
+    state.observe(&block);
+    let vocabs = state.vocabs.iter().map(|v| v.export_keys()).collect();
+    VocabArtifact::new(spec.clone(), schema, vocabs).expect("artifact")
+}
+
+/// Cut an encoded dataset into request payloads of ~`rows_per_req`
+/// rows, honoring each format's row framing.
+fn split_requests(
+    raw: &[u8],
+    format: WireFormat,
+    schema: Schema,
+    rows_per_req: usize,
+) -> Vec<Vec<u8>> {
+    match format {
+        WireFormat::Binary => raw
+            .chunks(schema.binary_row_bytes() * rows_per_req)
+            .map(<[u8]>::to_vec)
+            .collect(),
+        WireFormat::Utf8 => {
+            let mut out = Vec::new();
+            let (mut start, mut count) = (0usize, 0usize);
+            for (i, &b) in raw.iter().enumerate() {
+                if b == b'\n' {
+                    count += 1;
+                    if count == rows_per_req {
+                        out.push(raw[start..=i].to_vec());
+                        start = i + 1;
+                        count = 0;
+                    }
+                }
+            }
+            if start < raw.len() {
+                out.push(raw[start..].to_vec());
+            }
+            out
+        }
+    }
+}
+
+fn spawn_worker() -> (String, std::thread::JoinHandle<piper::Result<protocol::RunStats>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    (addr, std::thread::spawn(move || net::serve_one(&listener)))
+}
+
+/// The tentpole equivalence: for every wire format and every miss
+/// policy, rows served over TCP are bit-identical to the local frozen
+/// apply — and under the sentinel policy, to the *batch two-pass*
+/// ApplyVocab path itself (vocabularies imported, pass 2 only).
+#[test]
+fn served_rows_match_the_batch_apply_path() {
+    let spec = PipelineSpec::dlrm(5000);
+    let train = SynthDataset::generate(SynthConfig::small(1500));
+    let artifact = freeze_from(&train, &spec);
+    let schema = train.schema();
+    // Request traffic from a different seed — it must contain keys the
+    // frozen vocabulary has never seen, or the policies are untested.
+    let mut qcfg = SynthConfig::small(240);
+    qcfg.seed ^= 0x5eed;
+    let queries = SynthDataset::generate(qcfg);
+
+    for format in [WireFormat::Utf8, WireFormat::Binary] {
+        let raw = match format {
+            WireFormat::Utf8 => utf8::encode_dataset(&queries),
+            WireFormat::Binary => binary::encode_dataset(&queries),
+        };
+        let payloads = split_requests(&raw, format, schema, 50);
+        assert!(payloads.len() >= 4, "enough requests to be interesting");
+
+        for policy in [MissPolicy::Sentinel, MissPolicy::DefaultIndex(0), MissPolicy::RejectRow]
+        {
+            let (addr, server) = spawn_worker();
+            let job = ServeJob {
+                policy,
+                format,
+                queue_depth: 8,
+                artifact: artifact.clone(),
+            };
+            let mut client = net::ServeClient::connect(&addr, &job).expect("connect");
+            let frozen = FrozenPlan::from_artifact(&artifact, policy).expect("freeze");
+            let mut total_misses = 0u64;
+
+            for payload in &payloads {
+                let resp = client.request(payload).expect("request");
+
+                // Local reference: same bytes through the frozen plan.
+                let mut block = RowBlock::new(schema);
+                let mut dec = ChunkDecoder::new(format.into(), schema);
+                dec.feed_into(payload, &mut block).expect("local decode");
+                dec.finish_into(&mut block).expect("local decode end");
+                let local = frozen.apply_block(&block);
+                assert_eq!(
+                    resp.payload,
+                    protocol::pack_columns(&local.columns, schema),
+                    "{format:?}/{policy:?}: served bytes != local frozen apply"
+                );
+                assert_eq!(u64::from(resp.misses), local.misses);
+                assert_eq!(u64::from(resp.rejected_rows), local.rejected_rows);
+                let want = if local.rejected_rows > 0 {
+                    ServeStatus::RejectedRows
+                } else {
+                    ServeStatus::Ok
+                };
+                assert_eq!(resp.status, want);
+                total_misses += local.misses;
+
+                // Batch reference: under the sentinel policy the served
+                // bytes must equal the batch two-pass ApplyVocab output
+                // (empty pass 1, imported vocabularies, pass 2 only).
+                if policy == MissPolicy::Sentinel {
+                    let mut sp = net::StreamingPreprocessor::new(&spec, schema, format)
+                        .expect("streaming preprocessor");
+                    sp.pass1_end().expect("empty pass 1");
+                    sp.import_vocabs(artifact.vocabs().to_vec()).expect("import");
+                    let mut rows = sp.pass2_chunk(payload).expect("pass 2");
+                    rows.extend(sp.pass2_end().expect("pass 2 end"));
+                    assert_eq!(
+                        resp.payload,
+                        protocol::pack_rows(&rows, schema),
+                        "{format:?}: served bytes != batch two-pass ApplyVocab"
+                    );
+                }
+            }
+
+            let (report, late) = client.finish().expect("finish");
+            assert!(late.is_empty(), "all responses consumed in-loop");
+            assert_eq!(report.requests, payloads.len() as u64);
+            assert_eq!(report.misses, total_misses);
+            assert!(report.p99_us >= report.p50_us);
+            if policy == MissPolicy::Sentinel {
+                assert!(total_misses > 0, "query seed must exercise vocabulary misses");
+            }
+            let stats = server.join().expect("worker thread").expect("worker session");
+            assert_eq!(stats.rows, report.rows);
+        }
+    }
+}
+
+/// Admission control: with `queue_depth=1`, a burst behind one large
+/// request gets explicit OVERLOADED replies — and every request is
+/// still answered exactly once, in arrival order.
+#[test]
+fn overload_burst_gets_explicit_refusals() {
+    let spec = PipelineSpec::dlrm(5000);
+    let train = SynthDataset::generate(SynthConfig::small(20_000));
+    let artifact = freeze_from(&train, &spec);
+    let schema = train.schema();
+    let raw = binary::encode_dataset(&train);
+
+    let (addr, server) = spawn_worker();
+    let job = ServeJob {
+        policy: MissPolicy::Sentinel,
+        format: WireFormat::Binary,
+        queue_depth: 1,
+        artifact,
+    };
+    let mut client = net::ServeClient::connect(&addr, &job).expect("connect");
+
+    // One large request holds the single processing slot...
+    client.send(&raw).expect("big request");
+    // ...while a burst of tiny ones races into admission.
+    let n_small = 16usize;
+    for _ in 0..n_small {
+        client.send(&raw[..schema.binary_row_bytes()]).expect("small request");
+    }
+    let mut responses = Vec::with_capacity(n_small + 1);
+    for _ in 0..n_small + 1 {
+        responses.push(client.recv().expect("response"));
+    }
+    let (report, late) = client.finish().expect("finish");
+    assert!(late.is_empty());
+
+    let overloaded =
+        responses.iter().filter(|r| r.status == ServeStatus::Overloaded).count();
+    assert!(overloaded >= 1, "queue_depth=1 burst must refuse at least one request");
+    assert_eq!(report.overloaded, overloaded as u64);
+    assert_eq!(report.requests, (n_small + 1) as u64);
+    assert!(report.p50_us > 0, "latency window recorded the served requests");
+    // Exactly-once, id-echoed answers.
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.req_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..=n_small as u64).collect::<Vec<_>>());
+    // Refused requests carry no rows.
+    for r in &responses {
+        if r.status == ServeStatus::Overloaded {
+            assert!(r.payload.is_empty());
+        }
+    }
+    server.join().expect("worker thread").expect("worker session");
+}
+
+/// A malformed request gets a BAD_REQUEST reply and the session keeps
+/// serving — one bad client batch must not tear down the connection.
+#[test]
+fn bad_request_does_not_end_the_tcp_session() {
+    let spec = PipelineSpec::dlrm(5000);
+    let train = SynthDataset::generate(SynthConfig::small(500));
+    let artifact = freeze_from(&train, &spec);
+    let schema = train.schema();
+    let raw = binary::encode_dataset(&train);
+
+    let (addr, server) = spawn_worker();
+    let job = ServeJob {
+        policy: MissPolicy::Sentinel,
+        format: WireFormat::Binary,
+        queue_depth: 4,
+        artifact,
+    };
+    let mut client = net::ServeClient::connect(&addr, &job).expect("connect");
+
+    let misaligned = &raw[..schema.binary_row_bytes() + 3];
+    let bad = client.request(misaligned).expect("bad request still gets a reply");
+    assert_eq!(bad.status, ServeStatus::BadRequest);
+    assert!(!bad.payload.is_empty(), "the reason travels in the payload");
+
+    let good = client.request(&raw[..schema.binary_row_bytes()]).expect("served after");
+    assert_eq!(good.status, ServeStatus::Ok);
+    assert_eq!(good.rows(schema), 1);
+
+    let (report, _) = client.finish().expect("finish");
+    assert_eq!((report.bad_requests, report.ok), (1, 1));
+    server.join().expect("worker thread").expect("worker session");
+}
+
+/// A garbage job header gets an ERROR reply with the reason, then a
+/// clean close — never a panic, never a silent hang.
+#[test]
+fn hostile_job_header_gets_an_error_reply() {
+    let (addr, server) = spawn_worker();
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    protocol::write_frame(&mut stream, protocol::Tag::ServeJob, &[1, 2, 3]).expect("write");
+    stream.flush().expect("flush");
+
+    let (tag, payload) = protocol::read_frame(&mut stream).expect("error frame");
+    assert_eq!(tag, protocol::Tag::ErrorReply);
+    assert!(!payload.is_empty(), "the reply must say what was wrong");
+    // The worker closed after replying.
+    use std::io::Read as _;
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).expect("clean close");
+    assert!(rest.is_empty());
+    assert!(server.join().expect("worker thread").is_err());
+}
+
+/// A truncated frame (peer hangs up mid-header) fails the session
+/// cleanly on the worker side.
+#[test]
+fn truncated_frame_fails_cleanly() {
+    let (addr, server) = spawn_worker();
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    stream.write_all(&[protocol::Tag::Job as u8, 9, 9]).expect("partial header");
+    drop(stream);
+    assert!(server.join().expect("worker thread").is_err(), "error, not a hang or panic");
+}
+
+/// A frame header claiming an absurd length is refused before any
+/// allocation — the worker replies with the error and closes.
+#[test]
+fn oversized_frame_is_refused_up_front() {
+    let (addr, server) = spawn_worker();
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    let mut hdr = vec![protocol::Tag::Job as u8];
+    hdr.extend_from_slice(&(u64::MAX).to_le_bytes());
+    stream.write_all(&hdr).expect("hostile header");
+    stream.flush().expect("flush");
+
+    let (tag, payload) = protocol::read_frame(&mut stream).expect("error frame");
+    assert_eq!(tag, protocol::Tag::ErrorReply);
+    assert!(!payload.is_empty());
+    assert!(server.join().expect("worker thread").is_err());
+}

@@ -1,0 +1,87 @@
+#!/usr/bin/env sh
+# Guard the two committed perf tentpoles against regressions:
+#   BENCH_pr4.json — decode-threads sweep (row-sharded SWAR decode)
+#   BENCH_pr5.json — uniform vs heterogeneous per-column programs
+#
+# Runs the pipeline_engine bench fresh, then compares *machine-portable
+# ratios* against the committed baselines — decode thread-scaling
+# (max-threads vs 1) and per-program relative throughput — not absolute
+# rows/s, which would just measure the CI runner. A ratio drop larger
+# than THRESHOLD (default 25%) fails the script.
+#
+# Usage: scripts/bench_compare.sh [--bless]
+#   --bless     overwrite the baselines with this machine's fresh run
+#   THRESHOLD   max tolerated ratio drop in percent (default 25)
+#   PIPER_BENCH_ROWS / PIPER_BENCH_REPS   forwarded to the bench
+set -eu
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+ROWS="${PIPER_BENCH_ROWS:-200000}"
+REPS="${PIPER_BENCH_REPS:-5}"
+THRESHOLD="${THRESHOLD:-25}"
+BASE4="$ROOT/BENCH_pr4.json"
+BASE5="$ROOT/BENCH_pr5.json"
+
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+CUR4="$TMP/pr4.json"
+CUR5="$TMP/pr5.json"
+
+echo "bench_compare: running pipeline_engine ($ROWS rows, $REPS reps)"
+cd "$ROOT/rust"
+PIPER_BENCH_ROWS="$ROWS" PIPER_BENCH_REPS="$REPS" \
+    BENCH_JSON="$CUR4" BENCH_PR5_JSON="$CUR5" \
+    cargo bench --bench pipeline_engine >/dev/null
+
+if [ "${1:-}" = "--bless" ] || [ ! -f "$BASE4" ] || [ ! -f "$BASE5" ]; then
+    cp "$CUR4" "$BASE4"
+    cp "$CUR5" "$BASE5"
+    echo "bench_compare: baselines blessed -> $BASE4, $BASE5"
+    exit 0
+fi
+
+python3 - "$BASE4" "$CUR4" "$BASE5" "$CUR5" "$THRESHOLD" <<'EOF'
+import json
+import sys
+
+base4, cur4, base5, cur5 = (json.load(open(p)) for p in sys.argv[1:5])
+threshold = float(sys.argv[5])
+failures = []
+
+
+def ratio_check(name, base_ratio, cur_ratio):
+    drop = (1.0 - cur_ratio / base_ratio) * 100.0 if base_ratio > 0 else 0.0
+    status = "FAIL" if drop > threshold else "  ok"
+    print(f"{status}  {name}: baseline {base_ratio:.2f}x, current {cur_ratio:.2f}x "
+          f"(drop {drop:+.1f}%)")
+    if drop > threshold:
+        failures.append(name)
+
+
+def decode_scaling(doc):
+    rps = {p["decode_threads"]: p["decode_rows_per_s"] for p in doc["sweep"]}
+    return rps[max(rps)] / rps[1]
+
+
+print("decode-threads sweep (PR 4):")
+ratio_check("decode scaling, max threads vs 1", decode_scaling(base4), decode_scaling(cur4))
+
+
+def program_rps(doc):
+    return {p["program"]: p["rows_per_s"] for p in doc["programs"]}
+
+
+print("per-column programs (PR 5):")
+b, c = program_rps(base5), program_rps(cur5)
+uniform = next(iter(b))
+for name in b:
+    if name not in c:
+        failures.append(f"{name} missing from the current run")
+        continue
+    ratio_check(f"{name} vs {uniform}", b[name] / b[uniform], c[name] / c[uniform])
+
+if failures:
+    print(f"bench_compare: regression beyond {threshold}%: " + ", ".join(failures))
+    sys.exit(1)
+print(f"bench_compare: all ratios within {threshold}% of baseline")
+EOF
