@@ -41,11 +41,13 @@ COMMANDS:
   compare     rows=20000 vocab=5000 format=utf8|binary
   serve       addr=127.0.0.1:7700 jobs=1 (jobs=0: accept connections forever)
   submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000 spec='...'
-              strategy=fused|two-pass
+              strategy=fused|two-pass timeout=30 deadline=0 retries=2 backoff_ms=50
+              (addr=A,B,... shards the job across a worker cluster, two-pass)
   freeze      input=PATH format=utf8|binary out=vocab.artifact vocab=5000 spec='...'
               dense=13 sparse=26 chunk=1048576
   request     artifact=PATH input=PATH addr=127.0.0.1:7700 format=utf8|binary
               policy=sentinel|default:N|reject queue_depth=32
+              timeout=30 retries=2 backoff_ms=50
   train       input=PATH format=utf8 vocab=5000 steps=100 artifacts=artifacts
   help        print this message
 
@@ -61,6 +63,13 @@ dataset is never resident in memory. Under the fused strategy (the
 default) vocabulary generation and application run in ONE decode pass;
 strategy=two-pass reproduces the classic two-loop baseline with its
 rewind.
+
+timeout= is the per-socket read/write deadline in seconds (0 disables
+it), deadline= a wall-clock budget for the whole job in seconds (0 =
+unbounded), retries= how often a failed shard (submit) or overloaded
+request (request) is re-dispatched, and backoff_ms= the base of the
+capped exponential backoff between attempts. A cluster submit retries
+failed shards on surviving workers and reports the retry/fault counts.
 
 freeze builds a versioned, checksummed vocabulary artifact from a
 training dataset; request sends one small batch against a worker
@@ -126,6 +135,23 @@ fn run() -> Result<()> {
 
 fn modulus_of(cfg: &Config) -> Result<Modulus> {
     Ok(Modulus::new(cfg.get_usize("vocab", 5000)? as u32))
+}
+
+/// Fault-tolerance knobs shared by `submit` and `request`: `timeout=`
+/// (per-socket I/O deadline, seconds; 0 disables), `deadline=` (whole-
+/// job wall-clock budget, seconds; 0 = unbounded), `retries=`,
+/// `backoff_ms=` (base of the capped exponential backoff).
+fn net_config_of(cfg: &Config) -> Result<net::NetConfig> {
+    let defaults = net::NetConfig::default();
+    let io = cfg.get_u64("timeout", 30)?;
+    let deadline = cfg.get_u64("deadline", 0)?;
+    Ok(net::NetConfig {
+        io_timeout: (io > 0).then(|| std::time::Duration::from_secs(io)),
+        job_deadline: (deadline > 0).then(|| std::time::Duration::from_secs(deadline)),
+        retries: cfg.get_usize("retries", defaults.retries as usize)? as u32,
+        backoff: std::time::Duration::from_millis(cfg.get_u64("backoff_ms", 50)?),
+        backoff_cap: defaults.backoff_cap,
+    })
 }
 
 fn format_of(cfg: &Config) -> Result<InputFormat> {
@@ -352,8 +378,9 @@ fn cmd_request(cfg: &Config) -> Result<()> {
         artifact,
     };
     let raw = std::fs::read(input_path)?;
-    let mut client = net::ServeClient::connect(addr, &job)?;
-    let resp = client.request(&raw)?;
+    let netcfg = net_config_of(cfg)?;
+    let mut client = net::ServeClient::connect_retry(addr, &job, &netcfg)?;
+    let resp = client.request_retry(&raw, &netcfg)?;
     let (report, _late) = client.finish()?;
     match resp.status {
         net::ServeStatus::BadRequest => println!(
@@ -459,10 +486,35 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
         Some(s) => piper::pipeline::ExecStrategy::parse(s)?,
         None => piper::pipeline::ExecStrategy::Fused, // single-node default
     };
+    let netcfg = net_config_of(cfg)?;
+    if addr.contains(',') {
+        // Cluster mode: shard the job across every listed worker. The
+        // global vocabulary merge forces the two-pass protocol, and the
+        // leader shards the raw buffer directly.
+        let addrs: Vec<String> = addr
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        let raw = std::fs::read(Path::new(path))
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        let run = net::run_cluster_cfg(&addrs, &job, &raw, chunk, &netcfg)?;
+        println!(
+            "preprocessed {} rows ({} vocab entries) across {} workers in {} \
+             (two-pass cluster; {} shard retries, {} faults observed)",
+            run.stats.rows,
+            run.stats.vocab_entries,
+            run.workers,
+            fmt_duration(run.wallclock),
+            run.retries,
+            run.faults,
+        );
+        return Ok(());
+    }
     // Stream the file to the worker chunk by chunk — the leader never
     // holds the dataset either. Fused sends it once; two-pass twice.
     let mut source = FileSource::open(Path::new(path), input)?;
-    let run = net::run_leader_source(addr, &job, &mut source, chunk, strategy)?;
+    let run = net::run_leader_source_cfg(addr, &job, &mut source, chunk, strategy, &netcfg)?;
     println!(
         "preprocessed {} rows ({} vocab entries) in {} over TCP ({})",
         run.stats.rows,

@@ -10,15 +10,40 @@
 //! the merged vocabularies, and pass 2 runs sharded with the global
 //! state. Exactly one synchronization point — the same merge the CPU
 //! baseline pays per-thread, paid once per worker here.
+//!
+//! # Split-level recovery
+//!
+//! The unit of work *and of retry* is the shard, not the worker. When a
+//! shard's session fails or times out — in either pass — the shard is
+//! re-dispatched to the next worker in rotation with capped exponential
+//! backoff ([`NetConfig::backoff_for`]); a worker whose *connect* is
+//! refused is struck from the rotation (process dead), while a
+//! mid-session failure leaves the worker eligible (often only the
+//! connection died). A pass-2 retry opens a fresh session that skips
+//! pass 1 entirely (`Job → Pass1End → VocabLoad → Pass2…` — legal
+//! because an empty pass 1 is legal) since the merged vocabularies are
+//! already global.
+//!
+//! Determinism under retry: sub-vocabulary dumps are *per shard* and
+//! merged in shard order, and shard outputs are concatenated in shard
+//! order — so which worker served which attempt of which shard is
+//! invisible in the output. The chaos suite pins this bit-identical.
+//! Integrity under faults: every pass-1 dump carries the rows the
+//! worker observed and every pass-2 `ResultEnd` the rows it emitted;
+//! the leader checks both against the shard's true row count, so a
+//! dropped frame is a typed, retryable error — never silent skew.
 
+use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::data::row::ProcessedColumns;
 use crate::data::Schema;
 use crate::Result;
 
-use super::protocol::{self, Job, RunStats, Tag};
+use super::protocol::{self, Job, NetError, RunStats, Tag};
+use super::{JobClock, NetConfig};
 
 /// Result of a cluster run.
 #[derive(Debug)]
@@ -27,27 +52,50 @@ pub struct ClusterRun {
     pub stats: RunStats,
     pub workers: usize,
     pub wallclock: Duration,
+    /// Shard re-dispatch attempts performed (0 on a clean run).
+    pub retries: u64,
+    /// Failed shard attempts observed (connects refused, sessions
+    /// severed, timeouts, integrity mismatches).
+    pub faults: u64,
 }
 
-/// One leader-side worker connection.
-struct WorkerConn {
-    writer: std::io::BufWriter<TcpStream>,
-    reader: std::io::BufReader<TcpStream>,
-    shard: std::ops::Range<usize>,
-}
-
-/// Split a raw buffer into `n` contiguous shards on row boundaries.
+/// Split a raw buffer into at most `n` contiguous, non-overlapping,
+/// non-empty shards on row boundaries, covering `raw` exactly.
+///
+/// Fewer than `n` shards come back when the input has fewer rows than
+/// `n` (never an empty shard — an empty shard would dispatch a no-op
+/// session and, worse, make "rows observed" checks vacuous). A UTF-8
+/// input without a trailing newline keeps its final partial row in the
+/// last shard; a misaligned binary tail also lands in the last shard so
+/// the worker rejects it instead of the leader silently dropping bytes.
 pub fn shard_rows(raw: &[u8], schema: Schema, binary: bool, n: usize) -> Vec<std::ops::Range<usize>> {
     let n = n.max(1);
-    if binary {
+    if raw.is_empty() {
+        return Vec::new();
+    }
+    let mut shards: Vec<std::ops::Range<usize>> = if binary {
         let rb = schema.binary_row_bytes();
         let rows = raw.len() / rb;
-        crate::cpu_baseline::pipeline::partition_rows(rows, n)
-            .into_iter()
-            .map(|r| r.start * rb..r.end * rb)
-            .collect()
+        if rows == 0 {
+            // Only a partial row: one shard; the worker reports the
+            // misalignment.
+            return vec![0..raw.len()];
+        }
+        let mut out: Vec<std::ops::Range<usize>> =
+            crate::cpu_baseline::pipeline::partition_rows(rows, n)
+                .into_iter()
+                .map(|r| r.start * rb..r.end * rb)
+                .collect();
+        // A misaligned tail travels with the last shard.
+        if let Some(last) = out.last_mut() {
+            last.end = raw.len().max(last.end);
+        }
+        out
     } else {
-        // cut at the newline nearest each equal byte split
+        // Cut at the newline nearest each equal byte split. When n
+        // exceeds the row count several targets resolve to the same
+        // cut — the floor clamp makes them empty and the filter below
+        // removes them.
         let mut cuts = vec![0usize];
         for i in 1..n {
             let target = raw.len() * i / n;
@@ -61,7 +109,351 @@ pub fn shard_rows(raw: &[u8], schema: Schema, binary: bool, n: usize) -> Vec<std
         }
         cuts.push(raw.len());
         (0..n).map(|i| cuts[i]..cuts[i + 1]).collect()
+    };
+    shards.retain(|s| !s.is_empty());
+    shards
+}
+
+/// Rows a worker must observe (pass 1) and emit (pass 2) for `shard` —
+/// the integrity check that turns a dropped frame into a typed error.
+fn expected_rows(shard: &[u8], schema: Schema, binary: bool) -> u64 {
+    if binary {
+        (shard.len() / schema.binary_row_bytes()) as u64
+    } else {
+        let full = crate::data::utf8::count_rows(shard);
+        let partial_tail = !shard.is_empty() && shard[shard.len() - 1] != b'\n';
+        (full + usize::from(partial_tail)) as u64
     }
+}
+
+/// One leader↔worker session for one shard attempt.
+struct ShardSession {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    addr: String,
+}
+
+/// Everything a shard dispatch thread needs — shared, read-only (the
+/// counters and strike list are atomics).
+struct Dispatch<'a> {
+    addrs: &'a [String],
+    job: &'a Job,
+    raw: &'a [u8],
+    chunk_size: usize,
+    cfg: &'a NetConfig,
+    clock: JobClock,
+    /// Workers whose connect was refused — dead processes, skipped by
+    /// the rotation.
+    struck: &'a [AtomicBool],
+    retries: &'a AtomicU64,
+    faults: &'a AtomicU64,
+}
+
+impl Dispatch<'_> {
+    /// The worker for `shard_idx`'s `attempt`-th try: rotate so a
+    /// retried shard lands on a *different* worker first, skipping
+    /// struck ones. `None` when no worker survives.
+    fn pick_worker(&self, shard_idx: usize, attempt: u32) -> Option<usize> {
+        let n = self.addrs.len();
+        let start = (shard_idx + attempt as usize) % n;
+        (0..n)
+            .map(|k| (start + k) % n)
+            .find(|&w| !self.struck[w].load(Ordering::Acquire))
+    }
+
+    /// Connect to worker `widx`; a refused/unreachable connect strikes
+    /// it from the rotation.
+    fn connect_worker(&self, widx: usize) -> Result<ShardSession> {
+        let addr = &self.addrs[widx];
+        let stream = super::connect(addr, self.cfg.io_timeout, &self.clock).inspect_err(|e| {
+            if matches!(NetError::of(e), Some(NetError::PeerGone { .. })) {
+                self.struck[widx].store(true, Ordering::Release);
+            }
+        })?;
+        Ok(ShardSession {
+            reader: BufReader::with_capacity(1 << 20, stream.try_clone()?),
+            writer: BufWriter::with_capacity(1 << 20, stream),
+            addr: addr.clone(),
+        })
+    }
+
+    /// Back off (capped exponential, clipped to the job budget) before
+    /// retry `attempt`, and count it.
+    fn backoff(&self, attempt: u32) {
+        self.retries.fetch_add(1, Ordering::AcqRel);
+        self.clock.sleep(self.cfg.backoff_for(attempt));
+    }
+
+    /// When a send-side error is just the echo of the worker aborting,
+    /// the worker's `ErrorReply` (already in flight) is the root cause —
+    /// surface that instead.
+    fn prefer_error_reply(&self, sess: &mut ShardSession, err: anyhow::Error) -> anyhow::Error {
+        if matches!(NetError::of(&err), Some(NetError::PeerGone { .. })) {
+            if let Ok((Tag::ErrorReply, payload)) = protocol::read_frame(&mut sess.reader) {
+                return anyhow::Error::new(NetError::JobFailed {
+                    worker: sess.addr.clone(),
+                    reason: String::from_utf8_lossy(&payload).into_owned(),
+                });
+            }
+        }
+        err
+    }
+
+    /// One pass-1 attempt on an established session: job header, the
+    /// shard's chunks, `VocabSync`, then the verified shard dump. On
+    /// success the session is parked between the passes, ready for
+    /// `VocabLoad`.
+    fn pass1_attempt(
+        &self,
+        sess: &mut ShardSession,
+        shard: &std::ops::Range<usize>,
+        expected: u64,
+    ) -> Result<Vec<Vec<u32>>> {
+        let sent = (|| -> Result<()> {
+            protocol::write_frame(&mut sess.writer, Tag::Job, &self.job.encode())?;
+            for chunk in self.raw[shard.clone()].chunks(self.chunk_size.max(1)) {
+                self.clock.check("sending pass 1")?;
+                protocol::write_frame(&mut sess.writer, Tag::Pass1Chunk, chunk)?;
+            }
+            protocol::write_frame(&mut sess.writer, Tag::Pass1End, &[])?;
+            protocol::write_frame(&mut sess.writer, Tag::VocabSync, &[])?;
+            sess.writer.flush()?;
+            Ok(())
+        })();
+        if let Err(e) = sent {
+            return Err(self.prefer_error_reply(sess, e));
+        }
+        self.clock.check("awaiting shard dump")?;
+        let (tag, payload) = protocol::read_frame(&mut sess.reader)?;
+        match tag {
+            Tag::VocabDump => {
+                let (rows, cols) = protocol::unpack_shard_dump(&payload)?;
+                anyhow::ensure!(
+                    rows == expected,
+                    NetError::Malformed {
+                        what: format!(
+                            "worker {} observed {rows} rows of a {expected}-row shard — \
+                             pass-1 frames were lost",
+                            sess.addr
+                        ),
+                    }
+                );
+                anyhow::ensure!(
+                    cols.len() == self.job.schema.num_sparse,
+                    NetError::Malformed {
+                        what: format!(
+                            "shard dump has {} vocab columns, schema wants {}",
+                            cols.len(),
+                            self.job.schema.num_sparse
+                        ),
+                    }
+                );
+                Ok(cols)
+            }
+            Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
+                worker: sess.addr.clone(),
+                reason: String::from_utf8_lossy(&payload).into_owned(),
+            }),
+            other => anyhow::bail!(NetError::Malformed {
+                what: format!("expected VocabDump, got {other:?}"),
+            }),
+        }
+    }
+
+    /// Pass 1 for one shard with split-level retry: each attempt gets a
+    /// fresh session on the rotation's next surviving worker.
+    fn pass1_shard(
+        &self,
+        shard_idx: usize,
+        shard: &std::ops::Range<usize>,
+        expected: u64,
+    ) -> Result<(ShardSession, Vec<Vec<u32>>)> {
+        let mut last_err = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                self.backoff(attempt);
+            }
+            self.clock
+                .check(&format!("dispatching shard {shard_idx} pass 1"))
+                .map_err(|e| last_err.take().unwrap_or(e))?;
+            let Some(widx) = self.pick_worker(shard_idx, attempt) else {
+                let cause = last_err
+                    .take()
+                    .map(|e: anyhow::Error| format!(" (last error: {e:#})"))
+                    .unwrap_or_default();
+                anyhow::bail!(NetError::PeerGone {
+                    what: format!("no surviving workers for shard {shard_idx}{cause}"),
+                });
+            };
+            let attempt_result = self.connect_worker(widx).and_then(|mut sess| {
+                let cols = self.pass1_attempt(&mut sess, shard, expected)?;
+                Ok((sess, cols))
+            });
+            match attempt_result {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    self.faults.fetch_add(1, Ordering::AcqRel);
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow::anyhow!("no attempt ran"))
+            .context(format!("shard {shard_idx}: pass-1 retries exhausted")))
+    }
+
+    /// One pass-2 attempt. `fresh` sessions (retries) open with an
+    /// empty pass 1 — the merged vocabularies make re-observing
+    /// unnecessary. A collector thread drains `ResultChunk`s while the
+    /// shard streams out, so full socket buffers can't deadlock.
+    fn pass2_attempt(
+        &self,
+        sess: &mut ShardSession,
+        fresh: bool,
+        packed_vocabs: &[u8],
+        shard: &std::ops::Range<usize>,
+        expected: u64,
+    ) -> Result<ProcessedColumns> {
+        let schema = self.job.schema;
+        let addr_str = sess.addr.clone();
+        let ShardSession { reader, writer, addr } = &mut *sess;
+        let (sent, collected) = std::thread::scope(|scope| {
+            let clock = self.clock;
+            let worker_addr = addr.clone();
+            let collector =
+                scope.spawn(move || -> Result<(ProcessedColumns, RunStats)> {
+                    let mut cols = ProcessedColumns::with_schema(schema);
+                    loop {
+                        clock.check("collecting pass-2 results")?;
+                        let (tag, payload) = protocol::read_frame(reader)?;
+                        match tag {
+                            Tag::ResultChunk => {
+                                for row in protocol::unpack_rows(&payload, schema)? {
+                                    cols.push_row(&row);
+                                }
+                            }
+                            Tag::ResultEnd => {
+                                return Ok((cols, RunStats::decode(&payload)?))
+                            }
+                            Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
+                                worker: worker_addr,
+                                reason: String::from_utf8_lossy(&payload).into_owned(),
+                            }),
+                            other => anyhow::bail!(NetError::Malformed {
+                                what: format!("unexpected {other:?} in pass 2"),
+                            }),
+                        }
+                    }
+                });
+            let sent = (|| -> Result<()> {
+                if fresh {
+                    protocol::write_frame(writer, Tag::Job, &self.job.encode())?;
+                    protocol::write_frame(writer, Tag::Pass1End, &[])?;
+                }
+                protocol::write_frame(writer, Tag::VocabLoad, packed_vocabs)?;
+                for chunk in self.raw[shard.clone()].chunks(self.chunk_size.max(1)) {
+                    self.clock.check("sending pass 2")?;
+                    protocol::write_frame(writer, Tag::Pass2Chunk, chunk)?;
+                }
+                protocol::write_frame(writer, Tag::Pass2End, &[])?;
+                writer.flush()?;
+                Ok(())
+            })();
+            let collected = collector
+                .join()
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("pass-2 collector panicked")));
+            (sent, collected)
+        });
+        let (cols, stats) = match (sent, collected) {
+            (_, Ok(out)) => out,
+            // The collector usually holds the root cause (the worker's
+            // ErrorReply); a send-side broken pipe is its echo.
+            (Err(send_err), Err(collect_err)) => {
+                return Err(
+                    if matches!(NetError::of(&collect_err), Some(NetError::JobFailed { .. })) {
+                        collect_err
+                    } else {
+                        send_err
+                    },
+                )
+            }
+            (Ok(()), Err(collect_err)) => return Err(collect_err),
+        };
+        anyhow::ensure!(
+            stats.rows == expected && cols.num_rows() as u64 == expected,
+            NetError::Malformed {
+                what: format!(
+                    "worker {addr_str} returned {} rows (reported {}) of a \
+                     {expected}-row shard — pass-2 frames were lost",
+                    cols.num_rows(),
+                    stats.rows
+                ),
+            }
+        );
+        Ok(cols)
+    }
+
+    /// Pass 2 for one shard with split-level retry. Attempt 0 reuses
+    /// the shard's pass-1 session; every retry is a fresh session on
+    /// the next surviving worker.
+    fn pass2_shard(
+        &self,
+        shard_idx: usize,
+        first_session: ShardSession,
+        packed_vocabs: &[u8],
+        shard: &std::ops::Range<usize>,
+        expected: u64,
+    ) -> Result<ProcessedColumns> {
+        let mut last_err = None;
+        let mut first = Some(first_session);
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                self.backoff(attempt);
+            }
+            self.clock
+                .check(&format!("dispatching shard {shard_idx} pass 2"))
+                .map_err(|e| last_err.take().unwrap_or(e))?;
+            let session = match first.take() {
+                Some(sess) => Ok((sess, false)),
+                None => match self.pick_worker(shard_idx, attempt) {
+                    Some(widx) => self.connect_worker(widx).map(|s| (s, true)),
+                    None => {
+                        let cause = last_err
+                            .take()
+                            .map(|e: anyhow::Error| format!(" (last error: {e:#})"))
+                            .unwrap_or_default();
+                        anyhow::bail!(NetError::PeerGone {
+                            what: format!("no surviving workers for shard {shard_idx}{cause}"),
+                        });
+                    }
+                },
+            };
+            let attempt_result = session.and_then(|(mut sess, fresh)| {
+                self.pass2_attempt(&mut sess, fresh, packed_vocabs, shard, expected)
+            });
+            match attempt_result {
+                Ok(cols) => return Ok(cols),
+                Err(e) => {
+                    self.faults.fetch_add(1, Ordering::AcqRel);
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow::anyhow!("no attempt ran"))
+            .context(format!("shard {shard_idx}: pass-2 retries exhausted")))
+    }
+}
+
+/// Run a sharded two-pass job against `addrs` workers with the default
+/// [`NetConfig`] (30 s I/O deadline, 2 retries per shard).
+pub fn run_cluster(
+    addrs: &[String],
+    job: &Job,
+    raw: &[u8],
+    chunk_size: usize,
+) -> Result<ClusterRun> {
+    run_cluster_cfg(addrs, job, raw, chunk_size, &NetConfig::default())
 }
 
 /// Run a sharded two-pass job against `addrs` workers.
@@ -70,47 +462,73 @@ pub fn shard_rows(raw: &[u8], schema: Schema, binary: bool, n: usize) -> Vec<std
 /// is a barrier *between* the passes, so no worker may emit a row until
 /// every worker has observed its whole shard — the fused single-pass
 /// strategy cannot apply here, which is why the engine retains the
-/// two-pass protocol at all.
-pub fn run_cluster(
+/// two-pass protocol at all. Shards dispatch in parallel (one thread
+/// per shard) in both passes; failed shards are re-dispatched per the
+/// module-level recovery rules, and the run fails — with a typed
+/// [`NetError`], inside the job deadline — only when a shard exhausts
+/// its retries or no worker survives.
+pub fn run_cluster_cfg(
     addrs: &[String],
     job: &Job,
     raw: &[u8],
     chunk_size: usize,
+    cfg: &NetConfig,
 ) -> Result<ClusterRun> {
     anyhow::ensure!(!addrs.is_empty(), "cluster needs at least one worker");
     let start = Instant::now();
     let binary = matches!(job.format, super::stream::WireFormat::Binary);
     let shards = shard_rows(raw, job.schema, binary, addrs.len());
+    let expected: Vec<u64> =
+        shards.iter().map(|s| expected_rows(&raw[s.clone()], job.schema, binary)).collect();
 
-    // connect + send job + pass 1 per worker
-    let mut conns = Vec::with_capacity(addrs.len());
-    for (addr, shard) in addrs.iter().zip(shards) {
-        let stream = TcpStream::connect(addr.as_str())?;
-        stream.set_nodelay(true)?;
-        let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream.try_clone()?);
-        let reader = std::io::BufReader::with_capacity(1 << 20, stream);
-        protocol::write_frame(&mut writer, Tag::Job, &job.encode())?;
-        for chunk in raw[shard.clone()].chunks(chunk_size.max(1)) {
-            protocol::write_frame(&mut writer, Tag::Pass1Chunk, chunk)?;
-        }
-        protocol::write_frame(&mut writer, Tag::Pass1End, &[])?;
-        protocol::write_frame(&mut writer, Tag::VocabSync, &[])?;
-        use std::io::Write as _;
-        writer.flush()?;
-        conns.push(WorkerConn { writer, reader, shard });
+    let struck: Vec<AtomicBool> = addrs.iter().map(|_| AtomicBool::new(false)).collect();
+    let retries = AtomicU64::new(0);
+    let faults = AtomicU64::new(0);
+    let dispatch = Dispatch {
+        addrs,
+        job,
+        raw,
+        chunk_size,
+        cfg,
+        clock: cfg.clock(),
+        struck: &struck,
+        retries: &retries,
+        faults: &faults,
+    };
+
+    // Pass 1: every shard in parallel; each thread owns its shard's
+    // retry loop and parks its session between the passes.
+    let pass1: Vec<Result<(ShardSession, Vec<Vec<u32>>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let dispatch = &dispatch;
+                let expected = expected[i];
+                scope.spawn(move || dispatch.pass1_shard(i, shard, expected))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("pass-1 shard thread panicked")))
+            })
+            .collect()
+    });
+    let mut sessions = Vec::with_capacity(pass1.len());
+    let mut dumps = Vec::with_capacity(pass1.len());
+    for r in pass1 {
+        let (sess, cols) = r?;
+        sessions.push(sess);
+        dumps.push(cols);
     }
 
-    // gather sub-vocabularies, merge in shard order
+    // Gather sub-vocabularies, merge in shard order — deterministic no
+    // matter which worker served which shard attempt.
     let mut merged: Vec<crate::ops::HashVocab> =
         (0..job.schema.num_sparse).map(|_| Default::default()).collect();
-    for conn in conns.iter_mut() {
-        let (tag, payload) = protocol::read_frame(&mut conn.reader)?;
-        if tag == Tag::ErrorReply {
-            anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload));
-        }
-        anyhow::ensure!(tag == Tag::VocabDump, "expected VocabDump, got {tag:?}");
-        let cols = protocol::unpack_vocabs(&payload)?;
-        anyhow::ensure!(cols.len() == merged.len(), "worker vocab column mismatch");
+    for cols in dumps {
         use crate::ops::Vocab as _;
         for (dst, keys) in merged.iter_mut().zip(cols) {
             for k in keys {
@@ -124,48 +542,35 @@ pub fn run_cluster(
         .collect();
     let vocab_entries: usize = global.iter().map(|c| c.len()).sum();
 
-    // broadcast merged vocabularies + pass 2, collecting results per
-    // worker on a reader thread (streams overlap). The merged payload
-    // is serialized once — it can be many megabytes for large
-    // per-column vocabularies.
+    // Broadcast merged vocabularies + pass 2, again one thread per
+    // shard. The merged payload is serialized once — it can be many
+    // megabytes for large per-column vocabularies.
     let packed = protocol::pack_vocabs(&global);
-    let mut collectors = Vec::new();
-    for mut conn in conns {
-        protocol::write_frame(&mut conn.writer, Tag::VocabLoad, &packed)?;
-        let schema = job.schema;
-        let reader_handle = std::thread::spawn(move || -> Result<ProcessedColumns> {
-            let mut cols = ProcessedColumns::with_schema(schema);
-            loop {
-                let (tag, payload) = protocol::read_frame(&mut conn.reader)?;
-                match tag {
-                    Tag::ResultChunk => {
-                        for row in protocol::unpack_rows(&payload, schema)? {
-                            cols.push_row(&row);
-                        }
-                    }
-                    Tag::ResultEnd => return Ok(cols),
-                    Tag::ErrorReply => {
-                        anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload))
-                    }
-                    other => anyhow::bail!("unexpected {other:?} in pass 2"),
-                }
-            }
-        });
-        // keep writing on this thread
-        for chunk in raw[conn.shard.clone()].chunks(chunk_size.max(1)) {
-            protocol::write_frame(&mut conn.writer, Tag::Pass2Chunk, chunk)?;
-        }
-        protocol::write_frame(&mut conn.writer, Tag::Pass2End, &[])?;
-        use std::io::Write as _;
-        conn.writer.flush()?;
-        collectors.push(reader_handle);
-    }
+    let outputs: Vec<Result<ProcessedColumns>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .iter()
+            .zip(sessions)
+            .enumerate()
+            .map(|(i, (shard, sess))| {
+                let dispatch = &dispatch;
+                let packed = &packed;
+                let expected = expected[i];
+                scope.spawn(move || dispatch.pass2_shard(i, sess, packed, shard, expected))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("pass-2 shard thread panicked")))
+            })
+            .collect()
+    });
 
-    // concatenate shard outputs in order (the CFR step)
+    // Concatenate shard outputs in order (the CFR step).
     let mut processed = ProcessedColumns::with_schema(job.schema);
-    for h in collectors {
-        let part = h.join().map_err(|_| anyhow::anyhow!("collector panicked"))??;
-        processed.extend_from(&part);
+    for part in outputs {
+        processed.extend_from(&part?);
     }
     let rows = processed.num_rows() as u64;
     Ok(ClusterRun {
@@ -173,28 +578,52 @@ pub fn run_cluster(
         stats: RunStats { rows, vocab_entries: vocab_entries as u64 },
         workers: addrs.len(),
         wallclock: start.elapsed(),
+        retries: retries.load(Ordering::Acquire),
+        faults: faults.load(Ordering::Acquire),
     })
 }
 
-/// Spawn `n` loopback workers and run a sharded job against them.
+/// Spawn `n` loopback workers and run a sharded job against them. The
+/// workers run [`super::worker::serve_until`] accept loops — they
+/// survive failed sessions and serve retries — and are shut down
+/// (drained) when the run completes.
 pub fn run_cluster_loopback(
     n: usize,
     job: &Job,
     raw: &[u8],
     chunk_size: usize,
 ) -> Result<ClusterRun> {
+    run_cluster_loopback_cfg(n, job, raw, chunk_size, &NetConfig::default())
+}
+
+/// [`run_cluster_loopback`] with explicit fault-tolerance knobs.
+pub fn run_cluster_loopback_cfg(
+    n: usize,
+    job: &Job,
+    raw: &[u8],
+    chunk_size: usize,
+    cfg: &NetConfig,
+) -> Result<ClusterRun> {
     let mut addrs = Vec::new();
+    let mut shutdowns = Vec::new();
     let mut handles = Vec::new();
     for _ in 0..n.max(1) {
         let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
         addrs.push(listener.local_addr()?.to_string());
-        handles.push(std::thread::spawn(move || super::worker::serve_one(&listener)));
+        let shutdown = super::worker::ShutdownHandle::new(&listener)?;
+        shutdowns.push(shutdown.clone());
+        handles.push(std::thread::spawn(move || {
+            super::worker::serve_until(&listener, &shutdown, &super::worker::WorkerOptions::default())
+        }));
     }
-    let run = run_cluster(&addrs, job, raw, chunk_size)?;
+    let run = run_cluster_cfg(&addrs, job, raw, chunk_size, cfg);
+    for s in &shutdowns {
+        s.shutdown();
+    }
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
     }
-    Ok(run)
+    run
 }
 
 #[cfg(test)]
@@ -228,6 +657,7 @@ mod tests {
             let run = run_cluster_loopback(n, &job, &raw, 777).unwrap();
             assert_eq!(run.workers, n);
             assert_eq!(run.processed, want, "{n} workers must equal sequential scan");
+            assert_eq!((run.retries, run.faults), (0, 0), "clean run retries nothing");
         }
     }
 
@@ -265,13 +695,26 @@ mod tests {
         }
     }
 
+    /// More workers than rows: the leader must not dispatch empty
+    /// shards, and the output still equals the sequential scan.
+    #[test]
+    fn more_workers_than_rows_still_agrees() {
+        let ds = SynthDataset::generate(SynthConfig::small(3));
+        let m = Modulus::new(97);
+        let raw = utf8::encode_dataset(&ds);
+        let job = Job::dlrm(ds.schema(), m, WireFormat::Utf8);
+        let run = run_cluster_loopback(8, &job, &raw, 64).unwrap();
+        assert_eq!(run.stats.rows, 3);
+        assert_eq!(run.processed, reference(&ds, m));
+    }
+
     #[test]
     fn shards_cover_and_respect_rows() {
         let ds = SynthDataset::generate(SynthConfig::small(101));
         let raw = utf8::encode_dataset(&ds);
         for n in [1usize, 2, 5, 8] {
             let shards = shard_rows(&raw, ds.schema(), false, n);
-            assert_eq!(shards.len(), n);
+            assert!(!shards.is_empty() && shards.len() <= n);
             assert_eq!(shards[0].start, 0);
             assert_eq!(shards.last().unwrap().end, raw.len());
             for w in shards.windows(2) {
@@ -281,6 +724,72 @@ mod tests {
                     assert_eq!(raw[w[0].end - 1], b'\n');
                 }
             }
+        }
+    }
+
+    /// Property test over row counts × shard counts × formats ×
+    /// trailing-newline presence: shards are always contiguous,
+    /// non-overlapping, non-empty, fully covering, row-aligned, and
+    /// their expected-row counts sum to the input's row count.
+    #[test]
+    fn shard_rows_properties_hold_under_fuzz() {
+        let mut g = crate::util::prng::XorShift64::new(0xC1A0_5EED);
+        for case in 0..300 {
+            let rows = (g.next_u64() % 40) as usize;
+            let n = 1 + (g.next_u64() % 12) as usize;
+            let binary_fmt = g.next_u64() % 2 == 0;
+            let trailing_newline = g.next_u64() % 2 == 0;
+            let ds = SynthDataset::generate(SynthConfig::small(rows.max(1)));
+            let schema = ds.schema();
+            let mut raw = if binary_fmt {
+                binary::encode_dataset(&ds)
+            } else {
+                utf8::encode_dataset(&ds)
+            };
+            if rows == 0 {
+                raw.clear();
+            }
+            if !binary_fmt && !trailing_newline && raw.last() == Some(&b'\n') {
+                raw.pop(); // final row without its newline
+            }
+            let total_rows = if rows == 0 { 0 } else { ds.rows.len() } as u64;
+            let shards = shard_rows(&raw, schema, binary_fmt, n);
+
+            assert!(shards.len() <= n, "case {case}: {} shards for n={n}", shards.len());
+            assert!(shards.iter().all(|s| !s.is_empty()), "case {case}: empty shard");
+            if raw.is_empty() {
+                assert!(shards.is_empty(), "case {case}");
+                continue;
+            }
+            assert_eq!(shards[0].start, 0, "case {case}");
+            assert_eq!(shards.last().unwrap().end, raw.len(), "case {case}: full coverage");
+            for w in shards.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "case {case}: contiguous, non-overlapping");
+                if !binary_fmt {
+                    assert_eq!(raw[w[0].end - 1], b'\n', "case {case}: row-aligned cut");
+                }
+            }
+            let counted: u64 = shards
+                .iter()
+                .map(|s| expected_rows(&raw[s.clone()], schema, binary_fmt))
+                .sum();
+            assert_eq!(counted, total_rows, "case {case}: row counts partition the input");
+        }
+    }
+
+    #[test]
+    fn shard_exactly_at_raw_len_and_no_trailing_newline() {
+        // A cut target landing past the last newline must clamp to
+        // raw.len() exactly once, and the partial final row stays in
+        // the last shard.
+        let raw = b"1,2,3\n4,5,6\n7,8,9"; // no trailing newline
+        let schema = crate::data::Schema::new(1, 1);
+        for n in [2usize, 3, 5, 17] {
+            let shards = shard_rows(raw, schema, false, n);
+            assert_eq!(shards.last().unwrap().end, raw.len());
+            assert!(shards.iter().all(|s| !s.is_empty()));
+            let rows: u64 = shards.iter().map(|s| expected_rows(&raw[s.clone()], schema, false)).sum();
+            assert_eq!(rows, 3, "n={n}");
         }
     }
 

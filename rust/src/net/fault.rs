@@ -1,0 +1,464 @@
+//! Deterministic fault injection at frame granularity — the chaos
+//! harness behind `tests/chaos.rs`.
+//!
+//! A [`FaultPlan`] is a script of [`FaultRule`]s per lane (`rx` = frames
+//! the wrapped endpoint *reads*, `tx` = frames it *writes*). Wrapping a
+//! reader/writer pair with [`FaultPlan::wrap`] yields I/O objects that
+//! speak plain `Read`/`Write` — the session code under test is the real
+//! production code, byte for byte — but that drop, corrupt, truncate,
+//! delay or sever whole protocol frames at scripted indices.
+//!
+//! Determinism is the point: a plan is data, [`FaultPlan::seeded`]
+//! derives one from a PRNG seed, and replaying the same plan against the
+//! same job must produce the same outcome (the chaos suite pins this).
+//! Faults that kill the connection poison *both* lanes through a shared
+//! flag, so a "crashed" worker neither reads nor writes again — like a
+//! real process death, the peer observes reset/EOF, never a half-alive
+//! socket.
+
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::protocol::{FRAME_HEADER_BYTES, MAX_FRAME};
+use crate::util::prng::XorShift64;
+
+/// One fault class, applied to one whole frame as it crosses the wrap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Swallow the frame entirely: the session never sees it. Models a
+    /// buggy peer that skips a send — detected downstream by row-count
+    /// verification, never by the transport.
+    DropFrame,
+    /// XOR one byte of the frame (payload byte `offset % len`, or the
+    /// tag byte for empty payloads). Detected by the frame checksum.
+    Corrupt { offset: u64, xor: u8 },
+    /// Forward only the first `keep` bytes of the frame, then sever the
+    /// connection — a peer dying mid-send.
+    Truncate { keep: u64 },
+    /// Sleep before forwarding the frame — a wedged or overloaded peer.
+    /// With a delay beyond the socket deadline this is the "hung worker"
+    /// fault; below it, jitter the run must absorb.
+    Delay { dur: Duration },
+    /// Sever the connection at this frame boundary (crash).
+    Close,
+}
+
+/// A fault applied at frame index `frame` (0-based, per lane).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultRule {
+    pub frame: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic per-connection fault script.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Faults on frames the wrapped endpoint reads.
+    pub rx: Vec<FaultRule>,
+    /// Faults on frames the wrapped endpoint writes.
+    pub tx: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// The empty plan: pass-through.
+    pub fn clean() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.rx.is_empty() && self.tx.is_empty()
+    }
+
+    /// Crash (sever both lanes) when the endpoint has *read* `n` frames.
+    pub fn crash_after_rx(n: u64) -> FaultPlan {
+        FaultPlan { rx: vec![FaultRule { frame: n, kind: FaultKind::Close }], tx: vec![] }
+    }
+
+    /// Crash when the endpoint is about to *write* its `n`-th frame.
+    pub fn crash_after_tx(n: u64) -> FaultPlan {
+        FaultPlan { tx: vec![FaultRule { frame: n, kind: FaultKind::Close }], rx: vec![] }
+    }
+
+    /// Add a rule on the read lane.
+    pub fn with_rx(mut self, frame: u64, kind: FaultKind) -> FaultPlan {
+        self.rx.push(FaultRule { frame, kind });
+        self
+    }
+
+    /// Add a rule on the write lane.
+    pub fn with_tx(mut self, frame: u64, kind: FaultKind) -> FaultPlan {
+        self.tx.push(FaultRule { frame, kind });
+        self
+    }
+
+    /// Derive a random plan from `seed`: one or two faults at early
+    /// frame indices, mixing every class. Same seed → same plan → same
+    /// run outcome; the chaos fuzz sweep iterates seeds.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        let mut g = XorShift64::new(seed);
+        let mut plan = FaultPlan::default();
+        let nfaults = 1 + (g.next_u64() % 2);
+        for _ in 0..nfaults {
+            let frame = g.next_u64() % 8;
+            let kind = match g.next_u64() % 5 {
+                0 => FaultKind::DropFrame,
+                1 => FaultKind::Corrupt { offset: g.next_u64(), xor: (g.next_u64() % 255) as u8 + 1 },
+                2 => FaultKind::Truncate { keep: g.next_u64() % (FRAME_HEADER_BYTES as u64 + 4) },
+                3 => FaultKind::Delay { dur: Duration::from_millis(g.next_u64() % 20) },
+                _ => FaultKind::Close,
+            };
+            if g.next_u64() % 2 == 0 {
+                plan.rx.push(FaultRule { frame, kind });
+            } else {
+                plan.tx.push(FaultRule { frame, kind });
+            }
+        }
+        plan
+    }
+
+    /// Wrap a reader/writer pair. Returns the faulty pair plus a
+    /// [`FaultHooks`] handle for asserting how many faults actually
+    /// fired (a plan whose frame indices are never reached injects
+    /// nothing).
+    pub fn wrap<R: Read, W: Write>(
+        &self,
+        reader: R,
+        writer: W,
+    ) -> (FaultyReader<R>, FaultyWriter<W>, FaultHooks) {
+        let hooks = FaultHooks {
+            dead: Arc::new(AtomicBool::new(false)),
+            injected: Arc::new(AtomicU64::new(0)),
+        };
+        let r = FaultyReader {
+            inner: reader,
+            rules: self.rx.clone(),
+            frame: 0,
+            out: Vec::new(),
+            pos: 0,
+            hooks: hooks.clone(),
+        };
+        let w = FaultyWriter {
+            inner: writer,
+            rules: self.tx.clone(),
+            frame: 0,
+            pending: Vec::new(),
+            hooks: hooks.clone(),
+        };
+        (r, w, hooks)
+    }
+}
+
+/// Shared observability for one wrapped connection.
+#[derive(Debug, Clone)]
+pub struct FaultHooks {
+    dead: Arc<AtomicBool>,
+    injected: Arc<AtomicU64>,
+}
+
+impl FaultHooks {
+    /// Faults that actually fired on this connection.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Acquire)
+    }
+
+    /// Whether a Close/Truncate fault severed the connection.
+    pub fn severed(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    fn fire(&self) {
+        self.injected.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn sever(&self) -> std::io::Error {
+        self.dead.store(true, Ordering::Release);
+        std::io::Error::new(std::io::ErrorKind::ConnectionReset, "injected fault: connection severed")
+    }
+
+    fn dead_err(&self) -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::ConnectionReset, "injected fault: connection severed")
+    }
+}
+
+fn rule_for(rules: &[FaultRule], frame: u64) -> Option<FaultKind> {
+    rules.iter().find(|r| r.frame == frame).map(|r| r.kind)
+}
+
+/// Frame-granular fault injection on the read side.
+#[derive(Debug)]
+pub struct FaultyReader<R> {
+    inner: R,
+    rules: Vec<FaultRule>,
+    frame: u64,
+    out: Vec<u8>,
+    pos: usize,
+    hooks: FaultHooks,
+}
+
+impl<R: Read> FaultyReader<R> {
+    /// Pull the next frame from the inner reader and stage its bytes
+    /// (after applying any fault). Returns false on clean EOF.
+    fn fetch_frame(&mut self) -> std::io::Result<bool> {
+        loop {
+            let mut header = [0u8; FRAME_HEADER_BYTES];
+            // Distinguish clean EOF (no header byte) from mid-frame EOF.
+            match self.inner.read(&mut header[..1])? {
+                0 => return Ok(false),
+                _ => self.inner.read_exact(&mut header[1..])?,
+            }
+            let len = u64::from_le_bytes([
+                header[1], header[2], header[3], header[4],
+                header[5], header[6], header[7], header[8],
+            ]);
+            if len > MAX_FRAME {
+                // Hand the hostile header through untouched — the frame
+                // cap in read_frame owns this case.
+                self.out = header.to_vec();
+                self.pos = 0;
+                return Ok(true);
+            }
+            let mut frame = vec![0u8; FRAME_HEADER_BYTES + len as usize];
+            frame[..FRAME_HEADER_BYTES].copy_from_slice(&header);
+            self.inner.read_exact(&mut frame[FRAME_HEADER_BYTES..])?;
+            let rule = rule_for(&self.rules, self.frame);
+            self.frame += 1;
+            match rule {
+                None => {}
+                Some(FaultKind::Delay { dur }) => {
+                    self.hooks.fire();
+                    std::thread::sleep(dur);
+                }
+                Some(FaultKind::DropFrame) => {
+                    self.hooks.fire();
+                    continue; // swallow, fetch the next frame
+                }
+                Some(FaultKind::Corrupt { offset, xor }) => {
+                    self.hooks.fire();
+                    let at = if len == 0 { 0 } else { FRAME_HEADER_BYTES + (offset % len) as usize };
+                    frame[at] ^= xor.max(1);
+                }
+                Some(FaultKind::Truncate { keep }) => {
+                    self.hooks.fire();
+                    frame.truncate((keep as usize).min(frame.len()));
+                    self.hooks.sever();
+                }
+                Some(FaultKind::Close) => {
+                    self.hooks.fire();
+                    return Err(self.hooks.sever());
+                }
+            }
+            self.out = frame;
+            self.pos = 0;
+            return Ok(true);
+        }
+    }
+}
+
+impl<R: Read> Read for FaultyReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos == self.out.len() {
+            if self.hooks.severed() {
+                return Err(self.hooks.dead_err());
+            }
+            if !self.fetch_frame()? {
+                return Ok(0);
+            }
+            if self.out.is_empty() {
+                // Truncate-to-zero: sever without delivering anything.
+                return Err(self.hooks.dead_err());
+            }
+        }
+        let n = buf.len().min(self.out.len() - self.pos);
+        buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Frame-granular fault injection on the write side. Bytes buffer until
+/// a whole frame is assembled, then the frame is forwarded (or dropped,
+/// corrupted, truncated, delayed) in one piece.
+#[derive(Debug)]
+pub struct FaultyWriter<W> {
+    inner: W,
+    rules: Vec<FaultRule>,
+    frame: u64,
+    pending: Vec<u8>,
+    hooks: FaultHooks,
+}
+
+impl<W: Write> FaultyWriter<W> {
+    fn pump(&mut self) -> std::io::Result<()> {
+        while self.pending.len() >= FRAME_HEADER_BYTES {
+            let len = u64::from_le_bytes([
+                self.pending[1], self.pending[2], self.pending[3], self.pending[4],
+                self.pending[5], self.pending[6], self.pending[7], self.pending[8],
+            ]);
+            if len > MAX_FRAME {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("fault wrapper saw a {len}-byte frame; refusing to buffer it"),
+                ));
+            }
+            let total = FRAME_HEADER_BYTES + len as usize;
+            if self.pending.len() < total {
+                return Ok(()); // rest of the frame is still being written
+            }
+            let rest = self.pending.split_off(total);
+            let mut frame = std::mem::replace(&mut self.pending, rest);
+            let rule = rule_for(&self.rules, self.frame);
+            self.frame += 1;
+            match rule {
+                None => self.inner.write_all(&frame)?,
+                Some(FaultKind::Delay { dur }) => {
+                    self.hooks.fire();
+                    std::thread::sleep(dur);
+                    self.inner.write_all(&frame)?;
+                }
+                Some(FaultKind::DropFrame) => self.hooks.fire(),
+                Some(FaultKind::Corrupt { offset, xor }) => {
+                    self.hooks.fire();
+                    let at = if len == 0 { 0 } else { FRAME_HEADER_BYTES + (offset % len) as usize };
+                    frame[at] ^= xor.max(1);
+                    self.inner.write_all(&frame)?;
+                }
+                Some(FaultKind::Truncate { keep }) => {
+                    self.hooks.fire();
+                    frame.truncate((keep as usize).min(frame.len()));
+                    self.inner.write_all(&frame)?;
+                    let _ = self.inner.flush();
+                    return Err(self.hooks.sever());
+                }
+                Some(FaultKind::Close) => {
+                    self.hooks.fire();
+                    let _ = self.inner.flush();
+                    return Err(self.hooks.sever());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<W: Write> Write for FaultyWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.hooks.severed() {
+            return Err(self.hooks.dead_err());
+        }
+        self.pending.extend_from_slice(buf);
+        self.pump()?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.hooks.severed() {
+            return Err(self.hooks.dead_err());
+        }
+        self.pump()?;
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::protocol::{read_frame, write_frame, NetError, Tag};
+
+    fn roundtrip_with(plan: &FaultPlan, frames: &[(Tag, &[u8])]) -> (Vec<crate::Result<(Tag, Vec<u8>)>>, FaultHooks) {
+        // Write through a faulty writer into a buffer, then read the
+        // buffer back through a faulty *clean* reader (tx-lane tests),
+        // or vice versa.
+        let mut wire = Vec::new();
+        let hooks = {
+            let (_r, mut w, hooks) = plan.wrap(std::io::empty(), &mut wire);
+            for (tag, payload) in frames {
+                if write_frame(&mut w, *tag, payload).is_err() {
+                    break;
+                }
+            }
+            use std::io::Write as _;
+            let _ = w.flush();
+            hooks
+        };
+        let mut out = Vec::new();
+        let mut r = &wire[..];
+        for _ in 0..frames.len() {
+            out.push(read_frame(&mut r));
+        }
+        (out, hooks)
+    }
+
+    #[test]
+    fn clean_plan_is_transparent() {
+        let frames: &[(Tag, &[u8])] = &[(Tag::Job, b"abc"), (Tag::Pass1Chunk, b""), (Tag::Pass1End, b"xyz")];
+        let (got, hooks) = roundtrip_with(&FaultPlan::clean(), frames);
+        for ((tag, payload), res) in frames.iter().zip(got) {
+            let (t, p) = res.unwrap();
+            assert_eq!((t, p.as_slice()), (*tag, *payload));
+        }
+        assert_eq!(hooks.injected(), 0);
+        assert!(!hooks.severed());
+    }
+
+    #[test]
+    fn drop_frame_swallows_exactly_one() {
+        let frames: &[(Tag, &[u8])] = &[(Tag::Job, b"a"), (Tag::Pass1Chunk, b"b"), (Tag::Pass1End, b"c")];
+        let plan = FaultPlan::clean().with_tx(1, FaultKind::DropFrame);
+        let (got, hooks) = roundtrip_with(&plan, frames);
+        assert_eq!(hooks.injected(), 1);
+        let (t0, p0) = got[0].as_ref().unwrap().clone();
+        assert_eq!((t0, p0.as_slice()), (Tag::Job, &b"a"[..]));
+        let (t1, p1) = got[1].as_ref().unwrap().clone();
+        assert_eq!((t1, p1.as_slice()), (Tag::Pass1End, &b"c"[..]), "middle frame dropped");
+        assert!(got[2].is_err(), "wire exhausted");
+    }
+
+    #[test]
+    fn corrupt_is_caught_by_checksum() {
+        let plan = FaultPlan::clean().with_tx(0, FaultKind::Corrupt { offset: 2, xor: 0x80 });
+        let (got, hooks) = roundtrip_with(&plan, &[(Tag::Job, b"payload")]);
+        assert_eq!(hooks.injected(), 1);
+        let err = got[0].as_ref().unwrap_err();
+        assert!(matches!(NetError::of(err), Some(NetError::Malformed { .. })), "{err:#}");
+    }
+
+    #[test]
+    fn truncate_and_close_sever_the_lane() {
+        for kind in [FaultKind::Truncate { keep: 5 }, FaultKind::Close] {
+            let plan = FaultPlan::clean().with_tx(0, kind);
+            let (got, hooks) = roundtrip_with(&plan, &[(Tag::Job, b"payload"), (Tag::Pass1End, b"")]);
+            assert!(hooks.severed());
+            assert!(got[0].as_ref().is_err(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn close_on_rx_poisons_reads() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, Tag::Job, b"abc").unwrap();
+        write_frame(&mut wire, Tag::Pass1End, b"").unwrap();
+        let plan = FaultPlan::crash_after_rx(1);
+        let (mut r, _w, hooks) = plan.wrap(&wire[..], std::io::sink());
+        let (t, p) = read_frame(&mut r).unwrap();
+        assert_eq!((t, p.as_slice()), (Tag::Job, &b"abc"[..]));
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(matches!(NetError::of(&err), Some(NetError::PeerGone { .. })), "{err:#}");
+        assert!(hooks.severed());
+        assert!(read_frame(&mut r).is_err(), "stays dead");
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_varied() {
+        let mut shapes = std::collections::HashSet::new();
+        for seed in 0..64 {
+            let a = FaultPlan::seeded(seed);
+            let b = FaultPlan::seeded(seed);
+            assert_eq!(a, b, "seed {seed} must be reproducible");
+            assert!(!a.is_clean());
+            shapes.insert(format!("{a:?}"));
+        }
+        assert!(shapes.len() > 32, "seeds should explore distinct plans, got {}", shapes.len());
+    }
+}

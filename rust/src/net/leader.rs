@@ -3,15 +3,24 @@
 //! single-node default) the dataset crosses the wire **once** and the
 //! source never rewinds; under two-pass it is streamed twice (the two
 //! vocabulary loops), which the cluster leader-merge path requires.
+//!
+//! Failure posture: every socket carries the [`NetConfig`] I/O deadline
+//! and the whole exchange runs under the job's wall-clock budget
+//! ([`JobClock`]) — a dead or wedged worker surfaces as a typed
+//! [`NetError`] (`Timeout` / `PeerGone`), and a worker-reported
+//! `ErrorReply` as [`NetError::JobFailed`] carrying the worker's
+//! address and its own reason string. Single-worker runs don't retry
+//! (there is no second worker to rotate to) — split-level retry lives
+//! in [`super::cluster`].
 
-use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use crate::data::row::ProcessedColumns;
 use crate::pipeline::{ExecStrategy, MemorySource, Source};
 use crate::Result;
 
-use super::protocol::{self, Job, RunStats, Tag};
+use super::protocol::{self, Job, NetError, RunStats, Tag};
+use super::{JobClock, NetConfig};
 #[cfg(test)]
 use super::stream::WireFormat;
 
@@ -38,6 +47,31 @@ pub fn run_leader(
     run_leader_source(addr, job, &mut source, chunk_size, strategy)
 }
 
+/// [`run_leader`] with explicit fault-tolerance knobs.
+pub fn run_leader_cfg(
+    addr: &str,
+    job: &Job,
+    raw: &[u8],
+    chunk_size: usize,
+    strategy: ExecStrategy,
+    cfg: &NetConfig,
+) -> Result<LeaderRun> {
+    let mut source = MemorySource::new(raw, job.format.into());
+    run_leader_source_cfg(addr, job, &mut source, chunk_size, strategy, cfg)
+}
+
+/// Stream a [`Source`] to the worker at `addr` and collect results
+/// under the default [`NetConfig`] (30 s I/O deadline, no job budget).
+pub fn run_leader_source(
+    addr: &str,
+    job: &Job,
+    source: &mut dyn Source,
+    chunk_size: usize,
+    strategy: ExecStrategy,
+) -> Result<LeaderRun> {
+    run_leader_source_cfg(addr, job, source, chunk_size, strategy, &NetConfig::default())
+}
+
 /// Stream a [`Source`] to the worker at `addr` and collect results. The
 /// leader holds one chunk at a time — submitting a file-backed dataset
 /// never loads it into memory.
@@ -50,13 +84,17 @@ pub fn run_leader(
 /// Emitting reads interleave with writes: a reader thread drains
 /// ResultChunks while the main thread keeps sending, so the socket can't
 /// deadlock on full buffers and the measured time reflects true
-/// streaming overlap.
-pub fn run_leader_source(
+/// streaming overlap. If the send path and the collector both fail, the
+/// collector's error wins when it carries the worker's own
+/// [`NetError::JobFailed`] reason — a send-side broken pipe is usually
+/// just the echo of the worker aborting the session.
+pub fn run_leader_source_cfg(
     addr: &str,
     job: &Job,
     source: &mut dyn Source,
     chunk_size: usize,
     strategy: ExecStrategy,
+    cfg: &NetConfig,
 ) -> Result<LeaderRun> {
     anyhow::ensure!(
         source.format() == job.format.into(),
@@ -71,8 +109,8 @@ pub fn run_leader_source(
         );
     }
     let start = Instant::now();
-    let stream = TcpStream::connect(addr)?;
-    stream.set_nodelay(true)?;
+    let clock = cfg.clock();
+    let stream = super::connect(addr, cfg.io_timeout, &clock)?;
     let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream.try_clone()?);
 
     protocol::write_frame(&mut writer, Tag::Job, &job.encode())?;
@@ -83,6 +121,7 @@ pub fn run_leader_source(
     if strategy == ExecStrategy::TwoPass {
         // Pass 1 produces no results, so no reader is needed yet.
         while source.next_chunk(chunk_size.max(1), &mut chunk)? {
+            clock.check("sending pass 1")?;
             protocol::write_frame(&mut writer, Tag::Pass1Chunk, &chunk)?;
         }
         protocol::write_frame(&mut writer, Tag::Pass1End, &[])?;
@@ -92,10 +131,12 @@ pub fn run_leader_source(
     // Reader thread: collect results while the emitting pass streams out.
     let schema = job.schema;
     let reader_stream = stream.try_clone()?;
+    let worker_addr = addr.to_string();
     let collector = std::thread::spawn(move || -> Result<(ProcessedColumns, RunStats)> {
         let mut reader = std::io::BufReader::with_capacity(1 << 20, reader_stream);
         let mut cols = ProcessedColumns::with_schema(schema);
         loop {
+            clock.check("collecting results")?;
             let (tag, payload) = protocol::read_frame(&mut reader)?;
             match tag {
                 Tag::ResultChunk => {
@@ -108,27 +149,49 @@ pub fn run_leader_source(
                     return Ok((cols, stats));
                 }
                 Tag::ErrorReply => {
-                    anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload))
+                    anyhow::bail!(NetError::JobFailed {
+                        worker: worker_addr,
+                        reason: String::from_utf8_lossy(&payload).into_owned(),
+                    })
                 }
-                other => anyhow::bail!("unexpected frame {other:?} from worker"),
+                other => anyhow::bail!(NetError::Malformed {
+                    what: format!("unexpected frame {other:?} from worker"),
+                }),
             }
         }
     });
 
-    let (chunk_tag, end_tag) = match strategy {
-        ExecStrategy::Fused => (Tag::FusedChunk, Tag::FusedEnd),
-        ExecStrategy::TwoPass => (Tag::Pass2Chunk, Tag::Pass2End),
-    };
-    while source.next_chunk(chunk_size.max(1), &mut chunk)? {
-        protocol::write_frame(&mut writer, chunk_tag, &chunk)?;
-    }
-    protocol::write_frame(&mut writer, end_tag, &[])?;
-    use std::io::Write as _;
-    writer.flush()?;
+    let sent = (|| -> Result<()> {
+        let (chunk_tag, end_tag) = match strategy {
+            ExecStrategy::Fused => (Tag::FusedChunk, Tag::FusedEnd),
+            ExecStrategy::TwoPass => (Tag::Pass2Chunk, Tag::Pass2End),
+        };
+        while source.next_chunk(chunk_size.max(1), &mut chunk)? {
+            clock.check("sending the emitting pass")?;
+            protocol::write_frame(&mut writer, chunk_tag, &chunk)?;
+        }
+        protocol::write_frame(&mut writer, end_tag, &[])?;
+        use std::io::Write as _;
+        writer.flush()?;
+        Ok(())
+    })();
 
-    let (processed, stats) = collector
+    // Join the collector even when the send path failed: a broken send
+    // is usually the echo of a worker abort, and the collector holds
+    // the worker's ErrorReply (the root cause) in that case.
+    let collected = collector
         .join()
-        .map_err(|_| anyhow::anyhow!("collector thread panicked"))??;
+        .map_err(|_| anyhow::anyhow!("collector thread panicked"))?;
+    let (processed, stats) = match (sent, collected) {
+        (_, Ok(out)) => out,
+        (Err(send_err), Err(collect_err)) => {
+            if matches!(NetError::of(&collect_err), Some(NetError::JobFailed { .. })) {
+                return Err(collect_err);
+            }
+            return Err(send_err);
+        }
+        (Ok(()), Err(collect_err)) => return Err(collect_err),
+    };
     Ok(LeaderRun { processed, stats, wallclock: start.elapsed() })
 }
 
@@ -237,5 +300,54 @@ mod tests {
         let a = run_loopback(&job, &raw, 7).unwrap();
         let b = run_loopback(&job, &raw, 64 * 1024).unwrap();
         assert_eq!(a.processed, b.processed);
+    }
+
+    /// A worker-side failure must surface as a typed
+    /// [`NetError::JobFailed`] carrying the worker's address and the
+    /// worker's own reason — not a generic string (PR 6 satellite,
+    /// strengthened to assert *content*).
+    #[test]
+    fn worker_error_reply_surfaces_as_typed_job_failed() {
+        let ds = SynthDataset::generate(SynthConfig::small(10));
+        let raw = utf8::encode_dataset(&ds);
+        // A spec whose selector is outside the schema: the worker's
+        // planning step rejects it after the Job frame.
+        let spec =
+            crate::ops::PipelineSpec::parse("sparse[40]: modulus:7|genvocab|applyvocab").unwrap();
+        let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+        let err = run_loopback(&job, &raw, 1024).unwrap_err();
+        match NetError::of(&err) {
+            Some(NetError::JobFailed { worker, reason }) => {
+                assert!(worker.starts_with("127.0.0.1:"), "worker address, got {worker}");
+                assert!(
+                    reason.contains("selector") || reason.contains("sparse"),
+                    "worker's own planning error must travel: {reason}"
+                );
+            }
+            other => panic!("expected JobFailed, got {other:?}: {err:#}"),
+        }
+    }
+
+    /// A deadline of ~zero must fail fast with a typed Timeout, not
+    /// hang — the whole point of the budget.
+    #[test]
+    fn exhausted_job_deadline_is_a_typed_timeout() {
+        let ds = SynthDataset::generate(SynthConfig::small(10));
+        let raw = utf8::encode_dataset(&ds);
+        let job = Job::dlrm(ds.schema(), Modulus::new(97), WireFormat::Utf8);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Nobody accepts: with an (effectively) expired budget the
+        // connect must be refused by the clock before it blocks.
+        let cfg = NetConfig { job_deadline: Some(Duration::ZERO), ..NetConfig::default() };
+        let err = run_leader_cfg(
+            &addr.to_string(), &job, &raw, 1024, ExecStrategy::Fused, &cfg,
+        )
+        .unwrap_err();
+        assert!(
+            matches!(NetError::of(&err), Some(NetError::Timeout { .. })),
+            "{err:#}"
+        );
+        drop(listener);
     }
 }

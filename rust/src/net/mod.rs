@@ -22,19 +22,171 @@
 //! * [`serve`] — online serving: small request/response batches against
 //!   a frozen vocabulary artifact, with admission control and latency
 //!   percentiles ([`serve::ServeReport`]).
+//! * [`fault`] — the deterministic fault-injection harness: a seedable
+//!   [`FaultPlan`] (drop/close/truncate/delay/corrupt at frame
+//!   granularity) wrapped behind any reader/writer pair, driving the
+//!   chaos suite that proves the retry/deadline machinery.
+//!
+//! Fault model: every socket carries read/write deadlines
+//! ([`NetConfig`]), every job a wall-clock budget ([`JobClock`]), and
+//! every failure a typed class ([`NetError`]). The cluster re-dispatches
+//! failed shards to surviving workers with capped exponential backoff;
+//! per-shard row counts and frame checksums turn silent corruption into
+//! typed, retryable errors.
 //!
 //! Functional times on loopback are measured; the 100 Gbps figure comes
 //! from [`crate::accel::network`]'s line-rate model (tagged `sim`).
 
 pub mod cluster;
+pub mod fault;
 pub mod leader;
 pub mod protocol;
 pub mod serve;
 pub mod stream;
 pub mod worker;
 
-pub use cluster::{run_cluster, run_cluster_loopback};
-pub use leader::{run_leader, run_leader_source};
+pub use cluster::{run_cluster, run_cluster_cfg, run_cluster_loopback};
+pub use fault::{FaultKind, FaultPlan};
+pub use leader::{run_leader, run_leader_source, run_leader_source_cfg};
+pub use protocol::NetError;
 pub use serve::{ServeClient, ServeJob, ServeReport, ServeResponse, ServeStatus};
 pub use stream::StreamingPreprocessor;
-pub use worker::{serve_forever, serve_one};
+pub use worker::{serve_forever, serve_one, serve_until, ShutdownHandle, WorkerOptions};
+
+use crate::Result;
+use std::time::{Duration, Instant};
+
+/// Fault-tolerance knobs shared by every leader-side net path:
+/// per-socket I/O deadlines, a whole-job wall-clock budget, and the
+/// capped-exponential-backoff retry policy the cluster's split-level
+/// re-dispatch and the serve client's overload handling follow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetConfig {
+    /// Read/write timeout applied to every leader↔worker and serve
+    /// socket. A blocked read or write past this surfaces as
+    /// [`NetError::Timeout`]. `None` = block forever (opt-in only).
+    pub io_timeout: Option<Duration>,
+    /// Wall-clock budget for one whole job (all passes, all retries).
+    /// Checked between frames and before every retry/backoff sleep, so
+    /// a run errors out no later than roughly `job_deadline +
+    /// io_timeout`. `None` = unbounded.
+    pub job_deadline: Option<Duration>,
+    /// Re-dispatch attempts per shard (or serve request) *beyond* the
+    /// first try. 0 = fail on the first error.
+    pub retries: u32,
+    /// Base backoff before a retry; doubles per attempt.
+    pub backoff: Duration,
+    /// Cap on the doubled backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            io_timeout: Some(Duration::from_secs(30)),
+            job_deadline: None,
+            retries: 2,
+            backoff: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+        }
+    }
+}
+
+impl NetConfig {
+    /// Start this job's deadline clock.
+    pub fn clock(&self) -> JobClock {
+        JobClock { start: Instant::now(), budget: self.job_deadline }
+    }
+
+    /// Backoff before retry attempt `attempt` (1-based): capped
+    /// exponential, `backoff * 2^(attempt-1)`.
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        let exp = self.backoff.saturating_mul(1u32 << attempt.saturating_sub(1).min(16));
+        exp.min(self.backoff_cap)
+    }
+}
+
+/// The per-job wall-clock budget, threaded through every blocking step
+/// of a run so no socket wait or backoff sleep can outlive the job.
+#[derive(Debug, Clone, Copy)]
+pub struct JobClock {
+    start: Instant,
+    budget: Option<Duration>,
+}
+
+impl JobClock {
+    /// A clock with no budget (never expires).
+    pub fn unbounded() -> JobClock {
+        JobClock { start: Instant::now(), budget: None }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Remaining budget; `None` = unbounded, `Some(0)` = expired.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.budget.map(|b| b.saturating_sub(self.start.elapsed()))
+    }
+
+    /// Error with [`NetError::Timeout`] once the budget is spent.
+    pub fn check(&self, what: &str) -> Result<()> {
+        if self.remaining() == Some(Duration::ZERO) {
+            anyhow::bail!(NetError::Timeout {
+                what: format!("job deadline exceeded during {what}"),
+            });
+        }
+        Ok(())
+    }
+
+    /// The socket timeout to arm right now: the smaller of the
+    /// configured I/O timeout and what's left of the job budget (a
+    /// socket is never allowed to block past the job's deadline).
+    pub fn io_timeout(&self, io: Option<Duration>) -> Option<Duration> {
+        match (io, self.remaining()) {
+            (Some(io), Some(rem)) => Some(io.min(rem)),
+            (Some(io), None) => Some(io),
+            (None, rem) => rem,
+        }
+        // set_read_timeout(Some(ZERO)) is an error; round up to 1ms so
+        // an expired budget still arms a (immediately-firing) timeout.
+        .map(|d| d.max(Duration::from_millis(1)))
+    }
+
+    /// Sleep `d`, clipped so the sleep cannot outlive the budget.
+    pub fn sleep(&self, d: Duration) {
+        let d = match self.remaining() {
+            Some(rem) => d.min(rem),
+            None => d,
+        };
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+/// Connect with the clock's deadline and arm both socket timeouts —
+/// the one entry point every leader-side connection goes through.
+/// Refused/unreachable classifies as [`NetError::PeerGone`], an expired
+/// connect as [`NetError::Timeout`].
+pub(crate) fn connect(addr: &str, io: Option<Duration>, clock: &JobClock) -> Result<std::net::TcpStream> {
+    use std::net::{TcpStream, ToSocketAddrs};
+    clock.check(&format!("connect to {addr}"))?;
+    let timeout = clock.io_timeout(io);
+    let stream = match timeout {
+        Some(t) => {
+            let sock = addr
+                .to_socket_addrs()
+                .map_err(|e| NetError::from_io(&format!("resolving {addr}"), e))?
+                .next()
+                .ok_or_else(|| NetError::Malformed { what: format!("{addr} resolves to nothing") })?;
+            TcpStream::connect_timeout(&sock, t)
+        }
+        None => TcpStream::connect(addr),
+    }
+    .map_err(|e| NetError::from_io(&format!("connecting to {addr}"), e))?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    Ok(stream)
+}

@@ -1,8 +1,14 @@
-//! Wire protocol: length-prefixed tagged frames over TCP.
+//! Wire protocol: length-prefixed, checksummed tagged frames over TCP.
 //!
 //! ```text
-//! frame := tag:u8 len:u64le payload[len]
+//! frame := tag:u8 len:u64le sum:u32le payload[len]
 //! ```
+//!
+//! `sum` is a word-folded checksum of the tag and payload
+//! ([`frame_sum`]): a frame corrupted in flight (or by a buggy peer)
+//! surfaces as a typed [`NetError::Malformed`] at [`read_frame`] instead
+//! of silently poisoning vocabularies or result rows downstream — the
+//! property the chaos suite's corrupt-frame faults pin.
 //!
 //! Leader → worker, two-pass protocol: `Job`, `Pass1Chunk`*, `Pass1End`,
 //! `Pass2Chunk`*, `Pass2End`. Fused single-pass protocol: `Job`,
@@ -13,6 +19,11 @@
 //! the job header — the first data frame picks the protocol, so old
 //! leaders keep working and the cluster leader-merge path simply keeps
 //! sending pass frames.
+//!
+//! I/O errors are classified into the [`NetError`] taxonomy at this
+//! layer, so every caller up the stack (leader, cluster retry loop,
+//! serve client) can distinguish retryable failures (timeout, peer
+//! gone, overload) from fatal ones without string matching.
 
 use crate::data::row::{ProcessedColumns, ProcessedRow};
 use crate::data::Schema;
@@ -21,6 +32,86 @@ use crate::Result;
 use std::io::{Read, Write};
 
 use super::stream::WireFormat;
+
+// ---------------------------------------------------------------------
+// Typed error taxonomy
+// ---------------------------------------------------------------------
+
+/// Typed network/cluster failure taxonomy. Every failure on the net
+/// paths is classified into one of these variants (carried inside
+/// `anyhow::Error`; recover it with [`NetError::of`]), replacing the
+/// old ad-hoc `bail!` strings so callers can tell retryable conditions
+/// from fatal ones.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetError {
+    /// An I/O deadline expired: a socket read/write timed out, or the
+    /// per-job wall-clock budget ran out.
+    Timeout { what: String },
+    /// The peer vanished: connection refused/reset/aborted, broken
+    /// pipe, or an unexpected EOF mid-frame.
+    PeerGone { what: String },
+    /// The bytes on the wire are wrong: unknown tag, frame over the
+    /// size cap, checksum mismatch, or a payload that fails to decode.
+    Malformed { what: String },
+    /// The serving worker's admission control refused the request;
+    /// retry with backoff.
+    Overloaded,
+    /// The worker executed the session and reported an application
+    /// error (its `ErrorReply` message is in `reason`).
+    JobFailed { worker: String, reason: String },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Timeout { what } => write!(f, "timeout: {what}"),
+            NetError::PeerGone { what } => write!(f, "peer gone: {what}"),
+            NetError::Malformed { what } => write!(f, "malformed: {what}"),
+            NetError::Overloaded => write!(f, "overloaded: admission control refused the request"),
+            NetError::JobFailed { worker, reason } => {
+                write!(f, "job failed on worker {worker}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl NetError {
+    /// Recover the typed error from an `anyhow::Error` chain (context
+    /// layers added with `.context(...)` are looked through).
+    pub fn of(err: &anyhow::Error) -> Option<&NetError> {
+        err.downcast_ref::<NetError>()
+    }
+
+    /// Whether the *same* operation against the *same* peer is worth
+    /// retrying. Note the cluster re-dispatches a failed shard to a
+    /// *different* worker, which can also cure `Malformed`/`JobFailed`
+    /// caused by one sick node — its retry loop is deliberately broader
+    /// than this predicate.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            NetError::Timeout { .. } | NetError::PeerGone { .. } | NetError::Overloaded
+        )
+    }
+
+    /// Classify an I/O error from a socket operation.
+    pub fn from_io(what: &str, e: std::io::Error) -> anyhow::Error {
+        use std::io::ErrorKind as K;
+        let err = match e.kind() {
+            K::TimedOut | K::WouldBlock => NetError::Timeout { what: format!("{what}: {e}") },
+            K::UnexpectedEof
+            | K::ConnectionReset
+            | K::ConnectionAborted
+            | K::ConnectionRefused
+            | K::BrokenPipe
+            | K::NotConnected => NetError::PeerGone { what: format!("{what}: {e}") },
+            _ => return anyhow::Error::new(e).context(what.to_string()),
+        };
+        anyhow::Error::new(err)
+    }
+}
 
 /// Frame tags.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -140,27 +231,94 @@ pub fn unpack_vocabs(buf: &[u8]) -> Result<Vec<Vec<u32>>> {
     Ok(cols)
 }
 
-/// Write one frame.
+/// Bytes before the payload: `tag:u8 len:u64le sum:u32le`.
+pub const FRAME_HEADER_BYTES: usize = 1 + 8 + 4;
+
+/// Hard cap on a single frame's payload, enforced on read.
+pub const MAX_FRAME: u64 = 1 << 30;
+
+/// Word-folded checksum over tag + payload (xorshift-style mix per
+/// 8-byte word — one multiply per 8 bytes, not per byte, so checking
+/// never rivals the decode itself). Not cryptographic; it exists to
+/// turn in-flight corruption into a typed [`NetError::Malformed`].
+pub fn frame_sum(tag: u8, payload: &[u8]) -> u32 {
+    let mut h: u64 = 0x9E37_79B9_7F4A_7C15 ^ ((payload.len() as u64) << 8) ^ tag as u64;
+    let mut chunks = payload.chunks_exact(8);
+    for c in &mut chunks {
+        let w = u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+        h = (h ^ w).wrapping_mul(0x2545_F491_4F6C_DD1D).rotate_left(23);
+    }
+    let rest = chunks.remainder();
+    if !rest.is_empty() {
+        let mut w = [0u8; 8];
+        w[..rest.len()].copy_from_slice(rest);
+        h = (h ^ u64::from_le_bytes(w)).wrapping_mul(0x2545_F491_4F6C_DD1D).rotate_left(23);
+    }
+    (h ^ (h >> 32)) as u32
+}
+
+/// Write one frame. I/O errors are classified into [`NetError`].
 pub fn write_frame<W: Write>(w: &mut W, tag: Tag, payload: &[u8]) -> Result<()> {
-    w.write_all(&[tag as u8])?;
-    w.write_all(&(payload.len() as u64).to_le_bytes())?;
-    w.write_all(payload)?;
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    header[0] = tag as u8;
+    header[1..9].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    header[9..13].copy_from_slice(&frame_sum(tag as u8, payload).to_le_bytes());
+    w.write_all(&header)
+        .and_then(|()| w.write_all(payload))
+        .map_err(|e| NetError::from_io("writing frame", e))?;
     Ok(())
 }
 
 /// Read one frame. Payload size is capped to keep a corrupt peer from
-/// forcing a huge allocation.
+/// forcing a huge allocation; the checksum is verified before the
+/// payload is handed to any decoder. Timeouts, hangups and corruption
+/// all surface as typed [`NetError`]s.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<(Tag, Vec<u8>)> {
-    const MAX_FRAME: u64 = 1 << 30;
-    let mut tag = [0u8; 1];
-    r.read_exact(&mut tag)?;
-    let mut len = [0u8; 8];
-    r.read_exact(&mut len)?;
-    let len = u64::from_le_bytes(len);
-    anyhow::ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds cap");
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    r.read_exact(&mut header)
+        .map_err(|e| NetError::from_io("reading frame header", e))?;
+    let len = u64::from_le_bytes([
+        header[1], header[2], header[3], header[4],
+        header[5], header[6], header[7], header[8],
+    ]);
+    if len > MAX_FRAME {
+        anyhow::bail!(NetError::Malformed {
+            what: format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        });
+    }
+    let sum = u32::from_le_bytes([header[9], header[10], header[11], header[12]]);
     let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload)?;
-    Ok((Tag::from_u8(tag[0])?, payload))
+    r.read_exact(&mut payload)
+        .map_err(|e| NetError::from_io("reading frame payload", e))?;
+    if frame_sum(header[0], &payload) != sum {
+        anyhow::bail!(NetError::Malformed {
+            what: format!("frame checksum mismatch (tag {}, {len} bytes)", header[0]),
+        });
+    }
+    let tag = Tag::from_u8(header[0]).map_err(|e| {
+        anyhow::Error::new(NetError::Malformed { what: e.to_string() })
+    })?;
+    Ok((tag, payload))
+}
+
+/// Pack a cluster worker's pass-1 shard dump: the rows it observed plus
+/// its sub-vocabularies (`rows:u64 || pack_vocabs`). The row count lets
+/// the leader verify the shard was observed *in full* — a dropped or
+/// swallowed pass-1 frame shows up as a count mismatch and triggers a
+/// re-dispatch instead of silently skewing the global merge.
+pub fn pack_shard_dump(rows: u64, cols: &[Vec<u32>]) -> Vec<u8> {
+    let mut out = rows.to_le_bytes().to_vec();
+    out.extend_from_slice(&pack_vocabs(cols));
+    out
+}
+
+/// Decode [`pack_shard_dump`] output.
+pub fn unpack_shard_dump(buf: &[u8]) -> Result<(u64, Vec<Vec<u32>>)> {
+    anyhow::ensure!(buf.len() >= 8, "shard dump truncated: {} bytes", buf.len());
+    let rows = u64::from_le_bytes([
+        buf[0], buf[1], buf[2], buf[3], buf[4], buf[5], buf[6], buf[7],
+    ]);
+    Ok((rows, unpack_vocabs(&buf[8..])?))
 }
 
 /// Job header: schema, wire format and the full per-column operator
@@ -316,8 +474,57 @@ mod tests {
 
     #[test]
     fn bad_tag_rejected() {
-        let buf = [99u8, 0, 0, 0, 0, 0, 0, 0, 0];
-        assert!(read_frame(&mut &buf[..]).is_err());
+        // A well-formed frame (correct length + checksum) with an
+        // unknown tag must be rejected as Malformed, not panic.
+        let mut buf = vec![99u8];
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&frame_sum(99, &[]).to_le_bytes());
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(matches!(NetError::of(&err), Some(NetError::Malformed { .. })), "{err:#}");
+    }
+
+    #[test]
+    fn corrupt_payload_rejected_by_checksum() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Tag::ResultChunk, b"payload-bytes").unwrap();
+        for at in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[at] ^= 0x40;
+            let got = read_frame(&mut &bad[..]);
+            // Any single-bit flip in header or payload must surface as
+            // an error (usually Malformed; a flipped length bit can
+            // also truncate → PeerGone). Never a silent success.
+            assert!(got.is_err(), "flip at {at} went undetected");
+        }
+        // the original still reads fine
+        let (tag, payload) = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!((tag, payload.as_slice()), (Tag::ResultChunk, &b"payload-bytes"[..]));
+    }
+
+    #[test]
+    fn io_errors_classified() {
+        // EOF mid-frame → PeerGone
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Tag::Pass1Chunk, b"0123456789").unwrap();
+        let err = read_frame(&mut &buf[..buf.len() - 3]).unwrap_err();
+        assert!(matches!(NetError::of(&err), Some(NetError::PeerGone { .. })), "{err:#}");
+        // taxonomy: retryability is part of the contract
+        assert!(NetError::Timeout { what: "t".into() }.retryable());
+        assert!(NetError::PeerGone { what: "p".into() }.retryable());
+        assert!(NetError::Overloaded.retryable());
+        assert!(!NetError::Malformed { what: "m".into() }.retryable());
+        assert!(
+            !NetError::JobFailed { worker: "w".into(), reason: "r".into() }.retryable()
+        );
+    }
+
+    #[test]
+    fn shard_dump_roundtrip() {
+        let cols = vec![vec![5u32, 1, 9], vec![], vec![42]];
+        let packed = pack_shard_dump(123, &cols);
+        assert_eq!(unpack_shard_dump(&packed).unwrap(), (123, cols));
+        assert!(unpack_shard_dump(&packed[..7]).is_err());
+        assert!(unpack_shard_dump(&packed[..packed.len() - 1]).is_err());
     }
 
     #[test]
@@ -409,6 +616,8 @@ mod tests {
     fn frame_cap_enforced() {
         let mut buf = vec![Tag::Job as u8];
         buf.extend_from_slice(&u64::MAX.to_le_bytes());
-        assert!(read_frame(&mut &buf[..]).is_err());
+        buf.extend_from_slice(&[0u8; 4]);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(matches!(NetError::of(&err), Some(NetError::Malformed { .. })), "{err:#}");
     }
 }

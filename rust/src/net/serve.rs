@@ -42,8 +42,9 @@ use crate::ops::artifact::VocabArtifact;
 use crate::pipeline::{ChunkDecoder, FrozenPlan, MissPolicy};
 use crate::Result;
 
-use super::protocol::{self, Tag};
+use super::protocol::{self, NetError, Tag};
 use super::stream::WireFormat;
+use super::NetConfig;
 
 /// In-flight bound when the client does not pick one.
 pub const DEFAULT_QUEUE_DEPTH: u32 = 32;
@@ -460,18 +461,60 @@ pub struct ServeClient {
     writer: BufWriter<TcpStream>,
     schema: Schema,
     next_id: u64,
+    addr: String,
 }
 
 impl ServeClient {
-    /// Connect and send the session header.
+    /// Connect and send the session header (default [`NetConfig`]:
+    /// 30 s I/O deadline, no retry on the connect itself).
     pub fn connect(addr: &str, job: &ServeJob) -> Result<ServeClient> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
+        Self::connect_once(addr, job, &NetConfig::default(), &super::JobClock::unbounded())
+    }
+
+    /// Connect with retry-with-backoff on transient failures (refused
+    /// connects while the worker restarts, timeouts) — the graceful-
+    /// degradation client posture. Fails fast on non-retryable errors.
+    pub fn connect_retry(addr: &str, job: &ServeJob, cfg: &NetConfig) -> Result<ServeClient> {
+        let clock = cfg.clock();
+        let mut last_err = None;
+        for attempt in 0..=cfg.retries {
+            if attempt > 0 {
+                clock.sleep(cfg.backoff_for(attempt));
+            }
+            clock
+                .check("connecting to serving worker")
+                .map_err(|e| last_err.take().unwrap_or(e))?;
+            match Self::connect_once(addr, job, cfg, &clock) {
+                Ok(client) => return Ok(client),
+                Err(e) if NetError::of(&e).is_some_and(NetError::retryable) => {
+                    last_err = Some(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow::anyhow!("no attempt ran"))
+            .context(format!("connect to serving worker {addr}: retries exhausted")))
+    }
+
+    fn connect_once(
+        addr: &str,
+        job: &ServeJob,
+        cfg: &NetConfig,
+        clock: &super::JobClock,
+    ) -> Result<ServeClient> {
+        let stream = super::connect(addr, cfg.io_timeout, clock)?;
         let reader = BufReader::with_capacity(1 << 16, stream.try_clone()?);
         let mut writer = BufWriter::with_capacity(1 << 16, stream);
         protocol::write_frame(&mut writer, Tag::ServeJob, &job.encode())?;
         writer.flush()?;
-        Ok(ServeClient { reader, writer, schema: job.artifact.schema(), next_id: 0 })
+        Ok(ServeClient {
+            reader,
+            writer,
+            schema: job.artifact.schema(),
+            next_id: 0,
+            addr: addr.to_string(),
+        })
     }
 
     pub fn schema(&self) -> Schema {
@@ -492,15 +535,18 @@ impl ServeClient {
     }
 
     /// Read the next response; a worker [`Tag::ErrorReply`] surfaces as
-    /// an error carrying the worker's message.
+    /// a typed [`NetError::JobFailed`] carrying the worker's message.
     pub fn recv(&mut self) -> Result<ServeResponse> {
         let (tag, payload) = protocol::read_frame(&mut self.reader)?;
         match tag {
             Tag::ServeResponse => ServeResponse::decode(&payload),
-            Tag::ErrorReply => {
-                anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload))
-            }
-            other => anyhow::bail!("unexpected frame {other:?} from worker"),
+            Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
+                worker: self.addr.clone(),
+                reason: String::from_utf8_lossy(&payload).into_owned(),
+            }),
+            other => anyhow::bail!(NetError::Malformed {
+                what: format!("unexpected frame {other:?} from worker"),
+            }),
         }
     }
 
@@ -510,6 +556,28 @@ impl ServeClient {
         let resp = self.recv()?;
         anyhow::ensure!(resp.req_id == id, "response {} for request {id}", resp.req_id);
         Ok(resp)
+    }
+
+    /// One round trip with retry-with-backoff on
+    /// [`ServeStatus::Overloaded`] refusals — the worker asked us to
+    /// back off, so we do, resending the same rows. Gives up with a
+    /// typed [`NetError::Overloaded`] when the refusals outlast the
+    /// retry budget; transport errors are not retried here (the session
+    /// socket is gone — reconnect with [`ServeClient::connect_retry`]).
+    pub fn request_retry(&mut self, raw: &[u8], cfg: &NetConfig) -> Result<ServeResponse> {
+        let clock = cfg.clock();
+        for attempt in 0..=cfg.retries {
+            if attempt > 0 {
+                clock.sleep(cfg.backoff_for(attempt));
+            }
+            clock.check("retrying an overloaded serving request")?;
+            let resp = self.request(raw)?;
+            if resp.status != ServeStatus::Overloaded {
+                return Ok(resp);
+            }
+        }
+        Err(anyhow::Error::new(NetError::Overloaded)
+            .context("serving request: worker stayed overloaded past the retry budget"))
     }
 
     /// End the session: drain any outstanding responses and return the
@@ -523,10 +591,13 @@ impl ServeClient {
             match tag {
                 Tag::ServeResponse => late.push(ServeResponse::decode(&payload)?),
                 Tag::ServeReport => return Ok((ServeReport::decode(&payload)?, late)),
-                Tag::ErrorReply => {
-                    anyhow::bail!("worker error: {}", String::from_utf8_lossy(&payload))
-                }
-                other => anyhow::bail!("unexpected frame {other:?} from worker"),
+                Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
+                    worker: self.addr.clone(),
+                    reason: String::from_utf8_lossy(&payload).into_owned(),
+                }),
+                other => anyhow::bail!(NetError::Malformed {
+                    what: format!("unexpected frame {other:?} from worker"),
+                }),
             }
         }
     }

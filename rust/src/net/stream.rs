@@ -102,7 +102,7 @@ impl StreamingPreprocessor {
     pub fn pass1_chunk(&mut self, chunk: &[u8]) -> Result<()> {
         anyhow::ensure!(
             matches!(self.phase, Phase::Start | Phase::Pass1),
-            "pass1_chunk in phase {:?}",
+            "protocol violation: pass1_chunk in phase {:?}",
             self.phase
         );
         self.phase = Phase::Pass1;
@@ -117,7 +117,7 @@ impl StreamingPreprocessor {
     pub fn pass1_end(&mut self) -> Result<()> {
         anyhow::ensure!(
             matches!(self.phase, Phase::Start | Phase::Pass1),
-            "pass1_end in phase {:?}",
+            "protocol violation: pass1_end in phase {:?}",
             self.phase
         );
         let decoder = std::mem::replace(
@@ -137,7 +137,11 @@ impl StreamingPreprocessor {
         if self.phase == Phase::BetweenPasses {
             self.phase = Phase::Pass2;
         }
-        anyhow::ensure!(self.phase == Phase::Pass2, "pass2_chunk in phase {:?}", self.phase);
+        anyhow::ensure!(
+            self.phase == Phase::Pass2,
+            "protocol violation: pass2_chunk in phase {:?}",
+            self.phase
+        );
         self.scratch.clear();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
         let out = rows_of(&self.state.process(&self.scratch));
@@ -150,7 +154,11 @@ impl StreamingPreprocessor {
         if self.phase == Phase::BetweenPasses {
             self.phase = Phase::Pass2; // empty pass 2 is legal
         }
-        anyhow::ensure!(self.phase == Phase::Pass2, "pass2_end in phase {:?}", self.phase);
+        anyhow::ensure!(
+            self.phase == Phase::Pass2,
+            "protocol violation: pass2_end in phase {:?}",
+            self.phase
+        );
         let decoder = std::mem::replace(
             &mut self.decoder,
             ChunkDecoder::with_options(self.format.into(), self.schema(), self.decode),
@@ -171,7 +179,7 @@ impl StreamingPreprocessor {
     pub fn fused_chunk(&mut self, chunk: &[u8]) -> Result<Vec<ProcessedRow>> {
         anyhow::ensure!(
             matches!(self.phase, Phase::Start | Phase::Fused),
-            "fused_chunk in phase {:?}",
+            "protocol violation: fused_chunk in phase {:?}",
             self.phase
         );
         self.phase = Phase::Fused;
@@ -187,7 +195,7 @@ impl StreamingPreprocessor {
     pub fn fused_end(&mut self) -> Result<Vec<ProcessedRow>> {
         anyhow::ensure!(
             matches!(self.phase, Phase::Start | Phase::Fused),
-            "fused_end in phase {:?}",
+            "protocol violation: fused_end in phase {:?}",
             self.phase
         );
         let decoder = std::mem::replace(
@@ -230,7 +238,7 @@ impl StreamingPreprocessor {
         );
         anyhow::ensure!(
             self.phase == Phase::BetweenPasses,
-            "vocab import only between passes (phase {:?})",
+            "protocol violation: vocab import only between passes (phase {:?})",
             self.phase
         );
         use crate::ops::Vocab as _;

@@ -11,21 +11,56 @@
 //! decode failure — is reported to the peer as a [`Tag::ErrorReply`]
 //! frame carrying the message, then the connection closes cleanly. A
 //! hostile or buggy client costs the worker one connection, never the
-//! process.
+//! process. Sockets carry the [`WorkerOptions`] I/O deadline, so a
+//! leader that wedges mid-job costs the worker one timed-out
+//! connection, never a thread parked forever; serving sessions switch
+//! to the (default unbounded) idle deadline once the `ServeJob` header
+//! arrives, because a quiet serving client is normal, not a fault.
+//!
+//! Lifecycle: [`serve_forever`] is the run-until-killed posture;
+//! [`serve_until`] adds a [`ShutdownHandle`] — a poison-pill
+//! `shutdown()` that lets an operator (or a test) stop the accept loop
+//! while the in-flight session drains to completion first.
 
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::Result;
 
-use super::protocol::{self, RunStats, Tag};
+use super::protocol::{self, NetError, RunStats, Tag};
 use super::serve;
 use super::stream::StreamingPreprocessor;
+
+/// Worker-side socket posture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerOptions {
+    /// Read/write deadline for batch sessions and the header frame. A
+    /// peer that goes quiet longer than this costs one connection.
+    pub io_timeout: Option<Duration>,
+    /// Deadline once a session upgrades to serving. `None` (default):
+    /// a serving client may idle between requests indefinitely.
+    pub serve_idle_timeout: Option<Duration>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions { io_timeout: Some(Duration::from_secs(30)), serve_idle_timeout: None }
+    }
+}
 
 /// Serve a single connection on `listener` and return after the job
 /// completes. The caller loops for a long-lived service.
 pub fn serve_one(listener: &TcpListener) -> Result<RunStats> {
+    serve_one_opts(listener, &WorkerOptions::default())
+}
+
+/// [`serve_one`] with explicit socket deadlines.
+pub fn serve_one_opts(listener: &TcpListener, opts: &WorkerOptions) -> Result<RunStats> {
     let (stream, _addr) = listener.accept()?;
-    handle(stream)
+    handle(stream, opts)
 }
 
 /// Serve `n` jobs then return (used by tests and the example binary).
@@ -48,32 +83,116 @@ pub fn serve_forever(listener: &TcpListener) -> ! {
     }
 }
 
-fn handle(stream: TcpStream) -> Result<RunStats> {
-    stream.set_nodelay(true)?;
-    let mut reader = std::io::BufReader::with_capacity(1 << 20, stream.try_clone()?);
-    let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream);
+/// Graceful-stop control for a [`serve_until`] loop. Clone-cheap;
+/// `shutdown()` may be called from any thread (or a signal handler
+/// shim) and returns once the accept loop has been woken.
+#[derive(Debug, Clone)]
+pub struct ShutdownHandle {
+    flag: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+}
 
-    match session(&mut reader, &mut writer) {
+impl ShutdownHandle {
+    /// A handle wired to `listener`'s address.
+    pub fn new(listener: &TcpListener) -> Result<ShutdownHandle> {
+        Ok(ShutdownHandle { flag: Arc::new(AtomicBool::new(false)), addr: listener.local_addr()? })
+    }
+
+    /// Request shutdown: raise the flag, then poke the listener with a
+    /// poison-pill connection so a blocked `accept` wakes up and
+    /// observes it. The in-flight session (if any) drains first —
+    /// `serve_until` only rechecks the flag between sessions.
+    pub fn shutdown(&self) {
+        self.flag.store(true, Ordering::Release);
+        // Best effort: if the loop already exited the connect fails,
+        // which is exactly as good.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+    }
+
+    pub fn is_shut_down(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+/// Accept and serve until `handle.shutdown()` is called. The session in
+/// flight when shutdown is requested runs to completion (drain), then
+/// the loop exits and the number of completed sessions is returned.
+/// Failed sessions are logged and counted, never fatal — same posture
+/// as [`serve_forever`].
+pub fn serve_until(
+    listener: &TcpListener,
+    handle_: &ShutdownHandle,
+    opts: &WorkerOptions,
+) -> Result<u64> {
+    let mut sessions = 0u64;
+    loop {
+        if handle_.is_shut_down() {
+            return Ok(sessions);
+        }
+        let (stream, _addr) = listener.accept()?;
+        if handle_.is_shut_down() {
+            // The poison-pill connection (or a client racing it) —
+            // drop it and exit; in-flight work already drained.
+            return Ok(sessions);
+        }
+        match handle(stream, opts) {
+            Ok(stats) => eprintln!("session done: {} rows", stats.rows),
+            Err(e) => eprintln!("session failed: {e:#}"),
+        }
+        sessions += 1;
+    }
+}
+
+fn handle(stream: TcpStream, opts: &WorkerOptions) -> Result<RunStats> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(opts.io_timeout)?;
+    stream.set_write_timeout(opts.io_timeout)?;
+    let mut reader = std::io::BufReader::with_capacity(1 << 20, stream.try_clone()?);
+    let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream.try_clone()?);
+    handle_connection(&mut reader, &mut writer, opts, Some(&stream))
+}
+
+/// One full worker session over any reader/writer pair — public so the
+/// chaos harness can interpose [`crate::net::fault::FaultPlan`] wrappers
+/// around a real socket and still run the production session code.
+/// Every session error is reported to the peer as a best-effort
+/// [`Tag::ErrorReply`] frame before the connection closes.
+pub fn handle_connection<R, W>(
+    reader: &mut R,
+    writer: &mut W,
+    opts: &WorkerOptions,
+    sock: Option<&TcpStream>,
+) -> Result<RunStats>
+where
+    R: Read + Send,
+    W: Write,
+{
+    match session(reader, writer, opts, sock) {
         Ok(stats) => Ok(stats),
         Err(e) => {
             // Best effort: tell the peer why before hanging up. The
             // connection may already be gone — that must not mask the
             // original error.
-            use std::io::Write as _;
-            let _ = protocol::write_frame(&mut writer, Tag::ErrorReply, e.to_string().as_bytes());
+            let _ = protocol::write_frame(writer, Tag::ErrorReply, e.to_string().as_bytes());
             let _ = writer.flush();
             Err(e)
         }
     }
 }
 
-/// One full session: dispatch on the header frame, then run the chosen
-/// protocol to completion. Every error propagates to [`handle`], which
+/// Dispatch on the header frame, then run the chosen protocol to
+/// completion. Every error propagates to [`handle_connection`], which
 /// turns it into an [`Tag::ErrorReply`] frame.
-fn session(
-    reader: &mut std::io::BufReader<TcpStream>,
-    writer: &mut std::io::BufWriter<TcpStream>,
-) -> Result<RunStats> {
+fn session<R, W>(
+    reader: &mut R,
+    writer: &mut W,
+    opts: &WorkerOptions,
+    sock: Option<&TcpStream>,
+) -> Result<RunStats>
+where
+    R: Read + Send,
+    W: Write,
+{
     // First frame must be a job header. Decoding it re-parses (and
     // re-validates) the per-column spec; compiling it against the job's
     // schema is the worker-side planning step — both fail here, before
@@ -82,6 +201,12 @@ fn session(
     match tag {
         Tag::Job => batch_session(reader, writer, protocol::Job::decode(&payload)?),
         Tag::ServeJob => {
+            // Serving clients legitimately idle between requests —
+            // relax the batch deadline to the serving one.
+            if let Some(s) = sock {
+                s.set_read_timeout(opts.serve_idle_timeout)?;
+                s.set_write_timeout(opts.serve_idle_timeout)?;
+            }
             let job = serve::ServeJob::decode(&payload)?;
             let report = serve::run_session(reader, writer, &job)?;
             Ok(RunStats {
@@ -89,15 +214,17 @@ fn session(
                 vocab_entries: job.artifact.total_entries() as u64,
             })
         }
-        other => anyhow::bail!("expected Job or ServeJob frame, got {other:?}"),
+        other => anyhow::bail!(NetError::Malformed {
+            what: format!("expected Job or ServeJob frame, got {other:?}"),
+        }),
     }
 }
 
-fn batch_session(
-    reader: &mut std::io::BufReader<TcpStream>,
-    writer: &mut std::io::BufWriter<TcpStream>,
-    job: protocol::Job,
-) -> Result<RunStats> {
+fn batch_session<R, W>(reader: &mut R, writer: &mut W, job: protocol::Job) -> Result<RunStats>
+where
+    R: Read,
+    W: Write,
+{
     // Worker posture: decode wire chunks with every local core (the
     // same row-sharded path the engine uses; output is bit-identical
     // to the sequential decode).
@@ -131,7 +258,6 @@ fn batch_session(
                     vocab_entries: sp.vocab_entries() as u64,
                 };
                 protocol::write_frame(writer, Tag::ResultEnd, &stats.encode())?;
-                use std::io::Write as _;
                 writer.flush()?;
                 return Ok(stats);
             }
@@ -140,10 +266,12 @@ fn batch_session(
             Tag::VocabSync => {
                 // Cluster mode: ship sub-vocabularies for the global
                 // merge (the one synchronization point of the sharded
-                // deployment — paper §2.4's merge, moved to the leader).
-                let dump = protocol::pack_vocabs(&sp.export_vocabs());
+                // deployment — paper §2.4's merge, moved to the leader),
+                // prefixed with the rows this worker observed so the
+                // leader can verify no pass-1 frame was lost.
+                let dump =
+                    protocol::pack_shard_dump(sp.rows_seen().0 as u64, &sp.export_vocabs());
                 protocol::write_frame(writer, Tag::VocabDump, &dump)?;
-                use std::io::Write as _;
                 writer.flush()?;
             }
             Tag::VocabLoad => {
@@ -169,11 +297,60 @@ fn batch_session(
                     vocab_entries: sp.vocab_entries() as u64,
                 };
                 protocol::write_frame(writer, Tag::ResultEnd, &stats.encode())?;
-                use std::io::Write as _;
                 writer.flush()?;
                 return Ok(stats);
             }
-            other => anyhow::bail!("unexpected frame {other:?} from leader"),
+            other => anyhow::bail!(NetError::Malformed {
+                what: format!("unexpected frame {other:?} from leader"),
+            }),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shutdown_stops_an_idle_accept_loop() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let handle = ShutdownHandle::new(&listener).unwrap();
+        let h2 = handle.clone();
+        let t = std::thread::spawn(move || {
+            serve_until(&listener, &h2, &WorkerOptions::default()).unwrap()
+        });
+        // Give the loop a moment to park in accept(), then poison it.
+        std::thread::sleep(Duration::from_millis(50));
+        handle.shutdown();
+        let sessions = t.join().unwrap();
+        assert_eq!(sessions, 0);
+        assert!(handle.is_shut_down());
+    }
+
+    #[test]
+    fn in_flight_session_drains_before_shutdown() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = ShutdownHandle::new(&listener).unwrap();
+        let h2 = handle.clone();
+        let t = std::thread::spawn(move || {
+            serve_until(&listener, &h2, &WorkerOptions::default()).unwrap()
+        });
+
+        // A real (malformed) session: the worker answers with an
+        // ErrorReply; only then is shutdown requested — the completed
+        // session must be counted, and the loop must exit cleanly.
+        let stream = TcpStream::connect(addr).unwrap();
+        protocol::write_frame(&mut &stream, Tag::Pass1Chunk, b"no job header").unwrap();
+        let (tag, payload) = protocol::read_frame(&mut &stream).unwrap();
+        assert_eq!(tag, Tag::ErrorReply);
+        assert!(
+            String::from_utf8_lossy(&payload).contains("expected Job or ServeJob"),
+            "worker explains the refusal"
+        );
+        drop(stream);
+        handle.shutdown();
+        let sessions = t.join().unwrap();
+        assert_eq!(sessions, 1, "the completed session was counted");
     }
 }

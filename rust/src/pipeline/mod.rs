@@ -706,8 +706,17 @@ where
         }
         drop(rx); // unblock the producer if we bailed early
 
-        let (produced, pool_rx) =
-            producer.join().expect("pipeline source producer panicked");
+        let (produced, pool_rx) = match producer.join() {
+            Ok(pair) => pair,
+            Err(panic) => {
+                let what = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic".into());
+                return Err(anyhow::anyhow!("pipeline source producer panicked: {what}"));
+            }
+        };
         // Reclaim every pooled buffer for the caller's next pass.
         pool.extend(pool_rx.try_iter());
         match (produced, consumer_err) {

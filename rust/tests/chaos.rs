@@ -1,0 +1,418 @@
+//! Chaos suite: the fault-tolerance contract over real loopback TCP.
+//!
+//! Every test drives the *production* session code — the harness only
+//! interposes a deterministic [`FaultPlan`] between a worker's socket
+//! and its session loop (`worker::handle_connection` is generic over
+//! the reader/writer pair for exactly this purpose). The contract being
+//! pinned, for every fault class:
+//!
+//! * the cluster run either completes **bit-identical** to the
+//!   fault-free run (split-level retry recovered the shard), or
+//! * fails with a **typed** [`NetError`] before the job deadline —
+//!   never a hang, never a silent wrong answer.
+//!
+//! Each test bounds every socket with a short I/O deadline and (where a
+//! failure is expected) a job deadline, so a regression that introduces
+//! a hang fails the suite by timeout instead of wedging CI.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use piper::data::row::ProcessedColumns;
+use piper::data::{utf8, Schema, SynthConfig, SynthDataset};
+use piper::net::cluster::run_cluster_loopback_cfg;
+use piper::net::fault::{FaultKind, FaultPlan};
+use piper::net::protocol::Job;
+use piper::net::stream::WireFormat;
+use piper::net::worker::{self, WorkerOptions};
+use piper::net::{run_cluster_cfg, NetConfig, NetError, ServeClient, ServeJob};
+use piper::ops::{PipelineSpec, VocabArtifact};
+use piper::pipeline::MissPolicy;
+
+const CHUNK: usize = 256;
+
+fn ms(v: u64) -> Duration {
+    Duration::from_millis(v)
+}
+
+/// Fast-failing knobs: a test must never sit out a 30 s default
+/// deadline — every blocking step is bounded in hundreds of ms.
+fn chaos_cfg() -> NetConfig {
+    NetConfig {
+        io_timeout: Some(ms(2000)),
+        job_deadline: Some(Duration::from_secs(30)),
+        retries: 2,
+        backoff: ms(10),
+        backoff_cap: ms(100),
+    }
+}
+
+fn worker_opts() -> WorkerOptions {
+    WorkerOptions { io_timeout: Some(ms(2000)), serve_idle_timeout: None }
+}
+
+/// A worker process stand-in: accepts connections concurrently (the
+/// cluster parks pass-1 sessions open while retries of *other* shards
+/// arrive) and runs the production session loop behind a per-session
+/// [`FaultPlan`] — session `i` gets `plans[i]`, later sessions run
+/// clean. This is the "one flaky node" model: the plan scripts *which*
+/// session misbehaves and *how*, deterministically.
+struct ChaosWorker {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl ChaosWorker {
+    fn spawn(plans: Vec<FaultPlan>) -> ChaosWorker {
+        let opts = worker_opts();
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::spawn(move || {
+            let mut session = 0usize;
+            let mut inflight = Vec::new();
+            loop {
+                let Ok((stream, _)) = listener.accept() else { break };
+                if stop2.load(Ordering::Acquire) {
+                    break; // the poison pill
+                }
+                let plan = plans.get(session).cloned().unwrap_or_default();
+                session += 1;
+                inflight.push(std::thread::spawn(move || {
+                    let _ = serve_faulty(stream, &plan, &opts);
+                }));
+            }
+            for t in inflight {
+                let _ = t.join();
+            }
+        });
+        ChaosWorker { addr, stop, thread }
+    }
+
+    fn stop(self) {
+        self.stop.store(true, Ordering::Release);
+        if let Ok(sock) = self.addr.parse() {
+            let _ = TcpStream::connect_timeout(&sock, Duration::from_secs(1));
+        }
+        let _ = self.thread.join();
+    }
+}
+
+/// One session: real socket, real session loop, fault plan in between.
+fn serve_faulty(stream: TcpStream, plan: &FaultPlan, opts: &WorkerOptions) -> piper::Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(opts.io_timeout)?;
+    stream.set_write_timeout(opts.io_timeout)?;
+    let reader = BufReader::with_capacity(1 << 16, stream.try_clone()?);
+    let writer = BufWriter::with_capacity(1 << 16, stream.try_clone()?);
+    let (mut fr, mut fw, _hooks) = plan.wrap(reader, writer);
+    worker::handle_connection(&mut fr, &mut fw, opts, Some(&stream)).map(|_| ())
+}
+
+struct Fixture {
+    job: Job,
+    raw: Vec<u8>,
+    want: ProcessedColumns,
+    rows: u64,
+}
+
+fn fixture(rows: usize) -> Fixture {
+    let ds = SynthDataset::generate(SynthConfig::small(rows));
+    let spec = PipelineSpec::parse(
+        "sparse[*]: modulus:997|genvocab|applyvocab; dense[*]: neg2zero|log",
+    )
+    .expect("spec parses");
+    let want = spec.execute(&ds.rows, ds.schema()).expect("sequential reference");
+    let raw = utf8::encode_dataset(&ds);
+    let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+    Fixture { job, raw, want, rows: ds.rows.len() as u64 }
+}
+
+/// Run against chaos workers where worker 0's first session follows
+/// `plan` and everything else is clean. Shard 0's first attempt always
+/// lands on worker 0, so `plan` scripts exactly one shard attempt.
+fn run_with_fault_on_first_session(
+    fx: &Fixture,
+    workers: usize,
+    plan: FaultPlan,
+    cfg: &NetConfig,
+) -> piper::Result<piper::net::cluster::ClusterRun> {
+    let mut pool = vec![ChaosWorker::spawn(vec![plan])];
+    for _ in 1..workers {
+        pool.push(ChaosWorker::spawn(Vec::new()));
+    }
+    let addrs: Vec<String> = pool.iter().map(|w| w.addr.clone()).collect();
+    let run = run_cluster_cfg(&addrs, &fx.job, &fx.raw, CHUNK, cfg);
+    for w in pool {
+        w.stop();
+    }
+    run
+}
+
+fn assert_recovered(fx: &Fixture, run: piper::net::cluster::ClusterRun, what: &str) {
+    assert_eq!(run.processed, fx.want, "{what}: output must be bit-identical to fault-free");
+    assert_eq!(run.stats.rows, fx.rows, "{what}");
+    assert!(run.retries >= 1, "{what}: recovery must go through the retry path");
+    assert!(run.faults >= 1, "{what}: the injected fault must be observed");
+}
+
+/// A worker that crashes mid-pass-1 (connection severed while the shard
+/// streams in) costs one retry, not the job — and not a bit of output.
+#[test]
+fn crash_mid_pass1_recovers_bit_identical() {
+    let fx = fixture(240);
+    let run = run_with_fault_on_first_session(
+        &fx,
+        3,
+        FaultPlan::crash_after_rx(2), // dies while reading shard chunks
+        &chaos_cfg(),
+    )
+    .expect("cluster must survive a mid-pass-1 crash");
+    assert_recovered(&fx, run, "crash mid-pass-1");
+}
+
+/// A worker that crashes mid-pass-2 (results already flowing) forces
+/// the fresh-session retry path: `Job → Pass1End → VocabLoad → Pass2…`
+/// on a surviving worker, skipping pass 1 entirely.
+#[test]
+fn crash_mid_pass2_recovers_bit_identical() {
+    let fx = fixture(240);
+    let run = run_with_fault_on_first_session(
+        &fx,
+        3,
+        // tx frame 0 is the VocabDump (pass 1 completes), tx frame 1 the
+        // first ResultChunk — the crash lands squarely in pass 2.
+        FaultPlan::crash_after_tx(1),
+        &chaos_cfg(),
+    )
+    .expect("cluster must survive a mid-pass-2 crash");
+    assert_recovered(&fx, run, "crash mid-pass-2");
+}
+
+/// A silently dropped data frame cannot corrupt output: the per-shard
+/// row-count verification (or the spliced-row decode it causes) turns
+/// it into a typed, retryable error and the shard re-dispatches.
+#[test]
+fn dropped_frame_is_detected_and_retried() {
+    let fx = fixture(240);
+    let run = run_with_fault_on_first_session(
+        &fx,
+        3,
+        // rx frame 0 is the Job header; frame 1 is the first Pass1Chunk.
+        FaultPlan::clean().with_rx(1, FaultKind::DropFrame),
+        &chaos_cfg(),
+    )
+    .expect("a dropped frame must be detected, never silently absorbed");
+    assert_recovered(&fx, run, "dropped frame");
+}
+
+/// A flipped bit on the wire is caught by the frame checksum — the
+/// worker refuses the frame, the shard retries elsewhere.
+#[test]
+fn corrupt_frame_is_detected_and_retried() {
+    let fx = fixture(240);
+    let run = run_with_fault_on_first_session(
+        &fx,
+        3,
+        FaultPlan::clean().with_rx(2, FaultKind::Corrupt { offset: 7, xor: 0x40 }),
+        &chaos_cfg(),
+    )
+    .expect("a corrupt frame must be detected, never silently absorbed");
+    assert_recovered(&fx, run, "corrupt frame");
+}
+
+/// Jitter below the deadlines is absorbed, not retried: the run stays
+/// clean and the retry counters stay zero.
+#[test]
+fn delay_below_deadline_is_absorbed() {
+    let fx = fixture(120);
+    let plan = FaultPlan::clean()
+        .with_rx(1, FaultKind::Delay { dur: ms(30) })
+        .with_rx(3, FaultKind::Delay { dur: ms(30) });
+    let run = run_with_fault_on_first_session(&fx, 2, plan, &chaos_cfg())
+        .expect("sub-deadline jitter must not fail the run");
+    assert_eq!(run.processed, fx.want);
+    assert_eq!((run.retries, run.faults), (0, 0), "no retry for mere jitter");
+}
+
+/// A wedged worker (delay far past the I/O deadline) is a timeout, and
+/// a timeout is just another retryable shard failure.
+#[test]
+fn hung_worker_times_out_and_recovers() {
+    let fx = fixture(120);
+    let mut cfg = chaos_cfg();
+    cfg.io_timeout = Some(ms(300));
+    let run = run_with_fault_on_first_session(
+        &fx,
+        2,
+        FaultPlan::clean().with_rx(0, FaultKind::Delay { dur: ms(1500) }),
+        &cfg,
+    )
+    .expect("a hung worker must cost a timeout retry, not the job");
+    assert_recovered(&fx, run, "hung worker");
+}
+
+/// When every attempt fails, the job fails *cleanly*: a typed, retryable
+/// [`NetError`] well inside the job deadline — the no-hang guarantee.
+#[test]
+fn exhausted_retries_fail_typed_within_deadline() {
+    let fx = fixture(120);
+    let mut cfg = chaos_cfg();
+    cfg.io_timeout = Some(ms(400));
+    cfg.retries = 2;
+    cfg.job_deadline = Some(Duration::from_secs(20));
+    // Single worker, every session crashes on the first read.
+    let plans = vec![FaultPlan::crash_after_rx(0); 8];
+    let w = ChaosWorker::spawn(plans);
+    let addrs = vec![w.addr.clone()];
+    let start = Instant::now();
+    let err = run_cluster_cfg(&addrs, &fx.job, &fx.raw, CHUNK, &cfg)
+        .expect_err("no surviving attempt must fail the job");
+    let elapsed = start.elapsed();
+    w.stop();
+    let net = NetError::of(&err).unwrap_or_else(|| panic!("untyped error: {err:#}"));
+    assert!(net.retryable(), "exhaustion root cause should be transport-class, got {net}");
+    assert!(
+        format!("{err:#}").contains("retries exhausted"),
+        "the context names the exhausted retry budget: {err:#}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(20),
+        "failure must land inside the deadline, took {elapsed:?}"
+    );
+}
+
+/// With every worker's process gone (connects refused), the run reports
+/// it as typed [`NetError::PeerGone`] naming the situation — fast, no
+/// per-attempt socket timeouts.
+#[test]
+fn no_surviving_workers_is_a_typed_peer_gone() {
+    let fx = fixture(60);
+    // Bind then drop: the ports exist but refuse connections.
+    let dead_addr = || {
+        let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+        l.local_addr().expect("addr").to_string()
+    };
+    let addrs = vec![dead_addr(), dead_addr()];
+    let start = Instant::now();
+    let err = run_cluster_cfg(&addrs, &fx.job, &fx.raw, CHUNK, &chaos_cfg())
+        .expect_err("dead cluster must fail");
+    assert!(
+        matches!(NetError::of(&err), Some(NetError::PeerGone { .. })),
+        "expected PeerGone, got {err:#}"
+    );
+    assert!(
+        format!("{err:#}").contains("no surviving workers"),
+        "the error names the dead cluster: {err:#}"
+    );
+    assert!(start.elapsed() < Duration::from_secs(5), "struck workers fail fast");
+}
+
+/// An application error on the worker (here: a spec whose selector the
+/// schema can't satisfy) travels back *verbatim* as the `ErrorReply`
+/// payload and surfaces from `run_cluster` as a typed
+/// [`NetError::JobFailed`] carrying the worker's address and reason.
+#[test]
+fn worker_error_reply_content_surfaces_from_run_cluster() {
+    let ds = SynthDataset::generate(SynthConfig::small(40));
+    let spec = PipelineSpec::parse("sparse[40]: modulus:7|genvocab|applyvocab")
+        .expect("parses; the selector only fails against this schema");
+    let raw = utf8::encode_dataset(&ds);
+    let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+    let mut cfg = chaos_cfg();
+    cfg.retries = 0; // the error is deterministic — retrying can't cure it
+    let err = run_cluster_loopback_cfg(2, &job, &raw, CHUNK, &cfg)
+        .expect_err("an uncompilable job must fail");
+    match NetError::of(&err) {
+        Some(NetError::JobFailed { worker, reason }) => {
+            assert!(worker.starts_with("127.0.0.1:"), "worker address travels: {worker}");
+            assert!(
+                reason.contains("selector") || reason.contains("sparse"),
+                "the worker's own message travels verbatim: {reason:?}"
+            );
+        }
+        other => panic!("expected JobFailed, got {other:?}: {err:#}"),
+    }
+}
+
+/// Seeded fuzz sweep: with one flaky node in a 3-worker cluster, every
+/// seeded fault plan — whatever mix of drop/corrupt/truncate/delay/close
+/// it scripts — must end in a bit-identical run. The plans are data
+/// (same seed → same plan), so any failing seed reproduces exactly.
+#[test]
+fn seeded_fault_sweep_recovers_on_every_seed() {
+    let fx = fixture(180);
+    let cfg = chaos_cfg();
+    for seed in 0..12u64 {
+        let plan = FaultPlan::seeded(seed);
+        let run = run_with_fault_on_first_session(&fx, 3, plan.clone(), &cfg)
+            .unwrap_or_else(|e| panic!("seed {seed} (plan {plan:?}) failed: {e:#}"));
+        assert_eq!(
+            run.processed, fx.want,
+            "seed {seed} (plan {plan:?}): output diverged from fault-free"
+        );
+        assert_eq!(run.stats.rows, fx.rows, "seed {seed}");
+    }
+}
+
+/// Serving path: a session severed mid-request surfaces as a typed,
+/// retryable transport error on the client — the signal
+/// [`ServeClient::connect_retry`] needs to reconnect.
+#[test]
+fn severed_serve_session_is_a_typed_transport_error() {
+    let spec = PipelineSpec::parse("modulus:97|genvocab|applyvocab").expect("spec");
+    let artifact =
+        VocabArtifact::new(spec, Schema::new(1, 1), vec![vec![5, 12]]).expect("artifact");
+    let job = ServeJob {
+        policy: MissPolicy::Sentinel,
+        format: WireFormat::Utf8,
+        queue_depth: 4,
+        artifact,
+    };
+    // rx frame 0 is the ServeJob header (session opens fine); frame 1 —
+    // the first request — severs the connection.
+    let w = ChaosWorker::spawn(vec![FaultPlan::crash_after_rx(1)]);
+    let mut client = ServeClient::connect(&w.addr, &job).expect("session opens");
+    let err = client.request(b"1,2,3\n").expect_err("severed session must error");
+    w.stop();
+    let net = NetError::of(&err).unwrap_or_else(|| panic!("untyped error: {err:#}"));
+    assert!(
+        net.retryable(),
+        "a severed serve session must be retryable (reconnect), got {net}"
+    );
+}
+
+/// Serving path: connect-retry against a dead address gives up with a
+/// typed error and the retry budget in the context — quickly.
+#[test]
+fn serve_connect_retry_fails_typed_when_no_worker_listens() {
+    let spec = PipelineSpec::parse("modulus:97|genvocab|applyvocab").expect("spec");
+    let artifact =
+        VocabArtifact::new(spec, Schema::new(1, 1), vec![vec![5, 12]]).expect("artifact");
+    let job = ServeJob {
+        policy: MissPolicy::Sentinel,
+        format: WireFormat::Utf8,
+        queue_depth: 4,
+        artifact,
+    };
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+        l.local_addr().expect("addr").to_string()
+    };
+    let mut cfg = chaos_cfg();
+    cfg.retries = 1;
+    let start = Instant::now();
+    let err = ServeClient::connect_retry(&dead, &job, &cfg)
+        .expect_err("nothing listens — connect must fail");
+    assert!(
+        matches!(NetError::of(&err), Some(NetError::PeerGone { .. })),
+        "expected PeerGone, got {err:#}"
+    );
+    assert!(format!("{err:#}").contains("retries exhausted"), "{err:#}");
+    assert!(start.elapsed() < Duration::from_secs(5));
+}

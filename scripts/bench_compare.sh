@@ -13,6 +13,10 @@
 #   --bless     overwrite the baselines with this machine's fresh run
 #   THRESHOLD   max tolerated ratio drop in percent (default 25)
 #   PIPER_BENCH_ROWS / PIPER_BENCH_REPS   forwarded to the bench
+#
+# Exit codes: 0 = within threshold (or blessed), 1 = perf regression,
+# 2 = setup error (baseline missing or unparsable) — so CI can tell a
+# real regression from a broken gate.
 set -eu
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -33,18 +37,40 @@ PIPER_BENCH_ROWS="$ROWS" PIPER_BENCH_REPS="$REPS" \
     BENCH_JSON="$CUR4" BENCH_PR5_JSON="$CUR5" \
     cargo bench --bench pipeline_engine >/dev/null
 
-if [ "${1:-}" = "--bless" ] || [ ! -f "$BASE4" ] || [ ! -f "$BASE5" ]; then
+if [ "${1:-}" = "--bless" ]; then
     cp "$CUR4" "$BASE4"
     cp "$CUR5" "$BASE5"
     echo "bench_compare: baselines blessed -> $BASE4, $BASE5"
     exit 0
 fi
 
+# A missing baseline is a setup error, never a silent pass (or a silent
+# bless of whatever this machine happens to produce).
+for base in "$BASE4" "$BASE5"; do
+    if [ ! -f "$base" ]; then
+        echo "bench_compare: ERROR: baseline $base is missing." >&2
+        echo "  Run 'scripts/bench_compare.sh --bless' on a reference machine" >&2
+        echo "  and commit the refreshed BENCH_*.json baselines." >&2
+        exit 2
+    fi
+done
+
 python3 - "$BASE4" "$CUR4" "$BASE5" "$CUR5" "$THRESHOLD" <<'EOF'
 import json
 import sys
 
-base4, cur4, base5, cur5 = (json.load(open(p)) for p in sys.argv[1:5])
+docs = []
+for path in sys.argv[1:5]:
+    try:
+        with open(path) as f:
+            docs.append(json.load(f))
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: ERROR: {path} is missing or not valid JSON ({e}).",
+              file=sys.stderr)
+        print("  Re-bless the baselines with 'scripts/bench_compare.sh --bless' "
+              "and commit them.", file=sys.stderr)
+        sys.exit(2)
+base4, cur4, base5, cur5 = docs
 threshold = float(sys.argv[5])
 failures = []
 
@@ -63,16 +89,22 @@ def decode_scaling(doc):
     return rps[max(rps)] / rps[1]
 
 
-print("decode-threads sweep (PR 4):")
-ratio_check("decode scaling, max threads vs 1", decode_scaling(base4), decode_scaling(cur4))
-
-
 def program_rps(doc):
     return {p["program"]: p["rows_per_s"] for p in doc["programs"]}
 
 
-print("per-column programs (PR 5):")
-b, c = program_rps(base5), program_rps(cur5)
+try:
+    print("decode-threads sweep (PR 4):")
+    ratio_check("decode scaling, max threads vs 1",
+                decode_scaling(base4), decode_scaling(cur4))
+    print("per-column programs (PR 5):")
+    b, c = program_rps(base5), program_rps(cur5)
+except (KeyError, TypeError) as e:
+    print(f"bench_compare: ERROR: baseline/current JSON has an unexpected shape ({e!r}).",
+          file=sys.stderr)
+    print("  Re-bless the baselines with 'scripts/bench_compare.sh --bless' "
+          "and commit them.", file=sys.stderr)
+    sys.exit(2)
 uniform = next(iter(b))
 for name in b:
     if name not in c:
