@@ -13,7 +13,7 @@
 //!   * bounded memory — a `CountSink` run holds one chunk + vocabularies,
 //!     never the dataset or the output.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use piper::accel::{InputFormat, Mode};
 use piper::benchutil::{bench_reps, bench_rows, dataset, median};
@@ -367,6 +367,168 @@ fn main() {
         json.push_str("  ]\n}\n");
         std::fs::write(&path, json).expect("writing BENCH_PR5_JSON");
         println!("per-column program rows written to {path}");
+        println!();
+    }
+
+    // ---- stage-pipeline overlap sweep (fused, vocab-heavy) --------------
+    // The stage-pipelined scheduler question: decode + stateless ops are
+    // sharded, but the vocabulary scan is pinned sequential (appearance
+    // order = determinism). Does running chunk N+1's frontend while
+    // chunk N sits in the vocab stage push fused throughput toward the
+    // slower stage's standalone rate? Grid: decode_threads ×
+    // pipeline_depth on the vocab-heavy CPU fused plan, plus a two-pass
+    // reference at the widest frontend. Every cell is checksum-gated
+    // against the two-pass output before timing. BENCH_PR8_JSON=path
+    // writes the grid machine-readably (scripts/bench_snapshot.sh).
+    let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+    let two_ref = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(m.range))
+        .schema(ds.schema())
+        .input(InputFormat::Utf8)
+        .chunk_rows(32 * 1024)
+        .strategy(ExecStrategy::TwoPass)
+        .executor(Backend::Cpu { kind: ConfigKind::I, threads: 4 }.executor())
+        .build()
+        .expect("plan");
+    let want_sum = checksum(&two_ref.run_collect(&mut src).expect("two-pass reference").0);
+
+    let mut t = Table::new(
+        &format!("stage-pipeline overlap — CPU-4 fused, UTF-8, {rows} rows, median of {reps} [meas]"),
+        &[
+            "decode_threads",
+            "depth",
+            "wall",
+            "rows/s",
+            "stateless busy",
+            "vocab busy",
+            "vocab wait",
+        ],
+    );
+    // (decode_threads, depth, wall_s, rows_per_s, stateless_s, vocab_busy_s, vocab_wait_s)
+    let mut grid: Vec<(usize, usize, f64, f64, f64, f64, f64)> = Vec::new();
+    for &threads in &[1usize, 4] {
+        for &depth in &[1usize, 2, 4] {
+            let pipeline = PipelineBuilder::new()
+                .spec(PipelineSpec::dlrm(m.range))
+                .schema(ds.schema())
+                .input(InputFormat::Utf8)
+                .chunk_rows(32 * 1024)
+                .decode_threads(threads)
+                .strategy(ExecStrategy::Fused)
+                .pipeline_depth(depth)
+                .executor(Backend::Cpu { kind: ConfigKind::I, threads: 4 }.executor())
+                .build()
+                .expect("plan");
+            // Determinism gate: any depth must reproduce the two-pass
+            // output bit for bit.
+            let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+            let (cols, _) = pipeline.run_collect(&mut src).expect("overlap run");
+            assert_eq!(
+                checksum(&cols),
+                want_sum,
+                "decode_threads={threads} pipeline_depth={depth} changed the output"
+            );
+            drop(cols);
+            let mut walls = Vec::with_capacity(reps);
+            let mut split = (Duration::ZERO, Duration::ZERO, Duration::ZERO);
+            for _ in 0..reps {
+                let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+                let mut sink = CountSink::new();
+                let t0 = Instant::now();
+                let report = pipeline.run(&mut src, &mut sink).expect("overlap run");
+                walls.push(t0.elapsed());
+                split = (report.stage_stateless_time, report.observe_time, report.vocab_wait_time);
+            }
+            let wall = median(walls);
+            let rps = rows as f64 / wall.as_secs_f64().max(1e-12);
+            t.row(&[
+                threads.to_string(),
+                depth.to_string(),
+                fmt_duration(wall),
+                fmt_rows_per_sec(rps),
+                fmt_duration(split.0),
+                fmt_duration(split.1),
+                fmt_duration(split.2),
+            ]);
+            grid.push((
+                threads,
+                depth,
+                wall.as_secs_f64(),
+                rps,
+                split.0.as_secs_f64(),
+                split.1.as_secs_f64(),
+                split.2.as_secs_f64(),
+            ));
+        }
+    }
+    let two_wall = median(
+        (0..reps)
+            .map(|_| {
+                let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+                let mut sink = CountSink::new();
+                let t0 = Instant::now();
+                two_ref.run(&mut src, &mut sink).expect("two-pass run");
+                t0.elapsed()
+            })
+            .collect(),
+    );
+    // Overlap efficiency at the widest frontend: the depth-1 cell gives
+    // the per-stage serial costs (frontend = wall − vocab busy); the
+    // pipelined ideal is max(frontend, vocab), and efficiency is how
+    // close the best depth>1 cell gets to it.
+    let d1 = grid
+        .iter()
+        .find(|g| g.0 == 4 && g.1 == 1)
+        .copied()
+        .expect("depth-1 cell present");
+    let vocab_s = d1.5;
+    let frontend_s = (d1.2 - vocab_s).max(1e-12);
+    let ideal_s = frontend_s.max(vocab_s);
+    let best = grid
+        .iter()
+        .filter(|g| g.0 == 4 && g.1 > 1)
+        .fold(f64::INFINITY, |acc, g| acc.min(g.2));
+    let efficiency = ideal_s / best.max(1e-12);
+    t.note("depth 1 = sequential chunk-at-a-time; depth N keeps N chunks in flight");
+    t.note(&format!(
+        "ideal wall (max stage, 4 threads) {:.3}s vs best pipelined {:.3}s — {:.0}% of ideal; two-pass {:.3}s",
+        ideal_s,
+        best,
+        efficiency * 100.0,
+        two_wall.as_secs_f64(),
+    ));
+    t.print();
+    println!();
+
+    if let Ok(path) = std::env::var("BENCH_PR8_JSON") {
+        let mut json =
+            String::from("{\n  \"bench\": \"pipeline_engine/stage_pipeline_overlap\",\n");
+        json.push_str(&format!("  \"rows\": {rows},\n  \"reps\": {reps},\n"));
+        json.push_str(&format!("  \"checksum\": \"{want_sum:#018x}\",\n  \"grid\": [\n"));
+        for (i, (threads, depth, wall_s, rps, stateless_s, vocab_s, wait_s)) in
+            grid.iter().enumerate()
+        {
+            json.push_str(&format!(
+                "    {{\"decode_threads\": {threads}, \"pipeline_depth\": {depth}, \
+                 \"wall_s\": {wall_s:.6}, \"rows_per_s\": {rps:.0}, \
+                 \"stateless_s\": {stateless_s:.6}, \"vocab_busy_s\": {vocab_s:.6}, \
+                 \"vocab_wait_s\": {wait_s:.6}}}{}\n",
+                if i + 1 < grid.len() { "," } else { "" }
+            ));
+        }
+        json.push_str("  ],\n");
+        json.push_str(&format!(
+            "  \"two_pass\": {{\"decode_threads\": 4, \"wall_s\": {:.6}, \"rows_per_s\": {:.0}}},\n",
+            two_wall.as_secs_f64(),
+            rows as f64 / two_wall.as_secs_f64().max(1e-12),
+        ));
+        json.push_str(&format!(
+            "  \"overlap\": {{\"ideal_wall_s\": {ideal_s:.6}, \"best_wall_s\": {best:.6}, \
+             \"efficiency\": {efficiency:.4}}}\n"
+        ));
+        json.push_str("}\n");
+        std::fs::write(&path, json).expect("writing BENCH_PR8_JSON");
+        println!("stage-pipeline overlap grid written to {path}");
         println!();
     }
 

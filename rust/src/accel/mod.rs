@@ -326,6 +326,23 @@ impl ExecutorRun for PiperExecRun {
         sink.push(&out)
     }
 
+    /// Stage-split for the pipelined fused scheduler — the exact
+    /// decomposition of [`ChunkState::process_fused`], mirroring the
+    /// hardware's concurrently-active dataflow stages on the host: the
+    /// engine overlaps chunk N+1's decode+stateless work with chunk N's
+    /// ordered vocab scan. Output stays bit-identical.
+    fn stages(&mut self) -> Option<crate::pipeline::FusedStages<'_>> {
+        let (programs, vocabs) = self.state.stage_split();
+        Some(crate::pipeline::FusedStages {
+            stateless: Box::new(move |block: &RowBlock| {
+                crate::pipeline::executor::stateless_range(programs, block, 0..block.num_rows())
+            }),
+            vocab: Box::new(move |block: &RowBlock, out: &mut ProcessedColumns| {
+                crate::pipeline::executor::fuse_sparse_into(programs, vocabs, block, out);
+            }),
+        })
+    }
+
     fn observe(&mut self, block: &RowBlock) -> crate::Result<()> {
         let t0 = std::time::Instant::now();
         self.state.observe(block);
@@ -341,6 +358,10 @@ impl ExecutorRun for PiperExecRun {
     }
 
     fn finish(&mut self, stats: &StreamStats) -> crate::Result<ExecutorReport> {
+        // Engine-measured stage times under pipelined driving; zero when
+        // this run timed its own phases in `process_observing`.
+        self.process_time += stats.stateless_time;
+        self.observe_time += stats.vocab_time;
         let kernel = dataflow::model_timing(
             &self.cfg,
             stats.raw_bytes as usize,

@@ -35,7 +35,10 @@ use crate::accel::InputFormat;
 use crate::data::row::ProcessedColumns;
 use crate::data::RowBlock;
 use crate::ops::HashVocab;
-use crate::pipeline::{ChunkState, Executor, ExecutorReport, ExecutorRun, Plan, StreamStats};
+use crate::pipeline::executor::{fuse_sparse_into, stateless_range};
+use crate::pipeline::{
+    ChunkState, Executor, ExecutorReport, ExecutorRun, FusedStages, Plan, StreamStats,
+};
 use crate::report::TimeTag;
 use crate::Result;
 
@@ -174,6 +177,53 @@ impl ExecutorRun for CpuRun {
         sink.push(&out)
     }
 
+    /// Stage-split for the pipelined fused scheduler: the stateless
+    /// closure is the same shard-and-concatenate scaffold as
+    /// [`CpuRun::sharded`] over [`stateless_range`] (callable from the
+    /// engine's stage thread), the vocab closure is the sequential
+    /// in-order [`fuse_sparse_into`] scan. The two borrow disjoint
+    /// halves of the chunk state ([`ChunkState::stage_split`]), which is
+    /// what lets chunk N+1's stateless shards run while chunk N is
+    /// inside the vocab scan. A vocabulary-free plan has no sequential
+    /// stage to overlap — it reports `None` and keeps the fully sharded
+    /// sequential fused path.
+    fn stages(&mut self) -> Option<FusedStages<'_>> {
+        if !self.state.has_gen_vocab() {
+            return None;
+        }
+        let threads = self.threads;
+        let (programs, vocabs) = self.state.stage_split();
+        let stateless = Box::new(move |block: &RowBlock| {
+            let rows = block.num_rows();
+            if threads <= 1 || rows < 2 * threads {
+                return stateless_range(programs, block, 0..rows);
+            }
+            let parts = partition_rows(rows, threads);
+            let mut shards: Vec<ProcessedColumns> = Vec::with_capacity(parts.len());
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = parts
+                    .iter()
+                    .map(|range| {
+                        let range = range.clone();
+                        scope.spawn(move || stateless_range(programs, block, range))
+                    })
+                    .collect();
+                for h in handles {
+                    shards.push(h.join().expect("CPU shard worker panicked"));
+                }
+            });
+            let mut out = shards.remove(0);
+            for b in &shards {
+                out.extend_from(b);
+            }
+            out
+        });
+        let vocab = Box::new(move |block: &RowBlock, out: &mut ProcessedColumns| {
+            fuse_sparse_into(programs, vocabs, block, out);
+        });
+        Some(FusedStages { stateless, vocab })
+    }
+
     fn observe(&mut self, block: &RowBlock) -> Result<()> {
         let t0 = Instant::now();
         let rows = block.num_rows();
@@ -211,6 +261,11 @@ impl ExecutorRun for CpuRun {
     }
 
     fn finish(&mut self, stats: &StreamStats) -> Result<ExecutorReport> {
+        // Under pipelined driving the engine measures the stage times
+        // (this run's closures never see a clock); fold them into the
+        // same observe/process split the sequential path times inline.
+        self.process_time += stats.stateless_time;
+        self.observe_time += stats.vocab_time;
         // Config I round-trips intermediates through (simulated) disk —
         // the same byte volumes the staged baseline charges: SIF writes
         // the sub-files, GV reads them back and writes the partially

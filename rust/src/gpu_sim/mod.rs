@@ -341,6 +341,23 @@ impl ExecutorRun for GpuExecRun {
         sink.push(&out)
     }
 
+    /// Stage-split for the pipelined fused scheduler — the exact
+    /// decomposition of [`ChunkState::process_fused`] (stateless full
+    /// range, then the in-order sparse fuse), so pipelined output is
+    /// bit-identical. The host-side work is single-threaded either way;
+    /// the engine still overlaps it with decode of the next chunk.
+    fn stages(&mut self) -> Option<crate::pipeline::FusedStages<'_>> {
+        let (programs, vocabs) = self.state.stage_split();
+        Some(crate::pipeline::FusedStages {
+            stateless: Box::new(move |block: &crate::data::RowBlock| {
+                crate::pipeline::executor::stateless_range(programs, block, 0..block.num_rows())
+            }),
+            vocab: Box::new(move |block: &crate::data::RowBlock, out: &mut ProcessedColumns| {
+                crate::pipeline::executor::fuse_sparse_into(programs, vocabs, block, out);
+            }),
+        })
+    }
+
     fn observe(&mut self, block: &crate::data::RowBlock) -> Result<()> {
         let t0 = std::time::Instant::now();
         self.state.observe(block);
@@ -356,6 +373,10 @@ impl ExecutorRun for GpuExecRun {
     }
 
     fn finish(&mut self, stats: &StreamStats) -> Result<ExecutorReport> {
+        // Engine-measured stage times under pipelined driving; zero when
+        // this run timed its own phases in `process_observing`.
+        self.process_time += stats.stateless_time;
+        self.observe_time += stats.vocab_time;
         let unique_total = self.state.vocab_entries();
         let utf8_bytes = match self.input {
             crate::accel::InputFormat::Utf8 => Some(stats.raw_bytes as usize),

@@ -37,11 +37,13 @@ COMMANDS:
               vocab=5000 threads=8 cpu_config=1|2|3 chunk_rows=65536 spec='modulus:5000|genvocab|...'
               strategy=fused|two-pass (default: fused when the backend supports it)
               decode_threads=N (default: one per core; 1 = sequential decode)
+              pipeline_depth=N (fused in-flight chunk window, default 2; 1 = sequential)
               save_artifact=PATH (also freeze the vocabularies to an artifact)
   compare     rows=20000 vocab=5000 format=utf8|binary
   serve       addr=127.0.0.1:7700 jobs=1 (jobs=0: accept connections forever)
   submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000 spec='...'
               strategy=fused|two-pass timeout=30 deadline=0 retries=2 backoff_ms=50
+              pipeline_depth=N (leader read-ahead window, default 1)
               (addr=A,B,... shards the job across a worker cluster, two-pass)
   freeze      input=PATH format=utf8|binary out=vocab.artifact vocab=5000 spec='...'
               dense=13 sparse=26 chunk=1048576
@@ -62,7 +64,13 @@ preprocess and submit stream the input file in bounded chunks — the
 dataset is never resident in memory. Under the fused strategy (the
 default) vocabulary generation and application run in ONE decode pass;
 strategy=two-pass reproduces the classic two-loop baseline with its
-rewind.
+rewind. pipeline_depth= sizes the fused stage pipeline's in-flight
+chunk window: at depth >= 2 chunk N+1's decode and stateless column
+work overlap chunk N's sequential vocabulary scan (output stays
+bit-identical — the vocab stage runs strictly in chunk order), and the
+report's stage split shows the reclaimed decode idle. For submit it is
+the leader's source read-ahead window: disk reads overlap the network
+send.
 
 timeout= is the per-socket read/write deadline in seconds (0 disables
 it), deadline= a wall-clock budget for the whole job in seconds (0 =
@@ -151,6 +159,7 @@ fn net_config_of(cfg: &Config) -> Result<net::NetConfig> {
         retries: cfg.get_usize("retries", defaults.retries as usize)? as u32,
         backoff: std::time::Duration::from_millis(cfg.get_u64("backoff_ms", 50)?),
         backoff_cap: defaults.backoff_cap,
+        leader_window: defaults.leader_window,
     })
 }
 
@@ -235,6 +244,9 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
     if cfg.get("decode_threads").is_some() {
         builder = builder.decode_threads(cfg.get_usize("decode_threads", 1)?);
     }
+    if cfg.get("pipeline_depth").is_some() {
+        builder = builder.pipeline_depth(cfg.get_usize("pipeline_depth", 2)?);
+    }
     let pipeline = builder.build()?;
     let mut source = FileSource::open(Path::new(path), format)?;
     let mut sink = piper::pipeline::CountSink::new();
@@ -265,6 +277,18 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
         piper::report::fmt_duration(report.decode_time),
         report.decode_threads,
     ));
+    if report.pipeline_depth > 1 {
+        t.note(&format!(
+            "stage pipeline: depth {} — stateless busy {}, vocab busy {}, \
+             vocab wait {} [meas]",
+            report.pipeline_depth,
+            piper::report::fmt_duration(report.stage_stateless_time),
+            piper::report::fmt_duration(report.observe_time),
+            piper::report::fmt_duration(report.vocab_wait_time),
+        ));
+    } else {
+        t.note("stage pipeline: depth 1 (sequential chunk-at-a-time driving)");
+    }
     if report.illegal_bytes > 0 {
         t.note(&format!(
             "WARNING: {} illegal input byte(s) skipped — affected fields may be corrupt",
@@ -486,7 +510,11 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
         Some(s) => piper::pipeline::ExecStrategy::parse(s)?,
         None => piper::pipeline::ExecStrategy::Fused, // single-node default
     };
-    let netcfg = net_config_of(cfg)?;
+    let mut netcfg = net_config_of(cfg)?;
+    // The worker protocol is strictly chunk-at-a-time, so pipelining a
+    // submit happens on the leader: a read-ahead window of source
+    // chunks overlaps disk reads with the network send.
+    netcfg.leader_window = cfg.get_usize("pipeline_depth", 1)?.max(1);
     if addr.contains(',') {
         // Cluster mode: shard the job across every listed worker. The
         // global vocabulary merge forces the two-pass protocol, and the

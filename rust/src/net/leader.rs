@@ -88,6 +88,12 @@ pub fn run_leader_source(
 /// collector's error wins when it carries the worker's own
 /// [`NetError::JobFailed`] reason — a send-side broken pipe is usually
 /// just the echo of the worker aborting the session.
+///
+/// With [`NetConfig::leader_window`] >= 2 each pass additionally reads
+/// ahead: a prefetch thread pulls source chunks while this thread
+/// writes frames, overlapping disk reads with the network send (the
+/// `submit`-side analogue of the engine's `pipeline_depth`). The wire
+/// protocol and the worker are unchanged.
 pub fn run_leader_source_cfg(
     addr: &str,
     job: &Job,
@@ -114,16 +120,18 @@ pub fn run_leader_source_cfg(
     let mut writer = std::io::BufWriter::with_capacity(1 << 20, stream.try_clone()?);
 
     protocol::write_frame(&mut writer, Tag::Job, &job.encode())?;
-    // One reused chunk buffer per submission — the leader's resident
-    // raw-input memory, regardless of dataset size.
-    let mut chunk = Vec::new();
 
     if strategy == ExecStrategy::TwoPass {
         // Pass 1 produces no results, so no reader is needed yet.
-        while source.next_chunk(chunk_size.max(1), &mut chunk)? {
-            clock.check("sending pass 1")?;
-            protocol::write_frame(&mut writer, Tag::Pass1Chunk, &chunk)?;
-        }
+        stream_pass(
+            &mut writer,
+            &mut *source,
+            chunk_size,
+            Tag::Pass1Chunk,
+            &clock,
+            cfg.leader_window,
+            "sending pass 1",
+        )?;
         protocol::write_frame(&mut writer, Tag::Pass1End, &[])?;
         source.reset()?;
     }
@@ -166,10 +174,15 @@ pub fn run_leader_source_cfg(
             ExecStrategy::Fused => (Tag::FusedChunk, Tag::FusedEnd),
             ExecStrategy::TwoPass => (Tag::Pass2Chunk, Tag::Pass2End),
         };
-        while source.next_chunk(chunk_size.max(1), &mut chunk)? {
-            clock.check("sending the emitting pass")?;
-            protocol::write_frame(&mut writer, chunk_tag, &chunk)?;
-        }
+        stream_pass(
+            &mut writer,
+            &mut *source,
+            chunk_size,
+            chunk_tag,
+            &clock,
+            cfg.leader_window,
+            "sending the emitting pass",
+        )?;
         protocol::write_frame(&mut writer, end_tag, &[])?;
         use std::io::Write as _;
         writer.flush()?;
@@ -193,6 +206,75 @@ pub fn run_leader_source_cfg(
         (Ok(()), Err(collect_err)) => return Err(collect_err),
     };
     Ok(LeaderRun { processed, stats, wallclock: start.elapsed() })
+}
+
+/// Stream one pass of `source` as `tag` frames onto `writer`.
+///
+/// `window <= 1` is the classic sequential loop: one reused chunk
+/// buffer, read then send, so the leader's resident raw-input memory is
+/// a single chunk regardless of dataset size. `window >= 2` spawns a
+/// scoped prefetch thread that reads up to `window - 1` chunks ahead of
+/// the socket through a bounded channel, with consumed buffers
+/// recycling back over a pool lane — peak leader memory becomes
+/// `window × chunk_size`, still dataset-size-independent. The job
+/// clock is checked per frame on the writing side either way. Error
+/// precedence matches the engine's streaming loop: a source (prefetch)
+/// error explains any downstream write error and wins.
+fn stream_pass<W: std::io::Write>(
+    writer: &mut W,
+    source: &mut dyn Source,
+    chunk_size: usize,
+    tag: Tag,
+    clock: &JobClock,
+    window: usize,
+    what: &'static str,
+) -> Result<()> {
+    let chunk_size = chunk_size.max(1);
+    if window <= 1 {
+        let mut chunk = Vec::new();
+        while source.next_chunk(chunk_size, &mut chunk)? {
+            clock.check(what)?;
+            protocol::write_frame(writer, tag, &chunk)?;
+        }
+        return Ok(());
+    }
+    std::thread::scope(|scope| {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<u8>>(window - 1);
+        let (pool_tx, pool_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+        let producer = scope.spawn(move || -> Result<()> {
+            loop {
+                let mut buf = pool_rx.try_recv().unwrap_or_default();
+                if !source.next_chunk(chunk_size, &mut buf)? {
+                    break;
+                }
+                if tx.send(buf).is_err() {
+                    break; // writer bailed; its error surfaces below
+                }
+            }
+            Ok(())
+        });
+        let mut write_err: Option<anyhow::Error> = None;
+        for chunk in &rx {
+            let step = clock
+                .check(what)
+                .and_then(|()| protocol::write_frame(writer, tag, &chunk));
+            let _ = pool_tx.send(chunk); // recycle the buffer
+            if let Err(e) = step {
+                write_err = Some(e);
+                break;
+            }
+        }
+        drop(rx); // unblock the prefetcher if we bailed early
+        let produced = producer
+            .join()
+            .map_err(|_| anyhow::anyhow!("leader prefetch thread panicked"))?;
+        match (produced, write_err) {
+            // A source error explains any downstream write failure.
+            (Err(e), _) => Err(e),
+            (Ok(()), Some(e)) => Err(e),
+            (Ok(()), None) => Ok(()),
+        }
+    })
 }
 
 /// Spawn a worker on an ephemeral loopback port, run the leader against
@@ -289,6 +371,33 @@ mod tests {
         let two = run_with(ExecStrategy::TwoPass);
         assert_eq!(fused.processed, two.processed);
         assert_eq!(fused.stats, two.stats);
+    }
+
+    /// The leader's read-ahead window must be invisible on the wire:
+    /// same rows, same stats, under both strategies (each pass
+    /// prefetches), even with tiny chunks forcing deep queue cycling.
+    #[test]
+    fn leader_read_ahead_window_matches_sequential() {
+        let ds = SynthDataset::generate(SynthConfig::small(160));
+        let m = Modulus::new(997);
+        let raw = utf8::encode_dataset(&ds);
+        let job = Job::dlrm(ds.schema(), m, WireFormat::Utf8);
+        let run_with = |window: usize, strategy: ExecStrategy| {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let worker = std::thread::spawn(move || super::super::worker::serve_one(&listener));
+            let cfg = NetConfig { leader_window: window, ..NetConfig::default() };
+            let run =
+                run_leader_cfg(&addr.to_string(), &job, &raw, 64, strategy, &cfg).unwrap();
+            worker.join().unwrap().unwrap();
+            run
+        };
+        let seq = run_with(1, ExecStrategy::Fused);
+        let pre = run_with(4, ExecStrategy::Fused);
+        assert_eq!(pre.processed, seq.processed, "read-ahead must not change output");
+        assert_eq!(pre.stats, seq.stats);
+        let two = run_with(4, ExecStrategy::TwoPass);
+        assert_eq!(two.processed, seq.processed, "both passes must prefetch correctly");
     }
 
     #[test]

@@ -78,6 +78,15 @@ pub struct NetConfig {
     pub backoff: Duration,
     /// Cap on the doubled backoff.
     pub backoff_cap: Duration,
+    /// Leader-side source read-ahead window (chunks), the `submit`
+    /// analogue of the engine's `pipeline_depth`: at depth >= 2 a
+    /// producer thread prefetches up to this many chunks ahead of the
+    /// socket, overlapping disk reads with the network send. The wire
+    /// protocol is unchanged — the worker still consumes strictly
+    /// chunk-at-a-time; only the leader's I/O overlaps. 1 (the default)
+    /// = the sequential read-then-send loop. Values below 1 are
+    /// treated as 1.
+    pub leader_window: usize,
 }
 
 impl Default for NetConfig {
@@ -88,6 +97,7 @@ impl Default for NetConfig {
             retries: 2,
             backoff: Duration::from_millis(50),
             backoff_cap: Duration::from_secs(2),
+            leader_window: 1,
         }
     }
 }

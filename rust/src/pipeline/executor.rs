@@ -34,6 +34,20 @@
 //! value — [`super::PipelineBuilder::build`] picks the strategy from
 //! [`Executor::supports_fused`] and the equivalence suite pins the
 //! identity for every backend.
+//!
+//! ## The stage-split API (pipelined fused execution)
+//!
+//! A fused chunk decomposes into two phases with disjoint state: the
+//! **stateless** phase (labels, dense finishing, vocab-free sparse
+//! programs — reads only the immutable compiled programs) and the
+//! **vocab** phase (the sequential in-order observe/apply scan — the
+//! only writer of vocabulary state). [`ExecutorRun::stages`] surfaces
+//! that split as a [`FusedStages`] pair of closures so the engine can
+//! run chunk N+1's decode+stateless work *concurrently* with chunk N's
+//! vocab scan ([`super::PipelineBuilder::pipeline_depth`]). Ordering:
+//! the engine calls `vocab` strictly in chunk order from one thread —
+//! appearance indices are fixed at first appearance, so the pipelined
+//! schedule stays bit-identical to the sequential fused pass.
 
 use std::ops::Range;
 use std::time::Duration;
@@ -114,6 +128,41 @@ pub trait ExecutorRun: Send {
     /// End of submission; `stats` carries the engine's stream totals for
     /// the timing models.
     fn finish(&mut self, stats: &StreamStats) -> Result<ExecutorReport>;
+
+    /// Split this run's fused pass into its stateless and vocab stages
+    /// ([`FusedStages`]) so the engine's stage-pipelined scheduler can
+    /// overlap them across chunks. `None` (the default) means the run
+    /// cannot be stage-split and the engine falls back to driving
+    /// [`Self::process_observing`] chunk-at-a-time. Only meaningful
+    /// under the fused strategy; the engine calls it at most once per
+    /// submission, and a run driven through its stages never sees
+    /// `process_observing`.
+    fn stages(&mut self) -> Option<FusedStages<'_>> {
+        None
+    }
+}
+
+/// The fused pass of one [`ExecutorRun`], split into the two stages the
+/// engine's pipelined scheduler drives independently (see the module
+/// docs). Both closures borrow disjoint halves of the run
+/// ([`ChunkState::stage_split`]), which is what makes the overlap safe:
+///
+/// * `stateless` — stage (b): labels + dense finishing + vocab-free
+///   sparse programs over a decoded chunk. Touches no vocabulary state
+///   (`Fn`, `Sync`), so the engine may call it from the decode stage
+///   thread while `vocab` is mid-scan on an *earlier* chunk.
+/// * `vocab` — stage (c): the sequential in-order observe/apply scan
+///   filling the vocabulary columns of the stateless stage's output.
+///   The engine calls it from exactly one thread, strictly in chunk
+///   order (the per-stage ordering lock) — the invariant that keeps
+///   appearance-order index assignment bit-identical.
+///
+/// A vocabulary-free plan still splits cleanly: `vocab` degenerates to
+/// a structural no-op (every column was already filled by `stateless`),
+/// so the pipeline uniformly overlaps decode with processing.
+pub struct FusedStages<'r> {
+    pub stateless: Box<dyn Fn(&RowBlock) -> ProcessedColumns + Send + Sync + 'r>,
+    pub vocab: Box<dyn FnMut(&RowBlock, &mut ProcessedColumns) + Send + 'r>,
 }
 
 /// Stream totals the engine accumulates over one submission.
@@ -125,6 +174,17 @@ pub struct StreamStats {
     pub chunks: u64,
     /// Wallclock of the whole submission, measured by the engine.
     pub wall: Duration,
+    /// Engine-measured busy time of the stateless stage when the run
+    /// was driven through [`ExecutorRun::stages`] (zero otherwise —
+    /// then the executor timed its own phases inside
+    /// `process_observing`). Executors fold it into their
+    /// `process_time` at [`ExecutorRun::finish`].
+    pub stateless_time: Duration,
+    /// Engine-measured busy time of the ordered vocab stage under
+    /// pipelined driving (zero otherwise). Executors fold it into
+    /// their `observe_time` at [`ExecutorRun::finish`] — it *is* the
+    /// GenVocab work, scheduled by the engine.
+    pub vocab_time: Duration,
 }
 
 /// What an executor reports at the end of a submission.
@@ -291,26 +351,19 @@ impl ChunkState {
         block: &RowBlock,
         range: Range<usize>,
     ) -> ProcessedColumns {
-        let mut out = ProcessedColumns::with_schema(self.schema());
-        out.labels.extend_from_slice(&block.labels()[range.clone()]);
-        for (c, dst) in out.dense.iter_mut().enumerate() {
-            let col = &block.dense_col(c)[range.clone()];
-            // each dense column runs its own compiled kernel chain (the
-            // common chains are specialized inside `run`)
-            self.programs.dense[c].run(col, dst);
-        }
-        for (c, dst) in out.sparse.iter_mut().enumerate() {
-            let slot = &self.programs.sparse[c];
-            if !slot.is_stateless() {
-                continue; // the vocabulary stages fill this column
-            }
-            let col = &block.sparse_col(c)[range.clone()];
-            dst.reserve(col.len());
-            for &s in col {
-                dst.push(slot.map(s));
-            }
-        }
-        out
+        stateless_range(&self.programs, block, range)
+    }
+
+    /// Split this state into the stage-pipelined scheduler's two
+    /// disjoint halves: the immutable compiled programs (shared with the
+    /// stateless stage, which may run on another thread) and the mutable
+    /// vocabularies (exclusive to the ordered vocab stage). The borrow
+    /// split is what lets chunk N+1's stateless stage run while chunk N
+    /// is inside the sequential vocab scan without aliasing vocabulary
+    /// state — the foundation every [`super::ExecutorRun::stages`]
+    /// implementation builds its [`FusedStages`] closures on.
+    pub fn stage_split(&mut self) -> (&ColumnPlans, &mut [HashVocab]) {
+        (&self.programs, &mut self.vocabs)
     }
 
     /// Fused sparse stage: one sequential in-order scan per
@@ -325,41 +378,7 @@ impl ChunkState {
     /// cannot shard this stage across threads, which is exactly the
     /// scaling wall §2.3 describes.
     pub fn fuse_sparse(&mut self, block: &RowBlock, out: &mut ProcessedColumns) {
-        for (c, vocab) in self.vocabs.iter_mut().enumerate() {
-            let slot = self.programs.sparse[c];
-            if slot.is_stateless() {
-                continue; // filled by the sharded stateless stage
-            }
-            let col = block.sparse_col(c);
-            let dst = &mut out.sparse[c];
-            let start = dst.len();
-            dst.resize(start + col.len(), 0);
-            let dst = &mut dst[start..];
-            match (slot.gen_vocab, slot.apply_vocab) {
-                (true, true) => {
-                    for (&s, o) in col.iter().zip(dst.iter_mut()) {
-                        *o = vocab.observe_apply(slot.map(s));
-                    }
-                }
-                (true, false) => {
-                    for (&s, o) in col.iter().zip(dst.iter_mut()) {
-                        let v = slot.map(s);
-                        vocab.observe(v);
-                        *o = v;
-                    }
-                }
-                (false, _) => {
-                    // Only ApplyVocab-without-GenVocab reaches here
-                    // (stateless columns were skipped above) — program
-                    // validation forbids the combination, so if it ever
-                    // slips through, emit the explicit miss sentinel
-                    // rather than aliasing index 0.
-                    for (&s, o) in col.iter().zip(dst.iter_mut()) {
-                        *o = vocab.apply(slot.map(s)).unwrap_or(VOCAB_MISS);
-                    }
-                }
-            }
-        }
+        fuse_sparse_into(&self.programs, &mut self.vocabs, block, out);
     }
 
     /// Fused single pass over a whole chunk: stateless stage + fused
@@ -372,6 +391,84 @@ impl ChunkState {
 
     pub fn vocab_entries(&self) -> usize {
         self.vocabs.iter().map(|v| v.len()).sum()
+    }
+}
+
+/// Free-function form of [`ChunkState::process_stateless_range`],
+/// operating on the programs half of a [`ChunkState::stage_split`] —
+/// the body every stateless-stage closure runs, on whatever thread the
+/// scheduler put it.
+pub fn stateless_range(
+    programs: &ColumnPlans,
+    block: &RowBlock,
+    range: Range<usize>,
+) -> ProcessedColumns {
+    let mut out = ProcessedColumns::with_schema(programs.schema);
+    out.labels.extend_from_slice(&block.labels()[range.clone()]);
+    for (c, dst) in out.dense.iter_mut().enumerate() {
+        let col = &block.dense_col(c)[range.clone()];
+        // each dense column runs its own compiled kernel chain (the
+        // common chains are specialized inside `run`)
+        programs.dense[c].run(col, dst);
+    }
+    for (c, dst) in out.sparse.iter_mut().enumerate() {
+        let slot = &programs.sparse[c];
+        if !slot.is_stateless() {
+            continue; // the vocabulary stages fill this column
+        }
+        let col = &block.sparse_col(c)[range.clone()];
+        dst.reserve(col.len());
+        for &s in col {
+            dst.push(slot.map(s));
+        }
+    }
+    out
+}
+
+/// Free-function form of [`ChunkState::fuse_sparse`], operating on the
+/// split borrows of [`ChunkState::stage_split`] — the body of every
+/// vocab-stage closure. Must be called strictly in chunk order (it
+/// assigns appearance indices).
+pub fn fuse_sparse_into(
+    programs: &ColumnPlans,
+    vocabs: &mut [HashVocab],
+    block: &RowBlock,
+    out: &mut ProcessedColumns,
+) {
+    for (c, vocab) in vocabs.iter_mut().enumerate() {
+        let slot = programs.sparse[c];
+        if slot.is_stateless() {
+            continue; // filled by the sharded stateless stage
+        }
+        let col = block.sparse_col(c);
+        let dst = &mut out.sparse[c];
+        let start = dst.len();
+        dst.resize(start + col.len(), 0);
+        let dst = &mut dst[start..];
+        match (slot.gen_vocab, slot.apply_vocab) {
+            (true, true) => {
+                for (&s, o) in col.iter().zip(dst.iter_mut()) {
+                    *o = vocab.observe_apply(slot.map(s));
+                }
+            }
+            (true, false) => {
+                for (&s, o) in col.iter().zip(dst.iter_mut()) {
+                    let v = slot.map(s);
+                    vocab.observe(v);
+                    *o = v;
+                }
+            }
+            (false, _) => {
+                // Only ApplyVocab-without-GenVocab reaches here
+                // (stateless columns were skipped above) — program
+                // validation forbids the combination, so if it ever
+                // slips through, emit the explicit miss sentinel
+                // rather than aliasing index 0.
+                for (&s, o) in col.iter().zip(dst.iter_mut()) {
+                    *o = vocab.apply(slot.map(s)).unwrap_or(VOCAB_MISS);
+                }
+            }
+        }
     }
 }
 

@@ -47,6 +47,7 @@ fn chaos_cfg() -> NetConfig {
         retries: 2,
         backoff: ms(10),
         backoff_cap: ms(100),
+        leader_window: 1,
     }
 }
 

@@ -76,6 +76,119 @@ impl<S: Source> Source for ResetMeter<S> {
     }
 }
 
+/// Seeded adversarial source: chunk sizes jump pseudorandomly between a
+/// single byte and the full requested budget, so successive chunks
+/// decode at wildly different speeds — tiny dribbles race through the
+/// stage pipeline while a full chunk is still decoding behind them.
+/// Reordering stress for the scheduler's ordering locks; deterministic
+/// per seed, and rewindable so two-pass can run the same stream.
+struct JitterSource<'a> {
+    raw: &'a [u8],
+    pos: usize,
+    format: InputFormat,
+    seed: u64,
+    state: u64,
+}
+
+impl<'a> JitterSource<'a> {
+    fn new(raw: &'a [u8], format: InputFormat, seed: u64) -> Self {
+        JitterSource { raw, pos: 0, format, seed, state: seed }
+    }
+}
+
+impl Source for JitterSource<'_> {
+    fn format(&self) -> InputFormat {
+        self.format
+    }
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> piper::Result<bool> {
+        buf.clear();
+        if self.pos >= self.raw.len() {
+            return Ok(false);
+        }
+        // LCG step (Knuth MMIX constants); high bits decide the size.
+        self.state = self
+            .state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let take = (1 + (self.state >> 33) as usize % max_bytes.max(1))
+            .min(self.raw.len() - self.pos);
+        buf.extend_from_slice(&self.raw[self.pos..self.pos + take]);
+        self.pos += take;
+        Ok(true)
+    }
+    fn can_rewind(&self) -> bool {
+        true
+    }
+    fn reset(&mut self) -> piper::Result<()> {
+        self.pos = 0;
+        self.state = self.seed;
+        Ok(())
+    }
+}
+
+/// The stage-pipelined scheduler's acceptance pin: for every executor ×
+/// format, and for `pipeline_depth ∈ {1, 2, 4}`, fused output is
+/// bit-identical to the two-pass reference — over a well-behaved memory
+/// source and over the adversarial jitter source whose chunk sizes (and
+/// therefore decode times) swing wildly.
+#[test]
+fn pipelined_depths_bit_identical_across_executors_sources_formats() {
+    let ds = dataset();
+    for input in [InputFormat::Utf8, InputFormat::Binary] {
+        let raw = match input {
+            InputFormat::Utf8 => utf8::encode_dataset(&ds),
+            InputFormat::Binary => binary::encode_dataset(&ds),
+        };
+        for backend in all_backends(input) {
+            let mut src = MemorySource::new(&raw, input);
+            let (want, _) = build(&backend, input, ExecStrategy::TwoPass)
+                .run_collect(&mut src)
+                .unwrap();
+
+            for depth in [1usize, 2, 4] {
+                let pipeline = PipelineBuilder::new()
+                    .spec(PipelineSpec::dlrm(VOCAB))
+                    .schema(ds.schema())
+                    .input(input)
+                    .chunk_rows(64)
+                    .strategy(ExecStrategy::Fused)
+                    .pipeline_depth(depth)
+                    .executor(backend.executor())
+                    .build()
+                    .unwrap();
+
+                let mut src = MemorySource::new(&raw, input);
+                let (cols, report) = pipeline.run_collect(&mut src).unwrap();
+                assert_eq!(
+                    cols,
+                    want,
+                    "{} {input:?} depth {depth}: pipelined fused must match two-pass",
+                    backend.name()
+                );
+                assert_eq!(report.decode_passes, 1);
+                assert_eq!(
+                    report.pipeline_depth, depth,
+                    "{} {input:?}: effective depth must be reported",
+                    backend.name()
+                );
+
+                // The same pipeline over the adversarial stream: chunk
+                // boundaries move, decode speeds swing, output must not.
+                let mut jit = JitterSource::new(&raw, input, 0xC0FFEE ^ depth as u64);
+                let (jit_cols, jit_report) = pipeline.run_collect(&mut jit).unwrap();
+                assert_eq!(
+                    jit_cols,
+                    want,
+                    "{} {input:?} depth {depth} / jitter source",
+                    backend.name()
+                );
+                assert_eq!(jit_report.rows, ROWS);
+                assert!(jit_report.chunks >= report.chunks, "jitter must fragment the stream");
+            }
+        }
+    }
+}
+
 /// The refactor's core guarantee: fused == two-pass, bit for bit, for
 /// every executor × format × source kind.
 #[test]

@@ -1,13 +1,16 @@
 #!/usr/bin/env sh
-# Guard the two committed perf tentpoles against regressions:
+# Guard the committed perf tentpoles against regressions:
 #   BENCH_pr4.json — decode-threads sweep (row-sharded SWAR decode)
 #   BENCH_pr5.json — uniform vs heterogeneous per-column programs
+#   BENCH_pr8.json — stage-pipeline overlap grid (pipelined fused)
 #
 # Runs the pipeline_engine bench fresh, then compares *machine-portable
 # ratios* against the committed baselines — decode thread-scaling
-# (max-threads vs 1) and per-program relative throughput — not absolute
-# rows/s, which would just measure the CI runner. A ratio drop larger
-# than THRESHOLD (default 25%) fails the script.
+# (max-threads vs 1), per-program relative throughput, and the
+# stage-pipeline speedups (pipelined vs depth-1 fused, pipelined vs
+# two-pass) plus its overlap efficiency — not absolute rows/s, which
+# would just measure the CI runner. A ratio drop larger than THRESHOLD
+# (default 25%) fails the script.
 #
 # Usage: scripts/bench_compare.sh [--bless]
 #   --bless     overwrite the baselines with this machine's fresh run
@@ -25,28 +28,31 @@ REPS="${PIPER_BENCH_REPS:-5}"
 THRESHOLD="${THRESHOLD:-25}"
 BASE4="$ROOT/BENCH_pr4.json"
 BASE5="$ROOT/BENCH_pr5.json"
+BASE8="$ROOT/BENCH_pr8.json"
 
 TMP="$(mktemp -d)"
 trap 'rm -rf "$TMP"' EXIT
 CUR4="$TMP/pr4.json"
 CUR5="$TMP/pr5.json"
+CUR8="$TMP/pr8.json"
 
 echo "bench_compare: running pipeline_engine ($ROWS rows, $REPS reps)"
 cd "$ROOT/rust"
 PIPER_BENCH_ROWS="$ROWS" PIPER_BENCH_REPS="$REPS" \
-    BENCH_JSON="$CUR4" BENCH_PR5_JSON="$CUR5" \
+    BENCH_JSON="$CUR4" BENCH_PR5_JSON="$CUR5" BENCH_PR8_JSON="$CUR8" \
     cargo bench --bench pipeline_engine >/dev/null
 
 if [ "${1:-}" = "--bless" ]; then
     cp "$CUR4" "$BASE4"
     cp "$CUR5" "$BASE5"
-    echo "bench_compare: baselines blessed -> $BASE4, $BASE5"
+    cp "$CUR8" "$BASE8"
+    echo "bench_compare: baselines blessed -> $BASE4, $BASE5, $BASE8"
     exit 0
 fi
 
 # A missing baseline is a setup error, never a silent pass (or a silent
 # bless of whatever this machine happens to produce).
-for base in "$BASE4" "$BASE5"; do
+for base in "$BASE4" "$BASE5" "$BASE8"; do
     if [ ! -f "$base" ]; then
         echo "bench_compare: ERROR: baseline $base is missing." >&2
         echo "  Run 'scripts/bench_compare.sh --bless' on a reference machine" >&2
@@ -55,12 +61,12 @@ for base in "$BASE4" "$BASE5"; do
     fi
 done
 
-python3 - "$BASE4" "$CUR4" "$BASE5" "$CUR5" "$THRESHOLD" <<'EOF'
+python3 - "$BASE4" "$CUR4" "$BASE5" "$CUR5" "$BASE8" "$CUR8" "$THRESHOLD" <<'EOF'
 import json
 import sys
 
 docs = []
-for path in sys.argv[1:5]:
+for path in sys.argv[1:7]:
     try:
         with open(path) as f:
             docs.append(json.load(f))
@@ -70,8 +76,8 @@ for path in sys.argv[1:5]:
         print("  Re-bless the baselines with 'scripts/bench_compare.sh --bless' "
               "and commit them.", file=sys.stderr)
         sys.exit(2)
-base4, cur4, base5, cur5 = docs
-threshold = float(sys.argv[5])
+base4, cur4, base5, cur5, base8, cur8 = docs
+threshold = float(sys.argv[7])
 failures = []
 
 
@@ -93,13 +99,26 @@ def program_rps(doc):
     return {p["program"]: p["rows_per_s"] for p in doc["programs"]}
 
 
+def overlap_ratios(doc):
+    """(pipelined-vs-depth1 speedup, pipelined-vs-two-pass speedup,
+    overlap efficiency) at the widest decode frontend in the grid."""
+    cells = doc["grid"]
+    widest = max(c["decode_threads"] for c in cells)
+    at = [c for c in cells if c["decode_threads"] == widest]
+    d1 = next(c["wall_s"] for c in at if c["pipeline_depth"] == 1)
+    best = min(c["wall_s"] for c in at if c["pipeline_depth"] > 1)
+    two = doc["two_pass"]["wall_s"]
+    return d1 / best, two / best, doc["overlap"]["efficiency"]
+
+
 try:
     print("decode-threads sweep (PR 4):")
     ratio_check("decode scaling, max threads vs 1",
                 decode_scaling(base4), decode_scaling(cur4))
     print("per-column programs (PR 5):")
     b, c = program_rps(base5), program_rps(cur5)
-except (KeyError, TypeError) as e:
+    b8, c8 = overlap_ratios(base8), overlap_ratios(cur8)
+except (KeyError, TypeError, StopIteration, ValueError) as e:
     print(f"bench_compare: ERROR: baseline/current JSON has an unexpected shape ({e!r}).",
           file=sys.stderr)
     print("  Re-bless the baselines with 'scripts/bench_compare.sh --bless' "
@@ -111,6 +130,10 @@ for name in b:
         failures.append(f"{name} missing from the current run")
         continue
     ratio_check(f"{name} vs {uniform}", b[name] / b[uniform], c[name] / c[uniform])
+print("stage-pipeline overlap (PR 8):")
+ratio_check("pipelined vs depth-1 fused", b8[0], c8[0])
+ratio_check("pipelined vs two-pass", b8[1], c8[1])
+ratio_check("overlap efficiency vs ideal stage wall", b8[2], c8[2])
 
 if failures:
     print(f"bench_compare: regression beyond {threshold}%: " + ", ".join(failures))
