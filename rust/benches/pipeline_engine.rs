@@ -21,6 +21,7 @@ use piper::coordinator::{self, Backend, Experiment};
 use piper::cpu_baseline::ConfigKind;
 use piper::data::row::ProcessedColumns;
 use piper::data::utf8;
+use piper::decode::ErrorPolicy;
 use piper::ops::{Modulus, PipelineSpec};
 use piper::pipeline::{CountSink, ExecStrategy, MemorySource, PipelineBuilder, SynthSource};
 use piper::report::{fmt_duration, fmt_rows_per_sec, fmt_speedup, Table};
@@ -529,6 +530,98 @@ fn main() {
         json.push_str("}\n");
         std::fs::write(&path, json).expect("writing BENCH_PR8_JSON");
         println!("stage-pipeline overlap grid written to {path}");
+        println!();
+    }
+
+    // ---- error-containment policy overhead (clean input) ----------------
+    // The containment tax question: with zero malformed rows, what does
+    // carrying an error policy cost? Same CPU fused plan, same clean
+    // UTF-8 input; only `on_error` varies (quarantine also creates an
+    // empty side file). Every policy is checksum-gated against the zero
+    // baseline before timing. BENCH_PR9_JSON=path writes the rows
+    // machine-readably; scripts/bench_compare.sh holds skip and fail
+    // within 2% of zero and quarantine within 10%.
+    let qpath =
+        std::env::temp_dir().join(format!("piper-bench-qrn-{}.bin", std::process::id()));
+    let mut t = Table::new(
+        &format!(
+            "containment policy overhead on clean input ({rows} rows, median of {reps}) [meas]"
+        ),
+        &["on_error", "wallclock", "rows/s", "vs zero"],
+    );
+    let mut pr9_rows: Vec<(&str, f64, f64)> = Vec::new();
+    let mut pr9_sum: Option<u64> = None;
+    let mut zero_wall: Option<Duration> = None;
+    for policy in ["zero", "fail", "skip", "quarantine"] {
+        let mut b = PipelineBuilder::new()
+            .spec(PipelineSpec::dlrm(m.range))
+            .schema(ds.schema())
+            .input(InputFormat::Utf8)
+            .chunk_rows(32 * 1024)
+            .strategy(ExecStrategy::Fused)
+            .executor(Backend::Cpu { kind: ConfigKind::I, threads: 4 }.executor());
+        b = match policy {
+            "quarantine" => b.quarantine(&qpath),
+            _ => b.on_error(ErrorPolicy::parse(policy).expect("policy parses")),
+        };
+        let pipeline = b.build().expect("plan");
+        // Correctness gate: clean input keeps every row, contains
+        // nothing, and checksums identical under every policy.
+        let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+        let (cols, report) = pipeline.run_collect(&mut src).expect("policy run");
+        assert_eq!(report.rows, rows, "{policy}: clean input keeps every row");
+        assert_eq!(report.row_errors.total, 0, "{policy}: clean input has no defects");
+        let sum = checksum(&cols);
+        drop(cols);
+        match pr9_sum {
+            None => pr9_sum = Some(sum),
+            Some(w) => assert_eq!(sum, w, "{policy}: policy changed clean output"),
+        }
+        let wall = median(
+            (0..reps)
+                .map(|_| {
+                    let mut src = MemorySource::new(&raw, InputFormat::Utf8);
+                    let mut sink = CountSink::new();
+                    let t0 = Instant::now();
+                    pipeline.run(&mut src, &mut sink).expect("policy run");
+                    t0.elapsed()
+                })
+                .collect(),
+        );
+        let base = *zero_wall.get_or_insert(wall);
+        let ratio = wall.as_secs_f64() / base.as_secs_f64().max(1e-12);
+        t.row(&[
+            policy.into(),
+            fmt_duration(wall),
+            fmt_rows_per_sec(rows as f64 / wall.as_secs_f64()),
+            format!("{ratio:.2}×"),
+        ]);
+        pr9_rows.push((policy, wall.as_secs_f64(), rows as f64 / wall.as_secs_f64()));
+    }
+    let _ = std::fs::remove_file(&qpath);
+    t.note("CPU-4 fused, UTF-8; the policy branch is per defect, not per row");
+    t.note("quarantine additionally creates (and here leaves empty) the side file");
+    t.print();
+    println!();
+
+    if let Ok(path) = std::env::var("BENCH_PR9_JSON") {
+        let mut json =
+            String::from("{\n  \"bench\": \"pipeline_engine/containment_policy_overhead\",\n");
+        json.push_str(&format!("  \"rows\": {rows},\n  \"reps\": {reps},\n"));
+        json.push_str(&format!(
+            "  \"checksum\": \"{:#018x}\",\n  \"policies\": [\n",
+            pr9_sum.unwrap()
+        ));
+        for (i, (policy, wall_s, rps)) in pr9_rows.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"policy\": \"{policy}\", \"wall_s\": {wall_s:.6}, \
+                 \"rows_per_s\": {rps:.0}}}{}\n",
+                if i + 1 < pr9_rows.len() { "," } else { "" }
+            ));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::write(&path, json).expect("writing BENCH_PR9_JSON");
+        println!("containment policy overhead written to {path}");
         println!();
     }
 

@@ -297,7 +297,7 @@ fn decode_only(schema: Schema, raw: &[u8], threads: usize, swar: bool) -> (u64, 
     let mut dec = ChunkDecoder::with_options(
         InputFormat::Utf8,
         schema,
-        DecodeOptions { threads, swar },
+        DecodeOptions { threads, swar, ..Default::default() },
     );
     let mut block = RowBlock::with_capacity(schema, CHUNK_ROWS);
     let mut sum = 0xcbf29ce484222325u64;

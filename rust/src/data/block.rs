@@ -253,6 +253,38 @@ impl RowBlock {
         windows
     }
 
+    /// Close the gaps left by partially-filled windows from a prior
+    /// [`Self::disjoint_row_windows`] call: window `i` committed
+    /// `committed[i]` rows starting at `start` but only filled
+    /// `filled[i]` of them (a dropping error policy skipped the rest).
+    /// Each window's filled prefix slides down to be contiguous and the
+    /// block's length shrinks to the rows actually present. Costs one
+    /// `copy_within` per column per displaced window; a fully-filled
+    /// decode never calls this.
+    pub fn compact_rows(&mut self, start: usize, committed: &[usize], filled: &[usize]) {
+        assert_eq!(committed.len(), filled.len());
+        let total: usize = committed.iter().sum();
+        assert!(start + total == self.len, "compact_rows must cover the latest windows");
+        let cap = self.cap;
+        let (mut src, mut dst) = (start, start);
+        for (&c, &f) in committed.iter().zip(filled) {
+            assert!(f <= c, "window filled {f} of {c} rows");
+            if f > 0 && dst != src {
+                self.labels.copy_within(src..src + f, dst);
+                for col in 0..self.schema.num_dense {
+                    self.dense.copy_within(col * cap + src..col * cap + src + f, col * cap + dst);
+                }
+                for col in 0..self.schema.num_sparse {
+                    self.sparse.copy_within(col * cap + src..col * cap + src + f, col * cap + dst);
+                }
+            }
+            src += c;
+            dst += f;
+        }
+        self.labels.truncate(dst);
+        self.len = dst;
+    }
+
     /// Row `r` as an owned [`DecodedRow`] — test/convenience view.
     pub fn row(&self, r: usize) -> DecodedRow {
         assert!(r < self.len, "row {r} out of {} rows", self.len);

@@ -1,0 +1,516 @@
+//! Row-level error containment: a typed defect taxonomy, containment
+//! policies, and error budgets.
+//!
+//! The decoder (scalar and SWAR alike) classifies every malformed row it
+//! meets into a [`RowErrorKind`] and then applies an [`ErrorPolicy`] to
+//! decide the row's fate: emit it zero-filled (the engine's historical
+//! behavior), drop it, capture its raw bytes for replay, or abort the job.
+//! Detection is **independent of policy** — the same input produces the
+//! same [`RowErrorLog`] under every policy, which is what lets two-pass
+//! plans make identical keep/drop decisions on both passes and lets a
+//! cluster merge per-worker counters without re-reading bytes.
+//!
+//! Offsets in this module are **stream-absolute**: byte positions in the
+//! logical input stream, stable across chunk boundaries, shard splits, and
+//! decode-thread counts. The equivalence suite pins that the scalar and
+//! SWAR paths report the same kinds at the same offsets.
+
+use std::fmt;
+use std::path::PathBuf;
+
+use super::IllegalLog;
+
+/// Classification of a malformed row.
+///
+/// A row carries at most one kind: the first defect *detected* wins.
+/// Detection order is deterministic and identical across decode paths —
+/// field-level defects (overflow, oversize) are noted when their field
+/// closes, illegal bytes immediately, and wrong field count when the row
+/// ends — but it is not necessarily offset order within the row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum RowErrorKind {
+    /// A byte outside the dialect (not a nibble, `\t`, `\n`, or `-`).
+    IllegalByte = 0,
+    /// The row closed with a field count different from the schema's
+    /// `1 + dense + sparse`. Truncated rows and over-wide rows both land
+    /// here, as does a binary stream that ends mid-row.
+    WrongFieldCount = 1,
+    /// A numeric field whose value exceeds `u32::MAX` before wrapping.
+    NumericOverflow = 2,
+    /// A single field longer than [`MAX_FIELD_BYTES`](super::MAX_FIELD_BYTES).
+    OversizedField = 3,
+}
+
+impl RowErrorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RowErrorKind::IllegalByte => "illegal-byte",
+            RowErrorKind::WrongFieldCount => "wrong-field-count",
+            RowErrorKind::NumericOverflow => "numeric-overflow",
+            RowErrorKind::OversizedField => "oversized-field",
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(b: u8) -> Option<RowErrorKind> {
+        match b {
+            0 => Some(RowErrorKind::IllegalByte),
+            1 => Some(RowErrorKind::WrongFieldCount),
+            2 => Some(RowErrorKind::NumericOverflow),
+            3 => Some(RowErrorKind::OversizedField),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for RowErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One defective row: what was wrong, where the defect sits in the stream,
+/// and which row (0-based, counted over *all* rows, kept or not) it was.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowError {
+    pub kind: RowErrorKind,
+    /// Stream-absolute byte offset of the defect: the illegal byte, the
+    /// first byte of the offending field, or the row start for a wrong
+    /// field count.
+    pub offset: u64,
+    /// 0-based index of the row in the input stream.
+    pub row: u64,
+}
+
+impl fmt::Display for RowError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "row {}: {} at byte {}", self.row, self.kind, self.offset)
+    }
+}
+
+/// Default number of [`RowError`] details (and illegal-byte details) kept
+/// per run; totals keep counting past the cap.
+pub const DEFAULT_ERROR_DETAILS: usize = 64;
+
+/// Bounded log of defective rows: full counts, capped detail.
+///
+/// Mirrors [`IllegalLog`]'s contract: `recorded` keeps the first `cap`
+/// errors in stream order, `total` and the per-kind counters never stop.
+/// Merging shard logs in shard order preserves "first `cap` in stream
+/// order" because each shard's log is itself a stream-ordered prefix.
+#[derive(Debug, Clone)]
+pub struct RowErrorLog {
+    pub recorded: Vec<RowError>,
+    pub total: u64,
+    /// Per-kind totals, indexed by `RowErrorKind as u8`.
+    pub by_kind: [u64; 4],
+    cap: usize,
+}
+
+impl Default for RowErrorLog {
+    fn default() -> Self {
+        RowErrorLog::with_cap(DEFAULT_ERROR_DETAILS)
+    }
+}
+
+/// Capacity is a tuning knob, not an observation — two logs that saw the
+/// same errors compare equal even if their caps differ.
+impl PartialEq for RowErrorLog {
+    fn eq(&self, other: &Self) -> bool {
+        self.recorded == other.recorded
+            && self.total == other.total
+            && self.by_kind == other.by_kind
+    }
+}
+
+impl Eq for RowErrorLog {}
+
+impl RowErrorLog {
+    pub fn with_cap(cap: usize) -> RowErrorLog {
+        RowErrorLog { recorded: Vec::new(), total: 0, by_kind: [0; 4], cap }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn note(&mut self, err: RowError) {
+        if self.recorded.len() < self.cap {
+            self.recorded.push(err);
+        }
+        self.total += 1;
+        self.by_kind[err.kind.as_u8() as usize] += 1;
+    }
+
+    /// Fold `other` (a later stream segment) into `self`, keeping detail
+    /// up to `self.cap`.
+    pub fn merge(&mut self, other: &RowErrorLog) {
+        for err in &other.recorded {
+            if self.recorded.len() >= self.cap {
+                break;
+            }
+            self.recorded.push(*err);
+        }
+        self.total += other.total;
+        for (mine, theirs) in self.by_kind.iter_mut().zip(other.by_kind) {
+            *mine += theirs;
+        }
+    }
+
+    /// The earliest recorded error (stream order), if any.
+    pub fn first(&self) -> Option<&RowError> {
+        self.recorded.first()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+}
+
+/// What to do with a row the decoder has classified as defective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum ErrorPolicy {
+    /// Abort the job with a typed [`DataError`] naming the first defect.
+    Fail = 0,
+    /// Emit the row with unparseable content zero-filled — the engine's
+    /// historical behavior and the default.
+    #[default]
+    Zero = 1,
+    /// Drop the row and count it.
+    Skip = 2,
+    /// Drop the row, count it, and capture its raw bytes + offset + reason
+    /// for the quarantine sink.
+    Quarantine = 3,
+}
+
+impl ErrorPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorPolicy::Fail => "fail",
+            ErrorPolicy::Zero => "zero",
+            ErrorPolicy::Skip => "skip",
+            ErrorPolicy::Quarantine => "quarantine",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<ErrorPolicy> {
+        match s {
+            "fail" => Ok(ErrorPolicy::Fail),
+            "zero" => Ok(ErrorPolicy::Zero),
+            "skip" => Ok(ErrorPolicy::Skip),
+            "quarantine" => Ok(ErrorPolicy::Quarantine),
+            _ => anyhow::bail!(
+                "unknown error policy '{s}' (expected fail|zero|skip|quarantine)"
+            ),
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(b: u8) -> Option<ErrorPolicy> {
+        match b {
+            0 => Some(ErrorPolicy::Fail),
+            1 => Some(ErrorPolicy::Zero),
+            2 => Some(ErrorPolicy::Skip),
+            3 => Some(ErrorPolicy::Quarantine),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ErrorPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// How many defective rows a job tolerates before aborting.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ErrorBudget {
+    #[default]
+    Unlimited,
+    /// Abort once more than `n` rows are defective.
+    Count(u64),
+    /// Abort once the defective fraction of rows seen exceeds this rate
+    /// (checked at chunk granularity, so short bursts early in the stream
+    /// are judged against the rows seen so far, not the whole input).
+    Rate(f64),
+}
+
+impl ErrorBudget {
+    /// `true` once the budget is blown: `errors` defective rows out of
+    /// `rows` seen so far.
+    pub fn exceeded(&self, errors: u64, rows: u64) -> bool {
+        match *self {
+            ErrorBudget::Unlimited => false,
+            ErrorBudget::Count(n) => errors > n,
+            ErrorBudget::Rate(r) => rows > 0 && (errors as f64) > r * (rows as f64),
+        }
+    }
+
+    /// Parse a CLI budget: `none`, an absolute count (`12`), a percentage
+    /// (`0.5%`), or a bare fraction (`0.005`).
+    pub fn parse(s: &str) -> anyhow::Result<ErrorBudget> {
+        if s == "none" || s == "unlimited" {
+            return Ok(ErrorBudget::Unlimited);
+        }
+        if let Some(pct) = s.strip_suffix('%') {
+            let r: f64 = pct
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad error rate '{s}'"))?;
+            anyhow::ensure!(
+                (0.0..=100.0).contains(&r),
+                "error rate '{s}' out of range"
+            );
+            return Ok(ErrorBudget::Rate(r / 100.0));
+        }
+        if s.contains('.') {
+            let r: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad error rate '{s}'"))?;
+            anyhow::ensure!((0.0..=1.0).contains(&r), "error rate '{s}' out of range");
+            return Ok(ErrorBudget::Rate(r));
+        }
+        let n: u64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad error budget '{s}'"))?;
+        Ok(ErrorBudget::Count(n))
+    }
+
+    /// Wire form: a tag byte plus a little-endian f64 payload (counts are
+    /// exact below 2^53, far beyond any realistic budget).
+    pub fn to_wire(self) -> (u8, f64) {
+        match self {
+            ErrorBudget::Unlimited => (0, 0.0),
+            ErrorBudget::Count(n) => (1, n as f64),
+            ErrorBudget::Rate(r) => (2, r),
+        }
+    }
+
+    pub fn from_wire(tag: u8, val: f64) -> Option<ErrorBudget> {
+        match tag {
+            0 => Some(ErrorBudget::Unlimited),
+            1 => Some(ErrorBudget::Count(val as u64)),
+            2 => Some(ErrorBudget::Rate(val)),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ErrorBudget {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            ErrorBudget::Unlimited => f.write_str("unlimited"),
+            ErrorBudget::Count(n) => write!(f, "{n} rows"),
+            ErrorBudget::Rate(r) => write!(f, "{:.4}% of rows", r * 100.0),
+        }
+    }
+}
+
+/// Complete containment configuration threaded from the CLI / wire job
+/// down to every row assembler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorConfig {
+    pub policy: ErrorPolicy,
+    pub budget: ErrorBudget,
+    /// Detail cap for both [`RowErrorLog`] and [`IllegalLog`].
+    pub detail_cap: usize,
+}
+
+impl Default for ErrorConfig {
+    fn default() -> Self {
+        ErrorConfig {
+            policy: ErrorPolicy::default(),
+            budget: ErrorBudget::default(),
+            detail_cap: DEFAULT_ERROR_DETAILS,
+        }
+    }
+}
+
+impl ErrorConfig {
+    /// The configuration for a non-emitting (vocabulary observation) pass.
+    ///
+    /// Quarantine downgrades to skip: the keep/drop decisions are
+    /// identical, but raw bytes are captured — and counters reported —
+    /// only on the emit pass, matching the engine's "a two-pass plan reads
+    /// the bytes twice but reports them once" convention.
+    pub fn for_observe_pass(self) -> ErrorConfig {
+        ErrorConfig {
+            policy: match self.policy {
+                ErrorPolicy::Quarantine => ErrorPolicy::Skip,
+                p => p,
+            },
+            ..self
+        }
+    }
+}
+
+/// A row captured for the quarantine sink: enough to re-ingest it after an
+/// upstream fix, and enough to explain why it was pulled.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuarantinedRow {
+    /// 0-based index of the row in the input stream.
+    pub row: u64,
+    /// Stream-absolute offset of the row's first byte.
+    pub offset: u64,
+    pub kind: RowErrorKind,
+    /// The raw row bytes as read (utf8 rows include their terminator when
+    /// the stream had one), truncated at
+    /// [`MAX_QUARANTINE_ROW_BYTES`](super::MAX_QUARANTINE_ROW_BYTES).
+    pub bytes: Vec<u8>,
+}
+
+/// Everything a finished decoder knows about the stream's defects.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct DecodeTally {
+    pub illegal: IllegalLog,
+    pub errors: RowErrorLog,
+    /// Rows quarantined at finish time (per-chunk captures are drained
+    /// incrementally; see `ChunkDecoder::take_quarantined`).
+    pub quarantined: Vec<QuarantinedRow>,
+    /// Every row the decoder saw, kept or not.
+    pub rows_seen: u64,
+}
+
+/// Typed abort raised by `on_error=fail` and blown error budgets. Sits at
+/// the root of an `anyhow` chain; recover it with [`DataError::of`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataError {
+    /// Strict mode hit a defective row.
+    Row(RowError),
+    /// The error budget is exhausted.
+    BudgetExceeded {
+        errors: u64,
+        rows: u64,
+        budget: ErrorBudget,
+        /// The first recorded defect, when detail survived the cap.
+        first: Option<RowError>,
+    },
+}
+
+impl fmt::Display for DataError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DataError::Row(err) => {
+                write!(f, "malformed input ({}): {err}", err.kind)
+            }
+            DataError::BudgetExceeded { errors, rows, budget, first } => {
+                write!(
+                    f,
+                    "error budget exceeded: {errors} defective of {rows} rows (budget {budget})"
+                )?;
+                if let Some(err) = first {
+                    write!(f, "; first: {err}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for DataError {}
+
+impl DataError {
+    /// Recover the typed fault from an `anyhow` chain, if one is there.
+    pub fn of(err: &anyhow::Error) -> Option<&DataError> {
+        err.chain().find_map(|e| e.downcast_ref::<DataError>())
+    }
+}
+
+/// Where quarantined rows went: the side file plus how many records it
+/// holds. Carried on `RunReport`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct QuarantineSummary {
+    pub path: Option<PathBuf>,
+    pub rows: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_semantics() {
+        assert!(!ErrorBudget::Unlimited.exceeded(u64::MAX, 1));
+        assert!(!ErrorBudget::Count(3).exceeded(3, 10));
+        assert!(ErrorBudget::Count(3).exceeded(4, 10));
+        assert!(!ErrorBudget::Rate(0.5).exceeded(5, 10));
+        assert!(ErrorBudget::Rate(0.5).exceeded(6, 10));
+        assert!(!ErrorBudget::Rate(0.5).exceeded(0, 0));
+    }
+
+    #[test]
+    fn budget_parses() {
+        assert_eq!(ErrorBudget::parse("none").unwrap(), ErrorBudget::Unlimited);
+        assert_eq!(ErrorBudget::parse("12").unwrap(), ErrorBudget::Count(12));
+        assert_eq!(ErrorBudget::parse("0.5%").unwrap(), ErrorBudget::Rate(0.005));
+        assert_eq!(ErrorBudget::parse("0.02").unwrap(), ErrorBudget::Rate(0.02));
+        assert!(ErrorBudget::parse("101%").is_err());
+        assert!(ErrorBudget::parse("nope").is_err());
+    }
+
+    #[test]
+    fn policy_round_trips() {
+        for p in [
+            ErrorPolicy::Fail,
+            ErrorPolicy::Zero,
+            ErrorPolicy::Skip,
+            ErrorPolicy::Quarantine,
+        ] {
+            assert_eq!(ErrorPolicy::parse(p.name()).unwrap(), p);
+            assert_eq!(ErrorPolicy::from_u8(p.as_u8()), Some(p));
+        }
+        assert!(ErrorPolicy::parse("drop").is_err());
+    }
+
+    #[test]
+    fn log_caps_detail_not_totals() {
+        let mut log = RowErrorLog::with_cap(2);
+        for i in 0..5 {
+            log.note(RowError { kind: RowErrorKind::IllegalByte, offset: i, row: i });
+        }
+        assert_eq!(log.recorded.len(), 2);
+        assert_eq!(log.total, 5);
+        assert_eq!(log.by_kind[RowErrorKind::IllegalByte.as_u8() as usize], 5);
+        assert_eq!(log.first().unwrap().offset, 0);
+    }
+
+    #[test]
+    fn log_merge_keeps_stream_order_prefix() {
+        let mut a = RowErrorLog::with_cap(3);
+        a.note(RowError { kind: RowErrorKind::WrongFieldCount, offset: 1, row: 0 });
+        let mut b = RowErrorLog::with_cap(3);
+        b.note(RowError { kind: RowErrorKind::NumericOverflow, offset: 9, row: 4 });
+        b.note(RowError { kind: RowErrorKind::OversizedField, offset: 12, row: 5 });
+        b.note(RowError { kind: RowErrorKind::IllegalByte, offset: 20, row: 6 });
+        a.merge(&b);
+        assert_eq!(a.total, 4);
+        assert_eq!(a.recorded.len(), 3);
+        assert_eq!(a.recorded[1].offset, 9);
+        assert_eq!(a.by_kind, [1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn observe_pass_downgrades_quarantine_only() {
+        let cfg = ErrorConfig {
+            policy: ErrorPolicy::Quarantine,
+            budget: ErrorBudget::Count(5),
+            detail_cap: 7,
+        };
+        let obs = cfg.for_observe_pass();
+        assert_eq!(obs.policy, ErrorPolicy::Skip);
+        assert_eq!(obs.budget, cfg.budget);
+        assert_eq!(obs.detail_cap, 7);
+        assert_eq!(
+            ErrorConfig { policy: ErrorPolicy::Skip, ..cfg }.for_observe_pass().policy,
+            ErrorPolicy::Skip
+        );
+    }
+}

@@ -31,7 +31,15 @@
 //! absolute offset in the fed stream ([`IllegalLog`]), so a sharded
 //! decode reports positions within the original chunk, never within a
 //! shard.
+//!
+//! Beyond the byte level, the assembler classifies whole defective rows
+//! into the [`errors::RowError`] taxonomy and applies an
+//! [`errors::ErrorPolicy`] to each: emit zero-filled (legacy), skip,
+//! quarantine the raw bytes, or flag for abort. Detection runs in both
+//! the scalar and SWAR paths with identical results — same kinds, same
+//! stream-absolute offsets (pinned by `tests/decode_equivalence.rs`).
 
+pub mod errors;
 pub mod parallel;
 pub mod scalar;
 pub mod shard;
@@ -39,6 +47,10 @@ pub mod swar;
 
 use crate::data::{DecodedRow, PushRow, Schema};
 
+pub use errors::{
+    DataError, DecodeTally, ErrorBudget, ErrorConfig, ErrorPolicy, QuarantinedRow, RowError,
+    RowErrorKind, RowErrorLog,
+};
 pub use parallel::ParallelDecoder;
 pub use scalar::ScalarDecoder;
 pub use shard::ShardedUtf8Decoder;
@@ -110,25 +122,61 @@ pub struct IllegalByte {
     pub byte: u8,
 }
 
-/// Detail cap of [`IllegalLog`]: garbage input must not grow memory
-/// without bound, so only the first bytes are recorded individually
-/// while `total` keeps counting.
+/// Default detail cap of [`IllegalLog`]: garbage input must not grow
+/// memory without bound, so only the first bytes are recorded
+/// individually while `total` keeps counting. Configurable per run via
+/// [`IllegalLog::with_cap`] / `ErrorConfig::detail_cap`.
 pub const MAX_RECORDED_ILLEGAL: usize = 64;
 
-/// Record of the illegal bytes a decode skipped: the first
-/// [`MAX_RECORDED_ILLEGAL`] in stream order, plus the total count.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+/// A single field longer than this is classified
+/// [`RowErrorKind::OversizedField`] — no legal Criteo-dialect field
+/// (decimal i32 or 8-nibble hex) comes anywhere near it.
+pub const MAX_FIELD_BYTES: u32 = 64;
+
+/// Raw-byte capture cap per quarantined row: a pathological multi-MB
+/// "row" is recorded truncated rather than ballooning memory (such rows
+/// always carry an oversized-field or wrong-field-count defect anyway).
+pub const MAX_QUARANTINE_ROW_BYTES: usize = 1 << 20;
+
+/// Record of the illegal bytes a decode skipped: the first `cap` in
+/// stream order, plus the total count.
+#[derive(Debug, Clone)]
 pub struct IllegalLog {
     /// The first illegal bytes, in stream order.
     pub recorded: Vec<IllegalByte>,
     /// Total illegal bytes seen (may exceed `recorded.len()`).
     pub total: u64,
+    cap: usize,
 }
 
+impl Default for IllegalLog {
+    fn default() -> Self {
+        IllegalLog::with_cap(MAX_RECORDED_ILLEGAL)
+    }
+}
+
+/// The cap is a tuning knob, not an observation — logs compare by what
+/// they saw.
+impl PartialEq for IllegalLog {
+    fn eq(&self, other: &Self) -> bool {
+        self.recorded == other.recorded && self.total == other.total
+    }
+}
+
+impl Eq for IllegalLog {}
+
 impl IllegalLog {
+    pub fn with_cap(cap: usize) -> IllegalLog {
+        IllegalLog { recorded: Vec::new(), total: 0, cap }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
     #[inline]
     pub fn note(&mut self, offset: u64, byte: u8) {
-        if self.recorded.len() < MAX_RECORDED_ILLEGAL {
+        if self.recorded.len() < self.cap {
             self.recorded.push(IllegalByte { offset, byte });
         }
         self.total += 1;
@@ -137,11 +185,11 @@ impl IllegalLog {
     /// Append another log's entries (stream order: `other` follows
     /// `self`). Per-shard prefix truncation followed by this merge
     /// equals global prefix truncation, because a shard only drops
-    /// entries once it has recorded [`MAX_RECORDED_ILLEGAL`] of its
-    /// own — all of which precede the dropped ones globally.
+    /// entries once it has recorded `cap` of its own — all of which
+    /// precede the dropped ones globally.
     pub fn merge(&mut self, other: &IllegalLog) {
         for b in &other.recorded {
-            if self.recorded.len() == MAX_RECORDED_ILLEGAL {
+            if self.recorded.len() >= self.cap {
                 break;
             }
             self.recorded.push(*b);
@@ -194,10 +242,42 @@ pub struct RowAssembler {
     /// rebases it per shard via [`Self::set_stream_offset`].
     stream_offset: u64,
     illegal: IllegalLog,
+    /// Containment configuration (policy + detail cap; the budget is
+    /// enforced above the assembler, at chunk granularity).
+    cfg: ErrorConfig,
+    /// Defective rows seen so far (populated under every policy).
+    errors: RowErrorLog,
+    /// Rows captured under [`ErrorPolicy::Quarantine`]; drained by the
+    /// owner.
+    quarantined: Vec<QuarantinedRow>,
+    /// Raw bytes of the open row — maintained only when quarantining.
+    row_buf: Vec<u8>,
+    /// `cfg.policy == Quarantine`, hoisted out of the byte loop.
+    track_raw: bool,
+    /// Stream-absolute offset of the open row's first byte.
+    row_start: Option<u64>,
+    /// Stream-absolute offset of the open field's first byte.
+    field_start: u64,
+    /// Bytes in the open field (digits and `-`), for the oversize check.
+    field_len: u32,
+    /// Sticky per-field flag: the untruncated value exceeded `u32::MAX`.
+    field_overflow: bool,
+    /// First defect detected in the open row, if any.
+    defect: Option<(u64, RowErrorKind)>,
+    /// Absolute index of the next row to complete (kept or not); shard
+    /// decoding rebases it via [`Self::set_row_index`].
+    rows_seen: u64,
 }
 
 impl RowAssembler {
     pub fn new(schema: Schema) -> Self {
+        RowAssembler::with_errors(schema, ErrorConfig::default())
+    }
+
+    /// An assembler with an explicit containment configuration. The
+    /// default ([`ErrorPolicy::Zero`], unlimited budget) is bit-identical
+    /// to the engine's historical behavior.
+    pub fn with_errors(schema: Schema, cfg: ErrorConfig) -> Self {
         RowAssembler {
             schema,
             reg: 0,
@@ -209,7 +289,18 @@ impl RowAssembler {
             cur_sparse: vec![0; schema.num_sparse],
             out: Vec::new(),
             stream_offset: 0,
-            illegal: IllegalLog::default(),
+            illegal: IllegalLog::with_cap(cfg.detail_cap),
+            cfg,
+            errors: RowErrorLog::with_cap(cfg.detail_cap),
+            quarantined: Vec::new(),
+            row_buf: Vec::new(),
+            track_raw: cfg.policy == ErrorPolicy::Quarantine,
+            row_start: None,
+            field_start: 0,
+            field_len: 0,
+            field_overflow: false,
+            defect: None,
+            rows_seen: 0,
         }
     }
 
@@ -232,29 +323,124 @@ impl RowAssembler {
     /// Drain the illegal-byte log (the shard decoder aggregates shard
     /// logs in stream order).
     pub fn take_illegal(&mut self) -> IllegalLog {
-        std::mem::take(&mut self.illegal)
+        std::mem::replace(&mut self.illegal, IllegalLog::with_cap(self.cfg.detail_cap))
+    }
+
+    /// Defective rows seen so far.
+    pub fn errors(&self) -> &RowErrorLog {
+        &self.errors
+    }
+
+    /// Drain the row-error log (shard decoders aggregate in stream order).
+    pub fn take_errors(&mut self) -> RowErrorLog {
+        std::mem::replace(&mut self.errors, RowErrorLog::with_cap(self.cfg.detail_cap))
+    }
+
+    /// Drain rows captured under [`ErrorPolicy::Quarantine`].
+    pub fn take_quarantined(&mut self) -> Vec<QuarantinedRow> {
+        std::mem::take(&mut self.quarantined)
+    }
+
+    /// Absolute index of the next row to complete (== rows seen when the
+    /// base was 0).
+    pub fn row_index(&self) -> u64 {
+        self.rows_seen
+    }
+
+    /// Rebase the absolute row index, as [`Self::set_stream_offset`]
+    /// rebases byte offsets: a shard's assembler numbers rows within the
+    /// original stream.
+    pub fn set_row_index(&mut self, index: u64) {
+        self.rows_seen = index;
     }
 
     #[inline]
     fn push_nibble(&mut self, n: u8) {
-        // (a)/(b) of paper §3.2: decimal ×10+digit, hex <<4|digit.
-        self.reg = if self.hex_mode {
-            (self.reg << 4) | n as u32
+        // (a)/(b) of paper §3.2: decimal ×10+digit, hex <<4|digit — the
+        // fold runs in u64 so overflow past the 32-bit register is
+        // *observable* (sticky per-field flag) before the hardware-
+        // faithful truncation.
+        let wide = if self.hex_mode {
+            ((self.reg as u64) << 4) | n as u64
         } else {
-            self.reg.wrapping_mul(10).wrapping_add(n as u32)
+            (self.reg as u64) * 10 + n as u64
         };
+        self.field_overflow |= wide > u32::MAX as u64;
+        self.reg = wide as u32;
     }
 
     #[inline]
     fn note_illegal(&mut self, rel: usize, byte: u8) {
-        self.illegal.note(self.stream_offset + rel as u64, byte);
+        let abs = self.stream_offset + rel as u64;
+        self.illegal.note(abs, byte);
+        self.note_defect(abs, RowErrorKind::IllegalByte);
     }
 
-    /// Emit the scratch row into the sink and reset it.
+    /// Record the row's defect — first detected wins, so every decode
+    /// path (scalar, SWAR, sharded) classifies a row identically.
+    #[inline]
+    fn note_defect(&mut self, offset: u64, kind: RowErrorKind) {
+        if self.defect.is_none() {
+            self.defect = Some((offset, kind));
+        }
+    }
+
+    /// Append to the open row's raw capture, bounded by
+    /// [`MAX_QUARANTINE_ROW_BYTES`].
+    #[inline]
+    fn raw_bytes(&mut self, bytes: &[u8]) {
+        let room = MAX_QUARANTINE_ROW_BYTES.saturating_sub(self.row_buf.len());
+        let take = bytes.len().min(room);
+        self.row_buf.extend_from_slice(&bytes[..take]);
+    }
+
+    /// Emit the scratch row into the sink — or contain it, when a defect
+    /// was detected and the policy says so — and reset for the next row.
     #[inline]
     fn emit_row<S: PushRow + ?Sized>(&mut self, out: &mut S) {
-        out.push_row(self.cur_label, &self.cur_dense, &self.cur_sparse);
+        // A well-formed row has exactly label + dense + sparse fields;
+        // anything else (truncated or over-wide) is a defect unless an
+        // earlier one already classified the row.
+        if self.defect.is_none()
+            && self.col != 1 + self.schema.num_dense + self.schema.num_sparse
+        {
+            self.defect = Some((
+                self.row_start.unwrap_or(self.stream_offset),
+                RowErrorKind::WrongFieldCount,
+            ));
+        }
+        if self.defect.is_none() {
+            out.push_row(self.cur_label, &self.cur_dense, &self.cur_sparse);
+        } else {
+            self.contain_row(out);
+        }
+        self.rows_seen += 1;
         self.reset_row();
+    }
+
+    /// Apply the containment policy to a defective row.
+    #[cold]
+    fn contain_row<S: PushRow + ?Sized>(&mut self, out: &mut S) {
+        let (offset, kind) = self.defect.take().expect("contain_row without defect");
+        self.errors.note(RowError { kind, offset, row: self.rows_seen });
+        match self.cfg.policy {
+            // Legacy behavior: unparseable content reads as 0.
+            ErrorPolicy::Zero => {
+                out.push_row(self.cur_label, &self.cur_dense, &self.cur_sparse)
+            }
+            // The row is dropped; strict mode aborts above the assembler
+            // (the owner checks the log after the feed).
+            ErrorPolicy::Fail | ErrorPolicy::Skip => {}
+            ErrorPolicy::Quarantine => {
+                let bytes = std::mem::take(&mut self.row_buf);
+                self.quarantined.push(QuarantinedRow {
+                    row: self.rows_seen,
+                    offset: self.row_start.unwrap_or(offset),
+                    kind,
+                    bytes,
+                });
+            }
+        }
     }
 
     /// One classified byte through the state machine — THE byte-class
@@ -264,8 +450,18 @@ impl RowAssembler {
     /// within the current feed (for the illegal log).
     #[inline]
     fn step<S: PushRow + ?Sized>(&mut self, rel: usize, b: u8, out: &mut S) {
+        if self.track_raw {
+            self.raw_bytes(&[b]);
+        }
+        if self.row_start.is_none() {
+            self.row_start = Some(self.stream_offset + rel as u64);
+        }
         let code = CLASS_LUT[b as usize];
         if code < 16 {
+            if self.field_len == 0 {
+                self.field_start = self.stream_offset + rel as u64;
+            }
+            self.field_len += 1;
             self.push_nibble(code);
         } else if code == CODE_TAB {
             self.finish_field();
@@ -273,6 +469,10 @@ impl RowAssembler {
             self.finish_field();
             self.emit_row(out);
         } else if code == CODE_MINUS {
+            if self.field_len == 0 {
+                self.field_start = self.stream_offset + rel as u64;
+            }
+            self.field_len += 1;
             self.negative_flag = true;
         } else {
             self.note_illegal(rel, b);
@@ -299,7 +499,7 @@ impl RowAssembler {
             let w = u64::from_le_bytes(word.try_into().expect("8-byte word"));
             let specials = swar::HI & !swar::nibble_mask(w);
             if specials == 0 {
-                self.gulp(word);
+                self.gulp(word, pos);
             } else {
                 self.fold_word(word, specials, pos, out);
             }
@@ -317,18 +517,37 @@ impl RowAssembler {
     /// register (`u32` truncation discards overflow exactly like eight
     /// single shifts), decimal runs use `reg·10^k + D mod 2^32`, which
     /// equals `k` wrapping `reg = reg*10 + d` steps by distributivity.
+    /// `rel` is the run's offset within the current feed.
+    ///
+    /// The overflow flag agrees with the per-byte path: both folds are
+    /// monotone in added digits, so *some* per-byte intermediate exceeds
+    /// `u32::MAX` iff the gulp's untruncated result does; and once a
+    /// field has overflowed, the flag is sticky while the register
+    /// stays bit-exact (mod-2^32 arithmetic commutes with truncation).
     #[inline]
-    fn gulp(&mut self, run: &[u8]) {
+    fn gulp(&mut self, run: &[u8], rel: usize) {
         let k = run.len();
         debug_assert!((1..=8).contains(&k));
+        if self.track_raw {
+            self.raw_bytes(run);
+        }
+        if self.row_start.is_none() {
+            self.row_start = Some(self.stream_offset + rel as u64);
+        }
+        if self.field_len == 0 {
+            self.field_start = self.stream_offset + rel as u64;
+        }
+        self.field_len += k as u32;
         let vals = swar::nibble_values(swar::load_le(run));
-        if self.hex_mode {
+        let wide = if self.hex_mode {
             let packed = swar::pack_hex(vals) >> (4 * (8 - k));
-            self.reg = (((self.reg as u64) << (4 * k)) | packed as u64) as u32;
+            ((self.reg as u64) << (4 * k)) | packed as u64
         } else {
             let d = swar::fold_dec(vals << (8 * (8 - k)));
-            self.reg = self.reg.wrapping_mul(swar::POW10[k]).wrapping_add(d);
-        }
+            (self.reg as u64) * swar::POW10[k] as u64 + d as u64
+        };
+        self.field_overflow |= wide > u32::MAX as u64;
+        self.reg = wide as u32;
     }
 
     /// Slow lane of the SWAR loop: a word containing at least one
@@ -345,14 +564,14 @@ impl RowAssembler {
         while specials != 0 {
             let sp = (specials.trailing_zeros() >> 3) as usize;
             if sp > i {
-                self.gulp(&word[i..sp]);
+                self.gulp(&word[i..sp], base + i);
             }
             self.step(base + sp, word[sp], out);
             i = sp + 1;
             specials &= specials - 1;
         }
         if i < word.len() {
-            self.gulp(&word[i..]);
+            self.gulp(&word[i..], base + i);
         }
     }
 
@@ -388,6 +607,13 @@ impl RowAssembler {
     /// field leaves reg = 0, which *is* the FillMissing default.
     #[inline]
     fn finish_field(&mut self) {
+        if self.field_len > MAX_FIELD_BYTES {
+            self.note_defect(self.field_start, RowErrorKind::OversizedField);
+        } else if self.field_overflow {
+            self.note_defect(self.field_start, RowErrorKind::NumericOverflow);
+        }
+        self.field_len = 0;
+        self.field_overflow = false;
         let value = if self.negative_flag {
             (self.reg as i32).wrapping_neg() as u32 // two's complement
         } else {
@@ -417,6 +643,11 @@ impl RowAssembler {
         self.cur_sparse.fill(0);
         self.col = 0;
         self.hex_mode = false;
+        self.row_start = None;
+        self.field_len = 0;
+        self.field_overflow = false;
+        self.defect = None;
+        self.row_buf.clear();
     }
 
     #[inline]
@@ -439,13 +670,34 @@ impl RowAssembler {
     /// the open row. Callers that fed via [`Self::feed_bytes_into`] must
     /// finish through here (any row-wise-fed rows are appended first,
     /// in order).
-    pub fn finish_into<S: PushRow + ?Sized>(mut self, out: &mut S) {
+    pub fn finish_into<S: PushRow + ?Sized>(&mut self, out: &mut S) {
         for row in std::mem::take(&mut self.out) {
             out.push_row(row.label, &row.dense, &row.sparse);
         }
         if self.col != 0 || self.reg != 0 || self.negative_flag {
             self.finish_field();
             self.emit_row(out);
+        } else if self.defect.is_some() || self.field_len > 0 {
+            // Trailing bytes that never formed a row the zero-fill path
+            // would materialize (garbage after the last newline, or a
+            // dangling all-zero field): no row under any policy — the
+            // historical behavior — but still one defective row.
+            let (offset, kind) = self.defect.take().unwrap_or((
+                self.row_start.unwrap_or(self.stream_offset),
+                RowErrorKind::WrongFieldCount,
+            ));
+            self.errors.note(RowError { kind, offset, row: self.rows_seen });
+            if self.track_raw {
+                let bytes = std::mem::take(&mut self.row_buf);
+                self.quarantined.push(QuarantinedRow {
+                    row: self.rows_seen,
+                    offset: self.row_start.unwrap_or(offset),
+                    kind,
+                    bytes,
+                });
+            }
+            self.rows_seen += 1;
+            self.reset_row();
         }
     }
 

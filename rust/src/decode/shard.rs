@@ -29,7 +29,10 @@ use std::ops::Range;
 
 use crate::data::{DecodedRow, RowBlock, Schema};
 
-use super::{swar, IllegalLog, RowAssembler};
+use super::{
+    swar, DecodeTally, ErrorConfig, ErrorPolicy, IllegalLog, QuarantinedRow, RowAssembler,
+    RowErrorLog,
+};
 
 /// Don't spin up a shard for less than this many bytes — below it the
 /// scoped-thread overhead outweighs the decode (EXPERIMENTS.md §Decode).
@@ -45,23 +48,37 @@ pub struct ShardedUtf8Decoder {
     schema: Schema,
     threads: usize,
     swar: bool,
+    cfg: ErrorConfig,
     /// The persistent assembler: carries the row straddling chunk
     /// boundaries, and decodes each chunk's prefix/tail sequentially.
     carry: RowAssembler,
     /// Absolute offset of the next chunk's first byte.
     stream_pos: u64,
+    /// Absolute index of the next row (kept or not) — the base for
+    /// per-shard row numbering.
+    rows_seen: u64,
     illegal: IllegalLog,
+    errors: RowErrorLog,
+    quarantined: Vec<QuarantinedRow>,
 }
 
 impl ShardedUtf8Decoder {
     pub fn new(schema: Schema, threads: usize, swar: bool) -> Self {
+        Self::with_errors(schema, threads, swar, ErrorConfig::default())
+    }
+
+    pub fn with_errors(schema: Schema, threads: usize, swar: bool, cfg: ErrorConfig) -> Self {
         ShardedUtf8Decoder {
             schema,
             threads: threads.max(1),
             swar,
-            carry: RowAssembler::new(schema),
+            cfg,
+            carry: RowAssembler::with_errors(schema, cfg),
             stream_pos: 0,
-            illegal: IllegalLog::default(),
+            rows_seen: 0,
+            illegal: IllegalLog::with_cap(cfg.detail_cap),
+            errors: RowErrorLog::with_cap(cfg.detail_cap),
+            quarantined: Vec::new(),
         }
     }
 
@@ -72,6 +89,21 @@ impl ShardedUtf8Decoder {
     /// Illegal bytes skipped so far, offsets absolute in the stream.
     pub fn illegal(&self) -> &IllegalLog {
         &self.illegal
+    }
+
+    /// Defective rows seen so far, offsets absolute in the stream.
+    pub fn errors(&self) -> &RowErrorLog {
+        &self.errors
+    }
+
+    /// Every row seen so far, kept or not.
+    pub fn rows_seen(&self) -> u64 {
+        self.rows_seen
+    }
+
+    /// Drain the rows captured under [`ErrorPolicy::Quarantine`] so far.
+    pub fn take_quarantined(&mut self) -> Vec<QuarantinedRow> {
+        std::mem::take(&mut self.quarantined)
     }
 
     /// Feed one chunk, appending every row it completes to `out`.
@@ -113,23 +145,42 @@ impl ShardedUtf8Decoder {
     }
 
     /// Finish the stream: complete a trailing row without `\n`, if any.
-    pub fn finish_into(self, out: &mut RowBlock) -> IllegalLog {
+    pub fn finish_into(mut self, out: &mut RowBlock) -> DecodeTally {
+        self.carry.set_row_index(self.rows_seen);
         self.carry.finish_into(out);
-        self.illegal
+        self.drain_carry();
+        DecodeTally {
+            illegal: self.illegal,
+            errors: self.errors,
+            quarantined: self.quarantined,
+            rows_seen: self.rows_seen,
+        }
     }
 
     /// Sequential lane: feed `bytes` through the persistent assembler
-    /// and absorb its illegal log (keeping stream order: carry segments
-    /// are always drained before and after any sharded body).
+    /// and absorb its logs (keeping stream order: carry segments are
+    /// always drained before and after any sharded body).
     fn feed_carry(&mut self, bytes: &[u8], base: u64, out: &mut RowBlock) {
         self.carry.set_stream_offset(base);
+        self.carry.set_row_index(self.rows_seen);
         if self.swar {
             self.carry.feed_bytes_into(bytes, out);
         } else {
             self.carry.feed_bytes_scalar_into(bytes, out);
         }
+        self.drain_carry();
+    }
+
+    /// Absorb the carry assembler's logs and row count.
+    fn drain_carry(&mut self) {
+        self.rows_seen = self.carry.row_index();
         let log = self.carry.take_illegal();
         self.illegal.merge(&log);
+        let errs = self.carry.take_errors();
+        if !errs.is_empty() {
+            self.errors.merge(&errs);
+            self.quarantined.append(&mut self.carry.take_quarantined());
+        }
     }
 
     /// Parallel lane: `body` is whole rows (ends with `\n`). Shards are
@@ -146,45 +197,71 @@ impl ShardedUtf8Decoder {
             return;
         }
         // The prefix row-count pass: rows per shard = newlines per
-        // shard, exact before any field is parsed.
+        // shard, exact before any field is parsed. Every `\n` closes a
+        // row whether it is kept or dropped, so the counts are also
+        // exact row-index bases for each shard.
         let counts: Vec<usize> =
             ranges.iter().map(|r| swar::count_newlines(&body[r.clone()])).collect();
+        let row_bases: Vec<u64> = counts
+            .iter()
+            .scan(self.rows_seen, |next, &c| {
+                let base = *next;
+                *next += c as u64;
+                Some(base)
+            })
+            .collect();
+        let start_row = out.num_rows();
         let windows = out.disjoint_row_windows(&counts);
 
         let schema = self.schema;
         let swar_on = self.swar;
-        let mut logs: Vec<IllegalLog> = Vec::with_capacity(ranges.len());
+        let cfg = self.cfg;
+        type ShardResult = (usize, IllegalLog, RowErrorLog, Vec<QuarantinedRow>);
+        let mut results: Vec<ShardResult> = Vec::with_capacity(ranges.len());
         std::thread::scope(|scope| {
             let handles: Vec<_> = ranges
                 .iter()
                 .zip(windows)
-                .map(|(r, mut win)| {
+                .zip(&row_bases)
+                .map(|((r, mut win), &row_base)| {
                     let seg = &body[r.clone()];
                     let seg_base = base + r.start as u64;
                     scope.spawn(move || {
-                        let mut asm = RowAssembler::new(schema);
+                        let mut asm = RowAssembler::with_errors(schema, cfg);
                         asm.set_stream_offset(seg_base);
+                        asm.set_row_index(row_base);
                         if swar_on {
                             asm.feed_bytes_into(seg, &mut win);
                         } else {
                             asm.feed_bytes_scalar_into(seg, &mut win);
                         }
+                        // A dropping policy may leave the window short;
+                        // under zero-fill every counted `\n` emits a row.
                         debug_assert!(
-                            win.is_full(),
+                            win.is_full() || cfg.policy != ErrorPolicy::Zero,
                             "shard decoded {} of {} rows",
                             win.filled(),
                             win.rows()
                         );
-                        asm.take_illegal()
+                        (win.filled(), asm.take_illegal(), asm.take_errors(), asm.take_quarantined())
                     })
                 })
                 .collect();
             for h in handles {
-                logs.push(h.join().expect("decode shard panicked"));
+                results.push(h.join().expect("decode shard panicked"));
             }
         });
-        for log in &logs {
-            self.illegal.merge(log);
+        let filled: Vec<usize> = results.iter().map(|r| r.0).collect();
+        for (_, log, errs, mut quarantined) in results {
+            self.illegal.merge(&log);
+            self.errors.merge(&errs);
+            self.quarantined.append(&mut quarantined);
+        }
+        self.rows_seen += counts.iter().map(|&c| c as u64).sum::<u64>();
+        // Close the gaps dropped rows left in the committed windows
+        // (no-op when every window is full — the clean path).
+        if filled.iter().zip(&counts).any(|(f, c)| f != c) {
+            out.compact_rows(start_row, &counts, &filled);
         }
     }
 }
@@ -310,7 +387,7 @@ mod tests {
         let mut dec = ShardedUtf8Decoder::new(schema, 4, true);
         let mut block = RowBlock::new(schema);
         dec.feed_into(&raw, &mut block);
-        let log = dec.finish_into(&mut block);
+        let log = dec.finish_into(&mut block).illegal;
         assert_eq!(block.to_rows(), want.rows);
         assert_eq!(log, want.illegal);
         let got: Vec<u64> = log.recorded.iter().map(|b| b.offset).collect();

@@ -39,11 +39,17 @@ COMMANDS:
               decode_threads=N (default: one per core; 1 = sequential decode)
               pipeline_depth=N (fused in-flight chunk window, default 2; 1 = sequential)
               save_artifact=PATH (also freeze the vocabularies to an artifact)
+              on_error=zero|skip|quarantine|fail (malformed-row policy, default zero)
+              max_errors=N|P% (error budget: absolute count or percentage; default unlimited)
+              quarantine=PATH (replayable side file; implies on_error=quarantine)
+              error_details=N (defect offsets kept for the summary, default 64)
+              replay=PATH (re-ingest a quarantine side file instead of input=)
   compare     rows=20000 vocab=5000 format=utf8|binary
   serve       addr=127.0.0.1:7700 jobs=1 (jobs=0: accept connections forever)
   submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000 spec='...'
               strategy=fused|two-pass timeout=30 deadline=0 retries=2 backoff_ms=50
               pipeline_depth=N (leader read-ahead window, default 1)
+              on_error=... max_errors=... (containment counters come back per worker)
               (addr=A,B,... shards the job across a worker cluster, two-pass)
   freeze      input=PATH format=utf8|binary out=vocab.artifact vocab=5000 spec='...'
               dense=13 sparse=26 chunk=1048576
@@ -78,6 +84,17 @@ unbounded), retries= how often a failed shard (submit) or overloaded
 request (request) is re-dispatched, and backoff_ms= the base of the
 capped exponential backoff between attempts. A cluster submit retries
 failed shards on surviving workers and reports the retry/fault counts.
+
+on_error= decides what happens to a malformed row (illegal bytes, wrong
+field count, numeric overflow, oversized field): zero keeps the row
+with defective fields zero-filled (the historical behavior), skip drops
+it, quarantine drops it AND appends its raw bytes to the quarantine=
+side file (re-ingestable later via replay=), fail aborts on the first
+defect naming its byte offset. max_errors= bounds how many rows may be
+contained before the run aborts with a typed budget error — an absolute
+count (max_errors=100) or a rate (max_errors=0.1%). Over the wire
+(submit) the counters come back per worker and are summed; quarantined
+raw bytes never cross the wire.
 
 freeze builds a versioned, checksummed vocabulary artifact from a
 training dataset; request sends one small batch against a worker
@@ -221,11 +238,22 @@ fn backend_of(cfg: &Config) -> Result<Backend> {
 }
 
 fn cmd_preprocess(cfg: &Config) -> Result<()> {
-    let path = cfg
-        .get("input")
-        .ok_or_else(|| anyhow::anyhow!("missing input=PATH"))?;
+    let replay = cfg.get("replay");
+    let path = match (cfg.get("input"), replay) {
+        (Some(p), _) => Some(p),
+        (None, Some(_)) => None,
+        (None, None) => anyhow::bail!("missing input=PATH (or replay=QUARANTINE)"),
+    };
     let backend = backend_of(cfg)?;
-    let format = format_of(cfg)?;
+    // A replayed quarantine file carries its own input format.
+    let mut replay_source = match replay {
+        Some(q) => Some(piper::pipeline::QuarantineSource::open(Path::new(q))?),
+        None => None,
+    };
+    let format = match &replay_source {
+        Some(src) => src.format(),
+        None => format_of(cfg)?,
+    };
     let modulus = modulus_of(cfg)?;
 
     // Plan once (spec + capability checks + strategy selection), then
@@ -247,10 +275,28 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
     if cfg.get("pipeline_depth").is_some() {
         builder = builder.pipeline_depth(cfg.get_usize("pipeline_depth", 2)?);
     }
+    if let Some(p) = cfg.get("on_error") {
+        builder = builder.on_error(piper::decode::ErrorPolicy::parse(p)?);
+    }
+    if let Some(b) = cfg.get("max_errors") {
+        builder = builder.error_budget(piper::decode::ErrorBudget::parse(b)?);
+    }
+    if cfg.get("error_details").is_some() {
+        builder = builder.error_details(cfg.get_usize("error_details", 64)?);
+    }
+    if let Some(q) = cfg.get("quarantine") {
+        builder = builder.quarantine(q);
+    }
     let pipeline = builder.build()?;
-    let mut source = FileSource::open(Path::new(path), format)?;
     let mut sink = piper::pipeline::CountSink::new();
-    let report = pipeline.run(&mut source, &mut sink)?;
+    let report = match replay_source.as_mut() {
+        Some(source) => pipeline.run(source, &mut sink)?,
+        None => {
+            let mut source =
+                FileSource::open(Path::new(path.expect("input= checked above")), format)?;
+            pipeline.run(&mut source, &mut sink)?
+        }
+    };
 
     let mut t = Table::new(
         "preprocess",
@@ -291,8 +337,33 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
     }
     if report.illegal_bytes > 0 {
         t.note(&format!(
-            "WARNING: {} illegal input byte(s) skipped — affected fields may be corrupt",
+            "WARNING: {} illegal input byte(s) in the stream",
             report.illegal_bytes,
+        ));
+    }
+    if report.row_errors.total > 0 {
+        t.note(&format!(
+            "WARNING: {} malformed row(s) contained — {} skipped, {} quarantined, \
+             rest zero-filled",
+            report.row_errors.total,
+            report.rows_skipped,
+            report.rows_quarantined,
+        ));
+        let first: Vec<String> = report
+            .row_errors
+            .recorded
+            .iter()
+            .take(8)
+            .map(|e| format!("row {} ({}) at byte {}", e.row, e.kind.name(), e.offset))
+            .collect();
+        t.note(&format!("first defect(s): {}", first.join("; ")));
+    }
+    if let Some(qpath) = &report.quarantine.path {
+        t.note(&format!(
+            "{} quarantined row(s) written to {} — re-ingest with replay={}",
+            report.quarantine.rows,
+            qpath.display(),
+            qpath.display(),
         ));
     }
     t.print();
@@ -301,6 +372,8 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
     // artifact pass re-streams the file through GenVocab only — same
     // spec, same schema, so the keys match what this run built.
     if let Some(out) = cfg.get("save_artifact") {
+        let path =
+            path.ok_or_else(|| anyhow::anyhow!("save_artifact= needs input=PATH, not replay="))?;
         let spec = spec_of(cfg)?;
         let artifact =
             build_artifact(Path::new(path), format, &spec, Schema::CRITEO, 1 << 20)?;
@@ -340,6 +413,7 @@ fn build_artifact(
     let decode = piper::pipeline::DecodeOptions {
         threads: piper::decode::shard::default_threads(),
         swar: true,
+        errors: Default::default(),
     };
     let mut sp = net::StreamingPreprocessor::with_decode_options(spec, schema, wire, decode)?;
     let mut source = FileSource::open(path, input)?;
@@ -504,7 +578,14 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
     // selector/schema mismatch should be this planning error, not a
     // broken pipe after the worker rejects the handshake.
     spec.compile(Schema::CRITEO)?;
-    let job = Job { schema: Schema::CRITEO, spec, format };
+    let mut errors = piper::decode::ErrorConfig::default();
+    if let Some(p) = cfg.get("on_error") {
+        errors.policy = piper::decode::ErrorPolicy::parse(p)?;
+    }
+    if let Some(b) = cfg.get("max_errors") {
+        errors.budget = piper::decode::ErrorBudget::parse(b)?;
+    }
+    let job = Job { schema: Schema::CRITEO, spec, format, errors };
     let chunk = cfg.get_usize("chunk", 1 << 20)?;
     let strategy = match cfg.get("strategy") {
         Some(s) => piper::pipeline::ExecStrategy::parse(s)?,
@@ -537,6 +618,7 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
             run.retries,
             run.faults,
         );
+        print_submit_containment(&run.stats);
         return Ok(());
     }
     // Stream the file to the worker chunk by chunk — the leader never
@@ -550,7 +632,19 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
         fmt_duration(run.wallclock),
         strategy.name(),
     );
+    print_submit_containment(&run.stats);
     Ok(())
+}
+
+fn print_submit_containment(stats: &net::RunStats) {
+    if stats.rows_skipped + stats.rows_quarantined + stats.illegal_bytes == 0 {
+        return;
+    }
+    println!(
+        "containment: {} row(s) skipped, {} row(s) quarantined worker-side, \
+         {} illegal byte(s) (merged across workers)",
+        stats.rows_skipped, stats.rows_quarantined, stats.illegal_bytes,
+    );
 }
 
 #[cfg(feature = "pjrt")]

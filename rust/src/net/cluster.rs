@@ -29,9 +29,11 @@
 //! order — so which worker served which attempt of which shard is
 //! invisible in the output. The chaos suite pins this bit-identical.
 //! Integrity under faults: every pass-1 dump carries the rows the
-//! worker observed and every pass-2 `ResultEnd` the rows it emitted;
-//! the leader checks both against the shard's true row count, so a
-//! dropped frame is a typed, retryable error — never silent skew.
+//! worker observed (kept *and* contained — invariant under the error
+//! policy) and every pass-2 `ResultEnd` the rows it emitted plus the
+//! rows it skipped or quarantined; the leader checks both sums against
+//! the shard's true row count, so a dropped frame is a typed,
+//! retryable error — never silent skew, even on dirty input.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
@@ -49,6 +51,9 @@ use super::{JobClock, NetConfig};
 #[derive(Debug)]
 pub struct ClusterRun {
     pub processed: ProcessedColumns,
+    /// Totals across all shards; the containment counters
+    /// (`rows_skipped`, `rows_quarantined`, `illegal_bytes`) are the
+    /// per-worker pass-2 counters summed in shard order.
     pub stats: RunStats,
     pub workers: usize,
     pub wallclock: Duration,
@@ -313,7 +318,7 @@ impl Dispatch<'_> {
         packed_vocabs: &[u8],
         shard: &std::ops::Range<usize>,
         expected: u64,
-    ) -> Result<ProcessedColumns> {
+    ) -> Result<(ProcessedColumns, RunStats)> {
         let schema = self.job.schema;
         let addr_str = sess.addr.clone();
         let ShardSession { reader, writer, addr } = &mut *sess;
@@ -379,18 +384,24 @@ impl Dispatch<'_> {
             }
             (Ok(()), Err(collect_err)) => return Err(collect_err),
         };
+        // Every input row must be accounted for: emitted, skipped, or
+        // quarantined. A shortfall means frames were lost in flight.
+        let accounted = stats.rows + stats.rows_skipped + stats.rows_quarantined;
         anyhow::ensure!(
-            stats.rows == expected && cols.num_rows() as u64 == expected,
+            accounted == expected && cols.num_rows() as u64 == stats.rows,
             NetError::Malformed {
                 what: format!(
-                    "worker {addr_str} returned {} rows (reported {}) of a \
-                     {expected}-row shard — pass-2 frames were lost",
+                    "worker {addr_str} returned {} rows (reported {} emitted + {} \
+                     skipped + {} quarantined) of a {expected}-row shard — \
+                     pass-2 frames were lost",
                     cols.num_rows(),
-                    stats.rows
+                    stats.rows,
+                    stats.rows_skipped,
+                    stats.rows_quarantined
                 ),
             }
         );
-        Ok(cols)
+        Ok((cols, stats))
     }
 
     /// Pass 2 for one shard with split-level retry. Attempt 0 reuses
@@ -403,7 +414,7 @@ impl Dispatch<'_> {
         packed_vocabs: &[u8],
         shard: &std::ops::Range<usize>,
         expected: u64,
-    ) -> Result<ProcessedColumns> {
+    ) -> Result<(ProcessedColumns, RunStats)> {
         let mut last_err = None;
         let mut first = Some(first_session);
         for attempt in 0..=self.cfg.retries {
@@ -546,7 +557,7 @@ pub fn run_cluster_cfg(
     // shard. The merged payload is serialized once — it can be many
     // megabytes for large per-column vocabularies.
     let packed = protocol::pack_vocabs(&global);
-    let outputs: Vec<Result<ProcessedColumns>> = std::thread::scope(|scope| {
+    let outputs: Vec<Result<(ProcessedColumns, RunStats)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = shards
             .iter()
             .zip(sessions)
@@ -567,15 +578,27 @@ pub fn run_cluster_cfg(
             .collect()
     });
 
-    // Concatenate shard outputs in order (the CFR step).
+    // Concatenate shard outputs in order (the CFR step) and sum the
+    // per-worker containment counters.
     let mut processed = ProcessedColumns::with_schema(job.schema);
+    let (mut rows_skipped, mut rows_quarantined, mut illegal_bytes) = (0u64, 0u64, 0u64);
     for part in outputs {
-        processed.extend_from(&part?);
+        let (cols, stats) = part?;
+        processed.extend_from(&cols);
+        rows_skipped += stats.rows_skipped;
+        rows_quarantined += stats.rows_quarantined;
+        illegal_bytes += stats.illegal_bytes;
     }
     let rows = processed.num_rows() as u64;
     Ok(ClusterRun {
         processed,
-        stats: RunStats { rows, vocab_entries: vocab_entries as u64 },
+        stats: RunStats {
+            rows,
+            vocab_entries: vocab_entries as u64,
+            rows_skipped,
+            rows_quarantined,
+            illegal_bytes,
+        },
         workers: addrs.len(),
         wallclock: start.elapsed(),
         retries: retries.load(Ordering::Acquire),
@@ -688,7 +711,8 @@ mod tests {
         .unwrap();
         let want = spec.execute(&ds.rows, ds.schema()).unwrap();
         let raw = utf8::encode_dataset(&ds);
-        let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+        let job =
+            Job { schema: ds.schema(), spec, format: WireFormat::Utf8, errors: Default::default() };
         for n in [1usize, 3] {
             let run = run_cluster_loopback(n, &job, &raw, 619).unwrap();
             assert_eq!(run.processed, want, "{n} workers");

@@ -343,7 +343,8 @@ mod tests {
         .unwrap();
         let want = spec.execute(&ds.rows, ds.schema()).unwrap();
         let raw = utf8::encode_dataset(&ds);
-        let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+        let job =
+            Job { schema: ds.schema(), spec, format: WireFormat::Utf8, errors: Default::default() };
         let run = run_loopback(&job, &raw, 2048).unwrap();
         assert_eq!(run.processed, want);
         assert_eq!(run.stats.rows, 210);
@@ -423,7 +424,8 @@ mod tests {
         // planning step rejects it after the Job frame.
         let spec =
             crate::ops::PipelineSpec::parse("sparse[40]: modulus:7|genvocab|applyvocab").unwrap();
-        let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+        let job =
+            Job { schema: ds.schema(), spec, format: WireFormat::Utf8, errors: Default::default() };
         let err = run_loopback(&job, &raw, 1024).unwrap_err();
         match NetError::of(&err) {
             Some(NetError::JobFailed { worker, reason }) => {

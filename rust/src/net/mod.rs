@@ -48,7 +48,7 @@ pub mod worker;
 pub use cluster::{run_cluster, run_cluster_cfg, run_cluster_loopback};
 pub use fault::{FaultKind, FaultPlan};
 pub use leader::{run_leader, run_leader_source, run_leader_source_cfg};
-pub use protocol::NetError;
+pub use protocol::{NetError, RunStats};
 pub use serve::{ServeClient, ServeJob, ServeReport, ServeResponse, ServeStatus};
 pub use stream::StreamingPreprocessor;
 pub use worker::{serve_forever, serve_one, serve_until, ShutdownHandle, WorkerOptions};

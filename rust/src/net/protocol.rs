@@ -27,6 +27,7 @@
 
 use crate::data::row::{ProcessedColumns, ProcessedRow};
 use crate::data::Schema;
+use crate::decode::{ErrorBudget, ErrorConfig, ErrorPolicy};
 use crate::ops::{Modulus, PipelineSpec};
 use crate::Result;
 use std::io::{Read, Write};
@@ -331,6 +332,11 @@ pub struct Job {
     pub schema: Schema,
     pub spec: PipelineSpec,
     pub format: WireFormat,
+    /// Malformed-row containment the worker decodes under. Quarantine
+    /// raw bytes never cross the wire — a worker given the quarantine
+    /// policy contains like `skip` and reports the count; the side file
+    /// is a single-node (leader-local) artifact.
+    pub errors: ErrorConfig,
 }
 
 impl Job {
@@ -338,39 +344,60 @@ impl Job {
     /// uniform vocabulary size (what the old modulus-only header could
     /// express).
     pub fn dlrm(schema: Schema, modulus: Modulus, format: WireFormat) -> Job {
-        Job { schema, spec: PipelineSpec::dlrm(modulus.range), format }
+        Job {
+            schema,
+            spec: PipelineSpec::dlrm(modulus.range),
+            format,
+            errors: ErrorConfig::default(),
+        }
     }
 
-    /// Frame layout: `num_dense:u32 num_sparse:u32 format:u8 spec:utf8`
-    /// (the spec takes the rest of the frame — frames are already
+    /// Frame layout: `num_dense:u32 num_sparse:u32 format:u8 policy:u8
+    /// budget_tag:u8 budget:f64le detail_cap:u32 spec:utf8` (the spec
+    /// takes the rest of the frame — frames are already
     /// length-prefixed).
     pub fn encode(&self) -> Vec<u8> {
         let spec = self.spec.to_string();
-        let mut out = Vec::with_capacity(9 + spec.len());
+        let mut out = Vec::with_capacity(23 + spec.len());
         out.extend_from_slice(&(self.schema.num_dense as u32).to_le_bytes());
         out.extend_from_slice(&(self.schema.num_sparse as u32).to_le_bytes());
         out.push(match self.format {
             WireFormat::Utf8 => 0,
             WireFormat::Binary => 1,
         });
+        out.push(self.errors.policy.as_u8());
+        let (btag, bval) = self.errors.budget.to_wire();
+        out.push(btag);
+        out.extend_from_slice(&bval.to_le_bytes());
+        out.extend_from_slice(&(self.errors.detail_cap as u32).to_le_bytes());
         out.extend_from_slice(spec.as_bytes());
         out
     }
 
     pub fn decode(buf: &[u8]) -> Result<Job> {
-        anyhow::ensure!(buf.len() >= 9, "job frame must be >= 9 bytes, got {}", buf.len());
+        anyhow::ensure!(buf.len() >= 23, "job frame must be >= 23 bytes, got {}", buf.len());
         let rd = |i: usize| u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]]);
         let format = match buf[8] {
             0 => WireFormat::Utf8,
             1 => WireFormat::Binary,
             v => anyhow::bail!("bad wire format {v}"),
         };
-        let spec = std::str::from_utf8(&buf[9..])
+        let policy = ErrorPolicy::from_u8(buf[9])
+            .ok_or_else(|| anyhow::anyhow!("bad error policy byte {}", buf[9]))?;
+        let bval = f64::from_le_bytes([
+            buf[11], buf[12], buf[13], buf[14], buf[15], buf[16], buf[17], buf[18],
+        ]);
+        let budget = ErrorBudget::from_wire(buf[10], bval)
+            .ok_or_else(|| anyhow::anyhow!("bad error budget tag {}", buf[10]))?;
+        let detail_cap = rd(19) as usize;
+        anyhow::ensure!(detail_cap >= 1, "job error detail cap must be >= 1");
+        let spec = std::str::from_utf8(&buf[23..])
             .map_err(|e| anyhow::anyhow!("job spec is not UTF-8: {e}"))?;
         Ok(Job {
             schema: Schema::new(rd(0) as usize, rd(4) as usize),
             spec: PipelineSpec::parse(spec)?,
             format,
+            errors: ErrorConfig { policy, budget, detail_cap },
         })
     }
 }
@@ -429,30 +456,49 @@ pub fn pack_columns(cols: &ProcessedColumns, schema: Schema) -> Vec<u8> {
     out
 }
 
-/// Stats returned in ResultEnd.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Stats returned in ResultEnd. The containment counters let the
+/// leader merge exact per-worker skip/quarantine totals into the
+/// cluster report and verify every row was accounted for (kept,
+/// skipped, or quarantined).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct RunStats {
     pub rows: u64,
     pub vocab_entries: u64,
+    /// Rows dropped under `on_error=skip`.
+    pub rows_skipped: u64,
+    /// Rows contained under `on_error=quarantine` (counters only — the
+    /// raw bytes stay on the node that owns the quarantine file).
+    pub rows_quarantined: u64,
+    /// Illegal input bytes the decode skipped (zero-policy semantics).
+    pub illegal_bytes: u64,
 }
 
 impl RunStats {
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(16);
+        let mut out = Vec::with_capacity(40);
         out.extend_from_slice(&self.rows.to_le_bytes());
         out.extend_from_slice(&self.vocab_entries.to_le_bytes());
+        out.extend_from_slice(&self.rows_skipped.to_le_bytes());
+        out.extend_from_slice(&self.rows_quarantined.to_le_bytes());
+        out.extend_from_slice(&self.illegal_bytes.to_le_bytes());
         out
     }
 
     pub fn decode(buf: &[u8]) -> Result<RunStats> {
-        anyhow::ensure!(buf.len() == 16, "stats frame must be 16 bytes");
+        anyhow::ensure!(buf.len() == 40, "stats frame must be 40 bytes");
         let rd = |i: usize| {
             u64::from_le_bytes([
                 buf[i], buf[i + 1], buf[i + 2], buf[i + 3],
                 buf[i + 4], buf[i + 5], buf[i + 6], buf[i + 7],
             ])
         };
-        Ok(RunStats { rows: rd(0), vocab_entries: rd(8) })
+        Ok(RunStats {
+            rows: rd(0),
+            vocab_entries: rd(8),
+            rows_skipped: rd(16),
+            rows_quarantined: rd(24),
+            illegal_bytes: rd(32),
+        })
     }
 }
 
@@ -544,6 +590,7 @@ mod tests {
             )
             .unwrap(),
             format: WireFormat::Utf8,
+            errors: ErrorConfig::default(),
         };
         assert_eq!(Job::decode(&job.encode()).unwrap(), job);
     }
@@ -608,8 +655,36 @@ mod tests {
 
     #[test]
     fn stats_roundtrip() {
-        let s = RunStats { rows: 123, vocab_entries: 456 };
+        let s = RunStats {
+            rows: 123,
+            vocab_entries: 456,
+            rows_skipped: 7,
+            rows_quarantined: 8,
+            illegal_bytes: 9,
+        };
         assert_eq!(RunStats::decode(&s.encode()).unwrap(), s);
+        assert!(RunStats::decode(&s.encode()[..16]).is_err(), "old 16-byte frame rejected");
+    }
+
+    #[test]
+    fn job_roundtrip_error_config() {
+        for (policy, budget) in [
+            (ErrorPolicy::Fail, ErrorBudget::Unlimited),
+            (ErrorPolicy::Skip, ErrorBudget::Count(42)),
+            (ErrorPolicy::Quarantine, ErrorBudget::Rate(0.125)),
+        ] {
+            let job = Job {
+                errors: ErrorConfig { policy, budget, detail_cap: 17 },
+                ..Job::dlrm(Schema::new(13, 26), Modulus::VOCAB_5K, WireFormat::Utf8)
+            };
+            assert_eq!(Job::decode(&job.encode()).unwrap(), job);
+        }
+        let mut bad = Job::dlrm(Schema::CRITEO, Modulus::VOCAB_5K, WireFormat::Utf8).encode();
+        bad[9] = 77;
+        assert!(Job::decode(&bad).is_err(), "bad policy byte");
+        let mut bad = Job::dlrm(Schema::CRITEO, Modulus::VOCAB_5K, WireFormat::Utf8).encode();
+        bad[10] = 77;
+        assert!(Job::decode(&bad).is_err(), "bad budget tag");
     }
 
     #[test]

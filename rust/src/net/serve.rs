@@ -27,9 +27,18 @@
 //! job's `queue_depth`. A request over the bound gets an immediate
 //! explicit [`ServeStatus::Overloaded`] response instead of unbounded
 //! buffering — the client learns it must back off *now*, not after the
-//! queue melts. A malformed request (oversized, misaligned binary,
-//! illegal rows) gets [`ServeStatus::BadRequest`] and the session keeps
-//! serving; only a broken *frame* stream ends the session.
+//! queue melts.
+//!
+//! **Row-level containment**: malformed rows inside a request (illegal
+//! bytes, wrong field counts, a misaligned binary tail) no longer fail
+//! the whole batch. The request decodes under [`ErrorPolicy::Skip`];
+//! well-formed rows are transformed and returned, and the response
+//! carries [`ServeStatus::BadRows`] plus the request-relative indices
+//! of the contained rows, so the client knows exactly which inputs to
+//! fix or drop. Only an oversized request (or one with more malformed
+//! rows than [`MAX_BAD_ROW_DETAILS`]) gets [`ServeStatus::BadRequest`];
+//! the session keeps serving either way — only a broken *frame* stream
+//! ends it.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
@@ -38,8 +47,9 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::data::{RowBlock, Schema};
+use crate::decode::{ErrorConfig, ErrorPolicy};
 use crate::ops::artifact::VocabArtifact;
-use crate::pipeline::{ChunkDecoder, FrozenPlan, MissPolicy};
+use crate::pipeline::{ChunkDecoder, DecodeOptions, FrozenPlan, MissPolicy};
 use crate::Result;
 
 use super::protocol::{self, NetError, Tag};
@@ -52,6 +62,12 @@ pub const DEFAULT_QUEUE_DEPTH: u32 = 32;
 /// Hard per-request payload cap — serving frames are small batches; a
 /// request this large belongs on the batch protocol.
 pub const MAX_REQUEST_BYTES: usize = 1 << 24;
+
+/// Max malformed-row indices a single response reports. A request with
+/// more contained rows than this is answered with
+/// [`ServeStatus::BadRequest`] instead — at that point the batch is
+/// garbage, not a batch with stragglers.
+pub const MAX_BAD_ROW_DETAILS: usize = 1 << 16;
 
 /// Rolling latency window: percentiles cover the last this-many
 /// requests, so a long session reports current behavior, not its
@@ -116,12 +132,17 @@ pub enum ServeStatus {
     /// Transformed rows in the payload, minus rows the
     /// [`MissPolicy::RejectRow`] policy dropped.
     RejectedRows = 1,
-    /// The request could not be decoded (oversized, misaligned,
-    /// illegal rows); payload carries the reason. The session survives.
+    /// The request as a whole could not be served (oversized, or more
+    /// malformed rows than [`MAX_BAD_ROW_DETAILS`]); payload carries
+    /// the reason. The session survives.
     BadRequest = 2,
     /// Admission control refused the request — more than `queue_depth`
     /// requests were in flight. Retry with backoff.
     Overloaded = 3,
+    /// Transformed rows in the payload, minus malformed rows the
+    /// decoder contained; `bad_rows` lists their request-relative
+    /// indices. The well-formed rows are served normally.
+    BadRows = 4,
 }
 
 impl ServeStatus {
@@ -131,47 +152,65 @@ impl ServeStatus {
             1 => ServeStatus::RejectedRows,
             2 => ServeStatus::BadRequest,
             3 => ServeStatus::Overloaded,
+            4 => ServeStatus::BadRows,
             other => anyhow::bail!("unknown serve status {other}"),
         })
     }
 }
 
 /// One response frame: echo of the request id, status, the request's
-/// miss accounting, and the transformed rows in [`protocol::pack_rows`]
-/// layout (or a UTF-8 reason for [`ServeStatus::BadRequest`]).
+/// miss accounting, the indices of contained malformed rows, and the
+/// transformed rows in [`protocol::pack_rows`] layout (or a UTF-8
+/// reason for [`ServeStatus::BadRequest`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeResponse {
     pub req_id: u64,
     pub status: ServeStatus,
     pub misses: u32,
     pub rejected_rows: u32,
+    /// Request-relative indices of rows the decoder contained
+    /// ([`ServeStatus::BadRows`]); empty otherwise. An index counts
+    /// every row of the request in order, kept or contained.
+    pub bad_rows: Vec<u32>,
     pub payload: Vec<u8>,
 }
 
 impl ServeResponse {
     /// Frame layout: `req_id:u64 status:u8 misses:u32 rejected:u32
-    /// payload:rest`.
+    /// nbad:u32 bad_rows:[u32; nbad] payload:rest`.
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(17 + self.payload.len());
+        let mut out = Vec::with_capacity(21 + 4 * self.bad_rows.len() + self.payload.len());
         out.extend_from_slice(&self.req_id.to_le_bytes());
         out.push(self.status as u8);
         out.extend_from_slice(&self.misses.to_le_bytes());
         out.extend_from_slice(&self.rejected_rows.to_le_bytes());
+        out.extend_from_slice(&(self.bad_rows.len() as u32).to_le_bytes());
+        for &r in &self.bad_rows {
+            out.extend_from_slice(&r.to_le_bytes());
+        }
         out.extend_from_slice(&self.payload);
         out
     }
 
     pub fn decode(buf: &[u8]) -> Result<ServeResponse> {
-        anyhow::ensure!(buf.len() >= 17, "serve response must be >= 17 bytes, got {}", buf.len());
+        anyhow::ensure!(buf.len() >= 21, "serve response must be >= 21 bytes, got {}", buf.len());
         let rd32 = |i: usize| u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]]);
         let mut id = [0u8; 8];
         id.copy_from_slice(&buf[..8]);
+        let nbad = rd32(17) as usize;
+        anyhow::ensure!(
+            nbad <= MAX_BAD_ROW_DETAILS && buf.len() - 21 >= 4 * nbad,
+            "serve response truncated: {nbad} bad-row indices in a {}-byte frame",
+            buf.len()
+        );
+        let bad_rows = (0..nbad).map(|i| rd32(21 + 4 * i)).collect();
         Ok(ServeResponse {
             req_id: u64::from_le_bytes(id),
             status: ServeStatus::from_u8(buf[8])?,
             misses: rd32(9),
             rejected_rows: rd32(13),
-            payload: buf[17..].to_vec(),
+            bad_rows,
+            payload: buf[21 + 4 * nbad..].to_vec(),
         })
     }
 
@@ -183,10 +222,10 @@ impl ServeResponse {
 
 /// Aggregate session statistics, returned as the final frame.
 /// `ok` counts requests answered with transformed rows (including ones
-/// RejectRow trimmed); `bad_requests` and `overloaded` count the error
-/// replies; the latency percentiles are over the rolling window of the
-/// last [`LATENCY_WINDOW`] served requests, admission to response
-/// flushed.
+/// RejectRow trimmed or with malformed rows contained); `bad_requests`
+/// and `overloaded` count the error replies; the latency percentiles
+/// are over the rolling window of the last [`LATENCY_WINDOW`] served
+/// requests, admission to response flushed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct ServeReport {
     pub requests: u64,
@@ -197,6 +236,8 @@ pub struct ServeReport {
     pub rows: u64,
     pub misses: u64,
     pub rejected_rows: u64,
+    /// Malformed rows contained across all requests ([`ServeStatus::BadRows`]).
+    pub bad_rows: u64,
     pub p50_us: u64,
     pub p99_us: u64,
 }
@@ -211,7 +252,7 @@ impl ServeReport {
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(72);
+        let mut out = Vec::with_capacity(80);
         for v in [
             self.requests,
             self.ok,
@@ -220,6 +261,7 @@ impl ServeReport {
             self.rows,
             self.misses,
             self.rejected_rows,
+            self.bad_rows,
             self.p50_us,
             self.p99_us,
         ] {
@@ -229,7 +271,7 @@ impl ServeReport {
     }
 
     pub fn decode(buf: &[u8]) -> Result<ServeReport> {
-        anyhow::ensure!(buf.len() == 72, "serve report must be 72 bytes, got {}", buf.len());
+        anyhow::ensure!(buf.len() == 80, "serve report must be 80 bytes, got {}", buf.len());
         let rd = |i: usize| {
             let mut w = [0u8; 8];
             w.copy_from_slice(&buf[8 * i..8 * i + 8]);
@@ -243,8 +285,9 @@ impl ServeReport {
             rows: rd(4),
             misses: rd(5),
             rejected_rows: rd(6),
-            p50_us: rd(7),
-            p99_us: rd(8),
+            bad_rows: rd(7),
+            p50_us: rd(8),
+            p99_us: rd(9),
         })
     }
 }
@@ -330,14 +373,17 @@ fn accept_loop<R: Read>(
     }
 }
 
-/// Decode and apply one request. `Err` is a client-attributable reason
-/// → [`ServeStatus::BadRequest`]; the session continues.
+/// Decode and apply one request. Malformed rows are contained per row
+/// (skip policy): the well-formed rows are transformed and the
+/// contained rows' request-relative indices come back alongside. `Err`
+/// is a whole-request, client-attributable reason →
+/// [`ServeStatus::BadRequest`]; the session continues either way.
 fn apply_request(
     frozen: &FrozenPlan,
     format: WireFormat,
     raw: &[u8],
     scratch: &mut RowBlock,
-) -> std::result::Result<crate::pipeline::ApplyOutcome, String> {
+) -> std::result::Result<(crate::pipeline::ApplyOutcome, Vec<u32>), String> {
     if raw.len() > MAX_REQUEST_BYTES {
         return Err(format!(
             "request of {} bytes exceeds the serving cap of {MAX_REQUEST_BYTES}",
@@ -347,13 +393,27 @@ fn apply_request(
     scratch.clear();
     // Sequential decode: serving requests are tens of rows — thread
     // fan-out would cost more than it saves.
-    let mut dec = ChunkDecoder::new(format.into(), frozen.schema());
+    let errors = ErrorConfig {
+        policy: ErrorPolicy::Skip,
+        detail_cap: MAX_BAD_ROW_DETAILS,
+        ..ErrorConfig::default()
+    };
+    let mut dec = ChunkDecoder::with_options(
+        format.into(),
+        frozen.schema(),
+        DecodeOptions { threads: 1, swar: true, errors },
+    );
     dec.feed_into(raw, scratch).map_err(|e| e.to_string())?;
-    let illegal = dec.finish_into(scratch).map_err(|e| e.to_string())?;
-    if illegal.total > 0 {
-        return Err(format!("{} illegal bytes in request", illegal.total));
+    let tally = dec.finish_into(scratch).map_err(|e| e.to_string())?;
+    if tally.errors.total > tally.errors.recorded.len() as u64 {
+        return Err(format!(
+            "{} malformed rows exceed the per-request detail cap of {MAX_BAD_ROW_DETAILS}",
+            tally.errors.total
+        ));
     }
-    Ok(frozen.apply_block(scratch))
+    let bad: Vec<u32> =
+        tally.errors.recorded.iter().map(|e| e.row.min(u32::MAX as u64) as u32).collect();
+    Ok((frozen.apply_block(scratch), bad))
 }
 
 /// Run one serving session over an established connection: freeze the
@@ -397,26 +457,31 @@ where
                         status: ServeStatus::Overloaded,
                         misses: 0,
                         rejected_rows: 0,
+                        bad_rows: Vec::new(),
                         payload: Vec::new(),
                     }
                 }
                 Msg::Request { req_id, raw, t0 } => {
                     report.requests += 1;
                     let resp = match apply_request(&frozen, job.format, &raw, &mut scratch) {
-                        Ok(out) => {
+                        Ok((out, bad)) => {
                             report.ok += 1;
                             report.rows += out.columns.num_rows() as u64;
                             report.misses += out.misses;
                             report.rejected_rows += out.rejected_rows;
+                            report.bad_rows += bad.len() as u64;
                             ServeResponse {
                                 req_id,
-                                status: if out.rejected_rows > 0 {
+                                status: if !bad.is_empty() {
+                                    ServeStatus::BadRows
+                                } else if out.rejected_rows > 0 {
                                     ServeStatus::RejectedRows
                                 } else {
                                     ServeStatus::Ok
                                 },
                                 misses: out.misses.min(u32::MAX as u64) as u32,
                                 rejected_rows: out.rejected_rows.min(u32::MAX as u64) as u32,
+                                bad_rows: bad,
                                 payload: protocol::pack_columns(&out.columns, schema),
                             }
                         }
@@ -427,6 +492,7 @@ where
                                 status: ServeStatus::BadRequest,
                                 misses: 0,
                                 rejected_rows: 0,
+                                bad_rows: Vec::new(),
                                 payload: reason.into_bytes(),
                             }
                         }
@@ -674,15 +740,32 @@ mod tests {
 
     #[test]
     fn serve_response_round_trips() {
-        let resp = ServeResponse {
-            req_id: 7,
-            status: ServeStatus::RejectedRows,
-            misses: 3,
-            rejected_rows: 2,
-            payload: vec![1, 2, 3, 4],
-        };
-        assert_eq!(ServeResponse::decode(&resp.encode()).unwrap(), resp);
+        for bad_rows in [vec![], vec![0u32, 3, 17]] {
+            let resp = ServeResponse {
+                req_id: 7,
+                status: ServeStatus::RejectedRows,
+                misses: 3,
+                rejected_rows: 2,
+                bad_rows,
+                payload: vec![1, 2, 3, 4],
+            };
+            assert_eq!(ServeResponse::decode(&resp.encode()).unwrap(), resp);
+        }
         assert!(ServeResponse::decode(&[0u8; 5]).is_err());
+        assert!(ServeResponse::decode(&[0u8; 20]).is_err(), "pre-bad-rows header rejected");
+        // An nbad larger than the remaining bytes must be rejected,
+        // never a giant reservation or a slice panic.
+        let mut truncated = ServeResponse {
+            req_id: 1,
+            status: ServeStatus::BadRows,
+            misses: 0,
+            rejected_rows: 0,
+            bad_rows: vec![2],
+            payload: Vec::new(),
+        }
+        .encode();
+        truncated.truncate(22);
+        assert!(ServeResponse::decode(&truncated).is_err());
     }
 
     #[test]
@@ -695,12 +778,13 @@ mod tests {
             rows: 320,
             misses: 5,
             rejected_rows: 1,
+            bad_rows: 4,
             p50_us: 120,
             p99_us: 900,
         };
         assert_eq!(ServeReport::decode(&report.encode()).unwrap(), report);
         assert_eq!(report.p50(), Duration::from_micros(120));
-        assert!(ServeReport::decode(&[0u8; 71]).is_err());
+        assert!(ServeReport::decode(&[0u8; 72]).is_err(), "old 72-byte frame rejected");
     }
 
     #[test]
@@ -752,14 +836,57 @@ mod tests {
         let (report, responses) = run_scripted(
             &job,
             &[
-                bin_rows(&[(1, 7, 12)])[..7].to_vec(), // misaligned binary
-                bin_rows(&[(1, 7, 5)]),                // still served
+                vec![0u8; MAX_REQUEST_BYTES + 1], // over the serving cap
+                bin_rows(&[(1, 7, 5)]),           // still served
             ],
         );
         assert_eq!(responses[0].status, ServeStatus::BadRequest);
         assert!(!responses[0].payload.is_empty(), "reason travels in the payload");
         assert_eq!(responses[1].status, ServeStatus::Ok);
         assert_eq!((report.bad_requests, report.ok), (1, 1));
+    }
+
+    /// A misaligned binary request is no longer an all-or-nothing
+    /// BadRequest: the complete rows are served and the truncated tail
+    /// comes back as a per-row index (the PR-9 serving satellite).
+    #[test]
+    fn misaligned_binary_tail_is_contained_per_row() {
+        let job = tiny_job(MissPolicy::Sentinel, 4);
+        let schema = job.artifact.schema();
+        let mut raw = bin_rows(&[(1, 7, 12), (0, -3, 5)]);
+        raw.extend_from_slice(&[9, 9, 9]); // 3 stray bytes: a truncated third row
+        let (report, responses) = run_scripted(&job, &[raw, bin_rows(&[(1, 7, 5)])]);
+        assert_eq!(responses[0].status, ServeStatus::BadRows);
+        assert_eq!(responses[0].bad_rows, vec![2], "the tail is row 2 of the request");
+        assert_eq!(responses[0].rows(schema), 2, "complete rows still served");
+        let rows = protocol::unpack_rows(&responses[0].payload, schema).unwrap();
+        assert_eq!(rows[0].sparse, vec![1]);
+        assert_eq!(rows[1].sparse, vec![0]);
+        assert_eq!(responses[1].status, ServeStatus::Ok, "session survives");
+        assert_eq!((report.ok, report.bad_requests, report.bad_rows), (2, 0, 1));
+    }
+
+    /// UTF-8 requests with malformed rows interleaved: each bad row is
+    /// indexed request-relative, the good rows around it are served.
+    #[test]
+    fn malformed_utf8_rows_are_indexed_and_good_rows_served() {
+        let mut job = tiny_job(MissPolicy::Sentinel, 4);
+        job.format = WireFormat::Utf8;
+        let schema = job.artifact.schema();
+        // Sparse fields are hex (c = 12). Rows 1 (illegal byte) and 3
+        // (wrong field count) are bad.
+        let raw = b"1\t7\tc\n0\t-3\tx5\n0\t2\t5\n1\t9\n0\t4\tc\n".to_vec();
+        let (report, responses) = run_scripted(&job, &[raw]);
+        assert_eq!(responses[0].status, ServeStatus::BadRows);
+        assert_eq!(responses[0].bad_rows, vec![1, 3]);
+        assert_eq!(responses[0].rows(schema), 3);
+        let rows = protocol::unpack_rows(&responses[0].payload, schema).unwrap();
+        assert_eq!(
+            rows.iter().map(|r| r.sparse[0]).collect::<Vec<_>>(),
+            vec![1, 0, 1],
+            "kept rows are exactly the well-formed ones, in order"
+        );
+        assert_eq!((report.rows, report.bad_rows), (3, 2));
     }
 
     #[test]

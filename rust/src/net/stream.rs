@@ -12,6 +12,7 @@
 use crate::accel::InputFormat;
 use crate::data::row::{ProcessedColumns, ProcessedRow};
 use crate::data::{RowBlock, Schema};
+use crate::decode::{DataError, DecodeTally, ErrorPolicy};
 use crate::ops::PipelineSpec;
 use crate::pipeline::{ChunkDecoder, ChunkState, DecodeOptions, ExecStrategy};
 use crate::Result;
@@ -56,12 +57,27 @@ enum Phase {
 pub struct StreamingPreprocessor {
     state: ChunkState,
     format: WireFormat,
+    /// The caller's options verbatim; `decode.errors` is the job-level
+    /// policy counters are attributed under.
     decode: DecodeOptions,
+    /// What decoders actually run with: quarantine downgraded to skip
+    /// (raw quarantined bytes never cross the wire — the side file is a
+    /// leader-local artifact; the worker contains identically and
+    /// reports the count).
+    decoder_opts: DecodeOptions,
     decoder: ChunkDecoder,
     scratch: RowBlock,
     phase: Phase,
     rows_pass1: usize,
     rows_pass2: usize,
+    /// Total rows decoded in pass 1 — kept *and* contained. This is the
+    /// count the cluster leader verifies against the shard's true row
+    /// count, so it must be invariant under the containment policy.
+    observed_pass1: u64,
+    /// Decode tally of the emit pass (pass 2, or the fused pass) —
+    /// captured at stream end, the source of the worker's containment
+    /// counters. Two-pass decodes the bytes twice but reports once.
+    emit_tally: DecodeTally,
 }
 
 impl StreamingPreprocessor {
@@ -82,20 +98,54 @@ impl StreamingPreprocessor {
         format: WireFormat,
         decode: DecodeOptions,
     ) -> Result<Self> {
+        let decoder_opts = DecodeOptions { errors: decode.errors.for_observe_pass(), ..decode };
         Ok(StreamingPreprocessor {
             state: ChunkState::with_programs(spec.compile(schema)?),
             format,
             decode,
-            decoder: ChunkDecoder::with_options(format.into(), schema, decode),
+            decoder_opts,
+            decoder: ChunkDecoder::with_options(format.into(), schema, decoder_opts),
             scratch: RowBlock::new(schema),
             phase: Phase::Start,
             rows_pass1: 0,
             rows_pass2: 0,
+            observed_pass1: 0,
+            emit_tally: DecodeTally::default(),
         })
     }
 
     fn schema(&self) -> Schema {
         self.state.schema()
+    }
+
+    /// Abort the stream with a typed [`DataError`] once contained rows
+    /// exceed the job's error budget; checked after every fed chunk.
+    fn check_budget(&self) -> Result<()> {
+        let log = self.decoder.errors();
+        let rows = self.decoder.rows_seen();
+        if self.decode.errors.budget.exceeded(log.total, rows) {
+            return Err(anyhow::Error::new(DataError::BudgetExceeded {
+                errors: log.total,
+                rows,
+                budget: self.decode.errors.budget,
+                first: log.first().copied(),
+            }));
+        }
+        Ok(())
+    }
+
+    /// Final budget check against a finished pass's tally (the trailing
+    /// row can add one last defect the per-chunk checks never saw).
+    fn check_tally_budget(&self, tally: &DecodeTally) -> Result<()> {
+        if self.decode.errors.budget.exceeded(tally.errors.total, tally.rows_seen) {
+            return Err(anyhow::Error::new(DataError::BudgetExceeded {
+                errors: tally.errors.total,
+                rows: tally.rows_seen,
+                budget: self.decode.errors.budget,
+                first: tally.errors.first().copied(),
+            }));
+        }
+        Ok(())
     }
 
     /// Pass-1 chunk: observe sparse values into the vocabularies.
@@ -108,6 +158,7 @@ impl StreamingPreprocessor {
         self.phase = Phase::Pass1;
         self.scratch.clear();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
+        self.check_budget()?;
         self.state.observe(&self.scratch);
         self.rows_pass1 += self.scratch.num_rows();
         Ok(())
@@ -122,10 +173,14 @@ impl StreamingPreprocessor {
         );
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::with_options(self.format.into(), self.schema(), self.decode),
+            ChunkDecoder::with_options(self.format.into(), self.schema(), self.decoder_opts),
         );
         self.scratch.clear();
-        decoder.finish_into(&mut self.scratch)?;
+        // The emit pass reports the containment counters; pass 1 keeps
+        // only the observed-row total the leader's integrity check needs.
+        let tally = decoder.finish_into(&mut self.scratch)?;
+        self.check_tally_budget(&tally)?;
+        self.observed_pass1 = tally.rows_seen;
         self.state.observe(&self.scratch);
         self.rows_pass1 += self.scratch.num_rows();
         self.phase = Phase::BetweenPasses;
@@ -144,6 +199,7 @@ impl StreamingPreprocessor {
         );
         self.scratch.clear();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
+        self.check_budget()?;
         let out = rows_of(&self.state.process(&self.scratch));
         self.rows_pass2 += out.len();
         Ok(out)
@@ -161,10 +217,11 @@ impl StreamingPreprocessor {
         );
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::with_options(self.format.into(), self.schema(), self.decode),
+            ChunkDecoder::with_options(self.format.into(), self.schema(), self.decoder_opts),
         );
         self.scratch.clear();
-        decoder.finish_into(&mut self.scratch)?;
+        self.emit_tally = decoder.finish_into(&mut self.scratch)?;
+        self.check_tally_budget(&self.emit_tally)?;
         let out = rows_of(&self.state.process(&self.scratch));
         self.rows_pass2 += out.len();
         self.phase = Phase::Done;
@@ -185,6 +242,7 @@ impl StreamingPreprocessor {
         self.phase = Phase::Fused;
         self.scratch.clear();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
+        self.check_budget()?;
         let out = rows_of(&self.state.process_fused(&self.scratch));
         self.rows_pass1 += out.len();
         self.rows_pass2 += out.len();
@@ -200,10 +258,11 @@ impl StreamingPreprocessor {
         );
         let decoder = std::mem::replace(
             &mut self.decoder,
-            ChunkDecoder::with_options(self.format.into(), self.schema(), self.decode),
+            ChunkDecoder::with_options(self.format.into(), self.schema(), self.decoder_opts),
         );
         self.scratch.clear();
-        decoder.finish_into(&mut self.scratch)?;
+        self.emit_tally = decoder.finish_into(&mut self.scratch)?;
+        self.check_tally_budget(&self.emit_tally)?;
         let out = rows_of(&self.state.process_fused(&self.scratch));
         self.rows_pass1 += out.len();
         self.rows_pass2 += out.len();
@@ -257,6 +316,29 @@ impl StreamingPreprocessor {
 
     pub fn rows_seen(&self) -> (usize, usize) {
         (self.rows_pass1, self.rows_pass2)
+    }
+
+    /// Rows decoded during pass 1, including contained ones — the
+    /// shard-dump row count the cluster leader checks against the
+    /// shard's true size (valid after `pass1_end`).
+    pub fn observed_rows(&self) -> u64 {
+        self.observed_pass1
+    }
+
+    /// The emit pass's decode tally (valid after `pass2_end`/`fused_end`).
+    pub fn emit_tally(&self) -> &DecodeTally {
+        &self.emit_tally
+    }
+
+    /// Containment counters for the wire stats, attributed under the
+    /// job's policy: `(rows_skipped, rows_quarantined, illegal_bytes)`.
+    pub fn containment(&self) -> (u64, u64, u64) {
+        let t = &self.emit_tally;
+        match self.decode.errors.policy {
+            ErrorPolicy::Skip => (t.errors.total, 0, t.illegal.total),
+            ErrorPolicy::Quarantine => (0, t.errors.total, t.illegal.total),
+            _ => (0, 0, t.illegal.total),
+        }
     }
 }
 

@@ -212,6 +212,7 @@ where
             Ok(RunStats {
                 rows: report.rows,
                 vocab_entries: job.artifact.total_entries() as u64,
+                ..RunStats::default()
             })
         }
         other => anyhow::bail!(NetError::Malformed {
@@ -227,10 +228,11 @@ where
 {
     // Worker posture: decode wire chunks with every local core (the
     // same row-sharded path the engine uses; output is bit-identical
-    // to the sequential decode).
+    // to the sequential decode) under the job's containment policy.
     let decode = crate::pipeline::DecodeOptions {
         threads: crate::decode::shard::default_threads(),
         swar: true,
+        errors: job.errors,
     };
     let mut sp =
         StreamingPreprocessor::with_decode_options(&job.spec, job.schema, job.format, decode)?;
@@ -253,9 +255,13 @@ where
                     let packed = protocol::pack_rows(&rows, job.schema);
                     protocol::write_frame(writer, Tag::ResultChunk, &packed)?;
                 }
+                let (rows_skipped, rows_quarantined, illegal_bytes) = sp.containment();
                 let stats = RunStats {
                     rows: sp.rows_seen().1 as u64,
                     vocab_entries: sp.vocab_entries() as u64,
+                    rows_skipped,
+                    rows_quarantined,
+                    illegal_bytes,
                 };
                 protocol::write_frame(writer, Tag::ResultEnd, &stats.encode())?;
                 writer.flush()?;
@@ -269,8 +275,9 @@ where
                 // deployment — paper §2.4's merge, moved to the leader),
                 // prefixed with the rows this worker observed so the
                 // leader can verify no pass-1 frame was lost.
-                let dump =
-                    protocol::pack_shard_dump(sp.rows_seen().0 as u64, &sp.export_vocabs());
+                // Observed = kept + contained, so the count stays exact
+                // under every containment policy.
+                let dump = protocol::pack_shard_dump(sp.observed_rows(), &sp.export_vocabs());
                 protocol::write_frame(writer, Tag::VocabDump, &dump)?;
                 writer.flush()?;
             }
@@ -292,9 +299,13 @@ where
                     let packed = protocol::pack_rows(&rows, job.schema);
                     protocol::write_frame(writer, Tag::ResultChunk, &packed)?;
                 }
+                let (rows_skipped, rows_quarantined, illegal_bytes) = sp.containment();
                 let stats = RunStats {
                     rows: sp.rows_seen().1 as u64,
                     vocab_entries: sp.vocab_entries() as u64,
+                    rows_skipped,
+                    rows_quarantined,
+                    illegal_bytes,
                 };
                 protocol::write_frame(writer, Tag::ResultEnd, &stats.encode())?;
                 writer.flush()?;

@@ -64,6 +64,7 @@
 
 pub mod executor;
 pub mod frozen;
+pub mod quarantine;
 pub mod sink;
 pub mod source;
 
@@ -71,11 +72,13 @@ pub use executor::{
     ChunkState, Executor, ExecutorReport, ExecutorRun, FusedStages, StreamStats,
 };
 pub use frozen::{ApplyOutcome, FrozenPlan, MissPolicy};
+pub use quarantine::{QuarantineFile, QuarantineSource, QuarantineWriter};
 pub use sink::{CollectSink, CountSink, Sink};
 pub use source::{
     serve_bytes, FileSource, MemorySource, ReaderSource, Source, SynthSource, TcpSource,
 };
 
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -83,7 +86,11 @@ use std::time::{Duration, Instant};
 use crate::accel::InputFormat;
 use crate::data::row::ProcessedColumns;
 use crate::data::{RowBlock, Schema};
-use crate::decode::{shard, IllegalLog, ShardedUtf8Decoder};
+use crate::decode::errors::QuarantineSummary;
+use crate::decode::{
+    shard, DataError, DecodeTally, ErrorBudget, ErrorConfig, ErrorPolicy, IllegalLog,
+    QuarantinedRow, RowError, RowErrorKind, RowErrorLog, ShardedUtf8Decoder,
+};
 use crate::ops::{ColumnPlans, Modulus, PipelineSpec};
 use crate::report::{self, TimeTag};
 use crate::Result;
@@ -96,7 +103,7 @@ use crate::Result;
 /// chunk in parallel ([`crate::decode::shard`]) and whether the SWAR
 /// wide-word loop or the byte-at-a-time oracle loop runs per shard
 /// (the latter exists for the ablation benches).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DecodeOptions {
     /// Decode threads per UTF-8 chunk; 1 = today's sequential path.
     /// Binary input ignores this (its bulk column copy already runs at
@@ -104,11 +111,13 @@ pub struct DecodeOptions {
     pub threads: usize,
     /// SWAR wide-word hot loop (default) vs the scalar per-byte loop.
     pub swar: bool,
+    /// Malformed-row containment: policy, error budget, and detail cap.
+    pub errors: ErrorConfig,
 }
 
 impl Default for DecodeOptions {
     fn default() -> Self {
-        DecodeOptions { threads: 1, swar: true }
+        DecodeOptions { threads: 1, swar: true, errors: ErrorConfig::default() }
     }
 }
 
@@ -116,12 +125,22 @@ impl Default for DecodeOptions {
 /// decode front of the engine, also used by the network worker
 /// ([`crate::net::stream`]).
 #[derive(Debug)]
-pub struct ChunkDecoder(DecoderInner);
+pub struct ChunkDecoder {
+    inner: DecoderInner,
+    cfg: ErrorConfig,
+}
 
 #[derive(Debug)]
 enum DecoderInner {
     Utf8(ShardedUtf8Decoder),
-    Binary { schema: Schema, partial: Vec<u8> },
+    Binary {
+        schema: Schema,
+        partial: Vec<u8>,
+        /// Stream-absolute end position of the bytes fed so far.
+        pos: u64,
+        errors: RowErrorLog,
+        quarantined: Vec<QuarantinedRow>,
+    },
 }
 
 impl ChunkDecoder {
@@ -134,21 +153,70 @@ impl ChunkDecoder {
     /// Decoder with explicit decode options (the engine passes the
     /// plan's `decode_threads` here).
     pub fn with_options(format: InputFormat, schema: Schema, opts: DecodeOptions) -> Self {
-        ChunkDecoder(match format {
-            InputFormat::Utf8 => {
-                DecoderInner::Utf8(ShardedUtf8Decoder::new(schema, opts.threads, opts.swar))
-            }
-            InputFormat::Binary => DecoderInner::Binary { schema, partial: Vec::new() },
-        })
+        let inner = match format {
+            InputFormat::Utf8 => DecoderInner::Utf8(ShardedUtf8Decoder::with_errors(
+                schema,
+                opts.threads,
+                opts.swar,
+                opts.errors,
+            )),
+            InputFormat::Binary => DecoderInner::Binary {
+                schema,
+                partial: Vec::new(),
+                pos: 0,
+                errors: RowErrorLog::with_cap(opts.errors.detail_cap),
+                quarantined: Vec::new(),
+            },
+        };
+        ChunkDecoder { inner, cfg: opts.errors }
     }
 
     /// Illegal bytes skipped so far (UTF-8 only; offsets are absolute
     /// in the fed stream, never shard-relative).
     pub fn illegal(&self) -> Option<&IllegalLog> {
-        match &self.0 {
+        match &self.inner {
             DecoderInner::Utf8(dec) => Some(dec.illegal()),
             DecoderInner::Binary { .. } => None,
         }
+    }
+
+    /// Row-level defects detected so far under the configured policy.
+    pub fn errors(&self) -> &RowErrorLog {
+        match &self.inner {
+            DecoderInner::Utf8(dec) => dec.errors(),
+            DecoderInner::Binary { errors, .. } => errors,
+        }
+    }
+
+    /// Rows seen so far — kept plus contained (the error-rate budget's
+    /// denominator). Binary counts whole rows fed so far.
+    pub fn rows_seen(&self) -> u64 {
+        match &self.inner {
+            DecoderInner::Utf8(dec) => dec.rows_seen(),
+            DecoderInner::Binary { schema, partial, pos, .. } => {
+                (pos - partial.len() as u64) / schema.binary_row_bytes() as u64
+            }
+        }
+    }
+
+    /// Drain the raw bytes of rows contained under the quarantine
+    /// policy since the last drain (empty under every other policy).
+    pub fn take_quarantined(&mut self) -> Vec<QuarantinedRow> {
+        match &mut self.inner {
+            DecoderInner::Utf8(dec) => dec.take_quarantined(),
+            DecoderInner::Binary { quarantined, .. } => std::mem::take(quarantined),
+        }
+    }
+
+    /// Under `on_error=fail`, surface the first recorded defect as a
+    /// typed [`DataError`]; no-op otherwise.
+    fn enforce_fail(&self) -> Result<()> {
+        if self.cfg.policy == ErrorPolicy::Fail {
+            if let Some(first) = self.errors().first() {
+                return Err(anyhow::Error::new(DataError::Row(*first)));
+            }
+        }
+        Ok(())
     }
 
     /// Feed a chunk, appending all rows it completes to `out`.
@@ -164,13 +232,14 @@ impl ChunkDecoder {
     /// row-wise decoder). Only the straddling tail bytes (< one row)
     /// ever touch the `partial` buffer.
     pub fn feed_into(&mut self, chunk: &[u8], out: &mut RowBlock) -> Result<()> {
-        match &mut self.0 {
+        match &mut self.inner {
             DecoderInner::Utf8(dec) => {
                 dec.feed_into(chunk, out);
-                Ok(())
+                self.enforce_fail()
             }
-            DecoderInner::Binary { schema, partial } => {
+            DecoderInner::Binary { schema, partial, pos, .. } => {
                 let rb = schema.binary_row_bytes();
+                *pos += chunk.len() as u64;
                 let mut chunk = chunk;
                 if !partial.is_empty() {
                     // Complete the row straddling the previous chunk.
@@ -194,19 +263,56 @@ impl ChunkDecoder {
     }
 
     /// Finish the pass; any trailing partial row is completed (UTF-8
-    /// without final newline) or rejected (truncated binary row).
-    /// Returns the full illegal-byte log of the pass (always empty for
-    /// binary — a malformed binary stream is an error, not a skip).
-    pub fn finish_into(self, out: &mut RowBlock) -> Result<IllegalLog> {
-        match self.0 {
-            DecoderInner::Utf8(dec) => Ok(dec.finish_into(out)),
-            DecoderInner::Binary { partial, .. } => {
-                anyhow::ensure!(
-                    partial.is_empty(),
-                    "binary stream ended mid-row ({} stray bytes)",
-                    partial.len()
-                );
-                Ok(IllegalLog::default())
+    /// without final newline) or contained (truncated binary row). The
+    /// returned tally carries the pass's full illegal-byte and row-error
+    /// logs plus any still-undrained quarantined rows.
+    ///
+    /// A truncated binary tail is classified as `WrongFieldCount` (the
+    /// stream ended before the row's fixed byte count): the legacy
+    /// `zero` policy keeps rejecting the whole stream, `fail` surfaces a
+    /// typed [`DataError`] naming the row's stream offset, and
+    /// `skip`/`quarantine` contain just the tail row.
+    pub fn finish_into(self, out: &mut RowBlock) -> Result<DecodeTally> {
+        let cfg = self.cfg;
+        match self.inner {
+            DecoderInner::Utf8(dec) => {
+                let tally = dec.finish_into(out);
+                if cfg.policy == ErrorPolicy::Fail {
+                    if let Some(first) = tally.errors.first() {
+                        return Err(anyhow::Error::new(DataError::Row(*first)));
+                    }
+                }
+                Ok(tally)
+            }
+            DecoderInner::Binary { schema, partial, pos, mut errors, mut quarantined } => {
+                let rb = schema.binary_row_bytes() as u64;
+                let mut rows_seen = (pos - partial.len() as u64) / rb;
+                if !partial.is_empty() {
+                    let err = RowError {
+                        kind: RowErrorKind::WrongFieldCount,
+                        offset: pos - partial.len() as u64,
+                        row: rows_seen,
+                    };
+                    match cfg.policy {
+                        ErrorPolicy::Zero => anyhow::bail!(
+                            "binary stream ended mid-row ({} stray bytes)",
+                            partial.len()
+                        ),
+                        ErrorPolicy::Fail => return Err(anyhow::Error::new(DataError::Row(err))),
+                        ErrorPolicy::Skip => errors.note(err),
+                        ErrorPolicy::Quarantine => {
+                            errors.note(err);
+                            quarantined.push(QuarantinedRow {
+                                row: err.row,
+                                offset: err.offset,
+                                kind: err.kind,
+                                bytes: partial,
+                            });
+                        }
+                    }
+                    rows_seen += 1;
+                }
+                Ok(DecodeTally { illegal: IllegalLog::default(), errors, quarantined, rows_seen })
             }
         }
     }
@@ -283,6 +389,12 @@ pub struct Plan {
     /// Row shards decoding each UTF-8 chunk in parallel (see
     /// [`PipelineBuilder::decode_threads`]); 1 is the sequential path.
     pub decode_threads: usize,
+    /// Malformed-row containment: policy, error budget, detail cap (see
+    /// [`PipelineBuilder::on_error`]).
+    pub errors: ErrorConfig,
+    /// Side file receiving raw quarantined rows when `errors.policy` is
+    /// [`ErrorPolicy::Quarantine`] (see [`PipelineBuilder::quarantine`]).
+    pub quarantine: Option<PathBuf>,
 }
 
 impl Plan {
@@ -305,6 +417,8 @@ impl Plan {
             pipeline_depth: DEFAULT_PIPELINE_DEPTH,
             strategy: ExecStrategy::TwoPass,
             decode_threads: 1,
+            errors: ErrorConfig::default(),
+            quarantine: None,
         })
     }
 
@@ -354,6 +468,10 @@ pub struct PipelineBuilder {
     pipeline_depth: usize,
     strategy: Option<ExecStrategy>,
     decode_threads: Option<usize>,
+    on_error: Option<ErrorPolicy>,
+    error_budget: ErrorBudget,
+    error_details: usize,
+    quarantine: Option<PathBuf>,
     executor: Option<Box<dyn Executor>>,
 }
 
@@ -377,6 +495,10 @@ impl PipelineBuilder {
             pipeline_depth: DEFAULT_PIPELINE_DEPTH,
             strategy: None,
             decode_threads: None,
+            on_error: None,
+            error_budget: ErrorBudget::Unlimited,
+            error_details: crate::decode::errors::DEFAULT_ERROR_DETAILS,
+            quarantine: None,
             executor: None,
         }
     }
@@ -475,6 +597,43 @@ impl PipelineBuilder {
         self
     }
 
+    /// Malformed-row policy (default [`ErrorPolicy::Zero`], the legacy
+    /// zero-fill behavior). `fail` aborts the submission with a typed
+    /// [`DataError`] naming the first offending stream offset; `skip`
+    /// drops defective rows; `quarantine` drops them *and* writes their
+    /// raw bytes to the side file set via [`Self::quarantine`] (which is
+    /// then required at [`Self::build`]).
+    pub fn on_error(mut self, policy: ErrorPolicy) -> Self {
+        self.on_error = Some(policy);
+        self
+    }
+
+    /// Abort the submission once contained rows exceed this budget — an
+    /// absolute count or a rate over rows seen (default unlimited). Only
+    /// meaningful under `skip`/`quarantine`; `fail` aborts on the first
+    /// defect regardless and `zero` contains nothing.
+    pub fn error_budget(mut self, budget: ErrorBudget) -> Self {
+        self.error_budget = budget;
+        self
+    }
+
+    /// Per-log cap on *recorded* defect details — first-N illegal-byte
+    /// offsets and first-N row errors surfaced in the report (default
+    /// 64). Totals are always exact; the cap bounds only detail memory.
+    /// Validated ≥ 1 at [`Self::build`].
+    pub fn error_details(mut self, cap: usize) -> Self {
+        self.error_details = cap;
+        self
+    }
+
+    /// Side file receiving raw quarantined rows. Setting a path without
+    /// [`Self::on_error`] implies [`ErrorPolicy::Quarantine`]; setting
+    /// one alongside a different explicit policy is a planning error.
+    pub fn quarantine(mut self, path: impl Into<PathBuf>) -> Self {
+        self.quarantine = Some(path.into());
+        self
+    }
+
     pub fn executor(mut self, executor: Box<dyn Executor>) -> Self {
         self.executor = Some(executor);
         self
@@ -502,6 +661,27 @@ impl PipelineBuilder {
             Some(n) => n,
             None => shard::default_threads(),
         };
+        anyhow::ensure!(
+            self.error_details >= 1,
+            "planning: error_details must be >= 1 (got 0)"
+        );
+        let policy = match (self.on_error, &self.quarantine) {
+            (Some(ErrorPolicy::Quarantine), None) => {
+                anyhow::bail!("planning: on_error=quarantine needs a quarantine path")
+            }
+            (Some(p), Some(_)) if p != ErrorPolicy::Quarantine => anyhow::bail!(
+                "planning: quarantine path set but on_error={} (expected quarantine)",
+                p.name()
+            ),
+            (Some(p), _) => p,
+            (None, Some(_)) => ErrorPolicy::Quarantine,
+            (None, None) => ErrorPolicy::Zero,
+        };
+        let errors = ErrorConfig {
+            policy,
+            budget: self.error_budget,
+            detail_cap: self.error_details,
+        };
         // The spec was validated at its construction; resolving its
         // column selectors against the schema is the planning step that
         // can still fail (a schema mismatch is a planning error).
@@ -514,6 +694,8 @@ impl PipelineBuilder {
             pipeline_depth: self.pipeline_depth,
             strategy: ExecStrategy::TwoPass, // provisional until capability check
             decode_threads,
+            errors,
+            quarantine: self.quarantine,
         };
         anyhow::ensure!(
             executor.accepts(plan.input),
@@ -597,14 +779,30 @@ impl Pipeline {
                      this source streams once — build the pipeline with the \
                      fused strategy instead"
                 );
-                let pass1 = stream_chunks(&self.plan, &mut *source, &mut pool, |block| {
-                    run.observe(block)
-                })?;
+                // The observe pass runs quarantine downgraded to skip:
+                // keep/drop decisions are identical (so both passes see
+                // the same rows), but raw bytes are written and counters
+                // reported once, by the emit pass.
+                let pass1 = stream_chunks(
+                    &self.plan,
+                    &mut *source,
+                    &mut pool,
+                    self.plan.errors.for_observe_pass(),
+                    None,
+                    |block| run.observe(block),
+                )?;
                 decode_time += pass1.decode;
                 source.reset()?;
             }
             run.seal()?;
         }
+
+        let mut quarantine_writer = match (&self.plan.quarantine, self.plan.errors.policy) {
+            (Some(path), ErrorPolicy::Quarantine) => {
+                Some(QuarantineWriter::create(path, self.plan.input)?)
+            }
+            _ => None,
+        };
 
         let mut stage = StageTimes::default();
         let mut effective_depth = 1;
@@ -620,6 +818,8 @@ impl Pipeline {
                         &self.plan,
                         &mut *source,
                         &mut pool,
+                        self.plan.errors,
+                        quarantine_writer.as_mut(),
                         stages,
                         sink,
                     )?),
@@ -631,28 +831,51 @@ impl Pipeline {
                         effective_depth = self.plan.pipeline_depth;
                         totals
                     }
-                    None => stream_chunks(&self.plan, &mut *source, &mut pool, |block| {
-                        run.process_observing(block, sink)
-                    })?,
+                    None => stream_chunks(
+                        &self.plan,
+                        &mut *source,
+                        &mut pool,
+                        self.plan.errors,
+                        quarantine_writer.as_mut(),
+                        |block| run.process_observing(block, sink),
+                    )?,
                 }
             }
             // Fused, sequential (pipeline_depth 1 — the pinned
             // pre-pipelining baseline): the single decode pass observes
             // and emits at once — no rewind, no barrier, output streams
             // while vocabularies build.
-            ExecStrategy::Fused => {
-                stream_chunks(&self.plan, &mut *source, &mut pool, |block| {
-                    run.process_observing(block, sink)
-                })?
-            }
-            ExecStrategy::TwoPass => {
-                stream_chunks(&self.plan, &mut *source, &mut pool, |block| {
+            ExecStrategy::Fused => stream_chunks(
+                &self.plan,
+                &mut *source,
+                &mut pool,
+                self.plan.errors,
+                quarantine_writer.as_mut(),
+                |block| run.process_observing(block, sink),
+            )?,
+            ExecStrategy::TwoPass => stream_chunks(
+                &self.plan,
+                &mut *source,
+                &mut pool,
+                self.plan.errors,
+                quarantine_writer.as_mut(),
+                |block| {
                     let columns = run.process(block)?;
                     sink.push(&columns)
-                })?
-            }
+                },
+            )?,
         };
         decode_time += totals.decode;
+
+        let quarantine = match quarantine_writer {
+            Some(writer) => writer.finish()?,
+            None => QuarantineSummary::default(),
+        };
+        let (rows_skipped, rows_quarantined) = match self.plan.errors.policy {
+            ErrorPolicy::Skip => (totals.errors.total, 0),
+            ErrorPolicy::Quarantine => (0, totals.errors.total),
+            _ => (0, 0),
+        };
 
         let stats = StreamStats {
             raw_bytes: totals.raw_bytes,
@@ -671,7 +894,12 @@ impl Pipeline {
             strategy: self.plan.strategy,
             decode_threads: self.plan.decode_threads,
             decode_time,
-            illegal_bytes: totals.illegal_bytes,
+            illegal_bytes: totals.illegal.total,
+            illegal: totals.illegal,
+            row_errors: totals.errors,
+            rows_skipped,
+            rows_quarantined,
+            quarantine,
             e2e: rep.modeled_e2e.unwrap_or(stats.wall),
             wall: stats.wall,
             tag: rep.tag,
@@ -695,7 +923,7 @@ impl Pipeline {
 }
 
 /// Totals of one streaming pass over the source.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone)]
 struct PassTotals {
     raw_bytes: u64,
     rows: u64,
@@ -703,8 +931,61 @@ struct PassTotals {
     /// Wallclock spent inside the decode front (feed + finish), summed
     /// over the pass — the numerator of the decode-scaling tables.
     decode: Duration,
-    /// Illegal input bytes the decode skipped during this pass.
-    illegal_bytes: u64,
+    /// Illegal input bytes the decode skipped during this pass (full
+    /// log: exact total plus the first-N recorded offsets).
+    illegal: IllegalLog,
+    /// Row-level defects contained during this pass under the plan's
+    /// error policy.
+    errors: RowErrorLog,
+}
+
+/// Drain freshly quarantined rows to the side file and enforce the
+/// error budget against the decoder's running totals. Called once per
+/// fed chunk (so a blown budget aborts within one chunk of the
+/// offending row) and once more at pass finish.
+fn contain_step(
+    decoder: &mut ChunkDecoder,
+    errors: ErrorConfig,
+    quarantine: &mut Option<&mut QuarantineWriter>,
+) -> Result<()> {
+    if let Some(writer) = quarantine.as_deref_mut() {
+        for row in decoder.take_quarantined() {
+            writer.write(&row)?;
+        }
+    }
+    let log = decoder.errors();
+    if errors.budget.exceeded(log.total, decoder.rows_seen()) {
+        return Err(anyhow::Error::new(DataError::BudgetExceeded {
+            errors: log.total,
+            rows: decoder.rows_seen(),
+            budget: errors.budget,
+            first: log.first().copied(),
+        }));
+    }
+    Ok(())
+}
+
+/// The finish-time counterpart of [`contain_step`]: drain the tally's
+/// still-undrained quarantined rows and run the final budget check.
+fn contain_tally(
+    tally: &mut DecodeTally,
+    errors: ErrorConfig,
+    quarantine: &mut Option<&mut QuarantineWriter>,
+) -> Result<()> {
+    if let Some(writer) = quarantine.as_deref_mut() {
+        for row in tally.quarantined.drain(..) {
+            writer.write(&row)?;
+        }
+    }
+    if errors.budget.exceeded(tally.errors.total, tally.rows_seen) {
+        return Err(anyhow::Error::new(DataError::BudgetExceeded {
+            errors: tally.errors.total,
+            rows: tally.rows_seen,
+            budget: errors.budget,
+            first: tally.errors.first().copied(),
+        }));
+    }
+    Ok(())
 }
 
 /// One streaming pass: a producer thread pulls raw chunks from the
@@ -722,6 +1003,8 @@ fn stream_chunks<F>(
     plan: &Plan,
     source: &mut dyn Source,
     pool: &mut Vec<Vec<u8>>,
+    errors: ErrorConfig,
+    mut quarantine: Option<&mut QuarantineWriter>,
     mut consume: F,
 ) -> Result<PassTotals>
 where
@@ -731,7 +1014,7 @@ where
     let mut decoder = ChunkDecoder::with_options(
         plan.input,
         plan.schema(),
-        DecodeOptions { threads: plan.decode_threads, swar: true },
+        DecodeOptions { threads: plan.decode_threads, swar: true, errors },
     );
     let mut block = RowBlock::with_capacity(plan.schema(), plan.chunk_rows);
     let mut raw_bytes = 0u64;
@@ -774,6 +1057,7 @@ where
             let fed = decoder.feed_into(&chunk, &mut block);
             decode += td.elapsed();
             let step = fed.and_then(|()| {
+                contain_step(&mut decoder, errors, &mut quarantine)?;
                 if block.is_empty() {
                     return Ok(());
                 }
@@ -812,13 +1096,14 @@ where
 
     block.clear();
     let td = Instant::now();
-    let illegal = decoder.finish_into(&mut block)?;
+    let mut tally = decoder.finish_into(&mut block)?;
     decode += td.elapsed();
+    contain_tally(&mut tally, errors, &mut quarantine)?;
     if !block.is_empty() {
         rows += block.num_rows() as u64;
         consume(&block)?;
     }
-    Ok(PassTotals { raw_bytes, rows, chunks, decode, illegal_bytes: illegal.total })
+    Ok(PassTotals { raw_bytes, rows, chunks, decode, illegal: tally.illegal, errors: tally.errors })
 }
 
 // ---------------------------------------------------------------------
@@ -848,7 +1133,9 @@ struct StageSide {
     raw_bytes: u64,
     rows: u64,
     chunks: u64,
-    illegal_bytes: u64,
+    /// Full decode tally of the pass (illegal bytes, row errors),
+    /// captured at decoder finish.
+    tally: DecodeTally,
     decode: Duration,
     stateless: Duration,
     window_wait: Duration,
@@ -942,6 +1229,8 @@ fn run_fused_pipelined(
     plan: &Plan,
     source: &mut dyn Source,
     pool: &mut Vec<Vec<u8>>,
+    errors: ErrorConfig,
+    quarantine: Option<&mut QuarantineWriter>,
     stages: FusedStages<'_>,
     sink: &mut dyn Sink,
 ) -> Result<(PassTotals, StageTimes)> {
@@ -984,12 +1273,16 @@ fn run_fused_pipelined(
 
         let stage_pool = pool_tx.clone();
         let stateless = &stateless;
+        // The writer moves onto the stage thread: decode (and therefore
+        // containment) happens there, and the scope joins the thread
+        // before the caller's borrow ends.
+        let mut quarantine = quarantine;
         let stage = scope.spawn(move || {
             let mut side = StageSide::default();
             let mut decoder = ChunkDecoder::with_options(
                 plan.input,
                 plan.schema(),
-                DecodeOptions { threads: plan.decode_threads, swar: true },
+                DecodeOptions { threads: plan.decode_threads, swar: true, errors },
             );
             // A block that decoded to zero rows (partial row spanning
             // the chunk) is held locally instead of cycling through the
@@ -1010,6 +1303,7 @@ fn run_fused_pipelined(
                     side.decode += td.elapsed();
                     let _ = stage_pool.send(chunk); // recycle the raw buffer
                     fed?;
+                    contain_step(&mut decoder, errors, &mut quarantine)?;
                     if block.is_empty() {
                         held = Some(block);
                         continue;
@@ -1030,9 +1324,10 @@ fn run_fused_pipelined(
                 };
                 block.clear();
                 let td = Instant::now();
-                let illegal = decoder.finish_into(&mut block)?;
+                let mut tally = decoder.finish_into(&mut block)?;
                 side.decode += td.elapsed();
-                side.illegal_bytes = illegal.total;
+                contain_tally(&mut tally, errors, &mut quarantine)?;
+                side.tally = tally;
                 if !block.is_empty() {
                     side.rows += block.num_rows() as u64;
                     let ts = Instant::now();
@@ -1093,7 +1388,8 @@ fn run_fused_pipelined(
             rows: side.rows,
             chunks: side.chunks,
             decode: side.decode,
-            illegal_bytes: side.illegal_bytes,
+            illegal: side.tally.illegal,
+            errors: side.tally.errors,
         };
         let passed = match (produced, staged, consumer_err) {
             // A producer error explains any downstream failure.
@@ -1140,6 +1436,24 @@ pub struct RunReport {
     /// Counted over one decode pass: a two-pass plan reads the same
     /// bytes twice but reports them once. Zero for well-formed input.
     pub illegal_bytes: u64,
+    /// The full illegal-byte log behind `illegal_bytes`: exact total
+    /// plus the first-N recorded stream-absolute offsets (N = the
+    /// plan's `error_details` cap).
+    pub illegal: IllegalLog,
+    /// Row-level defects detected during the emit pass: exact totals
+    /// per [`crate::decode::RowErrorKind`] plus the first-N recorded
+    /// `(offset, kind, row)` details. Populated under every policy —
+    /// the legacy `zero` policy drops no rows but still logs what the
+    /// other policies would have contained.
+    pub row_errors: RowErrorLog,
+    /// Rows dropped by `on_error=skip` (0 under every other policy).
+    pub rows_skipped: u64,
+    /// Rows dropped *and* written to the quarantine side file by
+    /// `on_error=quarantine`.
+    pub rows_quarantined: u64,
+    /// Where quarantined rows went: side-file path and row count
+    /// (defaults when no quarantine file was configured).
+    pub quarantine: QuarantineSummary,
     /// End-to-end time: modeled for sim executors, measured wallclock
     /// for the CPU baseline. Check `tag`.
     pub e2e: Duration,

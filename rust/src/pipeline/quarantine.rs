@@ -1,0 +1,262 @@
+//! Replayable quarantine sink: the side file `on_error=quarantine`
+//! writes contained rows to, and the [`Source`] that re-ingests it.
+//!
+//! # File format (version 1)
+//!
+//! ```text
+//! magic  "PIPQRN01"                        8 bytes
+//! format u8 (0 = utf8, 1 = binary)         1 byte
+//! record*:
+//!   row    u64le   stream-absolute row index of the contained row
+//!   offset u64le   stream-absolute byte offset of the row's first byte
+//!   kind   u8      RowErrorKind discriminant
+//!   len    u32le   raw byte count (capped at MAX_QUARANTINE_ROW_BYTES)
+//!   bytes  [u8; len]  the row exactly as it appeared in the input
+//! ```
+//!
+//! Raw bytes are preserved verbatim (including the defect), so after an
+//! upstream fix — a schema change, a relaxed field cap — the same file
+//! replays through the engine via [`QuarantineSource`] with no
+//! conversion step. Everything is little-endian, matching the wire
+//! protocol of [`crate::net::protocol`].
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::accel::InputFormat;
+use crate::decode::errors::QuarantineSummary;
+use crate::decode::{QuarantinedRow, RowErrorKind};
+use crate::pipeline::Source;
+use crate::Result;
+
+/// File magic + version of the quarantine side-file format.
+pub const QUARANTINE_MAGIC: &[u8; 8] = b"PIPQRN01";
+
+fn format_to_u8(format: InputFormat) -> u8 {
+    match format {
+        InputFormat::Utf8 => 0,
+        InputFormat::Binary => 1,
+    }
+}
+
+fn format_from_u8(b: u8) -> Result<InputFormat> {
+    match b {
+        0 => Ok(InputFormat::Utf8),
+        1 => Ok(InputFormat::Binary),
+        other => anyhow::bail!("quarantine file: unknown input format byte {other}"),
+    }
+}
+
+/// Streaming writer for the quarantine side file. Created eagerly at
+/// run start (a failing path should fail before any rows stream), fed
+/// by the engine's containment drain, sealed by [`Self::finish`].
+#[derive(Debug)]
+pub struct QuarantineWriter {
+    path: PathBuf,
+    file: BufWriter<File>,
+    rows: u64,
+}
+
+impl QuarantineWriter {
+    pub fn create(path: &Path, format: InputFormat) -> Result<Self> {
+        let file = File::create(path)
+            .with_context(|| format!("creating quarantine file {}", path.display()))?;
+        let mut file = BufWriter::new(file);
+        file.write_all(QUARANTINE_MAGIC)?;
+        file.write_all(&[format_to_u8(format)])?;
+        Ok(QuarantineWriter { path: path.to_path_buf(), file, rows: 0 })
+    }
+
+    /// Append one contained row.
+    pub fn write(&mut self, row: &QuarantinedRow) -> Result<()> {
+        self.file.write_all(&row.row.to_le_bytes())?;
+        self.file.write_all(&row.offset.to_le_bytes())?;
+        self.file.write_all(&[row.kind.as_u8()])?;
+        self.file.write_all(&(row.bytes.len() as u32).to_le_bytes())?;
+        self.file.write_all(&row.bytes)?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Rows written so far.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Flush and seal the file; returns the summary carried into
+    /// [`crate::pipeline::RunReport`].
+    pub fn finish(mut self) -> Result<QuarantineSummary> {
+        self.file
+            .flush()
+            .with_context(|| format!("flushing quarantine file {}", self.path.display()))?;
+        Ok(QuarantineSummary { path: Some(self.path), rows: self.rows })
+    }
+}
+
+/// A fully loaded quarantine side file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuarantineFile {
+    pub format: InputFormat,
+    pub rows: Vec<QuarantinedRow>,
+}
+
+impl QuarantineFile {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut raw = Vec::new();
+        File::open(path)
+            .with_context(|| format!("opening quarantine file {}", path.display()))?
+            .read_to_end(&mut raw)?;
+        anyhow::ensure!(
+            raw.len() >= QUARANTINE_MAGIC.len() + 1 && raw.starts_with(QUARANTINE_MAGIC),
+            "{} is not a quarantine file (bad magic)",
+            path.display()
+        );
+        let format = format_from_u8(raw[8])?;
+        let mut rows = Vec::new();
+        let mut at = 9usize;
+        while at < raw.len() {
+            anyhow::ensure!(
+                raw.len() - at >= 21,
+                "quarantine file truncated mid-header at byte {at}"
+            );
+            let row = u64::from_le_bytes(raw[at..at + 8].try_into().unwrap());
+            let offset = u64::from_le_bytes(raw[at + 8..at + 16].try_into().unwrap());
+            let kind = RowErrorKind::from_u8(raw[at + 16])
+                .with_context(|| format!("quarantine file: bad error kind at byte {at}"))?;
+            let len = u32::from_le_bytes(raw[at + 17..at + 21].try_into().unwrap()) as usize;
+            at += 21;
+            anyhow::ensure!(
+                raw.len() - at >= len,
+                "quarantine file truncated mid-record at byte {at}"
+            );
+            rows.push(QuarantinedRow { row, offset, kind, bytes: raw[at..at + len].to_vec() });
+            at += len;
+        }
+        Ok(QuarantineFile { format, rows })
+    }
+}
+
+/// Replays a quarantine file through the engine as a rewindable
+/// [`Source`]: record payloads are concatenated back into a byte
+/// stream in containment order (UTF-8 rows get their terminating
+/// newline restored if the defect consumed it).
+#[derive(Debug)]
+pub struct QuarantineSource {
+    format: InputFormat,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl QuarantineSource {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = QuarantineFile::load(path)?;
+        let mut buf = Vec::new();
+        for row in &file.rows {
+            buf.extend_from_slice(&row.bytes);
+            if file.format == InputFormat::Utf8 && !row.bytes.ends_with(b"\n") {
+                buf.push(b'\n');
+            }
+        }
+        Ok(QuarantineSource { format: file.format, buf, pos: 0 })
+    }
+}
+
+impl Source for QuarantineSource {
+    fn format(&self) -> InputFormat {
+        self.format
+    }
+
+    fn next_chunk(&mut self, max_bytes: usize, buf: &mut Vec<u8>) -> Result<bool> {
+        buf.clear();
+        if self.pos >= self.buf.len() {
+            return Ok(false);
+        }
+        let end = (self.pos + max_bytes.max(1)).min(self.buf.len());
+        buf.extend_from_slice(&self.buf[self.pos..end]);
+        self.pos = end;
+        Ok(true)
+    }
+
+    fn can_rewind(&self) -> bool {
+        true
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+
+    fn len_hint(&self) -> Option<u64> {
+        Some(self.buf.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(row: u64, offset: u64, kind: RowErrorKind, bytes: &[u8]) -> QuarantinedRow {
+        QuarantinedRow { row, offset, kind, bytes: bytes.to_vec() }
+    }
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("piper-qrnt-{tag}-{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn write_then_load_round_trips() {
+        let path = temp_path("round");
+        let rows = vec![
+            row(3, 120, RowErrorKind::IllegalByte, b"1,2,x3\n"),
+            row(9, 410, RowErrorKind::WrongFieldCount, b"only,two\n"),
+            row(11, 502, RowErrorKind::NumericOverflow, b""),
+        ];
+        let mut w = QuarantineWriter::create(&path, InputFormat::Utf8).unwrap();
+        for r in &rows {
+            w.write(r).unwrap();
+        }
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.rows, 3);
+        assert_eq!(summary.path.as_deref(), Some(path.as_path()));
+
+        let file = QuarantineFile::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(file.format, InputFormat::Utf8);
+        assert_eq!(file.rows, rows);
+    }
+
+    #[test]
+    fn source_replays_bytes_and_rewinds() {
+        let path = temp_path("replay");
+        let mut w = QuarantineWriter::create(&path, InputFormat::Utf8).unwrap();
+        w.write(&row(0, 0, RowErrorKind::IllegalByte, b"a,b\n")).unwrap();
+        // A row whose trailing newline was consumed by the defect.
+        w.write(&row(5, 99, RowErrorKind::WrongFieldCount, b"c,d")).unwrap();
+        w.finish().unwrap();
+
+        let mut src = QuarantineSource::open(&path).unwrap();
+        assert_eq!(src.format(), InputFormat::Utf8);
+        assert!(src.can_rewind());
+        let mut all = Vec::new();
+        let mut chunk = Vec::new();
+        while src.next_chunk(3, &mut chunk).unwrap() {
+            all.extend_from_slice(&chunk);
+        }
+        assert_eq!(all, b"a,b\nc,d\n");
+        src.reset().unwrap();
+        assert!(src.next_chunk(1024, &mut chunk).unwrap());
+        assert_eq!(chunk, b"a,b\nc,d\n");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = temp_path("garbage");
+        std::fs::write(&path, b"definitely not a quarantine file").unwrap();
+        assert!(QuarantineFile::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

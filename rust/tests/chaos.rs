@@ -130,7 +130,8 @@ fn fixture(rows: usize) -> Fixture {
     .expect("spec parses");
     let want = spec.execute(&ds.rows, ds.schema()).expect("sequential reference");
     let raw = utf8::encode_dataset(&ds);
-    let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+    let job =
+        Job { schema: ds.schema(), spec, format: WireFormat::Utf8, errors: Default::default() };
     Fixture { job, raw, want, rows: ds.rows.len() as u64 }
 }
 
@@ -324,7 +325,8 @@ fn worker_error_reply_content_surfaces_from_run_cluster() {
     let spec = PipelineSpec::parse("sparse[40]: modulus:7|genvocab|applyvocab")
         .expect("parses; the selector only fails against this schema");
     let raw = utf8::encode_dataset(&ds);
-    let job = Job { schema: ds.schema(), spec, format: WireFormat::Utf8 };
+    let job =
+        Job { schema: ds.schema(), spec, format: WireFormat::Utf8, errors: Default::default() };
     let mut cfg = chaos_cfg();
     cfg.retries = 0; // the error is deterministic — retrying can't cure it
     let err = run_cluster_loopback_cfg(2, &job, &raw, CHUNK, &cfg)

@@ -9,7 +9,10 @@
 
 use piper::accel::InputFormat;
 use piper::data::{utf8, RowBlock, Schema, SynthConfig, SynthDataset};
-use piper::decode::{ParallelDecoder, ScalarDecoder, ShardedUtf8Decoder};
+use piper::decode::{
+    DecodeTally, ErrorConfig, ErrorPolicy, ParallelDecoder, RowErrorKind, ScalarDecoder,
+    ShardedUtf8Decoder,
+};
 use piper::pipeline::{ChunkDecoder, DecodeOptions};
 use piper::util::XorShift64;
 
@@ -24,14 +27,14 @@ fn chunked_decode(
     raw: &[u8],
     chunk: usize,
     opts: DecodeOptions,
-) -> (Vec<piper::data::DecodedRow>, piper::decode::IllegalLog) {
+) -> (Vec<piper::data::DecodedRow>, DecodeTally) {
     let mut dec = ChunkDecoder::with_options(InputFormat::Utf8, schema, opts);
     let mut out = RowBlock::new(schema);
     for c in raw.chunks(chunk.clamp(1, raw.len())) {
         dec.feed_into(c, &mut out).expect("utf8 decode is infallible");
     }
-    let illegal = dec.finish_into(&mut out).expect("utf8 finish is infallible");
-    (out.to_rows(), illegal)
+    let tally = dec.finish_into(&mut out).expect("utf8 finish is infallible");
+    (out.to_rows(), tally)
 }
 
 /// Every path over one buffer: rows, error log and cycles pinned to the
@@ -58,11 +61,11 @@ fn assert_all_paths_match(schema: Schema, raw: &[u8], tag: &str) {
     for threads in THREADS {
         for swar in [false, true] {
             for chunk in CHUNKS {
-                let opts = DecodeOptions { threads, swar };
-                let (rows, illegal) = chunked_decode(schema, raw, chunk, opts);
+                let opts = DecodeOptions { threads, swar, ..Default::default() };
+                let (rows, tally) = chunked_decode(schema, raw, chunk, opts);
                 let ctx = format!("{tag}: threads={threads} swar={swar} chunk={chunk}");
                 assert_eq!(rows, oracle.rows, "{ctx} rows");
-                assert_eq!(illegal, oracle.illegal, "{ctx} error positions");
+                assert_eq!(tally.illegal, oracle.illegal, "{ctx} error positions");
             }
         }
     }
@@ -145,12 +148,12 @@ fn sharded_error_offsets_are_chunk_absolute() {
     for threads in [2usize, 4, 8] {
         // One big feed (chunk interior shards) and mid-row cut feeds.
         for chunk in [usize::MAX, 1 << 20, 300_001] {
-            let opts = DecodeOptions { threads, swar: true };
-            let (rows, illegal) = chunked_decode(schema, &raw, chunk, opts);
+            let opts = DecodeOptions { threads, swar: true, ..Default::default() };
+            let (rows, tally) = chunked_decode(schema, &raw, chunk, opts);
             assert_eq!(rows, oracle.rows, "threads={threads} chunk={chunk}");
-            let got: Vec<u64> = illegal.recorded.iter().map(|b| b.offset).collect();
+            let got: Vec<u64> = tally.illegal.recorded.iter().map(|b| b.offset).collect();
             assert_eq!(got, expected, "threads={threads} chunk={chunk} offsets");
-            assert_eq!(illegal.total, expected.len() as u64);
+            assert_eq!(tally.illegal.total, expected.len() as u64);
         }
     }
 }
@@ -180,4 +183,102 @@ fn missing_trailing_newline_consistent_across_paths() {
     let mut raw = utf8::encode_dataset(&ds);
     raw.pop(); // drop the final `\n`: the last row completes at finish
     assert_all_paths_match(ds.schema(), &raw, "no trailing newline");
+}
+
+#[test]
+fn malformed_rows_classified_identically_across_paths() {
+    // One row per defect kind, with the expected stream-absolute offset
+    // computed while the buffer is built. Scalar and SWAR loops, every
+    // thread count and every chunk cut must classify each row with the
+    // same kind at the same offset — the containment contract.
+    let schema = Schema::new(2, 2);
+    let mut raw: Vec<u8> = Vec::new();
+    let mut expected: Vec<(u64, RowErrorKind, u64)> = Vec::new();
+    let mut bad_lines: Vec<Vec<u8>> = Vec::new();
+
+    raw.extend_from_slice(b"0\t1\t2\tdeadbeef\tcafef00d\n"); // row 0: clean
+
+    // row 1: illegal byte mid-field ('Z' after "1\t3\t").
+    expected.push((raw.len() as u64 + 4, RowErrorKind::IllegalByte, 1));
+    bad_lines.push(b"1\t3\tZ4\t5\t6\n".to_vec());
+    raw.extend_from_slice(b"1\t3\tZ4\t5\t6\n");
+
+    // row 2: short row (4 fields where the schema needs 5); the defect
+    // offset is the row's first byte.
+    expected.push((raw.len() as u64, RowErrorKind::WrongFieldCount, 2));
+    bad_lines.push(b"0\t7\t8\t9\n".to_vec());
+    raw.extend_from_slice(b"0\t7\t8\t9\n");
+
+    // row 3: dense decimal past u32::MAX; the defect offset is the
+    // overflowing field's first byte (after "1\t").
+    expected.push((raw.len() as u64 + 2, RowErrorKind::NumericOverflow, 3));
+    bad_lines.push(b"1\t99999999999\t1\t2\t3\n".to_vec());
+    raw.extend_from_slice(b"1\t99999999999\t1\t2\t3\n");
+
+    // row 4: one sparse field longer than MAX_FIELD_BYTES.
+    let mut line = b"0\t1\t2\t3\t".to_vec();
+    expected.push((raw.len() as u64 + line.len() as u64, RowErrorKind::OversizedField, 4));
+    line.extend_from_slice(&[b'a'; 70]);
+    line.push(b'\n');
+    bad_lines.push(line.clone());
+    raw.extend_from_slice(&line);
+
+    raw.extend_from_slice(b"1\t5\t6\t7\t8\n"); // row 5: clean
+
+    for swar in [false, true] {
+        for threads in [1usize, 2, 8] {
+            for chunk in [1usize, 7, 4096, usize::MAX] {
+                for policy in
+                    [ErrorPolicy::Zero, ErrorPolicy::Skip, ErrorPolicy::Quarantine]
+                {
+                    let opts = DecodeOptions {
+                        threads,
+                        swar,
+                        errors: ErrorConfig { policy, ..ErrorConfig::default() },
+                    };
+                    let (rows, tally) = chunked_decode(schema, &raw, chunk, opts);
+                    let ctx = format!(
+                        "swar={swar} threads={threads} chunk={chunk} policy={}",
+                        policy.name()
+                    );
+                    let got: Vec<(u64, RowErrorKind, u64)> = tally
+                        .errors
+                        .recorded
+                        .iter()
+                        .map(|e| (e.offset, e.kind, e.row))
+                        .collect();
+                    assert_eq!(got, expected, "{ctx}: row-error log");
+                    assert_eq!(tally.errors.total, 4, "{ctx}: total");
+                    assert_eq!(tally.rows_seen, 6, "{ctx}: rows seen");
+                    match policy {
+                        ErrorPolicy::Zero => {
+                            assert_eq!(rows.len(), 6, "{ctx}: zero keeps every row")
+                        }
+                        _ => {
+                            assert_eq!(rows.len(), 2, "{ctx}: only the clean rows");
+                            assert_eq!(rows[0].dense, vec![1, 2], "{ctx}: first kept row");
+                            assert_eq!(rows[1].dense, vec![5, 6], "{ctx}: last kept row");
+                        }
+                    }
+                    if policy == ErrorPolicy::Quarantine {
+                        let lines: Vec<&[u8]> =
+                            tally.quarantined.iter().map(|q| q.bytes.as_slice()).collect();
+                        let want: Vec<&[u8]> =
+                            bad_lines.iter().map(|l| l.as_slice()).collect();
+                        assert_eq!(lines, want, "{ctx}: captured raw rows");
+                        let offs: Vec<u64> =
+                            tally.quarantined.iter().map(|q| q.offset).collect();
+                        // Rows 1..=4 sit back to back right after row 0.
+                        let mut row_starts = Vec::new();
+                        let mut pos = b"0\t1\t2\tdeadbeef\tcafef00d\n".len() as u64;
+                        for l in &bad_lines {
+                            row_starts.push(pos);
+                            pos += l.len() as u64;
+                        }
+                        assert_eq!(offs, row_starts, "{ctx}: quarantine row starts");
+                    }
+                }
+            }
+        }
+    }
 }

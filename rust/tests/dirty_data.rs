@@ -1,0 +1,415 @@
+//! Hostile-input suite for row-level error containment: every backend,
+//! both strategies, both wire formats and both decode-thread settings
+//! must make the same keep/skip/quarantine decision for every defective
+//! row — and the kept rows must come out bit-identical to a run over
+//! the pre-cleaned input. Also pins the budget abort, the typed
+//! `on_error=fail` error, the quarantine side file's replayability and
+//! the merged containment counters of a two-worker cluster.
+
+use piper::accel::{InputFormat, Mode};
+use piper::coordinator::Backend;
+use piper::cpu_baseline::ConfigKind;
+use piper::data::row::ProcessedColumns;
+use piper::data::{binary, utf8, Schema, SynthConfig, SynthDataset};
+use piper::decode::{DataError, ErrorBudget, ErrorPolicy, RowErrorKind};
+use piper::net::protocol::Job;
+use piper::net::run_cluster_loopback;
+use piper::net::stream::WireFormat;
+use piper::ops::{Modulus, PipelineSpec};
+use piper::pipeline::{
+    ExecStrategy, MemorySource, Pipeline, PipelineBuilder, QuarantineFile, QuarantineSource,
+    RunReport,
+};
+
+const ROWS: usize = 400;
+const VOCAB: u32 = 997;
+/// Dirty-stream row indices of the four injected defects, in order:
+/// illegal byte, wrong field count, numeric overflow, oversized field.
+const BAD_ROWS: [u64; 4] = [3, 10, 57, 200];
+const BAD_KINDS: [RowErrorKind; 4] = [
+    RowErrorKind::IllegalByte,
+    RowErrorKind::WrongFieldCount,
+    RowErrorKind::NumericOverflow,
+    RowErrorKind::OversizedField,
+];
+
+fn dataset() -> SynthDataset {
+    SynthDataset::generate(SynthConfig::small(ROWS))
+}
+
+/// The clean encoding, the dirty encoding (four malformed rows injected
+/// at [`BAD_ROWS`]), the injected lines and their stream-absolute
+/// offsets in the dirty stream. Every defect sits at its row's first
+/// byte, so expected error offsets == expected row starts.
+struct DirtyUtf8 {
+    clean: Vec<u8>,
+    dirty: Vec<u8>,
+    bad_lines: Vec<Vec<u8>>,
+    bad_offsets: Vec<u64>,
+}
+
+fn dirty_utf8(ds: &SynthDataset) -> DirtyUtf8 {
+    let clean = utf8::encode_dataset(ds);
+    let mut lines: Vec<Vec<u8>> = clean
+        .split_inclusive(|&b| b == b'\n')
+        .map(|l| l.to_vec())
+        .collect();
+    assert_eq!(lines.len(), ROWS);
+
+    let template = |i: usize| lines[i].clone();
+    // Illegal byte: corrupt the first label digit.
+    let mut bad_illegal = template(0);
+    bad_illegal[0] = b'Z';
+    // Wrong field count: drop the last field (truncate at the last tab).
+    let src = template(1);
+    let last_tab = src.iter().rposition(|&b| b == b'\t').unwrap();
+    let mut bad_short = src[..last_tab].to_vec();
+    bad_short.push(b'\n');
+    // Numeric overflow: a label past u32::MAX.
+    let src = template(2);
+    let first_tab = src.iter().position(|&b| b == b'\t').unwrap();
+    let mut bad_overflow = b"99999999999".to_vec();
+    bad_overflow.extend_from_slice(&src[first_tab..]);
+    // Oversized field: a 70-digit label (oversized outranks overflow).
+    let src = template(3);
+    let first_tab = src.iter().position(|&b| b == b'\t').unwrap();
+    let mut bad_oversized = vec![b'9'; 70];
+    bad_oversized.extend_from_slice(&src[first_tab..]);
+
+    let bad_lines =
+        vec![bad_illegal, bad_short, bad_overflow, bad_oversized];
+    for (i, line) in bad_lines.iter().enumerate() {
+        // Ascending insert positions never shift earlier inserts.
+        lines.insert(BAD_ROWS[i] as usize, line.clone());
+    }
+
+    let mut dirty = Vec::new();
+    let mut starts = Vec::new();
+    for line in &lines {
+        starts.push(dirty.len() as u64);
+        dirty.extend_from_slice(line);
+    }
+    let bad_offsets = BAD_ROWS.iter().map(|&r| starts[r as usize]).collect();
+    DirtyUtf8 { clean, dirty, bad_lines, bad_offsets }
+}
+
+fn build(
+    backend: &Backend,
+    input: InputFormat,
+    strategy: ExecStrategy,
+    threads: usize,
+    policy: Option<ErrorPolicy>,
+) -> Pipeline {
+    let mut b = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .schema(Schema::CRITEO)
+        .input(input)
+        .chunk_rows(64)
+        .strategy(strategy)
+        .decode_threads(threads)
+        .executor(backend.executor());
+    if let Some(p) = policy {
+        b = b.on_error(p);
+    }
+    b.build().expect("planning must succeed")
+}
+
+fn run(pipeline: &Pipeline, raw: &[u8], input: InputFormat) -> (ProcessedColumns, RunReport) {
+    let mut src = MemorySource::new(raw, input);
+    pipeline.run_collect(&mut src).expect("run must succeed")
+}
+
+fn assert_contained(report: &RunReport, ctx: &str) {
+    assert_eq!(report.rows, ROWS, "{ctx}: kept rows");
+    assert_eq!(report.row_errors.total, 4, "{ctx}: defect total");
+    let got: Vec<(u64, RowErrorKind, u64)> =
+        report.row_errors.recorded.iter().map(|e| (e.offset, e.kind, e.row)).collect();
+    let want: Vec<(u64, RowErrorKind, u64)> = (0..4)
+        .map(|i| (dirty_fixture().bad_offsets[i], BAD_KINDS[i], BAD_ROWS[i]))
+        .collect();
+    assert_eq!(got, want, "{ctx}: defect details");
+    for kind in BAD_KINDS {
+        assert_eq!(
+            report.row_errors.by_kind[kind.as_u8() as usize],
+            1,
+            "{ctx}: one {kind} defect"
+        );
+    }
+}
+
+/// The fixture is deterministic (seeded synth), so building it per call
+/// keeps the helpers free of lifetimes without changing the data.
+fn dirty_fixture() -> DirtyUtf8 {
+    dirty_utf8(&dataset())
+}
+
+fn utf8_backends() -> Vec<Backend> {
+    vec![
+        Backend::Cpu { kind: ConfigKind::I, threads: 2 },
+        Backend::Gpu,
+        Backend::Piper { mode: Mode::Network },
+    ]
+}
+
+#[test]
+fn skip_matches_precleaned_input_across_the_matrix() {
+    let fx = dirty_fixture();
+    for backend in utf8_backends() {
+        for strategy in [ExecStrategy::Fused, ExecStrategy::TwoPass] {
+            for threads in [1usize, 4] {
+                let ctx = format!("{}/{:?}/t{threads}", backend.name(), strategy);
+                let clean_pipe =
+                    build(&backend, InputFormat::Utf8, strategy, threads, None);
+                let (reference, clean_report) =
+                    run(&clean_pipe, &fx.clean, InputFormat::Utf8);
+                assert_eq!(clean_report.rows, ROWS, "{ctx}: clean rows");
+                assert_eq!(clean_report.row_errors.total, 0, "{ctx}: clean defects");
+
+                let skip_pipe = build(
+                    &backend,
+                    InputFormat::Utf8,
+                    strategy,
+                    threads,
+                    Some(ErrorPolicy::Skip),
+                );
+                let (cols, report) = run(&skip_pipe, &fx.dirty, InputFormat::Utf8);
+                assert_eq!(cols, reference, "{ctx}: dirty+skip == clean output");
+                assert_contained(&report, &ctx);
+                assert_eq!(report.rows_skipped, 4, "{ctx}: skipped");
+                assert_eq!(report.rows_quarantined, 0, "{ctx}: quarantined");
+            }
+        }
+    }
+}
+
+#[test]
+fn binary_truncated_tail_is_skippable_across_backends() {
+    let ds = dataset();
+    let clean = binary::encode_dataset(&ds);
+    let mut dirty = clean.clone();
+    dirty.extend_from_slice(&[0xAB, 0xCD, 0xEF]); // 3 stray tail bytes
+
+    for backend in [
+        Backend::Cpu { kind: ConfigKind::III, threads: 2 },
+        Backend::Gpu,
+        Backend::Piper { mode: Mode::Network },
+    ] {
+        for strategy in [ExecStrategy::Fused, ExecStrategy::TwoPass] {
+            let ctx = format!("{}/{:?}", backend.name(), strategy);
+            let clean_pipe = build(&backend, InputFormat::Binary, strategy, 1, None);
+            let (reference, _) = run(&clean_pipe, &clean, InputFormat::Binary);
+
+            // The legacy zero policy keeps rejecting the whole stream.
+            let zero_pipe = build(&backend, InputFormat::Binary, strategy, 1, None);
+            let mut src = MemorySource::new(&dirty, InputFormat::Binary);
+            let err = zero_pipe.run_collect(&mut src).expect_err("zero must reject");
+            assert!(
+                format!("{err:#}").contains("stray bytes"),
+                "{ctx}: legacy message must survive: {err:#}"
+            );
+
+            let skip_pipe = build(
+                &backend,
+                InputFormat::Binary,
+                strategy,
+                1,
+                Some(ErrorPolicy::Skip),
+            );
+            let (cols, report) = run(&skip_pipe, &dirty, InputFormat::Binary);
+            assert_eq!(cols, reference, "{ctx}: kept rows bit-identical");
+            assert_eq!(report.rows, ROWS, "{ctx}: rows");
+            assert_eq!(report.rows_skipped, 1, "{ctx}: the truncated tail row");
+            let first = report.row_errors.first().expect("one defect");
+            assert_eq!(first.kind, RowErrorKind::WrongFieldCount, "{ctx}");
+            assert_eq!(first.offset, clean.len() as u64, "{ctx}: tail offset");
+        }
+    }
+}
+
+#[test]
+fn quarantine_writes_a_replayable_side_file() {
+    let fx = dirty_fixture();
+    let qpath = std::env::temp_dir()
+        .join(format!("piper-dirty-qrn-{}.bin", std::process::id()));
+
+    let pipeline = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .schema(Schema::CRITEO)
+        .input(InputFormat::Utf8)
+        .chunk_rows(64)
+        .strategy(ExecStrategy::Fused)
+        .executor(Backend::Piper { mode: Mode::Network }.executor())
+        .quarantine(&qpath) // implies on_error=quarantine
+        .build()
+        .unwrap();
+    let (cols, report) = run(&pipeline, &fx.dirty, InputFormat::Utf8);
+
+    let clean_pipe = build(
+        &Backend::Piper { mode: Mode::Network },
+        InputFormat::Utf8,
+        ExecStrategy::Fused,
+        piper::decode::shard::default_threads(),
+        None,
+    );
+    let (reference, _) = run(&clean_pipe, &fx.clean, InputFormat::Utf8);
+    assert_eq!(cols, reference, "dirty+quarantine == clean output");
+    assert_eq!(report.rows_quarantined, 4);
+    assert_eq!(report.rows_skipped, 0);
+    assert_eq!(report.quarantine.rows, 4);
+    assert_eq!(report.quarantine.path.as_deref(), Some(qpath.as_path()));
+
+    // The side file holds the rows verbatim with exact provenance.
+    let file = QuarantineFile::load(&qpath).unwrap();
+    assert_eq!(file.format, InputFormat::Utf8);
+    let got: Vec<(u64, u64, RowErrorKind, &[u8])> =
+        file.rows.iter().map(|r| (r.row, r.offset, r.kind, r.bytes.as_slice())).collect();
+    let want: Vec<(u64, u64, RowErrorKind, &[u8])> = (0..4)
+        .map(|i| (BAD_ROWS[i], fx.bad_offsets[i], BAD_KINDS[i], fx.bad_lines[i].as_slice()))
+        .collect();
+    assert_eq!(got, want, "quarantine records");
+
+    // Replay: the same defects are re-detected from the side file.
+    let mut src = QuarantineSource::open(&qpath).unwrap();
+    let replay_pipe = build(
+        &Backend::Cpu { kind: ConfigKind::I, threads: 2 },
+        InputFormat::Utf8,
+        ExecStrategy::Fused,
+        1,
+        Some(ErrorPolicy::Skip),
+    );
+    let (_, replay) = replay_pipe.run_collect(&mut src).unwrap();
+    assert_eq!(replay.rows, 0, "every quarantined row is still defective");
+    assert_eq!(replay.rows_skipped, 4);
+    let kinds: Vec<RowErrorKind> =
+        replay.row_errors.recorded.iter().map(|e| e.kind).collect();
+    assert_eq!(kinds, BAD_KINDS.to_vec(), "defect kinds survive the round trip");
+
+    let _ = std::fs::remove_file(&qpath);
+}
+
+#[test]
+fn fail_aborts_with_a_typed_error_naming_the_first_offset() {
+    let fx = dirty_fixture();
+    for strategy in [ExecStrategy::Fused, ExecStrategy::TwoPass] {
+        let pipeline = build(
+            &Backend::Cpu { kind: ConfigKind::I, threads: 2 },
+            InputFormat::Utf8,
+            strategy,
+            2,
+            Some(ErrorPolicy::Fail),
+        );
+        let mut src = MemorySource::new(&fx.dirty, InputFormat::Utf8);
+        let err = pipeline.run_collect(&mut src).expect_err("fail must abort");
+        match DataError::of(&err) {
+            Some(DataError::Row(e)) => {
+                assert_eq!(e.kind, RowErrorKind::IllegalByte, "{strategy:?}");
+                assert_eq!(e.offset, fx.bad_offsets[0], "{strategy:?}: first offset");
+                assert_eq!(e.row, BAD_ROWS[0], "{strategy:?}: first row");
+            }
+            other => panic!("{strategy:?}: expected DataError::Row, got {other:?} / {err:#}"),
+        }
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(&fx.bad_offsets[0].to_string()),
+            "{strategy:?}: message must name the offending offset: {msg}"
+        );
+    }
+}
+
+#[test]
+fn error_budgets_abort_with_a_typed_error() {
+    let fx = dirty_fixture();
+    // Absolute count: 4 defects against a budget of 3.
+    let pipeline = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .schema(Schema::CRITEO)
+        .input(InputFormat::Utf8)
+        .chunk_rows(64)
+        .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
+        .on_error(ErrorPolicy::Skip)
+        .error_budget(ErrorBudget::Count(3))
+        .build()
+        .unwrap();
+    let mut src = MemorySource::new(&fx.dirty, InputFormat::Utf8);
+    let err = pipeline.run_collect(&mut src).expect_err("budget must abort");
+    match DataError::of(&err) {
+        Some(DataError::BudgetExceeded { errors, budget, first, .. }) => {
+            assert_eq!(*errors, 4);
+            assert_eq!(*budget, ErrorBudget::Count(3));
+            assert_eq!(first.expect("detail survives").offset, fx.bad_offsets[0]);
+        }
+        other => panic!("expected BudgetExceeded, got {other:?} / {err:#}"),
+    }
+
+    // Rate budget: ~1% defective against a 0.5% allowance.
+    let pipeline = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .schema(Schema::CRITEO)
+        .input(InputFormat::Utf8)
+        .chunk_rows(64)
+        .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
+        .on_error(ErrorPolicy::Skip)
+        .error_budget(ErrorBudget::Rate(0.005))
+        .build()
+        .unwrap();
+    let mut src = MemorySource::new(&fx.dirty, InputFormat::Utf8);
+    let err = pipeline.run_collect(&mut src).expect_err("rate budget must abort");
+    assert!(
+        matches!(DataError::of(&err), Some(DataError::BudgetExceeded { .. })),
+        "typed rate abort: {err:#}"
+    );
+
+    // A generous budget lets the same run complete.
+    let pipeline = PipelineBuilder::new()
+        .spec(PipelineSpec::dlrm(VOCAB))
+        .schema(Schema::CRITEO)
+        .input(InputFormat::Utf8)
+        .chunk_rows(64)
+        .executor(Backend::Cpu { kind: ConfigKind::I, threads: 2 }.executor())
+        .on_error(ErrorPolicy::Skip)
+        .error_budget(ErrorBudget::Count(4))
+        .build()
+        .unwrap();
+    let mut src = MemorySource::new(&fx.dirty, InputFormat::Utf8);
+    let (_, report) = pipeline.run_collect(&mut src).unwrap();
+    assert_eq!(report.rows_skipped, 4);
+}
+
+#[test]
+fn two_worker_cluster_merges_exact_containment_counters() {
+    let fx = dirty_fixture();
+    let spec = PipelineSpec::dlrm(VOCAB);
+
+    let clean_job = Job {
+        schema: Schema::CRITEO,
+        spec: spec.clone(),
+        format: WireFormat::Utf8,
+        errors: Default::default(),
+    };
+    let reference = run_cluster_loopback(2, &clean_job, &fx.clean, 619).unwrap();
+    assert_eq!(reference.stats.rows, ROWS as u64);
+    assert_eq!(reference.stats.rows_skipped + reference.stats.rows_quarantined, 0);
+
+    let mut skip_job = clean_job.clone();
+    skip_job.errors.policy = ErrorPolicy::Skip;
+    let run = run_cluster_loopback(2, &skip_job, &fx.dirty, 619).unwrap();
+    assert_eq!(run.processed, reference.processed, "dirty+skip == clean output");
+    assert_eq!(run.stats.rows, ROWS as u64);
+    assert_eq!(run.stats.rows_skipped, 4, "merged across workers");
+    assert_eq!(run.stats.rows_quarantined, 0);
+    assert!(run.stats.illegal_bytes >= 1, "the corrupted label byte");
+
+    // Quarantine over the wire contains like skip but attributes the
+    // counter to the requested policy (raw bytes stay worker-local).
+    let mut q_job = clean_job.clone();
+    q_job.errors.policy = ErrorPolicy::Quarantine;
+    let run = run_cluster_loopback(2, &q_job, &fx.dirty, 619).unwrap();
+    assert_eq!(run.processed, reference.processed);
+    assert_eq!(run.stats.rows_quarantined, 4);
+    assert_eq!(run.stats.rows_skipped, 0);
+
+    // A per-job budget aborts the whole cluster run with a job failure.
+    let mut tight_job = skip_job.clone();
+    tight_job.errors.budget = ErrorBudget::Count(1);
+    assert!(run_cluster_loopback(2, &tight_job, &fx.dirty, 619).is_err());
+}

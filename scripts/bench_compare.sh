@@ -3,6 +3,7 @@
 #   BENCH_pr4.json — decode-threads sweep (row-sharded SWAR decode)
 #   BENCH_pr5.json — uniform vs heterogeneous per-column programs
 #   BENCH_pr8.json — stage-pipeline overlap grid (pipelined fused)
+#   BENCH_pr9.json — error-containment policy overhead on clean input
 #
 # Runs the pipeline_engine bench fresh, then compares *machine-portable
 # ratios* against the committed baselines — decode thread-scaling
@@ -12,9 +13,18 @@
 # would just measure the CI runner. A ratio drop larger than THRESHOLD
 # (default 25%) fails the script.
 #
+# The PR 9 gate is different in kind: it is an absolute bound on the
+# *current* run, not a drop-vs-baseline check. On clean input the
+# skip/fail policies must stay within OVERHEAD_PCT (default 2%) of the
+# legacy zero policy's throughput, and quarantine within
+# QUARANTINE_OVERHEAD_PCT (default 10%) — the containment machinery is
+# only allowed to cost something when a row is actually contained.
+#
 # Usage: scripts/bench_compare.sh [--bless]
 #   --bless     overwrite the baselines with this machine's fresh run
 #   THRESHOLD   max tolerated ratio drop in percent (default 25)
+#   OVERHEAD_PCT / QUARANTINE_OVERHEAD_PCT  clean-input policy overhead
+#               bounds in percent (default 2 / 10)
 #   PIPER_BENCH_ROWS / PIPER_BENCH_REPS   forwarded to the bench
 #
 # Exit codes: 0 = within threshold (or blessed), 1 = perf regression,
@@ -26,33 +36,39 @@ ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 ROWS="${PIPER_BENCH_ROWS:-200000}"
 REPS="${PIPER_BENCH_REPS:-5}"
 THRESHOLD="${THRESHOLD:-25}"
+OVERHEAD_PCT="${OVERHEAD_PCT:-2}"
+QUARANTINE_OVERHEAD_PCT="${QUARANTINE_OVERHEAD_PCT:-10}"
 BASE4="$ROOT/BENCH_pr4.json"
 BASE5="$ROOT/BENCH_pr5.json"
 BASE8="$ROOT/BENCH_pr8.json"
+BASE9="$ROOT/BENCH_pr9.json"
 
 TMP="$(mktemp -d)"
 trap 'rm -rf "$TMP"' EXIT
 CUR4="$TMP/pr4.json"
 CUR5="$TMP/pr5.json"
 CUR8="$TMP/pr8.json"
+CUR9="$TMP/pr9.json"
 
 echo "bench_compare: running pipeline_engine ($ROWS rows, $REPS reps)"
 cd "$ROOT/rust"
 PIPER_BENCH_ROWS="$ROWS" PIPER_BENCH_REPS="$REPS" \
     BENCH_JSON="$CUR4" BENCH_PR5_JSON="$CUR5" BENCH_PR8_JSON="$CUR8" \
+    BENCH_PR9_JSON="$CUR9" \
     cargo bench --bench pipeline_engine >/dev/null
 
 if [ "${1:-}" = "--bless" ]; then
     cp "$CUR4" "$BASE4"
     cp "$CUR5" "$BASE5"
     cp "$CUR8" "$BASE8"
-    echo "bench_compare: baselines blessed -> $BASE4, $BASE5, $BASE8"
+    cp "$CUR9" "$BASE9"
+    echo "bench_compare: baselines blessed -> $BASE4, $BASE5, $BASE8, $BASE9"
     exit 0
 fi
 
 # A missing baseline is a setup error, never a silent pass (or a silent
 # bless of whatever this machine happens to produce).
-for base in "$BASE4" "$BASE5" "$BASE8"; do
+for base in "$BASE4" "$BASE5" "$BASE8" "$BASE9"; do
     if [ ! -f "$base" ]; then
         echo "bench_compare: ERROR: baseline $base is missing." >&2
         echo "  Run 'scripts/bench_compare.sh --bless' on a reference machine" >&2
@@ -61,12 +77,13 @@ for base in "$BASE4" "$BASE5" "$BASE8"; do
     fi
 done
 
-python3 - "$BASE4" "$CUR4" "$BASE5" "$CUR5" "$BASE8" "$CUR8" "$THRESHOLD" <<'EOF'
+python3 - "$BASE4" "$CUR4" "$BASE5" "$CUR5" "$BASE8" "$CUR8" "$BASE9" "$CUR9" \
+    "$THRESHOLD" "$OVERHEAD_PCT" "$QUARANTINE_OVERHEAD_PCT" <<'EOF'
 import json
 import sys
 
 docs = []
-for path in sys.argv[1:7]:
+for path in sys.argv[1:9]:
     try:
         with open(path) as f:
             docs.append(json.load(f))
@@ -76,8 +93,10 @@ for path in sys.argv[1:7]:
         print("  Re-bless the baselines with 'scripts/bench_compare.sh --bless' "
               "and commit them.", file=sys.stderr)
         sys.exit(2)
-base4, cur4, base5, cur5, base8, cur8 = docs
-threshold = float(sys.argv[7])
+base4, cur4, base5, cur5, base8, cur8, base9, cur9 = docs
+threshold = float(sys.argv[9])
+overhead_pct = float(sys.argv[10])
+quarantine_overhead_pct = float(sys.argv[11])
 failures = []
 
 
@@ -99,6 +118,21 @@ def program_rps(doc):
     return {p["program"]: p["rows_per_s"] for p in doc["programs"]}
 
 
+def policy_rps(doc):
+    return {p["policy"]: p["rows_per_s"] for p in doc["policies"]}
+
+
+def overhead_check(name, rps, bound_pct):
+    """Absolute bound on the current run: `name`'s clean-input overhead
+    vs the zero policy must stay under bound_pct percent."""
+    overhead = (1.0 - rps[name] / rps["zero"]) * 100.0
+    status = "FAIL" if overhead > bound_pct else "  ok"
+    print(f"{status}  {name} vs zero on clean input: "
+          f"overhead {overhead:+.1f}% (bound {bound_pct:.0f}%)")
+    if overhead > bound_pct:
+        failures.append(f"{name} clean-input overhead")
+
+
 def overlap_ratios(doc):
     """(pipelined-vs-depth1 speedup, pipelined-vs-two-pass speedup,
     overlap efficiency) at the widest decode frontend in the grid."""
@@ -118,6 +152,13 @@ try:
     print("per-column programs (PR 5):")
     b, c = program_rps(base5), program_rps(cur5)
     b8, c8 = overlap_ratios(base8), overlap_ratios(cur8)
+    p9 = policy_rps(cur9)
+    # Baseline participates only as a shape check; the PR 9 gate below is
+    # an absolute bound on the current run, not a drop-vs-baseline.
+    policy_rps(base9)
+    for want in ("zero", "fail", "skip", "quarantine"):
+        if want not in p9:
+            raise KeyError(f"policy {want!r} missing from the pr9 run")
 except (KeyError, TypeError, StopIteration, ValueError) as e:
     print(f"bench_compare: ERROR: baseline/current JSON has an unexpected shape ({e!r}).",
           file=sys.stderr)
@@ -134,9 +175,14 @@ print("stage-pipeline overlap (PR 8):")
 ratio_check("pipelined vs depth-1 fused", b8[0], c8[0])
 ratio_check("pipelined vs two-pass", b8[1], c8[1])
 ratio_check("overlap efficiency vs ideal stage wall", b8[2], c8[2])
+print("containment policy overhead on clean input (PR 9):")
+overhead_check("fail", p9, overhead_pct)
+overhead_check("skip", p9, overhead_pct)
+overhead_check("quarantine", p9, quarantine_overhead_pct)
 
 if failures:
-    print(f"bench_compare: regression beyond {threshold}%: " + ", ".join(failures))
+    print("bench_compare: gate failures: " + ", ".join(failures))
     sys.exit(1)
-print(f"bench_compare: all ratios within {threshold}% of baseline")
+print(f"bench_compare: all ratios within {threshold}% of baseline "
+      f"and clean-input policy overhead within bounds")
 EOF
