@@ -23,8 +23,10 @@ use piper::data::row::ProcessedColumns;
 use piper::data::utf8;
 use piper::decode::ErrorPolicy;
 use piper::ops::{Modulus, PipelineSpec};
+use piper::net::stream::WireFormat;
 use piper::pipeline::{CountSink, ExecStrategy, MemorySource, PipelineBuilder, SynthSource};
 use piper::report::{fmt_duration, fmt_rows_per_sec, fmt_speedup, Table};
+use piper::service::{run_service_loopback, ServiceConfig};
 
 /// Order-sensitive checksum of the full output — the equivalence gate
 /// for the strategy comparison.
@@ -646,4 +648,79 @@ fn main() {
         fmt_rows_per_sec(report.rows as f64 / d.as_secs_f64()),
         4,
     );
+    println!();
+
+    // ---- disaggregated service scale-out sweep (loopback) --------------
+    // Real TCP loopback workers, one decode thread each, so the sweep
+    // measures scale-out across workers rather than intra-worker
+    // threading. Every cluster size is checksum-gated against the
+    // single-worker output before any time is reported.
+    // BENCH_PR10_JSON=path writes the rows machine-readably;
+    // scripts/bench_compare.sh guards the 4-worker speedup ratio.
+    let job = piper::net::protocol::Job::dlrm(ds.schema(), m, WireFormat::Utf8);
+    let svc_cfg = ServiceConfig { decode_threads: 1, ..ServiceConfig::default() };
+    let mut t = Table::new(
+        &format!(
+            "service scale-out — loopback workers ({rows} rows, median of {reps}) [meas wallclock]"
+        ),
+        &["workers", "wallclock", "rows/s", "vs 1 worker"],
+    );
+    let mut pr10_rows: Vec<(usize, f64, f64)> = Vec::new();
+    let mut pr10_sum: Option<u64> = None;
+    let mut one_worker: Option<Duration> = None;
+    for n in [1usize, 2, 4] {
+        // Correctness gate: every size produces the sequential answer.
+        let run = run_service_loopback(n, &job, &raw, &svc_cfg).expect("service run");
+        assert_eq!(run.stats.rows, rows as u64, "{n} workers: every row accounted for");
+        assert_eq!((run.retries, run.faults), (0, 0), "{n} workers: clean loopback run");
+        let sum = checksum(&run.processed);
+        match pr10_sum {
+            None => pr10_sum = Some(sum),
+            Some(w) => assert_eq!(sum, w, "{n} workers changed the output"),
+        }
+        let wall = median(
+            (0..reps)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    let r = run_service_loopback(n, &job, &raw, &svc_cfg).expect("service run");
+                    let d = t0.elapsed();
+                    assert_eq!(r.stats.rows, rows as u64);
+                    d
+                })
+                .collect(),
+        );
+        let base = *one_worker.get_or_insert(wall);
+        t.row(&[
+            format!("{n}"),
+            fmt_duration(wall),
+            fmt_rows_per_sec(rows as f64 / wall.as_secs_f64()),
+            fmt_speedup(base.as_secs_f64() / wall.as_secs_f64().max(1e-12)),
+        ]);
+        pr10_rows.push((n, wall.as_secs_f64(), rows as f64 / wall.as_secs_f64()));
+    }
+    t.note("real TCP loopback; timing includes worker spawn, join and teardown");
+    t.note("vocabularies are shard-owned: no Pass1End -> VocabLoad barrier on the wire");
+    t.print();
+    println!();
+
+    if let Ok(path) = std::env::var("BENCH_PR10_JSON") {
+        let speedup4 = pr10_rows[0].1 / pr10_rows.last().unwrap().1.max(1e-12);
+        let mut json = String::from("{\n  \"bench\": \"pipeline_engine/service_scaleout\",\n");
+        json.push_str(&format!("  \"rows\": {rows},\n  \"reps\": {reps},\n"));
+        json.push_str(&format!(
+            "  \"checksum\": \"{:#018x}\",\n  \"sweep\": [\n",
+            pr10_sum.unwrap()
+        ));
+        for (i, (workers, wall_s, rps)) in pr10_rows.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"workers\": {workers}, \"wall_s\": {wall_s:.6}, \
+                 \"rows_per_s\": {rps:.0}}}{}\n",
+                if i + 1 < pr10_rows.len() { "," } else { "" }
+            ));
+        }
+        json.push_str(&format!("  ],\n  \"speedup4\": {speedup4:.3}\n}}\n"));
+        std::fs::write(&path, json).expect("writing BENCH_PR10_JSON");
+        println!("service scale-out sweep written to {path}");
+        println!();
+    }
 }

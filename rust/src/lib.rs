@@ -33,6 +33,11 @@
 //! * [`net`] — network-attached mode over real TCP (loopback): leader
 //!   streams raw rows, the accelerator node preprocesses in a pipelined
 //!   fashion.
+//! * [`service`] — the disaggregated preprocessing service: a
+//!   dispatcher splits the input over a worker pool and each
+//!   vocabulary column is *owned* by one worker (hash partition), so
+//!   index assignment is local to the owner and the whole cluster runs
+//!   the fused single-pass dataflow with no global merge barrier.
 //! * [`pipeline`] — the composable streaming execution engine: a
 //!   [`pipeline::Source`] of raw chunks (in-memory buffer, file, synth
 //!   generator, TCP stream) feeds a planned operator graph through any
@@ -71,6 +76,7 @@ pub mod pipeline;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod service;
 #[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;

@@ -44,13 +44,18 @@ COMMANDS:
               quarantine=PATH (replayable side file; implies on_error=quarantine)
               error_details=N (defect offsets kept for the summary, default 64)
               replay=PATH (re-ingest a quarantine side file instead of input=)
+              metrics=PATH (write a JSON run manifest: stage timings, rows, containment)
   compare     rows=20000 vocab=5000 format=utf8|binary
   serve       addr=127.0.0.1:7700 jobs=1 (jobs=0: accept connections forever)
   submit      input=PATH addr=127.0.0.1:7700 format=utf8|binary vocab=5000 spec='...'
               strategy=fused|two-pass timeout=30 deadline=0 retries=2 backoff_ms=50
               pipeline_depth=N (leader read-ahead window, default 1)
               on_error=... max_errors=... (containment counters come back per worker)
-              (addr=A,B,... shards the job across a worker cluster, two-pass)
+              metrics=PATH (write a JSON run manifest, incl. per-worker breakdown)
+              window=N (cluster: splits in flight across the pool; 0 = one per worker)
+              splits=N (cluster: scheduling granularity, default one per worker)
+              (addr=A,B,... runs the job on the preprocessing service — splits
+              scheduled over the pool, vocabularies shard-owned, fused single-pass)
   freeze      input=PATH format=utf8|binary out=vocab.artifact vocab=5000 spec='...'
               dense=13 sparse=26 chunk=1048576
   request     artifact=PATH input=PATH addr=127.0.0.1:7700 format=utf8|binary
@@ -80,10 +85,18 @@ send.
 
 timeout= is the per-socket read/write deadline in seconds (0 disables
 it), deadline= a wall-clock budget for the whole job in seconds (0 =
-unbounded), retries= how often a failed shard (submit) or overloaded
+unbounded), retries= how often a failed split (submit) or overloaded
 request (request) is re-dispatched, and backoff_ms= the base of the
-capped exponential backoff between attempts. A cluster submit retries
-failed shards on surviving workers and reports the retry/fault counts.
+capped exponential backoff between attempts. A cluster submit runs the
+disaggregated preprocessing service: the input is cut into splits, each
+vocabulary column is owned by one worker, and every split runs the
+fused single-pass scan — no global merge barrier. Failed splits retry
+on surviving workers and the retry/fault counts are reported.
+
+metrics=PATH writes a machine-readable JSON manifest next to the human
+table: spec/schema hashes, rows in/out, per-stage durations, the
+containment counters, and (cluster submit) a per-worker breakdown of
+splits won and decode/stateless/vocab time.
 
 on_error= decides what happens to a malformed row (illegal bytes, wrong
 field count, numeric overflow, oversized field): zero keeps the row
@@ -368,6 +381,11 @@ fn cmd_preprocess(cfg: &Config) -> Result<()> {
     }
     t.print();
 
+    if let Some(out) = cfg.get("metrics") {
+        write_preprocess_metrics(Path::new(out), &report, &spec_of(cfg)?)?;
+        println!("metrics manifest written to {out}");
+    }
+
     // Optionally freeze the run's vocabularies for online serving. The
     // artifact pass re-streams the file through GenVocab only — same
     // spec, same schema, so the keys match what this run built.
@@ -597,9 +615,10 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
     // chunks overlaps disk reads with the network send.
     netcfg.leader_window = cfg.get_usize("pipeline_depth", 1)?.max(1);
     if addr.contains(',') {
-        // Cluster mode: shard the job across every listed worker. The
-        // global vocabulary merge forces the two-pass protocol, and the
-        // leader shards the raw buffer directly.
+        // Cluster mode: run the job on the disaggregated preprocessing
+        // service — the dispatcher schedules splits over the pool and
+        // every vocabulary column is owned by one worker, so the whole
+        // cluster runs the fused single-pass scan with no merge barrier.
         let addrs: Vec<String> = addr
             .split(',')
             .map(|a| a.trim().to_string())
@@ -607,18 +626,54 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
             .collect();
         let raw = std::fs::read(Path::new(path))
             .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
-        let run = net::run_cluster_cfg(&addrs, &job, &raw, chunk, &netcfg)?;
+        let binary = matches!(format, WireFormat::Binary);
+        let nsplits = cfg.get_usize("splits", addrs.len())?.max(1);
+        let splits = net::cluster::shard_rows(&raw, job.schema, binary, nsplits);
+        let scfg = piper::service::ServiceConfig {
+            net: netcfg,
+            window: cfg.get_usize("window", 0)?,
+            decode_threads: 0,
+            chunk_bytes: chunk.max(1),
+        };
+        let run = piper::service::run_service_cfg(&addrs, &job, &raw, &splits, &scfg)?;
         println!(
             "preprocessed {} rows ({} vocab entries) across {} workers in {} \
-             (two-pass cluster; {} shard retries, {} faults observed)",
+             (service, fused single-pass; {} split retries, {} faults, \
+             max {} split(s) in flight)",
             run.stats.rows,
             run.stats.vocab_entries,
             run.workers,
             fmt_duration(run.wallclock),
             run.retries,
             run.faults,
+            run.max_inflight,
         );
+        for w in &run.per_worker {
+            println!(
+                "  worker {}: {} split(s) won, {} rows — decode {} / \
+                 stateless {} / vocab {}",
+                w.addr,
+                w.splits,
+                w.stats.rows,
+                fmt_duration(std::time::Duration::from_nanos(w.stats.decode_ns)),
+                fmt_duration(std::time::Duration::from_nanos(w.stats.stateless_ns)),
+                fmt_duration(std::time::Duration::from_nanos(w.stats.vocab_ns)),
+            );
+        }
         print_submit_containment(&run.stats);
+        if let Some(out) = cfg.get("metrics") {
+            write_submit_metrics(
+                Path::new(out),
+                &job.spec,
+                &run.stats,
+                run.workers,
+                run.wallclock,
+                run.retries,
+                run.faults,
+                &run.per_worker,
+            )?;
+            println!("metrics manifest written to {out}");
+        }
         return Ok(());
     }
     // Stream the file to the worker chunk by chunk — the leader never
@@ -633,7 +688,158 @@ fn cmd_submit(cfg: &Config) -> Result<()> {
         strategy.name(),
     );
     print_submit_containment(&run.stats);
+    if let Some(out) = cfg.get("metrics") {
+        write_submit_metrics(Path::new(out), &job.spec, &run.stats, 1, run.wallclock, 0, 0, &[])?;
+        println!("metrics manifest written to {out}");
+    }
     Ok(())
+}
+
+/// Escape a string for the hand-rolled JSON manifests (the tree
+/// carries no serde; same idiom as the bench JSON emitters).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_containment(
+    indent: &str,
+    illegal_bytes: u64,
+    row_errors: u64,
+    rows_skipped: u64,
+    rows_quarantined: u64,
+) -> String {
+    format!(
+        "{indent}\"containment\": {{\"illegal_bytes\": {illegal_bytes}, \
+         \"row_errors\": {row_errors}, \"rows_skipped\": {rows_skipped}, \
+         \"rows_quarantined\": {rows_quarantined}}}"
+    )
+}
+
+/// `metrics=PATH` for `preprocess`: one JSON object per run — spec and
+/// schema hashes, rows in/out, per-stage durations (seconds), and the
+/// containment counters.
+fn write_preprocess_metrics(
+    path: &Path,
+    report: &piper::pipeline::RunReport,
+    spec: &PipelineSpec,
+) -> Result<()> {
+    let rows_in = report.rows as u64 + report.rows_skipped + report.rows_quarantined;
+    let mut j = String::from("{\n  \"command\": \"preprocess\",\n");
+    j.push_str(&format!("  \"executor\": {},\n", json_str(&report.executor)));
+    j.push_str(&format!("  \"strategy\": {},\n", json_str(report.strategy.name())));
+    j.push_str(&format!(
+        "  \"spec_hash\": \"{:#018x}\",\n  \"schema_hash\": \"{:#018x}\",\n",
+        piper::ops::artifact::spec_hash(spec),
+        piper::ops::artifact::schema_hash(Schema::CRITEO),
+    ));
+    j.push_str(&format!(
+        "  \"rows_in\": {rows_in},\n  \"rows_out\": {},\n  \"chunks\": {},\n",
+        report.rows, report.chunks,
+    ));
+    j.push_str(&format!(
+        "  \"decode_passes\": {},\n  \"vocab_entries\": {},\n",
+        report.decode_passes, report.vocab_entries,
+    ));
+    j.push_str(&format!(
+        "  \"decode_threads\": {},\n  \"pipeline_depth\": {},\n",
+        report.decode_threads, report.pipeline_depth,
+    ));
+    j.push_str(&format!("  \"time_tag\": {},\n", json_str(report.tag.suffix())));
+    j.push_str(&format!(
+        "  \"stages_s\": {{\"e2e\": {:.6}, \"wall\": {:.6}, \"decode\": {:.6}, \
+         \"stateless\": {:.6}, \"vocab\": {:.6}, \"process\": {:.6}, \
+         \"vocab_wait\": {:.6}}},\n",
+        report.e2e.as_secs_f64(),
+        report.wall.as_secs_f64(),
+        report.decode_time.as_secs_f64(),
+        report.stage_stateless_time.as_secs_f64(),
+        report.observe_time.as_secs_f64(),
+        report.process_time.as_secs_f64(),
+        report.vocab_wait_time.as_secs_f64(),
+    ));
+    j.push_str(&json_containment(
+        "  ",
+        report.illegal_bytes,
+        report.row_errors.total,
+        report.rows_skipped,
+        report.rows_quarantined,
+    ));
+    j.push_str("\n}\n");
+    std::fs::write(path, j).map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+/// `metrics=PATH` for `submit`: the merged wire-side [`net::RunStats`]
+/// plus — on the service path — the per-worker splits/stage breakdown.
+#[allow(clippy::too_many_arguments)]
+fn write_submit_metrics(
+    path: &Path,
+    spec: &PipelineSpec,
+    stats: &net::RunStats,
+    workers: usize,
+    wallclock: std::time::Duration,
+    retries: u64,
+    faults: u64,
+    per_worker: &[piper::service::WorkerStats],
+) -> Result<()> {
+    let rows_in = stats.rows + stats.rows_skipped + stats.rows_quarantined;
+    let mut j = String::from("{\n  \"command\": \"submit\",\n");
+    j.push_str(&format!(
+        "  \"spec_hash\": \"{:#018x}\",\n  \"schema_hash\": \"{:#018x}\",\n",
+        piper::ops::artifact::spec_hash(spec),
+        piper::ops::artifact::schema_hash(Schema::CRITEO),
+    ));
+    j.push_str(&format!(
+        "  \"workers\": {workers},\n  \"wall_s\": {:.6},\n  \"retries\": {retries},\n  \
+         \"faults\": {faults},\n",
+        wallclock.as_secs_f64(),
+    ));
+    j.push_str(&format!(
+        "  \"rows_in\": {rows_in},\n  \"rows_out\": {},\n  \"vocab_entries\": {},\n",
+        stats.rows, stats.vocab_entries,
+    ));
+    j.push_str(&format!(
+        "  \"stages_s\": {{\"decode\": {:.6}, \"stateless\": {:.6}, \"vocab\": {:.6}}},\n",
+        stats.decode_ns as f64 / 1e9,
+        stats.stateless_ns as f64 / 1e9,
+        stats.vocab_ns as f64 / 1e9,
+    ));
+    j.push_str(&json_containment(
+        "  ",
+        stats.illegal_bytes,
+        0,
+        stats.rows_skipped,
+        stats.rows_quarantined,
+    ));
+    j.push_str(",\n  \"per_worker\": [\n");
+    for (i, w) in per_worker.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"addr\": {}, \"splits\": {}, \"rows\": {}, \"decode_s\": {:.6}, \
+             \"stateless_s\": {:.6}, \"vocab_s\": {:.6}}}{}\n",
+            json_str(&w.addr),
+            w.splits,
+            w.stats.rows,
+            w.stats.decode_ns as f64 / 1e9,
+            w.stats.stateless_ns as f64 / 1e9,
+            w.stats.vocab_ns as f64 / 1e9,
+            if i + 1 < per_worker.len() { "," } else { "" },
+        ));
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write(path, j).map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
 }
 
 fn print_submit_containment(stats: &net::RunStats) {

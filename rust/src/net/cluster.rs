@@ -3,65 +3,57 @@
 //! flexibility to scale the number of FPGAs ... individually"; §4.4.6 —
 //! "using multiple FPGAs can further improve the overall performance").
 //!
-//! The interesting part is the *stateful* operator: each worker builds
-//! sub-vocabularies over its row shard in pass 1, the leader gathers and
-//! merges them in shard order (deterministically equivalent to a single
-//! sequential scan, the same argument as for CPU threads), broadcasts
-//! the merged vocabularies, and pass 2 runs sharded with the global
-//! state. Exactly one synchronization point — the same merge the CPU
-//! baseline pays per-thread, paid once per worker here.
+//! Since the preprocessing service ([`crate::service`]) landed, this
+//! module is a thin client of it: [`run_cluster`] splits the input on
+//! row boundaries ([`shard_rows`]), hands the splits to the service
+//! dispatcher, and repackages the [`crate::service::ServiceRun`] as the
+//! historical [`ClusterRun`] shape. The old two-pass protocol — every
+//! worker observes its whole shard, the leader gathers and merges
+//! sub-vocabularies, broadcasts them, and only then may pass 2 emit a
+//! row — is gone from this path: vocabulary columns are *owned* by
+//! workers (hash partition) and index assignment happens online as
+//! splits stream, so the whole cluster runs the fused single-pass
+//! dataflow with no global merge barrier. (Workers still speak the
+//! two-pass wire protocol for compatibility; nothing here sends it.)
 //!
-//! # Split-level recovery
-//!
-//! The unit of work *and of retry* is the shard, not the worker. When a
-//! shard's session fails or times out — in either pass — the shard is
-//! re-dispatched to the next worker in rotation with capped exponential
-//! backoff ([`NetConfig::backoff_for`]); a worker whose *connect* is
-//! refused is struck from the rotation (process dead), while a
-//! mid-session failure leaves the worker eligible (often only the
-//! connection died). A pass-2 retry opens a fresh session that skips
-//! pass 1 entirely (`Job → Pass1End → VocabLoad → Pass2…` — legal
-//! because an empty pass 1 is legal) since the merged vocabularies are
-//! already global.
-//!
-//! Determinism under retry: sub-vocabulary dumps are *per shard* and
-//! merged in shard order, and shard outputs are concatenated in shard
-//! order — so which worker served which attempt of which shard is
-//! invisible in the output. The chaos suite pins this bit-identical.
-//! Integrity under faults: every pass-1 dump carries the rows the
-//! worker observed (kept *and* contained — invariant under the error
-//! policy) and every pass-2 `ResultEnd` the rows it emitted plus the
-//! rows it skipped or quarantined; the leader checks both sums against
-//! the shard's true row count, so a dropped frame is a typed,
-//! retryable error — never silent skew, even on dirty input.
+//! Determinism is unchanged: split order defines both the vocabulary
+//! fold order and the output concatenation order, so which worker
+//! served which attempt of which split is invisible in the output —
+//! bit-identical to a single sequential scan, pinned by the chaos and
+//! scale-out suites. Fault tolerance is unchanged in contract (split
+//! re-dispatch with capped backoff, struck workers leave the rotation,
+//! typed [`NetError`]s inside the job deadline) and stronger in
+//! mechanism: a struck worker's columns are re-owned by survivors and
+//! re-seeded from the dispatcher's vocabulary mirror.
 
-use std::io::{BufReader, BufWriter, Write};
-use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::data::row::ProcessedColumns;
 use crate::data::Schema;
+use crate::service::{ServiceConfig, WorkerStats};
 use crate::Result;
 
-use super::protocol::{self, Job, NetError, RunStats, Tag};
-use super::{JobClock, NetConfig};
+use super::protocol::{Job, RunStats};
+use super::NetConfig;
 
 /// Result of a cluster run.
 #[derive(Debug)]
 pub struct ClusterRun {
     pub processed: ProcessedColumns,
-    /// Totals across all shards; the containment counters
+    /// Totals across all splits; the containment counters
     /// (`rows_skipped`, `rows_quarantined`, `illegal_bytes`) are the
-    /// per-worker pass-2 counters summed in shard order.
+    /// per-worker counters summed, and `vocab_entries` comes from the
+    /// dispatcher's authoritative vocabulary mirror.
     pub stats: RunStats,
     pub workers: usize,
     pub wallclock: Duration,
-    /// Shard re-dispatch attempts performed (0 on a clean run).
+    /// Recovery actions performed (0 on a clean run).
     pub retries: u64,
-    /// Failed shard attempts observed (connects refused, sessions
-    /// severed, timeouts, integrity mismatches).
+    /// Failure events observed (connects refused, sessions severed,
+    /// timeouts, integrity mismatches).
     pub faults: u64,
+    /// Per-worker split counts and merged stage-level stats.
+    pub per_worker: Vec<WorkerStats>,
 }
 
 /// Split a raw buffer into at most `n` contiguous, non-overlapping,
@@ -119,9 +111,9 @@ pub fn shard_rows(raw: &[u8], schema: Schema, binary: bool, n: usize) -> Vec<std
     shards
 }
 
-/// Rows a worker must observe (pass 1) and emit (pass 2) for `shard` —
+/// Rows a worker must account for (emitted + contained) over `shard` —
 /// the integrity check that turns a dropped frame into a typed error.
-fn expected_rows(shard: &[u8], schema: Schema, binary: bool) -> u64 {
+pub(crate) fn expected_rows(shard: &[u8], schema: Schema, binary: bool) -> u64 {
     if binary {
         (shard.len() / schema.binary_row_bytes()) as u64
     } else {
@@ -131,333 +123,8 @@ fn expected_rows(shard: &[u8], schema: Schema, binary: bool) -> u64 {
     }
 }
 
-/// One leader↔worker session for one shard attempt.
-struct ShardSession {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
-    addr: String,
-}
-
-/// Everything a shard dispatch thread needs — shared, read-only (the
-/// counters and strike list are atomics).
-struct Dispatch<'a> {
-    addrs: &'a [String],
-    job: &'a Job,
-    raw: &'a [u8],
-    chunk_size: usize,
-    cfg: &'a NetConfig,
-    clock: JobClock,
-    /// Workers whose connect was refused — dead processes, skipped by
-    /// the rotation.
-    struck: &'a [AtomicBool],
-    retries: &'a AtomicU64,
-    faults: &'a AtomicU64,
-}
-
-impl Dispatch<'_> {
-    /// The worker for `shard_idx`'s `attempt`-th try: rotate so a
-    /// retried shard lands on a *different* worker first, skipping
-    /// struck ones. `None` when no worker survives.
-    fn pick_worker(&self, shard_idx: usize, attempt: u32) -> Option<usize> {
-        let n = self.addrs.len();
-        let start = (shard_idx + attempt as usize) % n;
-        (0..n)
-            .map(|k| (start + k) % n)
-            .find(|&w| !self.struck[w].load(Ordering::Acquire))
-    }
-
-    /// Connect to worker `widx`; a refused/unreachable connect strikes
-    /// it from the rotation.
-    fn connect_worker(&self, widx: usize) -> Result<ShardSession> {
-        let addr = &self.addrs[widx];
-        let stream = super::connect(addr, self.cfg.io_timeout, &self.clock).inspect_err(|e| {
-            if matches!(NetError::of(e), Some(NetError::PeerGone { .. })) {
-                self.struck[widx].store(true, Ordering::Release);
-            }
-        })?;
-        Ok(ShardSession {
-            reader: BufReader::with_capacity(1 << 20, stream.try_clone()?),
-            writer: BufWriter::with_capacity(1 << 20, stream),
-            addr: addr.clone(),
-        })
-    }
-
-    /// Back off (capped exponential, clipped to the job budget) before
-    /// retry `attempt`, and count it.
-    fn backoff(&self, attempt: u32) {
-        self.retries.fetch_add(1, Ordering::AcqRel);
-        self.clock.sleep(self.cfg.backoff_for(attempt));
-    }
-
-    /// When a send-side error is just the echo of the worker aborting,
-    /// the worker's `ErrorReply` (already in flight) is the root cause —
-    /// surface that instead.
-    fn prefer_error_reply(&self, sess: &mut ShardSession, err: anyhow::Error) -> anyhow::Error {
-        if matches!(NetError::of(&err), Some(NetError::PeerGone { .. })) {
-            if let Ok((Tag::ErrorReply, payload)) = protocol::read_frame(&mut sess.reader) {
-                return anyhow::Error::new(NetError::JobFailed {
-                    worker: sess.addr.clone(),
-                    reason: String::from_utf8_lossy(&payload).into_owned(),
-                });
-            }
-        }
-        err
-    }
-
-    /// One pass-1 attempt on an established session: job header, the
-    /// shard's chunks, `VocabSync`, then the verified shard dump. On
-    /// success the session is parked between the passes, ready for
-    /// `VocabLoad`.
-    fn pass1_attempt(
-        &self,
-        sess: &mut ShardSession,
-        shard: &std::ops::Range<usize>,
-        expected: u64,
-    ) -> Result<Vec<Vec<u32>>> {
-        let sent = (|| -> Result<()> {
-            protocol::write_frame(&mut sess.writer, Tag::Job, &self.job.encode())?;
-            for chunk in self.raw[shard.clone()].chunks(self.chunk_size.max(1)) {
-                self.clock.check("sending pass 1")?;
-                protocol::write_frame(&mut sess.writer, Tag::Pass1Chunk, chunk)?;
-            }
-            protocol::write_frame(&mut sess.writer, Tag::Pass1End, &[])?;
-            protocol::write_frame(&mut sess.writer, Tag::VocabSync, &[])?;
-            sess.writer.flush()?;
-            Ok(())
-        })();
-        if let Err(e) = sent {
-            return Err(self.prefer_error_reply(sess, e));
-        }
-        self.clock.check("awaiting shard dump")?;
-        let (tag, payload) = protocol::read_frame(&mut sess.reader)?;
-        match tag {
-            Tag::VocabDump => {
-                let (rows, cols) = protocol::unpack_shard_dump(&payload)?;
-                anyhow::ensure!(
-                    rows == expected,
-                    NetError::Malformed {
-                        what: format!(
-                            "worker {} observed {rows} rows of a {expected}-row shard — \
-                             pass-1 frames were lost",
-                            sess.addr
-                        ),
-                    }
-                );
-                anyhow::ensure!(
-                    cols.len() == self.job.schema.num_sparse,
-                    NetError::Malformed {
-                        what: format!(
-                            "shard dump has {} vocab columns, schema wants {}",
-                            cols.len(),
-                            self.job.schema.num_sparse
-                        ),
-                    }
-                );
-                Ok(cols)
-            }
-            Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
-                worker: sess.addr.clone(),
-                reason: String::from_utf8_lossy(&payload).into_owned(),
-            }),
-            other => anyhow::bail!(NetError::Malformed {
-                what: format!("expected VocabDump, got {other:?}"),
-            }),
-        }
-    }
-
-    /// Pass 1 for one shard with split-level retry: each attempt gets a
-    /// fresh session on the rotation's next surviving worker.
-    fn pass1_shard(
-        &self,
-        shard_idx: usize,
-        shard: &std::ops::Range<usize>,
-        expected: u64,
-    ) -> Result<(ShardSession, Vec<Vec<u32>>)> {
-        let mut last_err = None;
-        for attempt in 0..=self.cfg.retries {
-            if attempt > 0 {
-                self.backoff(attempt);
-            }
-            self.clock
-                .check(&format!("dispatching shard {shard_idx} pass 1"))
-                .map_err(|e| last_err.take().unwrap_or(e))?;
-            let Some(widx) = self.pick_worker(shard_idx, attempt) else {
-                let cause = last_err
-                    .take()
-                    .map(|e: anyhow::Error| format!(" (last error: {e:#})"))
-                    .unwrap_or_default();
-                anyhow::bail!(NetError::PeerGone {
-                    what: format!("no surviving workers for shard {shard_idx}{cause}"),
-                });
-            };
-            let attempt_result = self.connect_worker(widx).and_then(|mut sess| {
-                let cols = self.pass1_attempt(&mut sess, shard, expected)?;
-                Ok((sess, cols))
-            });
-            match attempt_result {
-                Ok(out) => return Ok(out),
-                Err(e) => {
-                    self.faults.fetch_add(1, Ordering::AcqRel);
-                    last_err = Some(e);
-                }
-            }
-        }
-        Err(last_err
-            .unwrap_or_else(|| anyhow::anyhow!("no attempt ran"))
-            .context(format!("shard {shard_idx}: pass-1 retries exhausted")))
-    }
-
-    /// One pass-2 attempt. `fresh` sessions (retries) open with an
-    /// empty pass 1 — the merged vocabularies make re-observing
-    /// unnecessary. A collector thread drains `ResultChunk`s while the
-    /// shard streams out, so full socket buffers can't deadlock.
-    fn pass2_attempt(
-        &self,
-        sess: &mut ShardSession,
-        fresh: bool,
-        packed_vocabs: &[u8],
-        shard: &std::ops::Range<usize>,
-        expected: u64,
-    ) -> Result<(ProcessedColumns, RunStats)> {
-        let schema = self.job.schema;
-        let addr_str = sess.addr.clone();
-        let ShardSession { reader, writer, addr } = &mut *sess;
-        let (sent, collected) = std::thread::scope(|scope| {
-            let clock = self.clock;
-            let worker_addr = addr.clone();
-            let collector =
-                scope.spawn(move || -> Result<(ProcessedColumns, RunStats)> {
-                    let mut cols = ProcessedColumns::with_schema(schema);
-                    loop {
-                        clock.check("collecting pass-2 results")?;
-                        let (tag, payload) = protocol::read_frame(reader)?;
-                        match tag {
-                            Tag::ResultChunk => {
-                                for row in protocol::unpack_rows(&payload, schema)? {
-                                    cols.push_row(&row);
-                                }
-                            }
-                            Tag::ResultEnd => {
-                                return Ok((cols, RunStats::decode(&payload)?))
-                            }
-                            Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
-                                worker: worker_addr,
-                                reason: String::from_utf8_lossy(&payload).into_owned(),
-                            }),
-                            other => anyhow::bail!(NetError::Malformed {
-                                what: format!("unexpected {other:?} in pass 2"),
-                            }),
-                        }
-                    }
-                });
-            let sent = (|| -> Result<()> {
-                if fresh {
-                    protocol::write_frame(writer, Tag::Job, &self.job.encode())?;
-                    protocol::write_frame(writer, Tag::Pass1End, &[])?;
-                }
-                protocol::write_frame(writer, Tag::VocabLoad, packed_vocabs)?;
-                for chunk in self.raw[shard.clone()].chunks(self.chunk_size.max(1)) {
-                    self.clock.check("sending pass 2")?;
-                    protocol::write_frame(writer, Tag::Pass2Chunk, chunk)?;
-                }
-                protocol::write_frame(writer, Tag::Pass2End, &[])?;
-                writer.flush()?;
-                Ok(())
-            })();
-            let collected = collector
-                .join()
-                .unwrap_or_else(|_| Err(anyhow::anyhow!("pass-2 collector panicked")));
-            (sent, collected)
-        });
-        let (cols, stats) = match (sent, collected) {
-            (_, Ok(out)) => out,
-            // The collector usually holds the root cause (the worker's
-            // ErrorReply); a send-side broken pipe is its echo.
-            (Err(send_err), Err(collect_err)) => {
-                return Err(
-                    if matches!(NetError::of(&collect_err), Some(NetError::JobFailed { .. })) {
-                        collect_err
-                    } else {
-                        send_err
-                    },
-                )
-            }
-            (Ok(()), Err(collect_err)) => return Err(collect_err),
-        };
-        // Every input row must be accounted for: emitted, skipped, or
-        // quarantined. A shortfall means frames were lost in flight.
-        let accounted = stats.rows + stats.rows_skipped + stats.rows_quarantined;
-        anyhow::ensure!(
-            accounted == expected && cols.num_rows() as u64 == stats.rows,
-            NetError::Malformed {
-                what: format!(
-                    "worker {addr_str} returned {} rows (reported {} emitted + {} \
-                     skipped + {} quarantined) of a {expected}-row shard — \
-                     pass-2 frames were lost",
-                    cols.num_rows(),
-                    stats.rows,
-                    stats.rows_skipped,
-                    stats.rows_quarantined
-                ),
-            }
-        );
-        Ok((cols, stats))
-    }
-
-    /// Pass 2 for one shard with split-level retry. Attempt 0 reuses
-    /// the shard's pass-1 session; every retry is a fresh session on
-    /// the next surviving worker.
-    fn pass2_shard(
-        &self,
-        shard_idx: usize,
-        first_session: ShardSession,
-        packed_vocabs: &[u8],
-        shard: &std::ops::Range<usize>,
-        expected: u64,
-    ) -> Result<(ProcessedColumns, RunStats)> {
-        let mut last_err = None;
-        let mut first = Some(first_session);
-        for attempt in 0..=self.cfg.retries {
-            if attempt > 0 {
-                self.backoff(attempt);
-            }
-            self.clock
-                .check(&format!("dispatching shard {shard_idx} pass 2"))
-                .map_err(|e| last_err.take().unwrap_or(e))?;
-            let session = match first.take() {
-                Some(sess) => Ok((sess, false)),
-                None => match self.pick_worker(shard_idx, attempt) {
-                    Some(widx) => self.connect_worker(widx).map(|s| (s, true)),
-                    None => {
-                        let cause = last_err
-                            .take()
-                            .map(|e: anyhow::Error| format!(" (last error: {e:#})"))
-                            .unwrap_or_default();
-                        anyhow::bail!(NetError::PeerGone {
-                            what: format!("no surviving workers for shard {shard_idx}{cause}"),
-                        });
-                    }
-                },
-            };
-            let attempt_result = session.and_then(|(mut sess, fresh)| {
-                self.pass2_attempt(&mut sess, fresh, packed_vocabs, shard, expected)
-            });
-            match attempt_result {
-                Ok(cols) => return Ok(cols),
-                Err(e) => {
-                    self.faults.fetch_add(1, Ordering::AcqRel);
-                    last_err = Some(e);
-                }
-            }
-        }
-        Err(last_err
-            .unwrap_or_else(|| anyhow::anyhow!("no attempt ran"))
-            .context(format!("shard {shard_idx}: pass-2 retries exhausted")))
-    }
-}
-
-/// Run a sharded two-pass job against `addrs` workers with the default
-/// [`NetConfig`] (30 s I/O deadline, 2 retries per shard).
+/// Run a sharded job against `addrs` workers with the default
+/// [`NetConfig`] (30 s I/O deadline, 2 retries per split).
 pub fn run_cluster(
     addrs: &[String],
     job: &Job,
@@ -467,17 +134,9 @@ pub fn run_cluster(
     run_cluster_cfg(addrs, job, raw, chunk_size, &NetConfig::default())
 }
 
-/// Run a sharded two-pass job against `addrs` workers.
-///
-/// The cluster path is inherently two-pass: the global vocabulary merge
-/// is a barrier *between* the passes, so no worker may emit a row until
-/// every worker has observed its whole shard — the fused single-pass
-/// strategy cannot apply here, which is why the engine retains the
-/// two-pass protocol at all. Shards dispatch in parallel (one thread
-/// per shard) in both passes; failed shards are re-dispatched per the
-/// module-level recovery rules, and the run fails — with a typed
-/// [`NetError`], inside the job deadline — only when a shard exhausts
-/// its retries or no worker survives.
+/// Run a sharded job against `addrs` workers: one split per worker,
+/// dispatched through the preprocessing service (fused single-pass,
+/// shard-owned vocabularies — see [`crate::service`]).
 pub fn run_cluster_cfg(
     addrs: &[String],
     job: &Job,
@@ -486,123 +145,23 @@ pub fn run_cluster_cfg(
     cfg: &NetConfig,
 ) -> Result<ClusterRun> {
     anyhow::ensure!(!addrs.is_empty(), "cluster needs at least one worker");
-    let start = Instant::now();
     let binary = matches!(job.format, super::stream::WireFormat::Binary);
     let shards = shard_rows(raw, job.schema, binary, addrs.len());
-    let expected: Vec<u64> =
-        shards.iter().map(|s| expected_rows(&raw[s.clone()], job.schema, binary)).collect();
-
-    let struck: Vec<AtomicBool> = addrs.iter().map(|_| AtomicBool::new(false)).collect();
-    let retries = AtomicU64::new(0);
-    let faults = AtomicU64::new(0);
-    let dispatch = Dispatch {
-        addrs,
-        job,
-        raw,
-        chunk_size,
-        cfg,
-        clock: cfg.clock(),
-        struck: &struck,
-        retries: &retries,
-        faults: &faults,
+    let scfg = ServiceConfig {
+        net: *cfg,
+        window: 0,
+        decode_threads: 0,
+        chunk_bytes: chunk_size.max(1),
     };
-
-    // Pass 1: every shard in parallel; each thread owns its shard's
-    // retry loop and parks its session between the passes.
-    let pass1: Vec<Result<(ShardSession, Vec<Vec<u32>>)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = shards
-            .iter()
-            .enumerate()
-            .map(|(i, shard)| {
-                let dispatch = &dispatch;
-                let expected = expected[i];
-                scope.spawn(move || dispatch.pass1_shard(i, shard, expected))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| {
-                h.join()
-                    .unwrap_or_else(|_| Err(anyhow::anyhow!("pass-1 shard thread panicked")))
-            })
-            .collect()
-    });
-    let mut sessions = Vec::with_capacity(pass1.len());
-    let mut dumps = Vec::with_capacity(pass1.len());
-    for r in pass1 {
-        let (sess, cols) = r?;
-        sessions.push(sess);
-        dumps.push(cols);
-    }
-
-    // Gather sub-vocabularies, merge in shard order — deterministic no
-    // matter which worker served which shard attempt.
-    let mut merged: Vec<crate::ops::HashVocab> =
-        (0..job.schema.num_sparse).map(|_| Default::default()).collect();
-    for cols in dumps {
-        use crate::ops::Vocab as _;
-        for (dst, keys) in merged.iter_mut().zip(cols) {
-            for k in keys {
-                dst.observe(k);
-            }
-        }
-    }
-    let global: Vec<Vec<u32>> = merged
-        .iter()
-        .map(|v| v.iter_ordered().map(|(k, _)| k).collect())
-        .collect();
-    let vocab_entries: usize = global.iter().map(|c| c.len()).sum();
-
-    // Broadcast merged vocabularies + pass 2, again one thread per
-    // shard. The merged payload is serialized once — it can be many
-    // megabytes for large per-column vocabularies.
-    let packed = protocol::pack_vocabs(&global);
-    let outputs: Vec<Result<(ProcessedColumns, RunStats)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = shards
-            .iter()
-            .zip(sessions)
-            .enumerate()
-            .map(|(i, (shard, sess))| {
-                let dispatch = &dispatch;
-                let packed = &packed;
-                let expected = expected[i];
-                scope.spawn(move || dispatch.pass2_shard(i, sess, packed, shard, expected))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| {
-                h.join()
-                    .unwrap_or_else(|_| Err(anyhow::anyhow!("pass-2 shard thread panicked")))
-            })
-            .collect()
-    });
-
-    // Concatenate shard outputs in order (the CFR step) and sum the
-    // per-worker containment counters.
-    let mut processed = ProcessedColumns::with_schema(job.schema);
-    let (mut rows_skipped, mut rows_quarantined, mut illegal_bytes) = (0u64, 0u64, 0u64);
-    for part in outputs {
-        let (cols, stats) = part?;
-        processed.extend_from(&cols);
-        rows_skipped += stats.rows_skipped;
-        rows_quarantined += stats.rows_quarantined;
-        illegal_bytes += stats.illegal_bytes;
-    }
-    let rows = processed.num_rows() as u64;
+    let run = crate::service::run_service_cfg(addrs, job, raw, &shards, &scfg)?;
     Ok(ClusterRun {
-        processed,
-        stats: RunStats {
-            rows,
-            vocab_entries: vocab_entries as u64,
-            rows_skipped,
-            rows_quarantined,
-            illegal_bytes,
-        },
-        workers: addrs.len(),
-        wallclock: start.elapsed(),
-        retries: retries.load(Ordering::Acquire),
-        faults: faults.load(Ordering::Acquire),
+        processed: run.processed,
+        stats: run.stats,
+        workers: run.workers,
+        wallclock: run.wallclock,
+        retries: run.retries,
+        faults: run.faults,
+        per_worker: run.per_worker,
     })
 }
 
@@ -653,6 +212,7 @@ pub fn run_cluster_loopback_cfg(
 mod tests {
     use super::*;
     use crate::data::{binary, synth::SynthConfig, utf8, SynthDataset};
+    use crate::net::protocol;
     use crate::net::stream::WireFormat;
     use crate::ops::Modulus;
 

@@ -6,17 +6,18 @@
 //! with a real TCP implementation on loopback:
 //!
 //! * [`stream`] — the streaming preprocessor, speaking both execution
-//!   strategies: fused (single-node default — observe and emit per
-//!   chunk, the dataset arrives **once**) and two-pass (pass 1 builds
-//!   the vocabularies, pass 2 re-streams and emits — retained because
-//!   the cluster's global vocabulary merge is a barrier between the
-//!   passes). Only the vocabularies are resident — the worker never
-//!   holds the dataset ("the FPGA can process larger-than-memory
-//!   datasets in a streaming fashion", §3.4.2).
+//!   strategies: fused (the default — observe and emit per chunk, the
+//!   dataset arrives **once**) and two-pass (pass 1 builds the
+//!   vocabularies, pass 2 re-streams and emits — retained as the
+//!   classic two-loop baseline). Only the vocabularies are resident —
+//!   the worker never holds the dataset ("the FPGA can process
+//!   larger-than-memory datasets in a streaming fashion", §3.4.2).
 //! * [`protocol`] — length-prefixed frames for jobs, data passes and
 //!   results; the first data frame picks the strategy.
 //! * [`worker`] — the accelerator node: accepts a job, runs either
-//!   protocol, streams results back.
+//!   protocol, streams results back. Also speaks the
+//!   [`crate::service`] dispatch and key sessions, so one worker pool
+//!   serves single-node submits and service jobs alike.
 //! * [`leader`] — the client: sends the dataset (once or twice per the
 //!   strategy), collects results.
 //! * [`serve`] — online serving: small request/response batches against
@@ -29,10 +30,10 @@
 //!
 //! Fault model: every socket carries read/write deadlines
 //! ([`NetConfig`]), every job a wall-clock budget ([`JobClock`]), and
-//! every failure a typed class ([`NetError`]). The cluster re-dispatches
-//! failed shards to surviving workers with capped exponential backoff;
-//! per-shard row counts and frame checksums turn silent corruption into
-//! typed, retryable errors.
+//! every failure a typed class ([`NetError`]). The service scheduler
+//! re-dispatches failed splits to surviving workers with capped
+//! exponential backoff; per-split row counts and frame checksums turn
+//! silent corruption into typed, retryable errors.
 //!
 //! Functional times on loopback are measured; the 100 Gbps figure comes
 //! from [`crate::accel::network`]'s line-rate model (tagged `sim`).

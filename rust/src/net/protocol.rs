@@ -157,6 +157,32 @@ pub enum Tag {
     /// a malformed stream diagnoses itself instead of surfacing as a
     /// bare hangup on the other side.
     ErrorReply = 18,
+    /// First frame of a service session ([`ServiceOpen`]): either the
+    /// dispatcher joining a worker to a job (role `Dispatch`), a worker
+    /// opening a key-forwarding session to a column owner (role
+    /// `Keys`), or the worker's join acknowledgement (role `Ack`).
+    ServiceHello = 19,
+    /// Dispatcher → worker: split metadata ([`SplitAssign`]). The
+    /// split's raw bytes follow as `FusedChunk`* + `FusedEnd` on the
+    /// same session, so the worker decodes while the split streams in.
+    SplitAssign = 20,
+    /// Non-owner → owner: one split's unique raw keys for one
+    /// vocabulary column, in in-split appearance order ([`KeyBatch`]).
+    KeyBatch = 21,
+    /// Owner → non-owner: the globally-assigned indices for a
+    /// [`KeyBatch`], same order ([`IndexBatch`]).
+    IndexBatch = 22,
+    /// Worker → dispatcher: terminal status of one split
+    /// ([`SplitDone`]). Dispatcher → worker with `seq == u64::MAX`
+    /// doubles as the clean end-of-job marker.
+    SplitDone = 23,
+    /// Worker → dispatcher: one split's `(keys, indices)` vocabulary
+    /// delta for one column ([`VocabDelta`]), sent before `SplitDone`
+    /// so the dispatcher's mirror fold is race-free with completion.
+    VocabDelta = 24,
+    /// Dispatcher → worker: seed a column owner's sequencer with the
+    /// mirror's fold prefix after an ownership transfer ([`OwnerSeed`]).
+    OwnerSeed = 25,
 }
 
 impl Tag {
@@ -180,6 +206,13 @@ impl Tag {
             16 => Tag::ServeEnd,
             17 => Tag::ServeReport,
             18 => Tag::ErrorReply,
+            19 => Tag::ServiceHello,
+            20 => Tag::SplitAssign,
+            21 => Tag::KeyBatch,
+            22 => Tag::IndexBatch,
+            23 => Tag::SplitDone,
+            24 => Tag::VocabDelta,
+            25 => Tag::OwnerSeed,
             other => anyhow::bail!("unknown frame tag {other}"),
         })
     }
@@ -471,21 +504,45 @@ pub struct RunStats {
     pub rows_quarantined: u64,
     /// Illegal input bytes the decode skipped (zero-policy semantics).
     pub illegal_bytes: u64,
+    /// Wall nanoseconds this worker spent decoding raw bytes.
+    pub decode_ns: u64,
+    /// Wall nanoseconds in the stateless per-column stage.
+    pub stateless_ns: u64,
+    /// Wall nanoseconds in the vocabulary stage (observe/apply fold,
+    /// plus — on the service path — remote index waits and rewrites).
+    pub vocab_ns: u64,
 }
 
 impl RunStats {
+    /// Field-wise sum, for merging per-split / per-worker stats.
+    /// `vocab_entries` saturates by addition too — the service layer
+    /// overwrites it with the authoritative mirror total at the end.
+    pub fn merge(&mut self, o: &RunStats) {
+        self.rows += o.rows;
+        self.vocab_entries += o.vocab_entries;
+        self.rows_skipped += o.rows_skipped;
+        self.rows_quarantined += o.rows_quarantined;
+        self.illegal_bytes += o.illegal_bytes;
+        self.decode_ns += o.decode_ns;
+        self.stateless_ns += o.stateless_ns;
+        self.vocab_ns += o.vocab_ns;
+    }
+
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(40);
+        let mut out = Vec::with_capacity(64);
         out.extend_from_slice(&self.rows.to_le_bytes());
         out.extend_from_slice(&self.vocab_entries.to_le_bytes());
         out.extend_from_slice(&self.rows_skipped.to_le_bytes());
         out.extend_from_slice(&self.rows_quarantined.to_le_bytes());
         out.extend_from_slice(&self.illegal_bytes.to_le_bytes());
+        out.extend_from_slice(&self.decode_ns.to_le_bytes());
+        out.extend_from_slice(&self.stateless_ns.to_le_bytes());
+        out.extend_from_slice(&self.vocab_ns.to_le_bytes());
         out
     }
 
     pub fn decode(buf: &[u8]) -> Result<RunStats> {
-        anyhow::ensure!(buf.len() == 40, "stats frame must be 40 bytes");
+        anyhow::ensure!(buf.len() == 64, "stats frame must be 64 bytes");
         let rd = |i: usize| {
             u64::from_le_bytes([
                 buf[i], buf[i + 1], buf[i + 2], buf[i + 3],
@@ -498,8 +555,499 @@ impl RunStats {
             rows_skipped: rd(16),
             rows_quarantined: rd(24),
             illegal_bytes: rd(32),
+            decode_ns: rd(40),
+            stateless_ns: rd(48),
+            vocab_ns: rd(56),
         })
     }
+}
+
+// ---------------------------------------------------------------------
+// Service protocol (disaggregated preprocessing service, PR 10)
+// ---------------------------------------------------------------------
+//
+// Session shapes:
+//
+// Dispatch session (dispatcher → worker):
+//   `ServiceHello{Dispatch}` → `ServiceHello{Ack}` ← then a stream of
+//   `SplitAssign` + `FusedChunk`* + `FusedEnd` per split, `OwnerSeed`
+//   after ownership transfers, and a final `SplitDone{seq: u64::MAX}`
+//   end-of-job marker. The worker replies per split with `VocabDelta`*
+//   (one per vocabulary column), `ResultChunk`* (payload prefixed with
+//   the split's `seq:u64le` so a multiplexed reader can attribute
+//   rows), and `SplitDone`.
+//
+// Key session (worker → worker, one per (job, owner) pair):
+//   `ServiceHello{Keys}` → `ServiceHello{Ack}` ← then `KeyBatch` →
+//   `IndexBatch` ← pairs. There is no `Pass1End → VocabLoad` barrier
+//   anywhere on the service path: index assignment happens inside the
+//   owner's per-column sequencer, in (split seq, in-split appearance)
+//   order, while the rest of the cluster keeps streaming.
+
+/// Reads a `u16`/`u32`/`u64` cursor over a payload with typed
+/// truncation errors — the shared decoding substrate for the service
+/// frames below (all little-endian, like the rest of the protocol).
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let s = self
+            .buf
+            .get(self.at..self.at + n)
+            .ok_or_else(|| anyhow::anyhow!("{what}: frame truncated at byte {}", self.at))?;
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        let s = self.take(2, what)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    /// A `count:u32`-prefixed vector of `u32`s, with the reservation
+    /// bounded by the bytes actually present (hostile-length guard).
+    fn u32s(&mut self, what: &str) -> Result<Vec<u32>> {
+        let n = self.u32(what)? as usize;
+        anyhow::ensure!(
+            self.buf.len().saturating_sub(self.at) / 4 >= n,
+            "{what}: frame truncated (claims {n} words)"
+        );
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32(what)?);
+        }
+        Ok(out)
+    }
+
+    fn done(&self, what: &str) -> Result<()> {
+        anyhow::ensure!(self.at == self.buf.len(), "{what}: trailing bytes in frame");
+        Ok(())
+    }
+}
+
+/// Cap on the per-column owner table / peer list length, mirroring the
+/// `unpack_vocabs` column cap: a hostile hello must fail fast, not
+/// force a giant allocation.
+const MAX_SERVICE_COLS: usize = 4096;
+
+/// Dispatcher → worker join frame: everything the worker needs to take
+/// part in one service job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceHello {
+    /// Dispatcher-chosen job identity; worker-side per-job state
+    /// (column sequencers) is keyed by `(job_id, worker_id)` so
+    /// concurrent jobs multiplex one worker pool without collisions.
+    pub job_id: u64,
+    /// This worker's id within the job (index into `peers`).
+    pub worker_id: u16,
+    /// Ownership epoch the hello's `owners` table belongs to.
+    pub epoch: u32,
+    /// Per-sparse-column owner worker id (hash partition).
+    pub owners: Vec<u16>,
+    /// Worker addresses by id, for opening key-forwarding sessions.
+    pub peers: Vec<String>,
+    /// Decode threads per split (0 = worker default).
+    pub decode_threads: u16,
+    pub job: Job,
+}
+
+/// Worker → owner join frame for a key-forwarding session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KeyHello {
+    pub job_id: u64,
+    /// The owner the session is addressed to (consistency check).
+    pub owner_id: u16,
+    pub requester_id: u16,
+}
+
+/// First frame of any service session, and its acknowledgement.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServiceOpen {
+    Dispatch(ServiceHello),
+    Keys(KeyHello),
+    Ack { worker_id: u16 },
+}
+
+impl ServiceOpen {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ServiceOpen::Dispatch(h) => {
+                out.push(0);
+                out.extend_from_slice(&h.job_id.to_le_bytes());
+                out.extend_from_slice(&h.worker_id.to_le_bytes());
+                out.extend_from_slice(&h.epoch.to_le_bytes());
+                out.extend_from_slice(&h.decode_threads.to_le_bytes());
+                out.extend_from_slice(&(h.owners.len() as u32).to_le_bytes());
+                for &o in &h.owners {
+                    out.extend_from_slice(&o.to_le_bytes());
+                }
+                out.extend_from_slice(&(h.peers.len() as u32).to_le_bytes());
+                for p in &h.peers {
+                    out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+                    out.extend_from_slice(p.as_bytes());
+                }
+                out.extend_from_slice(&h.job.encode());
+            }
+            ServiceOpen::Keys(k) => {
+                out.push(1);
+                out.extend_from_slice(&k.job_id.to_le_bytes());
+                out.extend_from_slice(&k.owner_id.to_le_bytes());
+                out.extend_from_slice(&k.requester_id.to_le_bytes());
+            }
+            ServiceOpen::Ack { worker_id } => {
+                out.push(2);
+                out.extend_from_slice(&worker_id.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ServiceOpen> {
+        let mut c = Cursor::new(buf);
+        let open = match c.u8("service hello role")? {
+            0 => {
+                let job_id = c.u64("service hello")?;
+                let worker_id = c.u16("service hello")?;
+                let epoch = c.u32("service hello")?;
+                let decode_threads = c.u16("service hello")?;
+                let nowners = c.u32("service hello")? as usize;
+                anyhow::ensure!(
+                    nowners <= MAX_SERVICE_COLS,
+                    "unreasonable owner-table length {nowners}"
+                );
+                let mut owners = Vec::with_capacity(nowners);
+                for _ in 0..nowners {
+                    owners.push(c.u16("service hello owners")?);
+                }
+                let npeers = c.u32("service hello")? as usize;
+                anyhow::ensure!(npeers <= MAX_SERVICE_COLS, "unreasonable peer count {npeers}");
+                let mut peers = Vec::with_capacity(npeers);
+                for _ in 0..npeers {
+                    let len = c.u32("service hello peer")? as usize;
+                    let raw = c.take(len, "service hello peer")?;
+                    peers.push(
+                        std::str::from_utf8(raw)
+                            .map_err(|e| anyhow::anyhow!("peer address is not UTF-8: {e}"))?
+                            .to_string(),
+                    );
+                }
+                let job = Job::decode(&buf[c.at..])?;
+                ServiceOpen::Dispatch(ServiceHello {
+                    job_id,
+                    worker_id,
+                    epoch,
+                    owners,
+                    peers,
+                    decode_threads,
+                    job,
+                })
+            }
+            1 => {
+                let k = KeyHello {
+                    job_id: c.u64("key hello")?,
+                    owner_id: c.u16("key hello")?,
+                    requester_id: c.u16("key hello")?,
+                };
+                c.done("key hello")?;
+                ServiceOpen::Keys(k)
+            }
+            2 => {
+                let worker_id = c.u16("service ack")?;
+                c.done("service ack")?;
+                ServiceOpen::Ack { worker_id }
+            }
+            other => anyhow::bail!("unknown service hello role {other}"),
+        };
+        Ok(open)
+    }
+}
+
+/// Dispatcher → worker: metadata for one split. The split's raw bytes
+/// follow as `FusedChunk`* + `FusedEnd` frames, so a mid-split fault
+/// lands mid-stream exactly as on the old two-pass path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SplitAssign {
+    /// Global split sequence number — the determinism backbone: owners
+    /// assign vocabulary indices in `(seq, in-split appearance)` order.
+    pub seq: u64,
+    /// Ownership epoch (and table) the worker must route keys under.
+    pub epoch: u32,
+    /// Rows the dispatcher expects back (kept + skipped + quarantined);
+    /// a mismatch marks the split failed and re-dispatches it.
+    pub expected_rows: u64,
+    /// Current per-column owner worker ids.
+    pub owners: Vec<u16>,
+}
+
+impl SplitAssign {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + self.owners.len() * 2);
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.expected_rows.to_le_bytes());
+        out.extend_from_slice(&(self.owners.len() as u32).to_le_bytes());
+        for &o in &self.owners {
+            out.extend_from_slice(&o.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<SplitAssign> {
+        let mut c = Cursor::new(buf);
+        let seq = c.u64("split assign")?;
+        let epoch = c.u32("split assign")?;
+        let expected_rows = c.u64("split assign")?;
+        let nowners = c.u32("split assign")? as usize;
+        anyhow::ensure!(nowners <= MAX_SERVICE_COLS, "unreasonable owner-table length {nowners}");
+        let mut owners = Vec::with_capacity(nowners);
+        for _ in 0..nowners {
+            owners.push(c.u16("split assign owners")?);
+        }
+        c.done("split assign")?;
+        Ok(SplitAssign { seq, epoch, expected_rows, owners })
+    }
+}
+
+/// One split's unique raw keys for one column, appearance-ordered
+/// (requester → owner), and the owner's index reply. The `(col, seq)`
+/// pair makes both frames self-describing, so replies can be matched
+/// without any per-session request state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KeyBatch {
+    pub col: u16,
+    pub seq: u64,
+    pub keys: Vec<u32>,
+}
+
+impl KeyBatch {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(14 + self.keys.len() * 4);
+        out.extend_from_slice(&self.col.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&(self.keys.len() as u32).to_le_bytes());
+        for &k in &self.keys {
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<KeyBatch> {
+        let mut c = Cursor::new(buf);
+        let col = c.u16("key batch")?;
+        let seq = c.u64("key batch")?;
+        let keys = c.u32s("key batch")?;
+        c.done("key batch")?;
+        Ok(KeyBatch { col, seq, keys })
+    }
+}
+
+/// Owner → requester: globally-assigned indices for one [`KeyBatch`],
+/// in the same order as the batch's keys.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexBatch {
+    pub col: u16,
+    pub seq: u64,
+    pub indices: Vec<u32>,
+}
+
+impl IndexBatch {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(14 + self.indices.len() * 4);
+        out.extend_from_slice(&self.col.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&(self.indices.len() as u32).to_le_bytes());
+        for &i in &self.indices {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<IndexBatch> {
+        let mut c = Cursor::new(buf);
+        let col = c.u16("index batch")?;
+        let seq = c.u64("index batch")?;
+        let indices = c.u32s("index batch")?;
+        c.done("index batch")?;
+        Ok(IndexBatch { col, seq, indices })
+    }
+}
+
+/// Worker → dispatcher: one split's `(keys, indices)` vocabulary delta
+/// for one column. The dispatcher folds deltas in `seq` order into its
+/// mirror of every column vocabulary — the state that survives an
+/// owner's departure — and verifies the owner-assigned indices match
+/// the deterministic fold.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VocabDelta {
+    pub col: u16,
+    pub seq: u64,
+    /// The split's unique mapped keys in appearance order.
+    pub keys: Vec<u32>,
+    /// The global indices the owner assigned, parallel to `keys`.
+    pub indices: Vec<u32>,
+}
+
+impl VocabDelta {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(18 + self.keys.len() * 8);
+        out.extend_from_slice(&self.col.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&(self.keys.len() as u32).to_le_bytes());
+        for &k in &self.keys {
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.indices.len() as u32).to_le_bytes());
+        for &i in &self.indices {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<VocabDelta> {
+        let mut c = Cursor::new(buf);
+        let col = c.u16("vocab delta")?;
+        let seq = c.u64("vocab delta")?;
+        let keys = c.u32s("vocab delta keys")?;
+        let indices = c.u32s("vocab delta indices")?;
+        c.done("vocab delta")?;
+        anyhow::ensure!(
+            keys.len() == indices.len(),
+            "vocab delta keys/indices length mismatch ({} vs {})",
+            keys.len(),
+            indices.len()
+        );
+        Ok(VocabDelta { col, seq, keys, indices })
+    }
+}
+
+/// Dispatcher → worker: seed a column sequencer after an ownership
+/// transfer — the mirror's contiguously-folded keys plus the next
+/// split seq the fold expects. Seeding is a liveness aid (batches below
+/// the watermark are never re-submitted); a fresh sequencer refolding
+/// from zero produces identical indices by determinism.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OwnerSeed {
+    pub col: u16,
+    pub next_seq: u64,
+    /// The mirror vocabulary's keys in global appearance order.
+    pub keys: Vec<u32>,
+}
+
+impl OwnerSeed {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(14 + self.keys.len() * 4);
+        out.extend_from_slice(&self.col.to_le_bytes());
+        out.extend_from_slice(&self.next_seq.to_le_bytes());
+        out.extend_from_slice(&(self.keys.len() as u32).to_le_bytes());
+        for &k in &self.keys {
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<OwnerSeed> {
+        let mut c = Cursor::new(buf);
+        let col = c.u16("owner seed")?;
+        let next_seq = c.u64("owner seed")?;
+        let keys = c.u32s("owner seed")?;
+        c.done("owner seed")?;
+        Ok(OwnerSeed { col, next_seq, keys })
+    }
+}
+
+/// Terminal status of one split (worker → dispatcher). The dispatcher
+/// reuses the same frame with `seq == u64::MAX` (`SplitDone::END`) as
+/// the clean end-of-job marker on a dispatch session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitDone {
+    pub seq: u64,
+    pub status: SplitStatus,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum SplitStatus {
+    Ok(RunStats),
+    Failed(String),
+}
+
+impl SplitDone {
+    /// The `seq` value that marks a clean end of job.
+    pub const END: u64 = u64::MAX;
+
+    pub fn end_marker() -> SplitDone {
+        SplitDone { seq: SplitDone::END, status: SplitStatus::Ok(RunStats::default()) }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(73);
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        match &self.status {
+            SplitStatus::Ok(stats) => {
+                out.push(0);
+                out.extend_from_slice(&stats.encode());
+            }
+            SplitStatus::Failed(reason) => {
+                out.push(1);
+                out.extend_from_slice(reason.as_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<SplitDone> {
+        let mut c = Cursor::new(buf);
+        let seq = c.u64("split done")?;
+        let status = match c.u8("split done status")? {
+            0 => SplitStatus::Ok(RunStats::decode(&buf[c.at..])?),
+            1 => SplitStatus::Failed(
+                std::str::from_utf8(&buf[c.at..])
+                    .map_err(|e| anyhow::anyhow!("split failure reason is not UTF-8: {e}"))?
+                    .to_string(),
+            ),
+            other => anyhow::bail!("unknown split status byte {other}"),
+        };
+        Ok(SplitDone { seq, status })
+    }
+}
+
+/// Pack a service-path ResultChunk: the split's `seq:u64le` followed by
+/// [`pack_rows`] bytes, so the dispatcher's per-worker reader threads
+/// can attribute rows to splits on a multiplexed session.
+pub fn pack_service_rows(seq: u64, rows: &[ProcessedRow], schema: Schema) -> Vec<u8> {
+    let mut out = seq.to_le_bytes().to_vec();
+    out.extend_from_slice(&pack_rows(rows, schema));
+    out
+}
+
+/// Decode [`pack_service_rows`] output.
+pub fn unpack_service_rows(buf: &[u8], schema: Schema) -> Result<(u64, Vec<ProcessedRow>)> {
+    anyhow::ensure!(buf.len() >= 8, "service result chunk truncated: {} bytes", buf.len());
+    let seq = u64::from_le_bytes([
+        buf[0], buf[1], buf[2], buf[3], buf[4], buf[5], buf[6], buf[7],
+    ]);
+    Ok((seq, unpack_rows(&buf[8..], schema)?))
 }
 
 #[cfg(test)]
@@ -661,9 +1209,120 @@ mod tests {
             rows_skipped: 7,
             rows_quarantined: 8,
             illegal_bytes: 9,
+            decode_ns: 1_000_001,
+            stateless_ns: 2_000_002,
+            vocab_ns: 3_000_003,
         };
         assert_eq!(RunStats::decode(&s.encode()).unwrap(), s);
         assert!(RunStats::decode(&s.encode()[..16]).is_err(), "old 16-byte frame rejected");
+        assert!(RunStats::decode(&s.encode()[..40]).is_err(), "pre-PR10 40-byte frame rejected");
+    }
+
+    #[test]
+    fn service_open_roundtrip() {
+        let hello = ServiceOpen::Dispatch(ServiceHello {
+            job_id: 0xDEAD_BEEF_0042,
+            worker_id: 3,
+            epoch: 7,
+            owners: vec![0, 1, 2, 0, 1],
+            peers: vec!["127.0.0.1:4000".into(), "127.0.0.1:4001".into()],
+            decode_threads: 2,
+            job: Job::dlrm(Schema::new(2, 5), Modulus::VOCAB_5K, WireFormat::Binary),
+        });
+        assert_eq!(ServiceOpen::decode(&hello.encode()).unwrap(), hello);
+        let keys =
+            ServiceOpen::Keys(KeyHello { job_id: 99, owner_id: 1, requester_id: 2 });
+        assert_eq!(ServiceOpen::decode(&keys.encode()).unwrap(), keys);
+        let ack = ServiceOpen::Ack { worker_id: 5 };
+        assert_eq!(ServiceOpen::decode(&ack.encode()).unwrap(), ack);
+        // hostile inputs: truncations and a bad role are typed errors
+        let enc = hello.encode();
+        for cut in 0..enc.len().min(64) {
+            assert!(ServiceOpen::decode(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+        assert!(ServiceOpen::decode(&[9u8]).is_err(), "bad role byte");
+        // an owner count far beyond the buffer fails fast
+        let mut hostile = vec![0u8];
+        hostile.extend_from_slice(&1u64.to_le_bytes());
+        hostile.extend_from_slice(&0u16.to_le_bytes());
+        hostile.extend_from_slice(&0u32.to_le_bytes());
+        hostile.extend_from_slice(&0u16.to_le_bytes());
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ServiceOpen::decode(&hostile).is_err(), "hostile owner count");
+    }
+
+    #[test]
+    fn split_assign_roundtrip() {
+        let a = SplitAssign { seq: 17, epoch: 3, expected_rows: 4096, owners: vec![1, 0, 1] };
+        assert_eq!(SplitAssign::decode(&a.encode()).unwrap(), a);
+        let enc = a.encode();
+        for cut in 0..enc.len() {
+            assert!(SplitAssign::decode(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut trailing = enc.clone();
+        trailing.push(0);
+        assert!(SplitAssign::decode(&trailing).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn key_and_index_batch_roundtrip() {
+        let kb = KeyBatch { col: 4, seq: 9, keys: vec![10, 20, 30] };
+        assert_eq!(KeyBatch::decode(&kb.encode()).unwrap(), kb);
+        let ib = IndexBatch { col: 4, seq: 9, indices: vec![0, 1, 2] };
+        assert_eq!(IndexBatch::decode(&ib.encode()).unwrap(), ib);
+        // hostile length: claims far more keys than the frame holds
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(&4u16.to_le_bytes());
+        hostile.extend_from_slice(&9u64.to_le_bytes());
+        hostile.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(KeyBatch::decode(&hostile).is_err());
+        assert!(IndexBatch::decode(&hostile).is_err());
+        for cut in 0..kb.encode().len() {
+            assert!(KeyBatch::decode(&kb.encode()[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn vocab_delta_and_owner_seed_roundtrip() {
+        let d = VocabDelta { col: 2, seq: 5, keys: vec![7, 8], indices: vec![0, 1] };
+        assert_eq!(VocabDelta::decode(&d.encode()).unwrap(), d);
+        // mismatched key/index lengths are rejected
+        let bad = VocabDelta { col: 2, seq: 5, keys: vec![7, 8], indices: vec![0] };
+        assert!(VocabDelta::decode(&bad.encode()).is_err());
+        let s = OwnerSeed { col: 2, next_seq: 6, keys: vec![7, 8, 9] };
+        assert_eq!(OwnerSeed::decode(&s.encode()).unwrap(), s);
+        for cut in 0..d.encode().len() {
+            assert!(VocabDelta::decode(&d.encode()[..cut]).is_err(), "cut at {cut}");
+        }
+        for cut in 0..s.encode().len() {
+            assert!(OwnerSeed::decode(&s.encode()[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn split_done_roundtrip() {
+        let ok = SplitDone {
+            seq: 12,
+            status: SplitStatus::Ok(RunStats { rows: 9, ..RunStats::default() }),
+        };
+        assert_eq!(SplitDone::decode(&ok.encode()).unwrap(), ok);
+        let failed =
+            SplitDone { seq: 13, status: SplitStatus::Failed("budget exceeded".into()) };
+        assert_eq!(SplitDone::decode(&failed.encode()).unwrap(), failed);
+        let end = SplitDone::end_marker();
+        assert_eq!(SplitDone::decode(&end.encode()).unwrap().seq, SplitDone::END);
+        assert!(SplitDone::decode(&ok.encode()[..8]).is_err(), "missing status byte");
+        assert!(SplitDone::decode(&[0u8; 9]).is_err(), "ok status without stats");
+    }
+
+    #[test]
+    fn service_rows_roundtrip() {
+        let schema = Schema::new(1, 2);
+        let rows = vec![ProcessedRow { label: 1, dense: vec![0.5], sparse: vec![3, 4] }];
+        let packed = pack_service_rows(42, &rows, schema);
+        assert_eq!(unpack_service_rows(&packed, schema).unwrap(), (42, rows));
+        assert!(unpack_service_rows(&packed[..7], schema).is_err(), "truncated seq");
+        assert!(unpack_service_rows(&packed[..packed.len() - 1], schema).is_err());
     }
 
     #[test]

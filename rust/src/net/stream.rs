@@ -78,6 +78,10 @@ pub struct StreamingPreprocessor {
     /// captured at stream end, the source of the worker's containment
     /// counters. Two-pass decodes the bytes twice but reports once.
     emit_tally: DecodeTally,
+    /// Per-stage wall time (see [`Self::stage_ns`]).
+    decode_ns: u64,
+    stateless_ns: u64,
+    vocab_ns: u64,
 }
 
 impl StreamingPreprocessor {
@@ -111,6 +115,9 @@ impl StreamingPreprocessor {
             rows_pass2: 0,
             observed_pass1: 0,
             emit_tally: DecodeTally::default(),
+            decode_ns: 0,
+            stateless_ns: 0,
+            vocab_ns: 0,
         })
     }
 
@@ -157,9 +164,13 @@ impl StreamingPreprocessor {
         );
         self.phase = Phase::Pass1;
         self.scratch.clear();
+        let t0 = std::time::Instant::now();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
+        let t1 = std::time::Instant::now();
+        self.decode_ns += (t1 - t0).as_nanos() as u64;
         self.check_budget()?;
         self.state.observe(&self.scratch);
+        self.vocab_ns += t1.elapsed().as_nanos() as u64;
         self.rows_pass1 += self.scratch.num_rows();
         Ok(())
     }
@@ -178,10 +189,14 @@ impl StreamingPreprocessor {
         self.scratch.clear();
         // The emit pass reports the containment counters; pass 1 keeps
         // only the observed-row total the leader's integrity check needs.
+        let t0 = std::time::Instant::now();
         let tally = decoder.finish_into(&mut self.scratch)?;
+        let t1 = std::time::Instant::now();
+        self.decode_ns += (t1 - t0).as_nanos() as u64;
         self.check_tally_budget(&tally)?;
         self.observed_pass1 = tally.rows_seen;
         self.state.observe(&self.scratch);
+        self.vocab_ns += t1.elapsed().as_nanos() as u64;
         self.rows_pass1 += self.scratch.num_rows();
         self.phase = Phase::BetweenPasses;
         Ok(())
@@ -198,9 +213,13 @@ impl StreamingPreprocessor {
             self.phase
         );
         self.scratch.clear();
+        let t0 = std::time::Instant::now();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
+        let t1 = std::time::Instant::now();
+        self.decode_ns += (t1 - t0).as_nanos() as u64;
         self.check_budget()?;
         let out = rows_of(&self.state.process(&self.scratch));
+        self.stateless_ns += t1.elapsed().as_nanos() as u64;
         self.rows_pass2 += out.len();
         Ok(out)
     }
@@ -220,9 +239,13 @@ impl StreamingPreprocessor {
             ChunkDecoder::with_options(self.format.into(), self.schema(), self.decoder_opts),
         );
         self.scratch.clear();
+        let t0 = std::time::Instant::now();
         self.emit_tally = decoder.finish_into(&mut self.scratch)?;
+        let t1 = std::time::Instant::now();
+        self.decode_ns += (t1 - t0).as_nanos() as u64;
         self.check_tally_budget(&self.emit_tally)?;
         let out = rows_of(&self.state.process(&self.scratch));
+        self.stateless_ns += t1.elapsed().as_nanos() as u64;
         self.rows_pass2 += out.len();
         self.phase = Phase::Done;
         Ok(out)
@@ -241,12 +264,29 @@ impl StreamingPreprocessor {
         );
         self.phase = Phase::Fused;
         self.scratch.clear();
+        let t0 = std::time::Instant::now();
         self.decoder.feed_into(chunk, &mut self.scratch)?;
+        let t1 = std::time::Instant::now();
+        self.decode_ns += (t1 - t0).as_nanos() as u64;
         self.check_budget()?;
-        let out = rows_of(&self.state.process_fused(&self.scratch));
+        let out = rows_of(&self.fused_block());
         self.rows_pass1 += out.len();
         self.rows_pass2 += out.len();
         Ok(out)
+    }
+
+    /// [`ChunkState::process_fused`] over the scratch block, with the
+    /// stateless and vocabulary stages timed separately (same two calls
+    /// `process_fused` makes, so output is bit-identical).
+    fn fused_block(&mut self) -> ProcessedColumns {
+        let t0 = std::time::Instant::now();
+        let mut out =
+            self.state.process_stateless_range(&self.scratch, 0..self.scratch.num_rows());
+        let t1 = std::time::Instant::now();
+        self.stateless_ns += (t1 - t0).as_nanos() as u64;
+        self.state.fuse_sparse(&self.scratch, &mut out);
+        self.vocab_ns += t1.elapsed().as_nanos() as u64;
+        out
     }
 
     /// End of the fused stream: flush the decoder, return trailing rows.
@@ -261,9 +301,11 @@ impl StreamingPreprocessor {
             ChunkDecoder::with_options(self.format.into(), self.schema(), self.decoder_opts),
         );
         self.scratch.clear();
+        let t0 = std::time::Instant::now();
         self.emit_tally = decoder.finish_into(&mut self.scratch)?;
+        self.decode_ns += t0.elapsed().as_nanos() as u64;
         self.check_tally_budget(&self.emit_tally)?;
-        let out = rows_of(&self.state.process_fused(&self.scratch));
+        let out = rows_of(&self.fused_block());
         self.rows_pass1 += out.len();
         self.rows_pass2 += out.len();
         self.phase = Phase::Done;
@@ -272,6 +314,20 @@ impl StreamingPreprocessor {
 
     pub fn vocab_entries(&self) -> usize {
         self.state.vocab_entries()
+    }
+
+    /// Per-stage wall nanoseconds: `(decode, stateless, vocab)`. Fused
+    /// streams attribute the stateless per-column programs and the
+    /// sequential vocabulary fold separately; two-pass streams charge
+    /// pass 1's observe to vocab and pass 2's emit to stateless.
+    pub fn stage_ns(&self) -> (u64, u64, u64) {
+        (self.decode_ns, self.stateless_ns, self.vocab_ns)
+    }
+
+    /// Add externally-measured vocabulary-stage time (the service
+    /// path's remote index waits and sparse rewrites).
+    pub fn add_vocab_ns(&mut self, ns: u64) {
+        self.vocab_ns += ns;
     }
 
     /// Export the per-column vocabularies as keys in appearance order —

@@ -1,11 +1,17 @@
 //! The accelerator node: accept a job over TCP, run the streaming
-//! preprocessor, stream results back. Speaks all three protocols — the
+//! preprocessor, stream results back. Speaks all four protocols — the
 //! first frame decides: a [`Tag::Job`] header opens a batch session
 //! where the next data frame picks the dataflow (`FusedChunk` runs the
 //! single-pass fused dataflow, `Pass1Chunk` the two-pass protocol the
 //! cluster leader-merge requires); a [`Tag::ServeJob`] header opens an
 //! online serving session against a frozen artifact
-//! ([`crate::net::serve`]).
+//! ([`crate::net::serve`]); a [`Tag::ServiceHello`] header opens a
+//! preprocessing-service session ([`crate::service`]) — either the
+//! dispatcher's split stream or a peer worker's key-forwarding lane.
+//!
+//! Accept loops are one-thread-per-connection: a service worker must
+//! answer peers' key batches *while* its own dispatch session streams
+//! a split, so sessions cannot be served serially.
 //!
 //! Error posture: any session error — malformed frame, bad job header,
 //! decode failure — is reported to the peer as a [`Tag::ErrorReply`]
@@ -71,14 +77,21 @@ pub fn serve_n(listener: &TcpListener, n: usize) -> Result<()> {
     Ok(())
 }
 
-/// Accept connections forever. A failed session is logged and the
-/// worker moves to the next connection — the long-lived posture for a
-/// serving deployment.
+/// Accept connections forever, one session thread per connection. A
+/// failed session is logged and the worker keeps accepting — the
+/// long-lived posture for a serving deployment.
 pub fn serve_forever(listener: &TcpListener) -> ! {
     loop {
-        match serve_one(listener) {
-            Ok(stats) => eprintln!("session done: {} rows", stats.rows),
-            Err(e) => eprintln!("session failed: {e:#}"),
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                std::thread::spawn(move || {
+                    match handle(stream, &WorkerOptions::default()) {
+                        Ok(stats) => eprintln!("session done: {} rows", stats.rows),
+                        Err(e) => eprintln!("session failed: {e:#}"),
+                    }
+                });
+            }
+            Err(e) => eprintln!("accept failed: {e}"),
         }
     }
 }
@@ -114,33 +127,43 @@ impl ShutdownHandle {
     }
 }
 
-/// Accept and serve until `handle.shutdown()` is called. The session in
-/// flight when shutdown is requested runs to completion (drain), then
-/// the loop exits and the number of completed sessions is returned.
-/// Failed sessions are logged and counted, never fatal — same posture
-/// as [`serve_forever`].
+/// Accept and serve until `handle.shutdown()` is called, one session
+/// thread per connection (a service worker answers peers' key batches
+/// while its dispatch session streams). Sessions in flight when
+/// shutdown is requested run to completion (drain) before the loop
+/// returns the number of completed sessions. Failed sessions are
+/// logged and counted, never fatal — same posture as [`serve_forever`].
 pub fn serve_until(
     listener: &TcpListener,
     handle_: &ShutdownHandle,
     opts: &WorkerOptions,
 ) -> Result<u64> {
-    let mut sessions = 0u64;
+    let sessions = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let mut inflight = Vec::new();
     loop {
         if handle_.is_shut_down() {
-            return Ok(sessions);
+            break;
         }
         let (stream, _addr) = listener.accept()?;
         if handle_.is_shut_down() {
             // The poison-pill connection (or a client racing it) —
-            // drop it and exit; in-flight work already drained.
-            return Ok(sessions);
+            // drop it and exit; in-flight sessions drain below.
+            break;
         }
-        match handle(stream, opts) {
-            Ok(stats) => eprintln!("session done: {} rows", stats.rows),
-            Err(e) => eprintln!("session failed: {e:#}"),
-        }
-        sessions += 1;
+        let opts = *opts;
+        let counter = sessions.clone();
+        inflight.push(std::thread::spawn(move || {
+            match handle(stream, &opts) {
+                Ok(stats) => eprintln!("session done: {} rows", stats.rows),
+                Err(e) => eprintln!("session failed: {e:#}"),
+            }
+            counter.fetch_add(1, Ordering::AcqRel);
+        }));
     }
+    for t in inflight {
+        let _ = t.join();
+    }
+    Ok(sessions.load(Ordering::Acquire))
 }
 
 fn handle(stream: TcpStream, opts: &WorkerOptions) -> Result<RunStats> {
@@ -215,8 +238,28 @@ where
                 ..RunStats::default()
             })
         }
+        Tag::ServiceHello => {
+            // Service sessions legitimately idle — between splits, or
+            // while a peer folds a key batch. Liveness is the
+            // dispatcher's job (split deadlines, job clock), so reads
+            // go unbounded once the session identifies itself.
+            if let Some(s) = sock {
+                s.set_read_timeout(None)?;
+            }
+            match protocol::ServiceOpen::decode(&payload)? {
+                protocol::ServiceOpen::Dispatch(hello) => {
+                    crate::service::session::dispatch_session(reader, writer, hello, opts)
+                }
+                protocol::ServiceOpen::Keys(hello) => {
+                    crate::service::session::key_session(reader, writer, hello, opts)
+                }
+                protocol::ServiceOpen::Ack { .. } => anyhow::bail!(NetError::Malformed {
+                    what: "an ack cannot open a service session".into(),
+                }),
+            }
+        }
         other => anyhow::bail!(NetError::Malformed {
-            what: format!("expected Job or ServeJob frame, got {other:?}"),
+            what: format!("expected Job or ServeJob or ServiceHello frame, got {other:?}"),
         }),
     }
 }
@@ -256,12 +299,16 @@ where
                     protocol::write_frame(writer, Tag::ResultChunk, &packed)?;
                 }
                 let (rows_skipped, rows_quarantined, illegal_bytes) = sp.containment();
+                let (decode_ns, stateless_ns, vocab_ns) = sp.stage_ns();
                 let stats = RunStats {
                     rows: sp.rows_seen().1 as u64,
                     vocab_entries: sp.vocab_entries() as u64,
                     rows_skipped,
                     rows_quarantined,
                     illegal_bytes,
+                    decode_ns,
+                    stateless_ns,
+                    vocab_ns,
                 };
                 protocol::write_frame(writer, Tag::ResultEnd, &stats.encode())?;
                 writer.flush()?;
@@ -300,12 +347,16 @@ where
                     protocol::write_frame(writer, Tag::ResultChunk, &packed)?;
                 }
                 let (rows_skipped, rows_quarantined, illegal_bytes) = sp.containment();
+                let (decode_ns, stateless_ns, vocab_ns) = sp.stage_ns();
                 let stats = RunStats {
                     rows: sp.rows_seen().1 as u64,
                     vocab_entries: sp.vocab_entries() as u64,
                     rows_skipped,
                     rows_quarantined,
                     illegal_bytes,
+                    decode_ns,
+                    stateless_ns,
+                    vocab_ns,
                 };
                 protocol::write_frame(writer, Tag::ResultEnd, &stats.encode())?;
                 writer.flush()?;

@@ -224,6 +224,22 @@ pub struct ChunkState {
     pub vocabs: Vec<HashVocab>,
 }
 
+/// Where one sparse column's vocabulary indices come from on the
+/// disaggregated service path ([`ChunkState::vocab_slots`]): columns
+/// whose vocabulary lives on this worker sequence locally; columns
+/// owned elsewhere batch their keys to the owner and splice the
+/// returned indices in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VocabSlot {
+    /// No vocabulary state (modulus-only / passthrough).
+    Stateless,
+    /// Vocabulary is owned by this worker; `apply` mirrors the
+    /// column's ApplyVocab stage (false = build-only).
+    Resident { apply: bool },
+    /// Vocabulary is owned by another worker; keys are forwarded.
+    Remote { apply: bool },
+}
+
 impl ChunkState {
     pub fn new(plan: &Plan) -> Self {
         Self::with_programs(plan.programs.clone())
@@ -243,6 +259,28 @@ impl ChunkState {
     /// Does any column of the plan build a vocabulary?
     pub fn has_gen_vocab(&self) -> bool {
         self.programs.any_gen_vocab()
+    }
+
+    /// Classify every sparse column's vocabulary slot for a service
+    /// worker that owns the columns in `owned`: owned columns sequence
+    /// indices locally, remote columns forward their keys to the
+    /// owning worker. Single-node executors never call this — all
+    /// their columns are trivially resident.
+    pub fn vocab_slots(&self, owned: impl Fn(usize) -> bool) -> Vec<VocabSlot> {
+        self.programs
+            .sparse
+            .iter()
+            .enumerate()
+            .map(|(c, slot)| {
+                if !slot.gen_vocab {
+                    VocabSlot::Stateless
+                } else if owned(c) {
+                    VocabSlot::Resident { apply: slot.apply_vocab }
+                } else {
+                    VocabSlot::Remote { apply: slot.apply_vocab }
+                }
+            })
+            .collect()
     }
 
     /// Pass-1 GenVocab over a chunk: one tight loop per vocabulary-

@@ -69,7 +69,7 @@ pub mod sink;
 pub mod source;
 
 pub use executor::{
-    ChunkState, Executor, ExecutorReport, ExecutorRun, FusedStages, StreamStats,
+    ChunkState, Executor, ExecutorReport, ExecutorRun, FusedStages, StreamStats, VocabSlot,
 };
 pub use frozen::{ApplyOutcome, FrozenPlan, MissPolicy};
 pub use quarantine::{QuarantineFile, QuarantineSource, QuarantineWriter};

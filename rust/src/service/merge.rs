@@ -1,0 +1,159 @@
+//! Dispatcher-side vocabulary mirror.
+//!
+//! Owners stream [`VocabDelta`]s as they fold key batches; the mirror
+//! re-folds them in split-sequence order and checks that the indices
+//! the owner assigned match the deterministic fold. The contiguously-
+//! folded prefix (the *watermark*) is exactly the state a replacement
+//! owner must be seeded with after an ownership transfer — anything at
+//! or above the watermark is re-derived by replaying splits.
+
+use std::collections::BTreeMap;
+
+use crate::net::protocol::{NetError, VocabDelta};
+use crate::ops::{HashVocab, Vocab};
+use crate::Result;
+
+struct ColMirror {
+    vocab: HashVocab,
+    /// Next split seq to fold; deltas `< next` are verified replays.
+    next: u64,
+    /// Out-of-order deltas waiting for their predecessors.
+    pending: BTreeMap<u64, (Vec<u32>, Vec<u32>)>,
+}
+
+/// One mirror per sparse column (stateless columns simply never
+/// receive a delta and stay empty).
+pub(crate) struct Mirror {
+    cols: Vec<ColMirror>,
+}
+
+impl Mirror {
+    pub(crate) fn new(num_sparse: usize) -> Mirror {
+        Mirror {
+            cols: (0..num_sparse)
+                .map(|_| ColMirror { vocab: HashVocab::new(), next: 0, pending: BTreeMap::new() })
+                .collect(),
+        }
+    }
+
+    /// Fold one delta. Replayed deltas (a re-dispatched split re-sends
+    /// identical ones — determinism) are verified against the existing
+    /// fold and dropped; an index that disagrees with the deterministic
+    /// fold is a protocol violation, not a retryable fault.
+    pub(crate) fn fold(&mut self, delta: VocabDelta) -> Result<()> {
+        let col = delta.col as usize;
+        anyhow::ensure!(col < self.cols.len(), "vocab delta for out-of-range column {col}");
+        let m = &mut self.cols[col];
+        if delta.seq < m.next {
+            for (&k, &i) in delta.keys.iter().zip(&delta.indices) {
+                if m.vocab.apply(k) != Some(i) {
+                    return diverged(delta.col, delta.seq);
+                }
+            }
+            return Ok(());
+        }
+        if let Some((keys, indices)) = m.pending.get(&delta.seq) {
+            if *keys != delta.keys || *indices != delta.indices {
+                return diverged(delta.col, delta.seq);
+            }
+            return Ok(());
+        }
+        m.pending.insert(delta.seq, (delta.keys, delta.indices));
+        while let Some((keys, indices)) = m.pending.remove(&m.next) {
+            for (&k, &i) in keys.iter().zip(&indices) {
+                if m.vocab.observe_apply(k) != i {
+                    return diverged(delta.col, m.next);
+                }
+            }
+            m.next += 1;
+        }
+        Ok(())
+    }
+
+    /// The contiguously-folded prefix for a column: every split below
+    /// this seq has had its delta folded.
+    pub(crate) fn watermark(&self, col: usize) -> u64 {
+        self.cols[col].next
+    }
+
+    /// Whether `(col, seq)`'s delta has arrived (folded or parked).
+    /// Checked before accepting a split completion — deltas precede
+    /// `SplitDone` on the session, so a miss means the frame was lost.
+    pub(crate) fn has(&self, col: usize, seq: u64) -> bool {
+        let m = &self.cols[col];
+        seq < m.next || m.pending.contains_key(&seq)
+    }
+
+    /// Seed payload for a replacement owner: the folded prefix's keys
+    /// in index order plus the fold point. Pending (non-contiguous)
+    /// deltas are dropped — the replay sweep re-derives them.
+    pub(crate) fn seed_for(&mut self, col: usize) -> (u64, Vec<u32>) {
+        let m = &mut self.cols[col];
+        m.pending.clear();
+        (m.next, m.vocab.export_keys())
+    }
+
+    /// Total distinct entries across all columns — the authoritative
+    /// `vocab_entries` for the run (workers report 0; split-local
+    /// counts would double-count shared keys).
+    pub(crate) fn entries(&self) -> u64 {
+        self.cols.iter().map(|m| m.vocab.len() as u64).sum()
+    }
+}
+
+fn diverged(col: u16, seq: u64) -> Result<()> {
+    anyhow::bail!(NetError::Malformed {
+        what: format!("vocab delta for column {col}, split {seq} diverges from the mirror fold"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(col: u16, seq: u64, keys: &[u32], indices: &[u32]) -> VocabDelta {
+        VocabDelta { col, seq, keys: keys.to_vec(), indices: indices.to_vec() }
+    }
+
+    #[test]
+    fn folds_out_of_order_and_verifies() {
+        let mut m = Mirror::new(2);
+        // seq 1 arrives first — parked
+        m.fold(delta(0, 1, &[30, 10], &[2, 0])).unwrap();
+        assert_eq!(m.watermark(0), 0);
+        m.fold(delta(0, 0, &[10, 20], &[0, 1])).unwrap();
+        assert_eq!(m.watermark(0), 2);
+        assert_eq!(m.entries(), 3);
+        // replay of seq 0 verifies silently
+        m.fold(delta(0, 0, &[10, 20], &[0, 1])).unwrap();
+        assert_eq!(m.entries(), 3);
+    }
+
+    #[test]
+    fn diverging_indices_are_rejected() {
+        let mut m = Mirror::new(1);
+        m.fold(delta(0, 0, &[10], &[0])).unwrap();
+        let err = m.fold(delta(0, 0, &[10], &[7])).unwrap_err();
+        assert!(err.to_string().contains("diverges"), "{err:#}");
+        // out-of-order divergence is caught at fold time too
+        let mut m = Mirror::new(1);
+        m.fold(delta(0, 1, &[5], &[9])).unwrap();
+        let err = m.fold(delta(0, 0, &[5], &[0])).unwrap_err();
+        assert!(err.to_string().contains("diverges"), "{err:#}");
+    }
+
+    #[test]
+    fn seed_carries_the_contiguous_prefix_only() {
+        let mut m = Mirror::new(1);
+        m.fold(delta(0, 0, &[10, 20], &[0, 1])).unwrap();
+        m.fold(delta(0, 2, &[40], &[3])).unwrap(); // parked, non-contiguous
+        let (next, keys) = m.seed_for(0);
+        assert_eq!(next, 1);
+        assert_eq!(keys, vec![10, 20]);
+        // pending was dropped: folding seq 1 then 2 re-derives cleanly
+        m.fold(delta(0, 1, &[30], &[2])).unwrap();
+        m.fold(delta(0, 2, &[40], &[3])).unwrap();
+        assert_eq!(m.watermark(0), 3);
+        assert_eq!(m.entries(), 4);
+    }
+}

@@ -1,0 +1,180 @@
+//! Disaggregated preprocessing service with shard-owned vocabularies.
+//!
+//! The two-pass cluster ([`crate::net::cluster`]) pays a global
+//! barrier: no worker emits a row until *every* worker has observed
+//! its whole shard, because the vocabulary merge sits between the
+//! passes. This subsystem removes the barrier by making vocabulary
+//! state *owned*: each vocabulary column is assigned to exactly one
+//! worker by hash partition ([`router`]), and index assignment happens
+//! at the owner as key batches arrive — ordered by split sequence
+//! number, so the assignment is bit-identical to a single sequential
+//! scan no matter how splits interleave across the cluster.
+//!
+//! ```text
+//!            dispatcher (scheduler + registry + mirror)
+//!           /      |       \            split queue, join/strike,
+//!   splits /       |        \ splits    vocab mirror + seeds
+//!         v        v         v
+//!      worker0   worker1   worker2      fused single-pass decode
+//!         \      ^   |      ^           per split; owners fold key
+//!          \____/    |_____/            batches -> global indices
+//!        key batches / index batches    (worker-to-worker, no barrier)
+//! ```
+//!
+//! Every worker runs the whole fused pipeline on each split it is
+//! assigned; for a vocabulary column it does not own it forwards the
+//! split's unique keys (appearance-ordered, one batch per column) to
+//! the owner and rewrites its rows with the returned global indices.
+//! The dispatcher never relays vocabulary traffic — it only mirrors
+//! the owners' delta stream ([`merge`]) so it can seed a replacement
+//! owner after a worker is struck.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::data::row::ProcessedColumns;
+use crate::net::protocol::{Job, RunStats};
+use crate::net::NetConfig;
+use crate::Result;
+
+pub(crate) mod merge;
+pub(crate) mod registry;
+pub(crate) mod router;
+mod scheduler;
+pub(crate) mod session;
+
+/// Knobs for a service run. `Default` matches the cluster defaults:
+/// 30 s I/O deadline, 2 retries per split, no job deadline.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Transport and fault-tolerance knobs (shared with the two-pass
+    /// cluster path).
+    pub net: NetConfig,
+    /// Maximum splits in flight across the cluster (per-job
+    /// backpressure). `0` = one per live worker.
+    pub window: usize,
+    /// Decode threads per worker split; `0` = the worker's default.
+    pub decode_threads: u16,
+    /// Bytes per data frame when streaming a split.
+    pub chunk_bytes: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            net: NetConfig::default(),
+            window: 0,
+            decode_threads: 0,
+            chunk_bytes: 64 << 10,
+        }
+    }
+}
+
+/// Per-worker contribution to a service run.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub addr: String,
+    /// Splits whose completion this worker won.
+    pub splits: u64,
+    /// Merged stats over those splits, including the per-stage
+    /// decode/stateless/vocab nanosecond breakdown.
+    pub stats: RunStats,
+}
+
+/// Result of a service run.
+#[derive(Debug)]
+pub struct ServiceRun {
+    pub processed: ProcessedColumns,
+    /// Totals across accepted splits; `vocab_entries` comes from the
+    /// dispatcher's mirror (authoritative — split-local counts would
+    /// double-count keys shared between splits).
+    pub stats: RunStats,
+    pub workers: usize,
+    pub wallclock: Duration,
+    /// Recovery actions performed (0 on a clean run).
+    pub retries: u64,
+    /// Failure events observed (0 on a clean run).
+    pub faults: u64,
+    /// High-water mark of splits concurrently in flight — bounded by
+    /// [`ServiceConfig::window`].
+    pub max_inflight: usize,
+    pub per_worker: Vec<WorkerStats>,
+}
+
+/// A process-unique job id: worker-side state is keyed by it, so
+/// concurrent jobs from one dispatcher (or several dispatchers that
+/// happen to share a worker pool) never collide.
+fn next_job_id() -> u64 {
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let c = COUNTER.fetch_add(1, Ordering::Relaxed);
+    ((std::process::id() as u64) << 32) ^ c
+}
+
+/// Run `job` over `raw` against the `addrs` worker pool, one fused
+/// single-pass scan per split, with the default [`ServiceConfig`].
+pub fn run_service(
+    addrs: &[String],
+    job: &Job,
+    raw: &[u8],
+    splits: &[Range<usize>],
+) -> Result<ServiceRun> {
+    run_service_cfg(addrs, job, raw, splits, &ServiceConfig::default())
+}
+
+/// Run `job` over `raw` against the `addrs` worker pool.
+///
+/// `splits` are byte ranges of `raw` on row boundaries (see
+/// [`crate::net::cluster::shard_rows`]); their order defines the
+/// global vocabulary order and the output row order, both bit-identical
+/// to a single sequential scan over `raw`.
+pub fn run_service_cfg(
+    addrs: &[String],
+    job: &Job,
+    raw: &[u8],
+    splits: &[Range<usize>],
+    cfg: &ServiceConfig,
+) -> Result<ServiceRun> {
+    let binary = matches!(job.format, crate::net::stream::WireFormat::Binary);
+    let expected: Vec<u64> = splits
+        .iter()
+        .map(|s| crate::net::cluster::expected_rows(&raw[s.clone()], job.schema, binary))
+        .collect();
+    scheduler::run(addrs, job, raw, splits, &expected, cfg, next_job_id())
+}
+
+/// Spawn `n` loopback workers, run a service job against them (one
+/// split per worker by default), and shut the pool down.
+pub fn run_service_loopback(
+    n: usize,
+    job: &Job,
+    raw: &[u8],
+    cfg: &ServiceConfig,
+) -> Result<ServiceRun> {
+    let binary = matches!(job.format, crate::net::stream::WireFormat::Binary);
+    let splits = crate::net::cluster::shard_rows(raw, job.schema, binary, n.max(1));
+    let mut addrs = Vec::new();
+    let mut shutdowns = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n.max(1) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(listener.local_addr()?.to_string());
+        let shutdown = crate::net::worker::ShutdownHandle::new(&listener)?;
+        shutdowns.push(shutdown.clone());
+        handles.push(std::thread::spawn(move || {
+            crate::net::worker::serve_until(
+                &listener,
+                &shutdown,
+                &crate::net::worker::WorkerOptions::default(),
+            )
+        }));
+    }
+    let run = run_service_cfg(&addrs, job, raw, &splits, cfg);
+    for s in &shutdowns {
+        s.shutdown();
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    }
+    run
+}

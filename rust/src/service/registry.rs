@@ -1,0 +1,213 @@
+//! Dispatcher-side worker registry: one [`Link`] per configured
+//! worker, tracking join state, the split currently streaming on it,
+//! and the reader thread that turns its session frames into events.
+//!
+//! Sessions carry a *generation* number that increments on every
+//! successful (re)join; events stamped with a stale generation are
+//! dropped by the scheduler, so a dying session's last gasps can never
+//! be confused with its replacement's traffic.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::Sender;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::net::protocol::{self, NetError, ServiceHello, ServiceOpen, SplitDone, Tag, VocabDelta};
+use crate::net::{JobClock, NetConfig};
+
+/// An event from one worker's reader thread, stamped with the session
+/// generation it was read under.
+pub(crate) enum Ev {
+    Delta { w: usize, gen: u64, delta: VocabDelta },
+    Rows { w: usize, gen: u64, payload: Vec<u8> },
+    Done { w: usize, gen: u64, done: SplitDone },
+    /// The session ended: EOF, I/O error, worker `ErrorReply`, or an
+    /// unexpected frame. Always the reader thread's last event.
+    Down { w: usize, gen: u64, what: String },
+}
+
+/// The split currently streaming on (or owed by) a worker.
+pub(crate) struct InFlight {
+    pub seq: u64,
+    /// Ownership epoch the split was dispatched under. A completion
+    /// from a stale epoch is requeued, not accepted: its key batches
+    /// were routed by the old owner table, so a column's new owner may
+    /// never have seen them.
+    pub epoch: u32,
+    /// Liveness backstop for a worker that keeps its socket open but
+    /// stops making progress (dispatcher-side reads are unbounded once
+    /// joined). Armed after the split is fully streamed; a worker that
+    /// blows it has its session torn down and rejoined.
+    pub deadline: Option<Instant>,
+}
+
+/// Dispatcher-side state for one configured worker.
+pub(crate) struct Link {
+    pub addr: String,
+    pub id: u16,
+    /// Write half of the live dispatch session (`None` when down).
+    pub writer: Option<BufWriter<TcpStream>>,
+    /// Socket handle kept for teardown: shutting it down unblocks the
+    /// reader thread of a wedged session.
+    pub sock: Option<TcpStream>,
+    pub reader: Option<JoinHandle<()>>,
+    /// Session generation; bumped on every successful (re)join.
+    pub gen: u64,
+    /// Permanently removed from the rotation (process dead or fatal).
+    pub struck: bool,
+    pub current: Option<InFlight>,
+    /// Accepted split completions + merged stats for the run report.
+    pub splits_done: u64,
+    pub stats: protocol::RunStats,
+}
+
+impl Link {
+    pub(crate) fn new(addr: String, id: u16) -> Link {
+        Link {
+            addr,
+            id,
+            writer: None,
+            sock: None,
+            reader: None,
+            gen: 0,
+            struck: false,
+            current: None,
+            splits_done: 0,
+            stats: protocol::RunStats::default(),
+        }
+    }
+
+    pub(crate) fn live(&self) -> bool {
+        !self.struck && self.writer.is_some()
+    }
+
+    /// Tear the session state down (writer, socket, reader thread).
+    /// Safe to call on an already-down link.
+    pub(crate) fn close(&mut self) {
+        if let Some(mut w) = self.writer.take() {
+            let _ = w.flush();
+        }
+        if let Some(sock) = self.sock.take() {
+            let _ = sock.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// How one join attempt failed — the scheduler's retry policy keys off
+/// this, mirroring the old cluster rules: a refused connect strikes
+/// the worker immediately (process dead), a worker `ErrorReply` to the
+/// hello is fatal for the job (bad spec — retrying elsewhere hits the
+/// same compile error on the same spec only when every worker agrees,
+/// but *this* worker is done), anything else is retryable.
+pub(crate) enum JoinError {
+    Refused(anyhow::Error),
+    Fatal(anyhow::Error),
+    Retryable(anyhow::Error),
+}
+
+impl JoinError {
+    pub(crate) fn into_inner(self) -> anyhow::Error {
+        match self {
+            JoinError::Refused(e) | JoinError::Fatal(e) | JoinError::Retryable(e) => e,
+        }
+    }
+}
+
+/// One join attempt: connect, send the dispatch hello, await the ack,
+/// then hand the read half to a fresh reader thread. On success the
+/// link is live under a new generation.
+pub(crate) fn join(
+    link: &mut Link,
+    hello: &ServiceHello,
+    cfg: &NetConfig,
+    clock: &JobClock,
+    tx: &Sender<Ev>,
+) -> std::result::Result<(), JoinError> {
+    link.close();
+    let stream = match crate::net::connect(&link.addr, cfg.io_timeout, clock) {
+        Ok(s) => s,
+        Err(e) => {
+            return Err(if matches!(NetError::of(&e), Some(NetError::PeerGone { .. })) {
+                JoinError::Refused(e)
+            } else {
+                JoinError::Retryable(e)
+            })
+        }
+    };
+    let attempt = (|| -> crate::Result<(BufWriter<TcpStream>, BufReader<TcpStream>, TcpStream)> {
+        let sock = stream.try_clone()?;
+        let mut writer = BufWriter::with_capacity(1 << 20, stream.try_clone()?);
+        let mut reader = BufReader::with_capacity(1 << 20, stream);
+        protocol::write_frame(
+            &mut writer,
+            Tag::ServiceHello,
+            &ServiceOpen::Dispatch(hello.clone()).encode(),
+        )?;
+        writer.flush()?;
+        let (tag, payload) = protocol::read_frame(&mut reader)?;
+        match tag {
+            Tag::ServiceHello => match ServiceOpen::decode(&payload)? {
+                ServiceOpen::Ack { .. } => Ok((writer, reader, sock)),
+                other => anyhow::bail!(NetError::Malformed {
+                    what: format!("dispatch hello expected an ack, got {other:?}"),
+                }),
+            },
+            Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
+                worker: link.addr.clone(),
+                reason: String::from_utf8_lossy(&payload).into_owned(),
+            }),
+            other => anyhow::bail!(NetError::Malformed {
+                what: format!("dispatch hello expected an ack frame, got {other:?}"),
+            }),
+        }
+    })();
+    let (writer, mut reader, sock) = attempt.map_err(|e| {
+        if matches!(NetError::of(&e), Some(NetError::JobFailed { .. })) {
+            JoinError::Fatal(e)
+        } else {
+            JoinError::Retryable(e)
+        }
+    })?;
+    // Joined: the session may idle while other workers stream (or a
+    // worker folds keys), so reads are unbounded from here on — split
+    // deadlines and the job clock provide liveness, a dead peer is an
+    // EOF/reset, not a timeout.
+    let _ = sock.set_read_timeout(None);
+    link.gen += 1;
+    let gen = link.gen;
+    let w = link.id as usize;
+    let tx = tx.clone();
+    link.reader = Some(std::thread::spawn(move || reader_loop(&mut reader, w, gen, &tx)));
+    link.writer = Some(writer);
+    link.sock = Some(sock);
+    link.current = None;
+    Ok(())
+}
+
+fn reader_loop(reader: &mut BufReader<TcpStream>, w: usize, gen: u64, tx: &Sender<Ev>) {
+    loop {
+        let down = |what: String| Ev::Down { w, gen, what };
+        let ev = match protocol::read_frame(reader) {
+            Ok((Tag::VocabDelta, p)) => match VocabDelta::decode(&p) {
+                Ok(delta) => Ev::Delta { w, gen, delta },
+                Err(e) => down(format!("bad vocab delta: {e:#}")),
+            },
+            Ok((Tag::ResultChunk, p)) => Ev::Rows { w, gen, payload: p },
+            Ok((Tag::SplitDone, p)) => match SplitDone::decode(&p) {
+                Ok(done) => Ev::Done { w, gen, done },
+                Err(e) => down(format!("bad split status: {e:#}")),
+            },
+            Ok((Tag::ErrorReply, p)) => down(String::from_utf8_lossy(&p).into_owned()),
+            Ok((other, _)) => down(format!("unexpected frame {other:?} from worker")),
+            Err(e) => down(format!("{e:#}")),
+        };
+        let is_down = matches!(ev, Ev::Down { .. });
+        if tx.send(ev).is_err() || is_down {
+            return; // scheduler gone, or the session is over
+        }
+    }
+}

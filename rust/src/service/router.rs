@@ -1,0 +1,67 @@
+//! Shard router: deterministic column → owning-worker assignment.
+//!
+//! Each vocabulary column is owned by exactly one live worker, chosen
+//! by hashing the column id over the sorted live set. Dispatcher and
+//! workers never negotiate — both sides can recompute the table from
+//! `(column, live workers)` alone, and the dispatcher stamps the table
+//! it used onto every split assignment so an epoch change mid-job can
+//! never leave the two sides disagreeing about who folds a column.
+
+use crate::ops::artifact::fnv1a;
+
+/// Assign every sparse column an owner from the live set. `live` must
+/// be sorted (callers keep worker ids ordered) so the table is a pure
+/// function of membership, not of join order.
+pub(crate) fn assign_owners(num_sparse: usize, live: &[u16]) -> Vec<u16> {
+    debug_assert!(!live.is_empty(), "owner assignment needs at least one live worker");
+    debug_assert!(live.windows(2).all(|w| w[0] < w[1]), "live set must be sorted");
+    (0..num_sparse)
+        .map(|c| live[(fnv1a(&(c as u64).to_le_bytes()) % live.len() as u64) as usize])
+        .collect()
+}
+
+/// Columns whose owner changes between two tables — the set that needs
+/// an [`crate::net::protocol::OwnerSeed`] and a replay sweep after a
+/// worker is struck.
+pub(crate) fn moved_columns(old: &[u16], new: &[u16]) -> Vec<usize> {
+    old.iter().zip(new).enumerate().filter(|(_, (a, b))| a != b).map(|(c, _)| c).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_deterministic_and_total() {
+        let a = assign_owners(26, &[0, 1, 2, 3]);
+        let b = assign_owners(26, &[0, 1, 2, 3]);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 26);
+        assert!(a.iter().all(|w| *w < 4));
+        // with 26 columns over 4 workers, every worker should own some
+        for w in 0..4u16 {
+            assert!(a.contains(&w), "worker {w} owns no columns");
+        }
+    }
+
+    #[test]
+    fn single_worker_owns_everything() {
+        assert!(assign_owners(26, &[3]).iter().all(|w| *w == 3));
+    }
+
+    #[test]
+    fn moved_columns_tracks_ownership_changes() {
+        let old = assign_owners(26, &[0, 1, 2, 3]);
+        let new = assign_owners(26, &[0, 2, 3]);
+        let moved = moved_columns(&old, &new);
+        // every column that left worker 1 must be in the moved set
+        for (c, &w) in old.iter().enumerate() {
+            if w == 1 {
+                assert!(moved.contains(&c), "column {c} left worker 1 but is not marked moved");
+            }
+        }
+        for &c in &moved {
+            assert_ne!(old[c], new[c]);
+        }
+    }
+}

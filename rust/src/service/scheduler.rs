@@ -1,0 +1,598 @@
+//! The dispatcher's event loop: a work queue of splits, a registry of
+//! worker links, and a vocabulary mirror, advanced by session events.
+//!
+//! Scheduling rules:
+//!
+//! * at most one split in flight per worker — a split parked behind a
+//!   higher sequence number on the same session could deadlock the
+//!   owners waiting to fold the lower one, so the FIFO session never
+//!   holds more than one;
+//! * the lowest queued sequence number dispatches first, to the next
+//!   idle worker in rotation (a retried split starts the rotation one
+//!   step later, landing on a *different* worker);
+//! * a global window bounds splits in flight across the cluster — the
+//!   per-job backpressure knob.
+//!
+//! Failure handling mirrors the old two-pass cluster: every failure
+//! event counts a fault, every recovery action a retry; a worker whose
+//! session dies is rejoined (its sequencer state survives worker-side),
+//! and one that stays gone is struck — ownership of its columns moves
+//! to survivors, seeded with the mirror's contiguously-folded prefix,
+//! and completed splits at or above the fold point replay so the new
+//! owners see every key batch they missed. Replayed work re-derives
+//! identical indices (the determinism rule), so duplicate deltas and
+//! rows are verified and dropped, never double-counted.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::ops::Range;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::data::row::ProcessedRow;
+use crate::Result;
+
+use crate::net::protocol::{
+    self, Job, NetError, RunStats, ServiceHello, SplitAssign, SplitDone, SplitStatus, Tag,
+};
+use crate::net::JobClock;
+
+use super::merge::Mirror;
+use super::registry::{join, Ev, InFlight, JoinError, Link};
+use super::router::{assign_owners, moved_columns};
+use super::{ServiceConfig, ServiceRun, WorkerStats};
+
+pub(crate) fn run(
+    addrs: &[String],
+    job: &Job,
+    raw: &[u8],
+    splits: &[Range<usize>],
+    expected: &[u64],
+    cfg: &ServiceConfig,
+    job_id: u64,
+) -> Result<ServiceRun> {
+    let start = Instant::now();
+    anyhow::ensure!(!addrs.is_empty(), "service needs at least one worker");
+    anyhow::ensure!(splits.len() == expected.len(), "one expected-row count per split");
+    let mut sched = Sched::new(addrs, job, raw, splits, expected, cfg, job_id);
+    let result = sched.run();
+    sched.teardown(result.is_ok());
+    let processed = result?;
+    let mut stats = RunStats::default();
+    let mut per_worker = Vec::with_capacity(sched.links.len());
+    for link in &sched.links {
+        stats.merge(&link.stats);
+        per_worker.push(WorkerStats {
+            addr: link.addr.clone(),
+            splits: link.splits_done,
+            stats: link.stats.clone(),
+        });
+    }
+    stats.vocab_entries = sched.mirror.entries();
+    Ok(ServiceRun {
+        processed,
+        stats,
+        workers: addrs.len(),
+        wallclock: start.elapsed(),
+        retries: sched.retries,
+        faults: sched.faults,
+        max_inflight: sched.max_inflight,
+        per_worker,
+    })
+}
+
+struct Sched<'a> {
+    job: &'a Job,
+    raw: &'a [u8],
+    splits: &'a [Range<usize>],
+    expected: &'a [u64],
+    cfg: &'a ServiceConfig,
+    clock: JobClock,
+    job_id: u64,
+    /// Sparse columns that build a vocabulary — the only ones that get
+    /// owners, seeds, and deltas. Empty when the spec does not compile
+    /// (the join's `ErrorReply` then carries the real diagnosis).
+    gen_cols: Vec<usize>,
+    links: Vec<Link>,
+    tx: Sender<Ev>,
+    rx: Receiver<Ev>,
+    queue: BTreeSet<u64>,
+    /// Failed attempts per split *this epoch*; an ownership change
+    /// resets the budget (those failures blame the topology, not the
+    /// split).
+    failures: Vec<u32>,
+    completed: Vec<Option<Vec<ProcessedRow>>>,
+    done_count: usize,
+    /// Per-worker row buffer for the split it is streaming back.
+    partial: Vec<Vec<ProcessedRow>>,
+    mirror: Mirror,
+    epoch: u32,
+    owners: Vec<u16>,
+    window: usize,
+    retries: u64,
+    faults: u64,
+    inflight: usize,
+    max_inflight: usize,
+}
+
+impl<'a> Sched<'a> {
+    fn new(
+        addrs: &'a [String],
+        job: &'a Job,
+        raw: &'a [u8],
+        splits: &'a [Range<usize>],
+        expected: &'a [u64],
+        cfg: &'a ServiceConfig,
+        job_id: u64,
+    ) -> Sched<'a> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let gen_cols = job
+            .spec
+            .compile(job.schema)
+            .map(|p| {
+                p.sparse.iter().enumerate().filter(|(_, s)| s.gen_vocab).map(|(c, _)| c).collect()
+            })
+            .unwrap_or_default();
+        Sched {
+            job,
+            raw,
+            splits,
+            expected,
+            cfg,
+            clock: cfg.net.clock(),
+            job_id,
+            gen_cols,
+            links: addrs
+                .iter()
+                .enumerate()
+                .map(|(i, a)| Link::new(a.clone(), i as u16))
+                .collect(),
+            tx,
+            rx,
+            queue: (0..splits.len() as u64).collect(),
+            failures: vec![0; splits.len()],
+            completed: vec![None; splits.len()],
+            done_count: 0,
+            partial: vec![Vec::new(); addrs.len()],
+            mirror: Mirror::new(job.schema.num_sparse),
+            epoch: 0,
+            owners: Vec::new(),
+            window: 0,
+            retries: 0,
+            faults: 0,
+            inflight: 0,
+            max_inflight: 0,
+        }
+    }
+
+    fn hello(&self) -> ServiceHello {
+        ServiceHello {
+            job_id: self.job_id,
+            worker_id: 0, // per-link field, filled at the join site
+            epoch: self.epoch,
+            owners: self.owners.clone(),
+            peers: self.links.iter().map(|l| l.addr.clone()).collect(),
+            decode_threads: self.cfg.decode_threads,
+            job: self.job.clone(),
+        }
+    }
+
+    fn live_ids(&self) -> Vec<u16> {
+        self.links.iter().filter(|l| l.live()).map(|l| l.id).collect()
+    }
+
+    fn run(&mut self) -> Result<crate::data::row::ProcessedColumns> {
+        if !self.splits.is_empty() {
+            self.join_all()?;
+            let live = self.live_ids();
+            self.owners = assign_owners(self.job.schema.num_sparse, &live);
+            self.window = match self.cfg.window {
+                0 => live.len(),
+                w => w,
+            };
+            while self.done_count < self.splits.len() {
+                self.clock.check("service scheduling")?;
+                self.pump()?;
+                self.sweep_deadlines()?;
+                if self.done_count == self.splits.len() {
+                    break;
+                }
+                match self.rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(ev) => self.handle(ev)?,
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => unreachable!("scheduler holds a sender"),
+                }
+            }
+        }
+        let mut out = crate::data::row::ProcessedColumns::with_schema(self.job.schema);
+        for rows in &self.completed {
+            for row in rows.as_deref().unwrap_or_default() {
+                out.push_row(row);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Join every configured worker, sequentially, each with its own
+    /// retry budget. A refused connect strikes the worker outright; a
+    /// worker-side `ErrorReply` to the hello (the spec failed its
+    /// compile) fails the job with that worker's verbatim reason.
+    fn join_all(&mut self) -> Result<()> {
+        let mut refused: Option<anyhow::Error> = None;
+        let mut exhausted: Option<anyhow::Error> = None;
+        for w in 0..self.links.len() {
+            let mut hello = self.hello();
+            hello.worker_id = w as u16;
+            let mut attempt = 0u32;
+            loop {
+                self.clock.check("joining workers")?;
+                match join(&mut self.links[w], &hello, &self.cfg.net, &self.clock, &self.tx) {
+                    Ok(()) => break,
+                    Err(JoinError::Fatal(e)) => return Err(e),
+                    Err(JoinError::Refused(e)) => {
+                        self.links[w].struck = true;
+                        refused = Some(e);
+                        break;
+                    }
+                    Err(JoinError::Retryable(e)) => {
+                        self.faults += 1;
+                        if attempt >= self.cfg.net.retries {
+                            self.links[w].struck = true;
+                            exhausted = Some(e);
+                            break;
+                        }
+                        attempt += 1;
+                        self.retries += 1;
+                        self.clock.sleep(self.cfg.net.backoff_for(attempt));
+                    }
+                }
+            }
+        }
+        if self.live_ids().is_empty() {
+            return Err(match (exhausted, refused) {
+                (Some(e), _) => e.context("worker join: retries exhausted"),
+                (None, Some(e)) => e.context(anyhow::Error::new(NetError::PeerGone {
+                    what: "no surviving workers for the service job".into(),
+                })),
+                (None, None) => anyhow::Error::new(NetError::PeerGone {
+                    what: "no surviving workers for the service job".into(),
+                }),
+            });
+        }
+        Ok(())
+    }
+
+    /// Assign queued splits (lowest seq first) to idle live workers,
+    /// up to the window.
+    fn pump(&mut self) -> Result<()> {
+        loop {
+            if self.inflight >= self.window.max(1) {
+                return Ok(());
+            }
+            let Some(&seq) = self.queue.iter().next() else { return Ok(()) };
+            let n = self.links.len();
+            let start = (seq as usize + self.failures[seq as usize] as usize) % n;
+            let Some(w) = (0..n)
+                .map(|k| (start + k) % n)
+                .find(|&w| self.links[w].live() && self.links[w].current.is_none())
+            else {
+                return Ok(());
+            };
+            self.queue.remove(&seq);
+            self.dispatch(w, seq)?;
+        }
+    }
+
+    /// Stream one split to one worker: assignment metadata, then the
+    /// raw bytes as fused chunks (the worker decodes as they arrive).
+    fn dispatch(&mut self, w: usize, seq: u64) -> Result<()> {
+        self.links[w].current = Some(InFlight { seq, epoch: self.epoch, deadline: None });
+        self.partial[w].clear();
+        self.inflight += 1;
+        self.max_inflight = self.max_inflight.max(self.inflight);
+        let assign = SplitAssign {
+            seq,
+            epoch: self.epoch,
+            expected_rows: self.expected[seq as usize],
+            owners: self.owners.clone(),
+        };
+        let bytes = &self.raw[self.splits[seq as usize].clone()];
+        let chunk = self.cfg.chunk_bytes.max(1);
+        let sent = (|| -> Result<()> {
+            let writer = self.links[w].writer.as_mut().expect("live worker has a writer");
+            protocol::write_frame(writer, Tag::SplitAssign, &assign.encode())?;
+            for part in bytes.chunks(chunk) {
+                self.clock.check("streaming a split")?;
+                protocol::write_frame(writer, Tag::FusedChunk, part)?;
+            }
+            protocol::write_frame(writer, Tag::FusedEnd, &[])?;
+            writer.flush()?;
+            Ok(())
+        })();
+        match sent {
+            Ok(()) => {
+                // Armed only once the split is fully streamed: from here
+                // the worker owes results within 2x the I/O timeout
+                // (decode overlaps the stream; what remains is the tail
+                // of the pass and the key exchange, each of which is
+                // itself bounded by the I/O timeout).
+                if let Some(inf) = self.links[w].current.as_mut() {
+                    inf.deadline = self.cfg.net.io_timeout.map(|io| Instant::now() + 2 * io);
+                }
+                Ok(())
+            }
+            Err(e) => {
+                let gen = self.links[w].gen;
+                self.down(w, gen, format!("{e:#}"))
+            }
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) -> Result<()> {
+        match ev {
+            Ev::Delta { w, gen, delta } => {
+                if self.links[w].gen == gen {
+                    self.mirror.fold(delta)?;
+                }
+                Ok(())
+            }
+            Ev::Rows { w, gen, payload } => {
+                if self.links[w].gen != gen {
+                    return Ok(());
+                }
+                let (seq, rows) = protocol::unpack_service_rows(&payload, self.job.schema)?;
+                if self.links[w].current.as_ref().is_some_and(|inf| inf.seq == seq) {
+                    self.partial[w].extend(rows);
+                }
+                Ok(())
+            }
+            Ev::Done { w, gen, done } => {
+                if self.links[w].gen == gen {
+                    self.done(w, done)?;
+                }
+                Ok(())
+            }
+            Ev::Down { w, gen, what } => self.down(w, gen, what),
+        }
+    }
+
+    fn done(&mut self, w: usize, done: SplitDone) -> Result<()> {
+        let seq = done.seq;
+        if !self.links[w].current.as_ref().is_some_and(|inf| inf.seq == seq) {
+            return Ok(()); // not the split this worker owes — ignore
+        }
+        let inf = self.links[w].current.take().expect("checked above");
+        self.inflight -= 1;
+        let rows = std::mem::take(&mut self.partial[w]);
+        if self.completed[seq as usize].is_some() {
+            return Ok(()); // a re-dispatch raced it; first completion won
+        }
+        if inf.epoch != self.epoch {
+            // Dispatched under a stale owner table: its key batches were
+            // routed to the *old* owners, so a moved column's new owner
+            // never folded them — accepting this completion would stall
+            // the new owner's sequencer forever. Redo the split under
+            // the current table (its deltas, if any, verified as
+            // duplicates against the mirror; the redo re-derives
+            // identical indices).
+            self.queue.insert(seq);
+            return Ok(());
+        }
+        match done.status {
+            SplitStatus::Ok(stats) => {
+                let accounted = stats.rows + stats.rows_skipped + stats.rows_quarantined;
+                let complete = rows.len() as u64 == stats.rows
+                    && accounted == self.expected[seq as usize]
+                    && self.gen_cols.iter().all(|&c| self.mirror.has(c, seq));
+                if !complete {
+                    self.faults += 1;
+                    let what = format!(
+                        "worker {} returned {} rows (reported {} emitted + {} skipped + {} \
+                         quarantined) of a {}-row split — frames were lost",
+                        self.links[w].addr,
+                        rows.len(),
+                        stats.rows,
+                        stats.rows_skipped,
+                        stats.rows_quarantined,
+                        self.expected[seq as usize]
+                    );
+                    self.fail_split(seq, anyhow::Error::new(NetError::Malformed { what }))?;
+                    // The retry must not ride the same wire: a session
+                    // that lost frames once is suspect, so rejoin before
+                    // giving this worker more work.
+                    let gen = self.links[w].gen;
+                    return self.down(w, gen, "session lost result frames".into());
+                }
+                self.links[w].splits_done += 1;
+                self.links[w].stats.merge(&stats);
+                self.completed[seq as usize] = Some(rows);
+                self.done_count += 1;
+                Ok(())
+            }
+            SplitStatus::Failed(reason) => {
+                self.faults += 1;
+                let err = anyhow::Error::new(NetError::JobFailed {
+                    worker: self.links[w].addr.clone(),
+                    reason: reason.clone(),
+                });
+                self.fail_split(seq, err)?;
+                // Same posture as a lost-frame split: the fault may live
+                // in either half of this session's wire, so the retry
+                // goes out on a fresh one.
+                let gen = self.links[w].gen;
+                self.down(w, gen, format!("split {seq} failed on the worker: {reason}"))
+            }
+        }
+    }
+
+    /// Count a failed attempt against the split's per-epoch budget and
+    /// requeue it, or fail the job when the budget is spent.
+    fn fail_split(&mut self, seq: u64, err: anyhow::Error) -> Result<()> {
+        self.failures[seq as usize] += 1;
+        if self.failures[seq as usize] > self.cfg.net.retries {
+            if matches!(NetError::of(&err), Some(NetError::JobFailed { .. })) {
+                return Err(err);
+            }
+            return Err(err.context(format!("split {seq}: retries exhausted")));
+        }
+        self.retries += 1;
+        self.queue.insert(seq);
+        Ok(())
+    }
+
+    /// A worker's session died (reader event or send-side error).
+    /// Requeue whatever it owed, then rejoin it — or strike it and
+    /// move its columns if it stays gone.
+    fn down(&mut self, w: usize, gen: u64, what: String) -> Result<()> {
+        if self.links[w].gen != gen || self.links[w].struck {
+            return Ok(()); // stale session noise
+        }
+        if self.done_count == self.splits.len() {
+            return Ok(()); // job already complete; teardown will close
+        }
+        self.faults += 1;
+        self.links[w].gen += 1; // invalidate anything else this session says
+        self.links[w].close();
+        self.partial[w].clear();
+        if let Some(inf) = self.links[w].current.take() {
+            self.inflight -= 1;
+            if self.completed[inf.seq as usize].is_none() {
+                let err = anyhow::Error::new(NetError::PeerGone {
+                    what: format!("worker {} session died: {what}", self.links[w].addr),
+                });
+                self.fail_split(inf.seq, err)?;
+            }
+        }
+        self.rejoin(w)
+    }
+
+    fn rejoin(&mut self, w: usize) -> Result<()> {
+        let mut hello = self.hello();
+        hello.worker_id = w as u16;
+        for attempt in 0..=self.cfg.net.retries {
+            self.clock.check("rejoining a worker")?;
+            if attempt > 0 {
+                self.clock.sleep(self.cfg.net.backoff_for(attempt));
+            }
+            match join(&mut self.links[w], &hello, &self.cfg.net, &self.clock, &self.tx) {
+                Ok(()) => {
+                    self.retries += 1;
+                    return Ok(());
+                }
+                Err(JoinError::Refused(_) | JoinError::Fatal(_)) => break,
+                Err(JoinError::Retryable(_)) => {
+                    self.faults += 1;
+                    self.retries += 1;
+                }
+            }
+        }
+        self.strike(w)
+    }
+
+    /// Remove a worker from the rotation for good and transfer its
+    /// column ownership: bump the epoch, reassign owners over the
+    /// survivors, seed each moved column's new owner with the mirror's
+    /// folded prefix, and replay completed splits at or above the
+    /// lowest moved fold point so new owners see every key batch they
+    /// missed.
+    fn strike(&mut self, w: usize) -> Result<()> {
+        self.links[w].struck = true;
+        self.links[w].close();
+        let live = self.live_ids();
+        if live.is_empty() {
+            anyhow::bail!(NetError::PeerGone {
+                what: "no surviving workers for the service job".into(),
+            });
+        }
+        let new_owners = assign_owners(self.job.schema.num_sparse, &live);
+        let moved = moved_columns(&self.owners, &new_owners);
+        self.owners = new_owners;
+        let moved_gen: Vec<usize> =
+            moved.into_iter().filter(|c| self.gen_cols.contains(c)).collect();
+        if moved_gen.is_empty() {
+            // No vocabulary column changed hands, so the old routing
+            // table is still valid — in-flight splits stay acceptable
+            // and the epoch (which stamps them) need not move.
+            return Ok(());
+        }
+        self.epoch += 1;
+        self.failures.iter_mut().for_each(|f| *f = 0);
+        let mut min_watermark = u64::MAX;
+        for &col in &moved_gen {
+            let (next, keys) = self.mirror.seed_for(col);
+            min_watermark = min_watermark.min(next);
+            loop {
+                let owner = self.owners[col] as usize;
+                let seed =
+                    protocol::OwnerSeed { col: col as u16, next_seq: next, keys: keys.clone() };
+                let sent = (|| -> Result<()> {
+                    let writer =
+                        self.links[owner].writer.as_mut().expect("live owner has a writer");
+                    protocol::write_frame(writer, Tag::OwnerSeed, &seed.encode())?;
+                    writer.flush()?;
+                    Ok(())
+                })();
+                match sent {
+                    Ok(()) => break,
+                    Err(e) => {
+                        let gen = self.links[owner].gen;
+                        self.down(owner, gen, format!("seeding column {col}: {e:#}"))?;
+                        if self.owners[col] as usize != owner {
+                            break; // re-struck recursively; the nested strike re-seeded it
+                        }
+                        // Same owner on a fresh session (the rejoin
+                        // succeeded): the seed never arrived — resend.
+                    }
+                }
+            }
+        }
+        // Replay completed splits the new owners never folded.
+        for seq in min_watermark..self.splits.len() as u64 {
+            if self.completed[seq as usize].take().is_some() {
+                self.done_count -= 1;
+                self.queue.insert(seq);
+            }
+        }
+        Ok(())
+    }
+
+    /// Liveness backstop for a worker that keeps its socket open but
+    /// stops progressing (joined sessions read with no timeout): a
+    /// worker that blows its split deadline has the session torn down,
+    /// which requeues the split and rejoins — or strikes — the worker.
+    fn sweep_deadlines(&mut self) -> Result<()> {
+        let now = Instant::now();
+        for w in 0..self.links.len() {
+            let expired = self.links[w]
+                .current
+                .as_ref()
+                .and_then(|inf| inf.deadline)
+                .is_some_and(|d| now >= d);
+            if !expired {
+                continue;
+            }
+            let seq = self.links[w].current.as_ref().expect("checked above").seq;
+            let gen = self.links[w].gen;
+            self.down(w, gen, format!("split {seq} passed its dispatch deadline"))?;
+        }
+        Ok(())
+    }
+
+    /// Close every link; on a clean finish, send the end-of-job marker
+    /// first so workers deregister their job state.
+    fn teardown(&mut self, clean: bool) {
+        for link in &mut self.links {
+            if clean && link.live() {
+                if let Some(writer) = link.writer.as_mut() {
+                    let _ = protocol::write_frame(
+                        writer,
+                        Tag::SplitDone,
+                        &SplitDone::end_marker().encode(),
+                    );
+                    let _ = writer.flush();
+                }
+            }
+            link.close();
+        }
+    }
+}

@@ -1,0 +1,584 @@
+//! Worker-side service state: per-job column sequencers and the two
+//! session handlers ([`dispatch_session`] for the dispatcher link,
+//! [`key_session`] for peer key-forwarding links).
+//!
+//! The registry is process-global, keyed by `(job_id, worker_id)`, so
+//! concurrent jobs multiplex one worker pool and a key session that
+//! races the dispatch hello can wait briefly for the job to appear.
+//! State survives an abnormal dispatch-session end on purpose — a
+//! dispatcher that reconnects after a transient fault finds its column
+//! sequencers (and therefore its index assignments) intact. Only the
+//! clean end-of-job marker deregisters; a job whose dispatcher vanishes
+//! for good leaks its (small) vocabulary state until process exit —
+//! the accepted cost of crash-safe rejoin.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::data::row::ProcessedRow;
+use crate::ops::{HashVocab, Vocab};
+use crate::pipeline::{ChunkState, VocabSlot};
+use crate::Result;
+
+use crate::net::protocol::{
+    self, IndexBatch, KeyBatch, KeyHello, NetError, RunStats, ServiceHello, ServiceOpen,
+    SplitAssign, SplitDone, SplitStatus, Tag, VocabDelta,
+};
+use crate::net::worker::WorkerOptions;
+use crate::net::JobClock;
+
+/// Rows per service-path ResultChunk frame.
+const RESULT_ROWS_PER_FRAME: usize = 8192;
+
+/// One column's global index sequencer on its owning worker. Batches
+/// carry the split sequence number; `submit` blocks until every lower
+/// seq has been folded, so indices depend only on `(seq, in-split
+/// appearance)` — the determinism rule that makes the disaggregated
+/// run bit-identical to the single-node fused scan.
+pub(crate) struct ColSeq {
+    m: Mutex<SeqState>,
+    cv: Condvar,
+}
+
+struct SeqState {
+    vocab: HashVocab,
+    next_seq: u64,
+}
+
+impl ColSeq {
+    fn new() -> ColSeq {
+        ColSeq { m: Mutex::new(SeqState { vocab: HashVocab::new(), next_seq: 0 }), cv: Condvar::new() }
+    }
+
+    /// Fold one split's appearance-ordered keys, returning their global
+    /// indices. A batch below the fold point is a replay (re-dispatched
+    /// split): apply-only, and every key must already be present —
+    /// determinism guarantees the first fold saw the same keys.
+    pub(crate) fn submit(&self, seq: u64, keys: &[u32], wait: Duration) -> Result<Vec<u32>> {
+        let deadline = Instant::now() + wait;
+        let mut g = self.m.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if seq < g.next_seq {
+                return keys
+                    .iter()
+                    .map(|&k| {
+                        g.vocab.apply(k).ok_or_else(|| {
+                            anyhow::Error::new(NetError::Malformed {
+                                what: format!("replayed key batch (seq {seq}) has an unknown key"),
+                            })
+                        })
+                    })
+                    .collect();
+            }
+            if seq == g.next_seq {
+                let out = keys.iter().map(|&k| g.vocab.observe_apply(k)).collect();
+                g.next_seq += 1;
+                self.cv.notify_all();
+                return Ok(out);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                anyhow::bail!(NetError::Timeout {
+                    what: format!(
+                        "column sequencer stalled: waiting for split {} to fold split {seq}",
+                        g.next_seq
+                    ),
+                });
+            }
+            let (g2, _) = self.cv.wait_timeout(g, left).unwrap_or_else(|e| e.into_inner());
+            g = g2;
+        }
+    }
+
+    /// Seed the fold after an ownership transfer: adopt the mirror's
+    /// contiguously-folded prefix if (and only if) it is ahead of the
+    /// local fold. Behind-or-equal seeds are ignored — the local state
+    /// already *is* that fold (determinism), possibly further along.
+    pub(crate) fn seed(&self, next_seq: u64, keys: &[u32]) {
+        let mut g = self.m.lock().unwrap_or_else(|e| e.into_inner());
+        if next_seq > g.next_seq {
+            let mut vocab = HashVocab::with_capacity(keys.len());
+            for &k in keys {
+                vocab.observe(k);
+            }
+            g.vocab = vocab;
+            g.next_seq = next_seq;
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Per-job worker state: the hello that created it plus the lazily-
+/// created column sequencers (only columns this worker owns get one).
+pub(crate) struct JobState {
+    seqs: Mutex<HashMap<u16, Arc<ColSeq>>>,
+}
+
+impl JobState {
+    pub(crate) fn seq(&self, col: u16) -> Arc<ColSeq> {
+        let mut g = self.seqs.lock().unwrap_or_else(|e| e.into_inner());
+        g.entry(col).or_insert_with(|| Arc::new(ColSeq::new())).clone()
+    }
+}
+
+type Registry = Mutex<HashMap<(u64, u16), Arc<JobState>>>;
+
+fn registry() -> &'static Registry {
+    static JOBS: OnceLock<Registry> = OnceLock::new();
+    JOBS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Get-or-create the job state — reuse on a dispatcher rejoin keeps
+/// the column sequencers (and their index assignments) intact.
+fn register(job_id: u64, worker_id: u16) -> Arc<JobState> {
+    let mut g = registry().lock().unwrap_or_else(|e| e.into_inner());
+    g.entry((job_id, worker_id))
+        .or_insert_with(|| Arc::new(JobState { seqs: Mutex::new(HashMap::new()) }))
+        .clone()
+}
+
+fn deregister(job_id: u64, worker_id: u16) {
+    let mut g = registry().lock().unwrap_or_else(|e| e.into_inner());
+    g.remove(&(job_id, worker_id));
+}
+
+/// Look a job up, polling briefly — a peer's key session can race the
+/// dispatch hello that registers the job.
+fn lookup_wait(job_id: u64, worker_id: u16, wait: Duration) -> Result<Arc<JobState>> {
+    let deadline = Instant::now() + wait;
+    loop {
+        {
+            let g = registry().lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(state) = g.get(&(job_id, worker_id)) {
+                return Ok(state.clone());
+            }
+        }
+        if Instant::now() >= deadline {
+            anyhow::bail!(NetError::Malformed {
+                what: format!("key session for unknown job {job_id:#x} on worker {worker_id}"),
+            });
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// An open key-forwarding connection to one column owner.
+struct KeyClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl KeyClient {
+    fn open(addr: &str, hello: KeyHello, io: Option<Duration>) -> Result<KeyClient> {
+        let stream = crate::net::connect(addr, io, &JobClock::unbounded())?;
+        let mut writer = BufWriter::with_capacity(1 << 16, stream.try_clone()?);
+        let mut reader = BufReader::with_capacity(1 << 16, stream);
+        protocol::write_frame(
+            &mut writer,
+            Tag::ServiceHello,
+            &ServiceOpen::Keys(hello).encode(),
+        )?;
+        writer.flush()?;
+        let (tag, payload) = protocol::read_frame(&mut reader)?;
+        match tag {
+            Tag::ServiceHello => match ServiceOpen::decode(&payload)? {
+                ServiceOpen::Ack { .. } => Ok(KeyClient { reader, writer }),
+                other => anyhow::bail!(NetError::Malformed {
+                    what: format!("key session expected an ack, got {other:?}"),
+                }),
+            },
+            Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
+                worker: addr.to_string(),
+                reason: String::from_utf8_lossy(&payload).into_owned(),
+            }),
+            other => anyhow::bail!(NetError::Malformed {
+                what: format!("key session expected an ack frame, got {other:?}"),
+            }),
+        }
+    }
+}
+
+/// The split currently streaming in on a dispatch session.
+struct ActiveSplit {
+    assign: SplitAssign,
+    sp: crate::net::StreamingPreprocessor,
+    rows: Vec<ProcessedRow>,
+    /// First error while feeding chunks; the rest of the split's frames
+    /// are drained so the session stays usable, then the failure is
+    /// reported in `SplitDone`.
+    failed: Option<String>,
+}
+
+/// Run a worker's dispatch session: accept split assignments, process
+/// each split single-pass fused with split-local vocabularies, resolve
+/// global indices (locally for owned columns, via key forwarding for
+/// remote ones), and stream deltas + rows + status back. Returns the
+/// aggregate stats across completed splits.
+pub(crate) fn dispatch_session<R, W>(
+    reader: &mut R,
+    writer: &mut W,
+    hello: ServiceHello,
+    opts: &WorkerOptions,
+) -> Result<RunStats>
+where
+    R: Read,
+    W: Write,
+{
+    // Worker-side planning: compile the spec before acking, so a bad
+    // job fails the join with an ErrorReply, not a mid-split surprise.
+    let programs = hello.job.spec.compile(hello.job.schema)?;
+    let threads = match hello.decode_threads {
+        0 => crate::decode::shard::default_threads(),
+        t => t as usize,
+    };
+    let decode = crate::pipeline::DecodeOptions { threads, swar: true, errors: hello.job.errors };
+    let state = register(hello.job_id, hello.worker_id);
+    protocol::write_frame(
+        writer,
+        Tag::ServiceHello,
+        &ServiceOpen::Ack { worker_id: hello.worker_id }.encode(),
+    )?;
+    writer.flush()?;
+
+    let io = opts.io_timeout.unwrap_or(Duration::from_secs(30));
+    let route = ChunkState::with_programs(programs);
+    let mut clients: HashMap<u16, KeyClient> = HashMap::new();
+    let mut current: Option<ActiveSplit> = None;
+    let mut agg = RunStats::default();
+
+    loop {
+        let (tag, payload) = protocol::read_frame(reader)?;
+        match tag {
+            Tag::SplitAssign => {
+                anyhow::ensure!(current.is_none(), "split assigned while another is streaming");
+                let assign = SplitAssign::decode(&payload)?;
+                anyhow::ensure!(
+                    assign.owners.len() == hello.job.schema.num_sparse,
+                    "owner table has {} columns, schema wants {}",
+                    assign.owners.len(),
+                    hello.job.schema.num_sparse
+                );
+                let sp = crate::net::StreamingPreprocessor::with_decode_options(
+                    &hello.job.spec,
+                    hello.job.schema,
+                    hello.job.format,
+                    decode,
+                )?;
+                current = Some(ActiveSplit { assign, sp, rows: Vec::new(), failed: None });
+            }
+            Tag::FusedChunk => {
+                let split = current
+                    .as_mut()
+                    .ok_or_else(|| NetError::Malformed { what: "chunk without a split".into() })?;
+                if split.failed.is_none() {
+                    match split.sp.fused_chunk(&payload) {
+                        Ok(rows) => split.rows.extend(rows),
+                        Err(e) => split.failed = Some(format!("{e:#}")),
+                    }
+                }
+            }
+            Tag::FusedEnd => {
+                let mut split = current
+                    .take()
+                    .ok_or_else(|| NetError::Malformed { what: "end without a split".into() })?;
+                let seq = split.assign.seq;
+                let status = match split.failed.take() {
+                    Some(reason) => SplitStatus::Failed(reason),
+                    None => match finish_split(
+                        &mut split, &route, &state, &hello, &mut clients, writer, io,
+                    ) {
+                        Ok(stats) => {
+                            agg.merge(&stats);
+                            SplitStatus::Ok(stats)
+                        }
+                        Err(e) => {
+                            // A failed split may have sent key batches
+                            // whose replies were never read; those would
+                            // surface as stale frames on the next split.
+                            // Drop every key client — reconnect clean.
+                            clients.clear();
+                            SplitStatus::Failed(format!("{e:#}"))
+                        }
+                    },
+                };
+                protocol::write_frame(
+                    writer,
+                    Tag::SplitDone,
+                    &SplitDone { seq, status }.encode(),
+                )?;
+                writer.flush()?;
+            }
+            Tag::OwnerSeed => {
+                let seed = protocol::OwnerSeed::decode(&payload)?;
+                state.seq(seed.col).seed(seed.next_seq, &seed.keys);
+            }
+            Tag::SplitDone => {
+                let done = SplitDone::decode(&payload)?;
+                anyhow::ensure!(
+                    done.seq == SplitDone::END,
+                    "unexpected SplitDone (seq {}) from the dispatcher",
+                    done.seq
+                );
+                deregister(hello.job_id, hello.worker_id);
+                return Ok(agg);
+            }
+            Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
+                worker: "dispatcher".into(),
+                reason: String::from_utf8_lossy(&payload).into_owned(),
+            }),
+            other => anyhow::bail!(NetError::Malformed {
+                what: format!("unexpected frame {other:?} on a dispatch session"),
+            }),
+        }
+    }
+}
+
+/// Complete one split: flush the decoder, resolve every vocabulary
+/// column's global indices, rewrite the rows, and stream deltas + rows
+/// back. Key batches for every remote owner go out *before* any
+/// blocking wait (local fold or reply read), so wait-for edges only
+/// point at lower split seqs — the no-deadlock invariant.
+#[allow(clippy::too_many_arguments)]
+fn finish_split<W: Write>(
+    split: &mut ActiveSplit,
+    route: &ChunkState,
+    state: &JobState,
+    hello: &ServiceHello,
+    clients: &mut HashMap<u16, KeyClient>,
+    writer: &mut W,
+    io: Duration,
+) -> Result<RunStats> {
+    let trailing = split.sp.fused_end()?;
+    split.rows.extend(trailing);
+    let seq = split.assign.seq;
+    let me = hello.worker_id;
+    let t0 = Instant::now();
+
+    let exported = split.sp.export_vocabs();
+    let slots = route.vocab_slots(|c| split.assign.owners[c] == me);
+    // Owner → columns, ascending — both sides walk batches in the same
+    // order, so replies pair up without per-request bookkeeping.
+    let mut remote: BTreeMap<u16, Vec<u16>> = BTreeMap::new();
+    for (c, slot) in slots.iter().enumerate() {
+        if matches!(slot, VocabSlot::Remote { .. }) {
+            remote.entry(split.assign.owners[c]).or_default().push(c as u16);
+        }
+    }
+
+    // 1. All remote key batches out first.
+    for (&owner, cols) in &remote {
+        if let std::collections::hash_map::Entry::Vacant(slot) = clients.entry(owner) {
+            let addr = hello.peers.get(owner as usize).ok_or_else(|| NetError::Malformed {
+                what: format!("owner {owner} not in the peer table"),
+            })?;
+            let kh = KeyHello { job_id: hello.job_id, owner_id: owner, requester_id: me };
+            slot.insert(KeyClient::open(addr, kh, Some(io))?);
+        }
+        let client = clients.get_mut(&owner).expect("just inserted");
+        let sent = (|| -> Result<()> {
+            for &c in cols {
+                let kb = KeyBatch { col: c, seq, keys: exported[c as usize].clone() };
+                protocol::write_frame(&mut client.writer, Tag::KeyBatch, &kb.encode())?;
+            }
+            client.writer.flush()?;
+            Ok(())
+        })();
+        if let Err(e) = sent {
+            clients.remove(&owner); // half-written session: reconnect next split
+            return Err(e);
+        }
+    }
+
+    // 2. Local folds (may block on predecessor splits, bounded by io).
+    let ncols = slots.len();
+    let mut tables: Vec<Option<Vec<u32>>> = vec![None; ncols];
+    for (c, slot) in slots.iter().enumerate() {
+        if matches!(slot, VocabSlot::Resident { .. }) {
+            tables[c] = Some(state.seq(c as u16).submit(seq, &exported[c], io)?);
+        }
+    }
+
+    // 3. Collect remote replies in send order.
+    for (&owner, cols) in &remote {
+        let client = clients.get_mut(&owner).expect("opened above");
+        for &c in cols {
+            let got = (|| -> Result<IndexBatch> {
+                let (tag, payload) = protocol::read_frame(&mut client.reader)?;
+                let ib = match tag {
+                    Tag::IndexBatch => IndexBatch::decode(&payload)?,
+                    Tag::ErrorReply => anyhow::bail!(NetError::JobFailed {
+                        worker: format!("owner {owner}"),
+                        reason: String::from_utf8_lossy(&payload).into_owned(),
+                    }),
+                    other => anyhow::bail!(NetError::Malformed {
+                        what: format!("key session expected indices, got {other:?}"),
+                    }),
+                };
+                anyhow::ensure!(
+                    ib.col == c && ib.seq == seq && ib.indices.len() == exported[c as usize].len(),
+                    "index batch mismatch: got (col {}, seq {}, {} indices), want (col {c}, seq \
+                     {seq}, {} keys)",
+                    ib.col,
+                    ib.seq,
+                    ib.indices.len(),
+                    exported[c as usize].len()
+                );
+                Ok(ib)
+            })();
+            let ib = match got {
+                Ok(ib) => ib,
+                Err(e) => {
+                    clients.remove(&owner);
+                    return Err(e);
+                }
+            };
+            tables[c as usize] = Some(ib.indices);
+        }
+    }
+
+    // 4. Rewrite apply-vocab columns from split-local appearance
+    // indices to the owner-assigned global ones. Build-only columns
+    // already emitted their raw mapped values — nothing to rewrite.
+    for (c, slot) in slots.iter().enumerate() {
+        let apply = matches!(
+            slot,
+            VocabSlot::Resident { apply: true } | VocabSlot::Remote { apply: true }
+        );
+        if !apply {
+            continue;
+        }
+        let table = tables[c].as_ref().expect("apply column has a table");
+        for row in &mut split.rows {
+            row.sparse[c] = table[row.sparse[c] as usize];
+        }
+    }
+    let vocab_extra = t0.elapsed().as_nanos() as u64;
+    split.sp.add_vocab_ns(vocab_extra);
+
+    // 5. Deltas out (before SplitDone, same session: the dispatcher's
+    // mirror fold can never miss a delta of a completed split).
+    for (c, slot) in slots.iter().enumerate() {
+        if matches!(slot, VocabSlot::Stateless) {
+            continue;
+        }
+        let delta = VocabDelta {
+            col: c as u16,
+            seq,
+            keys: exported[c].clone(),
+            indices: tables[c].clone().expect("vocab column has a table"),
+        };
+        protocol::write_frame(writer, Tag::VocabDelta, &delta.encode())?;
+    }
+
+    // 6. Rows, seq-prefixed for attribution on the multiplexed session.
+    for chunk in split.rows.chunks(RESULT_ROWS_PER_FRAME) {
+        let packed = protocol::pack_service_rows(seq, chunk, hello.job.schema);
+        protocol::write_frame(writer, Tag::ResultChunk, &packed)?;
+    }
+
+    let (rows_skipped, rows_quarantined, illegal_bytes) = split.sp.containment();
+    let (decode_ns, stateless_ns, vocab_ns) = split.sp.stage_ns();
+    Ok(RunStats {
+        rows: split.rows.len() as u64,
+        vocab_entries: 0, // the dispatcher's mirror is authoritative
+        rows_skipped,
+        rows_quarantined,
+        illegal_bytes,
+        decode_ns,
+        stateless_ns,
+        vocab_ns,
+    })
+}
+
+/// Serve one key-forwarding session: fold incoming key batches through
+/// the owned column's sequencer and reply with global indices. The
+/// requester closing the connection at end of job is the clean exit.
+pub(crate) fn key_session<R, W>(
+    reader: &mut R,
+    writer: &mut W,
+    hello: KeyHello,
+    opts: &WorkerOptions,
+) -> Result<RunStats>
+where
+    R: Read,
+    W: Write,
+{
+    let io = opts.io_timeout.unwrap_or(Duration::from_secs(30));
+    let state = lookup_wait(hello.job_id, hello.owner_id, io)?;
+    protocol::write_frame(
+        writer,
+        Tag::ServiceHello,
+        &ServiceOpen::Ack { worker_id: hello.owner_id }.encode(),
+    )?;
+    writer.flush()?;
+    let mut batches = 0u64;
+    loop {
+        let (tag, payload) = match protocol::read_frame(reader) {
+            Ok(frame) => frame,
+            Err(e) if matches!(NetError::of(&e), Some(NetError::PeerGone { .. })) => {
+                // Requester hung up — the normal end of a key session.
+                return Ok(RunStats { rows: batches, ..RunStats::default() });
+            }
+            Err(e) => return Err(e),
+        };
+        match tag {
+            Tag::KeyBatch => {
+                let kb = KeyBatch::decode(&payload)?;
+                let indices = state.seq(kb.col).submit(kb.seq, &kb.keys, io)?;
+                let ib = IndexBatch { col: kb.col, seq: kb.seq, indices };
+                protocol::write_frame(writer, Tag::IndexBatch, &ib.encode())?;
+                writer.flush()?;
+                batches += 1;
+            }
+            other => anyhow::bail!(NetError::Malformed {
+                what: format!("unexpected frame {other:?} on a key session"),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequencer_orders_and_replays() {
+        let seq = ColSeq::new();
+        let io = Duration::from_millis(200);
+        // split 0 folds first, split 1 extends
+        assert_eq!(seq.submit(0, &[10, 20], io).unwrap(), vec![0, 1]);
+        assert_eq!(seq.submit(1, &[20, 30], io).unwrap(), vec![1, 2]);
+        // replaying split 0 is apply-only and identical
+        assert_eq!(seq.submit(0, &[10, 20], io).unwrap(), vec![0, 1]);
+        // a gap times out with a typed error
+        let err = seq.submit(5, &[1], Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(NetError::of(&err), Some(NetError::Timeout { .. })), "{err:#}");
+    }
+
+    #[test]
+    fn sequencer_unblocks_waiters_in_seq_order() {
+        let seq = Arc::new(ColSeq::new());
+        let s2 = seq.clone();
+        let waiter = std::thread::spawn(move || s2.submit(1, &[7, 8], Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(seq.submit(0, &[8], Duration::from_secs(1)).unwrap(), vec![0]);
+        // the waiter folds after split 0: 7 is new (idx 1), 8 seen (idx 0)
+        assert_eq!(waiter.join().unwrap().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn seed_adopts_only_forward_state() {
+        let seq = ColSeq::new();
+        let io = Duration::from_millis(100);
+        seq.seed(2, &[5, 6, 7]);
+        // fold point moved to split 2; the seeded keys are appliable
+        assert_eq!(seq.submit(0, &[5], io).unwrap(), vec![0]);
+        assert_eq!(seq.submit(2, &[7, 9], io).unwrap(), vec![2, 3]);
+        // a stale (behind) seed is ignored
+        seq.seed(1, &[1]);
+        assert_eq!(seq.submit(1, &[6], io).unwrap(), vec![1]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Wire-decoder fuzz suite: seeded random byte soup, truncations and
+//! single-byte corruptions of valid encodings, fed into every protocol
+//! decoder — the frame reader, the classic job/vocab/result codecs and
+//! the full service frame set (tags 19–25).
+//!
+//! The contract being pinned (the service trusts it everywhere): a
+//! decoder handed hostile bytes returns a typed `Err` — it never
+//! panics, never over-allocates past the bytes actually present, and
+//! never silently reconstructs the original value from a strict prefix.
+//! All randomness flows through the repo's seeded [`XorShift64`], so a
+//! failing input reproduces exactly from the printed seed.
+
+use piper::data::row::ProcessedRow;
+use piper::data::Schema;
+use piper::net::protocol::{
+    self, frame_sum, read_frame, write_frame, IndexBatch, Job, KeyBatch, KeyHello, OwnerSeed,
+    RunStats, ServiceHello, ServiceOpen, SplitAssign, SplitDone, SplitStatus, Tag, VocabDelta,
+    FRAME_HEADER_BYTES,
+};
+use piper::net::stream::WireFormat;
+use piper::net::NetError;
+use piper::ops::Modulus;
+use piper::util::prng::XorShift64;
+
+/// One decoder under test: a valid encoding plus a closure that decodes
+/// a buffer and reports whether the result equals the original value.
+/// `strict` marks codecs whose framing rejects *every* proper prefix
+/// (fixed length or trailing-bytes check).
+struct Case {
+    name: &'static str,
+    bytes: Vec<u8>,
+    strict: bool,
+    decode: Box<dyn Fn(&[u8]) -> Result<bool, ()>>,
+}
+
+fn case<T, D>(name: &'static str, bytes: Vec<u8>, strict: bool, original: T, decode: D) -> Case
+where
+    T: PartialEq + 'static,
+    D: Fn(&[u8]) -> anyhow::Result<T> + 'static,
+{
+    Case {
+        name,
+        bytes,
+        strict,
+        decode: Box::new(move |buf| match decode(buf) {
+            Ok(v) => Ok(v == original),
+            Err(_) => Err(()),
+        }),
+    }
+}
+
+fn schema() -> Schema {
+    Schema::new(2, 3)
+}
+
+fn sample_job() -> Job {
+    Job::dlrm(schema(), Modulus::new(1000), WireFormat::Utf8)
+}
+
+fn sample_rows() -> Vec<ProcessedRow> {
+    vec![
+        ProcessedRow { label: 1, dense: vec![0.5, 1.5], sparse: vec![3, 0, 7] },
+        ProcessedRow { label: 0, dense: vec![2.5, -3.5], sparse: vec![9, 2, 1] },
+    ]
+}
+
+fn sample_stats() -> RunStats {
+    RunStats {
+        rows: 100,
+        vocab_entries: 17,
+        rows_skipped: 2,
+        rows_quarantined: 1,
+        illegal_bytes: 5,
+        decode_ns: 1_000,
+        stateless_ns: 2_000,
+        vocab_ns: 3_000,
+    }
+}
+
+/// Every payload decoder in the protocol, seeded with a valid encoding.
+fn cases() -> Vec<Case> {
+    let job = sample_job();
+    let hello = ServiceHello {
+        job_id: 7,
+        worker_id: 1,
+        epoch: 2,
+        owners: vec![0, 1, 0],
+        peers: vec!["127.0.0.1:9001".to_string(), "127.0.0.1:9002".to_string()],
+        decode_threads: 2,
+        job: job.clone(),
+    };
+    let keys = ServiceOpen::Keys(KeyHello { job_id: 7, owner_id: 0, requester_id: 1 });
+    let ack = ServiceOpen::Ack { worker_id: 3 };
+    let assign = SplitAssign { seq: 5, epoch: 1, expected_rows: 100, owners: vec![1, 0, 1] };
+    let kb = KeyBatch { col: 2, seq: 5, keys: vec![0xDEAD_BEEF, 0, 42] };
+    let ib = IndexBatch { col: 2, seq: 5, indices: vec![11, 0, 7] };
+    let delta = VocabDelta { col: 1, seq: 3, keys: vec![1, 2, 3], indices: vec![0, 1, 2] };
+    let seed = OwnerSeed { col: 0, next_seq: 4, keys: vec![9, 8, 7, 6] };
+    let done_ok = SplitDone { seq: 9, status: SplitStatus::Ok(sample_stats()) };
+    let done_failed =
+        SplitDone { seq: 9, status: SplitStatus::Failed("decode blew the error budget".into()) };
+    let vocabs = vec![vec![1u32, 2, 3], vec![], vec![9, 9]];
+    let rows = sample_rows();
+    let sch = schema();
+
+    vec![
+        case("job", job.encode(), false, job.clone(), Job::decode),
+        case(
+            "service_open_dispatch",
+            ServiceOpen::Dispatch(hello.clone()).encode(),
+            false,
+            ServiceOpen::Dispatch(hello),
+            ServiceOpen::decode,
+        ),
+        case("service_open_keys", keys.encode(), true, keys.clone(), ServiceOpen::decode),
+        case("service_open_ack", ack.encode(), true, ack.clone(), ServiceOpen::decode),
+        case("split_assign", assign.encode(), true, assign.clone(), SplitAssign::decode),
+        case("key_batch", kb.encode(), true, kb.clone(), KeyBatch::decode),
+        case("index_batch", ib.encode(), true, ib.clone(), IndexBatch::decode),
+        case("vocab_delta", delta.encode(), true, delta.clone(), VocabDelta::decode),
+        case("owner_seed", seed.encode(), true, seed.clone(), OwnerSeed::decode),
+        case("split_done_ok", done_ok.encode(), true, done_ok.clone(), SplitDone::decode),
+        case("split_done_failed", done_failed.encode(), false, done_failed.clone(), SplitDone::decode),
+        case("run_stats", sample_stats().encode(), true, sample_stats(), RunStats::decode),
+        case("vocabs", protocol::pack_vocabs(&vocabs), true, vocabs.clone(), protocol::unpack_vocabs),
+        case(
+            "shard_dump",
+            protocol::pack_shard_dump(42, &vocabs),
+            true,
+            (42u64, vocabs),
+            protocol::unpack_shard_dump,
+        ),
+        case("rows", protocol::pack_rows(&rows, sch), false, rows.clone(), move |b| {
+            protocol::unpack_rows(b, sch)
+        }),
+        case(
+            "service_rows",
+            protocol::pack_service_rows(3, &rows, sch),
+            false,
+            (3u64, rows),
+            move |b| protocol::unpack_service_rows(b, sch),
+        ),
+    ]
+}
+
+#[test]
+fn valid_encodings_roundtrip() {
+    for c in cases() {
+        assert_eq!((c.decode)(&c.bytes), Ok(true), "{}: roundtrip must reproduce the value", c.name);
+    }
+}
+
+#[test]
+fn truncated_encodings_error_or_shrink() {
+    // Every proper prefix: strict codecs must reject it outright; the
+    // rest may accept it (e.g. a result chunk that happens to stay
+    // row-aligned) but must never reconstruct the original value.
+    for c in cases() {
+        for cut in 0..c.bytes.len() {
+            match (c.decode)(&c.bytes[..cut]) {
+                Err(()) => {}
+                Ok(eq) => {
+                    assert!(!c.strict, "{}: accepted a {cut}-byte prefix of {} bytes", c.name, c.bytes.len());
+                    assert!(!eq, "{}: a {cut}-byte prefix reconstructed the full value", c.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupted_encodings_never_panic() {
+    // Single- and multi-byte XOR corruption at seeded-random offsets,
+    // optionally combined with a truncation. Any outcome but a panic
+    // (or runaway allocation, which the harness would OOM on) is fine.
+    let mut rng = XorShift64::new(0xF0A2);
+    for c in cases() {
+        for _ in 0..400 {
+            let mut buf = c.bytes.clone();
+            if buf.is_empty() {
+                continue;
+            }
+            for _ in 0..=rng.below(2) {
+                let at = rng.below(buf.len() as u64) as usize;
+                buf[at] ^= 1 + rng.below(255) as u8;
+            }
+            if rng.chance(0.3) {
+                buf.truncate(rng.below(buf.len() as u64 + 1) as usize);
+            }
+            let _ = (c.decode)(&buf);
+        }
+    }
+}
+
+#[test]
+fn random_soup_never_panics() {
+    // Pure byte soup of varying lengths into every payload decoder.
+    let mut rng = XorShift64::new(0xB00B5);
+    for _ in 0..600 {
+        let len = rng.below(300) as usize;
+        let buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        for c in cases() {
+            let _ = (c.decode)(&buf);
+        }
+    }
+}
+
+#[test]
+fn tag_byte_space_is_fully_classified() {
+    for v in 0u8..=255 {
+        let ok = Tag::from_u8(v).is_ok();
+        assert_eq!(ok, (1..=25).contains(&v), "tag byte {v}");
+    }
+}
+
+#[test]
+fn frame_reader_rejects_soup_and_truncation() {
+    let mut rng = XorShift64::new(0xCAFE);
+    // Random headers (payload length masked to 16 bits so a hostile
+    // length can't demand a giant zeroed buffer from the test) followed
+    // by too few payload bytes: header decode, the frame cap, checksum
+    // or EOF must reject every one.
+    for _ in 0..400 {
+        let mut buf = vec![rng.next_u64() as u8];
+        let len = 1 + rng.below((1 << 16) - 1);
+        buf.extend_from_slice(&len.to_le_bytes());
+        buf.extend_from_slice(&(rng.next_u64() as u32).to_le_bytes());
+        let short = rng.below(len + 1) as usize;
+        buf.extend((0..short.saturating_sub(1)).map(|_| rng.next_u64() as u8));
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+    // Truncating a valid frame stream at every byte boundary.
+    let mut frame = Vec::new();
+    write_frame(&mut frame, Tag::KeyBatch, &KeyBatch { col: 1, seq: 2, keys: vec![3, 4] }.encode())
+        .unwrap();
+    for cut in 0..frame.len() {
+        let err = read_frame(&mut &frame[..cut]).unwrap_err();
+        assert!(NetError::of(&err).is_some(), "truncation at {cut}: untyped error {err:#}");
+    }
+}
+
+#[test]
+fn frame_bit_flips_are_caught_by_the_checksum() {
+    // Flip one byte anywhere in a valid frame: tag, low length bytes,
+    // checksum or payload. The read must fail (checksum mismatch, bad
+    // tag, cap or EOF) — corruption never passes through silently.
+    // Length-byte flips stay in the low three bytes so a corrupt length
+    // is bounded (< 16 MiB) before the cap/EOF rejects it.
+    let payload = VocabDelta { col: 1, seq: 3, keys: vec![1, 2], indices: vec![0, 1] }.encode();
+    let mut frame = Vec::new();
+    write_frame(&mut frame, Tag::VocabDelta, &payload).unwrap();
+    let mut rng = XorShift64::new(0x51DE);
+    for at in 0..frame.len() {
+        if (4..FRAME_HEADER_BYTES - 4).contains(&at) {
+            continue; // high length bytes: covered by the cap test below
+        }
+        let mut buf = frame.clone();
+        buf[at] ^= 1 + rng.below(255) as u8;
+        assert!(read_frame(&mut &buf[..]).is_err(), "byte {at} flip must not decode");
+    }
+    // A length field past MAX_FRAME is rejected before any allocation.
+    let mut buf = frame.clone();
+    buf[8] = 0xFF; // top length byte -> ~2^63 bytes claimed
+    let err = read_frame(&mut &buf[..]).unwrap_err();
+    assert!(
+        matches!(NetError::of(&err), Some(NetError::Malformed { .. })),
+        "oversized frame must be Malformed, got {err:#}"
+    );
+    // Sanity: the checksum actually covers the tag byte.
+    assert_ne!(frame_sum(1, &payload), frame_sum(2, &payload));
+}

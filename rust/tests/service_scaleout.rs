@@ -1,0 +1,414 @@
+//! Scale-out acceptance suite for the disaggregated preprocessing
+//! service: N workers with shard-owned vocabularies must produce output
+//! **bit-identical** to a single sequential scan, with no global
+//! vocabulary barrier anywhere on the wire, surviving scripted worker
+//! departure, concurrent jobs on one pool, and window backpressure.
+//!
+//! The wire assertions run through a frame-parsing TCP proxy so the
+//! dispatcher, the workers and the worker-to-worker key sessions are
+//! all the production code path — the proxy only records tag bytes.
+
+use std::collections::HashSet;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use piper::data::row::ProcessedColumns;
+use piper::data::{binary, utf8, SynthConfig, SynthDataset};
+use piper::net::cluster::shard_rows;
+use piper::net::fault::FaultPlan;
+use piper::net::protocol::{Job, Tag, FRAME_HEADER_BYTES, MAX_FRAME};
+use piper::net::stream::WireFormat;
+use piper::net::worker::{self, ShutdownHandle, WorkerOptions};
+use piper::net::NetConfig;
+use piper::ops::PipelineSpec;
+use piper::service::{run_service_cfg, run_service_loopback, ServiceConfig, ServiceRun};
+
+fn ms(v: u64) -> Duration {
+    Duration::from_millis(v)
+}
+
+/// Fast-failing knobs for the departure tests: every blocking step is
+/// bounded in hundreds of ms so a regression fails, not wedges, CI.
+fn fast_cfg(window: usize) -> ServiceConfig {
+    ServiceConfig {
+        net: NetConfig {
+            io_timeout: Some(ms(2000)),
+            job_deadline: Some(Duration::from_secs(30)),
+            retries: 2,
+            backoff: ms(10),
+            backoff_cap: ms(100),
+            leader_window: 1,
+        },
+        window,
+        decode_threads: 0,
+        chunk_bytes: 512,
+    }
+}
+
+struct Fixture {
+    job: Job,
+    raw: Vec<u8>,
+    want: ProcessedColumns,
+    rows: u64,
+}
+
+fn fixture(rows: usize, format: WireFormat, spec_text: &str) -> Fixture {
+    let ds = SynthDataset::generate(SynthConfig::small(rows));
+    let spec = PipelineSpec::parse(spec_text).expect("spec parses");
+    let want = spec.execute(&ds.rows, ds.schema()).expect("sequential reference");
+    let raw = match format {
+        WireFormat::Utf8 => utf8::encode_dataset(&ds),
+        WireFormat::Binary => binary::encode_dataset(&ds),
+    };
+    let job = Job { schema: ds.schema(), spec, format, errors: Default::default() };
+    Fixture { job, raw, want, rows: ds.rows.len() as u64 }
+}
+
+const DLRM: &str = "sparse[*]: modulus:997|genvocab|applyvocab; dense[*]: neg2zero|log";
+
+fn assert_clean(fx: &Fixture, run: &ServiceRun, what: &str) {
+    assert_eq!(run.processed, fx.want, "{what}: must equal the sequential scan");
+    assert_eq!(run.stats.rows, fx.rows, "{what}");
+    assert_eq!((run.retries, run.faults), (0, 0), "{what}: clean run retries nothing");
+}
+
+#[test]
+fn sizes_and_formats_agree_with_sequential_scan() {
+    for format in [WireFormat::Utf8, WireFormat::Binary] {
+        let fx = fixture(240, format, DLRM);
+        for n in [1usize, 2, 4] {
+            let run = run_service_loopback(n, &fx.job, &fx.raw, &ServiceConfig::default())
+                .expect("service run");
+            assert_clean(&fx, &run, &format!("{n} workers, {format:?}"));
+            assert_eq!(run.workers, n);
+            assert!(
+                run.max_inflight <= n,
+                "window 0 means one split per live worker, saw {}",
+                run.max_inflight
+            );
+            let splits: u64 = run.per_worker.iter().map(|w| w.splits).sum();
+            assert_eq!(splits, run.per_worker.len() as u64, "one split per worker by default");
+        }
+    }
+}
+
+/// Per-column programs shard across owners too: applied and gen-only
+/// vocabularies, a stateless modulus column and dense-only ops all
+/// agree with the sequential reference at every cluster size.
+#[test]
+fn heterogeneous_spec_agrees_with_sequential_scan() {
+    let fx = fixture(
+        200,
+        WireFormat::Utf8,
+        "sparse[*]: modulus:997|genvocab|applyvocab; \
+         sparse[0..4]: modulus:101|genvocab|applyvocab; \
+         sparse[5]: modulus:53; \
+         sparse[6]: modulus:61|genvocab; \
+         dense[*]: neg2zero|log; \
+         dense[1]: clip:0:50|bucketize:2:8:32",
+    );
+    for n in [1usize, 3] {
+        let run = run_service_loopback(n, &fx.job, &fx.raw, &ServiceConfig::default())
+            .expect("service run");
+        assert_clean(&fx, &run, &format!("{n} workers, heterogeneous"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire-level assertions: a frame-parsing proxy in front of every worker
+// ---------------------------------------------------------------------
+
+/// Pump frames one way, recording each tag byte. Frames are
+/// self-delimiting (`tag:u8 len:u64le sum:u32le payload`), so the proxy
+/// never needs protocol state; EOF or a bogus length severs both sides.
+fn pump_frames(mut from: TcpStream, mut to: TcpStream, tags: &Mutex<HashSet<u8>>) {
+    let sever = |a: &TcpStream, b: &TcpStream| {
+        let _ = a.shutdown(std::net::Shutdown::Both);
+        let _ = b.shutdown(std::net::Shutdown::Both);
+    };
+    loop {
+        let mut header = [0u8; FRAME_HEADER_BYTES];
+        if from.read_exact(&mut header).is_err() {
+            sever(&from, &to);
+            return;
+        }
+        tags.lock().unwrap().insert(header[0]);
+        let len = u64::from_le_bytes([
+            header[1], header[2], header[3], header[4],
+            header[5], header[6], header[7], header[8],
+        ]);
+        if len > MAX_FRAME || to.write_all(&header).is_err() {
+            sever(&from, &to);
+            return;
+        }
+        let mut left = len as usize;
+        let mut buf = [0u8; 16 << 10];
+        while left > 0 {
+            let take = left.min(buf.len());
+            if from.read_exact(&mut buf[..take]).is_err() || to.write_all(&buf[..take]).is_err() {
+                sever(&from, &to);
+                return;
+            }
+            left -= take;
+        }
+        if to.flush().is_err() {
+            sever(&from, &to);
+            return;
+        }
+    }
+}
+
+/// A recording proxy in front of `target`. The accept loop thread is
+/// deliberately leaked — it dies with the test process.
+fn spawn_proxy(target: String, tags: Arc<Mutex<HashSet<u8>>>) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind proxy");
+    let addr = listener.local_addr().expect("addr").to_string();
+    std::thread::spawn(move || loop {
+        let Ok((client, _)) = listener.accept() else { return };
+        let Ok(upstream) = TcpStream::connect(&target) else { return };
+        let (c2, u2) = (client.try_clone().unwrap(), upstream.try_clone().unwrap());
+        let (ta, tb) = (tags.clone(), tags.clone());
+        std::thread::spawn(move || pump_frames(client, upstream, &ta));
+        std::thread::spawn(move || pump_frames(u2, c2, &tb));
+    });
+    addr
+}
+
+/// The architectural claim on the wire: the service path carries its
+/// own frames (hello, split assign, key/index batches, vocab deltas)
+/// and **none** of the two-pass barrier frames — no `Pass1End`, no
+/// `VocabSync`/`VocabDump`, no `VocabLoad`. Both the dispatcher→worker
+/// sessions and the worker→worker key sessions cross the proxies,
+/// because the peer table the workers receive is the proxy addresses.
+#[test]
+fn wire_carries_service_frames_and_no_barrier() {
+    let fx = fixture(240, WireFormat::Utf8, DLRM);
+    let tags = Arc::new(Mutex::new(HashSet::new()));
+
+    let mut shutdowns = Vec::new();
+    let mut handles = Vec::new();
+    let mut proxied = Vec::new();
+    for _ in 0..2 {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind worker");
+        let real = listener.local_addr().expect("addr").to_string();
+        let shutdown = ShutdownHandle::new(&listener).expect("shutdown handle");
+        shutdowns.push(shutdown.clone());
+        handles.push(std::thread::spawn(move || {
+            worker::serve_until(&listener, &shutdown, &WorkerOptions::default())
+        }));
+        proxied.push(spawn_proxy(real, tags.clone()));
+    }
+
+    let splits = shard_rows(&fx.raw, fx.job.schema, false, 4);
+    assert!(splits.len() >= 2, "need multiple splits in flight");
+    let run = run_service_cfg(&proxied, &fx.job, &fx.raw, &splits, &fast_cfg(0))
+        .expect("service run through proxies");
+    for s in &shutdowns {
+        s.shutdown();
+    }
+    for h in handles {
+        h.join().expect("worker thread").expect("worker exits clean");
+    }
+    assert_eq!(run.processed, fx.want, "proxied run must equal the sequential scan");
+
+    let seen = tags.lock().unwrap().clone();
+    for must in [Tag::ServiceHello, Tag::SplitAssign, Tag::KeyBatch, Tag::IndexBatch,
+                 Tag::VocabDelta, Tag::SplitDone, Tag::FusedChunk, Tag::FusedEnd] {
+        assert!(seen.contains(&(must as u8)), "expected {must:?} on the wire, saw {seen:?}");
+    }
+    for never in [Tag::Pass1Chunk, Tag::Pass1End, Tag::Pass2Chunk, Tag::Pass2End,
+                  Tag::VocabSync, Tag::VocabDump, Tag::VocabLoad] {
+        assert!(!seen.contains(&(never as u8)), "barrier frame {never:?} crossed the wire");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scripted worker departure
+// ---------------------------------------------------------------------
+
+fn worker_opts() -> WorkerOptions {
+    WorkerOptions { io_timeout: Some(ms(2000)), serve_idle_timeout: None }
+}
+
+/// One session: real socket, real session loop, fault plan in between
+/// (same harness as the chaos suite).
+fn serve_faulty(stream: TcpStream, plan: &FaultPlan, opts: &WorkerOptions) -> piper::Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(opts.io_timeout)?;
+    stream.set_write_timeout(opts.io_timeout)?;
+    let reader = BufReader::with_capacity(1 << 16, stream.try_clone()?);
+    let writer = BufWriter::with_capacity(1 << 16, stream.try_clone()?);
+    let (mut fr, mut fw, _hooks) = plan.wrap(reader, writer);
+    worker::handle_connection(&mut fr, &mut fw, opts, Some(&stream)).map(|_| ())
+}
+
+/// A worker whose first session follows `plan`; every later session
+/// (the rejoin, key sessions from peers) runs clean. `one_shot` models
+/// a process death: the listener is dropped after the first session, so
+/// the rejoin attempt is refused and the dispatcher must strike.
+struct ScriptedWorker {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl ScriptedWorker {
+    fn spawn(plan: FaultPlan, one_shot: bool) -> ScriptedWorker {
+        let opts = worker_opts();
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::spawn(move || {
+            if one_shot {
+                // Process-death model: one session, then the listener is
+                // gone *before* the session dies, so every reconnect
+                // attempt is refused outright.
+                if let Ok((stream, _)) = listener.accept() {
+                    drop(listener);
+                    let _ = serve_faulty(stream, &plan, &opts);
+                }
+                return;
+            }
+            let mut session = 0usize;
+            let mut inflight = Vec::new();
+            loop {
+                let Ok((stream, _)) = listener.accept() else { break };
+                if stop2.load(Ordering::Acquire) {
+                    break; // the poison pill
+                }
+                let plan = if session == 0 { plan.clone() } else { FaultPlan::clean() };
+                session += 1;
+                inflight.push(std::thread::spawn(move || {
+                    let _ = serve_faulty(stream, &plan, &opts);
+                }));
+            }
+            for t in inflight {
+                let _ = t.join();
+            }
+        });
+        ScriptedWorker { addr, stop, thread }
+    }
+
+    fn stop(self) {
+        self.stop.store(true, Ordering::Release);
+        // Unblock the accept loop (ignored if the listener is gone).
+        if let Ok(sock) = self.addr.parse() {
+            let _ = TcpStream::connect_timeout(&sock, Duration::from_secs(1));
+        }
+        let _ = self.thread.join();
+    }
+}
+
+/// Transient departure: worker 0's dispatch session is severed mid-way
+/// through streaming split 0 (the first dispatch always lands on worker
+/// 0). The worker process stays alive, so the dispatcher rejoins it and
+/// re-dispatches the split — recovery, not strike.
+#[test]
+fn transient_session_loss_recovers_bit_identical() {
+    let fx = fixture(240, WireFormat::Utf8, DLRM);
+    let pool = vec![
+        ScriptedWorker::spawn(FaultPlan::crash_after_rx(4), false),
+        ScriptedWorker::spawn(FaultPlan::clean(), false),
+    ];
+    let addrs: Vec<String> = pool.iter().map(|w| w.addr.clone()).collect();
+    let splits = shard_rows(&fx.raw, fx.job.schema, false, 4);
+    let run = run_service_cfg(&addrs, &fx.job, &fx.raw, &splits, &fast_cfg(0));
+    let run = run.expect("session loss must be recovered");
+    for w in pool {
+        w.stop();
+    }
+    assert_eq!(run.processed, fx.want, "recovered run must equal the sequential scan");
+    assert!(run.retries >= 1, "recovery must be visible as a retry");
+    assert!(run.faults >= 1, "the severed session must be counted as a fault");
+}
+
+/// Permanent departure: worker 0 dies after its first session and
+/// refuses reconnection. The dispatcher must strike it, transfer its
+/// column ownership to the survivor, seed the new owner from the
+/// vocabulary mirror, replay what the transfer invalidated — and still
+/// produce the sequential-scan answer.
+#[test]
+fn permanent_departure_strikes_and_transfers_ownership() {
+    let fx = fixture(240, WireFormat::Utf8, DLRM);
+    let pool = vec![
+        ScriptedWorker::spawn(FaultPlan::crash_after_rx(4), true),
+        ScriptedWorker::spawn(FaultPlan::clean(), false),
+    ];
+    let addrs: Vec<String> = pool.iter().map(|w| w.addr.clone()).collect();
+    let splits = shard_rows(&fx.raw, fx.job.schema, false, 4);
+    let run = run_service_cfg(&addrs, &fx.job, &fx.raw, &splits, &fast_cfg(0));
+    let run = run.expect("one dead worker out of two must not fail the job");
+    for w in pool {
+        w.stop();
+    }
+    assert_eq!(run.processed, fx.want, "post-strike run must equal the sequential scan");
+    assert!(run.faults >= 1, "the death must be counted");
+    let survivor = run.per_worker.iter().map(|w| w.splits).max().unwrap_or(0);
+    assert!(survivor >= splits.len() as u64 - 1, "the survivor must win the remaining splits");
+}
+
+// ---------------------------------------------------------------------
+// Multiplexing and backpressure
+// ---------------------------------------------------------------------
+
+/// Two jobs with different specs and datasets share one worker pool
+/// concurrently; per-job state is keyed by job id, so both must come
+/// out bit-identical.
+#[test]
+fn concurrent_jobs_share_one_pool() {
+    let fx_a = fixture(180, WireFormat::Utf8, DLRM);
+    let fx_b = fixture(
+        130,
+        WireFormat::Binary,
+        "sparse[*]: modulus:499|genvocab|applyvocab; dense[*]: neg2zero|log",
+    );
+
+    let mut shutdowns = Vec::new();
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..2 {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind worker");
+        addrs.push(listener.local_addr().expect("addr").to_string());
+        let shutdown = ShutdownHandle::new(&listener).expect("shutdown handle");
+        shutdowns.push(shutdown.clone());
+        handles.push(std::thread::spawn(move || {
+            worker::serve_until(&listener, &shutdown, &WorkerOptions::default())
+        }));
+    }
+
+    let (run_a, run_b): (piper::Result<ServiceRun>, piper::Result<ServiceRun>) =
+        std::thread::scope(|s| {
+            let ha = s.spawn(|| {
+                let splits = shard_rows(&fx_a.raw, fx_a.job.schema, false, 3);
+                run_service_cfg(&addrs, &fx_a.job, &fx_a.raw, &splits, &fast_cfg(0))
+            });
+            let hb = s.spawn(|| {
+                let splits = shard_rows(&fx_b.raw, fx_b.job.schema, true, 3);
+                run_service_cfg(&addrs, &fx_b.job, &fx_b.raw, &splits, &fast_cfg(0))
+            });
+            (ha.join().expect("job thread"), hb.join().expect("job thread"))
+        });
+    for s in &shutdowns {
+        s.shutdown();
+    }
+    for h in handles {
+        h.join().expect("worker thread").expect("worker exits clean");
+    }
+
+    assert_clean(&fx_a, &run_a.expect("job A completes"), "job A (utf8)");
+    assert_clean(&fx_b, &run_b.expect("job B completes"), "job B (binary)");
+}
+
+/// `window = 1` is strict backpressure: never more than one split in
+/// flight across the whole cluster, and the answer is unchanged.
+#[test]
+fn window_one_serializes_dispatch() {
+    let fx = fixture(200, WireFormat::Utf8, DLRM);
+    let run = run_service_loopback(2, &fx.job, &fx.raw, &fast_cfg(1)).expect("service run");
+    assert_clean(&fx, &run, "window=1");
+    assert_eq!(run.max_inflight, 1, "window=1 must cap concurrent splits at one");
+}

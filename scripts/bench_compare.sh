@@ -1,15 +1,17 @@
 #!/usr/bin/env sh
 # Guard the committed perf tentpoles against regressions:
-#   BENCH_pr4.json — decode-threads sweep (row-sharded SWAR decode)
-#   BENCH_pr5.json — uniform vs heterogeneous per-column programs
-#   BENCH_pr8.json — stage-pipeline overlap grid (pipelined fused)
-#   BENCH_pr9.json — error-containment policy overhead on clean input
+#   BENCH_pr4.json  — decode-threads sweep (row-sharded SWAR decode)
+#   BENCH_pr5.json  — uniform vs heterogeneous per-column programs
+#   BENCH_pr8.json  — stage-pipeline overlap grid (pipelined fused)
+#   BENCH_pr9.json  — error-containment policy overhead on clean input
+#   BENCH_pr10.json — service scale-out sweep (shard-owned vocabularies)
 #
 # Runs the pipeline_engine bench fresh, then compares *machine-portable
 # ratios* against the committed baselines — decode thread-scaling
 # (max-threads vs 1), per-program relative throughput, and the
 # stage-pipeline speedups (pipelined vs depth-1 fused, pipelined vs
-# two-pass) plus its overlap efficiency — not absolute rows/s, which
+# two-pass) plus its overlap efficiency and the service scale-out
+# speedup (4 loopback workers vs 1) — not absolute rows/s, which
 # would just measure the CI runner. A ratio drop larger than THRESHOLD
 # (default 25%) fails the script.
 #
@@ -42,6 +44,7 @@ BASE4="$ROOT/BENCH_pr4.json"
 BASE5="$ROOT/BENCH_pr5.json"
 BASE8="$ROOT/BENCH_pr8.json"
 BASE9="$ROOT/BENCH_pr9.json"
+BASE10="$ROOT/BENCH_pr10.json"
 
 TMP="$(mktemp -d)"
 trap 'rm -rf "$TMP"' EXIT
@@ -49,12 +52,13 @@ CUR4="$TMP/pr4.json"
 CUR5="$TMP/pr5.json"
 CUR8="$TMP/pr8.json"
 CUR9="$TMP/pr9.json"
+CUR10="$TMP/pr10.json"
 
 echo "bench_compare: running pipeline_engine ($ROWS rows, $REPS reps)"
 cd "$ROOT/rust"
 PIPER_BENCH_ROWS="$ROWS" PIPER_BENCH_REPS="$REPS" \
     BENCH_JSON="$CUR4" BENCH_PR5_JSON="$CUR5" BENCH_PR8_JSON="$CUR8" \
-    BENCH_PR9_JSON="$CUR9" \
+    BENCH_PR9_JSON="$CUR9" BENCH_PR10_JSON="$CUR10" \
     cargo bench --bench pipeline_engine >/dev/null
 
 if [ "${1:-}" = "--bless" ]; then
@@ -62,13 +66,14 @@ if [ "${1:-}" = "--bless" ]; then
     cp "$CUR5" "$BASE5"
     cp "$CUR8" "$BASE8"
     cp "$CUR9" "$BASE9"
-    echo "bench_compare: baselines blessed -> $BASE4, $BASE5, $BASE8, $BASE9"
+    cp "$CUR10" "$BASE10"
+    echo "bench_compare: baselines blessed -> $BASE4, $BASE5, $BASE8, $BASE9, $BASE10"
     exit 0
 fi
 
 # A missing baseline is a setup error, never a silent pass (or a silent
 # bless of whatever this machine happens to produce).
-for base in "$BASE4" "$BASE5" "$BASE8" "$BASE9"; do
+for base in "$BASE4" "$BASE5" "$BASE8" "$BASE9" "$BASE10"; do
     if [ ! -f "$base" ]; then
         echo "bench_compare: ERROR: baseline $base is missing." >&2
         echo "  Run 'scripts/bench_compare.sh --bless' on a reference machine" >&2
@@ -78,12 +83,13 @@ for base in "$BASE4" "$BASE5" "$BASE8" "$BASE9"; do
 done
 
 python3 - "$BASE4" "$CUR4" "$BASE5" "$CUR5" "$BASE8" "$CUR8" "$BASE9" "$CUR9" \
+    "$BASE10" "$CUR10" \
     "$THRESHOLD" "$OVERHEAD_PCT" "$QUARANTINE_OVERHEAD_PCT" <<'EOF'
 import json
 import sys
 
 docs = []
-for path in sys.argv[1:9]:
+for path in sys.argv[1:11]:
     try:
         with open(path) as f:
             docs.append(json.load(f))
@@ -93,10 +99,10 @@ for path in sys.argv[1:9]:
         print("  Re-bless the baselines with 'scripts/bench_compare.sh --bless' "
               "and commit them.", file=sys.stderr)
         sys.exit(2)
-base4, cur4, base5, cur5, base8, cur8, base9, cur9 = docs
-threshold = float(sys.argv[9])
-overhead_pct = float(sys.argv[10])
-quarantine_overhead_pct = float(sys.argv[11])
+base4, cur4, base5, cur5, base8, cur8, base9, cur9, base10, cur10 = docs
+threshold = float(sys.argv[11])
+overhead_pct = float(sys.argv[12])
+quarantine_overhead_pct = float(sys.argv[13])
 failures = []
 
 
@@ -133,6 +139,12 @@ def overhead_check(name, rps, bound_pct):
         failures.append(f"{name} clean-input overhead")
 
 
+def scaleout_speedup(doc):
+    """4-loopback-worker speedup over 1 worker (wall-clock ratio)."""
+    walls = {p["workers"]: p["wall_s"] for p in doc["sweep"]}
+    return walls[1] / walls[max(walls)]
+
+
 def overlap_ratios(doc):
     """(pipelined-vs-depth1 speedup, pipelined-vs-two-pass speedup,
     overlap efficiency) at the widest decode frontend in the grid."""
@@ -159,6 +171,14 @@ try:
     for want in ("zero", "fail", "skip", "quarantine"):
         if want not in p9:
             raise KeyError(f"policy {want!r} missing from the pr9 run")
+    b10, c10 = scaleout_speedup(base10), scaleout_speedup(cur10)
+    # The committed reference must actually demonstrate the scale-out
+    # claim: >1.5x at 4 loopback workers on the reference machine.
+    if b10 <= 1.5:
+        raise ValueError(
+            f"pr10 baseline speedup4 is {b10:.2f}x; the committed snapshot "
+            "must show >1.5x at 4 loopback workers"
+        )
 except (KeyError, TypeError, StopIteration, ValueError) as e:
     print(f"bench_compare: ERROR: baseline/current JSON has an unexpected shape ({e!r}).",
           file=sys.stderr)
@@ -179,6 +199,8 @@ print("containment policy overhead on clean input (PR 9):")
 overhead_check("fail", p9, overhead_pct)
 overhead_check("skip", p9, overhead_pct)
 overhead_check("quarantine", p9, quarantine_overhead_pct)
+print("service scale-out (PR 10):")
+ratio_check("4 loopback workers vs 1", b10, c10)
 
 if failures:
     print("bench_compare: gate failures: " + ", ".join(failures))

@@ -1,10 +1,11 @@
 #!/usr/bin/env sh
 # Snapshot the pipeline_engine bench's machine-readable outputs at the
 # repo root:
-#   BENCH_pr4.json — the decode-threads sweep (PR 4)
-#   BENCH_pr5.json — uniform vs heterogeneous per-column programs (PR 5)
-#   BENCH_pr8.json — stage-pipeline overlap grid (PR 8)
-#   BENCH_pr9.json — containment policy overhead on clean input (PR 9)
+#   BENCH_pr4.json  — the decode-threads sweep (PR 4)
+#   BENCH_pr5.json  — uniform vs heterogeneous per-column programs (PR 5)
+#   BENCH_pr8.json  — stage-pipeline overlap grid (PR 8)
+#   BENCH_pr9.json  — containment policy overhead on clean input (PR 9)
+#   BENCH_pr10.json — service scale-out sweep over loopback workers (PR 10)
 #
 # The bench checksum-verifies every point before timing it.
 # Usage: scripts/bench_snapshot.sh [rows] [reps]
@@ -17,12 +18,13 @@ OUT4="$ROOT/BENCH_pr4.json"
 OUT5="$ROOT/BENCH_pr5.json"
 OUT8="$ROOT/BENCH_pr8.json"
 OUT9="$ROOT/BENCH_pr9.json"
+OUT10="$ROOT/BENCH_pr10.json"
 
-echo "pipeline_engine snapshot: $ROWS rows, $REPS reps -> $OUT4, $OUT5, $OUT8, $OUT9"
+echo "pipeline_engine snapshot: $ROWS rows, $REPS reps -> $OUT4, $OUT5, $OUT8, $OUT9, $OUT10"
 cd "$ROOT/rust"
 PIPER_BENCH_ROWS="$ROWS" PIPER_BENCH_REPS="$REPS" \
     BENCH_JSON="$OUT4" BENCH_PR5_JSON="$OUT5" BENCH_PR8_JSON="$OUT8" \
-    BENCH_PR9_JSON="$OUT9" \
+    BENCH_PR9_JSON="$OUT9" BENCH_PR10_JSON="$OUT10" \
     cargo bench --bench pipeline_engine
 
 echo "snapshots written:"
@@ -30,3 +32,4 @@ cat "$OUT4"
 cat "$OUT5"
 cat "$OUT8"
 cat "$OUT9"
+cat "$OUT10"
